@@ -1,0 +1,163 @@
+//! Ablation study over HYPPO's own design knobs (DESIGN.md §5):
+//!
+//!   * surrogate kind (RBF / GP / RBF-ensemble)
+//!   * Eq. (8) α ∈ {−2, −1, 0, 1, 2} (optimistic … pessimistic)
+//!   * Eq. (9) γ ∈ {0, 0.5, 2} (variability regularization)
+//!   * initial design (random / LHS / Halton / Sobol-seeded points)
+//!   * N trials per evaluation ∈ {1, 3, 5}
+//!
+//!     cargo run --release --example ablation
+//!
+//! Each cell reports mean best-loss over 5 seeds at a fixed budget on the
+//! calibrated landscape, into `reports/ablation.csv`.
+
+use hyppo::eval::synthetic::SyntheticEvaluator;
+use hyppo::optimizer::{
+    run_sync, HpoConfig, InitDesign, SurrogateKind,
+};
+use hyppo::space::{ParamSpec, Space};
+use hyppo::util::csv::CsvWriter;
+
+const BUDGET: usize = 40;
+const SEEDS: u64 = 5;
+
+fn space() -> Space {
+    Space::new(vec![
+        ParamSpec::new("layers", 1, 6),
+        ParamSpec::new("width", 0, 24),
+        ParamSpec::new("lr", 0, 12),
+        ParamSpec::new("dropout", 0, 8),
+    ])
+}
+
+fn run_cell(name: &str, make: impl Fn(u64) -> HpoConfig, w: &mut CsvWriter) {
+    let ev = SyntheticEvaluator::new(space(), 99);
+    let mut bests = Vec::new();
+    let mut to_target = Vec::new();
+    for seed in 0..SEEDS {
+        let cfg = make(seed);
+        let h = run_sync(&ev, &cfg);
+        let best = h.best(cfg.gamma).unwrap();
+        bests.push(best.summary.interval.center);
+        // Evaluations to reach the optimal region (within ~2x of the
+        // landscape floor — discriminative under the trial noise).
+        let target = ev.loss_floor * 2.0;
+        to_target.push(
+            h.evals_to_reach(target, 0.0)
+                .unwrap_or(BUDGET + 1) as f64,
+        );
+    }
+    let mean = bests.iter().sum::<f64>() / SEEDS as f64;
+    let std = hyppo::uq::stddev(&bests);
+    let mean_tt = to_target.iter().sum::<f64>() / SEEDS as f64;
+    println!(
+        "{name:<28} best {mean:.4} ± {std:.4}   evals-to-region {mean_tt:.1}"
+    );
+    w.row(&[
+        name.to_string(),
+        format!("{mean:.6}"),
+        format!("{std:.6}"),
+        format!("{mean_tt:.1}"),
+    ])
+    .unwrap();
+}
+
+fn base(seed: u64) -> HpoConfig {
+    HpoConfig {
+        max_evaluations: BUDGET,
+        n_init: 10,
+        n_trials: 3,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut w = CsvWriter::create(
+        "reports/ablation.csv",
+        &["config", "best_mean", "best_std", "evals_to_region"],
+    )?;
+    println!("== ablation: budget {BUDGET}, {SEEDS} seeds per cell ==\n");
+
+    println!("-- surrogate kind --");
+    run_cell("rbf", base, &mut w);
+    run_cell(
+        "gp",
+        |s| HpoConfig { surrogate: SurrogateKind::Gp, ..base(s) },
+        &mut w,
+    );
+    run_cell(
+        "ensemble(a=1)",
+        |s| HpoConfig {
+            surrogate: SurrogateKind::RbfEnsemble { alpha: 1.0, members: 8 },
+            ..base(s)
+        },
+        &mut w,
+    );
+
+    println!("\n-- Eq. 8 alpha (ensemble) --");
+    for alpha in [-2.0, -1.0, 0.0, 1.0, 2.0] {
+        run_cell(
+            &format!("alpha={alpha}"),
+            move |s| HpoConfig {
+                surrogate: SurrogateKind::RbfEnsemble {
+                    alpha,
+                    members: 8,
+                },
+                ..base(s)
+            },
+            &mut w,
+        );
+    }
+
+    println!("\n-- Eq. 9 gamma --");
+    for gamma in [0.0, 0.5, 2.0] {
+        run_cell(
+            &format!("gamma={gamma}"),
+            move |s| HpoConfig { gamma, ..base(s) },
+            &mut w,
+        );
+    }
+
+    println!("\n-- initial design --");
+    for (name, d) in [
+        ("init=random", InitDesign::Random),
+        ("init=lhs", InitDesign::Lhs),
+        ("init=halton", InitDesign::Halton),
+    ] {
+        run_cell(
+            name,
+            move |s| HpoConfig { init_design: d, ..base(s) },
+            &mut w,
+        );
+    }
+    // Sobol-seeded initial points (the §VI extension).
+    run_cell(
+        "init=sobol",
+        |s| {
+            let mut rng = hyppo::sampling::Rng::new(s ^ 0x50B0);
+            HpoConfig {
+                initial_points: Some(hyppo::sampling::sobol_lattice(
+                    &space(),
+                    10,
+                    &mut rng,
+                )),
+                ..base(s)
+            }
+        },
+        &mut w,
+    );
+
+    println!("\n-- N trials per evaluation --");
+    for n in [1usize, 3, 5] {
+        run_cell(
+            &format!("n_trials={n}"),
+            move |s| HpoConfig { n_trials: n, ..base(s) },
+            &mut w,
+        );
+    }
+
+    w.finish()?;
+    println!("\n-> reports/ablation.csv");
+    Ok(())
+}

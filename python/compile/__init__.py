@@ -1,0 +1,1 @@
+"""HYPPO build-time compile package (Layer 1 + Layer 2)."""

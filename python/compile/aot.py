@@ -1,0 +1,217 @@
+"""AOT exporter: lower the artifact grid to HLO text + manifest.json.
+
+Run once at build time (``make artifacts``); Python never appears on the
+Rust request path. Each (family, shape-arch, role) pair becomes one
+``artifacts/<name>__<role>.hlo.txt`` plus a manifest entry describing the
+parameter arrays, data inputs, and outputs so the Rust registry
+(``rust/src/runtime/registry.rs``) can bind buffers without re-tracing.
+
+Grid (DESIGN.md §5):
+  mlp  : in/out {(16,1) time-series, (1,1) polyfit} x layers {1,2,3}
+         x width {16,32,64}
+  cnn  : channels {8,16} x dense width {32,64}
+  unet : the four Table-I columns (a)-(d)
+Runtime-continuous hyperparameters (lr, dropout p, seed, row weights) are
+executable inputs, not grid axes.
+"""
+
+import argparse
+import json
+import os
+
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as Sds
+
+from .hlo import to_hlo_text
+from .models import cnn, mlp, unet
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+ROLES = ("init", "train_step", "predict", "predict_dropout", "eval_loss")
+
+
+def _param_sds(params):
+    return [Sds(p.shape, p.dtype) for p in params]
+
+
+def _desc(args):
+    return [{"shape": list(a.shape), "dtype": str(a.dtype)} for a in args]
+
+
+class Entry:
+    """One artifact: a role of one architecture."""
+
+    def __init__(self, family, arch_name, role, fn, example_args,
+                 n_param_arrays, out_desc, meta):
+        self.family = family
+        self.arch_name = arch_name
+        self.role = role
+        self.fn = fn
+        self.example_args = example_args
+        self.n_param_arrays = n_param_arrays
+        self.out_desc = out_desc
+        self.meta = meta
+
+    @property
+    def filename(self):
+        return f"{self.arch_name}__{self.role}.hlo.txt"
+
+    def manifest(self):
+        return {
+            "family": self.family,
+            "arch": self.arch_name,
+            "role": self.role,
+            "path": self.filename,
+            "n_param_arrays": self.n_param_arrays,
+            "inputs": _desc(self.example_args),
+            "outputs": self.out_desc,
+            "meta": self.meta,
+        }
+
+
+def _family_entries(family, arch, mod, data_x, data_y, meta):
+    """Build the five role entries for one architecture."""
+    params = mod.init(arch, 0)
+    psds = _param_sds(params)
+    np_ = len(psds)
+    b = arch.batch
+    scal_f = Sds((), F32)
+    scal_i = Sds((), I32)
+    wv = Sds((b,), F32)
+    param_desc = _desc(psds)
+
+    def wrap_init(seed):
+        return mod.init(arch, seed)
+
+    def wrap_train(*args):
+        ps, rest = args[:np_], args[np_:]
+        return mod.train_step(arch, ps, *rest)
+
+    def wrap_predict(*args):
+        ps, rest = args[:np_], args[np_:]
+        return mod.predict(arch, ps, *rest)
+
+    def wrap_pdrop(*args):
+        ps, rest = args[:np_], args[np_:]
+        return mod.predict_dropout(arch, ps, *rest)
+
+    def wrap_eval(*args):
+        ps, rest = args[:np_], args[np_:]
+        return mod.eval_loss(arch, ps, *rest)
+
+    scalar_desc = [{"shape": [], "dtype": "float32"}]
+    out_y = _desc([data_y])
+
+    meta = dict(meta)
+    meta["n_model_params"] = int(arch.n_params())
+    meta["batch"] = b
+
+    return [
+        Entry(family, arch.name, "init", wrap_init, [scal_i],
+              np_, param_desc, meta),
+        Entry(family, arch.name, "train_step", wrap_train,
+              psds + [data_x, data_y, wv, scal_f, scal_f, scal_i],
+              np_, param_desc + scalar_desc, meta),
+        Entry(family, arch.name, "predict", wrap_predict,
+              psds + [data_x], np_, out_y, meta),
+        Entry(family, arch.name, "predict_dropout", wrap_pdrop,
+              psds + [data_x, scal_f, scal_i], np_, out_y, meta),
+        Entry(family, arch.name, "eval_loss", wrap_eval,
+              psds + [data_x, data_y, wv], np_, scalar_desc, meta),
+    ]
+
+
+def mlp_entries():
+    out = []
+    for in_dim, out_dim in ((16, 1), (1, 1)):
+        for layers in (1, 2, 3):
+            for width in (16, 32, 64):
+                arch = mlp.MlpArch(in_dim, out_dim, layers, width)
+                b = arch.batch
+                x = Sds((b, in_dim), F32)
+                y = Sds((b, out_dim), F32)
+                meta = {
+                    "in_dim": in_dim, "out_dim": out_dim,
+                    "layers": layers, "width": width,
+                }
+                out += _family_entries("mlp", arch, mlp, x, y, meta)
+    return out
+
+
+def cnn_entries():
+    out = []
+    for channels in (8, 16):
+        for width in (32, 64):
+            arch = cnn.CnnArch(channels, width)
+            b = arch.batch
+            x = Sds((b, cnn.IMG, cnn.IMG, cnn.CHANNELS_IN), F32)
+            y = Sds((b, cnn.N_CLASSES), F32)
+            meta = {"channels": channels, "width": width}
+            out += _family_entries("cnn", arch, cnn, x, y, meta)
+    return out
+
+
+# The four Table-I columns: (f0, mult, blocks, inter, k_final, stride,
+# dropout_p*, k_inter) — dropout is a runtime input, recorded for reference.
+TABLE1_COLUMNS = {
+    "a": (8, 1.0, 2, 1, 2, 1, 0.00, 2),
+    "b": (9, 1.0, 2, 1, 3, 1, 0.01, 3),
+    "c": (10, 1.2, 3, 4, 4, 2, 0.08, 5),
+    "d": (12, 1.4, 4, 4, 5, 2, 0.10, 5),
+}
+
+
+def unet_entries():
+    out = []
+    for col, (f0, mult, blocks, inter, kf, s, p, ki) in (
+        TABLE1_COLUMNS.items()
+    ):
+        arch = unet.UnetArch(f0, mult, blocks, inter, kf, s, ki)
+        b = arch.batch
+        x = Sds((b, arch.angles, arch.detectors, 1), F32)
+        meta = {
+            "column": col, "f0": f0, "mult": mult, "blocks": blocks,
+            "inter": inter, "k_final": kf, "stride": s,
+            "dropout_ref": p, "k_inter": ki,
+            "angles": arch.angles, "detectors": arch.detectors,
+        }
+        out += _family_entries("unet", arch, unet, x, x, meta)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--families", default="mlp,cnn,unet",
+        help="comma-separated subset to export",
+    )
+    args = ap.parse_args()
+    fams = set(args.families.split(","))
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = []
+    if "mlp" in fams:
+        entries += mlp_entries()
+    if "cnn" in fams:
+        entries += cnn_entries()
+    if "unet" in fams:
+        entries += unet_entries()
+
+    manifest = {"version": 1, "artifacts": []}
+    for i, e in enumerate(entries):
+        text = to_hlo_text(e.fn, e.example_args)
+        path = os.path.join(args.out_dir, e.filename)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(e.manifest())
+        print(f"[{i + 1}/{len(entries)}] {e.filename} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest.json -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Lowering helper: jitted JAX function -> HLO *text*.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser on the Rust side reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md and DESIGN.md §2.
+"""
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """Lower ``fn`` at the given example ShapeDtypeStructs to HLO text.
+
+    Lowered with ``return_tuple=True`` so the Rust side always unwraps one
+    tuple regardless of arity.
+    """
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

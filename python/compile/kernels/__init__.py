@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+All kernels are lowered with ``interpret=True`` so they compile to plain HLO
+ops executable on any PJRT backend (CPU here). Real-TPU lowering would emit
+Mosaic custom-calls the CPU plugin cannot run; see DESIGN.md §Hardware
+adaptation for the VMEM/MXU analysis that substitutes for TPU wallclock.
+"""
+
+from .fused_dense import fused_dense
+from .reductions import weighted_mse
+
+__all__ = ["fused_dense", "weighted_mse"]

@@ -1,0 +1,233 @@
+"""Fused dense layer Pallas kernel — the paper's MC-dropout hot spot.
+
+Every MC-dropout pass (Sec. IV Feature 1, Eqs. 4-7) forward-propagates the
+same input through the network with a fresh dropout mask. The hot spot is
+therefore the *masked* dense layer:
+
+    y = act((x * mask) @ W + b)
+
+where ``mask`` is the pre-scaled inverted-dropout mask Bernoulli(1-p)/(1-p).
+On the paper's GPUs this fusion is done by cuDNN; here it is expressed as a
+Pallas kernel tiled for the TPU memory hierarchy: the (M, N) output is
+blocked so each program holds an (bm, K) x-tile, a (K, bn) W-tile and the
+(bm, bn) accumulator in VMEM and drives the MXU with a single
+``jnp.dot`` per tile (see DESIGN.md §8 for the VMEM/MXU estimate).
+
+The kernel is wrapped in ``jax.custom_vjp`` so the L2 training graph can
+differentiate through it; the backward pass is also implemented as Pallas
+kernels (dx, dW matmuls and a db reduction).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_ACTIVATIONS = ("linear", "relu", "tanh")
+
+
+def _block(dim: int, cap: int) -> int:
+    """Largest divisor of ``dim`` that is <= cap and a multiple-of-2 friendly
+    tile. Falls back to ``dim`` itself (single tile) when nothing divides."""
+    if dim <= cap:
+        return dim
+    for cand in (cap, 128, 64, 32, 16, 8):
+        if cand <= cap and dim % cand == 0:
+            return cand
+    return dim
+
+
+def _apply_act(z, activation):
+    if activation == "linear":
+        return z
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    # tanh
+    return jnp.tanh(z)
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel: one program per (bm, bn) output tile, full-K contraction.
+# Emits both the activated output y and the pre-activation z (the residual
+# needed by the VJP for relu/tanh derivatives).
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(x_ref, w_ref, b_ref, m_ref, y_ref, z_ref, *, activation):
+    xm = x_ref[...] * m_ref[...]
+    z = jnp.dot(xm, w_ref[...], preferred_element_type=jnp.float32)
+    z = z + b_ref[...][None, :]
+    z_ref[...] = z.astype(z_ref.dtype)
+    y_ref[...] = _apply_act(z, activation).astype(y_ref.dtype)
+
+
+def _fwd(x, w, b, mask, activation):
+    m_dim, k_dim = x.shape
+    n_dim = w.shape[1]
+    bm = _block(m_dim, 128)
+    bn = _block(n_dim, 128)
+    grid = (m_dim // bm, n_dim // bn)
+    out_dtype = x.dtype
+    y, z = pl.pallas_call(
+        functools.partial(_fwd_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k_dim), lambda i, j: (i, 0)),  # x tile
+            pl.BlockSpec((k_dim, bn), lambda i, j: (0, j)),  # W tile
+            pl.BlockSpec((bn,), lambda i, j: (j,)),          # bias tile
+            pl.BlockSpec((bm, k_dim), lambda i, j: (i, 0)),  # mask tile
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_dim, n_dim), out_dtype),
+            jax.ShapeDtypeStruct((m_dim, n_dim), out_dtype),
+        ],
+        interpret=True,
+    )(x, w, b, mask)
+    return y, z
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels.
+#   dz = g * act'(z)
+#   dx = (dz @ W^T) * mask          -- (M, K) tiles
+#   dW = (x * mask)^T @ dz          -- (K, N) tiles
+#   db = sum_M dz                   -- (N,) reduction
+# ---------------------------------------------------------------------------
+
+def _dz_kernel(g_ref, z_ref, y_ref, o_ref, *, activation):
+    g = g_ref[...]
+    if activation == "linear":
+        o_ref[...] = g
+    elif activation == "relu":
+        o_ref[...] = g * (z_ref[...] > 0.0).astype(g.dtype)
+    else:  # tanh: act'(z) = 1 - y^2, reuse the saved activation
+        y = y_ref[...]
+        o_ref[...] = g * (1.0 - y * y)
+
+
+def _dx_kernel(dz_ref, w_ref, m_ref, o_ref):
+    # (bm, N) @ (N, bk) — W is transposed per-tile inside VMEM.
+    acc = jnp.dot(
+        dz_ref[...], w_ref[...].T, preferred_element_type=jnp.float32
+    )
+    o_ref[...] = (acc * m_ref[...]).astype(o_ref.dtype)
+
+
+def _dw_kernel(x_ref, m_ref, dz_ref, o_ref):
+    xm = x_ref[...] * m_ref[...]
+    o_ref[...] = jnp.dot(
+        xm.T, dz_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _db_kernel(dz_ref, o_ref):
+    o_ref[...] = jnp.sum(dz_ref[...], axis=0)
+
+
+def _bwd_dz(g, z, y, activation):
+    m_dim, n_dim = g.shape
+    bm = _block(m_dim, 128)
+    bn = _block(n_dim, 128)
+    return pl.pallas_call(
+        functools.partial(_dz_kernel, activation=activation),
+        grid=(m_dim // bm, n_dim // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))] * 3,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), g.dtype),
+        interpret=True,
+    )(g, z, y)
+
+
+def _bwd_dx(dz, w, mask):
+    m_dim, n_dim = dz.shape
+    k_dim = w.shape[0]
+    bm = _block(m_dim, 128)
+    bk = _block(k_dim, 128)
+    return pl.pallas_call(
+        _dx_kernel,
+        grid=(m_dim // bm, k_dim // bk),
+        in_specs=[
+            pl.BlockSpec((bm, n_dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, n_dim), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, k_dim), dz.dtype),
+        interpret=True,
+    )(dz, w, mask)
+
+
+def _bwd_dw(x, mask, dz):
+    m_dim, k_dim = x.shape
+    n_dim = dz.shape[1]
+    bk = _block(k_dim, 128)
+    bn = _block(n_dim, 128)
+    return pl.pallas_call(
+        _dw_kernel,
+        grid=(k_dim // bk, n_dim // bn),
+        in_specs=[
+            pl.BlockSpec((m_dim, bk), lambda i, j: (0, i)),
+            pl.BlockSpec((m_dim, bk), lambda i, j: (0, i)),
+            pl.BlockSpec((m_dim, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k_dim, n_dim), x.dtype),
+        interpret=True,
+    )(x, mask, dz)
+
+
+def _bwd_db(dz):
+    m_dim, n_dim = dz.shape
+    bn = _block(n_dim, 128)
+    return pl.pallas_call(
+        _db_kernel,
+        grid=(n_dim // bn,),
+        in_specs=[pl.BlockSpec((m_dim, bn), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((bn,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n_dim,), dz.dtype),
+        interpret=True,
+    )(dz)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def fused_dense(x, w, b, mask, activation="linear"):
+    """``act((x * mask) @ w + b)`` as a Pallas kernel.
+
+    Args:
+      x:    ``(M, K)`` input batch.
+      w:    ``(K, N)`` weights.
+      b:    ``(N,)`` bias.
+      mask: ``(M, K)`` pre-scaled dropout mask (ones disable dropout).
+      activation: one of ``linear | relu | tanh`` (static).
+    Returns:
+      ``(M, N)`` activated output.
+    """
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"activation must be one of {_ACTIVATIONS}")
+    y, _ = _fwd(x, w, b, mask, activation)
+    return y
+
+
+def _fused_dense_fwd(x, w, b, mask, activation):
+    y, z = _fwd(x, w, b, mask, activation)
+    return y, (x, w, mask, z, y)
+
+
+def _fused_dense_bwd(activation, res, g):
+    x, w, mask, z, y = res
+    dz = _bwd_dz(g, z, y, activation)
+    dx = _bwd_dx(dz, w, mask)
+    dw = _bwd_dw(x, mask, dz)
+    db = _bwd_db(dz)
+    return dx, dw, db, None  # mask is not differentiated
+
+
+fused_dense.defvjp(_fused_dense_fwd, _fused_dense_bwd)

@@ -1,0 +1,67 @@
+"""Weighted-MSE reduction Pallas kernel.
+
+The outer objective ℓ₁ (paper Eq. 1) is a (weighted) mean-squared error over
+the validation set. The per-row weight vector is how the Rust coordinator
+realizes *runtime-variable batch sizes* against a fixed compiled batch
+dimension: rows beyond the logical batch get weight 0 and drop out of both
+the numerator and the normalizer.
+
+Forward and backward are both Pallas kernels; the pair is registered as a
+``jax.custom_vjp`` so the L2 training graph differentiates through it.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mse_kernel(p_ref, t_ref, w_ref, o_ref):
+    d = p_ref[...] - t_ref[...]
+    se = jnp.sum(d * d, axis=-1)
+    w = w_ref[...]
+    denom = jnp.sum(w) * p_ref.shape[-1]
+    o_ref[0] = jnp.sum(w * se) / denom
+
+
+def _mse_grad_kernel(p_ref, t_ref, w_ref, o_ref):
+    w = w_ref[...]
+    denom = jnp.sum(w) * p_ref.shape[-1]
+    o_ref[...] = 2.0 * w[:, None] * (p_ref[...] - t_ref[...]) / denom
+
+
+def _mse_fwd_call(pred, target, weights):
+    (m_dim, _n_dim) = pred.shape
+    out = pl.pallas_call(
+        _mse_kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), pred.dtype),
+        interpret=True,
+    )(pred, target, weights)
+    return out[0]
+
+
+def _mse_grad_call(pred, target, weights):
+    return pl.pallas_call(
+        _mse_grad_kernel,
+        out_shape=jax.ShapeDtypeStruct(pred.shape, pred.dtype),
+        interpret=True,
+    )(pred, target, weights)
+
+
+@jax.custom_vjp
+def weighted_mse(pred, target, weights):
+    """Scalar weighted MSE: ``sum_i w_i ||pred_i - tgt_i||² / (sum w * N)``."""
+    return _mse_fwd_call(pred, target, weights)
+
+
+def _weighted_mse_fwd(pred, target, weights):
+    return _mse_fwd_call(pred, target, weights), (pred, target, weights)
+
+
+def _weighted_mse_bwd(res, g):
+    pred, target, weights = res
+    dpred = _mse_grad_call(pred, target, weights) * g
+    # target / weights are data, never differentiated in the training graph.
+    return dpred, None, None
+
+
+weighted_mse.defvjp(_weighted_mse_fwd, _weighted_mse_bwd)

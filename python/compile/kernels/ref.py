@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernel tests (pytest + hypothesis) compare
+against. They intentionally use only ``jax.numpy`` primitives so any
+discrepancy is attributable to the Pallas implementation.
+"""
+
+import jax.numpy as jnp
+
+
+def apply_activation(z, activation: str):
+    """Reference activation dispatch shared by kernel and oracle tests."""
+    if activation == "linear":
+        return z
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(z)
+    raise ValueError(f"unknown activation: {activation}")
+
+
+def fused_dense_ref(x, w, b, mask, activation: str = "linear"):
+    """Oracle for the fused dense layer.
+
+    Computes ``act((x * mask) @ w + b)``. ``mask`` is the *pre-scaled*
+    dropout mask (Bernoulli / (1-p)), matching the paper's inverted-dropout
+    convention (Sec. IV Feature 1).
+    """
+    z = jnp.dot(x * mask, w) + b
+    return apply_activation(z, activation)
+
+
+def fused_dense_preact_ref(x, w, b, mask):
+    """Pre-activation output used to check the kernel's residual output."""
+    return jnp.dot(x * mask, w) + b
+
+
+def weighted_mse_ref(pred, target, weights):
+    """Oracle for the weighted MSE loss.
+
+    ``weights`` is a per-row weight vector (shape ``(M,)``); rows with zero
+    weight are excluded, which is how the Rust coordinator realizes batch
+    sizes smaller than the compiled batch dimension.
+    """
+    se = jnp.sum((pred - target) ** 2, axis=-1)
+    denom = jnp.sum(weights) * pred.shape[-1]
+    return jnp.sum(weights * se) / denom
+
+
+def weighted_mse_grad_ref(pred, target, weights):
+    """Analytic d(loss)/d(pred) for the weighted MSE oracle."""
+    denom = jnp.sum(weights) * pred.shape[-1]
+    return 2.0 * weights[:, None] * (pred - target) / denom

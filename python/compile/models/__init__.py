@@ -1,0 +1,14 @@
+"""Layer-2 model families (build-time JAX; AOT-lowered to HLO text).
+
+Each family exposes the same role set consumed by the Rust runtime registry:
+
+  init(seed)                          -> params tuple
+  train_step(params.., batch inputs)  -> (params.., loss)
+  predict(params.., x)                -> (y,)
+  predict_dropout(params.., x, p, seed) -> (y,)   # one MC-dropout pass
+
+Shape-changing hyperparameters (layer count, width, channels, U-Net blocks)
+select an *artifact* from the AOT grid; runtime-continuous hyperparameters
+(learning rate, dropout probability, seed, effective batch size via the
+row-weight vector) are executable inputs. See DESIGN.md §5.
+"""

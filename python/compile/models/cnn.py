@@ -1,0 +1,130 @@
+"""Small CNN classifier family — the CIFAR10-like study (Fig. 1b).
+
+Input: ``(B, 8, 8, 3)`` synthetic shape images (DESIGN.md §2 substitution
+for CIFAR10). Architecture: 3x3 conv (C channels, relu) -> 2x2 max-pool ->
+flatten -> fused_dense hidden (relu, dropout) -> linear head -> softmax.
+
+The dense trunk runs through the Layer-1 Pallas kernel; convs use
+``lax.conv_general_dilated`` in L2 (XLA fuses them on its own).
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import fused_dense
+
+IMG = 8
+CHANNELS_IN = 3
+N_CLASSES = 10
+
+
+@dataclass(frozen=True)
+class CnnArch:
+    channels: int
+    width: int
+    batch: int = 32
+
+    @property
+    def name(self) -> str:
+        return f"cnn_c{self.channels}_w{self.width}_b{self.batch}"
+
+    @property
+    def flat_dim(self) -> int:
+        return (IMG // 2) * (IMG // 2) * self.channels
+
+    def n_params(self) -> int:
+        conv = 3 * 3 * CHANNELS_IN * self.channels + self.channels
+        d1 = self.flat_dim * self.width + self.width
+        d2 = self.width * N_CLASSES + N_CLASSES
+        return conv + d1 + d2
+
+
+def init(arch: CnnArch, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    fan = 3 * 3 * CHANNELS_IN
+    kconv = jax.random.normal(
+        k1, (3, 3, CHANNELS_IN, arch.channels), jnp.float32
+    ) * jnp.sqrt(2.0 / fan)
+    bconv = jnp.zeros((arch.channels,), jnp.float32)
+    lim1 = jnp.sqrt(6.0 / (arch.flat_dim + arch.width))
+    w1 = jax.random.uniform(
+        k2, (arch.flat_dim, arch.width), jnp.float32, -lim1, lim1
+    )
+    b1 = jnp.zeros((arch.width,), jnp.float32)
+    lim2 = jnp.sqrt(6.0 / (arch.width + N_CLASSES))
+    w2 = jax.random.uniform(
+        k3, (arch.width, N_CLASSES), jnp.float32, -lim2, lim2
+    )
+    b2 = jnp.zeros((N_CLASSES,), jnp.float32)
+    return (kconv, bconv, w1, b1, w2, b2)
+
+
+def _trunk(arch: CnnArch, params, x):
+    kconv, bconv = params[0], params[1]
+    h = lax.conv_general_dilated(
+        x, kconv, (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + bconv
+    h = jnp.maximum(h, 0.0)
+    h = lax.reduce_window(
+        h, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+    return h.reshape(arch.batch, arch.flat_dim)
+
+
+def _head(arch: CnnArch, params, flat, mask_hidden):
+    _, _, w1, b1, w2, b2 = params
+    ones = jnp.ones_like(flat)
+    h = fused_dense(flat, w1, b1, ones, "relu")
+    logits = fused_dense(h, w2, b2, mask_hidden, "linear")
+    return logits
+
+
+def _mask(arch: CnnArch, p, seed):
+    key = jax.random.PRNGKey(seed)
+    keep = 1.0 - p
+    bern = jax.random.bernoulli(key, keep, (arch.batch, arch.width))
+    return bern.astype(jnp.float32) / jnp.maximum(keep, 1e-6)
+
+
+def predict(arch: CnnArch, params, x):
+    """Class probabilities without dropout."""
+    flat = _trunk(arch, params, x)
+    ones = jnp.ones((arch.batch, arch.width), jnp.float32)
+    logits = _head(arch, params, flat, ones)
+    return (jax.nn.softmax(logits, axis=-1),)
+
+
+def predict_dropout(arch: CnnArch, params, x, p, seed):
+    """One MC-dropout pass over the dense head (Fig. 1b)."""
+    flat = _trunk(arch, params, x)
+    logits = _head(arch, params, flat, _mask(arch, p, seed))
+    return (jax.nn.softmax(logits, axis=-1),)
+
+
+def _loss(arch: CnnArch, params, x, labels_onehot, wvec, p, seed):
+    flat = _trunk(arch, params, x)
+    logits = _head(arch, params, flat, _mask(arch, p, seed))
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.sum(labels_onehot * logp, axis=-1)
+    return jnp.sum(wvec * ce) / jnp.sum(wvec)
+
+
+def train_step(arch: CnnArch, params, x, labels_onehot, wvec, lr, p, seed):
+    loss, grads = jax.value_and_grad(
+        lambda ps: _loss(arch, ps, x, labels_onehot, wvec, p, seed)
+    )(params)
+    new_params = tuple(w - lr * g for w, g in zip(params, grads))
+    return new_params + (loss,)
+
+
+def eval_loss(arch: CnnArch, params, x, labels_onehot, wvec):
+    """Deterministic validation cross-entropy."""
+    probs = predict(arch, params, x)[0]
+    logp = jnp.log(jnp.maximum(probs, 1e-12))
+    ce = -jnp.sum(labels_onehot * logp, axis=-1)
+    return (jnp.sum(wvec * ce) / jnp.sum(wvec),)

@@ -1,0 +1,121 @@
+"""MLP family: time-series predictor (Figs. 1a/2/3) and the polynomial-fit
+network of the DeepHyper comparison (Fig. 4).
+
+Architecture: ``in_dim -> [width] * layers (tanh, dropout) -> out_dim``.
+Hidden layers run through the Layer-1 ``fused_dense`` Pallas kernel with the
+dropout mask fused into the matmul; the output layer is a linear
+``fused_dense`` whose mask carries the dropout of the last hidden layer,
+mirroring the paper's node-dropout convention (dropout on hidden nodes, not
+on raw inputs).
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import fused_dense, weighted_mse
+
+
+@dataclass(frozen=True)
+class MlpArch:
+    """Shape-defining hyperparameters (select an AOT artifact)."""
+
+    in_dim: int
+    out_dim: int
+    layers: int
+    width: int
+    batch: int = 32
+
+    @property
+    def name(self) -> str:
+        return (
+            f"mlp_i{self.in_dim}_o{self.out_dim}"
+            f"_l{self.layers}_w{self.width}_b{self.batch}"
+        )
+
+    def dims(self):
+        return [self.in_dim] + [self.width] * self.layers + [self.out_dim]
+
+    def n_params(self) -> int:
+        dims = self.dims()
+        return sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+
+
+def init(arch: MlpArch, seed):
+    """Glorot-uniform init from an int32 seed (an executable input so the
+    Rust coordinator controls trial reproducibility)."""
+    key = jax.random.PRNGKey(seed)
+    dims = arch.dims()
+    params = []
+    for fan_in, fan_out in zip(dims[:-1], dims[1:]):
+        key, kw = jax.random.split(key)
+        limit = jnp.sqrt(6.0 / (fan_in + fan_out))
+        w = jax.random.uniform(
+            kw, (fan_in, fan_out), jnp.float32, -limit, limit
+        )
+        b = jnp.zeros((fan_out,), jnp.float32)
+        params += [w, b]
+    return tuple(params)
+
+
+def _masks(arch: MlpArch, p, seed, batch):
+    """Pre-scaled inverted-dropout masks for the inputs of layers 1..L.
+
+    Layer 0 (raw input) gets no dropout; each subsequent layer's input mask
+    drops the previous hidden layer's nodes with probability ``p`` and
+    scales survivors by 1/(1-p). ``p`` is a traced f32 input.
+    """
+    key = jax.random.PRNGKey(seed)
+    keep = 1.0 - p
+    masks = [jnp.ones((batch, arch.in_dim), jnp.float32)]
+    for _ in range(arch.layers):
+        key, km = jax.random.split(key)
+        bern = jax.random.bernoulli(km, keep, (batch, arch.width))
+        masks.append(bern.astype(jnp.float32) / jnp.maximum(keep, 1e-6))
+    return masks
+
+
+def forward(arch: MlpArch, params, x, masks):
+    """Forward pass through fused_dense kernels; ``masks[i]`` gates the
+    input of layer ``i``."""
+    h = x
+    n_layers = arch.layers + 1
+    for li in range(n_layers):
+        w, b = params[2 * li], params[2 * li + 1]
+        act = "tanh" if li < arch.layers else "linear"
+        h = fused_dense(h, w, b, masks[li], act)
+    return h
+
+
+def predict(arch: MlpArch, params, x):
+    masks = [jnp.ones_like(x)] + [
+        jnp.ones((arch.batch, arch.width), jnp.float32)
+    ] * arch.layers
+    return (forward(arch, params, x, masks),)
+
+
+def predict_dropout(arch: MlpArch, params, x, p, seed):
+    """One MC-dropout forward pass (paper Feature 1)."""
+    return (forward(arch, params, x, _masks(arch, p, seed, arch.batch)),)
+
+
+def loss_fn(arch: MlpArch, params, x, y, wvec, p, seed):
+    out = forward(arch, params, x, _masks(arch, p, seed, arch.batch))
+    return weighted_mse(out, y, wvec)
+
+
+def train_step(arch: MlpArch, params, x, y, wvec, lr, p, seed):
+    """One SGD step with dropout; returns updated params and the pre-update
+    batch loss. All of (lr, p, seed, wvec) are runtime inputs."""
+    loss, grads = jax.value_and_grad(
+        lambda ps: loss_fn(arch, ps, x, y, wvec, p, seed)
+    )(params)
+    new_params = tuple(w - lr * g for w, g in zip(params, grads))
+    return new_params + (loss,)
+
+
+def eval_loss(arch: MlpArch, params, x, y, wvec):
+    """Deterministic validation loss (no dropout) — the outer ℓ₁ sample."""
+    out = predict(arch, params, x)[0]
+    return (weighted_mse(out, y, wvec),)

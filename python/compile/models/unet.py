@@ -1,0 +1,205 @@
+"""U-Net family for sinogram inpainting (paper §V, Table I, Figs. 9-11).
+
+Input: ``(B, A, D, 1)`` sparse sinograms (A angles x D detector bins; the
+missing angles are zero rows). Output: the completed sinogram.
+
+Architecture follows §V-A: a stem conv lifts 1 -> f0 feature maps, then
+``blocks`` down-sampling blocks each made of ``inter_layers`` size-preserving
+convolutions followed by a final convolution with kernel ``k_final`` and
+stride ``stride_final`` that increases the feature maps by ``mult``; the up
+path mirrors with transposed convolutions and skip concatenations.
+
+The eight Table-I hyperparameters map as:
+  (1) f0        initial feature maps          — artifact grid
+  (2) mult      feature-map multiplier        — artifact grid
+  (3) blocks    number of down/up blocks      — artifact grid
+  (4) inter     intermediate layers per block — artifact grid
+  (5) k_final   final-conv kernel size        — artifact grid
+  (6) stride    final-conv stride             — artifact grid
+  (7) p         dropout probability           — runtime input
+  (8) k_inter   intermediate kernel size      — artifact grid
+
+The loss runs through the Layer-1 ``weighted_mse`` Pallas kernel.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import weighted_mse
+
+ANGLES = 16
+DETECTORS = 128
+
+
+@dataclass(frozen=True)
+class UnetArch:
+    f0: int
+    mult: float
+    blocks: int
+    inter: int
+    k_final: int
+    stride: int
+    k_inter: int
+    batch: int = 4
+    angles: int = ANGLES
+    detectors: int = DETECTORS
+
+    @property
+    def name(self) -> str:
+        m = str(self.mult).replace(".", "p")
+        return (
+            f"unet_f{self.f0}_m{m}_b{self.blocks}_i{self.inter}"
+            f"_kf{self.k_final}_s{self.stride}_ki{self.k_inter}"
+            f"_n{self.batch}"
+        )
+
+    def channels(self):
+        """Feature maps after down block i (i = 0..blocks-1)."""
+        return [
+            max(1, int(round(self.f0 * self.mult**i)))
+            for i in range(self.blocks)
+        ]
+
+    def n_params(self) -> int:
+        return sum(int(p.size) for p in init(self, 0))
+
+
+def _conv(h, w, b, stride=1):
+    out = lax.conv_general_dilated(
+        h, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b
+
+
+def _deconv(h, w, b, stride):
+    out = lax.conv_transpose(
+        h, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b
+
+
+def init(arch: UnetArch, seed):
+    """He-normal init; returns a flat tuple of conv kernels and biases in
+    the exact order consumed by ``forward``."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+
+    def mk(key, kh, kw, cin, cout):
+        k1, key = jax.random.split(key)
+        w = jax.random.normal(k1, (kh, kw, cin, cout), jnp.float32)
+        w = w * jnp.sqrt(2.0 / (kh * kw * cin))
+        return key, w, jnp.zeros((cout,), jnp.float32)
+
+    ki, kf = arch.k_inter, arch.k_final
+    chans = arch.channels()
+
+    # Stem: 1 -> f0.
+    key, w, b = mk(key, ki, ki, 1, chans[0])
+    params += [w, b]
+
+    # Down blocks.
+    for i in range(arch.blocks):
+        cin = chans[i]
+        for _ in range(arch.inter):
+            key, w, b = mk(key, ki, ki, cin, cin)
+            params += [w, b]
+        cout = chans[min(i + 1, arch.blocks - 1)]
+        key, w, b = mk(key, kf, kf, cin, cout)
+        params += [w, b]
+
+    # Up blocks (mirror).
+    for i in reversed(range(arch.blocks)):
+        cin = chans[min(i + 1, arch.blocks - 1)]
+        ct = chans[i]
+        key, w, b = mk(key, kf, kf, cin, ct)  # transpose conv cin -> ct
+        params += [w, b]
+        # First intermediate conv folds the skip concat 2*ct -> ct.
+        key, w, b = mk(key, ki, ki, 2 * ct, ct)
+        params += [w, b]
+        for _ in range(max(0, arch.inter - 1)):
+            key, w, b = mk(key, ki, ki, ct, ct)
+            params += [w, b]
+
+    # Head: f0 -> 1, 1x1 linear.
+    key, w, b = mk(key, 1, 1, chans[0], 1)
+    params += [w, b]
+    return tuple(params)
+
+
+def forward(arch: UnetArch, params, x, p, seed):
+    """Forward pass; ``p`` is the (traced) dropout probability applied after
+    each down block's strided conv. ``p = 0`` disables dropout exactly."""
+    key = jax.random.PRNGKey(seed)
+    keep = 1.0 - p
+    it = iter(range(len(params)))
+
+    def nxt():
+        i = next(it)
+        j = next(it)
+        return params[i], params[j]
+
+    w, b = nxt()
+    h = jnp.maximum(_conv(x, w, b), 0.0)
+
+    skips = []
+    for i in range(arch.blocks):
+        for _ in range(arch.inter):
+            w, b = nxt()
+            h = jnp.maximum(_conv(h, w, b), 0.0)
+        skips.append(h)
+        w, b = nxt()
+        h = jnp.maximum(_conv(h, w, b, stride=arch.stride), 0.0)
+        key, km = jax.random.split(key)
+        bern = jax.random.bernoulli(km, keep, h.shape)
+        h = h * bern.astype(jnp.float32) / jnp.maximum(keep, 1e-6)
+
+    for i in reversed(range(arch.blocks)):
+        w, b = nxt()
+        if arch.stride == 1:
+            h = jnp.maximum(_conv(h, w, b), 0.0)
+        else:
+            h = jnp.maximum(_deconv(h, w, b, arch.stride), 0.0)
+        h = jnp.concatenate([h, skips[i]], axis=-1)
+        w, b = nxt()
+        h = jnp.maximum(_conv(h, w, b), 0.0)
+        for _ in range(max(0, arch.inter - 1)):
+            w, b = nxt()
+            h = jnp.maximum(_conv(h, w, b), 0.0)
+
+    w, b = nxt()
+    return _conv(h, w, b)
+
+
+def predict(arch: UnetArch, params, x):
+    return (forward(arch, params, x, jnp.float32(0.0), 0),)
+
+
+def predict_dropout(arch: UnetArch, params, x, p, seed):
+    return (forward(arch, params, x, p, seed),)
+
+
+def _flat(y):
+    return y.reshape(y.shape[0], -1)
+
+
+def _loss(arch: UnetArch, params, x, y, wvec, p, seed):
+    out = forward(arch, params, x, p, seed)
+    return weighted_mse(_flat(out), _flat(y), wvec)
+
+
+def train_step(arch: UnetArch, params, x, y, wvec, lr, p, seed):
+    loss, grads = jax.value_and_grad(
+        lambda ps: _loss(arch, ps, x, y, wvec, p, seed)
+    )(params)
+    new_params = tuple(w - lr * g for w, g in zip(params, grads))
+    return new_params + (loss,)
+
+
+def eval_loss(arch: UnetArch, params, x, y, wvec):
+    out = predict(arch, params, x)[0]
+    return (weighted_mse(_flat(out), _flat(y), wvec),)

@@ -1,0 +1,81 @@
+"""AOT exporter tests: manifest consistency and HLO-text loadability.
+
+These guard the interchange contract with the Rust registry
+(rust/src/runtime/registry.rs): every manifest entry must describe exactly
+the parameters the lowered HLO expects, in order.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+from jax import ShapeDtypeStruct as Sds
+
+from compile import aot
+from compile.hlo import to_hlo_text
+from compile.models import mlp
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_entry_filenames_unique():
+    entries = aot.mlp_entries() + aot.cnn_entries() + aot.unet_entries()
+    names = [e.filename for e in entries]
+    assert len(names) == len(set(names))
+
+
+def test_roles_complete_per_arch():
+    entries = aot.mlp_entries()
+    by_arch = {}
+    for e in entries:
+        by_arch.setdefault(e.arch_name, set()).add(e.role)
+    for arch, roles in by_arch.items():
+        assert roles == set(aot.ROLES), arch
+
+
+def test_train_step_io_contract():
+    """train_step inputs = params + (x, y, w, lr, p, seed); outputs =
+    params + loss. The Rust training loop feeds outputs back as inputs."""
+    for e in aot.mlp_entries():
+        if e.role != "train_step":
+            continue
+        n = e.n_param_arrays
+        ins, outs = e.manifest()["inputs"], e.manifest()["outputs"]
+        assert len(ins) == n + 6
+        assert len(outs) == n + 1
+        # fed-back params must match exactly
+        assert ins[:n] == outs[:n]
+        assert outs[n]["shape"] == []
+        break
+    else:
+        pytest.fail("no train_step entry found")
+
+
+def test_hlo_text_parses_as_hlo_module():
+    """The emitted text must start with an HLO module header — the format
+    HloModuleProto::from_text_file on the Rust side understands."""
+    arch = mlp.MlpArch(1, 1, 1, 16)
+    text = to_hlo_text(lambda s: mlp.init(arch, s), [Sds((), jnp.int32)])
+    assert text.lstrip().startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_table1_columns_match_paper():
+    # Paper Table I hyperparameter values, columns (a)-(d).
+    assert aot.TABLE1_COLUMNS["a"][:2] == (8, 1.0)
+    assert aot.TABLE1_COLUMNS["d"] == (12, 1.4, 4, 4, 5, 2, 0.10, 5)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_manifest_files_exist():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    for entry in manifest["artifacts"]:
+        p = os.path.join(ART_DIR, entry["path"])
+        assert os.path.exists(p), entry["path"]
+        assert os.path.getsize(p) > 100

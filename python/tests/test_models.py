@@ -1,0 +1,185 @@
+"""L2 model-family tests: shapes, training progress, dropout semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models import cnn, mlp, unet
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+class TestMlp:
+    ARCH = mlp.MlpArch(16, 1, 2, 32)
+
+    def _data(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+        y = jnp.sin(jnp.sum(x, axis=1, keepdims=True))
+        return x, y, jnp.ones((32,), jnp.float32)
+
+    def test_param_count_matches_formula(self):
+        ps = mlp.init(self.ARCH, 0)
+        assert sum(int(p.size) for p in ps) == self.ARCH.n_params()
+
+    def test_init_seed_determinism(self):
+        a = mlp.init(self.ARCH, 42)
+        b = mlp.init(self.ARCH, 42)
+        c = mlp.init(self.ARCH, 43)
+        for pa, pb in zip(a, b):
+            np.testing.assert_array_equal(pa, pb)
+        assert any(
+            not np.array_equal(pa, pc) for pa, pc in zip(a, c)
+        )
+
+    def test_training_decreases_loss(self):
+        x, y, w = self._data()
+        ps = mlp.init(self.ARCH, 0)
+        first = None
+        out = ps + (jnp.float32(0),)
+        for i in range(60):
+            out = mlp.train_step(
+                self.ARCH, out[:-1], x, y, w,
+                jnp.float32(0.05), jnp.float32(0.0), i,
+            )
+            if first is None:
+                first = float(out[-1])
+        assert float(out[-1]) < 0.5 * first
+
+    def test_predict_dropout_varies_with_seed(self):
+        x, _, _ = self._data()
+        ps = mlp.init(self.ARCH, 0)
+        y1 = mlp.predict_dropout(
+            self.ARCH, ps, x, jnp.float32(0.5), 1)[0]
+        y2 = mlp.predict_dropout(
+            self.ARCH, ps, x, jnp.float32(0.5), 2)[0]
+        assert not np.allclose(y1, y2)
+
+    def test_zero_dropout_equals_predict(self):
+        x, _, _ = self._data()
+        ps = mlp.init(self.ARCH, 0)
+        yd = mlp.predict_dropout(
+            self.ARCH, ps, x, jnp.float32(0.0), 7)[0]
+        yp = mlp.predict(self.ARCH, ps, x)[0]
+        np.testing.assert_allclose(yd, yp, rtol=1e-5, atol=1e-6)
+
+    def test_eval_loss_ignores_masked_rows(self):
+        x, y, _ = self._data()
+        ps = mlp.init(self.ARCH, 0)
+        w = jnp.asarray(np.arange(32) < 8, jnp.float32)
+        base = mlp.eval_loss(self.ARCH, ps, x, y, w)[0]
+        x2 = x.at[8:].set(1e3)
+        y2 = y.at[8:].set(-1e3)
+        again = mlp.eval_loss(self.ARCH, ps, x2, y2, w)[0]
+        np.testing.assert_allclose(base, again, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# CNN
+# ---------------------------------------------------------------------------
+
+class TestCnn:
+    ARCH = cnn.CnnArch(8, 32)
+
+    def _data(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(
+            rng.standard_normal((32, 8, 8, 3)), jnp.float32)
+        labels = jnp.asarray(rng.integers(0, 10, 32), jnp.int32)
+        return x, jax.nn.one_hot(labels, 10), jnp.ones((32,), jnp.float32)
+
+    def test_param_count_matches_formula(self):
+        ps = cnn.init(self.ARCH, 0)
+        assert sum(int(p.size) for p in ps) == self.ARCH.n_params()
+
+    def test_predict_probabilities_sum_to_one(self):
+        x, _, _ = self._data()
+        probs = cnn.predict(self.ARCH, cnn.init(self.ARCH, 0), x)[0]
+        assert probs.shape == (32, 10)
+        np.testing.assert_allclose(
+            np.sum(probs, axis=-1), 1.0, rtol=1e-5)
+        assert bool(jnp.all(probs >= 0))
+
+    def test_training_decreases_loss(self):
+        x, yoh, w = self._data()
+        out = cnn.init(self.ARCH, 0) + (jnp.float32(0),)
+        first = None
+        for i in range(40):
+            out = cnn.train_step(
+                self.ARCH, out[:-1], x, yoh, w,
+                jnp.float32(0.1), jnp.float32(0.0), i,
+            )
+            if first is None:
+                first = float(out[-1])
+        assert float(out[-1]) < first
+
+    def test_mc_dropout_spread_positive(self):
+        x, _, _ = self._data()
+        ps = cnn.init(self.ARCH, 0)
+        outs = jnp.stack([
+            cnn.predict_dropout(
+                self.ARCH, ps, x, jnp.float32(0.4), s)[0]
+            for s in range(8)
+        ])
+        assert float(jnp.std(outs, axis=0).mean()) > 0
+
+
+# ---------------------------------------------------------------------------
+# U-Net
+# ---------------------------------------------------------------------------
+
+COLS = {
+    "a": (8, 1.0, 2, 1, 2, 1, 2),
+    "c": (10, 1.2, 3, 4, 4, 2, 5),
+    "d": (12, 1.4, 4, 4, 5, 2, 5),
+}
+
+
+class TestUnet:
+    def _arch(self, col="a", batch=2):
+        f0, mult, blocks, inter, kf, s, ki = COLS[col]
+        return unet.UnetArch(f0, mult, blocks, inter, kf, s, ki,
+                             batch=batch)
+
+    def _data(self, arch):
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(
+            rng.random((arch.batch, arch.angles, arch.detectors, 1)),
+            jnp.float32)
+        return x
+
+    @pytest.mark.parametrize("col", sorted(COLS))
+    def test_output_shape_preserved(self, col):
+        arch = self._arch(col)
+        x = self._data(arch)
+        y = unet.predict(arch, unet.init(arch, 0), x)[0]
+        assert y.shape == x.shape
+
+    def test_channel_progression(self):
+        arch = self._arch("c")
+        assert arch.channels() == [10, 12, 14]
+
+    def test_training_decreases_loss(self):
+        arch = self._arch("a")
+        x = self._data(arch)
+        w = jnp.ones((arch.batch,), jnp.float32)
+        out = unet.init(arch, 0) + (jnp.float32(0),)
+        first = None
+        for i in range(15):
+            out = unet.train_step(
+                arch, out[:-1], x, x, w,
+                jnp.float32(0.02), jnp.float32(0.0), i)
+            if first is None:
+                first = float(out[-1])
+        assert float(out[-1]) < first
+
+    def test_dropout_seed_changes_output(self):
+        arch = self._arch("a")
+        x = self._data(arch)
+        ps = unet.init(arch, 0)
+        y1 = unet.predict_dropout(arch, ps, x, jnp.float32(0.5), 1)[0]
+        y2 = unet.predict_dropout(arch, ps, x, jnp.float32(0.5), 2)[0]
+        assert not np.allclose(y1, y2)

@@ -1,0 +1,67 @@
+//! Cluster benches: the virtual-time simulator behind Fig. 8 and the
+//! real thread-pool's per-evaluation scheduling overhead — L3 must not be
+//! the bottleneck (paper's claim is about *eliminating* coordination cost
+//! via nested parallelism).
+
+use std::time::Duration;
+
+use hyppo::cluster::sim::{simulate, EvalCost, SimConfig};
+use hyppo::cluster::workers::{run_async, AsyncConfig};
+use hyppo::cluster::{ParallelMode, Topology};
+use hyppo::eval::synthetic::SyntheticEvaluator;
+use hyppo::optimizer::HpoConfig;
+use hyppo::space::{ParamSpec, Space};
+use hyppo::util::bench::{bench, bench1, black_box};
+
+fn main() {
+    println!("== cluster benches ==");
+    let evals: Vec<EvalCost> = (0..50)
+        .map(|i| EvalCost {
+            trial_costs: vec![Duration::from_millis(100 + 7 * i as u64); 5],
+        })
+        .collect();
+    let cfg = SimConfig::trial_parallel(Topology::new(16, 6));
+    bench1("sim_fig8_grid_cell_50x5", || {
+        black_box(simulate(&evals, &cfg));
+    });
+
+    // Full 5x6 topology grid (one Fig. 8 regeneration).
+    bench1("sim_fig8_full_grid_30cells", || {
+        for s in [1usize, 2, 4, 8, 16] {
+            for t in 1..=6usize {
+                let c = SimConfig::trial_parallel(Topology::new(s, t));
+                black_box(simulate(&evals, &c));
+            }
+        }
+    });
+
+    // Thread-pool scheduling overhead: near-zero-cost evaluator, so the
+    // measured time is almost purely coordination (queue, refit, channel).
+    let space = Space::new(vec![
+        ParamSpec::new("a", 0, 20),
+        ParamSpec::new("b", 0, 20),
+    ]);
+    let mut ev = SyntheticEvaluator::new(space, 1);
+    ev.t_dropout = 2;
+    ev.base_cost = Duration::from_nanos(1);
+    ev.ns_per_param = 0.0;
+    let acfg = AsyncConfig {
+        hpo: HpoConfig {
+            max_evaluations: 32,
+            n_init: 8,
+            n_trials: 2,
+            seed: 1,
+            ..Default::default()
+        },
+        topology: Topology::new(4, 2),
+        mode: ParallelMode::TrialParallel,
+        time_scale: 0.0,
+    };
+    bench(
+        "async_hpo_32evals_overhead",
+        Duration::from_secs(3),
+        || {
+            black_box(run_async(&ev, &acfg));
+        },
+    );
+}

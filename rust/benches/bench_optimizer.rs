@@ -1,0 +1,69 @@
+//! Optimizer hot paths: candidate generation + scoring (the RBF iteration
+//! of Feature 2), the integer GA maximizing EI (the GP iteration), and a
+//! full propose_next under each surrogate — i.e. the L3 cost per adaptive
+//! evaluation, which must stay negligible vs a training run.
+
+use hyppo::eval::synthetic::SyntheticEvaluator;
+use hyppo::optimizer::candidates::{generate, select, CandidateConfig};
+use hyppo::optimizer::ga::{maximize, GaConfig};
+use hyppo::optimizer::{propose_next, run_random, HpoConfig, SurrogateKind};
+use hyppo::sampling::Rng;
+use hyppo::space::{ParamSpec, Space};
+use hyppo::uq::UqWeights;
+use hyppo::util::bench::{bench1, black_box};
+
+fn space() -> Space {
+    Space::new(vec![
+        ParamSpec::new("layers", 1, 5),
+        ParamSpec::new("width", 0, 15),
+        ParamSpec::new("lr", 0, 11),
+        ParamSpec::new("dropout", 0, 8),
+        ParamSpec::new("epochs", 1, 20),
+        ParamSpec::new("batch", 4, 32),
+    ])
+}
+
+fn main() {
+    let sp = space();
+    let mut rng = Rng::new(0);
+    let evaluated: Vec<Vec<i64>> =
+        (0..60).map(|_| sp.random_point(&mut rng)).collect();
+    let best = evaluated[0].clone();
+    let cfg = CandidateConfig::default();
+
+    println!("== optimizer benches (6-D space) ==");
+    bench1("candidates_generate_200", || {
+        black_box(generate(&sp, &best, &evaluated, &cfg, &mut rng));
+    });
+
+    let cands = generate(&sp, &best, &evaluated, &cfg, &mut rng);
+    let values: Vec<f64> = (0..cands.len()).map(|i| i as f64).collect();
+    bench1("candidates_select_200", || {
+        black_box(select(&sp, &cands, &values, &evaluated, 0.8));
+    });
+
+    bench1("ga_maximize_40x30", || {
+        let mut r = Rng::new(3);
+        black_box(maximize(&sp, &GaConfig::default(), &mut r, |p| {
+            -(p[0] as f64 - 3.0).powi(2) - (p[1] as f64 - 7.0).powi(2)
+        }));
+    });
+
+    // Full proposal step on a 60-point history, per surrogate kind.
+    let ev = SyntheticEvaluator::new(sp.clone(), 5);
+    let hist = run_random(&ev, 60, 2, UqWeights::default_paper(), 1);
+    for (name, kind) in [
+        ("rbf", SurrogateKind::Rbf),
+        ("gp", SurrogateKind::Gp),
+        (
+            "ensemble",
+            SurrogateKind::RbfEnsemble { alpha: 1.0, members: 8 },
+        ),
+    ] {
+        let hcfg = HpoConfig { surrogate: kind, ..Default::default() };
+        bench1(&format!("propose_next_{name}_h60"), || {
+            let mut r = Rng::new(7);
+            black_box(propose_next(&sp, &hist, &hcfg, 1, &mut r));
+        });
+    }
+}

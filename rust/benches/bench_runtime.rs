@@ -1,0 +1,67 @@
+//! PJRT runtime benches: compile + execute latency of the AOT artifacts —
+//! the per-step cost of the real training path (gated on `make artifacts`).
+//!
+//! These are the numbers behind the end-to-end training throughput in
+//! EXPERIMENTS.md §Perf; `train_step` dominates every real evaluation.
+
+use std::time::Duration;
+
+use hyppo::runtime::{artifact_dir, make_batch, Model, SharedEngine};
+use hyppo::util::bench::{bench, black_box};
+
+fn main() {
+    let Some(dir) = artifact_dir() else {
+        println!("skipping runtime benches: artifacts not built");
+        return;
+    };
+    let engine = SharedEngine::load(dir).expect("engine");
+    println!("== PJRT runtime benches ==");
+
+    for arch in ["mlp_i16_o1_l1_w16_b32", "mlp_i16_o1_l3_w64_b32"] {
+        let mut model = Model::init(&engine, arch, 1).expect("init");
+        let x: Vec<f32> = (0..32 * 16).map(|i| (i % 7) as f32 * 0.1).collect();
+        let y: Vec<f32> = (0..32).map(|i| (i % 3) as f32).collect();
+        let xs: Vec<&[f32]> = x.chunks(16).collect();
+        let ys: Vec<&[f32]> = y.chunks(1).collect();
+        let batch = make_batch(&xs, &ys, 32).unwrap();
+
+        bench(
+            &format!("{arch}__train_step"),
+            Duration::from_secs(2),
+            || {
+                black_box(
+                    model.train_step(&batch, 0.01, 0.1, 3).unwrap(),
+                );
+            },
+        );
+        bench(
+            &format!("{arch}__predict"),
+            Duration::from_secs(2),
+            || {
+                black_box(model.predict(&x).unwrap());
+            },
+        );
+        bench(
+            &format!("{arch}__predict_dropout"),
+            Duration::from_secs(2),
+            || {
+                black_box(model.predict_dropout(&x, 0.3, 7).unwrap());
+            },
+        );
+    }
+
+    // U-Net column (a): the Table-I training hot path.
+    let arch = "unet_f8_m1p0_b2_i1_kf2_s1_ki2_n4";
+    let mut model = Model::init(&engine, arch, 1).expect("unet init");
+    let x = vec![0.1f32; 4 * 16 * 128];
+    let xs: Vec<&[f32]> = x.chunks(16 * 128).collect();
+    let ys: Vec<&[f32]> = x.chunks(16 * 128).collect();
+    let batch = make_batch(&xs, &ys, 4).unwrap();
+    bench(
+        &format!("{arch}__train_step"),
+        Duration::from_secs(3),
+        || {
+            black_box(model.train_step(&batch, 0.01, 0.05, 3).unwrap());
+        },
+    );
+}

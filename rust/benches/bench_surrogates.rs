@@ -1,0 +1,61 @@
+//! Surrogate hot paths: RBF/GP/ensemble fit + predict scaling in the
+//! number of evaluated points — the per-completion refit cost that bounds
+//! the asynchronous update rate (Fig. 6). Run via `cargo bench`.
+
+use hyppo::sampling::Rng;
+use hyppo::surrogate::ensemble::RbfEnsemble;
+use hyppo::surrogate::gp::GpSurrogate;
+use hyppo::surrogate::rbf::RbfSurrogate;
+use hyppo::surrogate::Surrogate;
+use hyppo::uq::LossInterval;
+use hyppo::util::bench::{bench1, black_box};
+
+fn data(n: usize, d: usize, rng: &mut Rng) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let xs: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..d).map(|_| rng.f64()).collect())
+        .collect();
+    let ys = xs
+        .iter()
+        .map(|x| x.iter().map(|v| (v - 0.4) * (v - 0.4)).sum())
+        .collect();
+    (xs, ys)
+}
+
+fn main() {
+    let mut rng = Rng::new(0);
+    println!("== surrogate benches (6-D, paper-scale histories) ==");
+    for n in [25usize, 100, 400] {
+        let (xs, ys) = data(n, 6, &mut rng);
+
+        bench1(&format!("rbf_fit_n{n}"), || {
+            let mut m = RbfSurrogate::new();
+            black_box(m.fit(&xs, &ys));
+        });
+        let mut rbf = RbfSurrogate::new();
+        rbf.fit(&xs, &ys);
+        let q: Vec<f64> = (0..6).map(|_| rng.f64()).collect();
+        bench1(&format!("rbf_predict_n{n}"), || {
+            black_box(rbf.predict(&q));
+        });
+
+        bench1(&format!("gp_fit_n{n}"), || {
+            let mut m = GpSurrogate::new();
+            black_box(m.fit(&xs, &ys));
+        });
+        let mut gp = GpSurrogate::new();
+        gp.fit(&xs, &ys);
+        bench1(&format!("gp_predict_std_n{n}"), || {
+            black_box(gp.predict_std(&q));
+        });
+
+        let intervals: Vec<LossInterval> = ys
+            .iter()
+            .map(|y| LossInterval { center: *y, radius: 0.1 * y })
+            .collect();
+        bench1(&format!("ensemble8_fit_n{n}"), || {
+            let mut e = RbfEnsemble::new(8, 1.0);
+            let mut r = Rng::new(1);
+            black_box(e.fit(&xs, &intervals, &mut r));
+        });
+    }
+}

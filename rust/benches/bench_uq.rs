@@ -1,0 +1,44 @@
+//! UQ aggregation benches: Eqs. (4)-(7) over paper-default settings
+//! (N=5 trials, T=30 dropout passes, validation vectors) plus the robust
+//! statistics of Fig. 9. These run on every evaluation completion.
+
+use hyppo::sampling::Rng;
+use hyppo::uq::{mad, median, PredictionSet, UqWeights};
+use hyppo::util::bench::{bench1, black_box};
+
+fn prediction_set(n: usize, t: usize, d: usize, rng: &mut Rng) -> PredictionSet {
+    PredictionSet {
+        trained: (0..n)
+            .map(|_| (0..d).map(|_| rng.normal()).collect())
+            .collect(),
+        dropout: (0..n)
+            .map(|_| {
+                (0..t)
+                    .map(|_| (0..d).map(|_| rng.normal()).collect())
+                    .collect()
+            })
+            .collect(),
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(0);
+    println!("== UQ benches (N=5, T=30, paper defaults) ==");
+    let w = UqWeights::default_paper();
+    for d in [32usize, 512, 2048] {
+        let set = prediction_set(5, 30, d, &mut rng);
+        bench1(&format!("mu_pred_d{d}"), || {
+            black_box(set.mu_pred(w));
+        });
+        bench1(&format!("v_model_d{d}"), || {
+            black_box(set.v_model(w));
+        });
+    }
+    let losses: Vec<f64> = (0..50).map(|_| rng.normal().abs()).collect();
+    bench1("median_50", || {
+        black_box(median(&losses));
+    });
+    bench1("mad_50", || {
+        black_box(mad(&losses));
+    });
+}

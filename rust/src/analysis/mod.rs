@@ -1,0 +1,8 @@
+//! Post-hoc analysis tools: hyperparameter sensitivity (the paper's §VI
+//! roadmap — "if we could identify the subset of hyperparameters that
+//! most impact the model's performance, we could significantly reduce
+//! the number of hyperparameter sets that need to be tried") and history
+//! persistence for resumable runs.
+
+pub mod persistence;
+pub mod sensitivity;

@@ -1,0 +1,188 @@
+//! History persistence: save/resume optimization state — the coordinator
+//! "state management" piece. A long HPO campaign (days of training on the
+//! paper's testbed) must survive restarts; the history round-trips
+//! through the JSON substrate and `optimizer::run_sync`-compatible
+//! structures.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::eval::EvalSummary;
+use crate::optimizer::{EvalRecord, History};
+use crate::uq::LossInterval;
+use crate::util::json::{parse, write, Json};
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn record_to_json(r: &EvalRecord) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("id".into(), num(r.id as f64));
+    o.insert(
+        "theta".into(),
+        Json::Arr(r.theta.iter().map(|v| num(*v as f64)).collect()),
+    );
+    o.insert("center".into(), num(r.summary.interval.center));
+    o.insert("radius".into(), num(r.summary.interval.radius));
+    o.insert("trained_mean".into(), num(r.summary.trained_mean));
+    o.insert("trained_std".into(), num(r.summary.trained_std));
+    o.insert("v_model_g".into(), num(r.summary.v_model_g));
+    o.insert(
+        "cost_us".into(),
+        num(r.summary.total_cost.as_micros() as f64),
+    );
+    o.insert("n_params".into(), num(r.n_params as f64));
+    o.insert(
+        "provenance".into(),
+        Json::Arr(r.provenance.iter().map(|v| num(*v as f64)).collect()),
+    );
+    Json::Obj(o)
+}
+
+fn record_from_json(v: &Json) -> Result<EvalRecord> {
+    let theta = v
+        .get("theta")
+        .as_arr()
+        .context("theta")?
+        .iter()
+        .map(|x| x.as_i64().context("theta item"))
+        .collect::<Result<Vec<i64>>>()?;
+    let provenance = v
+        .get("provenance")
+        .as_arr()
+        .context("provenance")?
+        .iter()
+        .map(|x| x.as_i64().map(|i| i as usize).context("prov item"))
+        .collect::<Result<Vec<usize>>>()?;
+    let g = |k: &str| -> Result<f64> {
+        v.get(k).as_f64().ok_or_else(|| anyhow!("missing {k}"))
+    };
+    Ok(EvalRecord {
+        id: g("id")? as usize,
+        theta,
+        summary: EvalSummary {
+            interval: LossInterval {
+                center: g("center")?,
+                radius: g("radius")?,
+            },
+            trained_mean: g("trained_mean")?,
+            trained_std: g("trained_std")?,
+            v_model_g: g("v_model_g")?,
+            total_cost: Duration::from_micros(g("cost_us")? as u64),
+        },
+        n_params: g("n_params")? as u64,
+        provenance,
+    })
+}
+
+/// Serialize a history to JSON text.
+pub fn history_to_json(h: &History) -> String {
+    let mut root = BTreeMap::new();
+    root.insert("version".into(), num(1.0));
+    root.insert(
+        "records".into(),
+        Json::Arr(h.records.iter().map(record_to_json).collect()),
+    );
+    write(&Json::Obj(root))
+}
+
+/// Parse a history back.
+pub fn history_from_json(text: &str) -> Result<History> {
+    let root =
+        parse(text).map_err(|e| anyhow!("history parse: {e}"))?;
+    if root.get("version").as_i64() != Some(1) {
+        anyhow::bail!("unsupported history version");
+    }
+    let records = root
+        .get("records")
+        .as_arr()
+        .context("records")?
+        .iter()
+        .map(record_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(History { records })
+}
+
+pub fn save<P: AsRef<Path>>(h: &History, path: P) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path.as_ref(), history_to_json(h))
+        .with_context(|| format!("writing {}", path.as_ref().display()))
+}
+
+pub fn load<P: AsRef<Path>>(path: P) -> Result<History> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    history_from_json(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::synthetic::SyntheticEvaluator;
+    use crate::optimizer::{run_sync, HpoConfig};
+    use crate::space::{ParamSpec, Space};
+
+    fn sample_history() -> History {
+        let space = Space::new(vec![
+            ParamSpec::new("a", 0, 10),
+            ParamSpec::new("b", 0, 10),
+        ]);
+        let ev = SyntheticEvaluator::new(space, 1);
+        run_sync(
+            &ev,
+            &HpoConfig {
+                max_evaluations: 12,
+                n_init: 4,
+                n_trials: 2,
+                seed: 3,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything_relevant() {
+        let h = sample_history();
+        let h2 = history_from_json(&history_to_json(&h)).unwrap();
+        assert_eq!(h.len(), h2.len());
+        for (a, b) in h.records.iter().zip(&h2.records) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.theta, b.theta);
+            assert_eq!(a.provenance, b.provenance);
+            assert_eq!(a.n_params, b.n_params);
+            assert!(
+                (a.summary.interval.center - b.summary.interval.center)
+                    .abs()
+                    < 1e-9
+            );
+            assert!(
+                (a.objective(0.7) - b.objective(0.7)).abs() < 1e-9
+            );
+        }
+        // Derived queries agree.
+        assert_eq!(h.best(0.0).unwrap().id, h2.best(0.0).unwrap().id);
+    }
+
+    #[test]
+    fn save_and_load_file() {
+        let h = sample_history();
+        let p = std::env::temp_dir().join("hyppo_hist_test.json");
+        save(&h, &p).unwrap();
+        let h2 = load(&p).unwrap();
+        assert_eq!(h.len(), h2.len());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_and_wrong_version() {
+        assert!(history_from_json("not json").is_err());
+        assert!(history_from_json("{\"version\":9,\"records\":[]}")
+            .is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! DeepHyper-like asynchronous model-based search (the Fig. 4 comparator).
+//!
+//! DeepHyper's HPS (Balaprakash et al. 2018) drives a centralized Bayesian
+//! loop with a random-forest surrogate and a lower-confidence-bound
+//! acquisition over randomly sampled candidates. We implement that
+//! algorithm (rather than wrapping the package — unavailable offline;
+//! DESIGN.md §2): random init, fit forest, sample K lattice candidates,
+//! pick argmin of μ − κσ, evaluate, repeat.
+
+use crate::baselines::forest::{Forest, ForestConfig};
+use crate::eval::Evaluator;
+use crate::optimizer::{evaluate_point, EvalRecord, History};
+use crate::sampling::rng::Rng;
+use crate::uq::UqWeights;
+
+#[derive(Debug, Clone)]
+pub struct AmbsConfig {
+    pub max_evaluations: usize,
+    pub n_init: usize,
+    pub n_trials: usize,
+    /// LCB exploration strength κ (DeepHyper default ~1.96).
+    pub kappa: f64,
+    pub n_candidates: usize,
+    pub forest: ForestConfig,
+    pub seed: u64,
+}
+
+impl Default for AmbsConfig {
+    fn default() -> Self {
+        AmbsConfig {
+            max_evaluations: 200,
+            n_init: 10,
+            n_trials: 1,
+            kappa: 1.96,
+            n_candidates: 500,
+            forest: ForestConfig::default(),
+            seed: 0,
+        }
+    }
+}
+
+pub fn run_ambs(evaluator: &dyn Evaluator, cfg: &AmbsConfig) -> History {
+    let space = evaluator.space().clone();
+    let mut rng = Rng::new(cfg.seed);
+    let weights = UqWeights::default_paper();
+    let mut history = History::default();
+
+    let record = |history: &mut History,
+                      theta: Vec<i64>,
+                      provenance: Vec<usize>,
+                      rng: &mut Rng| {
+        let summary = evaluate_point(
+            evaluator,
+            &theta,
+            cfg.n_trials,
+            weights,
+            rng.next_u64(),
+        );
+        let id = history.len();
+        history.records.push(EvalRecord {
+            id,
+            n_params: evaluator.n_params(&theta),
+            theta,
+            summary,
+            provenance,
+        });
+    };
+
+    for _ in 0..cfg.n_init.min(cfg.max_evaluations) {
+        let theta = space.random_point(&mut rng);
+        record(&mut history, theta, vec![], &mut rng);
+    }
+
+    while history.len() < cfg.max_evaluations {
+        let xs: Vec<Vec<f64>> = history
+            .records
+            .iter()
+            .map(|r| space.to_unit(&r.theta))
+            .collect();
+        let ys: Vec<f64> = history
+            .records
+            .iter()
+            .map(|r| r.summary.interval.center)
+            .collect();
+        let forest = Forest::fit(&xs, &ys, &cfg.forest, &mut rng);
+
+        let evaluated: Vec<Vec<i64>> =
+            history.records.iter().map(|r| r.theta.clone()).collect();
+        let mut best: Option<(Vec<i64>, f64)> = None;
+        for _ in 0..cfg.n_candidates {
+            let cand = space.random_point(&mut rng);
+            if evaluated.contains(&cand) {
+                continue;
+            }
+            let (mu, sd) = forest.predict(&space.to_unit(&cand));
+            let lcb = mu - cfg.kappa * sd;
+            if best.as_ref().map(|(_, b)| lcb < *b).unwrap_or(true) {
+                best = Some((cand, lcb));
+            }
+        }
+        let theta = best
+            .map(|(t, _)| t)
+            .unwrap_or_else(|| space.random_point(&mut rng));
+        let provenance: Vec<usize> =
+            history.records.iter().map(|r| r.id).collect();
+        record(&mut history, theta, provenance, &mut rng);
+    }
+    history
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::synthetic::SyntheticEvaluator;
+    use crate::space::{ParamSpec, Space};
+
+    fn evaluator() -> SyntheticEvaluator {
+        let space = Space::new(vec![
+            ParamSpec::new("a", 0, 24),
+            ParamSpec::new("b", 0, 24),
+            ParamSpec::new("c", 0, 24),
+        ]);
+        let mut ev = SyntheticEvaluator::new(space, 5);
+        ev.t_dropout = 3;
+        ev
+    }
+
+    #[test]
+    fn completes_and_improves() {
+        let ev = evaluator();
+        let cfg = AmbsConfig {
+            max_evaluations: 40,
+            n_init: 10,
+            seed: 1,
+            ..Default::default()
+        };
+        let h = run_ambs(&ev, &cfg);
+        assert_eq!(h.len(), 40);
+        let trace = h.best_trace(0.0);
+        assert!(trace.last().unwrap() <= &trace[9]);
+    }
+
+    #[test]
+    fn beats_pure_random_usually() {
+        let ev = evaluator();
+        let mut wins = 0;
+        for seed in 0..4 {
+            let h = run_ambs(
+                &ev,
+                &AmbsConfig {
+                    max_evaluations: 30,
+                    n_init: 8,
+                    seed,
+                    ..Default::default()
+                },
+            );
+            let r = crate::optimizer::run_random(
+                &ev,
+                30,
+                1,
+                UqWeights::default_paper(),
+                seed ^ 0x55,
+            );
+            if h.best(0.0).unwrap().summary.interval.center
+                <= r.best(0.0).unwrap().summary.interval.center
+            {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 2, "AMBS won only {wins}/4");
+    }
+}

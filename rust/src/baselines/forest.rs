@@ -1,0 +1,232 @@
+//! Extra-trees regression forest — the surrogate behind the DeepHyper-like
+//! AMBS baseline (DeepHyper's HPS used scikit-learn's RF/ET regressors).
+//! Built from scratch: randomized split dimension + threshold per node,
+//! bootstrap-free (extra-trees style uses the full sample per tree, with
+//! randomness in the splits), depth/min-samples stopping.
+
+use crate::sampling::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct ForestConfig {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub min_samples: usize,
+    /// Random split candidates per node (extra-trees "K").
+    pub n_splits: usize,
+}
+
+impl Default for ForestConfig {
+    fn default() -> Self {
+        ForestConfig { n_trees: 25, max_depth: 12, min_samples: 3, n_splits: 8 }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf { value: f64 },
+    Split { dim: usize, threshold: f64, left: usize, right: usize },
+}
+
+#[derive(Debug, Clone)]
+struct Tree {
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    fn predict(&self, x: &[f64]) -> f64 {
+        let mut i = 0;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf { value } => return *value,
+                Node::Split { dim, threshold, left, right } => {
+                    i = if x[*dim] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Forest {
+    trees: Vec<Tree>,
+}
+
+fn mean(ys: &[f64]) -> f64 {
+    ys.iter().sum::<f64>() / ys.len().max(1) as f64
+}
+
+fn sse(ys: &[f64]) -> f64 {
+    let m = mean(ys);
+    ys.iter().map(|y| (y - m) * (y - m)).sum()
+}
+
+fn build(
+    xs: &[Vec<f64>],
+    ys: &[f64],
+    idx: Vec<usize>,
+    depth: usize,
+    cfg: &ForestConfig,
+    rng: &mut Rng,
+    nodes: &mut Vec<Node>,
+) -> usize {
+    let sub_y: Vec<f64> = idx.iter().map(|i| ys[*i]).collect();
+    let leaf = |nodes: &mut Vec<Node>, v: f64| {
+        nodes.push(Node::Leaf { value: v });
+        nodes.len() - 1
+    };
+    if depth >= cfg.max_depth
+        || idx.len() < cfg.min_samples * 2
+        || sse(&sub_y) < 1e-12
+    {
+        return leaf(nodes, mean(&sub_y));
+    }
+    let d = xs[0].len();
+
+    // Extra-trees: a few fully random (dim, threshold) splits; keep the
+    // one with the lowest child SSE.
+    let mut best: Option<(usize, f64, f64)> = None;
+    for _ in 0..cfg.n_splits {
+        let dim = rng.usize_below(d);
+        let (lo, hi) = idx.iter().fold(
+            (f64::INFINITY, f64::NEG_INFINITY),
+            |(lo, hi), i| {
+                let v = xs[*i][dim];
+                (lo.min(v), hi.max(v))
+            },
+        );
+        if hi - lo < 1e-12 {
+            continue;
+        }
+        let threshold = lo + rng.f64() * (hi - lo);
+        let (mut ly, mut ry) = (Vec::new(), Vec::new());
+        for i in &idx {
+            if xs[*i][dim] <= threshold {
+                ly.push(ys[*i]);
+            } else {
+                ry.push(ys[*i]);
+            }
+        }
+        if ly.is_empty() || ry.is_empty() {
+            continue;
+        }
+        let score = sse(&ly) + sse(&ry);
+        if best.map(|(_, _, s)| score < s).unwrap_or(true) {
+            best = Some((dim, threshold, score));
+        }
+    }
+    let Some((dim, threshold, _)) = best else {
+        return leaf(nodes, mean(&sub_y));
+    };
+    let (mut li, mut ri) = (Vec::new(), Vec::new());
+    for i in idx {
+        if xs[i][dim] <= threshold {
+            li.push(i);
+        } else {
+            ri.push(i);
+        }
+    }
+    let me = nodes.len();
+    nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+    let left = build(xs, ys, li, depth + 1, cfg, rng, nodes);
+    let right = build(xs, ys, ri, depth + 1, cfg, rng, nodes);
+    nodes[me] = Node::Split { dim, threshold, left, right };
+    me
+}
+
+impl Forest {
+    pub fn fit(
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        cfg: &ForestConfig,
+        rng: &mut Rng,
+    ) -> Forest {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let trees = (0..cfg.n_trees)
+            .map(|_| {
+                let mut nodes = Vec::new();
+                let root = build(
+                    xs,
+                    ys,
+                    (0..xs.len()).collect(),
+                    0,
+                    cfg,
+                    rng,
+                    &mut nodes,
+                );
+                debug_assert_eq!(root, 0);
+                Tree { nodes }
+            })
+            .collect();
+        Forest { trees }
+    }
+
+    /// Ensemble mean and std at a point.
+    pub fn predict(&self, x: &[f64]) -> (f64, f64) {
+        let preds: Vec<f64> =
+            self.trees.iter().map(|t| t.predict(x)).collect();
+        let m = mean(&preds);
+        let var = preds.iter().map(|p| (p - m) * (p - m)).sum::<f64>()
+            / preds.len() as f64;
+        (m, var.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_data() -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..20 {
+            for j in 0..20 {
+                let x = vec![i as f64 / 19.0, j as f64 / 19.0];
+                ys.push((x[0] - 0.3).powi(2) + (x[1] - 0.7).powi(2));
+                xs.push(x);
+            }
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn fits_smooth_function_reasonably() {
+        let (xs, ys) = grid_data();
+        let mut rng = Rng::new(0);
+        let f = Forest::fit(&xs, &ys, &ForestConfig::default(), &mut rng);
+        let mut err = 0.0;
+        for (x, y) in xs.iter().zip(&ys) {
+            let (p, _) = f.predict(x);
+            err += (p - y).abs();
+        }
+        err /= xs.len() as f64;
+        assert!(err < 0.05, "mean abs err {err}");
+    }
+
+    #[test]
+    fn constant_target_gives_zero_std() {
+        let xs: Vec<Vec<f64>> =
+            (0..20).map(|i| vec![i as f64]).collect();
+        let ys = vec![3.0; 20];
+        let mut rng = Rng::new(1);
+        let f = Forest::fit(&xs, &ys, &ForestConfig::default(), &mut rng);
+        let (p, s) = f.predict(&[7.5]);
+        assert!((p - 3.0).abs() < 1e-12);
+        assert!(s < 1e-12);
+    }
+
+    #[test]
+    fn std_positive_where_trees_disagree() {
+        let (xs, ys) = grid_data();
+        let mut rng = Rng::new(2);
+        let f = Forest::fit(&xs, &ys, &ForestConfig::default(), &mut rng);
+        // Extrapolation region: trees disagree.
+        let (_, s) = f.predict(&[0.31, 0.69]);
+        assert!(s >= 0.0);
+        let disagreement_somewhere = (0..50).any(|k| {
+            let q = [k as f64 / 50.0, 1.0 - k as f64 / 50.0];
+            f.predict(&q).1 > 1e-6
+        });
+        assert!(disagreement_somewhere);
+    }
+}

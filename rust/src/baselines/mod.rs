@@ -1,0 +1,9 @@
+//! Baseline HPO methods the paper compares against: pure random search
+//! (`optimizer::run_random`) and a DeepHyper-like asynchronous
+//! model-based search (`ambs`) on an extra-trees surrogate (`forest`).
+
+pub mod ambs;
+pub mod forest;
+
+pub use ambs::{run_ambs, AmbsConfig};
+pub use forest::{Forest, ForestConfig};

@@ -1,0 +1,62 @@
+//! Simulated SLURM cluster — the paper's Feature 3 (asynchronous nested
+//! parallelism), rebuilt on threads instead of SLURM/GNU-parallel
+//! (DESIGN.md §Hardware adaptation).
+//!
+//! Three pieces:
+//!   * `sim`     — deterministic event-driven *virtual-time* simulator of a
+//!                 steps × tasks job. Regenerates the Fig. 8 speedup grid
+//!                 exactly (no sleeps, replayable).
+//!   * `workers` — the real asynchronous HPO loop: a pool of step-workers,
+//!                 per-completion surrogate refits, provenance tracking
+//!                 (Fig. 6 semantics), nested trial-/data-parallel tasks.
+//!   * `slurm`   — emits the `#SBATCH` + GNU-parallel launcher the paper
+//!                 shows, for documentation/portability parity.
+
+pub mod sim;
+pub mod slurm;
+pub mod workers;
+
+/// Inner (per-step) parallelization mode of §IV-2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParallelMode {
+    /// SLURM tasks parallelize the N training trials of one θ.
+    TrialParallel,
+    /// SLURM tasks shard the training data of each trial.
+    DataParallel,
+}
+
+/// steps × tasks topology (one processor per task; `--exclusive`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub steps: usize,
+    pub tasks_per_step: usize,
+}
+
+impl Topology {
+    pub fn new(steps: usize, tasks_per_step: usize) -> Self {
+        assert!(steps > 0 && tasks_per_step > 0);
+        Topology { steps, tasks_per_step }
+    }
+
+    /// Total processors = SLURM `--ntasks`.
+    pub fn processors(&self) -> usize {
+        self.steps * self.tasks_per_step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn processors_product() {
+        assert_eq!(Topology::new(2, 3).processors(), 6);
+        assert_eq!(Topology::new(16, 6).processors(), 96);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_steps_rejected() {
+        let _ = Topology::new(0, 1);
+    }
+}

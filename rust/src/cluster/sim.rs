@@ -1,0 +1,236 @@
+//! Deterministic virtual-time simulator of one HPO job on a steps × tasks
+//! topology — regenerates Fig. 8 without wall-clock sleeps.
+//!
+//! Semantics follow §IV (Feature 3) exactly:
+//!   * Hyperparameter evaluations are assigned to steps by Python-style
+//!     slicing: step `s` executes evaluations `s, s+steps, s+2·steps, ...`
+//!     (the paper's static slicing of the randomly generated sets).
+//!   * Trial-parallel: within a step, trial `t` of an evaluation runs on
+//!     task `t mod tasks`; tasks run their trial slices sequentially, the
+//!     evaluation completes when the slowest task finishes.
+//!   * Data-parallel: all tasks cooperate on each trial; the trial's cost
+//!     divides by an efficiency-discounted task count plus a per-trial
+//!     synchronization overhead, and trials run sequentially.
+//!   * Exclusive processors: a step's tasks are dedicated; steps never
+//!     share processors (asserted by construction, tested).
+
+use std::time::Duration;
+
+use crate::cluster::{ParallelMode, Topology};
+
+/// Per-evaluation input: the simulated durations of its N trials.
+#[derive(Debug, Clone)]
+pub struct EvalCost {
+    pub trial_costs: Vec<Duration>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub topology: Topology,
+    pub mode: ParallelMode,
+    /// Parallel efficiency of data-parallel scaling (1.0 = perfect).
+    pub data_efficiency: f64,
+    /// Fixed per-trial synchronization overhead in data-parallel mode.
+    pub sync_overhead: Duration,
+}
+
+impl SimConfig {
+    pub fn trial_parallel(topology: Topology) -> Self {
+        SimConfig {
+            topology,
+            mode: ParallelMode::TrialParallel,
+            data_efficiency: 0.85,
+            sync_overhead: Duration::from_millis(5),
+        }
+    }
+}
+
+/// One simulated evaluation completion.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimEvent {
+    pub eval_index: usize,
+    pub step: usize,
+    pub start: Duration,
+    pub end: Duration,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Job makespan (max step completion time).
+    pub makespan: Duration,
+    /// Busy time per step (for utilization analysis).
+    pub step_busy: Vec<Duration>,
+    /// Completion events sorted by end time.
+    pub timeline: Vec<SimEvent>,
+}
+
+/// Duration of one evaluation on one step under the given inner mode.
+pub fn eval_duration(cost: &EvalCost, cfg: &SimConfig) -> Duration {
+    let tasks = cfg.topology.tasks_per_step;
+    match cfg.mode {
+        ParallelMode::TrialParallel => {
+            // Slice trials over tasks; slowest task bounds the evaluation.
+            let mut per_task = vec![Duration::ZERO; tasks];
+            for (t, c) in cost.trial_costs.iter().enumerate() {
+                per_task[t % tasks] += *c;
+            }
+            per_task.into_iter().max().unwrap_or(Duration::ZERO)
+        }
+        ParallelMode::DataParallel => {
+            let scale = if tasks == 1 {
+                1.0
+            } else {
+                1.0 / (tasks as f64 * cfg.data_efficiency)
+            };
+            cost.trial_costs
+                .iter()
+                .map(|c| {
+                    let scaled = c.mul_f64(scale);
+                    let overhead = if tasks > 1 {
+                        cfg.sync_overhead
+                    } else {
+                        Duration::ZERO
+                    };
+                    scaled + overhead
+                })
+                .sum()
+        }
+    }
+}
+
+/// Simulate a whole job over `evals` (ordered as generated).
+pub fn simulate(evals: &[EvalCost], cfg: &SimConfig) -> SimResult {
+    let steps = cfg.topology.steps;
+    let mut clock = vec![Duration::ZERO; steps];
+    let mut timeline = Vec::with_capacity(evals.len());
+    for (i, ev) in evals.iter().enumerate() {
+        let step = i % steps; // paper's slicing by step id
+        let d = eval_duration(ev, cfg);
+        let start = clock[step];
+        clock[step] += d;
+        timeline.push(SimEvent { eval_index: i, step, start, end: clock[step] });
+    }
+    timeline.sort_by_key(|e| e.end);
+    SimResult {
+        makespan: clock.iter().copied().max().unwrap_or(Duration::ZERO),
+        step_busy: clock,
+        timeline,
+    }
+}
+
+/// Speedup of a topology vs the serial 1×1 baseline on the same workload.
+pub fn speedup(evals: &[EvalCost], cfg: &SimConfig) -> f64 {
+    let base_cfg = SimConfig {
+        topology: Topology::new(1, 1),
+        ..cfg.clone()
+    };
+    let base = simulate(evals, &base_cfg).makespan;
+    let this = simulate(evals, cfg).makespan;
+    base.as_secs_f64() / this.as_secs_f64().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    fn uniform_evals(n: usize, trials: usize, each_ms: u64) -> Vec<EvalCost> {
+        (0..n)
+            .map(|_| EvalCost {
+                trial_costs: vec![ms(each_ms); trials],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serial_makespan_is_total_work() {
+        let evals = uniform_evals(10, 5, 100);
+        let cfg = SimConfig::trial_parallel(Topology::new(1, 1));
+        let r = simulate(&evals, &cfg);
+        assert_eq!(r.makespan, ms(10 * 5 * 100));
+    }
+
+    #[test]
+    fn trial_parallel_divides_by_tasks_when_divisible() {
+        let evals = uniform_evals(4, 6, 100);
+        let cfg = SimConfig::trial_parallel(Topology::new(1, 3));
+        // 6 trials over 3 tasks = 2 rounds of 100ms per evaluation.
+        assert_eq!(simulate(&evals, &cfg).makespan, ms(4 * 200));
+    }
+
+    #[test]
+    fn trial_parallel_ceils_on_remainder() {
+        let evals = uniform_evals(1, 5, 100);
+        let cfg = SimConfig::trial_parallel(Topology::new(1, 3));
+        // task 0 gets trials 0,3 -> 200ms; others 100-200ms.
+        assert_eq!(simulate(&evals, &cfg).makespan, ms(200));
+    }
+
+    #[test]
+    fn steps_share_nothing_and_slice_statically() {
+        let evals = uniform_evals(6, 1, 100);
+        let cfg = SimConfig::trial_parallel(Topology::new(2, 1));
+        let r = simulate(&evals, &cfg);
+        // Step 0 gets evals 0,2,4; step 1 gets 1,3,5.
+        for e in &r.timeline {
+            assert_eq!(e.step, e.eval_index % 2);
+        }
+        assert_eq!(r.makespan, ms(300));
+        assert_eq!(r.step_busy, vec![ms(300), ms(300)]);
+    }
+
+    #[test]
+    fn full_grid_speedup_reaches_two_orders_of_magnitude() {
+        // Paper Fig. 8: 50 evaluations x 5 trials, 1x1 vs 16x6 = 96 procs
+        // improves throughput by ~two orders of magnitude.
+        let evals = uniform_evals(48, 5, 200); // 48 divisible by 16
+        let cfg = SimConfig::trial_parallel(Topology::new(16, 6));
+        let s = speedup(&evals, &cfg);
+        assert!(s >= 45.0, "speedup {s}");
+        // Perfect slicing bound: steps*ceil-trials effect caps at 16*3=48.
+        assert!(s <= 96.0 + 1e-9);
+    }
+
+    #[test]
+    fn data_parallel_scales_with_efficiency_discount() {
+        let evals = uniform_evals(1, 1, 1000);
+        let mk = |tasks| SimConfig {
+            topology: Topology::new(1, tasks),
+            mode: ParallelMode::DataParallel,
+            data_efficiency: 0.8,
+            sync_overhead: ms(10),
+        };
+        let t1 = simulate(&evals, &mk(1)).makespan;
+        let t4 = simulate(&evals, &mk(4)).makespan;
+        assert_eq!(t1, ms(1000));
+        // 1000/(4*0.8) + 10 = 322.5ms
+        assert!((t4.as_secs_f64() - 0.3225).abs() < 1e-6, "{t4:?}");
+    }
+
+    #[test]
+    fn heterogeneous_costs_make_stragglers() {
+        // One huge evaluation dominates its step; other steps idle.
+        let mut evals = uniform_evals(8, 1, 10);
+        evals[3].trial_costs = vec![ms(1000)];
+        let cfg = SimConfig::trial_parallel(Topology::new(4, 1));
+        let r = simulate(&evals, &cfg);
+        // Step 3 holds eval 3 and 7 -> 1010ms; makespan bound by it.
+        assert_eq!(r.makespan, ms(1010));
+        let min_busy = r.step_busy.iter().min().unwrap();
+        assert!(min_busy < &ms(1010));
+    }
+
+    #[test]
+    fn timeline_sorted_by_completion() {
+        let evals = uniform_evals(10, 2, 37);
+        let cfg = SimConfig::trial_parallel(Topology::new(3, 2));
+        let r = simulate(&evals, &cfg);
+        for w in r.timeline.windows(2) {
+            assert!(w[0].end <= w[1].end);
+        }
+        assert_eq!(r.timeline.len(), 10);
+    }
+}

@@ -1,0 +1,305 @@
+//! Configuration system: a minimal TOML-subset parser + typed HPO run
+//! configuration, so experiments are driven by declarative files the way
+//! the paper's input configuration file drives HYPPO.
+//!
+//! Supported grammar: `[section]` headers, `key = value` with string,
+//! integer, float, boolean and homogeneous inline arrays — the subset our
+//! configs need (no serde offline).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cluster::{ParallelMode, Topology};
+use crate::optimizer::{HpoConfig, InitDesign, SurrogateKind};
+use crate::space::{ParamSpec, Space};
+use crate::uq::UqWeights;
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// section -> key -> value.
+pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;
+
+fn parse_value(raw: &str) -> Result<Value> {
+    let t = raw.trim();
+    if t.starts_with('"') && t.ends_with('"') && t.len() >= 2 {
+        return Ok(Value::Str(t[1..t.len() - 1].to_string()));
+    }
+    if t == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if t == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if t.starts_with('[') && t.ends_with(']') {
+        let inner = &t[1..t.len() - 1];
+        let items: Result<Vec<Value>> = inner
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(parse_value)
+            .collect();
+        return Ok(Value::Arr(items?));
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("unparseable value: {t:?}")
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc: Doc = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') && line.ends_with(']') {
+            section = line[1..line.len() - 1].trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let value = parse_value(v)
+            .with_context(|| format!("line {}", lineno + 1))?;
+        doc.entry(section.clone())
+            .or_default()
+            .insert(k.trim().to_string(), value);
+    }
+    Ok(doc)
+}
+
+/// A full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub space: Space,
+    pub hpo: HpoConfig,
+    pub topology: Topology,
+    pub mode: ParallelMode,
+}
+
+/// Build a `RunConfig` from a parsed document. Layout:
+///
+/// ```toml
+/// [hpo]
+/// max_evaluations = 50
+/// n_init = 10
+/// n_trials = 3
+/// surrogate = "rbf"        # rbf | gp | ensemble
+/// alpha = 1.0              # ensemble only
+/// gamma = 0.0
+/// seed = 0
+/// init_design = "random"   # random | lhs | halton
+/// w_trained = 0.5
+///
+/// [cluster]
+/// steps = 4
+/// tasks_per_step = 2
+/// mode = "trial"           # trial | data
+///
+/// [space]
+/// layers = [1, 3]
+/// width_idx = [0, 2]
+/// ```
+pub fn build(doc: &Doc) -> Result<RunConfig> {
+    let space_sec = doc
+        .get("space")
+        .ok_or_else(|| anyhow!("missing [space] section"))?;
+    let mut params = Vec::new();
+    for (name, v) in space_sec {
+        let arr = match v {
+            Value::Arr(a) if a.len() == 2 => a,
+            _ => bail!("space.{name} must be [lo, hi]"),
+        };
+        let lo = arr[0].as_i64().context("lo must be int")?;
+        let hi = arr[1].as_i64().context("hi must be int")?;
+        params.push(ParamSpec::new(name, lo, hi));
+    }
+    let space = Space::new(params);
+
+    let empty = BTreeMap::new();
+    let h = doc.get("hpo").unwrap_or(&empty);
+    let geti = |k: &str, d: i64| {
+        h.get(k).and_then(Value::as_i64).unwrap_or(d)
+    };
+    let getf = |k: &str, d: f64| {
+        h.get(k).and_then(Value::as_f64).unwrap_or(d)
+    };
+    let surrogate = match h
+        .get("surrogate")
+        .and_then(Value::as_str)
+        .unwrap_or("rbf")
+    {
+        "rbf" => SurrogateKind::Rbf,
+        "gp" => SurrogateKind::Gp,
+        "ensemble" => SurrogateKind::RbfEnsemble {
+            alpha: getf("alpha", 1.0),
+            members: geti("members", 8) as usize,
+        },
+        other => bail!("unknown surrogate {other:?}"),
+    };
+    let init_design = match h
+        .get("init_design")
+        .and_then(Value::as_str)
+        .unwrap_or("random")
+    {
+        "random" => InitDesign::Random,
+        "lhs" => InitDesign::Lhs,
+        "halton" => InitDesign::Halton,
+        other => bail!("unknown init_design {other:?}"),
+    };
+    let w_trained = getf("w_trained", 0.5);
+    let hpo = HpoConfig {
+        max_evaluations: geti("max_evaluations", 50) as usize,
+        n_init: geti("n_init", 10) as usize,
+        n_trials: geti("n_trials", 3) as usize,
+        weights: UqWeights::new(w_trained, 1.0 - w_trained),
+        surrogate,
+        gamma: getf("gamma", 0.0),
+        seed: geti("seed", 0) as u64,
+        init_design,
+        ..Default::default()
+    };
+
+    let c = doc.get("cluster").unwrap_or(&empty);
+    let steps = c.get("steps").and_then(Value::as_i64).unwrap_or(1) as usize;
+    let tasks = c
+        .get("tasks_per_step")
+        .and_then(Value::as_i64)
+        .unwrap_or(1) as usize;
+    let mode = match c.get("mode").and_then(Value::as_str).unwrap_or("trial")
+    {
+        "trial" => ParallelMode::TrialParallel,
+        "data" => ParallelMode::DataParallel,
+        other => bail!("unknown cluster mode {other:?}"),
+    };
+
+    Ok(RunConfig {
+        space,
+        hpo,
+        topology: Topology::new(steps.max(1), tasks.max(1)),
+        mode,
+    })
+}
+
+/// Parse + build from a file path.
+pub fn load(path: &std::path::Path) -> Result<RunConfig> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    build(&parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+[hpo]
+max_evaluations = 30
+n_trials = 5
+surrogate = "ensemble"
+alpha = -1.5
+seed = 42
+init_design = "lhs"
+w_trained = 0.3
+
+[cluster]
+steps = 4
+tasks_per_step = 2
+mode = "data"
+
+[space]
+layers = [1, 3]
+width_idx = [0, 2]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(SAMPLE).unwrap();
+        assert_eq!(
+            doc["hpo"]["max_evaluations"],
+            Value::Int(30)
+        );
+        assert_eq!(doc["hpo"]["alpha"], Value::Float(-1.5));
+        assert_eq!(
+            doc["hpo"]["surrogate"],
+            Value::Str("ensemble".into())
+        );
+    }
+
+    #[test]
+    fn builds_full_config() {
+        let cfg = build(&parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(cfg.space.dim(), 2);
+        assert_eq!(cfg.hpo.max_evaluations, 30);
+        assert_eq!(cfg.hpo.n_trials, 5);
+        assert_eq!(
+            cfg.hpo.surrogate,
+            SurrogateKind::RbfEnsemble { alpha: -1.5, members: 8 }
+        );
+        assert_eq!(cfg.topology, Topology::new(4, 2));
+        assert_eq!(cfg.mode, ParallelMode::DataParallel);
+        assert!((cfg.hpo.weights.w_trained - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_surrogate_and_space() {
+        let bad = SAMPLE.replace("\"ensemble\"", "\"magic\"");
+        assert!(build(&parse(&bad).unwrap()).is_err());
+        let no_space = "[hpo]\nseed = 1\n";
+        assert!(build(&parse(no_space).unwrap()).is_err());
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        let err = parse("[s]\nkey value\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"));
+    }
+
+    #[test]
+    fn arrays_and_bools() {
+        let doc = parse("[a]\nx = [1, 2, 3]\nb = true\n").unwrap();
+        assert_eq!(
+            doc["a"]["x"],
+            Value::Arr(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+        assert_eq!(doc["a"]["b"], Value::Bool(true));
+    }
+}

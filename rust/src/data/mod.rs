@@ -1,0 +1,5 @@
+//! Synthetic datasets (DESIGN.md §2 substitutions for Melbourne
+//! temperatures, CIFAR10, and the XDesign phantom corpus).
+
+pub mod images;
+pub mod timeseries;

@@ -1,0 +1,269 @@
+//! Real-training evaluation backend: every trial trains an AOT-compiled
+//! MLP through the PJRT runtime (Layers 1+2), with the full SGD loop,
+//! MC-dropout passes, and validation driven from Rust. This is the
+//! end-to-end path — the same `Evaluator` interface the synthetic backend
+//! implements, but with nothing simulated.
+//!
+//! Hyperparameter encoding over the integer lattice (paper Eq. 2):
+//!   layers      ∈ [1, 3]        (artifact grid axis)
+//!   width_idx   ∈ [0, 2]        -> {16, 32, 64} (artifact grid axis)
+//!   lr_idx      ∈ [0, 11]       -> lr = 10^(-(0.7 + 0.2·idx))
+//!   dropout_idx ∈ [0, 8]        -> p = 0.05·idx
+//!   epochs      ∈ [1, E_max]    (runtime loop length)
+//!   batch       ∈ [4, 32]       (effective rows via the weight vector)
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::eval::{Evaluator, TrialOutcome};
+use crate::runtime::{make_batch, Model, SharedEngine};
+use crate::sampling::rng::Rng;
+use crate::space::{ParamSpec, Space};
+
+pub const WIDTHS: [usize; 3] = [16, 32, 64];
+pub const COMPILED_BATCH: usize = 32;
+
+pub fn lr_of(idx: i64) -> f32 {
+    10f32.powf(-(0.7 + 0.2 * idx as f32))
+}
+
+pub fn dropout_of(idx: i64) -> f32 {
+    0.05 * idx as f32
+}
+
+/// The standard MLP search space used by the time-series and polyfit
+/// studies (6 hyperparameters, like the Fig. 4 comparison).
+pub fn mlp_space(e_max: i64) -> Space {
+    Space::new(vec![
+        ParamSpec::new("layers", 1, 3),
+        ParamSpec::new("width_idx", 0, 2),
+        ParamSpec::new("lr_idx", 0, 11),
+        ParamSpec::new("dropout_idx", 0, 8),
+        ParamSpec::new("epochs", 1, e_max),
+        ParamSpec::new("batch", 4, 32),
+    ])
+}
+
+/// Supervised dataset in row-major form.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub x: Vec<Vec<f32>>,
+    pub y: Vec<Vec<f32>>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.x.is_empty()
+    }
+}
+
+pub struct MlpHloEvaluator {
+    engine: Arc<SharedEngine>,
+    space: Space,
+    pub train: Dataset,
+    pub val: Dataset,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// T MC-dropout passes per trained model (paper default 30).
+    pub t_dropout: usize,
+    /// Cap on gradient steps per epoch (keeps trials bounded on CPU).
+    pub max_steps_per_epoch: usize,
+    /// Rows of the validation set actually used (first `val_rows`).
+    pub val_rows: usize,
+}
+
+impl MlpHloEvaluator {
+    pub fn new(
+        engine: Arc<SharedEngine>,
+        train: Dataset,
+        val: Dataset,
+        in_dim: usize,
+        out_dim: usize,
+        e_max: i64,
+    ) -> Self {
+        assert!(!train.is_empty() && !val.is_empty());
+        let val_rows = val.len().min(64);
+        MlpHloEvaluator {
+            engine,
+            space: mlp_space(e_max),
+            train,
+            val,
+            in_dim,
+            out_dim,
+            t_dropout: 10,
+            max_steps_per_epoch: 16,
+            val_rows,
+        }
+    }
+
+    pub fn arch_name(&self, theta: &[i64]) -> String {
+        format!(
+            "mlp_i{}_o{}_l{}_w{}_b{}",
+            self.in_dim,
+            self.out_dim,
+            theta[0],
+            WIDTHS[theta[1] as usize],
+            COMPILED_BATCH
+        )
+    }
+
+    /// Validation targets flattened in evaluation order.
+    fn val_targets(&self) -> Vec<f64> {
+        self.val.y[..self.val_rows]
+            .iter()
+            .flat_map(|r| r.iter().map(|v| *v as f64))
+            .collect()
+    }
+
+    /// Run the deterministic or dropout forward pass over the validation
+    /// rows, returning flattened predictions.
+    fn val_predictions(
+        &self,
+        model: &Model,
+        dropout: Option<(f32, i32)>,
+    ) -> anyhow::Result<Vec<f64>> {
+        let mut preds = Vec::with_capacity(self.val_rows * self.out_dim);
+        let mut row = 0;
+        while row < self.val_rows {
+            let hi = (row + COMPILED_BATCH).min(self.val_rows);
+            let n = hi - row;
+            let mut x = vec![0.0f32; COMPILED_BATCH * self.in_dim];
+            for (i, r) in self.val.x[row..hi].iter().enumerate() {
+                x[i * self.in_dim..(i + 1) * self.in_dim]
+                    .copy_from_slice(r);
+            }
+            let out = match dropout {
+                None => model.predict(&x)?,
+                Some((p, seed)) => {
+                    model.predict_dropout(&x, p, seed)?
+                }
+            };
+            preds.extend(
+                out[..n * self.out_dim].iter().map(|v| *v as f64),
+            );
+            row = hi;
+        }
+        Ok(preds)
+    }
+
+    fn mse_vs_targets(&self, preds: &[f64]) -> f64 {
+        let targets = self.val_targets();
+        assert_eq!(preds.len(), targets.len());
+        preds
+            .iter()
+            .zip(&targets)
+            .map(|(p, t)| (p - t) * (p - t))
+            .sum::<f64>()
+            / preds.len() as f64
+    }
+}
+
+impl Evaluator for MlpHloEvaluator {
+    fn space(&self) -> &Space {
+        &self.space
+    }
+
+    fn run_trial(&self, theta: &[i64], trial: usize, seed: u64) -> TrialOutcome {
+        assert!(self.space.contains(theta), "theta out of space: {theta:?}");
+        let start = Instant::now();
+        let arch = self.arch_name(theta);
+        let lr = lr_of(theta[2]);
+        let p = dropout_of(theta[3]);
+        let epochs = theta[4] as usize;
+        let eff_batch = (theta[5] as usize).min(COMPILED_BATCH);
+
+        let mut rng = Rng::new(
+            seed ^ (trial as u64).wrapping_mul(0x9E3779B97F4A7C15),
+        );
+        let init_seed = rng.next_u64() as i32;
+        let mut model = Model::init(&self.engine, &arch, init_seed)
+            .expect("artifact for arch must exist (run `make artifacts`)");
+
+        // --- inner problem (Eq. 3): SGD over the train split -------------
+        let steps = self
+            .train
+            .len()
+            .div_ceil(eff_batch)
+            .min(self.max_steps_per_epoch);
+        let mut step_seed = rng.next_u64() as i32;
+        for _epoch in 0..epochs {
+            for _s in 0..steps {
+                let idx: Vec<usize> = (0..eff_batch)
+                    .map(|_| rng.usize_below(self.train.len()))
+                    .collect();
+                let xs: Vec<&[f32]> =
+                    idx.iter().map(|i| self.train.x[*i].as_slice()).collect();
+                let ys: Vec<&[f32]> =
+                    idx.iter().map(|i| self.train.y[*i].as_slice()).collect();
+                let batch = make_batch(&xs, &ys, COMPILED_BATCH)
+                    .expect("batch construction");
+                step_seed = step_seed.wrapping_add(1);
+                model
+                    .train_step(&batch, lr, p, step_seed)
+                    .expect("train_step");
+            }
+        }
+
+        // --- outer loss ℓ₁ sample + T MC-dropout passes -------------------
+        let preds = self
+            .val_predictions(&model, None)
+            .expect("val predict");
+        let loss = self.mse_vs_targets(&preds);
+        let mc_p = if p > 0.0 { p } else { 0.1 }; // UQ needs dropout active
+        let mut dropout_losses = Vec::with_capacity(self.t_dropout);
+        let mut dropout_predictions = Vec::with_capacity(self.t_dropout);
+        for t in 0..self.t_dropout {
+            let dp = self
+                .val_predictions(
+                    &model,
+                    Some((mc_p, rng.next_u64() as i32 ^ t as i32)),
+                )
+                .expect("dropout predict");
+            dropout_losses.push(self.mse_vs_targets(&dp));
+            dropout_predictions.push(dp);
+        }
+
+        TrialOutcome {
+            loss,
+            dropout_losses,
+            predictions: Some(preds),
+            dropout_predictions,
+            cost: start.elapsed().max(Duration::from_micros(1)),
+        }
+    }
+
+    fn n_params(&self, theta: &[i64]) -> u64 {
+        // in*w + w + (layers-1)*(w*w + w) + w*out + out
+        let w = WIDTHS[theta[1] as usize] as u64;
+        let l = theta[0] as u64;
+        let (i, o) = (self.in_dim as u64, self.out_dim as u64);
+        i * w + w + (l - 1) * (w * w + w) + w * o + o
+    }
+
+    fn loss_of_mean_prediction(&self, _theta: &[i64], mu: &[f64]) -> Option<f64> {
+        Some(self.mse_vs_targets(mu))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encodings_monotone() {
+        assert!(lr_of(0) > lr_of(11));
+        assert_eq!(dropout_of(0), 0.0);
+        assert!((dropout_of(8) - 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn space_has_six_hyperparameters() {
+        let s = mlp_space(20);
+        assert_eq!(s.dim(), 6);
+        assert!(s.contains(&[1, 0, 0, 0, 1, 4]));
+        assert!(s.contains(&[3, 2, 11, 8, 20, 32]));
+    }
+}

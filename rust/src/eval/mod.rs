@@ -1,0 +1,192 @@
+//! Evaluation backends: the expensive stochastic black box of Eq. (3).
+//!
+//! One *trial* = train one model for hyperparameters θ and report its
+//! validation loss plus T MC-dropout losses (and optionally the raw
+//! prediction vectors so the coordinator can compute μ_pred / V_model via
+//! Eqs. 6-7). The HPO engine and the cluster scheduler only see this
+//! trait, so real AOT-compiled training (`hlo`) and the calibrated
+//! synthetic landscape (`synthetic`) are interchangeable (DESIGN.md §5).
+
+pub mod hlo;
+pub mod polyfit;
+pub mod synthetic;
+
+use std::time::Duration;
+
+use crate::space::Space;
+use crate::uq::{loss_interval, LossInterval, PredictionSet, UqWeights};
+
+/// Result of training one model (one trial) at θ.
+#[derive(Debug, Clone)]
+pub struct TrialOutcome {
+    /// Validation loss of the trained model without dropout (one ℓ₁
+    /// member sample).
+    pub loss: f64,
+    /// Validation losses of the T MC-dropout passes.
+    pub dropout_losses: Vec<f64>,
+    /// Flattened validation predictions (no dropout), if the backend
+    /// exposes them.
+    pub predictions: Option<Vec<f64>>,
+    /// Per-pass dropout predictions.
+    pub dropout_predictions: Vec<Vec<f64>>,
+    /// Wall-clock the trial consumed (simulated backends report virtual
+    /// cost; the cluster's speedup accounting uses this).
+    pub cost: Duration,
+}
+
+/// The black-box interface (paper Eq. 3).
+pub trait Evaluator: Send + Sync {
+    fn space(&self) -> &Space;
+
+    /// Train the `trial`-th model for θ. `seed` controls all stochasticity
+    /// so results are replayable.
+    fn run_trial(&self, theta: &[i64], trial: usize, seed: u64)
+        -> TrialOutcome;
+
+    /// Number of trainable parameters of the θ architecture (Fig. 2 / 9).
+    fn n_params(&self, theta: &[i64]) -> u64;
+
+    /// ℓ₁ evaluated at a mean prediction μ_pred, when the backend can
+    /// (requires knowing the validation targets).
+    fn loss_of_mean_prediction(&self, _theta: &[i64], _mu: &[f64]) -> Option<f64> {
+        None
+    }
+}
+
+/// Aggregated evaluation of one θ (paper Feature 1): CI over the outer
+/// loss plus the variability measures driving Eq. (8)/(9).
+#[derive(Debug, Clone)]
+pub struct EvalSummary {
+    /// CI center: ℓ₁ at μ_pred when predictions are available, otherwise
+    /// the (w_T, w_D)-weighted mean of member losses.
+    pub interval: LossInterval,
+    /// Plain mean/std over the N trained-model losses (Fig. 2's axes).
+    pub trained_mean: f64,
+    pub trained_std: f64,
+    /// Σ_d g(V_model(x^d)) for the Eq. (9) regularizer (0 when the backend
+    /// exposes no predictions).
+    pub v_model_g: f64,
+    /// Total simulated/measured cost of all member computations.
+    pub total_cost: Duration,
+}
+
+/// Combine N trial outcomes into the paper's evaluation summary.
+pub fn aggregate(
+    evaluator: &dyn Evaluator,
+    theta: &[i64],
+    outcomes: &[TrialOutcome],
+    weights: UqWeights,
+) -> EvalSummary {
+    assert!(!outcomes.is_empty());
+    let trained: Vec<f64> = outcomes.iter().map(|o| o.loss).collect();
+    let mut members = trained.clone();
+    for o in outcomes {
+        members.extend_from_slice(&o.dropout_losses);
+    }
+
+    // Weighted-mean center (fallback), Eq. 6 applied to scalar losses.
+    let n = trained.len() as f64;
+    let nt: usize = outcomes.iter().map(|o| o.dropout_losses.len()).sum();
+    let dropout_mean = if nt > 0 {
+        outcomes
+            .iter()
+            .flat_map(|o| &o.dropout_losses)
+            .sum::<f64>()
+            / nt as f64
+    } else {
+        trained.iter().sum::<f64>() / n
+    };
+    let fallback_center = if nt > 0 {
+        weights.w_trained * trained.iter().sum::<f64>() / n
+            + weights.w_dropout * dropout_mean
+    } else {
+        trained.iter().sum::<f64>() / n
+    };
+
+    // Preferred center: ℓ₁(μ_pred) via Eqs. (6).
+    let have_preds = outcomes.iter().all(|o| o.predictions.is_some());
+    let (center, v_model_g) = if have_preds {
+        let set = PredictionSet {
+            trained: outcomes
+                .iter()
+                .map(|o| o.predictions.clone().unwrap())
+                .collect(),
+            dropout: outcomes
+                .iter()
+                .map(|o| o.dropout_predictions.clone())
+                .collect(),
+        };
+        let mu = set.mu_pred(weights);
+        let v = set.v_model(weights);
+        let g = crate::uq::g_norm_relu(&v);
+        match evaluator.loss_of_mean_prediction(theta, &mu) {
+            Some(l) => (l, g),
+            None => (fallback_center, g),
+        }
+    } else {
+        (fallback_center, 0.0)
+    };
+
+    EvalSummary {
+        interval: loss_interval(center, &members),
+        trained_mean: trained.iter().sum::<f64>() / n,
+        trained_std: crate::uq::stddev(&trained),
+        v_model_g,
+        total_cost: outcomes.iter().map(|o| o.cost).sum(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{ParamSpec, Space};
+
+    struct Dummy {
+        space: Space,
+    }
+
+    impl Evaluator for Dummy {
+        fn space(&self) -> &Space {
+            &self.space
+        }
+        fn run_trial(&self, _t: &[i64], _i: usize, _s: u64) -> TrialOutcome {
+            unreachable!()
+        }
+        fn n_params(&self, _t: &[i64]) -> u64 {
+            0
+        }
+    }
+
+    fn outcome(loss: f64, dl: &[f64]) -> TrialOutcome {
+        TrialOutcome {
+            loss,
+            dropout_losses: dl.to_vec(),
+            predictions: None,
+            dropout_predictions: vec![],
+            cost: Duration::from_millis(10),
+        }
+    }
+
+    #[test]
+    fn aggregate_weighted_center() {
+        let d = Dummy { space: Space::new(vec![ParamSpec::new("x", 0, 1)]) };
+        let outs = vec![
+            outcome(1.0, &[2.0, 2.0]),
+            outcome(3.0, &[4.0, 4.0]),
+        ];
+        let s = aggregate(&d, &[0], &outs, UqWeights::default_paper());
+        // trained mean 2, dropout mean 3 -> center 2.5
+        assert!((s.interval.center - 2.5).abs() < 1e-12);
+        assert!(s.interval.radius > 0.0);
+        assert_eq!(s.trained_mean, 2.0);
+        assert_eq!(s.total_cost, Duration::from_millis(20));
+    }
+
+    #[test]
+    fn aggregate_no_dropout_uses_plain_mean() {
+        let d = Dummy { space: Space::new(vec![ParamSpec::new("x", 0, 1)]) };
+        let outs = vec![outcome(1.0, &[]), outcome(2.0, &[])];
+        let s = aggregate(&d, &[0], &outs, UqWeights::default_paper());
+        assert!((s.interval.center - 1.5).abs() < 1e-12);
+    }
+}

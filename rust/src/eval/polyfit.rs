@@ -1,0 +1,90 @@
+//! The polynomial-fit problem of the DeepHyper comparison (paper Fig. 4).
+//!
+//! DeepHyper's HPS tutorial fits a noisy cubic with a small network; the
+//! paper extends it to six hyperparameters (nodes/layer, layers, dropout,
+//! learning rate, epochs, batch size) and reports R². We reproduce that
+//! problem: data y = x³ − 0.5x + ε on [−1, 1], trained through the AOT MLP
+//! family (in_dim = 1), with R² derived from the validation MSE.
+
+use std::sync::Arc;
+
+use crate::eval::hlo::{Dataset, MlpHloEvaluator};
+use crate::runtime::SharedEngine;
+use crate::sampling::rng::Rng;
+
+/// The ground-truth polynomial.
+pub fn poly(x: f64) -> f64 {
+    x * x * x - 0.5 * x
+}
+
+/// Sample the noisy supervised dataset.
+pub fn polyfit_dataset(n: usize, noise: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let xi = -1.0 + 2.0 * rng.f64();
+        x.push(vec![xi as f32]);
+        y.push(vec![(poly(xi) + noise * rng.normal()) as f32]);
+    }
+    Dataset { x, y }
+}
+
+/// Variance of the validation targets (denominator of R²).
+pub fn target_variance(d: &Dataset) -> f64 {
+    let ys: Vec<f64> = d.y.iter().map(|r| r[0] as f64).collect();
+    let m = ys.iter().sum::<f64>() / ys.len() as f64;
+    ys.iter().map(|y| (y - m) * (y - m)).sum::<f64>() / ys.len() as f64
+}
+
+/// R² from an MSE given the target variance: R² = 1 − MSE/Var(y).
+pub fn r2_from_mse(mse: f64, var_y: f64) -> f64 {
+    1.0 - mse / var_y.max(1e-12)
+}
+
+/// Build the Fig. 4 problem: the evaluator minimizes validation MSE, the
+/// report converts to R² (monotone, so argmin MSE == argmax R²).
+pub fn polyfit_problem(
+    engine: Arc<SharedEngine>,
+    seed: u64,
+) -> (MlpHloEvaluator, f64) {
+    let train = polyfit_dataset(256, 0.05, seed);
+    let val = polyfit_dataset(64, 0.05, seed ^ 0xBADC0FFE);
+    let var_y = target_variance(&val);
+    let mut ev = MlpHloEvaluator::new(engine, train, val, 1, 1, 20);
+    ev.t_dropout = 5; // Fig. 4 compares convergence, not UQ depth
+    (ev, var_y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_matches_polynomial_up_to_noise() {
+        let d = polyfit_dataset(500, 0.0, 1);
+        for (x, y) in d.x.iter().zip(&d.y) {
+            let want = poly(x[0] as f64);
+            assert!((y[0] as f64 - want).abs() < 1e-6);
+        }
+        let noisy = polyfit_dataset(500, 0.1, 1);
+        let mean_dev: f64 = noisy
+            .x
+            .iter()
+            .zip(&noisy.y)
+            .map(|(x, y)| (y[0] as f64 - poly(x[0] as f64)).abs())
+            .sum::<f64>()
+            / 500.0;
+        assert!(mean_dev > 0.02, "noise must be present");
+    }
+
+    #[test]
+    fn r2_semantics() {
+        let d = polyfit_dataset(200, 0.05, 2);
+        let var = target_variance(&d);
+        assert!(var > 0.0);
+        assert_eq!(r2_from_mse(0.0, var), 1.0);
+        assert!(r2_from_mse(var, var).abs() < 1e-12); // predicting mean
+        assert!(r2_from_mse(2.0 * var, var) < 0.0); // worse than mean
+    }
+}

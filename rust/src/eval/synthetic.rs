@@ -1,0 +1,248 @@
+//! Calibrated synthetic trainer — the paper-scale sweep backend.
+//!
+//! The paper's large experiments (825 MLP models for Figs. 2-3, 50x50
+//! trials for Figs. 8-9) ran for GPU-days on Cori. This backend replays
+//! the *statistical shape* of those sweeps through the very same
+//! coordinator code paths: a deterministic multi-modal loss landscape
+//! over the integer lattice, trial-to-trial stochastic noise that grows
+//! with the loss level (matching Fig. 2's "complex architectures are
+//! noisy" structure), MC-dropout pass noise, and a heterogeneous duration
+//! model (cost grows with parameter count; Figs. 6/8 rely on uneven
+//! evaluation times). Calibration against real HLO-trained models is
+//! recorded in EXPERIMENTS.md.
+
+use std::time::Duration;
+
+use crate::eval::{Evaluator, TrialOutcome};
+use crate::sampling::rng::Rng;
+use crate::space::Space;
+
+type ParamFn = Box<dyn Fn(&[i64]) -> u64 + Send + Sync>;
+
+pub struct SyntheticEvaluator {
+    space: Space,
+    pub base_seed: u64,
+    /// Relative trial-to-trial noise at loss level L: std = noise * L.
+    pub noise: f64,
+    /// Extra relative spread of MC-dropout passes around the trial loss.
+    pub dropout_noise: f64,
+    /// Number of dropout passes reported per trial (paper T, default 30).
+    pub t_dropout: usize,
+    /// Fixed + per-parameter training cost (virtual).
+    pub base_cost: Duration,
+    pub ns_per_param: f64,
+    /// Best achievable loss and curvature of the landscape.
+    pub loss_floor: f64,
+    pub curvature: f64,
+    n_params_fn: ParamFn,
+    optimum: Vec<f64>,
+}
+
+impl SyntheticEvaluator {
+    /// Landscape with the optimum at a fixed interior lattice point.
+    pub fn new(space: Space, base_seed: u64) -> Self {
+        let dim = space.dim();
+        // A deterministic, seed-dependent interior optimum.
+        let mut rng = Rng::new(base_seed ^ 0x5EED);
+        let optimum: Vec<f64> =
+            (0..dim).map(|_| 0.2 + 0.6 * rng.f64()).collect();
+        let space_for_params = space.clone();
+        SyntheticEvaluator {
+            space,
+            base_seed,
+            noise: 0.08,
+            dropout_noise: 0.05,
+            t_dropout: 30,
+            base_cost: Duration::from_millis(40),
+            ns_per_param: 50.0,
+            loss_floor: 0.02,
+            curvature: 1.6,
+            n_params_fn: Box::new(move |theta| {
+                default_n_params(&space_for_params, theta)
+            }),
+            optimum,
+        }
+    }
+
+    /// Override the parameter-count model (e.g. the true MLP formula when
+    /// emulating the Fig. 2 sweep).
+    pub fn with_n_params(mut self, f: ParamFn) -> Self {
+        self.n_params_fn = f;
+        self
+    }
+
+    /// Deterministic noise-free loss at θ — the "true" landscape used by
+    /// tests and by convergence-quality assertions.
+    pub fn true_loss(&self, theta: &[i64]) -> f64 {
+        let u = self.space.to_unit(theta);
+        let mut bowl = 0.0;
+        let mut ripple = 0.0;
+        for (ui, oi) in u.iter().zip(&self.optimum) {
+            let d = ui - oi;
+            bowl += d * d;
+            ripple += (3.0 * std::f64::consts::PI * d).sin().powi(2);
+        }
+        self.loss_floor
+            + self.curvature * bowl
+            + 0.05 * ripple / u.len() as f64
+    }
+
+    fn theta_hash(&self, theta: &[i64]) -> u64 {
+        let mut h = 0xcbf29ce484222325u64 ^ self.base_seed;
+        for v in theta {
+            h ^= *v as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+}
+
+/// Default synthetic parameter count: grows geometrically with each
+/// coordinate's offset from its lower bound.
+fn default_n_params(space: &Space, theta: &[i64]) -> u64 {
+    let mut p = 64.0f64;
+    for (v, spec) in theta.iter().zip(space.params()) {
+        let rel = (v - spec.lo) as f64 / spec.size() as f64;
+        p *= 1.0 + 3.0 * rel;
+    }
+    p as u64
+}
+
+impl Evaluator for SyntheticEvaluator {
+    fn space(&self) -> &Space {
+        &self.space
+    }
+
+    fn run_trial(&self, theta: &[i64], trial: usize, seed: u64) -> TrialOutcome {
+        assert!(self.space.contains(theta), "theta out of space: {theta:?}");
+        let mut rng = Rng::new(
+            self.theta_hash(theta)
+                ^ (trial as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                ^ seed.wrapping_mul(0x2545F4914F6CDD1D),
+        );
+        let base = self.true_loss(theta);
+        // Trial noise: lognormal-ish multiplicative, scaled by loss level,
+        // i.e. poor architectures are also the erratic ones (Fig. 2).
+        let level = 1.0 + 4.0 * (base - self.loss_floor);
+        let loss =
+            (base * (1.0 + self.noise * level * rng.normal())).max(1e-6);
+        let dropout_losses: Vec<f64> = (0..self.t_dropout)
+            .map(|_| {
+                (loss * (1.0 + self.dropout_noise * level * rng.normal()))
+                    .max(1e-6)
+            })
+            .collect();
+
+        // Heterogeneous cost: parameter count plus a per-θ jitter factor.
+        let n_params = (self.n_params_fn)(theta) as f64;
+        let jitter = 0.75 + 0.5 * ((self.theta_hash(theta) >> 17) % 1000) as f64 / 1000.0;
+        let nanos = self.base_cost.as_nanos() as f64
+            + self.ns_per_param * n_params * jitter;
+        TrialOutcome {
+            loss,
+            dropout_losses,
+            predictions: None,
+            dropout_predictions: vec![],
+            cost: Duration::from_nanos(nanos as u64),
+        }
+    }
+
+    fn n_params(&self, theta: &[i64]) -> u64 {
+        (self.n_params_fn)(theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::space::ParamSpec;
+    use crate::util::prop::forall;
+
+    fn space() -> Space {
+        Space::new(vec![
+            ParamSpec::new("a", 0, 20),
+            ParamSpec::new("b", 1, 8),
+            ParamSpec::new("c", 0, 11),
+        ])
+    }
+
+    #[test]
+    fn deterministic_per_trial_seed() {
+        let ev = SyntheticEvaluator::new(space(), 9);
+        let a = ev.run_trial(&[3, 4, 5], 0, 1);
+        let b = ev.run_trial(&[3, 4, 5], 0, 1);
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.dropout_losses, b.dropout_losses);
+        let c = ev.run_trial(&[3, 4, 5], 1, 1);
+        assert_ne!(a.loss, c.loss, "different trials must differ");
+    }
+
+    #[test]
+    fn losses_positive_and_near_truth() {
+        let ev = SyntheticEvaluator::new(space(), 2);
+        forall("synthetic losses sane", 100, |rng| {
+            let theta = ev.space().random_point(rng);
+            let t = ev.true_loss(&theta);
+            let o = ev.run_trial(&theta, 0, rng.next_u64());
+            prop_assert!(o.loss > 0.0, "loss {}", o.loss);
+            prop_assert!(
+                (o.loss - t).abs() < t * 3.0 + 0.5,
+                "loss {} too far from truth {t}",
+                o.loss
+            );
+            prop_assert!(o.dropout_losses.len() == 30, "T wrong");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn noise_grows_with_loss_level() {
+        let ev = SyntheticEvaluator::new(space(), 3);
+        // Find a good and a bad point by true loss.
+        let mut rng = Rng::new(0);
+        let pts: Vec<Vec<i64>> =
+            (0..200).map(|_| ev.space().random_point(&mut rng)).collect();
+        let best = pts
+            .iter()
+            .min_by(|a, b| {
+                ev.true_loss(a).partial_cmp(&ev.true_loss(b)).unwrap()
+            })
+            .unwrap();
+        let worst = pts
+            .iter()
+            .max_by(|a, b| {
+                ev.true_loss(a).partial_cmp(&ev.true_loss(b)).unwrap()
+            })
+            .unwrap();
+        let spread = |theta: &[i64]| {
+            let ls: Vec<f64> = (0..40)
+                .map(|t| ev.run_trial(theta, t, 7).loss)
+                .collect();
+            crate::uq::stddev(&ls)
+        };
+        assert!(
+            spread(worst) > spread(best),
+            "worse architectures must be noisier (Fig. 2 shape)"
+        );
+    }
+
+    #[test]
+    fn cost_grows_with_param_count() {
+        let sp = space();
+        let ev = SyntheticEvaluator::new(sp.clone(), 4);
+        let small = ev.run_trial(&[0, 1, 0], 0, 0).cost;
+        let large = ev.run_trial(&[20, 8, 11], 0, 0).cost;
+        assert!(
+            large > small,
+            "cost must grow with architecture size ({small:?} vs {large:?})"
+        );
+    }
+
+    #[test]
+    fn custom_n_params_used() {
+        let ev = SyntheticEvaluator::new(space(), 5)
+            .with_n_params(Box::new(|t| (t[1] * t[1]) as u64 * 100));
+        assert_eq!(ev.n_params(&[0, 4, 0]), 1600);
+    }
+}

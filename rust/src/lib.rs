@@ -1,0 +1,24 @@
+//! HYPPO-RS: surrogate-based multi-level-parallelism hyperparameter
+//! optimization — a Rust + JAX + Pallas reproduction of Dumont et al.,
+//! MLHPC 2021 (DOI 10.1109/MLHPC54614.2021.00013).
+//!
+//! Layer 3 (this crate) owns the HPO engine, UQ aggregation, the simulated
+//! SLURM cluster, and the PJRT runtime that executes the AOT artifacts
+//! produced by `python/compile` (Layers 1-2). See DESIGN.md.
+
+pub mod analysis;
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod data;
+pub mod linalg;
+pub mod eval;
+pub mod optimizer;
+pub mod report;
+pub mod runtime;
+pub mod sampling;
+pub mod space;
+pub mod surrogate;
+pub mod tomo;
+pub mod uq;
+pub mod util;

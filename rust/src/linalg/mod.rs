@@ -1,0 +1,279 @@
+//! Dense linear-algebra substrate (no external crates offline).
+//!
+//! Provides exactly what the surrogates need: row-major `Mat`, LU with
+//! partial pivoting (the RBF saddle system of Eq. 10 is symmetric but
+//! *indefinite*, so Cholesky does not apply), and Cholesky for the SPD
+//! Gaussian-process covariances.
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|i| {
+                self.row(i)
+                    .iter()
+                    .zip(x)
+                    .map(|(a, b)| a * b)
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// LU decomposition with partial pivoting; solves `A x = b` in place.
+/// Returns `None` when `A` is numerically singular.
+pub fn lu_solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(a.rows, a.cols, "lu_solve needs a square matrix");
+    assert_eq!(b.len(), a.rows);
+    let n = a.rows;
+    let mut lu = a.data.clone();
+    let mut x = b.to_vec();
+    let mut piv: Vec<usize> = (0..n).collect();
+
+    for k in 0..n {
+        // Pivot search.
+        let mut p = k;
+        let mut max = lu[k * n + k].abs();
+        for i in (k + 1)..n {
+            let v = lu[i * n + k].abs();
+            if v > max {
+                max = v;
+                p = i;
+            }
+        }
+        if max < 1e-13 {
+            return None;
+        }
+        if p != k {
+            for j in 0..n {
+                lu.swap(k * n + j, p * n + j);
+            }
+            x.swap(k, p);
+            piv.swap(k, p);
+        }
+        let pivot = lu[k * n + k];
+        for i in (k + 1)..n {
+            let f = lu[i * n + k] / pivot;
+            lu[i * n + k] = f;
+            for j in (k + 1)..n {
+                lu[i * n + j] -= f * lu[k * n + j];
+            }
+            x[i] -= f * x[k];
+        }
+    }
+    // Back substitution.
+    for i in (0..n).rev() {
+        for j in (i + 1)..n {
+            x[i] -= lu[i * n + j] * x[j];
+        }
+        x[i] /= lu[i * n + i];
+    }
+    Some(x)
+}
+
+/// Cholesky factorization of an SPD matrix: returns lower-triangular `L`
+/// with `A = L L^T`, or `None` if not positive definite.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[(i, j)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `L y = b` (forward) then `L^T x = y` (backward).
+pub fn cholesky_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = b.to_vec();
+    for i in 0..n {
+        for k in 0..i {
+            y[i] -= l[(i, k)] * y[k];
+        }
+        y[i] /= l[(i, i)];
+    }
+    for i in (0..n).rev() {
+        for k in (i + 1)..n {
+            y[i] -= l[(k, i)] * y[k];
+        }
+        y[i] /= l[(i, i)];
+    }
+    y
+}
+
+/// Solve only the forward half `L y = b` (used for GP variance terms).
+pub fn forward_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut y = b.to_vec();
+    for i in 0..n {
+        for k in 0..i {
+            y[i] -= l[(i, k)] * y[k];
+        }
+        y[i] /= l[(i, i)];
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::sampling::rng::Rng;
+    use crate::util::prop::forall;
+
+    fn random_mat(n: usize, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for v in m.data.iter_mut() {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    #[test]
+    fn lu_solves_random_systems() {
+        forall("LU residual small", 50, |rng| {
+            let n = 2 + rng.usize_below(14);
+            let a = random_mat(n, rng);
+            let xtrue: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.matvec(&xtrue);
+            let x = lu_solve(&a, &b)
+                .ok_or_else(|| "singular".to_string())?;
+            for (xi, ti) in x.iter().zip(&xtrue) {
+                prop_assert!(
+                    (xi - ti).abs() < 1e-7 * (1.0 + ti.abs()),
+                    "{xi} vs {ti}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lu_detects_singular() {
+        let a = Mat::from_rows(&[
+            vec![1.0, 2.0],
+            vec![2.0, 4.0],
+        ]);
+        assert!(lu_solve(&a, &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn lu_handles_permutation_matrix() {
+        // Zero diagonal forces pivoting.
+        let a = Mat::from_rows(&[
+            vec![0.0, 1.0],
+            vec![1.0, 0.0],
+        ]);
+        let x = lu_solve(&a, &[3.0, 4.0]).unwrap();
+        assert_eq!(x, vec![4.0, 3.0]);
+    }
+
+    #[test]
+    fn cholesky_roundtrip_spd() {
+        forall("cholesky reconstructs SPD", 40, |rng| {
+            let n = 2 + rng.usize_below(10);
+            let g = random_mat(n, rng);
+            // A = G G^T + n I is SPD.
+            let mut a = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for k in 0..n {
+                        s += g[(i, k)] * g[(j, k)];
+                    }
+                    a[(i, j)] = s + if i == j { n as f64 } else { 0.0 };
+                }
+            }
+            let l = cholesky(&a).ok_or("not SPD?".to_string())?;
+            let xtrue: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.matvec(&xtrue);
+            let x = cholesky_solve(&l, &b);
+            for (xi, ti) in x.iter().zip(&xtrue) {
+                prop_assert!((xi - ti).abs() < 1e-7, "{xi} vs {ti}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(&[
+            vec![1.0, 2.0],
+            vec![2.0, 1.0],
+        ]);
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn matvec_identity() {
+        let i3 = Mat::eye(3);
+        assert_eq!(i3.matvec(&[1.0, 2.0, 3.0]), vec![1.0, 2.0, 3.0]);
+    }
+}

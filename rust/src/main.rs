@@ -1,0 +1,217 @@
+//! `hyppo` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!   run        run an HPO experiment from a TOML config (synthetic or HLO
+//!              backend) on the simulated cluster
+//!   slurm      emit the SLURM batch script for a steps × tasks topology
+//!   artifacts  inspect the AOT artifact manifest
+//!   speedup    print the Fig. 8-style virtual-time speedup for a topology
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use hyppo::cluster::sim::{simulate, speedup, EvalCost, SimConfig};
+use hyppo::cluster::slurm::{render, SlurmJobConfig};
+use hyppo::cluster::workers::{run_async, AsyncConfig};
+use hyppo::cluster::Topology;
+use hyppo::eval::hlo::MlpHloEvaluator;
+use hyppo::eval::synthetic::SyntheticEvaluator;
+use hyppo::eval::Evaluator;
+use hyppo::optimizer::History;
+use hyppo::report::{print_table, write_history_csv};
+use hyppo::runtime::{artifact_dir, SharedEngine};
+use hyppo::util::cli::Args;
+
+const USAGE: &str = "\
+hyppo — surrogate-based multi-level-parallelism HPO (MLHPC'21 reproduction)
+
+USAGE:
+  hyppo run --config <file.toml> [--backend synthetic|mlp] [--out out.csv]
+  hyppo slurm [--steps N] [--tasks M] [--cpu]
+  hyppo artifacts [--family mlp|cnn|unet]
+  hyppo speedup [--steps N] [--tasks M] [--evals E] [--trials T]
+  hyppo help
+";
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "run" => cmd_run(&args),
+        "slurm" => cmd_slurm(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "speedup" => cmd_speedup(&args),
+        "help" | "--help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprint!("unknown command {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn summarize(history: &History, gamma: f64) {
+    let best = history.best(gamma).expect("non-empty history");
+    let rows: Vec<Vec<String>> = vec![vec![
+        best.id.to_string(),
+        format!("{:?}", best.theta),
+        format!("{:.4e}", best.summary.interval.center),
+        format!("{:.4e}", best.summary.interval.radius),
+        best.n_params.to_string(),
+    ]];
+    print_table(
+        "best evaluation",
+        &["id", "theta", "loss", "ci_radius", "n_params"],
+        &rows,
+    );
+    println!(
+        "evaluations: {}   best objective: {:.6e}",
+        history.len(),
+        best.objective(gamma)
+    );
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg_path = args
+        .get("config")
+        .context("--config <file.toml> is required")?;
+    let cfg = hyppo::config::load(std::path::Path::new(cfg_path))?;
+    let backend = args.str_or("backend", "synthetic");
+
+    let history = match backend.as_str() {
+        "synthetic" => {
+            let ev = SyntheticEvaluator::new(cfg.space.clone(), cfg.hpo.seed);
+            run_async(
+                &ev,
+                &AsyncConfig {
+                    hpo: cfg.hpo.clone(),
+                    topology: cfg.topology,
+                    mode: cfg.mode,
+                    time_scale: args.f64_or("time-scale", 1e-5),
+                },
+            )
+        }
+        "mlp" => {
+            let dir = artifact_dir()
+                .context("artifacts not found; run `make artifacts`")?;
+            let engine = Arc::new(SharedEngine::load(dir)?);
+            let series = hyppo::data::timeseries::generate(
+                &hyppo::data::timeseries::SeriesConfig::default(),
+                cfg.hpo.seed,
+            );
+            let ws = hyppo::data::timeseries::windowed(&series, 16);
+            let split = hyppo::data::timeseries::split(&ws, 0.7, 0.15);
+            let to_ds = |w: &hyppo::data::timeseries::WindowedSeries| {
+                hyppo::eval::hlo::Dataset {
+                    x: w.x.clone(),
+                    y: w.y.iter().map(|v| vec![*v]).collect(),
+                }
+            };
+            let ev = MlpHloEvaluator::new(
+                engine,
+                to_ds(&split.train),
+                to_ds(&split.val),
+                16,
+                1,
+                10,
+            );
+            run_async(
+                &ev,
+                &AsyncConfig {
+                    hpo: cfg.hpo.clone(),
+                    topology: cfg.topology,
+                    mode: cfg.mode,
+                    time_scale: 0.0,
+                },
+            )
+        }
+        other => bail!("unknown backend {other:?} (synthetic|mlp)"),
+    };
+
+    summarize(&history, cfg.hpo.gamma);
+    if let Some(out) = args.get("out") {
+        write_history_csv(&history, cfg.hpo.gamma, out)?;
+        println!("history -> {out}");
+    }
+    Ok(())
+}
+
+fn cmd_slurm(args: &Args) -> Result<()> {
+    let cfg = SlurmJobConfig {
+        topology: Topology::new(
+            args.usize_or("steps", 2),
+            args.usize_or("tasks", 3),
+        ),
+        use_gpu: !args.flag("cpu"),
+        ..Default::default()
+    };
+    print!("{}", render(&cfg));
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = artifact_dir()
+        .context("artifacts not found; run `make artifacts`")?;
+    let manifest = hyppo::runtime::Manifest::load(&dir)?;
+    let family = args.get("family");
+    let mut rows = Vec::new();
+    for a in manifest.iter() {
+        if family.map(|f| f != a.family).unwrap_or(false) {
+            continue;
+        }
+        rows.push(vec![
+            a.family.clone(),
+            a.arch.clone(),
+            a.role.clone(),
+            a.n_param_arrays.to_string(),
+            a.inputs.len().to_string(),
+        ]);
+    }
+    print_table(
+        &format!("artifacts in {}", dir.display()),
+        &["family", "arch", "role", "param_arrays", "inputs"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_speedup(args: &Args) -> Result<()> {
+    let steps = args.usize_or("steps", 16);
+    let tasks = args.usize_or("tasks", 6);
+    let n_evals = args.usize_or("evals", 50);
+    let n_trials = args.usize_or("trials", 5);
+
+    // Heterogeneous workload from the synthetic trainer's cost model.
+    let space = hyppo::space::Space::new(vec![
+        hyppo::space::ParamSpec::new("a", 0, 20),
+        hyppo::space::ParamSpec::new("b", 0, 20),
+    ]);
+    let ev = SyntheticEvaluator::new(space.clone(), 1);
+    let mut rng = hyppo::sampling::Rng::new(1);
+    let evals: Vec<EvalCost> = (0..n_evals)
+        .map(|_| {
+            let theta = space.random_point(&mut rng);
+            EvalCost {
+                trial_costs: (0..n_trials)
+                    .map(|t| ev.run_trial(&theta, t, 0).cost)
+                    .collect(),
+            }
+        })
+        .collect();
+    let cfg = SimConfig::trial_parallel(Topology::new(steps, tasks));
+    let r = simulate(&evals, &cfg);
+    println!(
+        "topology {steps}x{tasks} ({} processors): makespan {:?}, speedup vs 1x1 = {:.1}x",
+        steps * tasks,
+        r.makespan,
+        speedup(&evals, &cfg)
+    );
+    Ok(())
+}

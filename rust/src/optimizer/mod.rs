@@ -1,0 +1,568 @@
+//! The HPO engine (paper Sec. III-IV): adaptive surrogate-based search
+//! over the integer lattice with UQ-aware objectives.
+//!
+//! `run_sync` is the sequential reference loop (one evaluation per
+//! iteration, refit, propose). The asynchronous nested-parallel loop —
+//! the paper's Feature 3 — lives in `cluster::async_hpo` and reuses the
+//! same `propose_next` machinery with per-completion refits.
+
+pub mod candidates;
+pub mod ga;
+
+use crate::eval::{aggregate, EvalSummary, Evaluator};
+use crate::optimizer::candidates::{CandidateConfig, WEIGHT_CYCLE};
+use crate::optimizer::ga::{maximize, GaConfig};
+use crate::sampling::rng::Rng;
+use crate::sampling::{halton_lattice, lhs_lattice};
+use crate::space::{Point, Space};
+use crate::surrogate::ensemble::RbfEnsemble;
+use crate::surrogate::gp::{expected_improvement, GpSurrogate};
+use crate::surrogate::rbf::RbfSurrogate;
+use crate::surrogate::Surrogate;
+use crate::uq::{LossInterval, UqWeights};
+
+/// Which surrogate drives the iterative sampling (paper Feature 2).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SurrogateKind {
+    /// Cubic RBF + Regis-Shoemaker candidate search.
+    Rbf,
+    /// GP + expected improvement maximized by the integer GA.
+    Gp,
+    /// RBF ensemble over CI extremes scored by μ + ασ (Eq. 8).
+    RbfEnsemble { alpha: f64, members: usize },
+}
+
+/// Initial experimental design.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitDesign {
+    Random,
+    Lhs,
+    Halton,
+}
+
+#[derive(Debug, Clone)]
+pub struct HpoConfig {
+    /// Total expensive evaluations (initial design included).
+    pub max_evaluations: usize,
+    pub n_init: usize,
+    /// N repeated trainings per θ (paper Feature 1).
+    pub n_trials: usize,
+    pub weights: UqWeights,
+    pub surrogate: SurrogateKind,
+    /// Eq. (9) regularization strength γ (0 disables).
+    pub gamma: f64,
+    pub seed: u64,
+    pub candidates: CandidateConfig,
+    pub init_design: InitDesign,
+    /// Fixed initial points (e.g. Fig. 3 seeds the surrogate with 10
+    /// deliberately bad evaluations); overrides `init_design` when set.
+    pub initial_points: Option<Vec<Point>>,
+}
+
+impl Default for HpoConfig {
+    fn default() -> Self {
+        HpoConfig {
+            max_evaluations: 50,
+            n_init: 10,
+            n_trials: 3,
+            weights: UqWeights::default_paper(),
+            surrogate: SurrogateKind::Rbf,
+            gamma: 0.0,
+            seed: 0,
+            candidates: CandidateConfig::default(),
+            init_design: InitDesign::Random,
+            initial_points: None,
+        }
+    }
+}
+
+/// One completed evaluation in the optimization history.
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub id: usize,
+    pub theta: Point,
+    pub summary: EvalSummary,
+    pub n_params: u64,
+    /// Ids of the evaluations the surrogate had seen when this point was
+    /// proposed (Fig. 6's provenance; empty for the initial design).
+    pub provenance: Vec<usize>,
+}
+
+impl EvalRecord {
+    /// The value the surrogate is trained on: CI center plus the Eq. (9)
+    /// regularizer.
+    pub fn objective(&self, gamma: f64) -> f64 {
+        crate::uq::regulated_loss(
+            self.summary.interval.center,
+            self.summary.v_model_g,
+            gamma,
+        )
+    }
+}
+
+/// Optimization history + summary queries used by the reports.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub records: Vec<EvalRecord>,
+}
+
+impl History {
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn best(&self, gamma: f64) -> Option<&EvalRecord> {
+        self.records.iter().min_by(|a, b| {
+            a.objective(gamma).partial_cmp(&b.objective(gamma)).unwrap()
+        })
+    }
+
+    /// Cumulative best objective after each evaluation (Fig. 3 / 4 series).
+    pub fn best_trace(&self, gamma: f64) -> Vec<f64> {
+        let mut best = f64::INFINITY;
+        self.records
+            .iter()
+            .map(|r| {
+                best = best.min(r.objective(gamma));
+                best
+            })
+            .collect()
+    }
+
+    /// First evaluation index whose objective is within `fraction` of the
+    /// final best (the "iterations to reach the optimal region" metric
+    /// behind the paper's order-of-magnitude claim).
+    pub fn evals_to_reach(&self, target: f64, gamma: f64) -> Option<usize> {
+        self.records
+            .iter()
+            .position(|r| r.objective(gamma) <= target)
+            .map(|i| i + 1)
+    }
+
+    fn points(&self) -> Vec<Point> {
+        self.records.iter().map(|r| r.theta.clone()).collect()
+    }
+}
+
+/// Evaluate one θ: N trials through the black box, aggregated per Feature 1.
+pub fn evaluate_point(
+    evaluator: &dyn Evaluator,
+    theta: &[i64],
+    n_trials: usize,
+    weights: UqWeights,
+    seed: u64,
+) -> EvalSummary {
+    let outcomes: Vec<_> = (0..n_trials.max(1))
+        .map(|t| evaluator.run_trial(theta, t, seed))
+        .collect();
+    aggregate(evaluator, theta, &outcomes, weights)
+}
+
+/// Build the initial design.
+pub fn initial_design(
+    space: &Space,
+    cfg: &HpoConfig,
+    rng: &mut Rng,
+) -> Vec<Point> {
+    if let Some(pts) = &cfg.initial_points {
+        return pts.clone();
+    }
+    let n = cfg.n_init.max(1);
+    let mut pts = match cfg.init_design {
+        InitDesign::Random => {
+            (0..n).map(|_| space.random_point(rng)).collect()
+        }
+        InitDesign::Lhs => lhs_lattice(space, n, rng),
+        InitDesign::Halton => halton_lattice(space, n, rng),
+    };
+    // Deduplicate (lattices can collide); top up with random points.
+    pts.sort();
+    pts.dedup();
+    let mut guard = 0;
+    while pts.len() < n && guard < 100 * n {
+        guard += 1;
+        let p = space.random_point(rng);
+        if !pts.contains(&p) {
+            pts.push(p);
+        }
+    }
+    pts
+}
+
+/// Propose the next point to evaluate given the current history.
+/// `iter` indexes the adaptive phase (for the weight cycle).
+pub fn propose_next(
+    space: &Space,
+    history: &History,
+    cfg: &HpoConfig,
+    iter: usize,
+    rng: &mut Rng,
+) -> Point {
+    let xs: Vec<Vec<f64>> = history
+        .records
+        .iter()
+        .map(|r| space.to_unit(&r.theta))
+        .collect();
+    let ys: Vec<f64> =
+        history.records.iter().map(|r| r.objective(cfg.gamma)).collect();
+    let evaluated = history.points();
+
+    let fallback = |rng: &mut Rng| {
+        let mut p = space.random_point(rng);
+        let mut guard = 0;
+        while evaluated.contains(&p) && guard < 1000 {
+            p = space.random_point(rng);
+            guard += 1;
+        }
+        p
+    };
+
+    match &cfg.surrogate {
+        SurrogateKind::Rbf => {
+            let mut model = RbfSurrogate::new();
+            if !model.fit(&xs, &ys) {
+                return fallback(rng);
+            }
+            let best = &history.best(cfg.gamma).unwrap().theta;
+            let cands = candidates::generate(
+                space,
+                best,
+                &evaluated,
+                &cfg.candidates,
+                rng,
+            );
+            if cands.is_empty() {
+                return fallback(rng);
+            }
+            let values: Vec<f64> = cands
+                .iter()
+                .map(|c| model.predict(&space.to_unit(c)))
+                .collect();
+            let w = WEIGHT_CYCLE[iter % WEIGHT_CYCLE.len()];
+            match candidates::select(space, &cands, &values, &evaluated, w)
+            {
+                Some(i) => cands[i].clone(),
+                None => fallback(rng),
+            }
+        }
+        SurrogateKind::Gp => {
+            let mut gp = GpSurrogate::new();
+            if !gp.fit(&xs, &ys) {
+                return fallback(rng);
+            }
+            let best_y =
+                ys.iter().cloned().fold(f64::INFINITY, f64::min);
+            let (point, _fit) =
+                maximize(space, &GaConfig::default(), rng, |p| {
+                    if evaluated.iter().any(|e| e == p) {
+                        return f64::NEG_INFINITY;
+                    }
+                    let u = space.to_unit(p);
+                    let mu = gp.predict(&u);
+                    let sd = gp.predict_std(&u).unwrap_or(0.0);
+                    expected_improvement(mu, sd, best_y)
+                });
+            if evaluated.iter().any(|e| e == &point) {
+                fallback(rng)
+            } else {
+                point
+            }
+        }
+        SurrogateKind::RbfEnsemble { alpha, members } => {
+            let intervals: Vec<LossInterval> = history
+                .records
+                .iter()
+                .map(|r| LossInterval {
+                    center: r.objective(cfg.gamma),
+                    radius: r.summary.interval.radius,
+                })
+                .collect();
+            let mut ens = RbfEnsemble::new(*members, *alpha);
+            if !ens.fit(&xs, &intervals, rng) {
+                return fallback(rng);
+            }
+            let best = &history.best(cfg.gamma).unwrap().theta;
+            let cands = candidates::generate(
+                space,
+                best,
+                &evaluated,
+                &cfg.candidates,
+                rng,
+            );
+            if cands.is_empty() {
+                return fallback(rng);
+            }
+            // Eq. (8): score = μ + ασ, then the same distance trade-off.
+            let values: Vec<f64> = cands
+                .iter()
+                .map(|c| ens.score(&space.to_unit(c)))
+                .collect();
+            let w = WEIGHT_CYCLE[iter % WEIGHT_CYCLE.len()];
+            match candidates::select(space, &cands, &values, &evaluated, w)
+            {
+                Some(i) => cands[i].clone(),
+                None => fallback(rng),
+            }
+        }
+    }
+}
+
+/// Sequential surrogate-based HPO (one evaluation per iteration).
+pub fn run_sync(evaluator: &dyn Evaluator, cfg: &HpoConfig) -> History {
+    let space = evaluator.space().clone();
+    let mut rng = Rng::new(cfg.seed);
+    let mut history = History::default();
+
+    for theta in initial_design(&space, cfg, &mut rng) {
+        if history.len() >= cfg.max_evaluations {
+            break;
+        }
+        let summary = evaluate_point(
+            evaluator,
+            &theta,
+            cfg.n_trials,
+            cfg.weights,
+            rng.next_u64(),
+        );
+        let id = history.len();
+        history.records.push(EvalRecord {
+            id,
+            n_params: evaluator.n_params(&theta),
+            theta,
+            summary,
+            provenance: vec![],
+        });
+    }
+
+    let mut iter = 0;
+    while history.len() < cfg.max_evaluations {
+        let theta =
+            propose_next(&space, &history, cfg, iter, &mut rng);
+        let provenance: Vec<usize> =
+            history.records.iter().map(|r| r.id).collect();
+        let summary = evaluate_point(
+            evaluator,
+            &theta,
+            cfg.n_trials,
+            cfg.weights,
+            rng.next_u64(),
+        );
+        let id = history.len();
+        history.records.push(EvalRecord {
+            id,
+            n_params: evaluator.n_params(&theta),
+            theta,
+            summary,
+            provenance,
+        });
+        iter += 1;
+    }
+    history
+}
+
+/// Pure random search over the lattice — the Fig. 3 reference sweep.
+pub fn run_random(
+    evaluator: &dyn Evaluator,
+    n: usize,
+    n_trials: usize,
+    weights: UqWeights,
+    seed: u64,
+) -> History {
+    let space = evaluator.space().clone();
+    let mut rng = Rng::new(seed);
+    let mut history = History::default();
+    for id in 0..n {
+        let theta = space.random_point(&mut rng);
+        let summary = evaluate_point(
+            evaluator,
+            &theta,
+            n_trials,
+            weights,
+            rng.next_u64(),
+        );
+        history.records.push(EvalRecord {
+            id,
+            n_params: evaluator.n_params(&theta),
+            theta,
+            summary,
+            provenance: vec![],
+        });
+    }
+    history
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::synthetic::SyntheticEvaluator;
+    use crate::space::ParamSpec;
+
+    fn evaluator(seed: u64) -> SyntheticEvaluator {
+        let space = Space::new(vec![
+            ParamSpec::new("a", 0, 24),
+            ParamSpec::new("b", 0, 24),
+            ParamSpec::new("c", 0, 24),
+        ]);
+        SyntheticEvaluator::new(space, seed)
+    }
+
+    fn run(kind: SurrogateKind, seed: u64) -> History {
+        let ev = evaluator(7);
+        let cfg = HpoConfig {
+            max_evaluations: 40,
+            n_init: 8,
+            n_trials: 2,
+            surrogate: kind,
+            seed,
+            ..Default::default()
+        };
+        run_sync(&ev, &cfg)
+    }
+
+    #[test]
+    fn all_surrogates_complete_budget_and_improve() {
+        for kind in [
+            SurrogateKind::Rbf,
+            SurrogateKind::Gp,
+            SurrogateKind::RbfEnsemble { alpha: 1.0, members: 6 },
+        ] {
+            let h = run(kind.clone(), 1);
+            assert_eq!(h.len(), 40, "{kind:?}");
+            let trace = h.best_trace(0.0);
+            assert!(
+                trace.last().unwrap() < &trace[7],
+                "{kind:?} did not improve over the initial design"
+            );
+        }
+    }
+
+    #[test]
+    fn surrogate_beats_random_search_on_average() {
+        let ev = evaluator(11);
+        let mut surr_wins = 0;
+        for seed in 0..5u64 {
+            let cfg = HpoConfig {
+                max_evaluations: 35,
+                n_init: 8,
+                n_trials: 2,
+                seed,
+                ..Default::default()
+            };
+            let h = run_sync(&ev, &cfg);
+            let r = run_random(
+                &ev,
+                35,
+                2,
+                UqWeights::default_paper(),
+                seed ^ 0xAAAA,
+            );
+            if h.best(0.0).unwrap().summary.interval.center
+                <= r.best(0.0).unwrap().summary.interval.center
+            {
+                surr_wins += 1;
+            }
+        }
+        assert!(
+            surr_wins >= 3,
+            "surrogate won only {surr_wins}/5 seeds vs random"
+        );
+    }
+
+    #[test]
+    fn no_duplicate_evaluations_in_adaptive_phase() {
+        let h = run(SurrogateKind::Rbf, 5);
+        let mut pts = h.points();
+        let total = pts.len();
+        pts.sort();
+        pts.dedup();
+        assert_eq!(pts.len(), total, "duplicate θ evaluated");
+    }
+
+    #[test]
+    fn provenance_monotone_and_complete() {
+        let h = run(SurrogateKind::Rbf, 9);
+        for (i, r) in h.records.iter().enumerate() {
+            assert_eq!(r.id, i);
+            if i < 8 {
+                assert!(r.provenance.is_empty());
+            } else {
+                // Sequential loop: proposal saw all earlier evaluations.
+                assert_eq!(
+                    r.provenance,
+                    (0..i).collect::<Vec<usize>>()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn initial_points_override_design() {
+        let ev = evaluator(3);
+        let fixed = vec![vec![0, 0, 0], vec![24, 24, 24]];
+        let cfg = HpoConfig {
+            max_evaluations: 4,
+            n_init: 10,
+            initial_points: Some(fixed.clone()),
+            n_trials: 1,
+            seed: 2,
+            ..Default::default()
+        };
+        let h = run_sync(&ev, &cfg);
+        assert_eq!(h.records[0].theta, fixed[0]);
+        assert_eq!(h.records[1].theta, fixed[1]);
+    }
+
+    #[test]
+    fn gamma_changes_ranking() {
+        // With a huge gamma, the regulated objective is dominated by the
+        // variability term, so best(gamma) can differ from best(0).
+        let h = run(SurrogateKind::Rbf, 13);
+        let b0 = h.best(0.0).unwrap().id;
+        let trace0 = h.best_trace(0.0);
+        assert!(trace0.windows(2).all(|w| w[1] <= w[0]));
+        // Not asserting inequality of ids (landscape-dependent), but the
+        // regulated objective must be >= the plain center everywhere.
+        for r in &h.records {
+            assert!(r.objective(10.0) >= r.objective(0.0));
+        }
+        let _ = b0;
+    }
+
+    #[test]
+    fn evals_to_reach_semantics() {
+        let h = run(SurrogateKind::Rbf, 17);
+        let best = h.best(0.0).unwrap().objective(0.0);
+        assert_eq!(
+            h.evals_to_reach(best, 0.0).unwrap(),
+            h.records
+                .iter()
+                .position(|r| r.objective(0.0) <= best)
+                .unwrap()
+                + 1
+        );
+        assert!(h.evals_to_reach(f64::NEG_INFINITY, 0.0).is_none());
+    }
+
+    #[test]
+    fn lhs_and_halton_designs_are_valid() {
+        let ev = evaluator(21);
+        for design in [InitDesign::Lhs, InitDesign::Halton] {
+            let cfg = HpoConfig {
+                max_evaluations: 12,
+                n_init: 12,
+                n_trials: 1,
+                init_design: design,
+                seed: 3,
+                ..Default::default()
+            };
+            let h = run_sync(&ev, &cfg);
+            assert_eq!(h.len(), 12);
+            for r in &h.records {
+                assert!(ev.space().contains(&r.theta));
+            }
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Report emitters: turn optimization histories into the CSV series /
+//! printed tables that EXPERIMENTS.md records per figure and table.
+
+use std::io::Result;
+use std::path::Path;
+
+use crate::optimizer::History;
+use crate::util::csv::CsvWriter;
+
+/// Fig. 2 / Fig. 9-style per-evaluation dump: loss center, CI radius,
+/// trained-trial std, MAD inputs, parameter count.
+pub fn write_history_csv<P: AsRef<Path>>(
+    history: &History,
+    gamma: f64,
+    path: P,
+) -> Result<()> {
+    let mut w = CsvWriter::create(
+        path,
+        &[
+            "id", "theta", "objective", "center", "radius",
+            "trained_mean", "trained_std", "n_params", "provenance_len",
+            "cost_ms",
+        ],
+    )?;
+    for r in &history.records {
+        let theta = r
+            .theta
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join(" ");
+        w.row(&[
+            r.id.to_string(),
+            theta,
+            format!("{:.6e}", r.objective(gamma)),
+            format!("{:.6e}", r.summary.interval.center),
+            format!("{:.6e}", r.summary.interval.radius),
+            format!("{:.6e}", r.summary.trained_mean),
+            format!("{:.6e}", r.summary.trained_std),
+            r.n_params.to_string(),
+            r.provenance.len().to_string(),
+            format!("{:.3}", r.summary.total_cost.as_secs_f64() * 1e3),
+        ])?;
+    }
+    w.finish()
+}
+
+/// Fig. 3 / Fig. 4-style convergence series: best objective after each
+/// evaluation, one column per labeled method.
+pub fn write_convergence_csv<P: AsRef<Path>>(
+    series: &[(&str, Vec<f64>)],
+    path: P,
+) -> Result<()> {
+    let mut header = vec!["eval".to_string()];
+    header.extend(series.iter().map(|(n, _)| n.to_string()));
+    let header_refs: Vec<&str> =
+        header.iter().map(String::as_str).collect();
+    let mut w = CsvWriter::create(path, &header_refs)?;
+    let rows = series.iter().map(|(_, v)| v.len()).max().unwrap_or(0);
+    for i in 0..rows {
+        let mut row = vec![(i + 1).to_string()];
+        for (_, v) in series {
+            row.push(
+                v.get(i)
+                    .or(v.last())
+                    .map(|x| format!("{x:.6e}"))
+                    .unwrap_or_default(),
+            );
+        }
+        w.row(&row)?;
+    }
+    w.finish()
+}
+
+/// Simple aligned table printer for terminal summaries (Table I etc.).
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> =
+        header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!(
+        "{}",
+        fmt_row(
+            &header.iter().map(|s| s.to_string()).collect::<Vec<_>>()
+        )
+    );
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::EvalSummary;
+    use crate::optimizer::EvalRecord;
+    use crate::uq::LossInterval;
+    use std::time::Duration;
+
+    fn history() -> History {
+        let mut h = History::default();
+        for i in 0..3 {
+            h.records.push(EvalRecord {
+                id: i,
+                theta: vec![i as i64, 2 * i as i64],
+                summary: EvalSummary {
+                    interval: LossInterval {
+                        center: 1.0 / (i + 1) as f64,
+                        radius: 0.1,
+                    },
+                    trained_mean: 1.0,
+                    trained_std: 0.2,
+                    v_model_g: 0.0,
+                    total_cost: Duration::from_millis(5),
+                },
+                n_params: 100 * (i as u64 + 1),
+                provenance: (0..i).collect(),
+            });
+        }
+        h
+    }
+
+    #[test]
+    fn history_csv_written() {
+        let p = std::env::temp_dir().join("hyppo_report_h.csv");
+        write_history_csv(&history(), 0.0, &p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 4);
+        assert!(text.lines().next().unwrap().starts_with("id,theta"));
+        assert!(text.contains("0 0"));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn convergence_csv_pads_short_series() {
+        let p = std::env::temp_dir().join("hyppo_report_c.csv");
+        write_convergence_csv(
+            &[
+                ("a", vec![3.0, 2.0, 1.0]),
+                ("b", vec![5.0]),
+            ],
+            &p,
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0], "eval,a,b");
+        // b padded with its last value.
+        assert!(lines[3].contains("1.0"));
+        assert!(lines[3].contains("5.0"));
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,207 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once on
+//! the CPU PJRT client, and executes them from the Layer-3 hot path.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serializes protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects, while the text parser reassigns ids (see DESIGN.md §2 and
+//! /opt/xla-example/README.md).
+//!
+//! Thread-safety: the `xla` crate's wrappers are raw C++ pointers without
+//! `Send`/`Sync` markers. `SharedEngine` serializes *all* access behind one
+//! `Mutex` and is the only way the rest of the crate touches PJRT, which
+//! makes the unsafe `Send` marker sound (objects are only ever used by the
+//! lock holder; PJRT CPU itself is thread-safe).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::runtime::registry::{ArtifactSpec, Manifest};
+
+/// Single-threaded engine core.
+pub struct Engine {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<(String, String), PjRtLoadedExecutable>,
+    pub executions: u64,
+    pub compilations: u64,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn load<P: AsRef<Path>>(artifact_dir: P) -> Result<Engine> {
+        let manifest = Manifest::load(&artifact_dir)?;
+        let client = PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            executions: 0,
+            compilations: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn compile(&mut self, spec: &ArtifactSpec) -> Result<()> {
+        let key = (spec.arch.clone(), spec.role.clone());
+        if self.cache.contains_key(&key) {
+            return Ok(());
+        }
+        let proto = HloModuleProto::from_text_file(&spec.path)
+            .map_err(|e| {
+                anyhow!("parsing {}: {e:?}", spec.path.display())
+            })?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", spec.arch))?;
+        self.compilations += 1;
+        self.cache.insert(key, exe);
+        Ok(())
+    }
+
+    /// Ensure (arch, role) is compiled; returns its spec.
+    pub fn prepare(&mut self, arch: &str, role: &str) -> Result<ArtifactSpec> {
+        let spec = self
+            .manifest
+            .find(arch, role)
+            .with_context(|| format!("no artifact {arch}/{role}"))?
+            .clone();
+        self.compile(&spec)?;
+        Ok(spec)
+    }
+
+    /// Execute (arch, role) on literal inputs; returns the unpacked output
+    /// tuple (aot.py lowers everything with `return_tuple=True`).
+    pub fn exec(
+        &mut self,
+        arch: &str,
+        role: &str,
+        inputs: &[Literal],
+    ) -> Result<Vec<Literal>> {
+        let spec = self.prepare(arch, role)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{arch}/{role}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let exe = self
+            .cache
+            .get(&(arch.to_string(), role.to_string()))
+            .expect("prepared above");
+        let result = exe
+            .execute::<Literal>(inputs)
+            .map_err(|e| anyhow!("executing {arch}/{role}: {e:?}"))?;
+        self.executions += 1;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+}
+
+/// The process-wide, thread-shareable engine handle.
+pub struct SharedEngine {
+    inner: Mutex<Engine>,
+}
+
+// SAFETY: `Engine` holds raw PJRT pointers. They are moved between threads
+// only under the exclusive Mutex above; PJRT's CPU client is internally
+// thread-safe for the operations we perform. No references to the inner
+// objects escape the lock.
+unsafe impl Send for SharedEngine {}
+unsafe impl Sync for SharedEngine {}
+
+impl SharedEngine {
+    pub fn load<P: AsRef<Path>>(artifact_dir: P) -> Result<Self> {
+        Ok(SharedEngine { inner: Mutex::new(Engine::load(artifact_dir)?) })
+    }
+
+    /// Run a closure with exclusive engine access.
+    pub fn with<R>(&self, f: impl FnOnce(&mut Engine) -> R) -> R {
+        let mut guard = self.inner.lock().expect("engine mutex poisoned");
+        f(&mut guard)
+    }
+
+    pub fn exec(
+        &self,
+        arch: &str,
+        role: &str,
+        inputs: &[Literal],
+    ) -> Result<Vec<Literal>> {
+        self.with(|e| e.exec(arch, role, inputs))
+    }
+
+    pub fn manifest_archs(&self, family: &str) -> Vec<String> {
+        self.with(|e| e.manifest().archs(family))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal construction/extraction helpers.
+// ---------------------------------------------------------------------------
+
+/// f32 tensor literal of the given shape.
+pub fn f32_tensor(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+    Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn f32_scalar(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+pub fn i32_scalar(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Extract an f32 literal into a Vec.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+}
+
+/// Extract a scalar f32 (also accepts 1-element tensors).
+pub fn to_f32_scalar(lit: &Literal) -> Result<f32> {
+    let v = to_f32_vec(lit)?;
+    if v.len() != 1 {
+        bail!("expected scalar, got {} elements", v.len());
+    }
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_tensor_shape_checked() {
+        assert!(f32_tensor(&[1.0, 2.0], &[3]).is_err());
+        let t = f32_tensor(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(t.element_count(), 4);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let s = f32_scalar(2.5);
+        assert_eq!(to_f32_scalar(&s).unwrap(), 2.5);
+        let v = f32_tensor(&[1.0, 2.0], &[2]).unwrap();
+        assert!(to_f32_scalar(&v).is_err());
+        assert_eq!(to_f32_vec(&v).unwrap(), vec![1.0, 2.0]);
+    }
+}

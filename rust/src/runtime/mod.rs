@@ -1,0 +1,34 @@
+//! Layer-3 runtime: PJRT client, artifact registry, and the model training
+//! driver that executes the AOT-compiled Layer-1/2 computations.
+
+pub mod engine;
+pub mod model;
+pub mod registry;
+
+pub use engine::{Engine, SharedEngine};
+pub use model::{make_batch, Batch, Model};
+pub use registry::{ArtifactSpec, Manifest, TensorSpec};
+
+/// Conventional artifact directory (relative to the repo root / CWD).
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$HYPPO_ARTIFACTS`, CWD, or upward from
+/// CWD (so tests and examples work from any subdirectory).
+pub fn artifact_dir() -> Option<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("HYPPO_ARTIFACTS") {
+        let p = std::path::PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let cand = cur.join(DEFAULT_ARTIFACT_DIR);
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! Artifact registry: parses `artifacts/manifest.json` emitted by
+//! `python/compile/aot.py` and resolves (architecture, role) pairs to HLO
+//! files plus their I/O signatures. This is the only contract between the
+//! build-time Python layers and the Rust request path.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// Shape + dtype of one executable input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One manifest entry: a role (`init`, `train_step`, `predict`,
+/// `predict_dropout`, `eval_loss`) of one architecture.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub family: String,
+    pub arch: String,
+    pub role: String,
+    pub path: PathBuf,
+    pub n_param_arrays: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_i64(&self, key: &str) -> Option<i64> {
+        self.meta.get(key).and_then(Json::as_i64)
+    }
+
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.get(key).and_then(Json::as_f64)
+    }
+}
+
+/// The loaded manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    artifacts: Vec<ArtifactSpec>,
+    index: BTreeMap<(String, String), usize>,
+}
+
+fn tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    let arr = v.as_arr().context("expected array of tensor specs")?;
+    arr.iter()
+        .map(|t| {
+            let shape = t
+                .get("shape")
+                .as_arr()
+                .context("missing shape")?
+                .iter()
+                .map(|d| d.as_i64().map(|v| v as usize))
+                .collect::<Option<Vec<usize>>>()
+                .context("bad shape entry")?;
+            let dtype = t
+                .get("dtype")
+                .as_str()
+                .context("missing dtype")?
+                .to_string();
+            Ok(TensorSpec { shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = parse(&text)
+            .map_err(|e| anyhow::anyhow!("manifest parse error: {e}"))?;
+        if root.get("version").as_i64() != Some(1) {
+            bail!("unsupported manifest version");
+        }
+        let mut artifacts = Vec::new();
+        let mut index = BTreeMap::new();
+        for entry in root
+            .get("artifacts")
+            .as_arr()
+            .context("manifest missing 'artifacts'")?
+        {
+            let spec = ArtifactSpec {
+                family: entry
+                    .get("family")
+                    .as_str()
+                    .context("family")?
+                    .to_string(),
+                arch: entry.get("arch").as_str().context("arch")?.to_string(),
+                role: entry.get("role").as_str().context("role")?.to_string(),
+                path: dir.join(
+                    entry.get("path").as_str().context("path")?,
+                ),
+                n_param_arrays: entry
+                    .get("n_param_arrays")
+                    .as_i64()
+                    .context("n_param_arrays")?
+                    as usize,
+                inputs: tensor_specs(entry.get("inputs"))?,
+                outputs: tensor_specs(entry.get("outputs"))?,
+                meta: entry
+                    .get("meta")
+                    .as_obj()
+                    .cloned()
+                    .unwrap_or_default(),
+            };
+            let key = (spec.arch.clone(), spec.role.clone());
+            if index.insert(key, artifacts.len()).is_some() {
+                bail!("duplicate manifest entry {}/{}", spec.arch, spec.role);
+            }
+            artifacts.push(spec);
+        }
+        Ok(Manifest { dir, artifacts, index })
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    pub fn find(&self, arch: &str, role: &str) -> Option<&ArtifactSpec> {
+        self.index
+            .get(&(arch.to_string(), role.to_string()))
+            .map(|i| &self.artifacts[*i])
+    }
+
+    /// All architectures of a family (sorted, deduplicated).
+    pub fn archs(&self, family: &str) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.family == family)
+            .map(|a| a.arch.clone())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactSpec> {
+        self.artifacts.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f =
+            std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"family":"mlp","arch":"mlp_a","role":"init","path":"a_init.hlo.txt",
+         "n_param_arrays":2,
+         "inputs":[{"shape":[],"dtype":"int32"}],
+         "outputs":[{"shape":[4,8],"dtype":"float32"},{"shape":[8],"dtype":"float32"}],
+         "meta":{"layers":1,"width":8,"mult":1.5}},
+        {"family":"mlp","arch":"mlp_a","role":"predict","path":"a_pred.hlo.txt",
+         "n_param_arrays":2,
+         "inputs":[{"shape":[4,8],"dtype":"float32"}],
+         "outputs":[{"shape":[32,1],"dtype":"float32"}],
+         "meta":{}}
+      ]
+    }"#;
+
+    #[test]
+    fn loads_and_indexes() {
+        let dir = std::env::temp_dir().join("hyppo_manifest_test");
+        write_manifest(&dir, SAMPLE);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.len(), 2);
+        let init = m.find("mlp_a", "init").unwrap();
+        assert_eq!(init.n_param_arrays, 2);
+        assert_eq!(init.outputs[0].shape, vec![4, 8]);
+        assert_eq!(init.meta_i64("width"), Some(8));
+        assert_eq!(init.meta_f64("mult"), Some(1.5));
+        assert!(m.find("mlp_a", "train_step").is_none());
+        assert_eq!(m.archs("mlp"), vec!["mlp_a"]);
+        assert!(m.archs("unet").is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let dir = std::env::temp_dir().join("hyppo_manifest_test_v2");
+        write_manifest(&dir, r#"{"version":2,"artifacts":[]}"#);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        let dir = std::env::temp_dir().join("hyppo_manifest_test_dup");
+        let dup = SAMPLE.replace("\"role\":\"predict\"", "\"role\":\"init\"");
+        write_manifest(&dir, &dup);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let dir = std::env::temp_dir().join("hyppo_manifest_absent");
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

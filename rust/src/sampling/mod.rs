@@ -1,0 +1,10 @@
+//! Sampling substrate: deterministic RNG, low-discrepancy sequences, and
+//! Latin hypercube designs over the integer lattice.
+
+pub mod lowdisc;
+pub mod rng;
+pub mod sobol;
+
+pub use lowdisc::{halton_lattice, lhs_lattice};
+pub use rng::Rng;
+pub use sobol::{sobol_lattice, Sobol};

@@ -1,0 +1,217 @@
+//! Sobol' low-discrepancy sequence with integer-lattice adaptation —
+//! the paper's §VI roadmap item ("there is also an opportunity to modify
+//! the computation of the sample points in Sobol's sequences" for integer
+//! constraints), implemented.
+//!
+//! Direction numbers follow Joe & Kuo (2008) for the first 10 dimensions
+//! (primitive polynomials + initial m values), enough for every search
+//! space in this reproduction (max 8 hyperparameters in Table I). The
+//! integer adaptation maps each coordinate through equal-width quantile
+//! buckets (`Space::from_unit`), the same scheme validated for Halton.
+
+use crate::sampling::rng::Rng;
+use crate::space::Space;
+
+const BITS: usize = 31;
+
+/// (degree s, coefficient a, initial direction numbers m_1..m_s) per
+/// dimension ≥ 1; dimension 0 is the van der Corput sequence in base 2.
+/// From the Joe-Kuo "new-joe-kuo-6.21201" table.
+const JOE_KUO: [(u32, u32, [u32; 7]); 9] = [
+    (1, 0, [1, 0, 0, 0, 0, 0, 0]),
+    (2, 1, [1, 3, 0, 0, 0, 0, 0]),
+    (3, 1, [1, 3, 1, 0, 0, 0, 0]),
+    (3, 2, [1, 1, 1, 0, 0, 0, 0]),
+    (4, 1, [1, 1, 3, 3, 0, 0, 0]),
+    (4, 4, [1, 3, 5, 13, 0, 0, 0]),
+    (5, 2, [1, 1, 5, 5, 17, 0, 0]),
+    (5, 4, [1, 1, 5, 5, 5, 0, 0]),
+    (5, 7, [1, 1, 7, 11, 19, 0, 0]),
+];
+
+/// Sobol' sequence generator over [0,1)^dim.
+#[derive(Debug, Clone)]
+pub struct Sobol {
+    dim: usize,
+    /// v[d][b]: direction number b of dimension d (scaled to 2^BITS).
+    v: Vec<[u32; BITS]>,
+    x: Vec<u32>,
+    index: u64,
+    shift: Vec<u32>,
+}
+
+impl Sobol {
+    /// Plain (unshifted) sequence.
+    pub fn new(dim: usize) -> Self {
+        Self::scrambled(dim, None)
+    }
+
+    /// Digitally shifted sequence (Owen-style random shift) for
+    /// decorrelated replications.
+    pub fn scrambled(dim: usize, rng: Option<&mut Rng>) -> Self {
+        assert!(
+            (1..=JOE_KUO.len() + 1).contains(&dim),
+            "sobol supports 1..={} dims",
+            JOE_KUO.len() + 1
+        );
+        let mut v = Vec::with_capacity(dim);
+        // Dimension 0: v_b = 2^(BITS-1-b).
+        let mut v0 = [0u32; BITS];
+        for (b, item) in v0.iter_mut().enumerate() {
+            *item = 1 << (BITS - 1 - b);
+        }
+        v.push(v0);
+        for d in 1..dim {
+            let (s, a, m) = JOE_KUO[d - 1];
+            let s = s as usize;
+            let mut vd = [0u32; BITS];
+            for b in 0..BITS {
+                if b < s {
+                    vd[b] = m[b] << (BITS - 1 - b);
+                } else {
+                    let mut val = vd[b - s] ^ (vd[b - s] >> s);
+                    for k in 1..s {
+                        if (a >> (s - 1 - k)) & 1 == 1 {
+                            val ^= vd[b - k];
+                        }
+                    }
+                    vd[b] = val;
+                }
+            }
+            v.push(vd);
+        }
+        let shift = match rng {
+            Some(r) => (0..dim)
+                .map(|_| (r.next_u64() as u32) & ((1 << BITS) - 1))
+                .collect(),
+            None => vec![0; dim],
+        };
+        Sobol { dim, v, x: vec![0; dim], index: 0, shift }
+    }
+
+    /// Next point in [0,1)^dim (Gray-code order).
+    pub fn next_point(&mut self) -> Vec<f64> {
+        // Gray code: flip the bit at the position of the lowest zero bit
+        // of the running index.
+        let c = (!self.index).trailing_zeros() as usize;
+        let c = c.min(BITS - 1);
+        for d in 0..self.dim {
+            self.x[d] ^= self.v[d][c];
+        }
+        self.index += 1;
+        self.x
+            .iter()
+            .zip(&self.shift)
+            .map(|(x, s)| {
+                ((x ^ s) as f64) / (1u64 << BITS) as f64
+            })
+            .collect()
+    }
+}
+
+/// `n` integer lattice points from a (shifted) Sobol' sequence.
+pub fn sobol_lattice(space: &Space, n: usize, rng: &mut Rng) -> Vec<Vec<i64>> {
+    let mut seq = Sobol::scrambled(space.dim(), Some(rng));
+    // Skip the first point (all-shift), conventional for shifted nets.
+    let _ = seq.next_point();
+    (0..n).map(|_| space.from_unit(&seq.next_point())).collect()
+}
+
+/// Star-discrepancy proxy: max deviation of the empirical CDF from
+/// uniform over axis-aligned anchored boxes sampled at the points
+/// themselves (exact star discrepancy is exponential; this proxy ranks
+/// sequences reliably and is only used by tests/benches).
+pub fn discrepancy_proxy(points: &[Vec<f64>]) -> f64 {
+    let n = points.len() as f64;
+    let mut worst: f64 = 0.0;
+    for anchor in points {
+        let vol: f64 = anchor.iter().product();
+        let count = points
+            .iter()
+            .filter(|p| p.iter().zip(anchor).all(|(a, b)| a < b))
+            .count() as f64;
+        worst = worst.max((count / n - vol).abs());
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::ParamSpec;
+
+    #[test]
+    fn first_points_of_dim1_are_van_der_corput() {
+        let mut s = Sobol::new(1);
+        let seq: Vec<f64> =
+            (0..4).map(|_| s.next_point()[0]).collect();
+        assert_eq!(seq, vec![0.5, 0.75, 0.25, 0.375]);
+    }
+
+    #[test]
+    fn points_in_unit_cube_and_distinct() {
+        let mut s = Sobol::new(6);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..512 {
+            let p = s.next_point();
+            assert!(p.iter().all(|v| (0.0..1.0).contains(v)), "{p:?}");
+            let key: Vec<u64> =
+                p.iter().map(|v| (v * 1e12) as u64).collect();
+            assert!(seen.insert(key), "duplicate Sobol point");
+        }
+    }
+
+    #[test]
+    fn beats_random_on_discrepancy() {
+        let mut sobol = Sobol::new(4);
+        let sp: Vec<Vec<f64>> =
+            (0..256).map(|_| sobol.next_point()).collect();
+        let mut rng = Rng::new(0);
+        let rp: Vec<Vec<f64>> = (0..256)
+            .map(|_| (0..4).map(|_| rng.f64()).collect())
+            .collect();
+        let ds = discrepancy_proxy(&sp);
+        let dr = discrepancy_proxy(&rp);
+        assert!(
+            ds < dr * 0.6,
+            "sobol {ds} not clearly better than random {dr}"
+        );
+    }
+
+    #[test]
+    fn shifted_sequences_differ_but_stay_low_discrepancy() {
+        let mut rng = Rng::new(1);
+        let mut a = Sobol::scrambled(3, Some(&mut rng));
+        let mut b = Sobol::scrambled(3, Some(&mut rng));
+        let pa: Vec<Vec<f64>> = (0..128).map(|_| a.next_point()).collect();
+        let pb: Vec<Vec<f64>> = (0..128).map(|_| b.next_point()).collect();
+        assert_ne!(pa[0], pb[0]);
+        assert!(discrepancy_proxy(&pa) < 0.15);
+        assert!(discrepancy_proxy(&pb) < 0.15);
+    }
+
+    #[test]
+    fn lattice_points_valid_and_balanced() {
+        let space = Space::new(vec![
+            ParamSpec::new("a", 0, 3),
+            ParamSpec::new("b", -2, 2),
+        ]);
+        let mut rng = Rng::new(2);
+        let pts = sobol_lattice(&space, 400, &mut rng);
+        let mut counts = [0usize; 4];
+        for p in &pts {
+            assert!(space.contains(p), "{p:?}");
+            counts[p[0] as usize] += 1;
+        }
+        // Quantile-bucket adaptation keeps each cell near n/4.
+        for c in counts {
+            assert!((70..=130).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "sobol supports")]
+    fn too_many_dims_rejected() {
+        let _ = Sobol::new(64);
+    }
+}

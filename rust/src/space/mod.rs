@@ -1,0 +1,259 @@
+//! Integer hyperparameter lattice Ω (paper Eq. 2).
+//!
+//! Every tunable hyperparameter is an inclusive integer range; continuous
+//! quantities (learning rate, dropout probability, multipliers) are encoded
+//! as scaled integers by their `Evaluator` (e.g. `lr = 10^(-idx/2)`), which
+//! is exactly how the paper handles its "integer lattice" formulation.
+
+use crate::sampling::rng::Rng;
+
+/// One hyperparameter: an inclusive integer range.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl ParamSpec {
+    pub fn new(name: &str, lo: i64, hi: i64) -> Self {
+        assert!(lo <= hi, "empty range for {name}: [{lo}, {hi}]");
+        ParamSpec { name: name.to_string(), lo, hi }
+    }
+
+    pub fn size(&self) -> u64 {
+        (self.hi - self.lo) as u64 + 1
+    }
+}
+
+/// A point on the lattice, one value per `ParamSpec` in order.
+pub type Point = Vec<i64>;
+
+/// The search space Ω.
+#[derive(Debug, Clone)]
+pub struct Space {
+    params: Vec<ParamSpec>,
+}
+
+impl Space {
+    pub fn new(params: Vec<ParamSpec>) -> Self {
+        assert!(!params.is_empty(), "empty search space");
+        Space { params }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn params(&self) -> &[ParamSpec] {
+        &self.params
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+
+    /// Total lattice cardinality (saturating).
+    pub fn cardinality(&self) -> u64 {
+        self.params
+            .iter()
+            .fold(1u64, |acc, p| acc.saturating_mul(p.size()))
+    }
+
+    pub fn contains(&self, x: &[i64]) -> bool {
+        x.len() == self.dim()
+            && x.iter()
+                .zip(&self.params)
+                .all(|(v, p)| *v >= p.lo && *v <= p.hi)
+    }
+
+    /// Clamp each coordinate into bounds.
+    pub fn clamp(&self, x: &mut [i64]) {
+        for (v, p) in x.iter_mut().zip(&self.params) {
+            *v = (*v).clamp(p.lo, p.hi);
+        }
+    }
+
+    /// Map a unit-cube sample to lattice cells via equal-width buckets
+    /// (the integer adaptation of Sec. VI; see `sampling::lowdisc`).
+    pub fn from_unit(&self, u: &[f64]) -> Point {
+        assert_eq!(u.len(), self.dim());
+        u.iter()
+            .zip(&self.params)
+            .map(|(ui, p)| {
+                let cell = (ui * p.size() as f64).floor() as i64;
+                (p.lo + cell).min(p.hi)
+            })
+            .collect()
+    }
+
+    /// Normalize a lattice point to [0,1]^d (surrogates operate here so
+    /// ranges of very different magnitude contribute comparably to
+    /// distances — same trick as [2]'s scaled RBF).
+    pub fn to_unit(&self, x: &[i64]) -> Vec<f64> {
+        x.iter()
+            .zip(&self.params)
+            .map(|(v, p)| {
+                if p.size() == 1 {
+                    0.5
+                } else {
+                    (v - p.lo) as f64 / (p.hi - p.lo) as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Uniform random lattice point.
+    pub fn random_point(&self, rng: &mut Rng) -> Point {
+        self.params
+            .iter()
+            .map(|p| rng.i64_in(p.lo, p.hi))
+            .collect()
+    }
+
+    /// Perturb `x`: each coordinate mutates with probability `p_mut` by a
+    /// discretized Gaussian step of relative scale `sigma` (at least ±1).
+    /// This is the local candidate generator of the Regis-Shoemaker
+    /// strategy (paper Feature 2).
+    pub fn perturb(
+        &self,
+        x: &[i64],
+        p_mut: f64,
+        sigma: f64,
+        rng: &mut Rng,
+    ) -> Point {
+        let mut out = x.to_vec();
+        for (i, p) in self.params.iter().enumerate() {
+            if rng.f64() < p_mut {
+                let scale = (p.size() as f64 * sigma).max(1.0);
+                let step = (rng.normal() * scale).round() as i64;
+                let step = if step == 0 {
+                    if rng.f64() < 0.5 {
+                        -1
+                    } else {
+                        1
+                    }
+                } else {
+                    step
+                };
+                out[i] = (x[i] + step).clamp(p.lo, p.hi);
+            }
+        }
+        if out == x {
+            // Mutations may have been clamped back at a boundary (or none
+            // fired); guarantee at least one coordinate moves if the space
+            // is not a single point.
+            let movable: Vec<usize> = (0..self.dim())
+                .filter(|&i| self.params[i].size() > 1)
+                .collect();
+            if let Some(&i) = movable
+                .get(rng.usize_below(movable.len().max(1)))
+                .filter(|_| !movable.is_empty())
+            {
+                let p = &self.params[i];
+                let mut v = out[i];
+                while v == out[i] {
+                    v = rng.i64_in(p.lo, p.hi);
+                }
+                out[i] = v;
+            }
+        }
+        out
+    }
+
+    /// Squared Euclidean distance in normalized coordinates.
+    pub fn dist2(&self, a: &[i64], b: &[i64]) -> f64 {
+        let ua = self.to_unit(a);
+        let ub = self.to_unit(b);
+        ua.iter()
+            .zip(&ub)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::forall;
+
+    fn space() -> Space {
+        Space::new(vec![
+            ParamSpec::new("layers", 1, 3),
+            ParamSpec::new("width", 0, 2),
+            ParamSpec::new("lr_idx", 0, 11),
+        ])
+    }
+
+    #[test]
+    fn cardinality_and_contains() {
+        let sp = space();
+        assert_eq!(sp.cardinality(), 3 * 3 * 12);
+        assert!(sp.contains(&[1, 0, 0]));
+        assert!(!sp.contains(&[0, 0, 0]));
+        assert!(!sp.contains(&[1, 0]));
+    }
+
+    #[test]
+    fn unit_roundtrip_centers() {
+        let sp = space();
+        forall("to_unit/from_unit roundtrip", 200, |rng| {
+            let p = sp.random_point(rng);
+            let u = sp.to_unit(&p);
+            // Re-quantizing the normalized point must recover a valid point
+            // within one cell of the original.
+            let q = sp.from_unit(&u);
+            prop_assert!(sp.contains(&q), "{q:?} out of bounds");
+            for ((a, b), spec) in p.iter().zip(&q).zip(sp.params()) {
+                prop_assert!(
+                    (a - b).abs() <= 1,
+                    "{a} vs {b} in {}",
+                    spec.name
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn perturb_stays_in_bounds_and_moves() {
+        let sp = space();
+        forall("perturb in-bounds", 300, |rng| {
+            let p = sp.random_point(rng);
+            let q = sp.perturb(&p, 0.5, 0.2, rng);
+            prop_assert!(sp.contains(&q), "{q:?}");
+            prop_assert!(p != q, "perturb must move: {p:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dist2_is_metric_like() {
+        let sp = space();
+        forall("dist2 symmetry/identity", 200, |rng| {
+            let a = sp.random_point(rng);
+            let b = sp.random_point(rng);
+            let dab = sp.dist2(&a, &b);
+            let dba = sp.dist2(&b, &a);
+            prop_assert!((dab - dba).abs() < 1e-12, "asymmetric");
+            prop_assert!(sp.dist2(&a, &a) == 0.0, "nonzero self-distance");
+            prop_assert!(dab >= 0.0, "negative");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn degenerate_single_value_param() {
+        let sp = Space::new(vec![
+            ParamSpec::new("fixed", 5, 5),
+            ParamSpec::new("free", 0, 10),
+        ]);
+        let mut rng = Rng::new(0);
+        let p = sp.random_point(&mut rng);
+        assert_eq!(p[0], 5);
+        let q = sp.perturb(&p, 1.0, 0.3, &mut rng);
+        assert_eq!(q[0], 5); // clamped back
+        assert_eq!(sp.to_unit(&p)[0], 0.5);
+    }
+}

@@ -1,0 +1,196 @@
+//! RBF ensemble from confidence intervals (paper Sec. IV, Feature 1,
+//! Eq. 8).
+//!
+//! Each evaluated θ_j carries a loss confidence interval
+//! [lower, center, upper]. The ensemble draws, per member, one of the
+//! three extremes uniformly at random per data point and fits an RBF to
+//! that realization. Candidate scoring then uses μ(θ) + α σ(θ) over the
+//! member predictions, with α ∈ [−2, 2] steering pessimistic (α > 0) vs
+//! optimistic (α < 0) treatment of prediction variability.
+
+use crate::sampling::rng::Rng;
+use crate::surrogate::rbf::RbfSurrogate;
+use crate::surrogate::Surrogate;
+use crate::uq::LossInterval;
+
+#[derive(Debug, Clone)]
+pub struct RbfEnsemble {
+    pub n_members: usize,
+    /// α of Eq. (8).
+    pub alpha: f64,
+    members: Vec<RbfSurrogate>,
+}
+
+impl RbfEnsemble {
+    pub fn new(n_members: usize, alpha: f64) -> Self {
+        assert!(n_members >= 2, "ensemble needs >= 2 members");
+        assert!(
+            (-2.0..=2.0).contains(&alpha),
+            "alpha must lie in [-2, 2] (paper Eq. 8)"
+        );
+        RbfEnsemble { n_members, alpha, members: Vec::new() }
+    }
+
+    /// Fit members to random CI-extreme realizations of the data.
+    pub fn fit(
+        &mut self,
+        xs: &[Vec<f64>],
+        intervals: &[LossInterval],
+        rng: &mut Rng,
+    ) -> bool {
+        assert_eq!(xs.len(), intervals.len());
+        self.members.clear();
+        if xs.is_empty() {
+            return false;
+        }
+        for m in 0..self.n_members {
+            let ys: Vec<f64> = intervals
+                .iter()
+                .map(|ci| {
+                    if m == 0 {
+                        // Anchor member: always the centers, so the
+                        // ensemble mean stays centered for small
+                        // ensembles.
+                        ci.center
+                    } else {
+                        match rng.usize_below(3) {
+                            0 => ci.lower(),
+                            1 => ci.center,
+                            _ => ci.upper(),
+                        }
+                    }
+                })
+                .collect();
+            let mut rbf = RbfSurrogate::new();
+            if rbf.fit(xs, &ys) {
+                self.members.push(rbf);
+            }
+        }
+        !self.members.is_empty()
+    }
+
+    pub fn n_fitted(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Ensemble mean and std at a point.
+    pub fn mean_std(&self, x: &[f64]) -> (f64, f64) {
+        assert!(!self.members.is_empty(), "predict before fit");
+        let preds: Vec<f64> =
+            self.members.iter().map(|m| m.predict(x)).collect();
+        let mean = preds.iter().sum::<f64>() / preds.len() as f64;
+        let var = preds
+            .iter()
+            .map(|p| (p - mean) * (p - mean))
+            .sum::<f64>()
+            / preds.len() as f64;
+        (mean, var.sqrt())
+    }
+
+    /// The Eq. (8) acquisition value μ + α σ (lower is better).
+    pub fn score(&self, x: &[f64]) -> f64 {
+        let (mu, sigma) = self.mean_std(x);
+        mu + self.alpha * sigma
+    }
+}
+
+impl Surrogate for RbfEnsemble {
+    fn fit(&mut self, xs: &[Vec<f64>], ys: &[f64]) -> bool {
+        // Degenerate intervals (radius 0) when used through the generic
+        // trait: every member sees the same data.
+        let intervals: Vec<LossInterval> = ys
+            .iter()
+            .map(|y| LossInterval { center: *y, radius: 0.0 })
+            .collect();
+        let mut rng = Rng::new(0xE25E);
+        RbfEnsemble::fit(self, xs, &intervals, &mut rng)
+    }
+
+    fn predict(&self, x: &[f64]) -> f64 {
+        self.mean_std(x).0
+    }
+
+    fn predict_std(&self, x: &[f64]) -> Option<f64> {
+        Some(self.mean_std(x).1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data() -> (Vec<Vec<f64>>, Vec<LossInterval>) {
+        let xs: Vec<Vec<f64>> = (0..10)
+            .map(|i| {
+                let t = i as f64 / 9.0;
+                vec![t, (t * 7.0).sin() * 0.5 + 0.5]
+            })
+            .collect();
+        let cis = xs
+            .iter()
+            .map(|x| LossInterval {
+                center: x[0] * x[0] + x[1],
+                radius: 0.2,
+            })
+            .collect();
+        (xs, cis)
+    }
+
+    #[test]
+    fn fit_and_spread() {
+        let (xs, cis) = data();
+        let mut ens = RbfEnsemble::new(8, 0.0);
+        let mut rng = Rng::new(1);
+        assert!(ens.fit(&xs, &cis, &mut rng));
+        assert!(ens.n_fitted() >= 6);
+        // Nonzero interval radius must induce member disagreement.
+        let (_, sigma) = ens.mean_std(&[0.35, 0.6]);
+        assert!(sigma > 0.0);
+    }
+
+    #[test]
+    fn zero_radius_collapses_members() {
+        let (xs, cis) = data();
+        let degenerate: Vec<LossInterval> = cis
+            .iter()
+            .map(|c| LossInterval { center: c.center, radius: 0.0 })
+            .collect();
+        let mut ens = RbfEnsemble::new(6, 1.0);
+        let mut rng = Rng::new(2);
+        assert!(ens.fit(&xs, &degenerate, &mut rng));
+        let (_, sigma) = ens.mean_std(&[0.5, 0.5]);
+        assert!(sigma < 1e-9, "sigma {sigma}");
+    }
+
+    #[test]
+    fn alpha_steers_pessimism() {
+        let (xs, cis) = data();
+        let mut rng = Rng::new(3);
+        let mut pess = RbfEnsemble::new(8, 2.0);
+        pess.fit(&xs, &cis, &mut rng);
+        let mut opt = RbfEnsemble::new(8, -2.0);
+        opt.members = pess.members.clone();
+        let q = [0.4, 0.7];
+        let (mu, sigma) = pess.mean_std(&q);
+        assert!((pess.score(&q) - (mu + 2.0 * sigma)).abs() < 1e-12);
+        assert!((opt.score(&q) - (mu - 2.0 * sigma)).abs() < 1e-12);
+        assert!(pess.score(&q) >= opt.score(&q));
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha")]
+    fn alpha_out_of_range_rejected() {
+        let _ = RbfEnsemble::new(4, 3.0);
+    }
+
+    #[test]
+    fn trait_impl_predicts_center_surface() {
+        let (xs, cis) = data();
+        let ys: Vec<f64> = cis.iter().map(|c| c.center).collect();
+        let mut ens = RbfEnsemble::new(4, 0.0);
+        assert!(Surrogate::fit(&mut ens, &xs, &ys));
+        for (x, y) in xs.iter().zip(&ys) {
+            assert!((ens.predict(x) - y).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,317 @@
+//! Gaussian-process surrogate (paper Eq. 11) with expected improvement.
+//!
+//!   m(θ) = ν + Z(θ),  Z ~ N(0, s²) with Gaussian correlation
+//!   corr(a, b) = exp(−Σ_k ϑ (a_k − b_k)²)
+//!
+//! ν and s² follow the standard kriging closed forms ([2] Eqs. 7-13):
+//! ν̂ = (1ᵀK⁻¹y)/(1ᵀK⁻¹1), s̄² per-point from the correlation vector. The
+//! length-scale ϑ is set by the median-distance heuristic and refined by a
+//! small 1-D grid on the profile log-likelihood; a nugget keeps the
+//! covariance SPD under repeated stochastic evaluations of the same θ.
+
+use crate::linalg::{cholesky, cholesky_solve, forward_solve, Mat};
+use crate::surrogate::Surrogate;
+
+#[derive(Debug, Clone)]
+pub struct GpSurrogate {
+    pub nugget: f64,
+    theta: f64,
+    xs: Vec<Vec<f64>>,
+    l: Option<Mat>,
+    alpha: Vec<f64>, // K^{-1} (y - nu)
+    nu: f64,
+    sigma2: f64,
+    fitted: bool,
+}
+
+impl Default for GpSurrogate {
+    fn default() -> Self {
+        GpSurrogate {
+            nugget: 1e-6,
+            theta: 1.0,
+            xs: Vec::new(),
+            l: None,
+            alpha: Vec::new(),
+            nu: 0.0,
+            sigma2: 1.0,
+            fitted: false,
+        }
+    }
+}
+
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+impl GpSurrogate {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn corr(&self, a: &[f64], b: &[f64]) -> f64 {
+        (-self.theta * dist2(a, b)).exp()
+    }
+
+    fn build_k(&self, xs: &[Vec<f64>]) -> Mat {
+        let n = xs.len();
+        let mut k = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let c = self.corr(&xs[i], &xs[j]);
+                k[(i, j)] = c;
+                k[(j, i)] = c;
+            }
+            k[(i, i)] += self.nugget;
+        }
+        k
+    }
+
+    /// Negative profile log-likelihood for length-scale selection.
+    fn neg_loglik(&mut self, xs: &[Vec<f64>], ys: &[f64], theta: f64) -> f64 {
+        self.theta = theta;
+        let n = xs.len();
+        let k = self.build_k(xs);
+        let Some(l) = cholesky(&k) else {
+            return f64::INFINITY;
+        };
+        let ones = vec![1.0; n];
+        let kinv_y = cholesky_solve(&l, ys);
+        let kinv_1 = cholesky_solve(&l, &ones);
+        let nu = ys.iter().zip(&kinv_1).map(|(y, a)| y * a).sum::<f64>()
+            / kinv_1.iter().sum::<f64>().max(1e-300);
+        let resid: Vec<f64> = ys.iter().map(|y| y - nu).collect();
+        let kinv_r: Vec<f64> = kinv_y
+            .iter()
+            .zip(&kinv_1)
+            .map(|(a, b)| a - nu * b)
+            .collect();
+        let sigma2 = resid
+            .iter()
+            .zip(&kinv_r)
+            .map(|(r, a)| r * a)
+            .sum::<f64>()
+            / n as f64;
+        if sigma2 <= 0.0 {
+            return f64::INFINITY;
+        }
+        let logdet: f64 =
+            (0..n).map(|i| l[(i, i)].ln()).sum::<f64>() * 2.0;
+        0.5 * (n as f64 * sigma2.ln() + logdet)
+    }
+}
+
+impl Surrogate for GpSurrogate {
+    fn fit(&mut self, xs: &[Vec<f64>], ys: &[f64]) -> bool {
+        assert_eq!(xs.len(), ys.len());
+        self.fitted = false;
+        if xs.is_empty() {
+            return false;
+        }
+        let n = xs.len();
+
+        // Median-distance heuristic as the center of the theta grid.
+        let mut d2s: Vec<f64> = Vec::new();
+        for i in 0..n {
+            for j in 0..i {
+                let d = dist2(&xs[i], &xs[j]);
+                if d > 1e-15 {
+                    d2s.push(d);
+                }
+            }
+        }
+        let med = if d2s.is_empty() {
+            1.0
+        } else {
+            d2s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            d2s[d2s.len() / 2]
+        };
+        let center = 1.0 / med.max(1e-9);
+
+        // Profile-likelihood grid around the heuristic.
+        let mut best = (f64::INFINITY, center);
+        for mult in [0.1, 0.3, 1.0, 3.0, 10.0] {
+            let th = center * mult;
+            let nll = self.neg_loglik(xs, ys, th);
+            if nll < best.0 {
+                best = (nll, th);
+            }
+        }
+        self.theta = best.1;
+
+        let k = self.build_k(xs);
+        let Some(l) = cholesky(&k) else {
+            return false;
+        };
+        let ones = vec![1.0; n];
+        let kinv_y = cholesky_solve(&l, ys);
+        let kinv_1 = cholesky_solve(&l, &ones);
+        let denom = kinv_1.iter().sum::<f64>();
+        if denom.abs() < 1e-300 {
+            return false;
+        }
+        self.nu =
+            ys.iter().zip(&kinv_1).map(|(y, a)| y * a).sum::<f64>() / denom;
+        self.alpha = kinv_y
+            .iter()
+            .zip(&kinv_1)
+            .map(|(a, b)| a - self.nu * b)
+            .collect();
+        let resid: Vec<f64> = ys.iter().map(|y| y - self.nu).collect();
+        self.sigma2 = resid
+            .iter()
+            .zip(&self.alpha)
+            .map(|(r, a)| r * a)
+            .sum::<f64>()
+            .max(1e-12)
+            / n as f64;
+        self.xs = xs.to_vec();
+        self.l = Some(l);
+        self.fitted = true;
+        true
+    }
+
+    fn predict(&self, x: &[f64]) -> f64 {
+        assert!(self.fitted, "predict before fit");
+        let kvec: Vec<f64> =
+            self.xs.iter().map(|xi| self.corr(xi, x)).collect();
+        self.nu
+            + kvec
+                .iter()
+                .zip(&self.alpha)
+                .map(|(k, a)| k * a)
+                .sum::<f64>()
+    }
+
+    fn predict_std(&self, x: &[f64]) -> Option<f64> {
+        assert!(self.fitted, "predict_std before fit");
+        let l = self.l.as_ref()?;
+        let kvec: Vec<f64> =
+            self.xs.iter().map(|xi| self.corr(xi, x)).collect();
+        // var = sigma2 * (1 + nugget - k^T K^-1 k), ignoring the small
+        // correction for estimating nu.
+        let v = forward_solve(l, &kvec);
+        let kk: f64 = v.iter().map(|a| a * a).sum();
+        let var = self.sigma2 * (1.0 + self.nugget - kk);
+        Some(var.max(0.0).sqrt())
+    }
+}
+
+/// Expected improvement (Jones et al. 1998) for minimization: the
+/// acquisition the paper maximizes with a genetic algorithm.
+pub fn expected_improvement(pred: f64, std: f64, best: f64) -> f64 {
+    if std <= 1e-14 {
+        return (best - pred).max(0.0);
+    }
+    let z = (best - pred) / std;
+    // max(0): the closed form can go epsilon-negative in floating point
+    // for deeply hopeless points (z << 0).
+    ((best - pred) * normal_cdf(z) + std * normal_pdf(z)).max(0.0)
+}
+
+fn normal_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Φ via the Abramowitz-Stegun 7.1.26 erf approximation (|err| < 1.5e-7).
+fn normal_cdf(z: f64) -> f64 {
+    let x = z / std::f64::consts::SQRT_2;
+    let t = 1.0 / (1.0 + 0.3275911 * x.abs());
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+            - 0.284496736)
+            * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    let erf = if x >= 0.0 { y } else { -y };
+    0.5 * (1.0 + erf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::sampling::rng::Rng;
+    use crate::util::prop::forall;
+
+    fn toy(n: usize, rng: &mut Rng) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let xs: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.f64(), rng.f64()]).collect();
+        let ys = xs
+            .iter()
+            .map(|x| (x[0] - 0.5).powi(2) + 0.3 * x[1])
+            .collect();
+        (xs, ys)
+    }
+
+    #[test]
+    fn gp_interpolates_with_small_nugget() {
+        forall("GP near-interpolation", 20, |rng| {
+            let (xs, ys) = toy(12, rng);
+            let mut gp = GpSurrogate::new();
+            if !gp.fit(&xs, &ys) {
+                return Ok(());
+            }
+            for (x, y) in xs.iter().zip(&ys) {
+                let p = gp.predict(x);
+                prop_assert!((p - y).abs() < 1e-2, "{p} vs {y}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gp_std_small_at_data_large_far_away() {
+        let mut rng = Rng::new(0);
+        let (xs, ys) = toy(15, &mut rng);
+        let mut gp = GpSurrogate::new();
+        assert!(gp.fit(&xs, &ys));
+        let at_data = gp.predict_std(&xs[0]).unwrap();
+        let far = gp.predict_std(&[10.0, 10.0]).unwrap();
+        assert!(
+            at_data < far * 0.5,
+            "at_data {at_data} vs far {far}"
+        );
+    }
+
+    #[test]
+    fn gp_handles_duplicate_points_via_nugget() {
+        let xs = vec![
+            vec![0.2, 0.2],
+            vec![0.2, 0.2],
+            vec![0.8, 0.3],
+            vec![0.5, 0.9],
+        ];
+        let ys = vec![1.0, 1.2, 2.0, 3.0];
+        let mut gp = GpSurrogate::new();
+        assert!(gp.fit(&xs, &ys), "nugget must absorb duplicates");
+        let p = gp.predict(&[0.2, 0.2]);
+        assert!((0.8..1.4).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn ei_properties() {
+        // Zero std: EI is the plain improvement.
+        assert_eq!(expected_improvement(1.0, 0.0, 2.0), 1.0);
+        assert_eq!(expected_improvement(3.0, 0.0, 2.0), 0.0);
+        // Positive std: EI > deterministic improvement, and EI grows
+        // with uncertainty.
+        let e1 = expected_improvement(2.5, 0.1, 2.0);
+        let e2 = expected_improvement(2.5, 1.0, 2.0);
+        assert!(e1 >= 0.0 && e2 > e1);
+        // Monotone in predicted value.
+        assert!(
+            expected_improvement(1.5, 0.5, 2.0)
+                > expected_improvement(2.5, 0.5, 2.0)
+        );
+    }
+
+    #[test]
+    fn normal_cdf_sane() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!(normal_cdf(5.0) > 0.9999);
+        assert!(normal_cdf(-5.0) < 0.0001);
+        let d = normal_cdf(1.0) - 0.8413447;
+        assert!(d.abs() < 1e-5, "{d}");
+    }
+}

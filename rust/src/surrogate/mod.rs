@@ -1,0 +1,31 @@
+//! Surrogate models (paper Sec. IV, Feature 2).
+//!
+//! Two families, matching the paper: cubic RBF with linear polynomial tail
+//! (Eq. 10) and a Gaussian process (Eq. 11) with expected improvement.
+//! The `ensemble` module implements the RBF-ensemble-from-confidence-
+//! intervals acquisition of Eq. (8).
+//!
+//! Surrogates operate in *normalized* coordinates ([0,1]^d via
+//! `Space::to_unit`) so heterogeneous integer ranges contribute comparably
+//! to distances.
+
+pub mod ensemble;
+pub mod gp;
+pub mod rbf;
+
+/// Common fit/predict interface over normalized points.
+pub trait Surrogate {
+    /// Fit to (normalized point, observed value) pairs. Returns false if
+    /// the underlying linear system was singular (caller should fall back
+    /// to exploration).
+    fn fit(&mut self, xs: &[Vec<f64>], ys: &[f64]) -> bool;
+
+    /// Predict the objective at a normalized point.
+    fn predict(&self, x: &[f64]) -> f64;
+
+    /// Predictive standard deviation, if the model provides one
+    /// (GP: yes; single RBF: no).
+    fn predict_std(&self, _x: &[f64]) -> Option<f64> {
+        None
+    }
+}

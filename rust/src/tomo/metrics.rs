@@ -1,0 +1,168 @@
+//! Image quality metrics of Table I / Fig. 10: per-pixel MSE, PSNR, and
+//! SSIM (uniform 8x8 windows, standard constants; SSIM characterizes
+//! structural rather than absolute error — paper §V-B).
+
+use crate::tomo::Image;
+
+/// Mean squared error.
+pub fn mse(a: &Image, b: &Image) -> f64 {
+    assert_eq!(a.data.len(), b.data.len());
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.data.len() as f64
+}
+
+/// Peak signal-to-noise ratio in dB, with the peak taken from the
+/// reference image (floor 1.0 to avoid degenerate blanks).
+pub fn psnr(reference: &Image, test: &Image) -> f64 {
+    let peak = reference.max().max(1.0) as f64;
+    let e = mse(reference, test);
+    if e == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (peak * peak / e).log10()
+}
+
+/// Mean SSIM over dense 8x8 windows (stride 4), constants
+/// C1=(0.01·L)², C2=(0.03·L)² with L = reference dynamic range.
+pub fn ssim(reference: &Image, test: &Image) -> f64 {
+    assert_eq!(reference.rows, test.rows);
+    assert_eq!(reference.cols, test.cols);
+    let l = {
+        let lo = reference.data.iter().copied().fold(f32::MAX, f32::min);
+        ((reference.max() - lo) as f64).max(1e-6)
+    };
+    let c1 = (0.01 * l).powi(2);
+    let c2 = (0.03 * l).powi(2);
+
+    let win = 8usize.min(reference.rows).min(reference.cols);
+    let stride = (win / 2).max(1);
+    let mut total = 0.0;
+    let mut count = 0usize;
+
+    let mut r = 0;
+    while r + win <= reference.rows {
+        let mut c = 0;
+        while c + win <= reference.cols {
+            let (mut ma, mut mb) = (0.0f64, 0.0f64);
+            for i in r..r + win {
+                for j in c..c + win {
+                    ma += reference.at(i, j) as f64;
+                    mb += test.at(i, j) as f64;
+                }
+            }
+            let n = (win * win) as f64;
+            ma /= n;
+            mb /= n;
+            let (mut va, mut vb, mut cov) = (0.0f64, 0.0f64, 0.0f64);
+            for i in r..r + win {
+                for j in c..c + win {
+                    let da = reference.at(i, j) as f64 - ma;
+                    let db = test.at(i, j) as f64 - mb;
+                    va += da * da;
+                    vb += db * db;
+                    cov += da * db;
+                }
+            }
+            va /= n - 1.0;
+            vb /= n - 1.0;
+            cov /= n - 1.0;
+            let s = ((2.0 * ma * mb + c1) * (2.0 * cov + c2))
+                / ((ma * ma + mb * mb + c1) * (va + vb + c2));
+            total += s;
+            count += 1;
+            c += stride;
+        }
+        r += stride;
+    }
+    if count == 0 {
+        1.0
+    } else {
+        total / count as f64
+    }
+}
+
+/// Absolute-error map (Fig. 11).
+pub fn error_map(reference: &Image, test: &Image) -> Image {
+    let mut out = reference.clone();
+    for (o, t) in out.data.iter_mut().zip(&test.data) {
+        *o = (*o - t).abs();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::rng::Rng;
+    use crate::tomo::phantom::{generate, PhantomConfig};
+
+    fn phantom(seed: u64) -> Image {
+        let cfg = PhantomConfig { size: 64, ..Default::default() };
+        generate(&cfg, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn identical_images_are_perfect() {
+        let a = phantom(0);
+        assert_eq!(mse(&a, &a), 0.0);
+        assert_eq!(psnr(&a, &a), f64::INFINITY);
+        let s = ssim(&a, &a);
+        assert!((s - 1.0).abs() < 1e-9, "ssim {s}");
+    }
+
+    #[test]
+    fn noisier_is_worse_in_all_metrics() {
+        let a = phantom(1);
+        let mut rng = Rng::new(9);
+        let perturb = |img: &Image, sigma: f32, rng: &mut Rng| {
+            let mut out = img.clone();
+            for v in out.data.iter_mut() {
+                *v += sigma * rng.normal() as f32;
+            }
+            out
+        };
+        let slight = perturb(&a, 0.02, &mut rng);
+        let heavy = perturb(&a, 0.3, &mut rng);
+        assert!(mse(&a, &slight) < mse(&a, &heavy));
+        assert!(psnr(&a, &slight) > psnr(&a, &heavy));
+        assert!(ssim(&a, &slight) > ssim(&a, &heavy));
+    }
+
+    #[test]
+    fn ssim_in_valid_range() {
+        let a = phantom(2);
+        let b = phantom(3);
+        let s = ssim(&a, &b);
+        assert!((-1.0..=1.0).contains(&s), "ssim {s}");
+    }
+
+    #[test]
+    fn ssim_penalizes_structure_loss_more_than_offset() {
+        // A constant offset keeps structure: SSIM stays high while MSE is
+        // large. Shuffled pixels destroy structure: SSIM collapses.
+        let a = phantom(4);
+        let mut offset = a.clone();
+        for v in offset.data.iter_mut() {
+            *v += 0.2;
+        }
+        let mut shuffled = a.clone();
+        Rng::new(5).shuffle(&mut shuffled.data);
+        assert!(ssim(&a, &offset) > ssim(&a, &shuffled) + 0.2);
+    }
+
+    #[test]
+    fn error_map_is_absolute_difference() {
+        let a = phantom(6);
+        let mut b = a.clone();
+        b.data[0] += 0.5;
+        b.data[1] -= 0.25;
+        let e = error_map(&a, &b);
+        assert!((e.data[0] - 0.5).abs() < 1e-6);
+        assert!((e.data[1] - 0.25).abs() < 1e-6);
+        assert_eq!(e.data[2], 0.0);
+    }
+}

@@ -1,0 +1,86 @@
+//! Computed-tomography substrate (paper §V).
+//!
+//! Everything the CT case study needs, built from scratch: phantom
+//! generation (XDesign substitute), a parallel-beam projector pair
+//! (forward `A`, adjoint `Aᵀ`), Poisson measurement noise, the SIRT
+//! reconstruction of Gilbert 1972 (the update equation quoted in §V-A),
+//! and the image metrics (MSE / PSNR / SSIM) of Table I.
+
+pub mod metrics;
+pub mod noise;
+pub mod phantom;
+pub mod radon;
+pub mod sirt;
+
+/// Dense 2-D image, row-major `(rows, cols)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Image {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Image {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Image { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(f32::MIN, f32::max)
+    }
+
+    /// Write as binary PGM (P5) for quick visual inspection of Fig. 10/11
+    /// style outputs; values are min-max scaled to 0..255.
+    pub fn write_pgm(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let lo = self.data.iter().copied().fold(f32::MAX, f32::min);
+        let hi = self.max();
+        let span = (hi - lo).max(1e-12);
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "P5\n{} {}\n255", self.cols, self.rows)?;
+        let bytes: Vec<u8> = self
+            .data
+            .iter()
+            .map(|v| (((v - lo) / span) * 255.0).round() as u8)
+            .collect();
+        f.write_all(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_indexing() {
+        let mut im = Image::zeros(2, 3);
+        *im.at_mut(1, 2) = 5.0;
+        assert_eq!(im.at(1, 2), 5.0);
+        assert_eq!(im.at(0, 0), 0.0);
+        assert_eq!(im.max(), 5.0);
+    }
+
+    #[test]
+    fn pgm_roundtrip_header() {
+        let im = Image::zeros(4, 6);
+        let p = std::env::temp_dir().join("hyppo_tomo_test.pgm");
+        im.write_pgm(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P5\n6 4\n255\n"));
+        assert_eq!(bytes.len(), 11 + 24);
+        std::fs::remove_file(&p).ok();
+    }
+}

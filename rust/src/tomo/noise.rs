@@ -1,0 +1,73 @@
+//! Poisson measurement noise (paper §V-A: "Poisson noise is added").
+//!
+//! Photon-counting model: the clean sinogram is scaled to an expected
+//! count level, Poisson-sampled, and rescaled. Higher `counts_per_unit`
+//! means higher dose ⇒ lower relative noise.
+
+use crate::sampling::rng::Rng;
+use crate::tomo::radon::Sinogram;
+
+/// Apply Poisson noise with the given expected counts per unit intensity.
+pub fn poisson_noise(
+    sino: &Sinogram,
+    counts_per_unit: f64,
+    rng: &mut Rng,
+) -> Sinogram {
+    assert!(counts_per_unit > 0.0);
+    let mut out = sino.clone();
+    for v in out.data.iter_mut() {
+        let lambda = (*v as f64).max(0.0) * counts_per_unit;
+        *v = (rng.poisson(lambda) as f64 / counts_per_unit) as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tomo::Image;
+
+    #[test]
+    fn noise_preserves_mean_roughly() {
+        let sino = Image {
+            rows: 4,
+            cols: 64,
+            data: vec![2.0; 256],
+        };
+        let mut rng = Rng::new(0);
+        let noisy = poisson_noise(&sino, 100.0, &mut rng);
+        let mean: f32 = noisy.data.iter().sum::<f32>() / 256.0;
+        assert!((mean - 2.0).abs() < 0.05, "mean {mean}");
+        // And actually perturbs values.
+        assert!(noisy.data.iter().any(|v| (*v - 2.0).abs() > 1e-6));
+    }
+
+    #[test]
+    fn higher_dose_means_less_noise() {
+        let sino = Image { rows: 8, cols: 64, data: vec![1.0; 512] };
+        let mut rng = Rng::new(1);
+        let spread = |counts: f64, rng: &mut Rng| {
+            let noisy = poisson_noise(&sino, counts, rng);
+            let m: f64 =
+                noisy.data.iter().map(|v| *v as f64).sum::<f64>() / 512.0;
+            (noisy
+                .data
+                .iter()
+                .map(|v| (*v as f64 - m).powi(2))
+                .sum::<f64>()
+                / 512.0)
+                .sqrt()
+        };
+        let low_dose = spread(10.0, &mut rng);
+        let high_dose = spread(10_000.0, &mut rng);
+        assert!(high_dose < low_dose * 0.2, "{high_dose} vs {low_dose}");
+    }
+
+    #[test]
+    fn zero_input_stays_zero() {
+        let sino = Image { rows: 2, cols: 8, data: vec![0.0; 16] };
+        let mut rng = Rng::new(2);
+        let noisy = poisson_noise(&sino, 1000.0, &mut rng);
+        assert!(noisy.data.iter().all(|v| *v == 0.0));
+    }
+}

@@ -1,0 +1,145 @@
+//! SIRT — Simultaneous Iterative Reconstruction Technique (Gilbert 1972).
+//!
+//! Implements the update quoted in paper §V-A:
+//!
+//! ```text
+//! x_{k+1} = x_k + C Aᵀ R (b − A x_k)
+//! ```
+//!
+//! where `C` and `R` are diagonal matrices holding the inverse column and
+//! row sums of `A`. With this preconditioning the iteration is a
+//! non-expansive map and the projection residual is non-increasing — a
+//! property the tests assert.
+
+use crate::tomo::radon::{Geometry, Sinogram};
+use crate::tomo::Image;
+
+#[derive(Debug, Clone)]
+pub struct SirtConfig {
+    pub iterations: usize,
+    /// Clamp negatives after each update (physical prior).
+    pub nonneg: bool,
+}
+
+impl Default for SirtConfig {
+    fn default() -> Self {
+        SirtConfig { iterations: 100, nonneg: true }
+    }
+}
+
+/// Reconstruction result with the residual trace (for convergence tests
+/// and the §Perf bench).
+#[derive(Debug, Clone)]
+pub struct SirtResult {
+    pub image: Image,
+    pub residuals: Vec<f64>,
+}
+
+/// Run SIRT on measurements `b` under geometry `g`.
+///
+/// Internally builds a precomputed `Projector` once — the per-iteration
+/// forward/back projections are the entire cost of SIRT, and the table
+/// amortizes after the first iteration (§Perf: 3.2x on 10 iterations).
+pub fn reconstruct(g: &Geometry, b: &Sinogram, cfg: &SirtConfig) -> SirtResult {
+    let proj = crate::tomo::radon::Projector::new(g.clone());
+    let r_inv = inv(&proj.forward(&ones_image(g.size)).data);
+    let c_inv = inv(&g.col_sums().data);
+
+    let mut x = Image::zeros(g.size, g.size);
+    let mut residuals = Vec::with_capacity(cfg.iterations);
+
+    for _ in 0..cfg.iterations {
+        let ax = proj.forward(&x);
+        // r = R (b - A x)
+        let mut resid = Image::zeros(g.n_angles, g.n_det);
+        let mut res_norm = 0.0f64;
+        for i in 0..resid.data.len() {
+            let d = b.data[i] - ax.data[i];
+            res_norm += (d as f64) * (d as f64);
+            resid.data[i] = d * r_inv[i];
+        }
+        residuals.push(res_norm.sqrt());
+        let update = proj.back(&resid);
+        for i in 0..x.data.len() {
+            x.data[i] += update.data[i] * c_inv[i];
+            if cfg.nonneg && x.data[i] < 0.0 {
+                x.data[i] = 0.0;
+            }
+        }
+    }
+    SirtResult { image: x, residuals }
+}
+
+fn ones_image(size: usize) -> Image {
+    Image { rows: size, cols: size, data: vec![1.0; size * size] }
+}
+
+fn inv(sums: &[f32]) -> Vec<f32> {
+    sums.iter()
+        .map(|s| if *s > 1e-8 { 1.0 / s } else { 0.0 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::rng::Rng;
+    use crate::tomo::phantom::{generate, PhantomConfig};
+
+    fn small_case() -> (Geometry, Image) {
+        let cfg = PhantomConfig { size: 32, ..Default::default() };
+        let mut rng = Rng::new(3);
+        let img = generate(&cfg, &mut rng);
+        (Geometry::new(12, 48, 32), img)
+    }
+
+    #[test]
+    fn residual_nonincreasing_on_consistent_data() {
+        let (g, img) = small_case();
+        let b = g.forward(&img);
+        let res = reconstruct(&g, &b, &SirtConfig { iterations: 30, nonneg: false });
+        for w in res.residuals.windows(2) {
+            assert!(
+                w[1] <= w[0] * 1.0001,
+                "residual increased: {} -> {}",
+                w[0],
+                w[1]
+            );
+        }
+        // And substantially decreased overall.
+        assert!(res.residuals.last().unwrap() < &(res.residuals[0] * 0.2));
+    }
+
+    #[test]
+    fn reconstruction_approaches_phantom() {
+        let (g, img) = small_case();
+        let b = g.forward(&img);
+        let res = reconstruct(&g, &b, &SirtConfig { iterations: 80, nonneg: true });
+        let mse: f64 = img
+            .data
+            .iter()
+            .zip(&res.image.data)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / img.data.len() as f64;
+        // 12 angles over a 32px image is mildly underdetermined; SIRT
+        // should still get close on a consistent system.
+        assert!(mse < 5e-3, "mse {mse}");
+    }
+
+    #[test]
+    fn nonneg_clamp_respected() {
+        let (g, img) = small_case();
+        let b = g.forward(&img);
+        let res = reconstruct(&g, &b, &SirtConfig { iterations: 10, nonneg: true });
+        assert!(res.image.data.iter().all(|v| *v >= 0.0));
+    }
+
+    #[test]
+    fn zero_measurements_give_zero_image() {
+        let g = Geometry::new(8, 48, 32);
+        let b = Image::zeros(8, 48);
+        let res = reconstruct(&g, &b, &SirtConfig::default());
+        assert!(res.image.data.iter().all(|v| *v == 0.0));
+    }
+}

@@ -1,0 +1,9 @@
+//! Uncertainty quantification (paper Sec. IV, Feature 1).
+//!
+//! Implements the weighted MC-dropout estimators of Eqs. (4)-(7), the
+//! confidence interval over the outer loss ℓ₁, the regulated loss of
+//! Eq. (9), and the robust statistics (median / MAD) used by Fig. 9.
+
+pub mod stats;
+
+pub use stats::*;

@@ -1,0 +1,276 @@
+//! Estimators for prediction mean/variance and loss variability.
+//!
+//! Notation follows the paper: N trained models ("trials") of the same
+//! architecture θ, T MC-dropout passes per trained model, weights
+//! w_T (trained) and w_D (dropout) with w_T + w_D = 1.
+
+/// Weights for the trained-vs-dropout average of Eqs. (6)-(7).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UqWeights {
+    pub w_trained: f64,
+    pub w_dropout: f64,
+}
+
+impl UqWeights {
+    /// Paper default: w_T = w_D = 0.5.
+    pub fn default_paper() -> Self {
+        UqWeights { w_trained: 0.5, w_dropout: 0.5 }
+    }
+
+    pub fn new(w_trained: f64, w_dropout: f64) -> Self {
+        assert!(w_trained >= 0.0, "w_T must be >= 0");
+        assert!(w_dropout > 0.0, "w_D must be > 0 (paper Sec. IV)");
+        let s = w_trained + w_dropout;
+        assert!((s - 1.0).abs() < 1e-9, "w_T + w_D must equal 1");
+        UqWeights { w_trained, w_dropout }
+    }
+}
+
+/// All predictions gathered for one architecture θ on a fixed input batch:
+/// `trained[i]` is model i's no-dropout output, `dropout[i][t]` its t-th
+/// MC-dropout pass. Each inner `Vec<f64>` is the flattened output vector.
+#[derive(Debug, Clone, Default)]
+pub struct PredictionSet {
+    pub trained: Vec<Vec<f64>>,
+    pub dropout: Vec<Vec<Vec<f64>>>,
+}
+
+impl PredictionSet {
+    pub fn n_trained(&self) -> usize {
+        self.trained.len()
+    }
+
+    pub fn n_dropout_total(&self) -> usize {
+        self.dropout.iter().map(Vec::len).sum()
+    }
+
+    fn dim(&self) -> usize {
+        self.trained
+            .first()
+            .map(Vec::len)
+            .or_else(|| {
+                self.dropout
+                    .first()
+                    .and_then(|d| d.first())
+                    .map(Vec::len)
+            })
+            .unwrap_or(0)
+    }
+
+    /// μ_pred (Eq. 6): weighted mean of trained and dropout outputs.
+    pub fn mu_pred(&self, w: UqWeights) -> Vec<f64> {
+        let d = self.dim();
+        let n = self.n_trained().max(1) as f64;
+        let nt = self.n_dropout_total().max(1) as f64;
+        let mut mu = vec![0.0; d];
+        if w.w_trained > 0.0 {
+            for y in &self.trained {
+                for (m, v) in mu.iter_mut().zip(y) {
+                    *m += w.w_trained / n * v;
+                }
+            }
+        }
+        for per_model in &self.dropout {
+            for y in per_model {
+                for (m, v) in mu.iter_mut().zip(y) {
+                    *m += w.w_dropout / nt * v;
+                }
+            }
+        }
+        mu
+    }
+
+    /// V_model (Eq. 7): weighted elementwise variance around μ_pred.
+    pub fn v_model(&self, w: UqWeights) -> Vec<f64> {
+        let mu = self.mu_pred(w);
+        let d = self.dim();
+        let n = self.n_trained().max(1) as f64;
+        let nt = self.n_dropout_total().max(1) as f64;
+        let mut var = vec![0.0; d];
+        if w.w_trained > 0.0 {
+            for y in &self.trained {
+                for ((v, m), yi) in var.iter_mut().zip(&mu).zip(y) {
+                    let e = m - yi;
+                    *v += w.w_trained / n * e * e;
+                }
+            }
+        }
+        for per_model in &self.dropout {
+            for y in per_model {
+                for ((v, m), yi) in var.iter_mut().zip(&mu).zip(y) {
+                    let e = m - yi;
+                    *v += w.w_dropout / nt * e * e;
+                }
+            }
+        }
+        var
+    }
+}
+
+/// Confidence interval for the outer loss ℓ₁ of one architecture:
+/// center = ℓ₁ computed from μ_pred, radius = std-dev of the N + NT
+/// per-model loss values (paper Sec. IV, Feature 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LossInterval {
+    pub center: f64,
+    pub radius: f64,
+}
+
+impl LossInterval {
+    pub fn lower(&self) -> f64 {
+        self.center - self.radius
+    }
+    pub fn upper(&self) -> f64 {
+        self.center + self.radius
+    }
+}
+
+/// Build the ℓ₁ confidence interval from the loss computed on μ_pred and
+/// the individual per-model / per-dropout-pass losses.
+pub fn loss_interval(center_loss: f64, member_losses: &[f64]) -> LossInterval {
+    LossInterval { center: center_loss, radius: stddev(member_losses) }
+}
+
+/// Regulated loss ℓ_reg (Eq. 9): ℓ₁ + γ Σ_d g(V_model(x^d)) with the
+/// default `g = ||max(0, ·)||₂` the paper suggests.
+pub fn regulated_loss(ell1: f64, v_model_sum_g: f64, gamma: f64) -> f64 {
+    assert!(gamma >= 0.0);
+    ell1 + gamma * v_model_sum_g
+}
+
+/// The default g: Euclidean norm of the positive part.
+pub fn g_norm_relu(v: &[f64]) -> f64 {
+    v.iter().map(|x| x.max(0.0).powi(2)).sum::<f64>().sqrt()
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation (paper uses the plain σ of the member
+/// losses as the CI radius).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64)
+        .sqrt()
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Median absolute deviation (Fig. 9's variability axis).
+pub fn mad(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let m = median(xs);
+    let dev: Vec<f64> = xs.iter().map(|x| (x - m).abs()).collect();
+    median(&dev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set() -> PredictionSet {
+        PredictionSet {
+            trained: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+            dropout: vec![
+                vec![vec![1.0, 1.0], vec![2.0, 2.0]],
+                vec![vec![3.0, 3.0], vec![4.0, 4.0]],
+            ],
+        }
+    }
+
+    #[test]
+    fn mu_pred_weighted_average() {
+        // trained mean = [2,3]; dropout mean = [2.5,2.5]
+        let mu = set().mu_pred(UqWeights::default_paper());
+        assert!((mu[0] - 2.25).abs() < 1e-12);
+        assert!((mu[1] - 2.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dropout_only_when_wt_zero() {
+        let w = UqWeights::new(0.0, 1.0);
+        let mu = set().mu_pred(w);
+        assert!((mu[0] - 2.5).abs() < 1e-12);
+        assert!((mu[1] - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn v_model_zero_for_constant_predictions() {
+        let s = PredictionSet {
+            trained: vec![vec![5.0]; 3],
+            dropout: vec![vec![vec![5.0]; 4]; 3],
+        };
+        let v = s.v_model(UqWeights::default_paper());
+        assert!(v[0].abs() < 1e-12);
+    }
+
+    #[test]
+    fn v_model_positive_and_scales() {
+        let v = set().v_model(UqWeights::default_paper());
+        assert!(v.iter().all(|x| *x > 0.0));
+        // More weight on trained (whose dim-1 spread is 1.0 vs dropout 1.0)
+        // keeps variance positive either way.
+        let v2 = set().v_model(UqWeights::new(0.2, 0.8));
+        assert!(v2.iter().all(|x| *x > 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "w_D")]
+    fn weights_validate_wd_positive() {
+        let _ = UqWeights::new(1.0, 0.0);
+    }
+
+    #[test]
+    fn interval_bounds() {
+        let ci = loss_interval(10.0, &[9.0, 10.0, 11.0]);
+        assert_eq!(ci.center, 10.0);
+        assert!(ci.radius > 0.0);
+        assert!(ci.lower() < ci.center && ci.center < ci.upper());
+    }
+
+    #[test]
+    fn median_and_mad() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(mad(&[1.0, 1.0, 2.0, 2.0, 4.0]), 1.0);
+        assert!(median(&[]).is_nan());
+    }
+
+    #[test]
+    fn stddev_basics() {
+        assert_eq!(stddev(&[2.0]), 0.0);
+        let s = stddev(&[1.0, 3.0]);
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn regulated_loss_monotone_in_gamma() {
+        let g = g_norm_relu(&[0.5, -1.0, 0.5]);
+        assert!((g - (0.5f64.powi(2) * 2.0).sqrt()).abs() < 1e-12);
+        let l0 = regulated_loss(1.0, g, 0.0);
+        let l1 = regulated_loss(1.0, g, 10.0);
+        assert_eq!(l0, 1.0);
+        assert!(l1 > l0);
+    }
+}

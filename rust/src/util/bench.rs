@@ -1,0 +1,126 @@
+//! Micro-benchmark harness substrate (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are declared with `harness = false` and drive this
+//! module: warmup, adaptive iteration count targeting a fixed measurement
+//! window, and median/mean/p95 reporting. Good enough to rank hot-path
+//! changes during the §Perf pass; absolute numbers land in EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} iters  mean {:>12}  median {:>12}  p95 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark `f`, automatically choosing the per-sample iteration count so
+/// that total measurement time is ~`budget`.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchStats {
+    // Warmup + calibration: run until we know the cost of one call.
+    let cal_start = Instant::now();
+    let mut cal_iters = 0u64;
+    while cal_start.elapsed() < Duration::from_millis(100) {
+        f();
+        cal_iters += 1;
+        if cal_iters > 1_000_000 {
+            break;
+        }
+    }
+    let per_call =
+        cal_start.elapsed().as_nanos() as f64 / cal_iters.max(1) as f64;
+
+    const SAMPLES: usize = 20;
+    let per_sample_budget =
+        budget.as_nanos() as f64 / SAMPLES as f64;
+    let iters_per_sample =
+        ((per_sample_budget / per_call.max(1.0)) as u64).clamp(1, 10_000_000);
+
+    let mut samples = Vec::with_capacity(SAMPLES);
+    for _ in 0..SAMPLES {
+        let t = Instant::now();
+        for _ in 0..iters_per_sample {
+            f();
+        }
+        samples.push(
+            t.elapsed().as_nanos() as f64 / iters_per_sample as f64,
+        );
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters: iters_per_sample * SAMPLES as u64,
+        mean_ns: mean,
+        median_ns: samples[samples.len() / 2],
+        p95_ns: samples
+            [((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+        min_ns: samples[0],
+    };
+    stats.report();
+    stats
+}
+
+/// Convenience: benchmark with the default 1s budget.
+pub fn bench1<F: FnMut()>(name: &str, f: F) -> BenchStats {
+    bench(name, Duration::from_secs(1), f)
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let s = bench("noop-ish", Duration::from_millis(50), || {
+            black_box(1u64 + 1);
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.median_ns <= s.p95_ns * 1.0001);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+}

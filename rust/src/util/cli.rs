@@ -1,0 +1,112 @@
+//! Tiny CLI argument parser substrate (no clap in the offline toolchain).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed accessors and a usage/error path the `hyppo` binary and the
+//! example drivers share.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals plus `--key [value]` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else {
+                    // Lookahead: `--key value` unless the next token is
+                    // itself an option (then it's a bare flag).
+                    let takes_value = iter
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if takes_value {
+                        let v = iter.next().unwrap();
+                        out.opts.insert(rest.to_string(), v);
+                    } else {
+                        out.opts.insert(rest.to_string(), "true".into());
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.opts.get(key).map(String::as_str), Some("true") | Some("1"))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["run", "--iters", "50", "--fast", "--k=v"]);
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.usize_or("iters", 0), 50);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("k"), Some("v"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.f64_or("missing", 0.5), 0.5);
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse(&["--verbose", "--n", "3"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("n", 0), 3);
+    }
+}

@@ -1,0 +1,83 @@
+//! CSV emitter for figure/table data (`examples/` write these; EXPERIMENTS.md
+//! references them). Quoting rules cover the values we emit (numbers and
+//! simple identifiers, occasionally containing commas).
+
+use std::fmt::Display;
+use std::fs::File;
+use std::io::{BufWriter, Result, Write};
+use std::path::Path;
+
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create the file (and parent dirs) and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = CsvWriter {
+            out: BufWriter::new(File::create(path)?),
+            cols: header.len(),
+        };
+        w.write_raw_row(header)?;
+        Ok(w)
+    }
+
+    fn write_raw_row<D: Display>(&mut self, row: &[D]) -> Result<()> {
+        assert_eq!(row.len(), self.cols, "csv row arity mismatch");
+        let mut line = String::new();
+        for (i, cell) in row.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            let s = cell.to_string();
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                line.push('"');
+                line.push_str(&s.replace('"', "\"\""));
+                line.push('"');
+            } else {
+                line.push_str(&s);
+            }
+        }
+        line.push('\n');
+        self.out.write_all(line.as_bytes())
+    }
+
+    pub fn row<D: Display>(&mut self, row: &[D]) -> Result<()> {
+        self.write_raw_row(row)
+    }
+
+    pub fn finish(mut self) -> Result<()> {
+        self.out.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_quotes() {
+        let dir = std::env::temp_dir().join("hyppo_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["1", "x,y"]).unwrap();
+        w.row(&["2", "q\"q"]).unwrap();
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n2,\"q\"\"q\"\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let dir = std::env::temp_dir().join("hyppo_csv_test2");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        let _ = w.row(&["only-one"]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Shared substrates: JSON, CLI parsing, bench harness, property testing,
+//! CSV emission. All hand-rolled — the offline toolchain ships no serde,
+//! clap, criterion, or proptest (DESIGN.md §5).
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prop;

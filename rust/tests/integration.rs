@@ -1,0 +1,267 @@
+//! Integration tests over the real AOT artifacts: Rust loads the HLO text
+//! produced by `python/compile/aot.py`, compiles it on the PJRT CPU
+//! client, and drives full training loops. Skipped (with a message) when
+//! `make artifacts` has not run.
+
+use std::sync::Arc;
+
+use hyppo::cluster::workers::{run_async, AsyncConfig};
+use hyppo::cluster::{ParallelMode, Topology};
+use hyppo::eval::hlo::{Dataset, MlpHloEvaluator};
+use hyppo::eval::Evaluator;
+use hyppo::optimizer::HpoConfig;
+use hyppo::runtime::{artifact_dir, make_batch, Model, SharedEngine};
+use hyppo::sampling::Rng;
+use hyppo::uq::{PredictionSet, UqWeights};
+
+fn engine() -> Option<Arc<SharedEngine>> {
+    let dir = artifact_dir()?;
+    Some(Arc::new(SharedEngine::load(dir).expect("engine load")))
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match engine() {
+            Some(e) => e,
+            None => {
+                eprintln!("skipping: artifacts not built");
+                return;
+            }
+        }
+    };
+}
+
+/// Toy regression task: y = mean(x) over a 16-window.
+fn toy_dataset(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for _ in 0..n {
+        let row: Vec<f32> =
+            (0..16).map(|_| rng.f64() as f32).collect();
+        let mean = row.iter().sum::<f32>() / 16.0;
+        x.push(row);
+        y.push(vec![mean]);
+    }
+    Dataset { x, y }
+}
+
+#[test]
+fn mlp_training_reduces_loss_through_pjrt() {
+    let engine = require_artifacts!();
+    let mut model =
+        Model::init(&engine, "mlp_i16_o1_l2_w32_b32", 7).unwrap();
+    assert_eq!(model.n_params(), 16 * 32 + 32 + 32 * 32 + 32 + 32 + 1);
+
+    let ds = toy_dataset(32, 0);
+    let xs: Vec<&[f32]> = ds.x.iter().map(|r| r.as_slice()).collect();
+    let ys: Vec<&[f32]> = ds.y.iter().map(|r| r.as_slice()).collect();
+    let batch = make_batch(&xs, &ys, 32).unwrap();
+
+    let first = model.eval_loss(&batch).unwrap();
+    for step in 0..150 {
+        model.train_step(&batch, 0.1, 0.0, step).unwrap();
+    }
+    let last = model.eval_loss(&batch).unwrap();
+    assert!(
+        last < 0.3 * first,
+        "training did not converge: {first} -> {last}"
+    );
+}
+
+#[test]
+fn mc_dropout_passes_vary_and_aggregate() {
+    let engine = require_artifacts!();
+    let model = Model::init(&engine, "mlp_i16_o1_l1_w16_b32", 3).unwrap();
+    let x = vec![0.5f32; 32 * 16];
+
+    let deterministic = model.predict(&x).unwrap();
+    let d0 = model.predict_dropout(&x, 0.3, 1).unwrap();
+    let d1 = model.predict_dropout(&x, 0.3, 2).unwrap();
+    assert_eq!(deterministic.len(), 32);
+    assert_ne!(d0, d1, "dropout seeds must vary the output");
+
+    // Zero dropout must reproduce the deterministic pass exactly.
+    let z = model.predict_dropout(&x, 0.0, 9).unwrap();
+    for (a, b) in z.iter().zip(&deterministic) {
+        assert!((a - b).abs() < 1e-5);
+    }
+
+    // Eqs. 4-7 aggregation over real passes.
+    let set = PredictionSet {
+        trained: vec![deterministic.iter().map(|v| *v as f64).collect()],
+        dropout: vec![(0..10)
+            .map(|s| {
+                model
+                    .predict_dropout(&x, 0.3, 100 + s)
+                    .unwrap()
+                    .iter()
+                    .map(|v| *v as f64)
+                    .collect()
+            })
+            .collect()],
+    };
+    let w = UqWeights::default_paper();
+    let mu = set.mu_pred(w);
+    let var = set.v_model(w);
+    assert_eq!(mu.len(), 32);
+    assert!(var.iter().sum::<f64>() > 0.0, "MC dropout must spread");
+}
+
+#[test]
+fn init_seed_determinism_through_hlo() {
+    let engine = require_artifacts!();
+    let a = Model::init(&engine, "mlp_i1_o1_l1_w16_b32", 5).unwrap();
+    let b = Model::init(&engine, "mlp_i1_o1_l1_w16_b32", 5).unwrap();
+    let x = vec![0.25f32; 32];
+    assert_eq!(a.predict(&x).unwrap(), b.predict(&x).unwrap());
+    let c = Model::init(&engine, "mlp_i1_o1_l1_w16_b32", 6).unwrap();
+    assert_ne!(a.predict(&x).unwrap(), c.predict(&x).unwrap());
+}
+
+#[test]
+fn hlo_evaluator_trial_produces_full_outcome() {
+    let engine = require_artifacts!();
+    let mut ev = MlpHloEvaluator::new(
+        engine,
+        toy_dataset(128, 1),
+        toy_dataset(32, 2),
+        16,
+        1,
+        4,
+    );
+    ev.t_dropout = 4;
+    let theta = vec![1, 0, 2, 2, 2, 16]; // small arch, 2 epochs
+    let out = ev.run_trial(&theta, 0, 42);
+    assert!(out.loss.is_finite() && out.loss >= 0.0);
+    assert_eq!(out.dropout_losses.len(), 4);
+    assert_eq!(out.dropout_predictions.len(), 4);
+    let preds = out.predictions.as_ref().unwrap();
+    assert_eq!(preds.len(), 32);
+    assert!(out.cost.as_micros() > 0);
+    // μ_pred hook works.
+    assert!(ev.loss_of_mean_prediction(&theta, preds).is_some());
+}
+
+#[test]
+fn host_init_matches_hlo_init_statistics() {
+    let engine = require_artifacts!();
+    let hlo = Model::init(&engine, "mlp_i16_o1_l2_w32_b32", 3).unwrap();
+    let host =
+        Model::init_host(&engine, "mlp_i16_o1_l2_w32_b32", 3).unwrap();
+    assert_eq!(hlo.n_params(), host.n_params());
+    // Both inits are usable: run a couple of training steps each.
+    let ds = toy_dataset(32, 9);
+    let xs: Vec<&[f32]> = ds.x.iter().map(|r| r.as_slice()).collect();
+    let ys: Vec<&[f32]> = ds.y.iter().map(|r| r.as_slice()).collect();
+    let batch = make_batch(&xs, &ys, 32).unwrap();
+    for mut m in [hlo, host] {
+        let first = m.eval_loss(&batch).unwrap();
+        for s in 0..40 {
+            m.train_step(&batch, 0.1, 0.0, s).unwrap();
+        }
+        let last = m.eval_loss(&batch).unwrap();
+        assert!(last < first, "{first} -> {last}");
+    }
+}
+
+#[test]
+fn data_parallel_step_equals_full_batch_step() {
+    // Two equal half-batches, no dropout: averaging shard updates must
+    // reproduce the full-batch SGD step (the all-reduce identity the
+    // paper's data-parallel mode relies on).
+    let engine = require_artifacts!();
+    let ds = toy_dataset(32, 21);
+    let xs: Vec<&[f32]> = ds.x.iter().map(|r| r.as_slice()).collect();
+    let ys: Vec<&[f32]> = ds.y.iter().map(|r| r.as_slice()).collect();
+    let full = make_batch(&xs, &ys, 32).unwrap();
+    let lo = make_batch(&xs[..16], &ys[..16], 32).unwrap();
+    let hi = make_batch(&xs[16..], &ys[16..], 32).unwrap();
+
+    let arch = "mlp_i16_o1_l1_w16_b32";
+    let mut serial = Model::init(&engine, arch, 9).unwrap();
+    let mut parallel = Model::init(&engine, arch, 9).unwrap();
+    serial.train_step(&full, 0.05, 0.0, 3).unwrap();
+    parallel
+        .train_step_data_parallel(&[lo, hi], 0.05, 0.0, 3)
+        .unwrap();
+
+    let probe = vec![0.3f32; 32 * 16];
+    let a = serial.predict(&probe).unwrap();
+    let b = parallel.predict(&probe).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn missing_architecture_is_clean_error() {
+    let engine = require_artifacts!();
+    let err = Model::init(&engine, "mlp_i99_o9_l9_w9_b32", 0);
+    assert!(err.is_err());
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("no artifact"), "{msg}");
+}
+
+#[test]
+fn batch_weight_masking_matches_python_contract() {
+    // Rows beyond the logical batch must not affect eval_loss — this is
+    // the kernels/reductions.py zero-weight contract exercised through
+    // the whole AOT pipeline.
+    let engine = require_artifacts!();
+    let model = Model::init(&engine, "mlp_i16_o1_l1_w16_b32", 1).unwrap();
+    let ds = toy_dataset(8, 5);
+    let xs: Vec<&[f32]> = ds.x.iter().map(|r| r.as_slice()).collect();
+    let ys: Vec<&[f32]> = ds.y.iter().map(|r| r.as_slice()).collect();
+    let batch = make_batch(&xs, &ys, 32).unwrap();
+    let base = model.eval_loss(&batch).unwrap();
+
+    let mut poisoned = batch.clone();
+    for i in 8..32 {
+        for j in 0..16 {
+            poisoned.x[i * 16 + j] = 1e6;
+        }
+        poisoned.y[i] = -1e6;
+    }
+    let again = model.eval_loss(&poisoned).unwrap();
+    assert!(
+        (base - again).abs() < 1e-5 * base.abs().max(1.0),
+        "{base} vs {again}"
+    );
+}
+
+#[test]
+fn async_hpo_over_real_training_improves() {
+    let engine = require_artifacts!();
+    let mut ev = MlpHloEvaluator::new(
+        engine,
+        toy_dataset(96, 3),
+        toy_dataset(32, 4),
+        16,
+        1,
+        3,
+    );
+    ev.t_dropout = 2;
+    ev.max_steps_per_epoch = 4;
+    let cfg = AsyncConfig {
+        hpo: HpoConfig {
+            max_evaluations: 8,
+            n_init: 4,
+            n_trials: 2,
+            seed: 11,
+            ..Default::default()
+        },
+        topology: Topology::new(2, 1),
+        mode: ParallelMode::TrialParallel,
+        time_scale: 0.0,
+    };
+    let h = run_async(&ev, &cfg);
+    assert_eq!(h.len(), 8);
+    assert!(h.best(0.0).unwrap().summary.interval.center.is_finite());
+    // Provenance of adaptive evals includes the full initial design.
+    assert!(h
+        .records
+        .iter()
+        .filter(|r| !r.provenance.is_empty())
+        .all(|r| r.provenance.len() >= 4));
+}

@@ -1,0 +1,170 @@
+//! Cross-module property tests: coordinator invariants the paper's
+//! correctness rests on, exercised with the seeded property runner.
+
+use std::time::Duration;
+
+use hyppo::cluster::sim::{eval_duration, simulate, EvalCost, SimConfig};
+use hyppo::cluster::Topology;
+use hyppo::eval::synthetic::SyntheticEvaluator;
+use hyppo::optimizer::{run_sync, HpoConfig, SurrogateKind};
+use hyppo::prop_assert;
+use hyppo::sampling::Rng;
+use hyppo::space::{ParamSpec, Space};
+use hyppo::surrogate::gp::expected_improvement;
+use hyppo::util::prop::forall;
+
+fn random_costs(rng: &mut Rng) -> Vec<EvalCost> {
+    let n = 1 + rng.usize_below(40);
+    (0..n)
+        .map(|_| EvalCost {
+            trial_costs: (0..1 + rng.usize_below(8))
+                .map(|_| Duration::from_micros(1 + rng.next_u64() % 5_000))
+                .collect(),
+        })
+        .collect()
+}
+
+#[test]
+fn sim_step_busy_conserves_work() {
+    // Sum of per-step busy time == sum of all evaluation durations:
+    // steps are exclusive, nothing is double-counted or dropped.
+    forall("work conservation", 50, |rng| {
+        let evals = random_costs(rng);
+        let cfg = SimConfig::trial_parallel(Topology::new(
+            1 + rng.usize_below(8),
+            1 + rng.usize_below(6),
+        ));
+        let r = simulate(&evals, &cfg);
+        let busy: Duration = r.step_busy.iter().sum();
+        let work: Duration =
+            evals.iter().map(|e| eval_duration(e, &cfg)).sum();
+        prop_assert!(busy == work, "{busy:?} != {work:?}");
+        prop_assert!(
+            r.timeline.len() == evals.len(),
+            "timeline lost events"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn sim_parallelism_never_hurts_and_is_bounded() {
+    forall("speedup bounds", 50, |rng| {
+        let evals = random_costs(rng);
+        let tasks = 1 + rng.usize_below(6);
+        let steps = 1 + rng.usize_below(8);
+        let serial = simulate(
+            &evals,
+            &SimConfig::trial_parallel(Topology::new(1, 1)),
+        )
+        .makespan;
+        let par = simulate(
+            &evals,
+            &SimConfig::trial_parallel(Topology::new(steps, tasks)),
+        )
+        .makespan;
+        prop_assert!(par <= serial, "parallel slower: {par:?} > {serial:?}");
+        // Speedup cannot exceed the processor count.
+        let bound = serial.as_secs_f64()
+            / (steps * tasks) as f64
+            * 0.999;
+        prop_assert!(
+            par.as_secs_f64() >= bound,
+            "superlinear: {par:?} vs serial {serial:?} on {steps}x{tasks}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn sim_static_slicing_partitions_evaluations() {
+    forall("slicing partition", 30, |rng| {
+        let evals = random_costs(rng);
+        let steps = 1 + rng.usize_below(8);
+        let cfg =
+            SimConfig::trial_parallel(Topology::new(steps, 1));
+        let r = simulate(&evals, &cfg);
+        let mut seen = vec![false; evals.len()];
+        for e in &r.timeline {
+            prop_assert!(e.step == e.eval_index % steps, "wrong step");
+            prop_assert!(!seen[e.eval_index], "duplicate event");
+            seen[e.eval_index] = true;
+            prop_assert!(e.start <= e.end, "negative duration");
+        }
+        prop_assert!(seen.iter().all(|s| *s), "missing events");
+        Ok(())
+    });
+}
+
+#[test]
+fn hpo_respects_budget_and_space_under_random_configs() {
+    forall("hpo budget/space", 12, |rng| {
+        let dims = 2 + rng.usize_below(3);
+        let space = Space::new(
+            (0..dims)
+                .map(|i| {
+                    let lo = rng.i64_in(-5, 5);
+                    ParamSpec::new(
+                        &format!("p{i}"),
+                        lo,
+                        lo + rng.i64_in(1, 20),
+                    )
+                })
+                .collect(),
+        );
+        let ev = SyntheticEvaluator::new(space.clone(), rng.next_u64());
+        let budget = 6 + rng.usize_below(20);
+        let surrogate = match rng.usize_below(3) {
+            0 => SurrogateKind::Rbf,
+            1 => SurrogateKind::Gp,
+            _ => SurrogateKind::RbfEnsemble {
+                alpha: -2.0 + 4.0 * rng.f64(),
+                members: 3 + rng.usize_below(6),
+            },
+        };
+        let cfg = HpoConfig {
+            max_evaluations: budget,
+            n_init: 3 + rng.usize_below(5),
+            n_trials: 1 + rng.usize_below(3),
+            surrogate,
+            gamma: rng.f64(),
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let h = run_sync(&ev, &cfg);
+        prop_assert!(h.len() == budget, "budget violated: {}", h.len());
+        for r in &h.records {
+            prop_assert!(
+                space.contains(&r.theta),
+                "out of space: {:?}",
+                r.theta
+            );
+            prop_assert!(
+                r.summary.interval.center.is_finite(),
+                "non-finite loss"
+            );
+        }
+        // best_trace is non-increasing.
+        let t = h.best_trace(cfg.gamma);
+        prop_assert!(
+            t.windows(2).all(|w| w[1] <= w[0] + 1e-12),
+            "trace not monotone"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn expected_improvement_nonnegative_and_zero_when_hopeless() {
+    forall("EI sign", 500, |rng| {
+        let pred = rng.normal() * 3.0;
+        let std = rng.f64() * 2.0;
+        let best = rng.normal() * 3.0;
+        let ei = expected_improvement(pred, std, best);
+        prop_assert!(ei >= 0.0, "negative EI {ei}");
+        if std < 1e-14 && pred >= best {
+            prop_assert!(ei == 0.0, "hopeless point has EI {ei}");
+        }
+        Ok(())
+    });
+}
