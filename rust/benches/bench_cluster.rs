@@ -9,6 +9,7 @@ use hyppo::cluster::sim::{simulate, EvalCost, SimConfig};
 use hyppo::cluster::workers::{run_async, AsyncConfig};
 use hyppo::cluster::{ParallelMode, Topology};
 use hyppo::eval::synthetic::SyntheticEvaluator;
+use hyppo::exec::{run_experiment, CheckpointPolicy, ExecConfig};
 use hyppo::optimizer::HpoConfig;
 use hyppo::space::{ParamSpec, Space};
 use hyppo::util::bench::{bench, bench1, black_box};
@@ -64,4 +65,32 @@ fn main() {
             black_box(run_async(&ev, &acfg));
         },
     );
+
+    // The same experiment through the exec driver directly, plus a
+    // checkpoint-per-completion variant: the delta is the full cost of
+    // durability (JSON serialization + atomic file replace per record).
+    let exec_cfg = ExecConfig::new(
+        acfg.hpo.clone(),
+        acfg.topology,
+        acfg.mode,
+        acfg.time_scale,
+    );
+    bench(
+        "exec_driver_32evals_overhead",
+        Duration::from_secs(3),
+        || {
+            black_box(run_experiment(&ev, &exec_cfg).unwrap());
+        },
+    );
+    let ckpt = std::env::temp_dir().join("hyppo_bench_cluster_ckpt.json");
+    let mut ckpt_cfg = exec_cfg.clone();
+    ckpt_cfg.checkpoint = Some(CheckpointPolicy::every_completion(&ckpt));
+    bench(
+        "exec_driver_32evals_ckpt_every_completion",
+        Duration::from_secs(3),
+        || {
+            black_box(run_experiment(&ev, &ckpt_cfg).unwrap());
+        },
+    );
+    std::fs::remove_file(&ckpt).ok();
 }

@@ -58,4 +58,56 @@ fn main() {
             black_box(e.fit(&xs, &intervals, &mut r));
         });
     }
+
+    // --- incremental vs full refit (ISSUE 1 acceptance: ≥5× at n=200) ---
+    //
+    // "Full" is what the seed coordinator paid after *every* completion:
+    // an O(n³) from-scratch fit over all n points. "Incremental" is the
+    // exec driver's per-completion cost: absorb one new point into an
+    // already-fitted n−1-point model (O(n²) — clone included, since the
+    // bench must restore the pre-insertion state each iteration).
+    println!("-- incremental vs full refit at n = 200 --");
+    let n = 200usize;
+    let (xs, ys) = data(n, 6, &mut rng);
+    let (x_new, y_new) = (xs[n - 1].clone(), ys[n - 1]);
+
+    let full_rbf = bench1("rbf_full_refit_n200", || {
+        let mut m = RbfSurrogate::new();
+        black_box(m.fit(&xs, &ys));
+    });
+    let mut rbf_base = RbfSurrogate::new();
+    assert!(rbf_base.fit(&xs[..n - 1], &ys[..n - 1]));
+    // Build the saddle inverse once, outside the timed loop (the driver
+    // amortizes it the same way across a whole experiment).
+    assert!(rbf_base.prepare_incremental());
+    {
+        let mut probe = rbf_base.clone();
+        assert!(
+            probe.fit_incremental(&x_new, y_new),
+            "incremental extension must succeed at this scale"
+        );
+    }
+    let incr_rbf = bench1("rbf_incremental_refit_n200", || {
+        let mut m = rbf_base.clone();
+        black_box(m.fit_incremental(&x_new, y_new));
+    });
+    println!(
+        "   rbf incremental speedup vs full refit: {:.1}x",
+        full_rbf.median_ns / incr_rbf.median_ns
+    );
+
+    let full_gp = bench1("gp_full_refit_n200", || {
+        let mut m = GpSurrogate::new();
+        black_box(m.fit(&xs, &ys));
+    });
+    let mut gp_base = GpSurrogate::new();
+    assert!(gp_base.fit(&xs[..n - 1], &ys[..n - 1]));
+    let incr_gp = bench1("gp_incremental_refit_n200", || {
+        let mut m = gp_base.clone();
+        black_box(m.fit_incremental(&x_new, y_new));
+    });
+    println!(
+        "   gp incremental speedup vs full refit: {:.1}x",
+        full_gp.median_ns / incr_gp.median_ns
+    );
 }

@@ -15,11 +15,37 @@ use crate::optimizer::{EvalRecord, History};
 use crate::uq::LossInterval;
 use crate::util::json::{parse, write, Json};
 
+/// Encode an f64, representing non-finite values (diverged trainings
+/// produce inf/NaN losses) as strings — `Json::Num` would serialize them
+/// as invalid JSON and make the file unreadable.
 fn num(v: f64) -> Json {
-    Json::Num(v)
+    if v.is_finite() {
+        Json::Num(v)
+    } else if v.is_nan() {
+        Json::Str("nan".into())
+    } else if v > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
 }
 
-fn record_to_json(r: &EvalRecord) -> Json {
+fn num_back(v: &Json) -> Option<f64> {
+    match v {
+        Json::Num(n) => Some(*n),
+        Json::Str(s) => match s.as_str() {
+            "inf" => Some(f64::INFINITY),
+            "-inf" => Some(f64::NEG_INFINITY),
+            "nan" => Some(f64::NAN),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Serialize one evaluation record to a JSON object (shared with the
+/// `exec::checkpoint` format, which embeds records verbatim).
+pub fn record_to_json(r: &EvalRecord) -> Json {
     let mut o = BTreeMap::new();
     o.insert("id".into(), num(r.id as f64));
     o.insert(
@@ -43,7 +69,8 @@ fn record_to_json(r: &EvalRecord) -> Json {
     Json::Obj(o)
 }
 
-fn record_from_json(v: &Json) -> Result<EvalRecord> {
+/// Parse one evaluation record from its [`record_to_json`] form.
+pub fn record_from_json(v: &Json) -> Result<EvalRecord> {
     let theta = v
         .get("theta")
         .as_arr()
@@ -59,7 +86,7 @@ fn record_from_json(v: &Json) -> Result<EvalRecord> {
         .map(|x| x.as_i64().map(|i| i as usize).context("prov item"))
         .collect::<Result<Vec<usize>>>()?;
     let g = |k: &str| -> Result<f64> {
-        v.get(k).as_f64().ok_or_else(|| anyhow!("missing {k}"))
+        num_back(v.get(k)).ok_or_else(|| anyhow!("missing {k}"))
     };
     Ok(EvalRecord {
         id: g("id")? as usize,
@@ -184,5 +211,26 @@ mod tests {
         assert!(history_from_json("not json").is_err());
         assert!(history_from_json("{\"version\":9,\"records\":[]}")
             .is_err());
+    }
+
+    #[test]
+    fn non_finite_losses_roundtrip() {
+        // Diverged trainings produce inf/NaN losses; the file must stay
+        // valid JSON and the values must come back.
+        let mut h = sample_history();
+        h.records[0].summary.interval.center = f64::INFINITY;
+        h.records[1].summary.trained_std = f64::NAN;
+        h.records[2].summary.v_model_g = f64::NEG_INFINITY;
+        let text = history_to_json(&h);
+        let h2 = history_from_json(&text).unwrap();
+        assert_eq!(
+            h2.records[0].summary.interval.center,
+            f64::INFINITY
+        );
+        assert!(h2.records[1].summary.trained_std.is_nan());
+        assert_eq!(
+            h2.records[2].summary.v_model_g,
+            f64::NEG_INFINITY
+        );
     }
 }

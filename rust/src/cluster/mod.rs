@@ -28,7 +28,9 @@ pub enum ParallelMode {
 /// steps × tasks topology (one processor per task; `--exclusive`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Topology {
+    /// Outer parallelism: concurrent hyperparameter evaluations.
     pub steps: usize,
+    /// Inner parallelism: tasks per evaluation (trial or data parallel).
     pub tasks_per_step: usize,
 }
 

@@ -21,12 +21,16 @@ use crate::cluster::{ParallelMode, Topology};
 /// Per-evaluation input: the simulated durations of its N trials.
 #[derive(Debug, Clone)]
 pub struct EvalCost {
+    /// One entry per trial (trial index = position).
     pub trial_costs: Vec<Duration>,
 }
 
+/// Simulated-cluster parameters.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
+    /// steps × tasks layout being simulated.
     pub topology: Topology,
+    /// Inner (per-step) parallelization mode.
     pub mode: ParallelMode,
     /// Parallel efficiency of data-parallel scaling (1.0 = perfect).
     pub data_efficiency: f64,
@@ -35,6 +39,8 @@ pub struct SimConfig {
 }
 
 impl SimConfig {
+    /// Trial-parallel configuration with the paper's default efficiency
+    /// and synchronization constants.
     pub fn trial_parallel(topology: Topology) -> Self {
         SimConfig {
             topology,
@@ -48,12 +54,17 @@ impl SimConfig {
 /// One simulated evaluation completion.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SimEvent {
+    /// Index of the evaluation in the submitted workload.
     pub eval_index: usize,
+    /// Step (outer worker) that executed it.
     pub step: usize,
+    /// Virtual start time.
     pub start: Duration,
+    /// Virtual completion time.
     pub end: Duration,
 }
 
+/// Outcome of simulating one whole job.
 #[derive(Debug, Clone)]
 pub struct SimResult {
     /// Job makespan (max step completion time).

@@ -9,11 +9,16 @@
 
 use crate::cluster::Topology;
 
+/// Everything the generated `#SBATCH` script is parameterized on.
 #[derive(Debug, Clone)]
 pub struct SlurmJobConfig {
+    /// `--job-name`.
     pub job_name: String,
+    /// steps × tasks layout; `--ntasks` is its processor product.
     pub topology: Topology,
+    /// Request one GPU per task (`--gpus-per-task 1`) vs CPU-only.
     pub use_gpu: bool,
+    /// `--time` wall-clock limit.
     pub time_limit: String,
     /// Command each SLURM step executes (receives the step id as `{}`).
     pub step_command: String,

@@ -1,276 +1,60 @@
-//! Asynchronous nested-parallel HPO (paper Feature 3, Figs. 5-6).
+//! Asynchronous nested-parallel HPO (paper Feature 3, Figs. 5-6) —
+//! compatibility surface over the `exec` driver.
 //!
-//! A pool of `steps` worker threads evaluates hyperparameter sets; each
-//! evaluation's N trials are in turn spread over `tasks_per_step` inner
-//! threads (trial parallelism) or executed sequentially with a
-//! data-parallel cost discount. The coordinator:
+//! The worker-pool loop that used to live here (a pool of `steps` step
+//! threads, each evaluation's N trials spread over `tasks_per_step`
+//! inner threads, per-completion surrogate refits with provenance
+//! tracking) moved to `exec::driver`, where it gained incremental
+//! refits, checkpoint/resume, and sweep support. `run_async` keeps the
+//! original one-call API: in-memory, full budget, no checkpointing.
 //!
-//!   1. runs the initial design across all workers (independent, as in
-//!      the paper),
-//!   2. then keeps every worker busy with surrogate proposals, refitting
-//!      the surrogate after *each* completion (not per batch) — the
-//!      asynchronous update of Fig. 6 — and tagging each proposal with the
-//!      ids of the evaluations the surrogate had seen (provenance).
-//!
-//! Simulated backends report virtual costs; `time_scale` converts those to
-//! real sleeps so completion *order* (and thus surrogate behaviour) matches
-//! the heterogeneous-duration dynamics the paper exploits. Real backends
-//! (HLO training) use `time_scale = 0` — their cost is genuine wall time.
+//! Simulated backends report virtual costs; `time_scale` converts those
+//! to real sleeps so completion *order* (and thus surrogate behaviour)
+//! matches the heterogeneous-duration dynamics the paper exploits. Real
+//! backends (HLO training) use `time_scale = 0` — their cost is genuine
+//! wall time.
 
-use std::collections::VecDeque;
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+#[cfg(test)]
+use crate::exec::driver::run_evaluation;
 
 use crate::cluster::{ParallelMode, Topology};
-use crate::eval::{aggregate, Evaluator, TrialOutcome};
-use crate::optimizer::{
-    initial_design, propose_next, EvalRecord, History, HpoConfig,
-};
-use crate::sampling::rng::Rng;
+use crate::eval::Evaluator;
+use crate::exec::{run_experiment, ExecConfig};
+use crate::optimizer::{History, HpoConfig};
 
+/// Configuration of one asynchronous in-memory run.
 #[derive(Debug, Clone)]
 pub struct AsyncConfig {
+    /// The HPO problem (budget, surrogate, seed, ...).
     pub hpo: HpoConfig,
+    /// steps × tasks worker topology.
     pub topology: Topology,
+    /// Inner (per-step) parallelization mode.
     pub mode: ParallelMode,
     /// Seconds of real sleep per second of reported virtual cost
     /// (e.g. 1e-4 compresses a 40 ms-cost trial to 4 µs).
     pub time_scale: f64,
 }
 
-struct Job {
-    id: usize,
-    theta: Vec<i64>,
-    provenance: Vec<usize>,
-    seed: u64,
-}
-
-struct Completion {
-    id: usize,
-    theta: Vec<i64>,
-    provenance: Vec<usize>,
-    outcomes: Vec<TrialOutcome>,
-    worker: usize,
-}
-
-/// Run one evaluation's N trials with nested task parallelism.
-fn run_evaluation(
-    evaluator: &dyn Evaluator,
-    theta: &[i64],
-    n_trials: usize,
-    seed: u64,
-    tasks: usize,
-    mode: ParallelMode,
-    time_scale: f64,
-) -> Vec<TrialOutcome> {
-    let run_one = |trial: usize| {
-        let o = evaluator.run_trial(theta, trial, seed);
-        if time_scale > 0.0 {
-            let scaled = o.cost.mul_f64(match mode {
-                ParallelMode::TrialParallel => time_scale,
-                // Data-parallel: the trial itself is sharded over tasks.
-                ParallelMode::DataParallel => {
-                    time_scale / (tasks as f64 * 0.85).max(1.0)
-                }
-            });
-            std::thread::sleep(scaled);
-        }
-        o
-    };
-
-    if tasks <= 1 || n_trials <= 1 || mode == ParallelMode::DataParallel {
-        return (0..n_trials).map(run_one).collect();
-    }
-
-    // Trial parallelism: slice trial indices over `tasks` inner threads
-    // (the paper's MPI-rank slicing).
-    let mut outcomes: Vec<Option<TrialOutcome>> = Vec::new();
-    outcomes.resize_with(n_trials, || None);
-    let slots = Mutex::new(&mut outcomes);
-    std::thread::scope(|scope| {
-        for task in 0..tasks.min(n_trials) {
-            let slots = &slots;
-            let run_one = &run_one;
-            scope.spawn(move || {
-                let mut t = task;
-                while t < n_trials {
-                    let o = run_one(t);
-                    slots.lock().unwrap()[t] = Some(o);
-                    t += tasks;
-                }
-            });
-        }
-    });
-    outcomes.into_iter().map(|o| o.expect("trial ran")).collect()
-}
-
 /// The asynchronous HPO loop. Returns the history ordered by *completion*
 /// time (the order the surrogate saw the results).
 pub fn run_async(evaluator: &dyn Evaluator, cfg: &AsyncConfig) -> History {
-    let space = evaluator.space().clone();
-    let mut rng = Rng::new(cfg.hpo.seed);
-    let n_workers = cfg.topology.steps;
-    let tasks = cfg.topology.tasks_per_step;
-
-    let queue: Arc<(Mutex<VecDeque<Option<Job>>>, std::sync::Condvar)> =
-        Arc::new((Mutex::new(VecDeque::new()), std::sync::Condvar::new()));
-    let (done_tx, done_rx) = mpsc::channel::<Completion>();
-
-    let push = |q: &Arc<(Mutex<VecDeque<Option<Job>>>, std::sync::Condvar)>,
-                job: Option<Job>| {
-        let (lock, cv) = &**q;
-        lock.lock().unwrap().push_back(job);
-        cv.notify_one();
-    };
-
-    let mut history = History::default();
-    std::thread::scope(|scope| {
-        // --- workers ------------------------------------------------------
-        for worker in 0..n_workers {
-            let queue = Arc::clone(&queue);
-            let done_tx = done_tx.clone();
-            let evaluator: &dyn Evaluator = evaluator;
-            let hpo = &cfg.hpo;
-            let mode = cfg.mode;
-            let time_scale = cfg.time_scale;
-            scope.spawn(move || {
-                loop {
-                    let job = {
-                        let (lock, cv) = &*queue;
-                        let mut q = lock.lock().unwrap();
-                        loop {
-                            match q.pop_front() {
-                                Some(j) => break j,
-                                None => q = cv.wait(q).unwrap(),
-                            }
-                        }
-                    };
-                    let Some(job) = job else { break }; // poison pill
-                    let outcomes = run_evaluation(
-                        evaluator,
-                        &job.theta,
-                        hpo.n_trials,
-                        job.seed,
-                        tasks,
-                        mode,
-                        time_scale,
-                    );
-                    let _ = done_tx.send(Completion {
-                        id: job.id,
-                        theta: job.theta,
-                        provenance: job.provenance,
-                        outcomes,
-                        worker,
-                    });
-                }
-            });
-        }
-        drop(done_tx);
-
-        // --- coordinator ---------------------------------------------------
-        let budget = cfg.hpo.max_evaluations;
-        let init = initial_design(&space, &cfg.hpo, &mut rng);
-        let mut next_id = 0;
-        let mut submitted = 0usize;
-        for theta in init.into_iter().take(budget) {
-            push(&queue, Some(Job {
-                id: next_id,
-                theta,
-                provenance: vec![],
-                seed: rng.next_u64(),
-            }));
-            next_id += 1;
-            submitted += 1;
-        }
-
-        // Wait for the whole initial design (paper: surrogate modeling
-        // starts once the initial evaluations are in).
-        let mut completed = 0usize;
-        let mut pending: Vec<Completion> = Vec::new();
-        while completed < submitted.min(budget) {
-            let c = done_rx.recv().expect("workers alive");
-            completed += 1;
-            pending.push(c);
-        }
-        // Record initial design in completion order.
-        pending.sort_by_key(|c| c.id);
-        for c in pending.drain(..) {
-            record(&mut history, evaluator, &cfg.hpo, c);
-        }
-
-        // Adaptive phase: keep all workers busy; refit per completion.
-        let mut iter = 0usize;
-        let in_flight_target = n_workers.min(budget.saturating_sub(submitted));
-        for _ in 0..in_flight_target {
-            let theta =
-                propose_next(&space, &history, &cfg.hpo, iter, &mut rng);
-            iter += 1;
-            push(&queue, Some(Job {
-                id: next_id,
-                theta,
-                provenance: history.records.iter().map(|r| r.id).collect(),
-                seed: rng.next_u64(),
-            }));
-            next_id += 1;
-            submitted += 1;
-        }
-        let mut in_flight = in_flight_target;
-        while in_flight > 0 {
-            let c = done_rx.recv().expect("workers alive");
-            in_flight -= 1;
-            record(&mut history, evaluator, &cfg.hpo, c);
-            if submitted < budget {
-                // Asynchronous update: refit NOW on everything completed,
-                // propose, resubmit without waiting for peers (Fig. 6).
-                let theta = propose_next(
-                    &space, &history, &cfg.hpo, iter, &mut rng,
-                );
-                iter += 1;
-                push(&queue, Some(Job {
-                    id: next_id,
-                    theta,
-                    provenance: history
-                        .records
-                        .iter()
-                        .map(|r| r.id)
-                        .collect(),
-                    seed: rng.next_u64(),
-                }));
-                next_id += 1;
-                submitted += 1;
-                in_flight += 1;
-            }
-        }
-
-        // Poison pills.
-        for _ in 0..n_workers {
-            push(&queue, None);
-        }
-    });
-    history
-}
-
-fn record(
-    history: &mut History,
-    evaluator: &dyn Evaluator,
-    hpo: &HpoConfig,
-    c: Completion,
-) {
-    let summary = aggregate(evaluator, &c.theta, &c.outcomes, hpo.weights);
-    history.records.push(EvalRecord {
-        id: c.id,
-        n_params: evaluator.n_params(&c.theta),
-        theta: c.theta,
-        summary,
-        provenance: c.provenance,
-    });
-    let _ = c.worker;
+    let exec_cfg = ExecConfig::new(
+        cfg.hpo.clone(),
+        cfg.topology,
+        cfg.mode,
+        cfg.time_scale,
+    );
+    run_experiment(evaluator, &exec_cfg)
+        .expect("in-memory experiment performs no fallible I/O")
+        .history
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::eval::synthetic::SyntheticEvaluator;
+    use crate::optimizer::EvalRecord;
     use crate::space::{ParamSpec, Space};
     use crate::uq::UqWeights;
     use std::collections::HashSet;

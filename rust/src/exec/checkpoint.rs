@@ -1,0 +1,323 @@
+//! Checkpoint format for the asynchronous experiment driver.
+//!
+//! A checkpoint captures everything the coordinator needs to continue a
+//! killed experiment bit-for-bit (given deterministic completion order —
+//! see DESIGN.md §4): the recorded history, the coordinator RNG state,
+//! the submission counters, and the provenance of every job that was
+//! submitted but not yet recorded (in-flight). On resume the in-flight
+//! jobs are re-enqueued with their original `(θ, seed)` pairs, so the
+//! deterministic evaluators reproduce the exact outcomes the killed run
+//! would have recorded.
+//!
+//! Serialization is JSON through the hand-rolled `util::json` substrate.
+//! `u64` values (seeds, RNG words) are encoded as **decimal strings**:
+//! the substrate stores numbers as `f64`, which would silently round
+//! anything above 2⁵³ and break bit-for-bit resumption.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::analysis::persistence::{record_from_json, record_to_json};
+use crate::optimizer::History;
+use crate::space::Point;
+use crate::util::json::{parse, write, Json};
+
+/// Current checkpoint schema version (see DESIGN.md §4 for the layout).
+pub const CHECKPOINT_VERSION: i64 = 1;
+
+/// A job that was submitted to the worker pool but whose completion has
+/// not been recorded yet.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PendingJob {
+    /// Submission id (stable across kill/resume).
+    pub id: usize,
+    /// The hyperparameter set under evaluation.
+    pub theta: Point,
+    /// Ids of the evaluations the surrogate had seen at proposal time
+    /// (empty for initial-design jobs).
+    pub provenance: Vec<usize>,
+    /// The evaluation seed drawn at submission time; re-enqueueing with
+    /// the same seed reproduces the same trial outcomes.
+    pub seed: u64,
+}
+
+/// A serializable snapshot of the experiment driver's coordinator state.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Schema version ([`CHECKPOINT_VERSION`]).
+    pub version: i64,
+    /// `HpoConfig::seed` of the run that wrote the snapshot; resume
+    /// refuses a checkpoint written under a different seed.
+    pub seed: u64,
+    /// Coordinator xoshiro256** state at snapshot time.
+    pub rng_state: [u64; 4],
+    /// Next submission id.
+    pub next_id: usize,
+    /// Adaptive-phase iteration counter (drives the weight cycle).
+    pub iter: usize,
+    /// Total jobs submitted so far (recorded + in-flight).
+    pub submitted: usize,
+    /// Evaluations recorded, in completion order.
+    pub history: History,
+    /// Jobs submitted but not yet recorded.
+    pub in_flight: Vec<PendingJob>,
+}
+
+fn u64_to_json(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn u64_from_json(v: &Json, what: &str) -> Result<u64> {
+    let s = v
+        .as_str()
+        .with_context(|| format!("{what}: expected decimal string"))?;
+    s.parse::<u64>()
+        .map_err(|e| anyhow!("{what}: bad u64 {s:?}: {e}"))
+}
+
+fn job_to_json(j: &PendingJob) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("id".into(), Json::Num(j.id as f64));
+    o.insert(
+        "theta".into(),
+        Json::Arr(j.theta.iter().map(|v| Json::Num(*v as f64)).collect()),
+    );
+    o.insert(
+        "provenance".into(),
+        Json::Arr(
+            j.provenance
+                .iter()
+                .map(|v| Json::Num(*v as f64))
+                .collect(),
+        ),
+    );
+    o.insert("seed".into(), u64_to_json(j.seed));
+    Json::Obj(o)
+}
+
+fn job_from_json(v: &Json) -> Result<PendingJob> {
+    let theta = v
+        .get("theta")
+        .as_arr()
+        .context("job theta")?
+        .iter()
+        .map(|x| x.as_i64().context("job theta item"))
+        .collect::<Result<Vec<i64>>>()?;
+    let provenance = v
+        .get("provenance")
+        .as_arr()
+        .context("job provenance")?
+        .iter()
+        .map(|x| x.as_i64().map(|i| i as usize).context("job prov item"))
+        .collect::<Result<Vec<usize>>>()?;
+    Ok(PendingJob {
+        id: v.get("id").as_i64().context("job id")? as usize,
+        theta,
+        provenance,
+        seed: u64_from_json(v.get("seed"), "job seed")?,
+    })
+}
+
+impl Checkpoint {
+    /// Serialize to compact JSON text.
+    pub fn to_json_string(&self) -> String {
+        let mut root = BTreeMap::new();
+        root.insert("version".into(), Json::Num(self.version as f64));
+        root.insert("seed".into(), u64_to_json(self.seed));
+        root.insert(
+            "rng_state".into(),
+            Json::Arr(self.rng_state.iter().map(|w| u64_to_json(*w)).collect()),
+        );
+        root.insert("next_id".into(), Json::Num(self.next_id as f64));
+        root.insert("iter".into(), Json::Num(self.iter as f64));
+        root.insert(
+            "submitted".into(),
+            Json::Num(self.submitted as f64),
+        );
+        root.insert(
+            "records".into(),
+            Json::Arr(
+                self.history.records.iter().map(record_to_json).collect(),
+            ),
+        );
+        root.insert(
+            "in_flight".into(),
+            Json::Arr(self.in_flight.iter().map(job_to_json).collect()),
+        );
+        write(&Json::Obj(root))
+    }
+
+    /// Parse a checkpoint back from [`Checkpoint::to_json_string`] text.
+    pub fn from_json_str(text: &str) -> Result<Checkpoint> {
+        let root =
+            parse(text).map_err(|e| anyhow!("checkpoint parse: {e}"))?;
+        let version = root.get("version").as_i64().context("version")?;
+        if version != CHECKPOINT_VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let rng_arr = root.get("rng_state").as_arr().context("rng_state")?;
+        if rng_arr.len() != 4 {
+            bail!("rng_state must hold 4 words, got {}", rng_arr.len());
+        }
+        let mut rng_state = [0u64; 4];
+        for (i, w) in rng_arr.iter().enumerate() {
+            rng_state[i] = u64_from_json(w, "rng_state word")?;
+        }
+        let records = root
+            .get("records")
+            .as_arr()
+            .context("records")?
+            .iter()
+            .map(record_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let in_flight = root
+            .get("in_flight")
+            .as_arr()
+            .context("in_flight")?
+            .iter()
+            .map(job_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Checkpoint {
+            version,
+            seed: u64_from_json(root.get("seed"), "seed")?,
+            rng_state,
+            next_id: root.get("next_id").as_i64().context("next_id")?
+                as usize,
+            iter: root.get("iter").as_i64().context("iter")? as usize,
+            submitted: root
+                .get("submitted")
+                .as_i64()
+                .context("submitted")? as usize,
+            history: History { records },
+            in_flight,
+        })
+    }
+
+    /// Atomically write the checkpoint: serialize to `<path>.tmp`, then
+    /// rename over `path`, so a kill mid-write never corrupts the last
+    /// good snapshot.
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("mkdir {}", dir.display()))?;
+            }
+        }
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_json_string())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load a checkpoint from disk.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json_str(&text)
+            .with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::synthetic::SyntheticEvaluator;
+    use crate::optimizer::{run_sync, HpoConfig};
+    use crate::space::{ParamSpec, Space};
+
+    fn sample() -> Checkpoint {
+        let space = Space::new(vec![
+            ParamSpec::new("a", 0, 10),
+            ParamSpec::new("b", 0, 10),
+        ]);
+        let ev = SyntheticEvaluator::new(space, 1);
+        let history = run_sync(
+            &ev,
+            &HpoConfig {
+                max_evaluations: 9,
+                n_init: 4,
+                n_trials: 2,
+                seed: 3,
+                ..Default::default()
+            },
+        );
+        Checkpoint {
+            version: CHECKPOINT_VERSION,
+            seed: 3,
+            // Values above 2^53 exercise the decimal-string encoding.
+            rng_state: [u64::MAX, 1, 2_u64.pow(63) + 7, 42],
+            next_id: 11,
+            iter: 5,
+            submitted: 11,
+            history,
+            in_flight: vec![
+                PendingJob {
+                    id: 9,
+                    theta: vec![1, 2],
+                    provenance: vec![0, 1, 2, 3, 4],
+                    seed: u64::MAX - 12345,
+                },
+                PendingJob {
+                    id: 10,
+                    theta: vec![7, 3],
+                    provenance: vec![],
+                    seed: 17,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let c = sample();
+        let c2 = Checkpoint::from_json_str(&c.to_json_string()).unwrap();
+        assert_eq!(c2.version, c.version);
+        assert_eq!(c2.seed, c.seed);
+        assert_eq!(c2.rng_state, c.rng_state);
+        assert_eq!(c2.next_id, c.next_id);
+        assert_eq!(c2.iter, c.iter);
+        assert_eq!(c2.submitted, c.submitted);
+        assert_eq!(c2.in_flight, c.in_flight);
+        assert_eq!(c2.history.len(), c.history.len());
+        for (a, b) in c.history.records.iter().zip(&c2.history.records) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.theta, b.theta);
+            assert_eq!(a.provenance, b.provenance);
+            // f64 fields survive the shortest-roundtrip Display format.
+            assert_eq!(a.summary.interval.center, b.summary.interval.center);
+            assert_eq!(a.summary.trained_std, b.summary.trained_std);
+        }
+    }
+
+    #[test]
+    fn save_load_atomic_file() {
+        let c = sample();
+        let p = std::env::temp_dir().join("hyppo_ckpt_test.json");
+        c.save(&p).unwrap();
+        assert!(!p.with_extension("tmp").exists(), "tmp file left behind");
+        let c2 = Checkpoint::load(&p).unwrap();
+        assert_eq!(c2.rng_state, c.rng_state);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_and_wrong_version() {
+        assert!(Checkpoint::from_json_str("nope").is_err());
+        let mut c = sample();
+        c.version = 99;
+        assert!(Checkpoint::from_json_str(&c.to_json_string()).is_err());
+        // A u64 encoded as a JSON number (not a string) must be rejected
+        // rather than silently rounded.
+        let text = sample().to_json_string().replace(
+            &format!("\"seed\":\"{}\"", 3),
+            "\"seed\":3",
+        );
+        assert!(Checkpoint::from_json_str(&text).is_err());
+    }
+}

@@ -1,0 +1,530 @@
+//! The asynchronous experiment driver — the reusable engine behind
+//! `cluster::workers::run_async`, `hyppo run --resume`, and `hyppo sweep`.
+//!
+//! Semantics match the paper's Fig. 6 loop (and the seed implementation):
+//! the initial design runs across all workers and is recorded in id order
+//! once complete, then every worker is kept busy with surrogate
+//! proposals, the surrogate absorbing each completion *as it arrives*.
+//! Two things are new relative to the seed loop:
+//!
+//! * **Incremental refits** — the driver holds one `OnlineProposer` for
+//!   the whole experiment, so a completion costs an O(n²) rank-1 update
+//!   instead of the O(n³) from-scratch refit that used to stall the
+//!   coordinator (DESIGN.md §4).
+//! * **Checkpoint / resume** — with a `CheckpointPolicy`, the coordinator
+//!   snapshots its state (history, RNG, in-flight job provenance) after
+//!   completions; `resume_experiment` re-enqueues the in-flight jobs with
+//!   their original `(θ, seed)` pairs and continues. With deterministic
+//!   completion order (one worker, or cost-ordered simulated sleeps) the
+//!   resumed run is bit-for-bit the run that was killed.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::cluster::{ParallelMode, Topology};
+use crate::eval::{aggregate, Evaluator, TrialOutcome};
+use crate::exec::checkpoint::{Checkpoint, PendingJob, CHECKPOINT_VERSION};
+use crate::optimizer::{
+    initial_design, EvalRecord, History, HpoConfig, OnlineProposer,
+    RefitStats,
+};
+use crate::sampling::rng::Rng;
+use crate::space::Space;
+
+/// When and where the driver snapshots coordinator state.
+#[derive(Debug, Clone)]
+pub struct CheckpointPolicy {
+    /// Snapshot file (written atomically via a `.tmp` sibling).
+    pub path: PathBuf,
+    /// Snapshot after every `every`-th recorded completion (1 = always).
+    pub every: usize,
+}
+
+impl CheckpointPolicy {
+    /// Snapshot to `path` after every completion.
+    pub fn every_completion<P: Into<PathBuf>>(path: P) -> Self {
+        CheckpointPolicy { path: path.into(), every: 1 }
+    }
+}
+
+/// Full configuration of one asynchronous experiment.
+#[derive(Debug, Clone)]
+pub struct ExecConfig {
+    /// The HPO problem (budget, surrogate, seed, ...).
+    pub hpo: HpoConfig,
+    /// steps × tasks worker topology.
+    pub topology: Topology,
+    /// Inner (per-evaluation) parallelization mode.
+    pub mode: ParallelMode,
+    /// Seconds of real sleep per second of reported virtual cost
+    /// (0 for real backends whose cost is genuine wall time).
+    pub time_scale: f64,
+    /// Optional checkpointing policy.
+    pub checkpoint: Option<CheckpointPolicy>,
+    /// Stop (and checkpoint) after this many completions have been
+    /// recorded *in this process* — used by tests and by operators who
+    /// want to hand an experiment over to a larger allocation.
+    pub max_completions: Option<usize>,
+}
+
+impl ExecConfig {
+    /// A plain in-memory experiment (no checkpointing, full budget).
+    pub fn new(
+        hpo: HpoConfig,
+        topology: Topology,
+        mode: ParallelMode,
+        time_scale: f64,
+    ) -> Self {
+        ExecConfig {
+            hpo,
+            topology,
+            mode,
+            time_scale,
+            checkpoint: None,
+            max_completions: None,
+        }
+    }
+}
+
+/// Counters describing what the driver did.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    /// Surrogate refit counters (incremental vs full).
+    pub refits: RefitStats,
+    /// Completions recorded in this process (resumed runs start at 0).
+    pub completions: u64,
+    /// Checkpoint snapshots written.
+    pub checkpoints_written: u64,
+    /// Whether this run continued a checkpoint.
+    pub resumed: bool,
+}
+
+/// Result of driving one experiment (possibly partially, under
+/// `max_completions`).
+#[derive(Debug, Clone)]
+pub struct ExecOutcome {
+    /// Evaluations recorded so far, in completion order.
+    pub history: History,
+    /// Driver counters.
+    pub stats: ExecStats,
+    /// True when the full evaluation budget has been recorded.
+    pub complete: bool,
+}
+
+/// What a worker needs to execute one evaluation.
+struct WorkerJob {
+    id: usize,
+    theta: Vec<i64>,
+    seed: u64,
+}
+
+struct Completion {
+    id: usize,
+    outcomes: Vec<TrialOutcome>,
+}
+
+type JobQueue = Arc<(Mutex<VecDeque<Option<WorkerJob>>>, Condvar)>;
+
+/// Coordinator state — exactly what a checkpoint captures.
+struct Coordinator {
+    rng: Rng,
+    next_id: usize,
+    iter: usize,
+    submitted: usize,
+    history: History,
+    in_flight: Vec<PendingJob>,
+}
+
+impl Coordinator {
+    fn fresh(hpo: &HpoConfig) -> Self {
+        Coordinator {
+            rng: Rng::new(hpo.seed),
+            next_id: 0,
+            iter: 0,
+            submitted: 0,
+            history: History::default(),
+            in_flight: Vec::new(),
+        }
+    }
+
+    fn snapshot(&self, seed: u64) -> Checkpoint {
+        Checkpoint {
+            version: CHECKPOINT_VERSION,
+            seed,
+            rng_state: self.rng.state(),
+            next_id: self.next_id,
+            iter: self.iter,
+            submitted: self.submitted,
+            history: self.history.clone(),
+            in_flight: self.in_flight.clone(),
+        }
+    }
+}
+
+/// Run one evaluation's N trials with nested task parallelism (the
+/// paper's MPI-rank slicing for trial parallelism, or a data-parallel
+/// cost discount).
+pub(crate) fn run_evaluation(
+    evaluator: &dyn Evaluator,
+    theta: &[i64],
+    n_trials: usize,
+    seed: u64,
+    tasks: usize,
+    mode: ParallelMode,
+    time_scale: f64,
+) -> Vec<TrialOutcome> {
+    let run_one = |trial: usize| {
+        let o = evaluator.run_trial(theta, trial, seed);
+        if time_scale > 0.0 {
+            let scaled = o.cost.mul_f64(match mode {
+                ParallelMode::TrialParallel => time_scale,
+                // Data-parallel: the trial itself is sharded over tasks.
+                ParallelMode::DataParallel => {
+                    time_scale / (tasks as f64 * 0.85).max(1.0)
+                }
+            });
+            std::thread::sleep(scaled);
+        }
+        o
+    };
+
+    if tasks <= 1 || n_trials <= 1 || mode == ParallelMode::DataParallel {
+        return (0..n_trials).map(run_one).collect();
+    }
+
+    // Trial parallelism: slice trial indices over `tasks` inner threads.
+    let mut outcomes: Vec<Option<TrialOutcome>> = Vec::new();
+    outcomes.resize_with(n_trials, || None);
+    let slots = Mutex::new(&mut outcomes);
+    std::thread::scope(|scope| {
+        for task in 0..tasks.min(n_trials) {
+            let slots = &slots;
+            let run_one = &run_one;
+            scope.spawn(move || {
+                let mut t = task;
+                while t < n_trials {
+                    let o = run_one(t);
+                    slots.lock().unwrap()[t] = Some(o);
+                    t += tasks;
+                }
+            });
+        }
+    });
+    outcomes.into_iter().map(|o| o.expect("trial ran")).collect()
+}
+
+fn push_job(queue: &JobQueue, job: Option<WorkerJob>) {
+    let (lock, cv) = &**queue;
+    lock.lock().unwrap().push_back(job);
+    cv.notify_one();
+}
+
+fn worker_job(j: &PendingJob) -> WorkerJob {
+    WorkerJob { id: j.id, theta: j.theta.clone(), seed: j.seed }
+}
+
+/// Record one completion: move the job out of `in_flight`, aggregate its
+/// outcomes into the history, and feed the surrogate.
+fn record_completion(
+    st: &mut Coordinator,
+    proposer: &mut OnlineProposer,
+    evaluator: &dyn Evaluator,
+    hpo: &HpoConfig,
+    space: &Space,
+    c: Completion,
+) {
+    let pos = st
+        .in_flight
+        .iter()
+        .position(|j| j.id == c.id)
+        .expect("completion for an in-flight job");
+    let job = st.in_flight.swap_remove(pos);
+    let summary = aggregate(evaluator, &job.theta, &c.outcomes, hpo.weights);
+    let record = EvalRecord {
+        id: job.id,
+        n_params: evaluator.n_params(&job.theta),
+        theta: job.theta,
+        summary,
+        provenance: job.provenance,
+    };
+    proposer.observe(space, &record);
+    st.history.records.push(record);
+}
+
+/// Propose the next point and submit it to the worker pool.
+fn submit_proposal(
+    st: &mut Coordinator,
+    proposer: &mut OnlineProposer,
+    space: &Space,
+    queue: &JobQueue,
+) {
+    let theta = proposer.propose(space, &st.history, st.iter, &mut st.rng);
+    st.iter += 1;
+    let job = PendingJob {
+        id: st.next_id,
+        theta,
+        provenance: st.history.records.iter().map(|r| r.id).collect(),
+        seed: st.rng.next_u64(),
+    };
+    push_job(queue, Some(worker_job(&job)));
+    st.in_flight.push(job);
+    st.next_id += 1;
+    st.submitted += 1;
+}
+
+/// Start a fresh experiment.
+pub fn run_experiment(
+    evaluator: &dyn Evaluator,
+    cfg: &ExecConfig,
+) -> Result<ExecOutcome> {
+    let st = Coordinator::fresh(&cfg.hpo);
+    drive(evaluator, cfg, st, false)
+}
+
+/// Continue an experiment from a checkpoint. The checkpoint must come
+/// from a run with the same `HpoConfig::seed` (a cheap witness that the
+/// configuration matches).
+pub fn resume_experiment(
+    evaluator: &dyn Evaluator,
+    cfg: &ExecConfig,
+    ckpt: Checkpoint,
+) -> Result<ExecOutcome> {
+    if ckpt.seed != cfg.hpo.seed {
+        bail!(
+            "checkpoint seed {} does not match config seed {}",
+            ckpt.seed,
+            cfg.hpo.seed
+        );
+    }
+    let st = Coordinator {
+        rng: Rng::from_state(ckpt.rng_state),
+        next_id: ckpt.next_id,
+        iter: ckpt.iter,
+        submitted: ckpt.submitted,
+        history: ckpt.history,
+        in_flight: ckpt.in_flight,
+    };
+    drive(evaluator, cfg, st, true)
+}
+
+fn drive(
+    evaluator: &dyn Evaluator,
+    cfg: &ExecConfig,
+    mut st: Coordinator,
+    resumed: bool,
+) -> Result<ExecOutcome> {
+    let space = evaluator.space().clone();
+    let budget = cfg.hpo.max_evaluations;
+    let n_workers = cfg.topology.steps;
+    let tasks = cfg.topology.tasks_per_step;
+
+    let mut proposer = OnlineProposer::new(&cfg.hpo);
+    proposer.preload(&space, &st.history);
+
+    let mut stats = ExecStats { resumed, ..Default::default() };
+    let mut ckpt_err: Option<anyhow::Error> = None;
+
+    let queue: JobQueue =
+        Arc::new((Mutex::new(VecDeque::new()), Condvar::new()));
+    let (done_tx, done_rx) = mpsc::channel::<Completion>();
+
+    std::thread::scope(|scope| {
+        // --- workers ------------------------------------------------------
+        for _worker in 0..n_workers {
+            let queue = Arc::clone(&queue);
+            let done_tx = done_tx.clone();
+            let evaluator: &dyn Evaluator = evaluator;
+            let hpo = &cfg.hpo;
+            let mode = cfg.mode;
+            let time_scale = cfg.time_scale;
+            scope.spawn(move || loop {
+                let job = {
+                    let (lock, cv) = &*queue;
+                    let mut q = lock.lock().unwrap();
+                    loop {
+                        match q.pop_front() {
+                            Some(j) => break j,
+                            None => q = cv.wait(q).unwrap(),
+                        }
+                    }
+                };
+                let Some(job) = job else { break }; // poison pill
+                let outcomes = run_evaluation(
+                    evaluator,
+                    &job.theta,
+                    hpo.n_trials,
+                    job.seed,
+                    tasks,
+                    mode,
+                    time_scale,
+                );
+                let _ = done_tx.send(Completion { id: job.id, outcomes });
+            });
+        }
+        drop(done_tx);
+
+        // --- coordinator --------------------------------------------------
+        let fresh_start = st.history.is_empty()
+            && st.in_flight.is_empty()
+            && st.submitted == 0;
+        if fresh_start {
+            let init = initial_design(&space, &cfg.hpo, &mut st.rng);
+            for theta in init.into_iter().take(budget) {
+                let job = PendingJob {
+                    id: st.next_id,
+                    theta,
+                    provenance: vec![],
+                    seed: st.rng.next_u64(),
+                };
+                push_job(&queue, Some(worker_job(&job)));
+                st.in_flight.push(job);
+                st.next_id += 1;
+                st.submitted += 1;
+            }
+        } else {
+            // Resume: re-enqueue every in-flight job with its original
+            // (θ, seed); deterministic evaluators reproduce the killed
+            // run's outcomes exactly.
+            for job in &st.in_flight {
+                push_job(&queue, Some(worker_job(job)));
+            }
+        }
+        // Make the submission wave durable before waiting on it.
+        let mut unsaved_changes = false;
+        if let Some(pol) = &cfg.checkpoint {
+            match st.snapshot(cfg.hpo.seed).save(&pol.path) {
+                Ok(()) => stats.checkpoints_written += 1,
+                Err(e) => ckpt_err = Some(e),
+            }
+        }
+
+        // Initial-design barrier: provenance-free completions are
+        // buffered and recorded in id order once the whole design is in,
+        // so the surrogate's starting state is independent of worker
+        // timing (as in the seed loop).
+        let mut init_pending = st
+            .in_flight
+            .iter()
+            .filter(|j| j.provenance.is_empty())
+            .count();
+        let mut init_buffer: Vec<Completion> = Vec::new();
+        let mut completions_this_run: u64 = 0;
+        let mut stop_early = ckpt_err.is_some();
+
+        while !st.in_flight.is_empty() && !stop_early {
+            let Ok(c) = done_rx.recv() else { break };
+            let is_init = st
+                .in_flight
+                .iter()
+                .find(|j| j.id == c.id)
+                .map(|j| j.provenance.is_empty())
+                .unwrap_or(false);
+            let mut recorded_now = 0u64;
+            if is_init {
+                init_buffer.push(c);
+                init_pending -= 1;
+                if init_pending > 0 {
+                    continue;
+                }
+                init_buffer.sort_by_key(|c| c.id);
+                for c in init_buffer.drain(..) {
+                    record_completion(
+                        &mut st,
+                        &mut proposer,
+                        evaluator,
+                        &cfg.hpo,
+                        &space,
+                        c,
+                    );
+                    recorded_now += 1;
+                }
+                // Fill the pool with the first adaptive wave.
+                let wave = n_workers.min(budget.saturating_sub(st.submitted));
+                for _ in 0..wave {
+                    submit_proposal(&mut st, &mut proposer, &space, &queue);
+                }
+            } else {
+                record_completion(
+                    &mut st,
+                    &mut proposer,
+                    evaluator,
+                    &cfg.hpo,
+                    &space,
+                    c,
+                );
+                recorded_now = 1;
+                if st.submitted < budget {
+                    // Asynchronous update (Fig. 6): the surrogate has
+                    // already absorbed this completion incrementally;
+                    // propose and resubmit without waiting for peers.
+                    submit_proposal(&mut st, &mut proposer, &space, &queue);
+                }
+            }
+            completions_this_run += recorded_now;
+            unsaved_changes = true;
+
+            let due_now = cfg
+                .checkpoint
+                .as_ref()
+                .map(|p| completions_this_run % p.every.max(1) as u64 == 0)
+                .unwrap_or(false);
+            if let Some(maxc) = cfg.max_completions {
+                if completions_this_run >= maxc as u64 {
+                    stop_early = true;
+                }
+            }
+            if due_now || (stop_early && cfg.checkpoint.is_some()) {
+                let pol = cfg.checkpoint.as_ref().expect("policy present");
+                match st.snapshot(cfg.hpo.seed).save(&pol.path) {
+                    Ok(()) => {
+                        stats.checkpoints_written += 1;
+                        unsaved_changes = false;
+                    }
+                    Err(e) => {
+                        ckpt_err = Some(e);
+                        stop_early = true;
+                    }
+                }
+            }
+        }
+
+        // Final snapshot of a completed run (so `--resume` on a finished
+        // experiment is a clean no-op) — but only if the last in-loop
+        // save didn't already capture this exact state.
+        if !stop_early && unsaved_changes {
+            if let Some(pol) = &cfg.checkpoint {
+                match st.snapshot(cfg.hpo.seed).save(&pol.path) {
+                    Ok(()) => stats.checkpoints_written += 1,
+                    Err(e) => ckpt_err = Some(e),
+                }
+            }
+        }
+
+        // Shutdown: discard queued-but-unstarted work (those jobs stay in
+        // `in_flight`, hence in the checkpoint), stop the workers, drain
+        // stragglers whose results we deliberately drop for the same
+        // reason.
+        {
+            let (lock, cv) = &*queue;
+            let mut q = lock.lock().unwrap();
+            q.clear();
+            for _ in 0..n_workers {
+                q.push_back(None);
+            }
+            cv.notify_all();
+        }
+        while done_rx.recv().is_ok() {}
+
+        stats.completions = completions_this_run;
+    });
+
+    if let Some(e) = ckpt_err {
+        return Err(e);
+    }
+    stats.refits = proposer.stats();
+    let complete = st.history.len() >= budget;
+    Ok(ExecOutcome { history: st.history, stats, complete })
+}

@@ -1,0 +1,20 @@
+//! The experiment-execution subsystem: a reusable asynchronous driver
+//! with incremental surrogate refits, checkpoint/resume, and grid sweeps.
+//!
+//! This is the architectural seam between the HPO engine (`optimizer`)
+//! and the parallel substrate (`cluster`): everything that *runs*
+//! experiments — the `hyppo` CLI, `cluster::workers::run_async`, the
+//! sweep grid, future sharded/multi-backend drivers — goes through
+//! [`run_experiment`] / [`resume_experiment`]. See DESIGN.md §4 for the
+//! design and the checkpoint schema.
+
+pub mod checkpoint;
+pub mod driver;
+pub mod sweep;
+
+pub use checkpoint::{Checkpoint, PendingJob, CHECKPOINT_VERSION};
+pub use driver::{
+    resume_experiment, run_experiment, CheckpointPolicy, ExecConfig,
+    ExecOutcome, ExecStats,
+};
+pub use sweep::{run_sweep, SweepCell};

@@ -11,6 +11,7 @@ pub mod baselines;
 pub mod cluster;
 pub mod config;
 pub mod data;
+pub mod exec;
 pub mod linalg;
 pub mod eval;
 pub mod optimizer;

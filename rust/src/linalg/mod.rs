@@ -72,15 +72,27 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
     }
 }
 
-/// LU decomposition with partial pivoting; solves `A x = b` in place.
-/// Returns `None` when `A` is numerically singular.
-pub fn lu_solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
-    assert_eq!(a.rows, a.cols, "lu_solve needs a square matrix");
-    assert_eq!(b.len(), a.rows);
+/// Reusable LU factorization (partial pivoting) of a square matrix.
+///
+/// Factor once with [`lu_factor`], then [`LuFactors::solve`] any number
+/// of right-hand sides in O(n²) each — this is what makes [`invert`]
+/// O(n³) overall instead of O(n⁴).
+#[derive(Debug, Clone)]
+pub struct LuFactors {
+    n: usize,
+    /// Packed L (unit diagonal, below) and U (on/above diagonal) of PA.
+    lu: Vec<f64>,
+    /// Row permutation: `perm[k]` is the original row now at position k.
+    perm: Vec<usize>,
+}
+
+/// LU-factor `A` with partial pivoting. Returns `None` when `A` is
+/// numerically singular (pivot below 1e-13).
+pub fn lu_factor(a: &Mat) -> Option<LuFactors> {
+    assert_eq!(a.rows, a.cols, "lu_factor needs a square matrix");
     let n = a.rows;
     let mut lu = a.data.clone();
-    let mut x = b.to_vec();
-    let mut piv: Vec<usize> = (0..n).collect();
+    let mut perm: Vec<usize> = (0..n).collect();
 
     for k in 0..n {
         // Pivot search.
@@ -100,8 +112,7 @@ pub fn lu_solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
             for j in 0..n {
                 lu.swap(k * n + j, p * n + j);
             }
-            x.swap(k, p);
-            piv.swap(k, p);
+            perm.swap(k, p);
         }
         let pivot = lu[k * n + k];
         for i in (k + 1)..n {
@@ -110,17 +121,56 @@ pub fn lu_solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
             for j in (k + 1)..n {
                 lu[i * n + j] -= f * lu[k * n + j];
             }
-            x[i] -= f * x[k];
         }
     }
-    // Back substitution.
-    for i in (0..n).rev() {
-        for j in (i + 1)..n {
-            x[i] -= lu[i * n + j] * x[j];
+    Some(LuFactors { n, lu, perm })
+}
+
+impl LuFactors {
+    /// Solve `A x = b` using the stored factors (O(n²)).
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        assert_eq!(b.len(), n);
+        // Apply the row permutation, then forward/back substitution.
+        let mut x: Vec<f64> = self.perm.iter().map(|&p| b[p]).collect();
+        for i in 0..n {
+            for j in 0..i {
+                x[i] -= self.lu[i * n + j] * x[j];
+            }
         }
-        x[i] /= lu[i * n + i];
+        for i in (0..n).rev() {
+            for j in (i + 1)..n {
+                x[i] -= self.lu[i * n + j] * x[j];
+            }
+            x[i] /= self.lu[i * n + i];
+        }
+        x
     }
-    Some(x)
+}
+
+/// LU decomposition with partial pivoting; solves `A x = b`.
+/// Returns `None` when `A` is numerically singular.
+pub fn lu_solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(b.len(), a.rows);
+    Some(lu_factor(a)?.solve(b))
+}
+
+/// Dense inverse via LU: one factorization plus n unit-vector solves.
+/// Returns `None` when `A` is numerically singular.
+pub fn invert(a: &Mat) -> Option<Mat> {
+    let n = a.rows;
+    let f = lu_factor(a)?;
+    let mut inv = Mat::zeros(n, n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let col = f.solve(&e);
+        e[j] = 0.0;
+        for i in 0..n {
+            inv[(i, j)] = col[i];
+        }
+    }
+    Some(inv)
 }
 
 /// Cholesky factorization of an SPD matrix: returns lower-triangular `L`
@@ -275,5 +325,60 @@ mod tests {
     fn matvec_identity() {
         let i3 = Mat::eye(3);
         assert_eq!(i3.matvec(&[1.0, 2.0, 3.0]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn lu_factors_reusable_across_rhs() {
+        forall("LU factors solve many rhs", 20, |rng| {
+            let n = 2 + rng.usize_below(10);
+            let a = random_mat(n, rng);
+            let Some(f) = lu_factor(&a) else {
+                return Ok(()); // singular by chance
+            };
+            for _ in 0..3 {
+                let xtrue: Vec<f64> =
+                    (0..n).map(|_| rng.normal()).collect();
+                let b = a.matvec(&xtrue);
+                let x = f.solve(&b);
+                for (xi, ti) in x.iter().zip(&xtrue) {
+                    prop_assert!(
+                        (xi - ti).abs() < 1e-7 * (1.0 + ti.abs()),
+                        "{xi} vs {ti}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn invert_times_matrix_is_identity() {
+        forall("A * inv(A) = I", 20, |rng| {
+            let n = 2 + rng.usize_below(8);
+            let a = random_mat(n, rng);
+            let Some(inv) = invert(&a) else {
+                return Ok(());
+            };
+            // Check A·inv column-wise: A * inv[:,j] = e_j.
+            for j in 0..n {
+                let col: Vec<f64> = (0..n).map(|i| inv[(i, j)]).collect();
+                let e = a.matvec(&col);
+                for (i, v) in e.iter().enumerate() {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    prop_assert!(
+                        (v - want).abs() < 1e-7,
+                        "({i},{j}): {v}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn invert_rejects_singular() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(invert(&a).is_none());
+        assert!(lu_factor(&a).is_none());
     }
 }

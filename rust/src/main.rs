@@ -1,11 +1,15 @@
 //! `hyppo` — the Layer-3 coordinator CLI.
 //!
 //! Subcommands:
-//!   run        run an HPO experiment from a TOML config (synthetic or HLO
-//!              backend) on the simulated cluster
+//!   run        run (or resume) an HPO experiment from a TOML config
+//!              (synthetic or HLO backend) on the simulated cluster
+//!   sweep      drive a seed × topology grid through the same executor,
+//!              sharing the artifact/engine cache across experiments
 //!   slurm      emit the SLURM batch script for a steps × tasks topology
 //!   artifacts  inspect the AOT artifact manifest
 //!   speedup    print the Fig. 8-style virtual-time speedup for a topology
+//!
+//! See README.md for a walkthrough and DESIGN.md for the architecture.
 
 use std::sync::Arc;
 
@@ -13,13 +17,17 @@ use anyhow::{bail, Context, Result};
 
 use hyppo::cluster::sim::{simulate, speedup, EvalCost, SimConfig};
 use hyppo::cluster::slurm::{render, SlurmJobConfig};
-use hyppo::cluster::workers::{run_async, AsyncConfig};
 use hyppo::cluster::Topology;
+use hyppo::config::RunConfig;
 use hyppo::eval::hlo::MlpHloEvaluator;
 use hyppo::eval::synthetic::SyntheticEvaluator;
 use hyppo::eval::Evaluator;
+use hyppo::exec::{
+    resume_experiment, run_experiment, run_sweep, Checkpoint,
+    CheckpointPolicy, ExecConfig, ExecOutcome,
+};
 use hyppo::optimizer::History;
-use hyppo::report::{print_table, write_history_csv};
+use hyppo::report::{print_table, write_history_csv, write_sweep_csv};
 use hyppo::runtime::{artifact_dir, SharedEngine};
 use hyppo::util::cli::Args;
 
@@ -28,6 +36,10 @@ hyppo — surrogate-based multi-level-parallelism HPO (MLHPC'21 reproduction)
 
 USAGE:
   hyppo run --config <file.toml> [--backend synthetic|mlp] [--out out.csv]
+            [--checkpoint ckpt.json] [--resume ckpt.json]
+            [--max-completions N] [--time-scale S]
+  hyppo sweep --config <file.toml> [--backend synthetic|mlp]
+            [--seeds 0,1,2] [--topologies 1x1,4x2] [--out sweep.csv]
   hyppo slurm [--steps N] [--tasks M] [--cpu]
   hyppo artifacts [--family mlp|cnn|unet]
   hyppo speedup [--steps N] [--tasks M] [--evals E] [--trials T]
@@ -39,6 +51,7 @@ fn main() {
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     let result = match cmd {
         "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
         "slurm" => cmd_slurm(&args),
         "artifacts" => cmd_artifacts(&args),
         "speedup" => cmd_speedup(&args),
@@ -78,33 +91,25 @@ fn summarize(history: &History, gamma: f64) {
     );
 }
 
-fn cmd_run(args: &Args) -> Result<()> {
-    let cfg_path = args
-        .get("config")
-        .context("--config <file.toml> is required")?;
-    let cfg = hyppo::config::load(std::path::Path::new(cfg_path))?;
-    let backend = args.str_or("backend", "synthetic");
-
-    let history = match backend.as_str() {
-        "synthetic" => {
-            let ev = SyntheticEvaluator::new(cfg.space.clone(), cfg.hpo.seed);
-            run_async(
-                &ev,
-                &AsyncConfig {
-                    hpo: cfg.hpo.clone(),
-                    topology: cfg.topology,
-                    mode: cfg.mode,
-                    time_scale: args.f64_or("time-scale", 1e-5),
-                },
-            )
-        }
+/// Build an evaluator for `backend`, seeded with `seed`. The engine is
+/// created once by the caller and shared, so every experiment (and every
+/// sweep cell) reuses one PJRT compile cache.
+fn make_evaluator(
+    backend: &str,
+    cfg: &RunConfig,
+    engine: Option<&Arc<SharedEngine>>,
+    seed: u64,
+) -> Result<Box<dyn Evaluator>> {
+    match backend {
+        "synthetic" => Ok(Box::new(SyntheticEvaluator::new(
+            cfg.space.clone(),
+            seed,
+        ))),
         "mlp" => {
-            let dir = artifact_dir()
-                .context("artifacts not found; run `make artifacts`")?;
-            let engine = Arc::new(SharedEngine::load(dir)?);
+            let engine = engine.expect("caller creates the engine");
             let series = hyppo::data::timeseries::generate(
                 &hyppo::data::timeseries::SeriesConfig::default(),
-                cfg.hpo.seed,
+                seed,
             );
             let ws = hyppo::data::timeseries::windowed(&series, 16);
             let split = hyppo::data::timeseries::split(&ws, 0.7, 0.15);
@@ -114,31 +119,210 @@ fn cmd_run(args: &Args) -> Result<()> {
                     y: w.y.iter().map(|v| vec![*v]).collect(),
                 }
             };
-            let ev = MlpHloEvaluator::new(
-                engine,
+            Ok(Box::new(MlpHloEvaluator::new(
+                Arc::clone(engine),
                 to_ds(&split.train),
                 to_ds(&split.val),
                 16,
                 1,
                 10,
-            );
-            run_async(
-                &ev,
-                &AsyncConfig {
-                    hpo: cfg.hpo.clone(),
-                    topology: cfg.topology,
-                    mode: cfg.mode,
-                    time_scale: 0.0,
-                },
-            )
+            )))
         }
         other => bail!("unknown backend {other:?} (synthetic|mlp)"),
+    }
+}
+
+/// Load the shared engine when the backend needs it.
+fn engine_for(backend: &str) -> Result<Option<Arc<SharedEngine>>> {
+    if backend != "mlp" {
+        return Ok(None);
+    }
+    let dir = artifact_dir()
+        .context("artifacts not found; run `make artifacts`")?;
+    Ok(Some(Arc::new(SharedEngine::load(dir)?)))
+}
+
+/// Default time-scale per backend: simulated costs are compressed, real
+/// training runs at genuine wall time.
+fn default_time_scale(backend: &str) -> f64 {
+    if backend == "mlp" {
+        0.0
+    } else {
+        1e-5
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg_path = args
+        .get("config")
+        .context("--config <file.toml> is required")?;
+    let cfg = hyppo::config::load(std::path::Path::new(cfg_path))?;
+    let backend = args.str_or("backend", "synthetic");
+    let engine = engine_for(&backend)?;
+    let evaluator =
+        make_evaluator(&backend, &cfg, engine.as_ref(), cfg.hpo.seed)?;
+
+    let resume_path = args.get("resume");
+    let checkpoint_path = args.get("checkpoint").or(resume_path);
+    let mut exec_cfg = ExecConfig::new(
+        cfg.hpo.clone(),
+        cfg.topology,
+        cfg.mode,
+        args.f64_or("time-scale", default_time_scale(&backend)),
+    );
+    exec_cfg.checkpoint =
+        checkpoint_path.map(CheckpointPolicy::every_completion);
+    if let Some(n) = args.get("max-completions") {
+        exec_cfg.max_completions =
+            Some(n.parse().context("--max-completions must be a count")?);
+    }
+
+    let out: ExecOutcome = match resume_path {
+        Some(path) => {
+            let ckpt = Checkpoint::load(path)?;
+            println!(
+                "resuming from {path}: {} recorded, {} in flight",
+                ckpt.history.len(),
+                ckpt.in_flight.len()
+            );
+            resume_experiment(evaluator.as_ref(), &exec_cfg, ckpt)?
+        }
+        None => run_experiment(evaluator.as_ref(), &exec_cfg)?,
     };
 
-    summarize(&history, cfg.hpo.gamma);
-    if let Some(out) = args.get("out") {
-        write_history_csv(&history, cfg.hpo.gamma, out)?;
-        println!("history -> {out}");
+    summarize(&out.history, cfg.hpo.gamma);
+    let s = &out.stats;
+    println!(
+        "refits: {} incremental / {} full   checkpoints: {}   {}",
+        s.refits.incremental,
+        s.refits.full,
+        s.checkpoints_written,
+        if out.complete {
+            "status: complete"
+        } else {
+            "status: partial (resume with --resume)"
+        },
+    );
+    if let Some(out_path) = args.get("out") {
+        write_history_csv(&out.history, cfg.hpo.gamma, out_path)?;
+        println!("history -> {out_path}");
+    }
+    Ok(())
+}
+
+/// Parse `--seeds 0,1,2` (default: the config seed).
+fn parse_seeds(args: &Args, default: u64) -> Result<Vec<u64>> {
+    match args.get("seeds") {
+        None => Ok(vec![default]),
+        Some(s) => s
+            .split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(|t| {
+                t.trim()
+                    .parse::<u64>()
+                    .with_context(|| format!("bad seed {t:?}"))
+            })
+            .collect(),
+    }
+}
+
+/// Parse `--topologies 1x1,4x2` (default: the config topology).
+fn parse_topologies(args: &Args, default: Topology) -> Result<Vec<Topology>> {
+    match args.get("topologies") {
+        None => Ok(vec![default]),
+        Some(s) => s
+            .split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(|t| {
+                let (a, b) = t
+                    .trim()
+                    .split_once('x')
+                    .with_context(|| format!("bad topology {t:?} (SxT)"))?;
+                let steps: usize = a
+                    .parse()
+                    .with_context(|| format!("bad steps in {t:?}"))?;
+                let tasks: usize = b
+                    .parse()
+                    .with_context(|| format!("bad tasks in {t:?}"))?;
+                if steps == 0 || tasks == 0 {
+                    bail!("bad topology {t:?}: steps and tasks must be > 0");
+                }
+                Ok(Topology::new(steps, tasks))
+            })
+            .collect(),
+    }
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg_path = args
+        .get("config")
+        .context("--config <file.toml> is required")?;
+    let cfg = hyppo::config::load(std::path::Path::new(cfg_path))?;
+    let backend = args.str_or("backend", "synthetic");
+    let engine = engine_for(&backend)?;
+    let seeds = parse_seeds(args, cfg.hpo.seed)?;
+    let topologies = parse_topologies(args, cfg.topology)?;
+
+    let base = ExecConfig::new(
+        cfg.hpo.clone(),
+        cfg.topology,
+        cfg.mode,
+        args.f64_or("time-scale", default_time_scale(&backend)),
+    );
+    let cells = run_sweep(
+        |seed| make_evaluator(&backend, &cfg, engine.as_ref(), seed),
+        &base,
+        &seeds,
+        &topologies,
+    )?;
+
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.seed.to_string(),
+                format!(
+                    "{}x{}",
+                    c.topology.steps, c.topology.tasks_per_step
+                ),
+                c.evaluations.to_string(),
+                format!("{:.4e}", c.best_objective),
+                format!("{:?}", c.best_theta),
+                format!("{:.2}s", c.wall.as_secs_f64()),
+                format!(
+                    "{}/{}",
+                    c.stats.refits.incremental, c.stats.refits.full
+                ),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!(
+            "sweep: {} seeds × {} topologies ({} cells)",
+            seeds.len(),
+            topologies.len(),
+            cells.len()
+        ),
+        &[
+            "seed", "topology", "evals", "best", "theta", "wall",
+            "incr/full",
+        ],
+        &rows,
+    );
+    if let Some(best) = cells.iter().min_by(|a, b| {
+        a.best_objective.partial_cmp(&b.best_objective).unwrap()
+    }) {
+        println!(
+            "best cell: seed {} topology {}x{} objective {:.6e}",
+            best.seed,
+            best.topology.steps,
+            best.topology.tasks_per_step,
+            best.best_objective
+        );
+    }
+    if let Some(out_path) = args.get("out") {
+        write_sweep_csv(&cells, out_path)?;
+        println!("sweep -> {out_path}");
     }
     Ok(())
 }

@@ -15,6 +15,7 @@ use crate::space::{Point, Space};
 /// The cycling value-vs-distance weights of [25].
 pub const WEIGHT_CYCLE: [f64; 4] = [0.3, 0.5, 0.8, 0.95];
 
+/// Candidate-set sizing and perturbation knobs.
 #[derive(Debug, Clone)]
 pub struct CandidateConfig {
     /// Total candidates per iteration (half perturbed, half uniform).

@@ -10,13 +10,20 @@
 use crate::sampling::rng::Rng;
 use crate::space::{Point, Space};
 
+/// Genetic-algorithm knobs (defaults reproduce the paper's setting).
 #[derive(Debug, Clone)]
 pub struct GaConfig {
+    /// Individuals per generation.
     pub population: usize,
+    /// Generations to evolve.
     pub generations: usize,
+    /// Tournament size for parent selection.
     pub tournament: usize,
+    /// Probability of uniform crossover (vs cloning a parent).
     pub p_crossover: f64,
+    /// Per-coordinate mutation probability.
     pub p_mutate_coord: f64,
+    /// Mutation scale as a fraction of each coordinate's range.
     pub sigma: f64,
 }
 

@@ -8,18 +8,16 @@
 
 pub mod candidates;
 pub mod ga;
+pub mod online;
+
+pub use online::{OnlineProposer, RefitStats};
 
 use crate::eval::{aggregate, EvalSummary, Evaluator};
-use crate::optimizer::candidates::{CandidateConfig, WEIGHT_CYCLE};
-use crate::optimizer::ga::{maximize, GaConfig};
+use crate::optimizer::candidates::CandidateConfig;
 use crate::sampling::rng::Rng;
 use crate::sampling::{halton_lattice, lhs_lattice};
 use crate::space::{Point, Space};
-use crate::surrogate::ensemble::RbfEnsemble;
-use crate::surrogate::gp::{expected_improvement, GpSurrogate};
-use crate::surrogate::rbf::RbfSurrogate;
-use crate::surrogate::Surrogate;
-use crate::uq::{LossInterval, UqWeights};
+use crate::uq::UqWeights;
 
 /// Which surrogate drives the iterative sampling (paper Feature 2).
 #[derive(Debug, Clone, PartialEq)]
@@ -35,24 +33,34 @@ pub enum SurrogateKind {
 /// Initial experimental design.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum InitDesign {
+    /// Uniform random lattice points.
     Random,
+    /// Latin-hypercube sample snapped to the lattice.
     Lhs,
+    /// Halton low-discrepancy sequence snapped to the lattice.
     Halton,
 }
 
+/// Full configuration of one HPO problem.
 #[derive(Debug, Clone)]
 pub struct HpoConfig {
     /// Total expensive evaluations (initial design included).
     pub max_evaluations: usize,
+    /// Size of the initial design.
     pub n_init: usize,
     /// N repeated trainings per θ (paper Feature 1).
     pub n_trials: usize,
+    /// Trained-vs-dropout weights of Eqs. (6)-(7).
     pub weights: UqWeights,
+    /// Which surrogate drives the adaptive phase.
     pub surrogate: SurrogateKind,
     /// Eq. (9) regularization strength γ (0 disables).
     pub gamma: f64,
+    /// Master seed; every stochastic component derives from it.
     pub seed: u64,
+    /// Candidate-generation knobs of the RBF acquisition.
     pub candidates: CandidateConfig,
+    /// How the initial design is drawn.
     pub init_design: InitDesign,
     /// Fixed initial points (e.g. Fig. 3 seeds the surrogate with 10
     /// deliberately bad evaluations); overrides `init_design` when set.
@@ -79,9 +87,13 @@ impl Default for HpoConfig {
 /// One completed evaluation in the optimization history.
 #[derive(Debug, Clone)]
 pub struct EvalRecord {
+    /// Submission id (stable across checkpoint/resume).
     pub id: usize,
+    /// The evaluated hyperparameter set.
     pub theta: Point,
+    /// Aggregated outcome of the N trials (Feature 1).
     pub summary: EvalSummary,
+    /// Trainable-parameter count of the θ architecture.
     pub n_params: u64,
     /// Ids of the evaluations the surrogate had seen when this point was
     /// proposed (Fig. 6's provenance; empty for the initial design).
@@ -103,17 +115,21 @@ impl EvalRecord {
 /// Optimization history + summary queries used by the reports.
 #[derive(Debug, Clone, Default)]
 pub struct History {
+    /// Completed evaluations in the order the surrogate saw them.
     pub records: Vec<EvalRecord>,
 }
 
 impl History {
+    /// Number of recorded evaluations.
     pub fn len(&self) -> usize {
         self.records.len()
     }
+    /// True when nothing has been recorded yet.
     pub fn is_empty(&self) -> bool {
         self.records.is_empty()
     }
 
+    /// The record minimizing the γ-regulated objective.
     pub fn best(&self, gamma: f64) -> Option<&EvalRecord> {
         self.records.iter().min_by(|a, b| {
             a.objective(gamma).partial_cmp(&b.objective(gamma)).unwrap()
@@ -194,6 +210,11 @@ pub fn initial_design(
 
 /// Propose the next point to evaluate given the current history.
 /// `iter` indexes the adaptive phase (for the weight cycle).
+///
+/// One-shot convenience over [`OnlineProposer`]: fits a fresh surrogate
+/// on the whole history every call. Long-running loops (the `exec`
+/// driver) should hold an `OnlineProposer` instead and absorb
+/// completions incrementally.
 pub fn propose_next(
     space: &Space,
     history: &History,
@@ -201,113 +222,9 @@ pub fn propose_next(
     iter: usize,
     rng: &mut Rng,
 ) -> Point {
-    let xs: Vec<Vec<f64>> = history
-        .records
-        .iter()
-        .map(|r| space.to_unit(&r.theta))
-        .collect();
-    let ys: Vec<f64> =
-        history.records.iter().map(|r| r.objective(cfg.gamma)).collect();
-    let evaluated = history.points();
-
-    let fallback = |rng: &mut Rng| {
-        let mut p = space.random_point(rng);
-        let mut guard = 0;
-        while evaluated.contains(&p) && guard < 1000 {
-            p = space.random_point(rng);
-            guard += 1;
-        }
-        p
-    };
-
-    match &cfg.surrogate {
-        SurrogateKind::Rbf => {
-            let mut model = RbfSurrogate::new();
-            if !model.fit(&xs, &ys) {
-                return fallback(rng);
-            }
-            let best = &history.best(cfg.gamma).unwrap().theta;
-            let cands = candidates::generate(
-                space,
-                best,
-                &evaluated,
-                &cfg.candidates,
-                rng,
-            );
-            if cands.is_empty() {
-                return fallback(rng);
-            }
-            let values: Vec<f64> = cands
-                .iter()
-                .map(|c| model.predict(&space.to_unit(c)))
-                .collect();
-            let w = WEIGHT_CYCLE[iter % WEIGHT_CYCLE.len()];
-            match candidates::select(space, &cands, &values, &evaluated, w)
-            {
-                Some(i) => cands[i].clone(),
-                None => fallback(rng),
-            }
-        }
-        SurrogateKind::Gp => {
-            let mut gp = GpSurrogate::new();
-            if !gp.fit(&xs, &ys) {
-                return fallback(rng);
-            }
-            let best_y =
-                ys.iter().cloned().fold(f64::INFINITY, f64::min);
-            let (point, _fit) =
-                maximize(space, &GaConfig::default(), rng, |p| {
-                    if evaluated.iter().any(|e| e == p) {
-                        return f64::NEG_INFINITY;
-                    }
-                    let u = space.to_unit(p);
-                    let mu = gp.predict(&u);
-                    let sd = gp.predict_std(&u).unwrap_or(0.0);
-                    expected_improvement(mu, sd, best_y)
-                });
-            if evaluated.iter().any(|e| e == &point) {
-                fallback(rng)
-            } else {
-                point
-            }
-        }
-        SurrogateKind::RbfEnsemble { alpha, members } => {
-            let intervals: Vec<LossInterval> = history
-                .records
-                .iter()
-                .map(|r| LossInterval {
-                    center: r.objective(cfg.gamma),
-                    radius: r.summary.interval.radius,
-                })
-                .collect();
-            let mut ens = RbfEnsemble::new(*members, *alpha);
-            if !ens.fit(&xs, &intervals, rng) {
-                return fallback(rng);
-            }
-            let best = &history.best(cfg.gamma).unwrap().theta;
-            let cands = candidates::generate(
-                space,
-                best,
-                &evaluated,
-                &cfg.candidates,
-                rng,
-            );
-            if cands.is_empty() {
-                return fallback(rng);
-            }
-            // Eq. (8): score = μ + ασ, then the same distance trade-off.
-            let values: Vec<f64> = cands
-                .iter()
-                .map(|c| ens.score(&space.to_unit(c)))
-                .collect();
-            let w = WEIGHT_CYCLE[iter % WEIGHT_CYCLE.len()];
-            match candidates::select(space, &cands, &values, &evaluated, w)
-            {
-                Some(i) => cands[i].clone(),
-                None => fallback(rng),
-            }
-        }
-    }
+    let mut proposer = OnlineProposer::new(cfg);
+    proposer.preload(space, history);
+    proposer.propose(space, history, iter, rng)
 }
 
 /// Sequential surrogate-based HPO (one evaluation per iteration).

@@ -4,6 +4,7 @@
 use std::io::Result;
 use std::path::Path;
 
+use crate::exec::SweepCell;
 use crate::optimizer::History;
 use crate::util::csv::CsvWriter;
 
@@ -68,6 +69,41 @@ pub fn write_convergence_csv<P: AsRef<Path>>(
             );
         }
         w.row(&row)?;
+    }
+    w.finish()
+}
+
+/// Per-cell dump of a `hyppo sweep` grid: seed, topology, best result,
+/// wall time, and the executor's refit counters.
+pub fn write_sweep_csv<P: AsRef<Path>>(
+    cells: &[SweepCell],
+    path: P,
+) -> Result<()> {
+    let mut w = CsvWriter::create(
+        path,
+        &[
+            "seed", "steps", "tasks", "evaluations", "best_objective",
+            "best_theta", "wall_s", "incremental_refits", "full_refits",
+        ],
+    )?;
+    for c in cells {
+        let theta = c
+            .best_theta
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join(" ");
+        w.row(&[
+            c.seed.to_string(),
+            c.topology.steps.to_string(),
+            c.topology.tasks_per_step.to_string(),
+            c.evaluations.to_string(),
+            format!("{:.6e}", c.best_objective),
+            theta,
+            format!("{:.3}", c.wall.as_secs_f64()),
+            c.stats.refits.incremental.to_string(),
+            c.stats.refits.full.to_string(),
+        ])?;
     }
     w.finish()
 }

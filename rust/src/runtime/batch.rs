@@ -1,0 +1,81 @@
+//! Padded-batch construction shared by the real PJRT model driver and the
+//! feature-gated stub. Pure host-side code: no `xla` dependency, so the
+//! batching contract (zero-padding + weight masking, see
+//! `python/compile/kernels/reductions.py`) is always compiled and tested.
+
+use anyhow::{bail, Result};
+
+/// A dataset batch already shaped for the compiled batch dimension: rows
+/// beyond the logical batch are zero-padded and masked out by the weight
+/// vector (see kernels/reductions.py for the masking contract).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// Row-major input features, `batch * x_dim` elements.
+    pub x: Vec<f32>,
+    /// Row-major targets, `batch * y_dim` elements.
+    pub y: Vec<f32>,
+    /// Per-row mask: 1.0 for live rows, 0.0 for padding.
+    pub weights: Vec<f32>,
+}
+
+/// Build a padded batch from row-major samples.
+pub fn make_batch(
+    xs: &[&[f32]],
+    ys: &[&[f32]],
+    batch: usize,
+) -> Result<Batch> {
+    if xs.len() != ys.len() {
+        bail!("x/y row mismatch");
+    }
+    if xs.len() > batch {
+        bail!("too many rows ({}) for compiled batch {batch}", xs.len());
+    }
+    if xs.is_empty() {
+        bail!("empty batch");
+    }
+    let xd = xs[0].len();
+    let yd = ys[0].len();
+    let mut x = vec![0.0f32; batch * xd];
+    let mut y = vec![0.0f32; batch * yd];
+    let mut weights = vec![0.0f32; batch];
+    for (i, (xr, yr)) in xs.iter().zip(ys).enumerate() {
+        if xr.len() != xd || yr.len() != yd {
+            bail!("ragged batch rows");
+        }
+        x[i * xd..(i + 1) * xd].copy_from_slice(xr);
+        y[i * yd..(i + 1) * yd].copy_from_slice(yr);
+        weights[i] = 1.0;
+    }
+    Ok(Batch { x, y, weights })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pads_and_masks() {
+        let xs: Vec<&[f32]> = vec![&[1.0, 2.0], &[3.0, 4.0]];
+        let ys: Vec<&[f32]> = vec![&[0.5], &[0.25]];
+        let b = make_batch(&xs, &ys, 4).unwrap();
+        assert_eq!(b.x.len(), 8);
+        assert_eq!(b.y.len(), 4);
+        assert_eq!(b.weights, vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(&b.x[..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&b.x[4..], &[0.0; 4]);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let xs: Vec<&[f32]> = vec![&[1.0, 2.0]];
+        let ys: Vec<&[f32]> = vec![&[0.5], &[0.25]];
+        assert!(make_batch(&xs, &ys, 4).is_err()); // row mismatch
+        let ys1: Vec<&[f32]> = vec![&[0.5]];
+        assert!(make_batch(&xs, &ys1, 0).is_err()); // too many rows
+        let none: Vec<&[f32]> = vec![];
+        assert!(make_batch(&none, &none, 4).is_err()); // empty
+        let ragged_x: Vec<&[f32]> = vec![&[1.0, 2.0], &[3.0]];
+        let ys2: Vec<&[f32]> = vec![&[0.5], &[0.25]];
+        assert!(make_batch(&ragged_x, &ys2, 4).is_err());
+    }
+}

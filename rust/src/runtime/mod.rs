@@ -1,13 +1,23 @@
 //! Layer-3 runtime: PJRT client, artifact registry, and the model training
 //! driver that executes the AOT-compiled Layer-1/2 computations.
 
+pub mod batch;
+#[cfg(feature = "pjrt")]
 pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod model;
 pub mod registry;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
+pub use batch::{make_batch, Batch};
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, SharedEngine};
-pub use model::{make_batch, Batch, Model};
+#[cfg(feature = "pjrt")]
+pub use model::Model;
 pub use registry::{ArtifactSpec, Manifest, TensorSpec};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Engine, Model, SharedEngine};
 
 /// Conventional artifact directory (relative to the repo root / CWD).
 pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

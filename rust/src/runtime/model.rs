@@ -7,52 +7,12 @@
 use anyhow::{bail, Context, Result};
 use xla::Literal;
 
+use crate::runtime::batch::Batch;
 use crate::runtime::engine::{
     f32_scalar, f32_tensor, i32_scalar, to_f32_scalar, to_f32_vec,
     SharedEngine,
 };
 use crate::runtime::registry::TensorSpec;
-
-/// A dataset batch already shaped for the compiled batch dimension: rows
-/// beyond `active` are zero-padded and masked out by the weight vector
-/// (see kernels/reductions.py for the masking contract).
-#[derive(Debug, Clone)]
-pub struct Batch {
-    pub x: Vec<f32>,
-    pub y: Vec<f32>,
-    pub weights: Vec<f32>,
-}
-
-/// Build a padded batch from row-major samples.
-pub fn make_batch(
-    xs: &[&[f32]],
-    ys: &[&[f32]],
-    batch: usize,
-) -> Result<Batch> {
-    if xs.len() != ys.len() {
-        bail!("x/y row mismatch");
-    }
-    if xs.len() > batch {
-        bail!("too many rows ({}) for compiled batch {batch}", xs.len());
-    }
-    if xs.is_empty() {
-        bail!("empty batch");
-    }
-    let xd = xs[0].len();
-    let yd = ys[0].len();
-    let mut x = vec![0.0f32; batch * xd];
-    let mut y = vec![0.0f32; batch * yd];
-    let mut weights = vec![0.0f32; batch];
-    for (i, (xr, yr)) in xs.iter().zip(ys).enumerate() {
-        if xr.len() != xd || yr.len() != yd {
-            bail!("ragged batch rows");
-        }
-        x[i * xd..(i + 1) * xd].copy_from_slice(xr);
-        y[i * yd..(i + 1) * yd].copy_from_slice(yr);
-        weights[i] = 1.0;
-    }
-    Ok(Batch { x, y, weights })
-}
 
 /// A live model: architecture name + current parameter literals.
 pub struct Model<'e> {

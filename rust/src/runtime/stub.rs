@@ -1,0 +1,153 @@
+//! API-identical stand-ins for the PJRT engine and model driver, compiled
+//! when the `pjrt` feature is off (the offline default — see the header
+//! note in Cargo.toml and DESIGN.md §2).
+//!
+//! Everything here typechecks exactly like `runtime::engine` /
+//! `runtime::model` but fails at the construction boundary
+//! (`SharedEngine::load`, `Model::init`) with an actionable message, so
+//! callers that gate on artifact availability — the integration tests,
+//! `bench_runtime`, the `mlp` CLI backend — degrade to a clean skip or
+//! error instead of a link failure. `Model` holds an uninhabited field,
+//! so its post-construction methods are statically unreachable.
+
+use std::convert::Infallible;
+use std::marker::PhantomData;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::batch::Batch;
+
+const NO_PJRT: &str = "hyppo was built without the `pjrt` feature; \
+    rebuild with `--features pjrt` (and the `xla` crate, see Cargo.toml) \
+    to run AOT artifacts";
+
+/// Stub of the single-threaded engine core (never constructible).
+pub struct Engine {
+    #[allow(dead_code)] // uninhabited marker; nothing can read it
+    void: Infallible,
+}
+
+impl Engine {
+    /// Always fails: the PJRT runtime is not compiled in.
+    pub fn load<P: AsRef<Path>>(_artifact_dir: P) -> Result<Engine> {
+        bail!(NO_PJRT)
+    }
+}
+
+/// Stub of the process-wide engine handle (never constructible).
+pub struct SharedEngine {
+    void: Infallible,
+}
+
+impl SharedEngine {
+    /// Always fails: the PJRT runtime is not compiled in.
+    pub fn load<P: AsRef<Path>>(_artifact_dir: P) -> Result<Self> {
+        bail!(NO_PJRT)
+    }
+
+    /// Statically unreachable (no `SharedEngine` value can exist).
+    pub fn manifest_archs(&self, _family: &str) -> Vec<String> {
+        match self.void {}
+    }
+}
+
+/// Stub of the live-model driver (never constructible).
+pub struct Model<'e> {
+    void: Infallible,
+    _engine: PhantomData<&'e SharedEngine>,
+}
+
+impl<'e> Model<'e> {
+    /// Always fails: the PJRT runtime is not compiled in.
+    pub fn init(
+        _engine: &'e SharedEngine,
+        _arch: &str,
+        _seed: i32,
+    ) -> Result<Self> {
+        bail!(NO_PJRT)
+    }
+
+    /// Always fails: the PJRT runtime is not compiled in.
+    pub fn init_host(
+        _engine: &'e SharedEngine,
+        _arch: &str,
+        _seed: u64,
+    ) -> Result<Self> {
+        bail!(NO_PJRT)
+    }
+
+    /// Statically unreachable (no `Model` value can exist).
+    pub fn arch(&self) -> &str {
+        match self.void {}
+    }
+
+    /// Statically unreachable (no `Model` value can exist).
+    pub fn x_elems(&self) -> usize {
+        match self.void {}
+    }
+
+    /// Statically unreachable (no `Model` value can exist).
+    pub fn y_elems(&self) -> usize {
+        match self.void {}
+    }
+
+    /// Statically unreachable (no `Model` value can exist).
+    pub fn train_step(
+        &mut self,
+        _batch: &Batch,
+        _lr: f32,
+        _dropout_p: f32,
+        _seed: i32,
+    ) -> Result<f32> {
+        match self.void {}
+    }
+
+    /// Statically unreachable (no `Model` value can exist).
+    pub fn train_step_data_parallel(
+        &mut self,
+        _shards: &[Batch],
+        _lr: f32,
+        _dropout_p: f32,
+        _seed: i32,
+    ) -> Result<f32> {
+        match self.void {}
+    }
+
+    /// Statically unreachable (no `Model` value can exist).
+    pub fn predict(&self, _x: &[f32]) -> Result<Vec<f32>> {
+        match self.void {}
+    }
+
+    /// Statically unreachable (no `Model` value can exist).
+    pub fn predict_dropout(
+        &self,
+        _x: &[f32],
+        _p: f32,
+        _seed: i32,
+    ) -> Result<Vec<f32>> {
+        match self.void {}
+    }
+
+    /// Statically unreachable (no `Model` value can exist).
+    pub fn eval_loss(&self, _batch: &Batch) -> Result<f32> {
+        match self.void {}
+    }
+
+    /// Statically unreachable (no `Model` value can exist).
+    pub fn n_params(&self) -> usize {
+        match self.void {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_fails_with_actionable_message() {
+        let err = SharedEngine::load("/tmp").unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"));
+        assert!(Engine::load("/tmp").is_err());
+    }
+}

@@ -13,8 +13,10 @@ use crate::surrogate::rbf::RbfSurrogate;
 use crate::surrogate::Surrogate;
 use crate::uq::LossInterval;
 
+/// RBF ensemble over confidence-interval extremes (paper Eq. 8).
 #[derive(Debug, Clone)]
 pub struct RbfEnsemble {
+    /// Number of member RBFs to fit.
     pub n_members: usize,
     /// α of Eq. (8).
     pub alpha: f64,
@@ -22,6 +24,7 @@ pub struct RbfEnsemble {
 }
 
 impl RbfEnsemble {
+    /// A fresh ensemble (`n_members` ≥ 2, α ∈ \[−2, 2\]).
     pub fn new(n_members: usize, alpha: f64) -> Self {
         assert!(n_members >= 2, "ensemble needs >= 2 members");
         assert!(
@@ -69,6 +72,7 @@ impl RbfEnsemble {
         !self.members.is_empty()
     }
 
+    /// Number of members whose fit succeeded.
     pub fn n_fitted(&self) -> usize {
         self.members.len()
     }

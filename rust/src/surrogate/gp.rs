@@ -12,11 +12,16 @@
 use crate::linalg::{cholesky, cholesky_solve, forward_solve, Mat};
 use crate::surrogate::Surrogate;
 
+/// Kriging surrogate state: correlation length-scale, Cholesky factor of
+/// the covariance, and the closed-form mean/scale estimates.
 #[derive(Debug, Clone)]
 pub struct GpSurrogate {
+    /// Diagonal jitter keeping the covariance SPD under duplicate /
+    /// near-duplicate evaluations of the same θ.
     pub nugget: f64,
     theta: f64,
     xs: Vec<Vec<f64>>,
+    ys: Vec<f64>,
     l: Option<Mat>,
     alpha: Vec<f64>, // K^{-1} (y - nu)
     nu: f64,
@@ -30,6 +35,7 @@ impl Default for GpSurrogate {
             nugget: 1e-6,
             theta: 1.0,
             xs: Vec::new(),
+            ys: Vec::new(),
             l: None,
             alpha: Vec::new(),
             nu: 0.0,
@@ -44,8 +50,24 @@ fn dist2(a: &[f64], b: &[f64]) -> f64 {
 }
 
 impl GpSurrogate {
+    /// A fresh, unfitted surrogate with the default nugget.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Number of training points currently absorbed.
+    pub fn n_points(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// Whether `fit` (or `fit_incremental`) has produced a usable model.
+    pub fn is_fitted(&self) -> bool {
+        self.fitted
+    }
+
+    /// The current Gaussian-correlation length-scale parameter ϑ.
+    pub fn length_scale(&self) -> f64 {
+        self.theta
     }
 
     fn corr(&self, a: &[f64], b: &[f64]) -> f64 {
@@ -64,6 +86,51 @@ impl GpSurrogate {
             k[(i, i)] += self.nugget;
         }
         k
+    }
+
+    /// Refit on `(xs, ys)` keeping the **current** length-scale ϑ (no
+    /// profile-likelihood search). This is the full-refit fallback the
+    /// incremental path cross-checks against: after a successful sequence
+    /// of `fit_incremental` calls, `refit_full` over the same data and ϑ
+    /// produces the same model (up to fp round-off).
+    pub fn refit_full(&mut self, xs: &[Vec<f64>], ys: &[f64]) -> bool {
+        assert_eq!(xs.len(), ys.len());
+        self.fitted = false;
+        if xs.is_empty() {
+            return false;
+        }
+        let n = xs.len();
+        let k = self.build_k(xs);
+        let Some(l) = cholesky(&k) else {
+            return false;
+        };
+        let ones = vec![1.0; n];
+        let kinv_y = cholesky_solve(&l, ys);
+        let kinv_1 = cholesky_solve(&l, &ones);
+        let denom = kinv_1.iter().sum::<f64>();
+        if denom.abs() < 1e-300 {
+            return false;
+        }
+        self.nu =
+            ys.iter().zip(&kinv_1).map(|(y, a)| y * a).sum::<f64>() / denom;
+        self.alpha = kinv_y
+            .iter()
+            .zip(&kinv_1)
+            .map(|(a, b)| a - self.nu * b)
+            .collect();
+        let resid: Vec<f64> = ys.iter().map(|y| y - self.nu).collect();
+        self.sigma2 = resid
+            .iter()
+            .zip(&self.alpha)
+            .map(|(r, a)| r * a)
+            .sum::<f64>()
+            .max(1e-12)
+            / n as f64;
+        self.xs = xs.to_vec();
+        self.ys = ys.to_vec();
+        self.l = Some(l);
+        self.fitted = true;
+        true
     }
 
     /// Negative profile log-likelihood for length-scale selection.
@@ -137,36 +204,79 @@ impl Surrogate for GpSurrogate {
             }
         }
         self.theta = best.1;
+        self.refit_full(xs, ys)
+    }
 
-        let k = self.build_k(xs);
-        let Some(l) = cholesky(&k) else {
-            return false;
-        };
-        let ones = vec![1.0; n];
-        let kinv_y = cholesky_solve(&l, ys);
-        let kinv_1 = cholesky_solve(&l, &ones);
-        let denom = kinv_1.iter().sum::<f64>();
-        if denom.abs() < 1e-300 {
+    fn fit_incremental(&mut self, x: &[f64], y: f64) -> bool {
+        if !self.fitted {
             return false;
         }
-        self.nu =
-            ys.iter().zip(&kinv_1).map(|(y, a)| y * a).sum::<f64>() / denom;
+        // A fitted model has at least one point; reject dimension
+        // mismatches instead of letting dist2's zip silently truncate.
+        if self.xs.first().map(Vec::len) != Some(x.len()) {
+            return false;
+        }
+        let n = self.xs.len();
+        let l = self.l.as_ref().expect("fitted GP holds its factor");
+        // New row of the extended Cholesky factor: solving L w = k applies
+        // exactly the recurrences a from-scratch factorization would use
+        // for row n, so the extended factor matches `refit_full`.
+        let kvec: Vec<f64> =
+            self.xs.iter().map(|xi| self.corr(xi, x)).collect();
+        let w = forward_solve(l, &kvec);
+        let d2 = 1.0 + self.nugget - w.iter().map(|v| v * v).sum::<f64>();
+        if d2 <= 1e-10 {
+            // Near-duplicate point: the rank-1 extension would be
+            // numerically fragile. Let the caller refit fully (the nugget
+            // absorbs duplicates there).
+            return false;
+        }
+        let mut l2 = Mat::zeros(n + 1, n + 1);
+        for i in 0..n {
+            for j in 0..=i {
+                l2[(i, j)] = l[(i, j)];
+            }
+        }
+        for (j, wj) in w.iter().enumerate() {
+            l2[(n, j)] = *wj;
+        }
+        l2[(n, n)] = d2.sqrt();
+
+        self.xs.push(x.to_vec());
+        self.ys.push(y);
+        let m = n + 1;
+        let ones = vec![1.0; m];
+        // O(n²): two triangular solves against the extended factor.
+        let kinv_y = cholesky_solve(&l2, &self.ys);
+        let kinv_1 = cholesky_solve(&l2, &ones);
+        let denom = kinv_1.iter().sum::<f64>();
+        if denom.abs() < 1e-300 {
+            self.xs.pop();
+            self.ys.pop();
+            return false;
+        }
+        self.nu = self
+            .ys
+            .iter()
+            .zip(&kinv_1)
+            .map(|(y, a)| y * a)
+            .sum::<f64>()
+            / denom;
         self.alpha = kinv_y
             .iter()
             .zip(&kinv_1)
             .map(|(a, b)| a - self.nu * b)
             .collect();
-        let resid: Vec<f64> = ys.iter().map(|y| y - self.nu).collect();
-        self.sigma2 = resid
+        self.sigma2 = self
+            .ys
             .iter()
+            .map(|y| y - self.nu)
             .zip(&self.alpha)
             .map(|(r, a)| r * a)
             .sum::<f64>()
             .max(1e-12)
-            / n as f64;
-        self.xs = xs.to_vec();
-        self.l = Some(l);
-        self.fitted = true;
+            / m as f64;
+        self.l = Some(l2);
         true
     }
 
@@ -287,6 +397,60 @@ mod tests {
         assert!(gp.fit(&xs, &ys), "nugget must absorb duplicates");
         let p = gp.predict(&[0.2, 0.2]);
         assert!((0.8..1.4).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn incremental_update_matches_fixed_theta_full_refit() {
+        forall("GP incremental == full refit", 15, |rng| {
+            let (xs, ys) = toy(24, rng);
+            let mut inc = GpSurrogate::new();
+            if !inc.fit(&xs[..12], &ys[..12]) {
+                return Ok(());
+            }
+            for i in 12..24 {
+                if !inc.fit_incremental(&xs[i], ys[i]) {
+                    return Ok(()); // degenerate extension: caller refits
+                }
+            }
+            // Full refit at the same length-scale over the same data.
+            let mut full = inc.clone();
+            prop_assert!(full.refit_full(&xs, &ys), "full refit failed");
+            for _ in 0..20 {
+                let q = vec![rng.f64() * 1.4 - 0.2, rng.f64() * 1.4 - 0.2];
+                let (a, b) = (inc.predict(&q), full.predict(&q));
+                prop_assert!((a - b).abs() < 1e-8, "mean {a} vs {b}");
+                let sa = inc.predict_std(&q).unwrap();
+                let sb = full.predict_std(&q).unwrap();
+                prop_assert!((sa - sb).abs() < 1e-8, "std {sa} vs {sb}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn incremental_requires_a_fitted_model() {
+        let mut gp = GpSurrogate::new();
+        assert!(!gp.fit_incremental(&[0.1, 0.2], 1.0));
+    }
+
+    #[test]
+    fn incremental_absorbs_duplicates_like_full_refit() {
+        let mut rng = Rng::new(4);
+        let (mut xs, mut ys) = toy(10, &mut rng);
+        let mut inc = GpSurrogate::new();
+        assert!(inc.fit(&xs, &ys));
+        // Re-observe an existing location with a different outcome: the
+        // nugget absorbs it on both paths.
+        let dup = xs[0].clone();
+        xs.push(dup.clone());
+        ys.push(ys[0] + 0.05);
+        if inc.fit_incremental(&dup, ys[10]) {
+            let mut full = inc.clone();
+            assert!(full.refit_full(&xs, &ys));
+            let q = vec![0.4, 0.6];
+            assert!((inc.predict(&q) - full.predict(&q)).abs() < 1e-8);
+        }
+        assert!(inc.is_fitted());
     }
 
     #[test]

@@ -28,4 +28,21 @@ pub trait Surrogate {
     fn predict_std(&self, _x: &[f64]) -> Option<f64> {
         None
     }
+
+    /// Absorb one additional observation into an already-fitted model
+    /// without refitting from scratch (the asynchronous per-completion
+    /// update of the `exec` driver; see DESIGN.md §4).
+    ///
+    /// Implementations update in O(n²) — a rank-1 Cholesky extension for
+    /// the GP, a bordered-inverse extension for the RBF — versus the
+    /// O(n³) full refit. Returns `false` when the model cannot (or should
+    /// not) update incrementally: not yet fitted, a numerically risky
+    /// extension, or an implementation that simply does not support it
+    /// (the default). The caller must then fall back to a full `fit`;
+    /// after a `true` return the model state is exactly as if all points
+    /// had been fitted together (up to fp round-off, cross-checked to
+    /// 1e-8 in the test suite).
+    fn fit_incremental(&mut self, _x: &[f64], _y: f64) -> bool {
+        false
+    }
 }

@@ -278,7 +278,13 @@ fn write_into(v: &Json, out: &mut String) {
         Json::Null => out.push_str("null"),
         Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
         Json::Num(n) => {
-            if n.fract() == 0.0 && n.abs() < 1e15 {
+            if !n.is_finite() {
+                // JSON has no inf/NaN tokens; emit null rather than an
+                // unparseable document. Callers that must round-trip
+                // non-finite values encode them themselves (see
+                // analysis::persistence).
+                out.push_str("null");
+            } else if n.fract() == 0.0 && n.abs() < 1e15 {
                 let _ = write!(out, "{}", *n as i64);
             } else {
                 let _ = write!(out, "{n}");
@@ -372,5 +378,18 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn non_finite_numbers_emit_valid_json() {
+        let doc = Json::Arr(vec![
+            Json::Num(f64::INFINITY),
+            Json::Num(f64::NEG_INFINITY),
+            Json::Num(f64::NAN),
+            Json::Num(1.5),
+        ]);
+        let text = write(&doc);
+        assert_eq!(text, "[null,null,null,1.5]");
+        assert!(parse(&text).is_ok(), "writer must never emit bad JSON");
     }
 }

@@ -1,0 +1,185 @@
+//! Executor integration tests: checkpoint/resume fidelity and
+//! incremental-refit behaviour of the `exec` driver (ISSUE 1 acceptance:
+//! a killed run resumed via `--resume` reproduces the same final
+//! incumbent as an uninterrupted run with the same seed).
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+
+use hyppo::cluster::{ParallelMode, Topology};
+use hyppo::eval::synthetic::SyntheticEvaluator;
+use hyppo::eval::Evaluator;
+use hyppo::exec::{
+    resume_experiment, run_experiment, Checkpoint, CheckpointPolicy,
+    ExecConfig,
+};
+use hyppo::optimizer::HpoConfig;
+use hyppo::space::{ParamSpec, Space};
+
+fn evaluator(seed: u64) -> SyntheticEvaluator {
+    let space = Space::new(vec![
+        ParamSpec::new("a", 0, 24),
+        ParamSpec::new("b", 0, 24),
+        ParamSpec::new("c", 0, 24),
+    ]);
+    let mut ev = SyntheticEvaluator::new(space, seed);
+    ev.t_dropout = 4;
+    ev
+}
+
+fn config(workers: usize, budget: usize, seed: u64) -> ExecConfig {
+    ExecConfig::new(
+        HpoConfig {
+            max_evaluations: budget,
+            n_init: 6,
+            n_trials: 3,
+            seed,
+            ..Default::default()
+        },
+        Topology::new(workers, 1),
+        ParallelMode::TrialParallel,
+        0.0,
+    )
+}
+
+fn ckpt_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("hyppo_exec_test_{name}.json"))
+}
+
+#[test]
+fn killed_and_resumed_run_matches_uninterrupted_run() {
+    let ev = evaluator(7);
+    let seed = 11;
+
+    // Reference: one uninterrupted run, single worker (deterministic
+    // completion order).
+    let reference = run_experiment(&ev, &config(1, 18, seed)).unwrap();
+    assert!(reference.complete);
+    assert_eq!(reference.history.len(), 18);
+
+    // "Kill" the same run after 9 completions, checkpointing as we go.
+    let path = ckpt_path("resume_bitforbit");
+    let mut killed_cfg = config(1, 18, seed);
+    killed_cfg.checkpoint =
+        Some(CheckpointPolicy::every_completion(&path));
+    killed_cfg.max_completions = Some(9);
+    let partial = run_experiment(&ev, &killed_cfg).unwrap();
+    assert!(!partial.complete);
+    assert_eq!(partial.history.len(), 9);
+    assert!(partial.stats.checkpoints_written >= 2);
+
+    // Resume from the snapshot and run to completion.
+    let mut resume_cfg = config(1, 18, seed);
+    resume_cfg.checkpoint =
+        Some(CheckpointPolicy::every_completion(&path));
+    let ckpt = Checkpoint::load(&path).unwrap();
+    let resumed = resume_experiment(&ev, &resume_cfg, ckpt).unwrap();
+    assert!(resumed.complete);
+    assert!(resumed.stats.resumed);
+    assert_eq!(resumed.history.len(), 18);
+
+    // Bit-for-bit: same ids, same proposals, same objectives, and
+    // therefore the same final incumbent.
+    for (a, b) in reference
+        .history
+        .records
+        .iter()
+        .zip(&resumed.history.records)
+    {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.theta, b.theta, "proposal diverged at id {}", a.id);
+        assert_eq!(a.provenance, b.provenance);
+        assert_eq!(
+            a.summary.interval.center, b.summary.interval.center,
+            "objective diverged at id {}",
+            a.id
+        );
+    }
+    let (ra, rb) = (
+        reference.history.best(0.0).unwrap(),
+        resumed.history.best(0.0).unwrap(),
+    );
+    assert_eq!(ra.id, rb.id);
+    assert_eq!(ra.theta, rb.theta);
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn multi_worker_resume_completes_the_budget() {
+    let ev = evaluator(3);
+    let path = ckpt_path("resume_multiworker");
+    let mut cfg = config(4, 26, 5);
+    cfg.time_scale = 2e-5; // cost-ordered completions
+    cfg.checkpoint = Some(CheckpointPolicy::every_completion(&path));
+    cfg.max_completions = Some(11);
+    let partial = run_experiment(&ev, &cfg).unwrap();
+    assert!(!partial.complete);
+    assert_eq!(partial.history.len(), 11);
+
+    let mut resume_cfg = config(4, 26, 5);
+    resume_cfg.time_scale = 2e-5;
+    let ckpt = Checkpoint::load(&path).unwrap();
+    assert_eq!(ckpt.history.len(), 11);
+    assert!(!ckpt.in_flight.is_empty(), "workers were mid-flight");
+    let resumed = resume_experiment(&ev, &resume_cfg, ckpt).unwrap();
+    assert!(resumed.complete);
+    assert_eq!(resumed.history.len(), 26);
+    let ids: HashSet<usize> =
+        resumed.history.records.iter().map(|r| r.id).collect();
+    assert_eq!(ids.len(), 26, "duplicate ids after resume");
+    for r in &resumed.history.records {
+        assert!(ev.space().contains(&r.theta));
+    }
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn resuming_a_completed_run_is_a_clean_noop() {
+    let ev = evaluator(9);
+    let path = ckpt_path("resume_noop");
+    let mut cfg = config(2, 12, 1);
+    cfg.checkpoint = Some(CheckpointPolicy::every_completion(&path));
+    let done = run_experiment(&ev, &cfg).unwrap();
+    assert!(done.complete);
+
+    let ckpt = Checkpoint::load(&path).unwrap();
+    assert!(ckpt.in_flight.is_empty());
+    let again = resume_experiment(&ev, &cfg, ckpt).unwrap();
+    assert!(again.complete);
+    assert_eq!(again.stats.completions, 0, "no work left to do");
+    assert_eq!(again.history.len(), 12);
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn resume_rejects_checkpoints_from_another_seed() {
+    let ev = evaluator(2);
+    let path = ckpt_path("resume_seed_mismatch");
+    let mut cfg = config(1, 10, 21);
+    cfg.checkpoint = Some(CheckpointPolicy::every_completion(&path));
+    cfg.max_completions = Some(7);
+    run_experiment(&ev, &cfg).unwrap();
+
+    let ckpt = Checkpoint::load(&path).unwrap();
+    let other = config(1, 10, 22);
+    let err = resume_experiment(&ev, &other, ckpt).unwrap_err();
+    assert!(format!("{err:#}").contains("seed"));
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn async_driver_absorbs_completions_incrementally() {
+    let ev = evaluator(13);
+    let out = run_experiment(&ev, &config(3, 40, 2)).unwrap();
+    assert!(out.complete);
+    let s = out.stats.refits;
+    assert_eq!(s.proposals, 34);
+    assert!(
+        s.incremental > s.full,
+        "per-completion refits should be mostly incremental: {s:?}"
+    );
+}
