@@ -1,4 +1,4 @@
-//! Ablation study over HYPPO's own design knobs (DESIGN.md §5):
+//! Ablation study over HYPPO's own design knobs (DESIGN.md §6):
 //!
 //!   * surrogate kind (RBF / GP / RBF-ensemble)
 //!   * Eq. (8) α ∈ {−2, −1, 0, 1, 2} (optimistic … pessimistic)

@@ -1,0 +1,137 @@
+//! An external executor driving the sans-IO `exec::Session` by hand.
+//!
+//! This is the embedding story the ask/tell redesign exists for: *you*
+//! own the event loop — a batch scheduler, an async runtime, an MPI
+//! rank, this little single-threaded loop — and the session owns every
+//! decision. The demo also snapshots the session mid-stream, tears it
+//! down, restores it from the JSON wire format, and finishes the run:
+//! the restored experiment records exactly what the uninterrupted one
+//! would have.
+//!
+//! Run with:
+//!
+//! ```sh
+//! cargo run --release --example ask_tell
+//! ```
+
+use anyhow::Result;
+
+use hyppo::eval::synthetic::SyntheticEvaluator;
+use hyppo::eval::Evaluator;
+use hyppo::exec::{Ask, Checkpoint, Session, TrialKind};
+use hyppo::optimizer::{AdaptiveTrials, HpoConfig};
+use hyppo::space::{ParamSpec, Space};
+
+fn config() -> HpoConfig {
+    HpoConfig {
+        max_evaluations: 16,
+        n_init: 6,
+        n_trials: 2,
+        seed: 42,
+        // Adaptive UQ replicas: rerun a θ while its trained-loss spread
+        // stays above 0.02, up to 4 trainings per evaluation.
+        adaptive_trials: Some(AdaptiveTrials {
+            std_threshold: 0.02,
+            max_trials: 4,
+        }),
+        ..Default::default()
+    }
+}
+
+/// Drive the session until done (or until `stop_after` tells).
+fn pump(
+    session: &mut Session,
+    evaluator: &SyntheticEvaluator,
+    stop_after: Option<usize>,
+) -> usize {
+    let mut tells = 0;
+    loop {
+        if stop_after == Some(tells) {
+            return tells;
+        }
+        match session.ask() {
+            Ask::Trial(t) => {
+                let tag = match t.kind {
+                    TrialKind::Init => "init   ",
+                    TrialKind::Proposal => "propose",
+                    TrialKind::Replica => "replica",
+                };
+                // The expensive part — entirely ours. Ship it to a
+                // cluster, await it, batch it; the session doesn't care.
+                let outcome =
+                    evaluator.run_trial(&t.theta, t.trial, t.seed);
+                println!(
+                    "{tag} eval {:>2} trial {}/{}  theta {:?}  loss {:.4}",
+                    t.eval_id,
+                    t.trial + 1,
+                    t.planned,
+                    t.theta,
+                    outcome.loss
+                );
+                let told = session
+                    .tell(t.eval_id, t.trial, outcome)
+                    .expect("outcome matches an asked trial");
+                tells += 1;
+                if told.extended > 0 {
+                    println!(
+                        "        eval {:>2}: loss spread too high, +{} \
+                         replica",
+                        t.eval_id, told.extended
+                    );
+                }
+                if told.recorded > 0 {
+                    println!(
+                        "        recorded {} evaluation(s), history = {}",
+                        told.recorded,
+                        session.history().len()
+                    );
+                }
+            }
+            Ask::Wait => unreachable!("sequential loops never starve"),
+            Ask::Done => return tells,
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let space = Space::new(vec![
+        ParamSpec::new("layers", 1, 8),
+        ParamSpec::new("width", 0, 24),
+    ]);
+    let evaluator = SyntheticEvaluator::new(space, 7);
+    let hpo = config();
+
+    // --- phase 1: run half the experiment, then snapshot -----------------
+    let mut session = Session::new(&evaluator, &hpo);
+    pump(&mut session, &evaluator, Some(20));
+    let wire = session.snapshot().to_json_string();
+    println!(
+        "\n-- snapshot after 20 tells ({} recorded, {} in flight, {} \
+         bytes of JSON); dropping the session --\n",
+        session.history().len(),
+        session.in_flight(),
+        wire.len()
+    );
+    drop(session);
+
+    // --- phase 2: restore from plain data and finish ---------------------
+    let ckpt = Checkpoint::from_json_str(&wire)?;
+    let mut session = Session::restore(&evaluator, &hpo, ckpt)?;
+    pump(&mut session, &evaluator, None);
+
+    let stats = session.stats();
+    let history = session.into_history();
+    let best = history.best(hpo.gamma).expect("non-empty history");
+    println!(
+        "\ndone: {} evaluations, best loss {:.5} at {:?} (eval {})",
+        history.len(),
+        best.summary.interval.center,
+        best.theta,
+        best.id
+    );
+    println!(
+        "surrogate refits: {} incremental / {} full, {} proposals",
+        stats.incremental, stats.full, stats.proposals
+    );
+    Ok(())
+}

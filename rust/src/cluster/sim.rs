@@ -1,6 +1,12 @@
 //! Deterministic virtual-time simulator of one HPO job on a steps × tasks
 //! topology — regenerates Fig. 8 without wall-clock sleeps.
 //!
+//! Two entry points share the cluster model: [`simulate`] replays a
+//! fixed, pre-generated workload (the paper's static slicing), and
+//! [`simulate_hpo`] drives a live `exec::Session` ask → tell loop in
+//! virtual time — asynchronous surrogate dynamics with deterministic
+//! replay and zero sleeps.
+//!
 //! Semantics follow §IV (Feature 3) exactly:
 //!   * Hyperparameter evaluations are assigned to steps by Python-style
 //!     slicing: step `s` executes evaluations `s, s+steps, s+2·steps, ...`
@@ -17,6 +23,9 @@
 use std::time::Duration;
 
 use crate::cluster::{ParallelMode, Topology};
+use crate::eval::Evaluator;
+use crate::exec::session::{EvalJob, Session};
+use crate::optimizer::{History, HpoConfig};
 
 /// Per-evaluation input: the simulated durations of its N trials.
 #[derive(Debug, Clone)]
@@ -129,6 +138,115 @@ pub fn simulate(evals: &[EvalCost], cfg: &SimConfig) -> SimResult {
     }
 }
 
+/// Outcome of a virtual-time HPO experiment ([`simulate_hpo`]).
+#[derive(Debug, Clone)]
+pub struct HpoSimResult {
+    /// Evaluations recorded, in (virtual) completion order.
+    pub history: History,
+    /// Virtual makespan of the whole experiment.
+    pub makespan: Duration,
+    /// Busy time per step.
+    pub step_busy: Vec<Duration>,
+    /// Completion events sorted by end time (`eval_index` = eval id).
+    pub timeline: Vec<SimEvent>,
+}
+
+/// One job executing on a simulated step, with its (deterministic)
+/// outcomes precomputed; `tell` happens at virtual completion time.
+struct RunningJob {
+    job: EvalJob,
+    outcomes: Vec<crate::eval::TrialOutcome>,
+    start: Duration,
+    end: Duration,
+}
+
+/// Drive a full HPO experiment through the sans-IO [`Session`] in
+/// *virtual time*: the same steps × tasks cluster model as [`simulate`],
+/// but the workload is generated online by `ask` and consumed by `tell`
+/// — the paper's asynchronous dynamics (heterogeneous durations reorder
+/// completions, the surrogate sees results out of submission order)
+/// with no wall-clock sleeps and fully deterministic replay.
+///
+/// Scheduling: each free step greedily takes the next evaluation-granular
+/// job; ties in completion time break by step index. With a 1×1 topology
+/// this reduces to the sequential loop, so the history matches the
+/// threaded driver's single-worker run bit-for-bit.
+pub fn simulate_hpo(
+    evaluator: &dyn Evaluator,
+    hpo: &HpoConfig,
+    cfg: &SimConfig,
+) -> HpoSimResult {
+    let steps = cfg.topology.steps;
+    let mut session = Session::new(evaluator, hpo);
+    let mut running: Vec<Option<RunningJob>> = Vec::new();
+    running.resize_with(steps, || None);
+    let mut free_at = vec![Duration::ZERO; steps];
+    let mut step_busy = vec![Duration::ZERO; steps];
+    let mut timeline = Vec::new();
+    // Virtual clock: advances to each completion as it is consumed.
+    let mut now = Duration::ZERO;
+
+    loop {
+        // Fill every idle step (in index order) with the next job. A
+        // step freed in the past can only pick up work created *now*.
+        for s in 0..steps {
+            if running[s].is_some() {
+                continue;
+            }
+            let Some(job) = session.ask_eval() else { break };
+            // Outcomes are deterministic per (θ, trial, seed): compute
+            // them at placement, deliver them at completion time.
+            let outcomes: Vec<_> = job
+                .trials
+                .iter()
+                .map(|&t| evaluator.run_trial(&job.theta, t, job.seed))
+                .collect();
+            let cost = EvalCost {
+                trial_costs: outcomes.iter().map(|o| o.cost).collect(),
+            };
+            let d = eval_duration(&cost, cfg);
+            let start = free_at[s].max(now);
+            step_busy[s] += d;
+            running[s] =
+                Some(RunningJob { job, outcomes, start, end: start + d });
+        }
+        // Complete the earliest-finishing job (ties: lowest step).
+        let Some(s) = earliest_running(&running) else { break };
+        let rj = running[s].take().expect("selected step is running");
+        now = rj.end;
+        free_at[s] = rj.end;
+        for (&t, o) in rj.job.trials.iter().zip(rj.outcomes) {
+            session
+                .tell(rj.job.id, t, o)
+                .expect("simulated outcomes match asked trials");
+        }
+        timeline.push(SimEvent {
+            eval_index: rj.job.id,
+            step: s,
+            start: rj.start,
+            end: rj.end,
+        });
+    }
+
+    timeline.sort_by_key(|e| (e.end, e.step, e.eval_index));
+    HpoSimResult {
+        history: session.into_history(),
+        makespan: free_at.iter().copied().max().unwrap_or(Duration::ZERO),
+        step_busy,
+        timeline,
+    }
+}
+
+/// Index of the running job with the earliest end (ties: lowest step).
+fn earliest_running(running: &[Option<RunningJob>]) -> Option<usize> {
+    running
+        .iter()
+        .enumerate()
+        .filter_map(|(s, r)| r.as_ref().map(|r| (r.end, s)))
+        .min()
+        .map(|(_, s)| s)
+}
+
 /// Speedup of a topology vs the serial 1×1 baseline on the same workload.
 pub fn speedup(evals: &[EvalCost], cfg: &SimConfig) -> f64 {
     let base_cfg = SimConfig {
@@ -232,6 +350,97 @@ mod tests {
         assert_eq!(r.makespan, ms(1010));
         let min_busy = r.step_busy.iter().min().unwrap();
         assert!(min_busy < &ms(1010));
+    }
+
+    #[test]
+    fn virtual_time_hpo_completes_and_respects_causality() {
+        use crate::eval::synthetic::SyntheticEvaluator;
+        use crate::space::{ParamSpec, Space};
+
+        let space = Space::new(vec![
+            ParamSpec::new("a", 0, 24),
+            ParamSpec::new("b", 0, 24),
+        ]);
+        let ev = SyntheticEvaluator::new(space, 11);
+        let hpo = crate::optimizer::HpoConfig {
+            max_evaluations: 20,
+            n_init: 6,
+            n_trials: 3,
+            seed: 4,
+            ..Default::default()
+        };
+        let cfg = SimConfig::trial_parallel(Topology::new(3, 2));
+        let r = simulate_hpo(&ev, &hpo, &cfg);
+        assert_eq!(r.history.len(), 20);
+        assert_eq!(r.timeline.len(), 20);
+        assert!(r.makespan > Duration::ZERO);
+        // Busy time never exceeds the makespan, steps share nothing.
+        for b in &r.step_busy {
+            assert!(*b <= r.makespan);
+        }
+        // Provenance causality: everything a proposal saw completed
+        // earlier in the recorded history.
+        let pos: std::collections::HashMap<usize, usize> = r
+            .history
+            .records
+            .iter()
+            .enumerate()
+            .map(|(i, rec)| (rec.id, i))
+            .collect();
+        for (i, rec) in r.history.records.iter().enumerate() {
+            for p in &rec.provenance {
+                assert!(pos[p] < i);
+            }
+        }
+    }
+
+    #[test]
+    fn virtual_time_hpo_on_1x1_matches_serial_session() {
+        use crate::eval::synthetic::SyntheticEvaluator;
+        use crate::exec::session::{Ask, Session};
+        use crate::eval::Evaluator;
+        use crate::space::{ParamSpec, Space};
+
+        let space = Space::new(vec![
+            ParamSpec::new("a", 0, 20),
+            ParamSpec::new("b", 0, 20),
+        ]);
+        let ev = SyntheticEvaluator::new(space, 3);
+        let hpo = crate::optimizer::HpoConfig {
+            max_evaluations: 14,
+            n_init: 5,
+            n_trials: 2,
+            seed: 9,
+            ..Default::default()
+        };
+        let sim = simulate_hpo(
+            &ev,
+            &hpo,
+            &SimConfig::trial_parallel(Topology::new(1, 1)),
+        );
+        // Hand-rolled sequential ask/tell loop: identical decisions.
+        let mut s = Session::new(&ev, &hpo);
+        loop {
+            match s.ask() {
+                Ask::Trial(t) => {
+                    let o = ev.run_trial(&t.theta, t.trial, t.seed);
+                    s.tell(t.eval_id, t.trial, o).unwrap();
+                }
+                Ask::Done => break,
+                Ask::Wait => unreachable!(),
+            }
+        }
+        let h = s.into_history();
+        assert_eq!(sim.history.len(), h.len());
+        for (a, b) in sim.history.records.iter().zip(&h.records) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.theta, b.theta);
+            assert_eq!(a.provenance, b.provenance);
+            assert_eq!(
+                a.summary.interval.center,
+                b.summary.interval.center
+            );
+        }
     }
 
     #[test]

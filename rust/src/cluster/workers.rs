@@ -4,9 +4,11 @@
 //! The worker-pool loop that used to live here (a pool of `steps` step
 //! threads, each evaluation's N trials spread over `tasks_per_step`
 //! inner threads, per-completion surrogate refits with provenance
-//! tracking) moved to `exec::driver`, where it gained incremental
-//! refits, checkpoint/resume, and sweep support. `run_async` keeps the
-//! original one-call API: in-memory, full budget, no checkpointing.
+//! tracking) moved to `exec`: the decisions live in the sans-IO
+//! `exec::Session` (ask/tell state machine) and the threads in
+//! `exec::driver`, which gained incremental refits, checkpoint/resume,
+//! and sweep support along the way. `run_async` keeps the original
+//! one-call API: in-memory, full budget, no checkpointing.
 //!
 //! Simulated backends report virtual costs; `time_scale` converts those
 //! to real sleeps so completion *order* (and thus surrogate behaviour)
@@ -160,10 +162,11 @@ mod tests {
     fn trial_parallel_nested_execution_correct() {
         // Nested inner threads must return all N outcomes in trial order.
         let ev = evaluator();
+        let trials: Vec<usize> = (0..7).collect();
         let outs = run_evaluation(
             &ev,
             &[5, 5, 5],
-            7,
+            &trials,
             42,
             3,
             ParallelMode::TrialParallel,

@@ -5,7 +5,7 @@
 //! prediction vectors so the coordinator can compute μ_pred / V_model via
 //! Eqs. 6-7). The HPO engine and the cluster scheduler only see this
 //! trait, so real AOT-compiled training (`hlo`) and the calibrated
-//! synthetic landscape (`synthetic`) are interchangeable (DESIGN.md §5).
+//! synthetic landscape (`synthetic`) are interchangeable (DESIGN.md §6).
 
 pub mod hlo;
 pub mod polyfit;
@@ -188,5 +188,53 @@ mod tests {
         let outs = vec![outcome(1.0, &[]), outcome(2.0, &[])];
         let s = aggregate(&d, &[0], &outs, UqWeights::default_paper());
         assert!((s.interval.center - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregate_fallback_center_ignores_weights_without_dropout() {
+        // nt == 0: applying the (w_T, w_D) weighting literally would
+        // scale the trained mean by w_T; the fallback must fall back to
+        // the *plain* mean regardless of the weights.
+        let d = Dummy { space: Space::new(vec![ParamSpec::new("x", 0, 1)]) };
+        let outs = vec![outcome(1.0, &[]), outcome(3.0, &[])];
+        let s = aggregate(&d, &[0], &outs, UqWeights::new(0.2, 0.8));
+        assert!((s.interval.center - 2.0).abs() < 1e-12);
+        // The CI radius is the member-loss spread: members = trained
+        // losses only here, population σ of {1, 3} = 1.
+        assert!((s.interval.radius - 1.0).abs() < 1e-12);
+        assert!((s.trained_std - 1.0).abs() < 1e-12);
+        assert_eq!(s.v_model_g, 0.0);
+    }
+
+    #[test]
+    fn aggregate_single_trial_without_dropout() {
+        // N == 1, nt == 0 — the degenerate cheapest evaluation. Center
+        // is the lone loss; a single member has no spread, so both the
+        // CI radius and the trained std collapse to 0.
+        let d = Dummy { space: Space::new(vec![ParamSpec::new("x", 0, 1)]) };
+        let outs = vec![outcome(2.5, &[])];
+        let s = aggregate(&d, &[0], &outs, UqWeights::default_paper());
+        assert_eq!(s.interval.center, 2.5);
+        assert_eq!(s.interval.radius, 0.0);
+        assert_eq!(s.trained_mean, 2.5);
+        assert_eq!(s.trained_std, 0.0);
+        assert_eq!(s.v_model_g, 0.0);
+        assert_eq!(s.total_cost, Duration::from_millis(10));
+    }
+
+    #[test]
+    fn aggregate_single_trial_with_dropout_weights_the_center() {
+        // N == 1 with dropout passes: the weighted Eq. (6) center blends
+        // the lone trained loss with the dropout mean, the members
+        // {1, 2, 4} give a positive radius, but the *trained* spread is
+        // still 0 (one trained model) — exactly the signal the adaptive
+        // replica policy keys on.
+        let d = Dummy { space: Space::new(vec![ParamSpec::new("x", 0, 1)]) };
+        let outs = vec![outcome(1.0, &[2.0, 4.0])];
+        let s = aggregate(&d, &[0], &outs, UqWeights::default_paper());
+        // trained mean 1, dropout mean 3 → 0.5·1 + 0.5·3 = 2.
+        assert!((s.interval.center - 2.0).abs() < 1e-12);
+        assert!(s.interval.radius > 0.0);
+        assert_eq!(s.trained_std, 0.0);
     }
 }

@@ -1,13 +1,15 @@
-//! Checkpoint format for the asynchronous experiment driver.
+//! Checkpoint format: the serialized form of `Session::snapshot`.
 //!
-//! A checkpoint captures everything the coordinator needs to continue a
-//! killed experiment bit-for-bit (given deterministic completion order —
-//! see DESIGN.md §4): the recorded history, the coordinator RNG state,
-//! the submission counters, and the provenance of every job that was
-//! submitted but not yet recorded (in-flight). On resume the in-flight
-//! jobs are re-enqueued with their original `(θ, seed)` pairs, so the
-//! deterministic evaluators reproduce the exact outcomes the killed run
-//! would have recorded.
+//! A checkpoint is exactly the sans-IO session's decision state — the
+//! recorded history, the coordinator RNG state, the submission
+//! counters, and the identity of every evaluation that was created but
+//! not yet recorded (in-flight) — and captures everything needed to
+//! continue a killed experiment bit-for-bit (given deterministic
+//! completion order — see DESIGN.md §4-§5). On restore the in-flight
+//! evaluations are asked again from trial 0 with their original
+//! `(θ, seed)` pairs, so deterministic evaluators reproduce the exact
+//! outcomes the killed run would have recorded; partially-told trial
+//! outcomes are deliberately not serialized.
 //!
 //! Serialization is JSON through the hand-rolled `util::json` substrate.
 //! `u64` values (seeds, RNG words) are encoded as **decimal strings**:
@@ -27,8 +29,8 @@ use crate::util::json::{parse, write, Json};
 /// Current checkpoint schema version (see DESIGN.md §4 for the layout).
 pub const CHECKPOINT_VERSION: i64 = 1;
 
-/// A job that was submitted to the worker pool but whose completion has
-/// not been recorded yet.
+/// An evaluation the session created but has not recorded yet (its
+/// trials may be queued, executing, or partially told).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PendingJob {
     /// Submission id (stable across kill/resume).
@@ -43,7 +45,8 @@ pub struct PendingJob {
     pub seed: u64,
 }
 
-/// A serializable snapshot of the experiment driver's coordinator state.
+/// A serializable snapshot of the sans-IO session's decision state
+/// (`exec::Session::snapshot`).
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
     /// Schema version ([`CHECKPOINT_VERSION`]).

@@ -1,40 +1,42 @@
-//! The asynchronous experiment driver — the reusable engine behind
-//! `cluster::workers::run_async`, `hyppo run --resume`, and `hyppo sweep`.
+//! The threaded experiment driver — an I/O shell over the sans-IO
+//! [`Session`] core.
 //!
-//! Semantics match the paper's Fig. 6 loop (and the seed implementation):
-//! the initial design runs across all workers and is recorded in id order
-//! once complete, then every worker is kept busy with surrogate
-//! proposals, the surrogate absorbing each completion *as it arrives*.
-//! Two things are new relative to the seed loop:
+//! All decisions (what to evaluate, trial accounting, surrogate refits,
+//! checkpoint content) live in `exec::session`; this module supplies the
+//! execution substrate the paper's Fig. 6 loop needs on a real machine:
+//! a pool of `topology.steps` worker threads, nested trial-/data-parallel
+//! execution of each evaluation's trials, real sleeps for simulated
+//! costs, and checkpoint files written after recorded completions.
 //!
-//! * **Incremental refits** — the driver holds one `OnlineProposer` for
-//!   the whole experiment, so a completion costs an O(n²) rank-1 update
-//!   instead of the O(n³) from-scratch refit that used to stall the
-//!   coordinator (DESIGN.md §4).
-//! * **Checkpoint / resume** — with a `CheckpointPolicy`, the coordinator
-//!   snapshots its state (history, RNG, in-flight job provenance) after
-//!   completions; `resume_experiment` re-enqueues the in-flight jobs with
-//!   their original `(θ, seed)` pairs and continues. With deterministic
-//!   completion order (one worker, or cost-ordered simulated sleeps) the
-//!   resumed run is bit-for-bit the run that was killed.
+//! The shell's scheduling policy reproduces the seed loop exactly:
+//! every worker is kept busy with one evaluation-granular job at a time
+//! ([`Session::ask_eval`]); the init barrier and the propose-on-complete
+//! asynchrony are `Session` invariants, not driver logic. Two properties
+//! carry over from the PR-1 driver:
+//!
+//! * **Incremental refits** — one `OnlineProposer` lives for the whole
+//!   experiment inside the session, so a completion costs an O(n²)
+//!   rank-1 update instead of an O(n³) from-scratch refit (DESIGN.md §4).
+//! * **Checkpoint / resume** — with a `CheckpointPolicy`, the driver
+//!   saves [`Session::snapshot`] after completions; `resume_experiment`
+//!   restores the session and re-runs the in-flight jobs with their
+//!   original `(θ, seed)` pairs. With deterministic completion order
+//!   (one worker, or cost-ordered simulated sleeps) the resumed run is
+//!   bit-for-bit the run that was killed.
 
 use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::cluster::{ParallelMode, Topology};
-use crate::eval::{aggregate, Evaluator, TrialOutcome};
-use crate::exec::checkpoint::{Checkpoint, PendingJob, CHECKPOINT_VERSION};
-use crate::optimizer::{
-    initial_design, EvalRecord, History, HpoConfig, OnlineProposer,
-    RefitStats,
-};
-use crate::sampling::rng::Rng;
-use crate::space::Space;
+use crate::eval::{Evaluator, TrialOutcome};
+use crate::exec::checkpoint::Checkpoint;
+use crate::exec::session::{EvalJob, Session};
+use crate::optimizer::{History, HpoConfig, RefitStats};
 
-/// When and where the driver snapshots coordinator state.
+/// When and where the driver snapshots the session.
 #[derive(Debug, Clone)]
 pub struct CheckpointPolicy {
     /// Snapshot file (written atomically via a `.tmp` sibling).
@@ -114,63 +116,21 @@ pub struct ExecOutcome {
     pub complete: bool,
 }
 
-/// What a worker needs to execute one evaluation.
-struct WorkerJob {
-    id: usize,
-    theta: Vec<i64>,
-    seed: u64,
-}
-
+/// One executed trial of a job, tagged with its index.
 struct Completion {
     id: usize,
-    outcomes: Vec<TrialOutcome>,
+    outcomes: Vec<(usize, TrialOutcome)>,
 }
 
-type JobQueue = Arc<(Mutex<VecDeque<Option<WorkerJob>>>, Condvar)>;
+type JobQueue = Arc<(Mutex<VecDeque<Option<EvalJob>>>, Condvar)>;
 
-/// Coordinator state — exactly what a checkpoint captures.
-struct Coordinator {
-    rng: Rng,
-    next_id: usize,
-    iter: usize,
-    submitted: usize,
-    history: History,
-    in_flight: Vec<PendingJob>,
-}
-
-impl Coordinator {
-    fn fresh(hpo: &HpoConfig) -> Self {
-        Coordinator {
-            rng: Rng::new(hpo.seed),
-            next_id: 0,
-            iter: 0,
-            submitted: 0,
-            history: History::default(),
-            in_flight: Vec::new(),
-        }
-    }
-
-    fn snapshot(&self, seed: u64) -> Checkpoint {
-        Checkpoint {
-            version: CHECKPOINT_VERSION,
-            seed,
-            rng_state: self.rng.state(),
-            next_id: self.next_id,
-            iter: self.iter,
-            submitted: self.submitted,
-            history: self.history.clone(),
-            in_flight: self.in_flight.clone(),
-        }
-    }
-}
-
-/// Run one evaluation's N trials with nested task parallelism (the
-/// paper's MPI-rank slicing for trial parallelism, or a data-parallel
-/// cost discount).
+/// Run the given trials of one evaluation with nested task parallelism
+/// (the paper's MPI-rank slicing for trial parallelism, or a
+/// data-parallel cost discount).
 pub(crate) fn run_evaluation(
     evaluator: &dyn Evaluator,
     theta: &[i64],
-    n_trials: usize,
+    trials: &[usize],
     seed: u64,
     tasks: usize,
     mode: ParallelMode,
@@ -191,24 +151,26 @@ pub(crate) fn run_evaluation(
         o
     };
 
-    if tasks <= 1 || n_trials <= 1 || mode == ParallelMode::DataParallel {
-        return (0..n_trials).map(run_one).collect();
+    if tasks <= 1 || trials.len() <= 1 || mode == ParallelMode::DataParallel
+    {
+        return trials.iter().map(|&t| run_one(t)).collect();
     }
 
-    // Trial parallelism: slice trial indices over `tasks` inner threads.
+    // Trial parallelism: slice the trial list over `tasks` inner threads.
+    let n = trials.len();
     let mut outcomes: Vec<Option<TrialOutcome>> = Vec::new();
-    outcomes.resize_with(n_trials, || None);
+    outcomes.resize_with(n, || None);
     let slots = Mutex::new(&mut outcomes);
     std::thread::scope(|scope| {
-        for task in 0..tasks.min(n_trials) {
+        for task in 0..tasks.min(n) {
             let slots = &slots;
             let run_one = &run_one;
             scope.spawn(move || {
-                let mut t = task;
-                while t < n_trials {
-                    let o = run_one(t);
-                    slots.lock().unwrap()[t] = Some(o);
-                    t += tasks;
+                let mut i = task;
+                while i < n {
+                    let o = run_one(trials[i]);
+                    slots.lock().unwrap()[i] = Some(o);
+                    i += tasks;
                 }
             });
         }
@@ -216,63 +178,10 @@ pub(crate) fn run_evaluation(
     outcomes.into_iter().map(|o| o.expect("trial ran")).collect()
 }
 
-fn push_job(queue: &JobQueue, job: Option<WorkerJob>) {
+fn push_job(queue: &JobQueue, job: Option<EvalJob>) {
     let (lock, cv) = &**queue;
     lock.lock().unwrap().push_back(job);
     cv.notify_one();
-}
-
-fn worker_job(j: &PendingJob) -> WorkerJob {
-    WorkerJob { id: j.id, theta: j.theta.clone(), seed: j.seed }
-}
-
-/// Record one completion: move the job out of `in_flight`, aggregate its
-/// outcomes into the history, and feed the surrogate.
-fn record_completion(
-    st: &mut Coordinator,
-    proposer: &mut OnlineProposer,
-    evaluator: &dyn Evaluator,
-    hpo: &HpoConfig,
-    space: &Space,
-    c: Completion,
-) {
-    let pos = st
-        .in_flight
-        .iter()
-        .position(|j| j.id == c.id)
-        .expect("completion for an in-flight job");
-    let job = st.in_flight.swap_remove(pos);
-    let summary = aggregate(evaluator, &job.theta, &c.outcomes, hpo.weights);
-    let record = EvalRecord {
-        id: job.id,
-        n_params: evaluator.n_params(&job.theta),
-        theta: job.theta,
-        summary,
-        provenance: job.provenance,
-    };
-    proposer.observe(space, &record);
-    st.history.records.push(record);
-}
-
-/// Propose the next point and submit it to the worker pool.
-fn submit_proposal(
-    st: &mut Coordinator,
-    proposer: &mut OnlineProposer,
-    space: &Space,
-    queue: &JobQueue,
-) {
-    let theta = proposer.propose(space, &st.history, st.iter, &mut st.rng);
-    st.iter += 1;
-    let job = PendingJob {
-        id: st.next_id,
-        theta,
-        provenance: st.history.records.iter().map(|r| r.id).collect(),
-        seed: st.rng.next_u64(),
-    };
-    push_job(queue, Some(worker_job(&job)));
-    st.in_flight.push(job);
-    st.next_id += 1;
-    st.submitted += 1;
 }
 
 /// Start a fresh experiment.
@@ -280,8 +189,8 @@ pub fn run_experiment(
     evaluator: &dyn Evaluator,
     cfg: &ExecConfig,
 ) -> Result<ExecOutcome> {
-    let st = Coordinator::fresh(&cfg.hpo);
-    drive(evaluator, cfg, st, false)
+    let session = Session::new(evaluator, &cfg.hpo);
+    drive(evaluator, cfg, session, false)
 }
 
 /// Continue an experiment from a checkpoint. The checkpoint must come
@@ -292,40 +201,24 @@ pub fn resume_experiment(
     cfg: &ExecConfig,
     ckpt: Checkpoint,
 ) -> Result<ExecOutcome> {
-    if ckpt.seed != cfg.hpo.seed {
-        bail!(
-            "checkpoint seed {} does not match config seed {}",
-            ckpt.seed,
-            cfg.hpo.seed
-        );
-    }
-    let st = Coordinator {
-        rng: Rng::from_state(ckpt.rng_state),
-        next_id: ckpt.next_id,
-        iter: ckpt.iter,
-        submitted: ckpt.submitted,
-        history: ckpt.history,
-        in_flight: ckpt.in_flight,
-    };
-    drive(evaluator, cfg, st, true)
+    let session = Session::restore(evaluator, &cfg.hpo, ckpt)?;
+    drive(evaluator, cfg, session, true)
 }
 
+/// The ask → execute → tell loop: workers execute evaluation-granular
+/// jobs, the coordinator feeds their outcomes back to the session and
+/// refills the pool from `ask_eval`.
 fn drive(
     evaluator: &dyn Evaluator,
     cfg: &ExecConfig,
-    mut st: Coordinator,
+    mut session: Session,
     resumed: bool,
 ) -> Result<ExecOutcome> {
-    let space = evaluator.space().clone();
-    let budget = cfg.hpo.max_evaluations;
     let n_workers = cfg.topology.steps;
     let tasks = cfg.topology.tasks_per_step;
 
-    let mut proposer = OnlineProposer::new(&cfg.hpo);
-    proposer.preload(&space, &st.history);
-
     let mut stats = ExecStats { resumed, ..Default::default() };
-    let mut ckpt_err: Option<anyhow::Error> = None;
+    let mut fatal: Option<anyhow::Error> = None;
 
     let queue: JobQueue =
         Arc::new((Mutex::new(VecDeque::new()), Condvar::new()));
@@ -337,7 +230,6 @@ fn drive(
             let queue = Arc::clone(&queue);
             let done_tx = done_tx.clone();
             let evaluator: &dyn Evaluator = evaluator;
-            let hpo = &cfg.hpo;
             let mode = cfg.mode;
             let time_scale = cfg.time_scale;
             scope.spawn(move || loop {
@@ -355,113 +247,75 @@ fn drive(
                 let outcomes = run_evaluation(
                     evaluator,
                     &job.theta,
-                    hpo.n_trials,
+                    &job.trials,
                     job.seed,
                     tasks,
                     mode,
                     time_scale,
                 );
+                let outcomes =
+                    job.trials.iter().copied().zip(outcomes).collect();
                 let _ = done_tx.send(Completion { id: job.id, outcomes });
             });
         }
         drop(done_tx);
 
         // --- coordinator --------------------------------------------------
-        let fresh_start = st.history.is_empty()
-            && st.in_flight.is_empty()
-            && st.submitted == 0;
-        if fresh_start {
-            let init = initial_design(&space, &cfg.hpo, &mut st.rng);
-            for theta in init.into_iter().take(budget) {
-                let job = PendingJob {
-                    id: st.next_id,
-                    theta,
-                    provenance: vec![],
-                    seed: st.rng.next_u64(),
-                };
-                push_job(&queue, Some(worker_job(&job)));
-                st.in_flight.push(job);
-                st.next_id += 1;
-                st.submitted += 1;
-            }
-        } else {
-            // Resume: re-enqueue every in-flight job with its original
-            // (θ, seed); deterministic evaluators reproduce the killed
-            // run's outcomes exactly.
-            for job in &st.in_flight {
-                push_job(&queue, Some(worker_job(job)));
+        // Fill the pool: one evaluation-granular job per worker. During
+        // the initial design the session hands out init jobs only; after
+        // the barrier this is the paper's adaptive wave.
+        let mut outstanding = 0usize;
+        while outstanding < n_workers {
+            match session.ask_eval() {
+                Some(job) => {
+                    push_job(&queue, Some(job));
+                    outstanding += 1;
+                }
+                None => break,
             }
         }
         // Make the submission wave durable before waiting on it.
         let mut unsaved_changes = false;
         if let Some(pol) = &cfg.checkpoint {
-            match st.snapshot(cfg.hpo.seed).save(&pol.path) {
+            match session.snapshot().save(&pol.path) {
                 Ok(()) => stats.checkpoints_written += 1,
-                Err(e) => ckpt_err = Some(e),
+                Err(e) => fatal = Some(e),
             }
         }
 
-        // Initial-design barrier: provenance-free completions are
-        // buffered and recorded in id order once the whole design is in,
-        // so the surrogate's starting state is independent of worker
-        // timing (as in the seed loop).
-        let mut init_pending = st
-            .in_flight
-            .iter()
-            .filter(|j| j.provenance.is_empty())
-            .count();
-        let mut init_buffer: Vec<Completion> = Vec::new();
         let mut completions_this_run: u64 = 0;
-        let mut stop_early = ckpt_err.is_some();
+        let mut stop_early = fatal.is_some();
 
-        while !st.in_flight.is_empty() && !stop_early {
+        while outstanding > 0 && !stop_early {
             let Ok(c) = done_rx.recv() else { break };
-            let is_init = st
-                .in_flight
-                .iter()
-                .find(|j| j.id == c.id)
-                .map(|j| j.provenance.is_empty())
-                .unwrap_or(false);
+            outstanding -= 1;
+            // Feed every trial outcome back; the session records the
+            // evaluation (or schedules adaptive replicas) on the last.
             let mut recorded_now = 0u64;
-            if is_init {
-                init_buffer.push(c);
-                init_pending -= 1;
-                if init_pending > 0 {
-                    continue;
+            for (trial, outcome) in c.outcomes {
+                match session.tell(c.id, trial, outcome) {
+                    Ok(told) => recorded_now += told.recorded as u64,
+                    Err(e) => {
+                        fatal = Some(e);
+                        stop_early = true;
+                        break;
+                    }
                 }
-                init_buffer.sort_by_key(|c| c.id);
-                for c in init_buffer.drain(..) {
-                    record_completion(
-                        &mut st,
-                        &mut proposer,
-                        evaluator,
-                        &cfg.hpo,
-                        &space,
-                        c,
-                    );
-                    recorded_now += 1;
+            }
+            // Refill the pool (Fig. 6): the surrogate has already
+            // absorbed this completion incrementally; new proposals (or
+            // replica batches) go out without waiting for peers.
+            while !stop_early && outstanding < n_workers {
+                match session.ask_eval() {
+                    Some(job) => {
+                        push_job(&queue, Some(job));
+                        outstanding += 1;
+                    }
+                    None => break,
                 }
-                // Fill the pool with the first adaptive wave.
-                let wave = n_workers.min(budget.saturating_sub(st.submitted));
-                for _ in 0..wave {
-                    submit_proposal(&mut st, &mut proposer, &space, &queue);
-                }
-            } else {
-                record_completion(
-                    &mut st,
-                    &mut proposer,
-                    evaluator,
-                    &cfg.hpo,
-                    &space,
-                    c,
-                );
-                recorded_now = 1;
-                if st.submitted < budget {
-                    // Asynchronous update (Fig. 6): the surrogate has
-                    // already absorbed this completion incrementally;
-                    // propose and resubmit without waiting for peers.
-                    submit_proposal(&mut st, &mut proposer, &space, &queue);
-                }
+            }
+            if recorded_now == 0 {
+                continue;
             }
             completions_this_run += recorded_now;
             unsaved_changes = true;
@@ -478,13 +332,13 @@ fn drive(
             }
             if due_now || (stop_early && cfg.checkpoint.is_some()) {
                 let pol = cfg.checkpoint.as_ref().expect("policy present");
-                match st.snapshot(cfg.hpo.seed).save(&pol.path) {
+                match session.snapshot().save(&pol.path) {
                     Ok(()) => {
                         stats.checkpoints_written += 1;
                         unsaved_changes = false;
                     }
                     Err(e) => {
-                        ckpt_err = Some(e);
+                        fatal = Some(e);
                         stop_early = true;
                     }
                 }
@@ -496,17 +350,17 @@ fn drive(
         // save didn't already capture this exact state.
         if !stop_early && unsaved_changes {
             if let Some(pol) = &cfg.checkpoint {
-                match st.snapshot(cfg.hpo.seed).save(&pol.path) {
+                match session.snapshot().save(&pol.path) {
                     Ok(()) => stats.checkpoints_written += 1,
-                    Err(e) => ckpt_err = Some(e),
+                    Err(e) => fatal = Some(e),
                 }
             }
         }
 
-        // Shutdown: discard queued-but-unstarted work (those jobs stay in
-        // `in_flight`, hence in the checkpoint), stop the workers, drain
-        // stragglers whose results we deliberately drop for the same
-        // reason.
+        // Shutdown: discard queued-but-unstarted work (those jobs stay
+        // in-flight in the session, hence in the checkpoint), stop the
+        // workers, drain stragglers whose results we deliberately drop
+        // for the same reason.
         {
             let (lock, cv) = &*queue;
             let mut q = lock.lock().unwrap();
@@ -521,10 +375,10 @@ fn drive(
         stats.completions = completions_this_run;
     });
 
-    if let Some(e) = ckpt_err {
+    if let Some(e) = fatal {
         return Err(e);
     }
-    stats.refits = proposer.stats();
-    let complete = st.history.len() >= budget;
-    Ok(ExecOutcome { history: st.history, stats, complete })
+    stats.refits = session.stats();
+    let complete = session.is_complete();
+    Ok(ExecOutcome { history: session.into_history(), stats, complete })
 }

@@ -1,15 +1,29 @@
-//! The experiment-execution subsystem: a reusable asynchronous driver
-//! with incremental surrogate refits, checkpoint/resume, and grid sweeps.
+//! The experiment-execution subsystem: a sans-IO decision core plus the
+//! I/O shells that run it.
 //!
-//! This is the architectural seam between the HPO engine (`optimizer`)
-//! and the parallel substrate (`cluster`): everything that *runs*
-//! experiments — the `hyppo` CLI, `cluster::workers::run_async`, the
-//! sweep grid, future sharded/multi-backend drivers — goes through
-//! [`run_experiment`] / [`resume_experiment`]. See DESIGN.md §4 for the
-//! design and the checkpoint schema.
+//! The architectural seam is [`Session`] (`exec::session`): the paper's
+//! Fig. 6 loop as a pure ask/tell state machine — no threads, no
+//! sleeps, no filesystem. Everything that *executes* experiments is a
+//! shell looping `ask → execute → tell` over it:
+//!
+//! * [`run_experiment`] / [`resume_experiment`] (`exec::driver`) — the
+//!   threaded steps × tasks pool with real/scaled sleeps and checkpoint
+//!   files; `cluster::workers::run_async` and the `hyppo run` CLI wrap
+//!   it.
+//! * `cluster::sim::simulate_hpo` — the same loop in deterministic
+//!   virtual time (no sleeps).
+//! * [`run_sweep`] (`exec::sweep`) — seed × topology grids over the
+//!   threaded shell.
+//! * External executors — embed `Session` directly; see
+//!   `examples/ask_tell.rs` and DESIGN.md §5.
+//!
+//! Checkpoints (`exec::checkpoint`) serialize exactly
+//! [`Session::snapshot`]. See DESIGN.md §4-§5 for the design and the
+//! schema.
 
 pub mod checkpoint;
 pub mod driver;
+pub mod session;
 pub mod sweep;
 
 pub use checkpoint::{Checkpoint, PendingJob, CHECKPOINT_VERSION};
@@ -17,4 +31,5 @@ pub use driver::{
     resume_experiment, run_experiment, CheckpointPolicy, ExecConfig,
     ExecOutcome, ExecStats,
 };
+pub use session::{Ask, EvalJob, Session, Told, Trial, TrialKind};
 pub use sweep::{run_sweep, SweepCell};

@@ -1,0 +1,752 @@
+//! The sans-IO experiment core: HYPPO's Fig. 6 loop as a pure state
+//! machine.
+//!
+//! `Session` owns every *decision* of an experiment — what to evaluate
+//! next, how the paper's trial-level uncertainty accounting folds N
+//! trial outcomes into one history record, when the surrogate absorbs a
+//! completion — and none of the *execution*: no threads, no sleeps, no
+//! filesystem. Callers drive it with two calls:
+//!
+//! * [`Session::ask`] hands out the next [`Trial`] to run — an
+//!   initial-design point, a surrogate proposal, or (under
+//!   [`AdaptiveTrials`](crate::optimizer::AdaptiveTrials)) an extra UQ
+//!   replica of an in-flight θ.
+//! * [`Session::tell`] absorbs one completed [`TrialOutcome`]. When a
+//!   θ's trial set is complete it is aggregated via
+//!   [`aggregate`](crate::eval::aggregate) (Eqs. 4-9), recorded, and
+//!   fed to the [`OnlineProposer`] incrementally.
+//!
+//! Everything that *runs* trials — the threaded `exec::driver`, the
+//! virtual-time `cluster::sim::simulate_hpo`, external schedulers, the
+//! `examples/ask_tell.rs` hand-rolled loop — is a shell around this
+//! type, so the optimization brain exists exactly once (DESIGN.md §5).
+//!
+//! # State machine
+//!
+//! ```text
+//!            ask()                        tell()
+//!   Init ────────────► trials of the    ────────► buffer until the whole
+//!   (barrier)           initial design             design is in, then
+//!                                                  flush in id order
+//!            ask()                        tell()
+//!   Adaptive ────────► propose θ, hand  ────────► aggregate → record →
+//!                       out its trials             observe (incremental
+//!                       (then replicas)            refit) — or extend θ
+//!                                                  with a replica when
+//!                                                  trained-loss spread
+//!                                                  is too high
+//! ```
+//!
+//! # Invariants
+//!
+//! * An evaluation's trials are handed out contiguously: once `ask`
+//!   returns trial j of evaluation e, the next `planned - j - 1` asks
+//!   return e's remaining trials before any other work (shells may
+//!   therefore batch one evaluation per worker).
+//! * No proposal is created before the full initial design is recorded
+//!   (the surrogate's starting state is independent of worker timing),
+//!   and at most `max_evaluations` evaluations are ever created.
+//! * `snapshot`/`restore` round-trips are exact for the decision state:
+//!   RNG, counters, history, and in-flight jobs. Partially-told trial
+//!   outcomes are deliberately *not* captured — a restored session asks
+//!   for the full trial set of each in-flight θ again with its original
+//!   `(θ, seed)` pair, so deterministic evaluators reproduce (and, under
+//!   adaptive replicas, re-extend) the killed run exactly.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::eval::{aggregate, Evaluator, TrialOutcome};
+use crate::exec::checkpoint::{Checkpoint, PendingJob, CHECKPOINT_VERSION};
+use crate::optimizer::{
+    initial_design, EvalRecord, History, HpoConfig, OnlineProposer,
+    RefitStats,
+};
+use crate::sampling::rng::Rng;
+use crate::space::{Point, Space};
+
+/// Why a trial is being requested.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrialKind {
+    /// Part of the initial experimental design.
+    Init,
+    /// Part of a surrogate-proposed evaluation.
+    Proposal,
+    /// An extra UQ replica scheduled by the
+    /// [`AdaptiveTrials`](crate::optimizer::AdaptiveTrials) policy.
+    Replica,
+}
+
+/// One unit of work handed to an executor: train one model for `theta`
+/// (trial index `trial`, evaluation seed `seed`) and `tell` the outcome.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Trial {
+    /// Evaluation (submission) id this trial belongs to.
+    pub eval_id: usize,
+    /// Trial index within the evaluation (passed to `run_trial`).
+    pub trial: usize,
+    /// Trials currently planned for this evaluation; this is trial
+    /// `trial` of `planned`. May grow later under adaptive replicas.
+    pub planned: usize,
+    /// The hyperparameter set under evaluation.
+    pub theta: Point,
+    /// The evaluation seed (shared by all trials of this θ).
+    pub seed: u64,
+    /// What kind of work this is.
+    pub kind: TrialKind,
+}
+
+/// Result of [`Session::ask`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Ask {
+    /// Run this trial and `tell` its outcome.
+    Trial(Trial),
+    /// Nothing to hand out until more outcomes are told (all in-flight
+    /// work is already dispatched, or the init barrier is pending).
+    Wait,
+    /// The full evaluation budget has been recorded.
+    Done,
+}
+
+/// An evaluation-granular batch of trials (a convenience over [`Ask`]
+/// for shells that dispatch whole evaluations to workers).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EvalJob {
+    /// Evaluation id.
+    pub id: usize,
+    /// The hyperparameter set.
+    pub theta: Point,
+    /// The evaluation seed.
+    pub seed: u64,
+    /// Trial indices to run (contiguous slice of the evaluation's plan).
+    pub trials: Vec<usize>,
+}
+
+/// What one [`Session::tell`] call did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Told {
+    /// Evaluations recorded into the history by this call (usually 0 or
+    /// 1; the init barrier flushes the whole design at once).
+    pub recorded: usize,
+    /// Extra replica trials scheduled for this θ by
+    /// [`AdaptiveTrials`](crate::optimizer::AdaptiveTrials).
+    pub extended: usize,
+}
+
+/// One in-flight evaluation: its serializable identity plus the trial
+/// bookkeeping that lives only between `ask` and `tell`.
+#[derive(Debug, Clone)]
+struct PendingEval {
+    job: PendingJob,
+    /// Initial-design evaluation (subject to the record barrier).
+    init: bool,
+    /// Total trials currently planned (≥ `HpoConfig::n_trials`).
+    planned: usize,
+    /// Trials handed out via `ask` so far (hand-out is in index order).
+    handed: usize,
+    /// Outcomes received, indexed by trial.
+    outcomes: Vec<Option<TrialOutcome>>,
+    /// Complete but buffered behind the init barrier.
+    buffered: bool,
+}
+
+impl PendingEval {
+    fn new(job: PendingJob, init: bool, planned: usize) -> Self {
+        PendingEval {
+            job,
+            init,
+            planned,
+            handed: 0,
+            outcomes: vec![None; planned],
+            buffered: false,
+        }
+    }
+
+    fn received(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.is_some()).count()
+    }
+}
+
+/// The pure ask/tell experiment core. See the module docs for the state
+/// machine; see `exec::driver` for the threaded shell.
+pub struct Session<'ev> {
+    evaluator: &'ev dyn Evaluator,
+    hpo: HpoConfig,
+    space: Space,
+    rng: Rng,
+    next_id: usize,
+    iter: usize,
+    submitted: usize,
+    history: History,
+    proposer: OnlineProposer,
+    pending: Vec<PendingEval>,
+}
+
+impl<'ev> Session<'ev> {
+    /// Start a fresh experiment. The initial design is drawn immediately
+    /// (so the first snapshot already fixes the whole design), but no
+    /// trial runs until the caller asks for it.
+    ///
+    /// The evaluator reference is used only for its pure surface —
+    /// `space()`, `n_params()`, `loss_of_mean_prediction()` — never for
+    /// `run_trial`; running trials is the caller's job.
+    pub fn new(evaluator: &'ev dyn Evaluator, hpo: &HpoConfig) -> Self {
+        let mut s = Session {
+            evaluator,
+            hpo: hpo.clone(),
+            space: evaluator.space().clone(),
+            rng: Rng::new(hpo.seed),
+            next_id: 0,
+            iter: 0,
+            submitted: 0,
+            history: History::default(),
+            proposer: OnlineProposer::new(hpo),
+            pending: Vec::new(),
+        };
+        s.submit_initial_design();
+        s
+    }
+
+    /// Rebuild a session from a [`Checkpoint`] (the plain-data form of
+    /// [`Session::snapshot`]). The checkpoint must come from a run with
+    /// the same `HpoConfig::seed` — a cheap witness that the
+    /// configuration matches.
+    pub fn restore(
+        evaluator: &'ev dyn Evaluator,
+        hpo: &HpoConfig,
+        ckpt: Checkpoint,
+    ) -> Result<Self> {
+        if ckpt.seed != hpo.seed {
+            bail!(
+                "checkpoint seed {} does not match config seed {}",
+                ckpt.seed,
+                hpo.seed
+            );
+        }
+        let space = evaluator.space().clone();
+        let mut proposer = OnlineProposer::new(hpo);
+        proposer.preload(&space, &ckpt.history);
+        let n_trials = hpo.n_trials.max(1);
+        let mut s = Session {
+            evaluator,
+            hpo: hpo.clone(),
+            space,
+            rng: Rng::from_state(ckpt.rng_state),
+            next_id: ckpt.next_id,
+            iter: ckpt.iter,
+            submitted: ckpt.submitted,
+            history: ckpt.history,
+            proposer,
+            pending: ckpt
+                .in_flight
+                .into_iter()
+                .map(|job| {
+                    let init = job.provenance.is_empty();
+                    PendingEval::new(job, init, n_trials)
+                })
+                .collect(),
+        };
+        // A snapshot taken before anything was submitted restores to a
+        // fresh session.
+        if s.history.is_empty() && s.pending.is_empty() && s.submitted == 0
+        {
+            s.submit_initial_design();
+        }
+        Ok(s)
+    }
+
+    fn submit_initial_design(&mut self) {
+        let init = initial_design(&self.space, &self.hpo, &mut self.rng);
+        let n_trials = self.hpo.n_trials.max(1);
+        for theta in init.into_iter().take(self.hpo.max_evaluations) {
+            let job = PendingJob {
+                id: self.next_id,
+                theta,
+                provenance: vec![],
+                seed: self.rng.next_u64(),
+            };
+            self.pending.push(PendingEval::new(job, true, n_trials));
+            self.next_id += 1;
+            self.submitted += 1;
+        }
+    }
+
+    /// Initial-design evaluations not yet recorded (the barrier count).
+    fn init_remaining(&self) -> usize {
+        self.pending.iter().filter(|p| p.init).count()
+    }
+
+    /// The next trial to run, or why there is none.
+    pub fn ask(&mut self) -> Ask {
+        // 1. Hand out a queued trial: first pending evaluation (FIFO)
+        //    with trials not yet dished out. Hand-out is contiguous per
+        //    evaluation by construction.
+        let n_trials = self.hpo.n_trials.max(1);
+        if let Some(p) =
+            self.pending.iter_mut().find(|p| p.handed < p.planned)
+        {
+            let trial = p.handed;
+            p.handed += 1;
+            // Replica wins over Init: an adaptively extended init eval's
+            // extra trials are replicas too.
+            let kind = if trial >= n_trials {
+                TrialKind::Replica
+            } else if p.init {
+                TrialKind::Init
+            } else {
+                TrialKind::Proposal
+            };
+            return Ask::Trial(Trial {
+                eval_id: p.job.id,
+                trial,
+                planned: p.planned,
+                theta: p.job.theta.clone(),
+                seed: p.job.seed,
+                kind,
+            });
+        }
+        // 2. Budget recorded: the experiment is over.
+        if self.history.len() >= self.hpo.max_evaluations {
+            return Ask::Done;
+        }
+        // 3. The init barrier is pending, or every evaluation in the
+        //    budget has been created: outcomes must arrive first.
+        if self.init_remaining() > 0
+            || self.submitted >= self.hpo.max_evaluations
+            || self.history.is_empty()
+        {
+            return Ask::Wait;
+        }
+        // 4. Propose a new evaluation and hand out its first trial.
+        let theta = self.proposer.propose(
+            &self.space,
+            &self.history,
+            self.iter,
+            &mut self.rng,
+        );
+        self.iter += 1;
+        let job = PendingJob {
+            id: self.next_id,
+            theta,
+            provenance: self.history.records.iter().map(|r| r.id).collect(),
+            seed: self.rng.next_u64(),
+        };
+        self.next_id += 1;
+        self.submitted += 1;
+        let mut p = PendingEval::new(job, false, n_trials);
+        p.handed = 1;
+        let t = Trial {
+            eval_id: p.job.id,
+            trial: 0,
+            planned: p.planned,
+            theta: p.job.theta.clone(),
+            seed: p.job.seed,
+            kind: TrialKind::Proposal,
+        };
+        self.pending.push(p);
+        Ask::Trial(t)
+    }
+
+    /// Evaluation-granular convenience over [`Session::ask`]: the next
+    /// askable trial plus every remaining currently-planned trial of the
+    /// same evaluation (the contiguity invariant guarantees they follow).
+    pub fn ask_eval(&mut self) -> Option<EvalJob> {
+        let first = match self.ask() {
+            Ask::Trial(t) => t,
+            Ask::Wait | Ask::Done => return None,
+        };
+        let mut trials = vec![first.trial];
+        for _ in first.trial + 1..first.planned {
+            match self.ask() {
+                Ask::Trial(t) if t.eval_id == first.eval_id => {
+                    trials.push(t.trial)
+                }
+                _ => unreachable!(
+                    "an evaluation's trials are handed out contiguously"
+                ),
+            }
+        }
+        Some(EvalJob {
+            id: first.eval_id,
+            theta: first.theta,
+            seed: first.seed,
+            trials,
+        })
+    }
+
+    /// Absorb one trial outcome. When this completes the evaluation's
+    /// trial set, the evaluation is aggregated (Eqs. 4-9) and recorded —
+    /// or extended with a replica when the
+    /// [`AdaptiveTrials`](crate::optimizer::AdaptiveTrials) policy says
+    /// its trained-loss spread is still too high.
+    pub fn tell(
+        &mut self,
+        eval_id: usize,
+        trial: usize,
+        outcome: TrialOutcome,
+    ) -> Result<Told> {
+        let idx = self
+            .pending
+            .iter()
+            .position(|p| p.job.id == eval_id)
+            .ok_or_else(|| {
+                anyhow!("tell for unknown evaluation {eval_id}")
+            })?;
+        {
+            let p = &mut self.pending[idx];
+            if trial >= p.planned {
+                bail!(
+                    "trial {trial} out of range for evaluation {eval_id} \
+                     ({} planned)",
+                    p.planned
+                );
+            }
+            if p.outcomes[trial].is_some() {
+                bail!(
+                    "duplicate outcome for evaluation {eval_id} trial \
+                     {trial}"
+                );
+            }
+            p.outcomes[trial] = Some(outcome);
+            if p.received() < p.planned {
+                return Ok(Told::default());
+            }
+        }
+        // The trial set is complete. Adaptive policy: one more replica at
+        // a time while the trained-loss spread stays above threshold.
+        if let Some(pol) = self.hpo.adaptive_trials {
+            let p = &mut self.pending[idx];
+            let losses: Vec<f64> =
+                p.outcomes.iter().flatten().map(|o| o.loss).collect();
+            if p.planned < pol.max_trials.max(1)
+                && crate::uq::stddev(&losses) > pol.std_threshold
+            {
+                p.planned += 1;
+                p.outcomes.push(None);
+                return Ok(Told { recorded: 0, extended: 1 });
+            }
+        }
+        // Record — directly for adaptive-phase evaluations, behind the
+        // id-order barrier for the initial design.
+        let mut told = Told::default();
+        if self.pending[idx].init {
+            self.pending[idx].buffered = true;
+            if self.pending.iter().any(|p| p.init && !p.buffered) {
+                return Ok(told);
+            }
+            let (mut inits, rest): (Vec<_>, Vec<_>) =
+                std::mem::take(&mut self.pending)
+                    .into_iter()
+                    .partition(|p| p.init);
+            self.pending = rest;
+            inits.sort_by_key(|p| p.job.id);
+            for p in inits {
+                self.record(p);
+                told.recorded += 1;
+            }
+        } else {
+            let p = self.pending.remove(idx);
+            self.record(p);
+            told.recorded = 1;
+        }
+        Ok(told)
+    }
+
+    /// Aggregate a completed evaluation into the history and feed the
+    /// surrogate (incremental refit where the surrogate supports it).
+    fn record(&mut self, p: PendingEval) {
+        let outcomes: Vec<TrialOutcome> = p
+            .outcomes
+            .into_iter()
+            .map(|o| o.expect("recorded evaluation is complete"))
+            .collect();
+        let summary = aggregate(
+            self.evaluator,
+            &p.job.theta,
+            &outcomes,
+            self.hpo.weights,
+        );
+        let record = EvalRecord {
+            id: p.job.id,
+            n_params: self.evaluator.n_params(&p.job.theta),
+            theta: p.job.theta,
+            summary,
+            provenance: p.job.provenance,
+        };
+        self.proposer.observe(&self.space, &record);
+        self.history.records.push(record);
+    }
+
+    /// Snapshot the decision state as plain data (see the module docs
+    /// for what is deliberately *not* captured). `exec::checkpoint`
+    /// serializes exactly this.
+    pub fn snapshot(&self) -> Checkpoint {
+        Checkpoint {
+            version: CHECKPOINT_VERSION,
+            seed: self.hpo.seed,
+            rng_state: self.rng.state(),
+            next_id: self.next_id,
+            iter: self.iter,
+            submitted: self.submitted,
+            history: self.history.clone(),
+            in_flight: self.pending.iter().map(|p| p.job.clone()).collect(),
+        }
+    }
+
+    /// Evaluations recorded so far, in completion order.
+    pub fn history(&self) -> &History {
+        &self.history
+    }
+
+    /// Consume the session, returning the history.
+    pub fn into_history(self) -> History {
+        self.history
+    }
+
+    /// True when the full evaluation budget has been recorded.
+    pub fn is_complete(&self) -> bool {
+        self.history.len() >= self.hpo.max_evaluations
+    }
+
+    /// Evaluations created but not yet recorded.
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Surrogate refit counters accumulated so far.
+    pub fn stats(&self) -> RefitStats {
+        self.proposer.stats()
+    }
+
+    /// The problem configuration the session was built with.
+    pub fn hpo(&self) -> &HpoConfig {
+        &self.hpo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::synthetic::SyntheticEvaluator;
+    use crate::optimizer::AdaptiveTrials;
+    use crate::space::{ParamSpec, Space};
+
+    fn evaluator(seed: u64) -> SyntheticEvaluator {
+        let space = Space::new(vec![
+            ParamSpec::new("a", 0, 24),
+            ParamSpec::new("b", 0, 24),
+        ]);
+        let mut ev = SyntheticEvaluator::new(space, seed);
+        ev.t_dropout = 3;
+        ev
+    }
+
+    fn cfg(budget: usize, seed: u64) -> HpoConfig {
+        HpoConfig {
+            max_evaluations: budget,
+            n_init: 4,
+            n_trials: 2,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    /// Run a session to completion with a sequential ask→run→tell loop.
+    fn drain(session: &mut Session) {
+        loop {
+            match session.ask() {
+                Ask::Trial(t) => {
+                    let o = session
+                        .evaluator
+                        .run_trial(&t.theta, t.trial, t.seed);
+                    session.tell(t.eval_id, t.trial, o).unwrap();
+                }
+                Ask::Wait => panic!("sequential loop can never starve"),
+                Ask::Done => break,
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_ask_tell_completes_budget() {
+        let ev = evaluator(7);
+        let mut s = Session::new(&ev, &cfg(12, 1));
+        drain(&mut s);
+        assert!(s.is_complete());
+        assert_eq!(s.in_flight(), 0);
+        let h = s.into_history();
+        assert_eq!(h.len(), 12);
+        for (i, r) in h.records.iter().enumerate() {
+            assert_eq!(r.id, i);
+            if i < 4 {
+                assert!(r.provenance.is_empty());
+            } else {
+                assert_eq!(r.provenance, (0..i).collect::<Vec<_>>());
+            }
+        }
+    }
+
+    #[test]
+    fn trials_are_contiguous_per_evaluation() {
+        let ev = evaluator(3);
+        let mut s = Session::new(&ev, &cfg(8, 5));
+        let mut last: Option<(usize, usize)> = None;
+        loop {
+            match s.ask() {
+                Ask::Trial(t) => {
+                    if let Some((id, trial)) = last {
+                        if t.eval_id == id {
+                            assert_eq!(t.trial, trial + 1);
+                        } else {
+                            assert_eq!(t.trial, 0);
+                        }
+                    }
+                    last = Some((t.eval_id, t.trial));
+                    let o =
+                        s.evaluator.run_trial(&t.theta, t.trial, t.seed);
+                    s.tell(t.eval_id, t.trial, o).unwrap();
+                }
+                Ask::Done => break,
+                Ask::Wait => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn no_proposals_before_the_init_barrier() {
+        let ev = evaluator(2);
+        let mut s = Session::new(&ev, &cfg(10, 3));
+        // Collect the whole initial design without telling anything.
+        let mut init_trials = Vec::new();
+        loop {
+            match s.ask() {
+                Ask::Trial(t) => {
+                    assert_eq!(t.kind, TrialKind::Init);
+                    init_trials.push(t);
+                }
+                Ask::Wait => break,
+                Ask::Done => panic!("not done"),
+            }
+        }
+        assert_eq!(init_trials.len(), 4 * 2);
+        // Tell all but the last: still waiting.
+        let last = init_trials.pop().unwrap();
+        for t in &init_trials {
+            let o = ev.run_trial(&t.theta, t.trial, t.seed);
+            assert_eq!(
+                s.tell(t.eval_id, t.trial, o).unwrap().recorded,
+                0
+            );
+        }
+        assert_eq!(s.ask(), Ask::Wait);
+        // The last outcome flushes the barrier in id order.
+        let o = ev.run_trial(&last.theta, last.trial, last.seed);
+        let told = s.tell(last.eval_id, last.trial, o).unwrap();
+        assert_eq!(told.recorded, 4);
+        let ids: Vec<usize> =
+            s.history().records.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        // Now proposals flow.
+        match s.ask() {
+            Ask::Trial(t) => assert_eq!(t.kind, TrialKind::Proposal),
+            other => panic!("expected a proposal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tell_rejects_unknown_and_duplicate() {
+        let ev = evaluator(1);
+        let mut s = Session::new(&ev, &cfg(6, 2));
+        let t = match s.ask() {
+            Ask::Trial(t) => t,
+            _ => unreachable!(),
+        };
+        let o = ev.run_trial(&t.theta, t.trial, t.seed);
+        assert!(s.tell(999, 0, o.clone()).is_err());
+        s.tell(t.eval_id, t.trial, o.clone()).unwrap();
+        assert!(s.tell(t.eval_id, t.trial, o.clone()).is_err());
+        assert!(s.tell(t.eval_id, 99, o).is_err());
+    }
+
+    #[test]
+    fn adaptive_policy_extends_to_the_cap_on_noisy_landscapes() {
+        let ev = evaluator(9); // noise > 0: spread never hits 0
+        let mut hpo = cfg(8, 4);
+        hpo.adaptive_trials =
+            Some(AdaptiveTrials { std_threshold: 0.0, max_trials: 4 });
+        let mut s = Session::new(&ev, &hpo);
+        let mut per_eval = std::collections::HashMap::new();
+        let mut replicas = 0;
+        loop {
+            match s.ask() {
+                Ask::Trial(t) => {
+                    *per_eval.entry(t.eval_id).or_insert(0usize) += 1;
+                    if t.kind == TrialKind::Replica {
+                        replicas += 1;
+                    }
+                    let o =
+                        s.evaluator.run_trial(&t.theta, t.trial, t.seed);
+                    s.tell(t.eval_id, t.trial, o).unwrap();
+                }
+                Ask::Done => break,
+                Ask::Wait => unreachable!(),
+            }
+        }
+        assert_eq!(s.history().len(), 8);
+        // Zero threshold on a noisy landscape: every θ runs max_trials.
+        for (id, n) in &per_eval {
+            assert_eq!(*n, 4, "evaluation {id} ran {n} trials");
+        }
+        assert_eq!(replicas, 8 * 2);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrips_through_json() {
+        let ev = evaluator(5);
+        let hpo = cfg(10, 6);
+
+        // Reference: one uninterrupted sequential run.
+        let mut reference = Session::new(&ev, &hpo);
+        drain(&mut reference);
+        let reference = reference.into_history();
+
+        // Interrupted: stop mid-stream (including mid-evaluation), pass
+        // the snapshot through its JSON wire format, restore, finish.
+        let mut first = Session::new(&ev, &hpo);
+        for _ in 0..13 {
+            match first.ask() {
+                Ask::Trial(t) => {
+                    let o = ev.run_trial(&t.theta, t.trial, t.seed);
+                    first.tell(t.eval_id, t.trial, o).unwrap();
+                }
+                _ => break,
+            }
+        }
+        let wire = first.snapshot().to_json_string();
+        drop(first);
+        let ckpt = Checkpoint::from_json_str(&wire).unwrap();
+        let mut resumed = Session::restore(&ev, &hpo, ckpt).unwrap();
+        drain(&mut resumed);
+        let resumed = resumed.into_history();
+
+        assert_eq!(reference.len(), resumed.len());
+        for (a, b) in reference.records.iter().zip(&resumed.records) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.theta, b.theta);
+            assert_eq!(a.provenance, b.provenance);
+            assert_eq!(
+                a.summary.interval.center,
+                b.summary.interval.center
+            );
+        }
+    }
+
+    #[test]
+    fn restore_rejects_seed_mismatch() {
+        let ev = evaluator(5);
+        let s = Session::new(&ev, &cfg(6, 1));
+        let ckpt = s.snapshot();
+        let err =
+            Session::restore(&ev, &cfg(6, 2), ckpt).unwrap_err();
+        assert!(format!("{err:#}").contains("seed"));
+    }
+}

@@ -1,5 +1,6 @@
 //! Multi-experiment sweeps: drive a seed × topology grid through the
-//! asynchronous executor.
+//! asynchronous executor (each cell is one threaded ask → execute →
+//! tell shell over a fresh `exec::Session`).
 //!
 //! The sweep reuses whatever the evaluator factory captures — for the
 //! HLO backend that is one `Arc<SharedEngine>`, so every experiment in

@@ -26,7 +26,7 @@ use hyppo::exec::{
     resume_experiment, run_experiment, run_sweep, Checkpoint,
     CheckpointPolicy, ExecConfig, ExecOutcome,
 };
-use hyppo::optimizer::History;
+use hyppo::optimizer::{AdaptiveTrials, History};
 use hyppo::report::{print_table, write_history_csv, write_sweep_csv};
 use hyppo::runtime::{artifact_dir, SharedEngine};
 use hyppo::util::cli::Args;
@@ -38,6 +38,7 @@ USAGE:
   hyppo run --config <file.toml> [--backend synthetic|mlp] [--out out.csv]
             [--checkpoint ckpt.json] [--resume ckpt.json]
             [--max-completions N] [--time-scale S]
+            [--adaptive-trials STD [--max-trials N]]
   hyppo sweep --config <file.toml> [--backend synthetic|mlp]
             [--seeds 0,1,2] [--topologies 1x1,4x2] [--out sweep.csv]
   hyppo slurm [--steps N] [--tasks M] [--cpu]
@@ -175,6 +176,27 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(n) = args.get("max-completions") {
         exec_cfg.max_completions =
             Some(n.parse().context("--max-completions must be a count")?);
+    }
+    if let Some(raw) = args.get("adaptive-trials") {
+        // Paper's trial-level uncertainty accounting, made adaptive:
+        // rerun a θ (extra UQ replicas) while its trained-loss spread
+        // exceeds this threshold, up to --max-trials per evaluation.
+        let std_threshold: f64 = raw.parse().context(
+            "--adaptive-trials needs a trained-loss std-dev threshold",
+        )?;
+        let n_trials = cfg.hpo.n_trials.max(1);
+        let max_trials: usize = match args.get("max-trials") {
+            Some(v) => v.parse().context("--max-trials must be a count")?,
+            None => 2 * n_trials,
+        };
+        if max_trials < n_trials {
+            bail!(
+                "--max-trials {max_trials} is below n_trials {n_trials}; \
+                 the cap must allow at least the base trial set"
+            );
+        }
+        exec_cfg.hpo.adaptive_trials =
+            Some(AdaptiveTrials { std_threshold, max_trials });
     }
 
     let out: ExecOutcome = match resume_path {

@@ -30,6 +30,21 @@ pub enum SurrogateKind {
     RbfEnsemble { alpha: f64, members: usize },
 }
 
+/// Adaptive trial-count policy (paper Feature 1's "directly accounts
+/// for uncertainty", taken one step further): when the trained-loss
+/// spread of a θ's completed trial set exceeds `std_threshold`, the
+/// `exec::Session` schedules one extra UQ replica at a time — same θ,
+/// same evaluation seed, next trial index — until the spread drops or
+/// `max_trials` is reached. Needs `n_trials >= 2` to have a spread
+/// signal; off by default (`HpoConfig::adaptive_trials = None`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveTrials {
+    /// Extend while `EvalSummary::trained_std` would exceed this.
+    pub std_threshold: f64,
+    /// Hard cap on trials per evaluation (≥ `n_trials`).
+    pub max_trials: usize,
+}
+
 /// Initial experimental design.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum InitDesign {
@@ -65,6 +80,9 @@ pub struct HpoConfig {
     /// Fixed initial points (e.g. Fig. 3 seeds the surrogate with 10
     /// deliberately bad evaluations); overrides `init_design` when set.
     pub initial_points: Option<Vec<Point>>,
+    /// Optional adaptive replica policy (extra trials for high-variance
+    /// θ, `exec::Session` only; the sync reference loop ignores it).
+    pub adaptive_trials: Option<AdaptiveTrials>,
 }
 
 impl Default for HpoConfig {
@@ -80,6 +98,7 @@ impl Default for HpoConfig {
             candidates: CandidateConfig::default(),
             init_design: InitDesign::Random,
             initial_points: None,
+            adaptive_trials: None,
         }
     }
 }
