@@ -25,11 +25,11 @@ use hyppo::util::csv::CsvWriter;
 const SWEEP: usize = 825; // paper Fig. 2/3
 const N_TRIALS: usize = 5;
 
-fn mlp_n_params(theta: &[i64]) -> u64 {
+fn mlp_n_params(theta: &[hyppo::space::Value]) -> u64 {
     // (layers, width, lr_idx, dropout_idx): true MLP formula with a
     // 16-input window and scalar output.
-    let layers = theta[0] as u64;
-    let width = 8 * (theta[1] as u64 + 1);
+    let layers = theta[0].as_i64() as u64;
+    let width = 8 * (theta[1].as_i64() as u64 + 1);
     16 * width + width
         + (layers - 1) * (width * width + width)
         + width + 1
@@ -86,7 +86,7 @@ fn main() -> anyhow::Result<()> {
     let sorted: Vec<f64> = losses.iter().map(|(l, _)| *l).collect();
 
     // Red points: the 10 *worst* evaluations as the initial design.
-    let bad_inits: Vec<Vec<i64>> = losses[SWEEP - 10..]
+    let bad_inits: Vec<hyppo::space::Point> = losses[SWEEP - 10..]
         .iter()
         .map(|(_, t)| t.clone())
         .collect();

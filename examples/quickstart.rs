@@ -10,17 +10,20 @@
 use hyppo::cluster::workers::{run_async, AsyncConfig};
 use hyppo::cluster::{ParallelMode, Topology};
 use hyppo::eval::synthetic::SyntheticEvaluator;
+use hyppo::eval::Evaluator;
 use hyppo::optimizer::{HpoConfig, SurrogateKind};
 use hyppo::report::write_history_csv;
 use hyppo::space::{ParamSpec, Space};
 
 fn main() -> anyhow::Result<()> {
-    // A 4-D integer hyperparameter lattice (paper Eq. 2).
+    // A mixed typed search space (search-space v2): integer depth and
+    // width, a first-class log-scale learning rate, and a continuous
+    // dropout probability — no scaled-integer smuggling.
     let space = Space::new(vec![
-        ParamSpec::new("layers", 1, 8),
-        ParamSpec::new("width", 0, 31),
-        ParamSpec::new("lr_idx", 0, 15),
-        ParamSpec::new("dropout_idx", 0, 10),
+        ParamSpec::int("layers", 1, 8),
+        ParamSpec::int("width", 0, 31),
+        ParamSpec::log_continuous("lr", 1e-5, 1e-1),
+        ParamSpec::continuous("dropout", 0.0, 0.5),
     ]);
     let evaluator = SyntheticEvaluator::new(space, 7);
 
@@ -47,8 +50,8 @@ fn main() -> anyhow::Result<()> {
 
     let best = history.best(cfg.hpo.gamma).unwrap();
     println!(
-        "\nbest θ = {:?}\n  loss (CI center) = {:.5}\n  CI radius        = {:.5}\n  true landscape   = {:.5}\n  n_params         = {}",
-        best.theta,
+        "\nbest θ = {}\n  loss (CI center) = {:.5}\n  CI radius        = {:.5}\n  true landscape   = {:.5}\n  n_params         = {}",
+        evaluator.space().format_point(&best.theta),
         best.summary.interval.center,
         best.summary.interval.radius,
         evaluator.true_loss(&best.theta),

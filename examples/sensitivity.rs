@@ -51,13 +51,13 @@ fn main() -> anyhow::Result<()> {
         },
     );
     let xs: Vec<Vec<f64>> =
-        h.records.iter().map(|r| space.to_unit(&r.theta)).collect();
+        h.records.iter().map(|r| space.encode(&r.theta)).collect();
     let ys: Vec<f64> =
         h.records.iter().map(|r| r.summary.interval.center).collect();
     let mut rbf = RbfSurrogate::new();
     assert!(rbf.fit(&xs, &ys));
     let s1_surr = sobol_first_order(&space, 512, &mut rng, |t| {
-        rbf.predict(&space.to_unit(t))
+        rbf.predict(&space.encode(t))
     });
 
     for (i, name) in res.names.iter().enumerate() {
@@ -81,10 +81,11 @@ fn main() -> anyhow::Result<()> {
         res.names[rank[0]],
         res.names[rank[1]],
         res.names[rank[2]],
-        space.cardinality(),
-        space.params()[rank[0]].size()
-            * space.params()[rank[1]].size()
-            * space.params()[rank[2]].size(),
+        space.cardinality().expect("all-Int space is finite"),
+        rank[..3]
+            .iter()
+            .map(|&i| space.params()[i].cardinality().unwrap())
+            .product::<u64>(),
     );
     println!("-> reports/sensitivity.csv");
     Ok(())

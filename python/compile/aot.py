@@ -6,7 +6,7 @@ Rust request path. Each (family, shape-arch, role) pair becomes one
 parameter arrays, data inputs, and outputs so the Rust registry
 (``rust/src/runtime/registry.rs``) can bind buffers without re-tracing.
 
-Grid (DESIGN.md §6):
+Grid (DESIGN.md §7):
   mlp  : in/out {(16,1) time-series, (1,1) polyfit} x layers {1,2,3}
          x width {16,32,64}
   cnn  : channels {8,16} x dense width {32,64}

@@ -4,7 +4,7 @@ HLO text (NOT ``lowered.compile().serialize()``) is the interchange format:
 jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
 crate's bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
 The text parser on the Rust side reassigns ids, so text round-trips cleanly.
-See /opt/xla-example/README.md and DESIGN.md §2.
+See /opt/xla-example/README.md and DESIGN.md §3.
 """
 
 import jax

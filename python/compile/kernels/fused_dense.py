@@ -11,7 +11,7 @@ On the paper's GPUs this fusion is done by cuDNN; here it is expressed as a
 Pallas kernel tiled for the TPU memory hierarchy: the (M, N) output is
 blocked so each program holds an (bm, K) x-tile, a (K, bn) W-tile and the
 (bm, bn) accumulator in VMEM and drives the MXU with a single
-``jnp.dot`` per tile (see DESIGN.md §9 for the VMEM/MXU estimate).
+``jnp.dot`` per tile (see DESIGN.md §10 for the VMEM/MXU estimate).
 
 The kernel is wrapped in ``jax.custom_vjp`` so the L2 training graph can
 differentiate through it; the backward pass is also implemented as Pallas

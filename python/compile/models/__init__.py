@@ -10,5 +10,5 @@ Each family exposes the same role set consumed by the Rust runtime registry:
 Shape-changing hyperparameters (layer count, width, channels, U-Net blocks)
 select an *artifact* from the AOT grid; runtime-continuous hyperparameters
 (learning rate, dropout probability, seed, effective batch size via the
-row-weight vector) are executable inputs. See DESIGN.md §6.
+row-weight vector) are executable inputs. See DESIGN.md §7.
 """

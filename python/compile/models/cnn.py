@@ -1,6 +1,6 @@
 """Small CNN classifier family — the CIFAR10-like study (Fig. 1b).
 
-Input: ``(B, 8, 8, 3)`` synthetic shape images (DESIGN.md §2 substitution
+Input: ``(B, 8, 8, 3)`` synthetic shape images (DESIGN.md §3 substitution
 for CIFAR10). Architecture: 3x3 conv (C channels, relu) -> 2x2 max-pool ->
 flatten -> fused_dense hidden (relu, dropout) -> linear head -> softmax.
 

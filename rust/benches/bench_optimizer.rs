@@ -26,7 +26,7 @@ fn space() -> Space {
 fn main() {
     let sp = space();
     let mut rng = Rng::new(0);
-    let evaluated: Vec<Vec<i64>> =
+    let evaluated: Vec<hyppo::space::Point> =
         (0..60).map(|_| sp.random_point(&mut rng)).collect();
     let best = evaluated[0].clone();
     let cfg = CandidateConfig::default();
@@ -45,7 +45,7 @@ fn main() {
     bench1("ga_maximize_40x30", || {
         let mut r = Rng::new(3);
         black_box(maximize(&sp, &GaConfig::default(), &mut r, |p| {
-            -(p[0] as f64 - 3.0).powi(2) - (p[1] as f64 - 7.0).powi(2)
+            -(p[0].as_f64() - 3.0).powi(2) - (p[1].as_f64() - 7.0).powi(2)
         }));
     });
 

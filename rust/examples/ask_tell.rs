@@ -61,11 +61,11 @@ fn pump(
                 let outcome =
                     evaluator.run_trial(&t.theta, t.trial, t.seed);
                 println!(
-                    "{tag} eval {:>2} trial {}/{}  theta {:?}  loss {:.4}",
+                    "{tag} eval {:>2} trial {}/{}  theta {}  loss {:.4}",
                     t.eval_id,
                     t.trial + 1,
                     t.planned,
-                    t.theta,
+                    evaluator.space().format_point(&t.theta),
                     outcome.loss
                 );
                 let told = session
@@ -94,9 +94,14 @@ fn pump(
 }
 
 fn main() -> Result<()> {
+    // A mixed typed search space (search-space v2): an integer depth, a
+    // log-scale learning rate, a categorical optimizer, and an ordinal
+    // batch size — all first-class, no scaled-integer smuggling.
     let space = Space::new(vec![
-        ParamSpec::new("layers", 1, 8),
-        ParamSpec::new("width", 0, 24),
+        ParamSpec::int("layers", 1, 8),
+        ParamSpec::log_continuous("lr", 1e-5, 1e-1),
+        ParamSpec::categorical("opt", &["sgd", "adam", "rmsprop"]),
+        ParamSpec::ordinal("batch", &[16.0, 32.0, 64.0, 128.0]),
     ]);
     let evaluator = SyntheticEvaluator::new(space, 7);
     let hpo = config();
@@ -123,10 +128,10 @@ fn main() -> Result<()> {
     let history = session.into_history();
     let best = history.best(hpo.gamma).expect("non-empty history");
     println!(
-        "\ndone: {} evaluations, best loss {:.5} at {:?} (eval {})",
+        "\ndone: {} evaluations, best loss {:.5} at {} (eval {})",
         history.len(),
         best.summary.interval.center,
-        best.theta,
+        evaluator.space().format_point(&best.theta),
         best.id
     );
     println!(

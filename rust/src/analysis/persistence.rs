@@ -12,8 +12,15 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::eval::EvalSummary;
 use crate::optimizer::{EvalRecord, History};
+use crate::space::Value;
 use crate::uq::LossInterval;
 use crate::util::json::{parse, write, Json};
+
+/// Current history-file schema version. Version 1 (the pre-typed-space
+/// format, where every θ coordinate was a plain integer) is still
+/// accepted on read: plain numbers parse as [`Value::Int`], which is
+/// exactly what they meant.
+pub const HISTORY_VERSION: i64 = 2;
 
 /// Encode an f64, representing non-finite values (diverged trainings
 /// produce inf/NaN losses) as strings — `Json::Num` would serialize them
@@ -43,6 +50,84 @@ fn num_back(v: &Json) -> Option<f64> {
     }
 }
 
+/// Serialize one typed θ coordinate (schema v2, shared by history files
+/// and `exec::checkpoint`):
+///
+/// * `Value::Int(v)` → a plain JSON number — byte-identical to the v1
+///   schema, which is what makes v1 files parse losslessly. Magnitudes
+///   above 2⁵³ (exactly representable in `f64` no longer) fall back to
+///   `{"i": "<decimal string>"}`, the same precision rule the u64
+///   seed/RNG fields follow.
+/// * `Value::Float(v)` → `{"f": v}` (non-finite values as strings, like
+///   every other float field).
+/// * `Value::Cat(i)` → `{"c": i}`.
+pub fn value_to_json(v: &Value) -> Json {
+    match v {
+        Value::Int(v) if v.unsigned_abs() <= (1u64 << 53) => {
+            Json::Num(*v as f64)
+        }
+        Value::Int(v) => {
+            let mut o = BTreeMap::new();
+            o.insert("i".into(), Json::Str(v.to_string()));
+            Json::Obj(o)
+        }
+        Value::Float(v) => {
+            let mut o = BTreeMap::new();
+            o.insert("f".into(), num(*v));
+            Json::Obj(o)
+        }
+        Value::Cat(i) => {
+            let mut o = BTreeMap::new();
+            o.insert("c".into(), Json::Num(*i as f64));
+            Json::Obj(o)
+        }
+    }
+}
+
+/// Parse one typed θ coordinate; plain numbers (the v1 schema) read as
+/// [`Value::Int`].
+pub fn value_from_json(v: &Json) -> Result<Value> {
+    match v {
+        // A plain number is the v1 integer encoding; a fractional value
+        // here is a corrupt file, not an int to round (floats always
+        // travel as {"f": v}), and magnitudes beyond 2⁵³ cannot have
+        // round-tripped exactly through the f64 substrate (the writer
+        // uses the {"i": "decimal"} escape for those).
+        Json::Num(n) if n.fract() == 0.0 && n.abs() <= (1u64 << 53) as f64 =>
+        {
+            Ok(Value::Int(*n as i64))
+        }
+        Json::Num(n) => Err(anyhow!(
+            "bad bare coordinate {n} (floats use {{\"f\": v}}, wide ints \
+             {{\"i\": \"decimal\"}})"
+        )),
+        Json::Obj(o) => {
+            if let Some(f) = o.get("f") {
+                return num_back(f)
+                    .map(Value::Float)
+                    .ok_or_else(|| anyhow!("bad float coordinate"));
+            }
+            if let Some(c) = o.get("c") {
+                return c
+                    .as_i64()
+                    .map(|i| Value::Cat(i as usize))
+                    .ok_or_else(|| anyhow!("bad categorical coordinate"));
+            }
+            if let Some(i) = o.get("i") {
+                let s = i
+                    .as_str()
+                    .ok_or_else(|| anyhow!("bad wide-int coordinate"))?;
+                return s
+                    .parse::<i64>()
+                    .map(Value::Int)
+                    .map_err(|e| anyhow!("bad wide-int {s:?}: {e}"));
+            }
+            Err(anyhow!("unknown typed coordinate {o:?}"))
+        }
+        other => Err(anyhow!("bad theta coordinate {other:?}")),
+    }
+}
+
 /// Serialize one evaluation record to a JSON object (shared with the
 /// `exec::checkpoint` format, which embeds records verbatim).
 pub fn record_to_json(r: &EvalRecord) -> Json {
@@ -50,7 +135,7 @@ pub fn record_to_json(r: &EvalRecord) -> Json {
     o.insert("id".into(), num(r.id as f64));
     o.insert(
         "theta".into(),
-        Json::Arr(r.theta.iter().map(|v| num(*v as f64)).collect()),
+        Json::Arr(r.theta.iter().map(value_to_json).collect()),
     );
     o.insert("center".into(), num(r.summary.interval.center));
     o.insert("radius".into(), num(r.summary.interval.radius));
@@ -76,8 +161,8 @@ pub fn record_from_json(v: &Json) -> Result<EvalRecord> {
         .as_arr()
         .context("theta")?
         .iter()
-        .map(|x| x.as_i64().context("theta item"))
-        .collect::<Result<Vec<i64>>>()?;
+        .map(|x| value_from_json(x).context("theta item"))
+        .collect::<Result<Vec<Value>>>()?;
     let provenance = v
         .get("provenance")
         .as_arr()
@@ -106,10 +191,10 @@ pub fn record_from_json(v: &Json) -> Result<EvalRecord> {
     })
 }
 
-/// Serialize a history to JSON text.
+/// Serialize a history to JSON text (schema [`HISTORY_VERSION`]).
 pub fn history_to_json(h: &History) -> String {
     let mut root = BTreeMap::new();
-    root.insert("version".into(), num(1.0));
+    root.insert("version".into(), num(HISTORY_VERSION as f64));
     root.insert(
         "records".into(),
         Json::Arr(h.records.iter().map(record_to_json).collect()),
@@ -117,12 +202,14 @@ pub fn history_to_json(h: &History) -> String {
     write(&Json::Obj(root))
 }
 
-/// Parse a history back.
+/// Parse a history back. Accepts schema v1 (all-integer θ) and v2
+/// (typed θ); v1 coordinates migrate losslessly to `Value::Int`.
 pub fn history_from_json(text: &str) -> Result<History> {
     let root =
         parse(text).map_err(|e| anyhow!("history parse: {e}"))?;
-    if root.get("version").as_i64() != Some(1) {
-        anyhow::bail!("unsupported history version");
+    let version = root.get("version").as_i64();
+    if !matches!(version, Some(1) | Some(2)) {
+        anyhow::bail!("unsupported history version {version:?}");
     }
     let records = root
         .get("records")
@@ -211,6 +298,41 @@ mod tests {
         assert!(history_from_json("not json").is_err());
         assert!(history_from_json("{\"version\":9,\"records\":[]}")
             .is_err());
+        // A fractional bare θ coordinate is corruption, not an int.
+        assert!(value_from_json(&Json::Num(0.001)).is_err());
+        assert_eq!(
+            value_from_json(&Json::Num(3.0)).unwrap(),
+            Value::Int(3)
+        );
+    }
+
+    #[test]
+    fn typed_theta_roundtrips_and_v1_files_migrate() {
+        let mut h = sample_history();
+        // Mix every kind into one θ, including an Int beyond the f64
+        // mantissa (exercises the decimal-string wide-int fallback).
+        h.records[0].theta = vec![
+            Value::Int(-3),
+            Value::Float(1.25e-3),
+            Value::Cat(2),
+            Value::Int(i64::MAX - 7),
+        ];
+        let h2 = history_from_json(&history_to_json(&h)).unwrap();
+        assert_eq!(h2.records[0].theta, h.records[0].theta);
+
+        // A v1 file: version 1, θ as plain integers. Must parse, with
+        // every coordinate landing as Value::Int.
+        let v1 = history_to_json(&sample_history())
+            .replace("\"version\":2", "\"version\":1");
+        let hv1 = history_from_json(&v1).unwrap();
+        assert_eq!(hv1.len(), sample_history().len());
+        for (a, b) in hv1.records.iter().zip(&sample_history().records) {
+            assert_eq!(a.theta, b.theta);
+            assert!(a
+                .theta
+                .iter()
+                .all(|v| matches!(v, Value::Int(_))));
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@
 
 use crate::sampling::rng::Rng;
 use crate::sampling::sobol::Sobol;
-use crate::space::Space;
+use crate::space::{encoding, ParamKind, Point, Space, Value};
 
 /// Result per hyperparameter.
 #[derive(Debug, Clone)]
@@ -38,8 +38,57 @@ impl SensitivityResult {
     }
 }
 
+/// One Morris step along `dim`: a quarter-range move that stays inside
+/// the domain. Returns the stepped point plus the fraction of the range
+/// moved (the elementary-effect normalizer). `Int` keeps the original
+/// lattice arithmetic exactly; ordinals step on level indices,
+/// categoricals swap cyclically (a unit move, matching their unit
+/// feature distance), and continuous parameters step in (warped) unit
+/// coordinates.
+fn morris_step(space: &Space, x: &Point, dim: usize) -> (Point, f64) {
+    let spec = &space.params()[dim];
+    let mut y = x.clone();
+    let frac = match &spec.kind {
+        ParamKind::Int { lo, hi } => {
+            let size = (hi - lo) as u64 + 1;
+            let delta = ((size as f64 / 4.0).round() as i64).max(1);
+            let v = x[dim].as_i64();
+            let step = if v + delta <= *hi { delta } else { -delta };
+            let v2 = (v + step).clamp(*lo, *hi);
+            y[dim] = Value::Int(v2);
+            (v2 - v).unsigned_abs() as f64 / (size - 1).max(1) as f64
+        }
+        ParamKind::Ordinal { levels } => {
+            let k = levels.len() as i64;
+            let delta = ((k as f64 / 4.0).round() as i64).max(1);
+            let i = x[dim].as_i64();
+            let step = if i + delta <= k - 1 { delta } else { -delta };
+            let i2 = (i + step).clamp(0, k - 1);
+            y[dim] = Value::Int(i2);
+            (i2 - i).unsigned_abs() as f64 / (k - 1).max(1) as f64
+        }
+        ParamKind::Categorical { choices } => {
+            let k = choices.len();
+            let delta = (k / 4).max(1);
+            let i = x[dim].as_index();
+            y[dim] = Value::Cat((i + delta) % k);
+            // A categorical swap is a unit move (its one-hot feature
+            // distance), so the raw effect is the normalized one.
+            1.0
+        }
+        ParamKind::Continuous { .. } => {
+            let u = encoding::unit_of_loose(&spec.kind, &x[dim]);
+            let step = if u + 0.25 <= 1.0 { 0.25 } else { -0.25 };
+            let u2 = (u + step).clamp(0.0, 1.0);
+            y[dim] = space.encoding().value_from_unit(&spec.kind, u2);
+            (u2 - u).abs()
+        }
+    };
+    (y, frac)
+}
+
 /// Morris elementary effects with `r` trajectories.
-pub fn morris<F: FnMut(&[i64]) -> f64>(
+pub fn morris<F: FnMut(&[Value]) -> f64>(
     space: &Space,
     r: usize,
     rng: &mut Rng,
@@ -54,27 +103,13 @@ pub fn morris<F: FnMut(&[i64]) -> f64>(
         let mut order: Vec<usize> = (0..d).collect();
         rng.shuffle(&mut order);
         for &dim in &order {
-            let spec = &space.params()[dim];
-            if spec.size() == 1 {
+            if space.params()[dim].is_fixed() {
                 effects[dim].push(0.0);
                 continue;
             }
-            // δ: a quarter-range step (at least 1 cell), direction chosen
-            // to stay inside the bounds.
-            let delta =
-                ((spec.size() as f64 / 4.0).round() as i64).max(1);
-            let step = if x[dim] + delta <= spec.hi {
-                delta
-            } else {
-                -delta
-            };
-            let mut y = x.clone();
-            y[dim] += step;
-            space.clamp(&mut y);
+            let (y, frac) = morris_step(space, &x, dim);
             let fy = f(&y);
             // Normalize by the fraction of the range moved.
-            let frac =
-                (y[dim] - x[dim]).abs() as f64 / (spec.size() - 1).max(1) as f64;
             effects[dim].push((fy - fx) / frac.max(1e-12));
             x = y;
             fx = fy;
@@ -94,7 +129,7 @@ pub fn morris<F: FnMut(&[i64]) -> f64>(
 
 /// First-order Sobol' indices via Saltelli pick-freeze on `n` base points.
 /// Returns S1 per dimension (clamped to [0, 1]).
-pub fn sobol_first_order<F: FnMut(&[i64]) -> f64>(
+pub fn sobol_first_order<F: FnMut(&[Value]) -> f64>(
     space: &Space,
     n: usize,
     rng: &mut Rng,
@@ -104,9 +139,9 @@ pub fn sobol_first_order<F: FnMut(&[i64]) -> f64>(
     // Two independent shifted Sobol streams for the A and B matrices.
     let mut sa = Sobol::scrambled(d, Some(rng));
     let mut sb = Sobol::scrambled(d, Some(rng));
-    let a: Vec<Vec<i64>> =
+    let a: Vec<Point> =
         (0..n).map(|_| space.from_unit(&sa.next_point())).collect();
-    let b: Vec<Vec<i64>> =
+    let b: Vec<Point> =
         (0..n).map(|_| space.from_unit(&sb.next_point())).collect();
 
     let fa: Vec<f64> = a.iter().map(|x| f(x)).collect();
@@ -151,8 +186,8 @@ mod tests {
     }
 
     /// f = 10·u0² + u1, u2 unused.
-    fn objective(space: &Space) -> impl FnMut(&[i64]) -> f64 + '_ {
-        move |x: &[i64]| {
+    fn objective(space: &Space) -> impl FnMut(&[Value]) -> f64 + '_ {
+        move |x: &[Value]| {
             let u = space.to_unit(x);
             10.0 * u[0] * u[0] + u[1]
         }
@@ -180,9 +215,29 @@ mod tests {
         ]);
         let mut rng = Rng::new(1);
         let res =
-            morris(&sp, 10, &mut rng, |x| x[1] as f64);
+            morris(&sp, 10, &mut rng, |x| x[1].as_f64());
         assert_eq!(res.mu_star[0], 0.0);
         assert!(res.mu_star[1] > 0.0);
+    }
+
+    #[test]
+    fn morris_ranks_mixed_typed_spaces() {
+        // The objective depends strongly on the log-continuous lr and
+        // on the categorical optimizer, not at all on the dead ordinal.
+        let sp = Space::new(vec![
+            crate::space::ParamSpec::log_continuous("lr", 1e-4, 1e-1),
+            crate::space::ParamSpec::categorical("opt", &["a", "b"]),
+            crate::space::ParamSpec::ordinal("dead", &[1.0, 2.0, 3.0]),
+        ]);
+        let mut rng = Rng::new(7);
+        let res = morris(&sp, 40, &mut rng, |x| {
+            let u = sp.to_unit(x);
+            8.0 * u[0] + if x[1].as_index() == 1 { 3.0 } else { 0.0 }
+        });
+        let rank = res.ranking();
+        assert_eq!(rank[2], 2, "dead ordinal must rank last: {res:?}");
+        assert!(res.mu_star[2] < 1e-9);
+        assert!(res.mu_star[0] > 0.0 && res.mu_star[1] > 0.0);
     }
 
     #[test]

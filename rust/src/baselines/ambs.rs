@@ -4,13 +4,14 @@
 //! loop with a random-forest surrogate and a lower-confidence-bound
 //! acquisition over randomly sampled candidates. We implement that
 //! algorithm (rather than wrapping the package — unavailable offline;
-//! DESIGN.md §2): random init, fit forest, sample K lattice candidates,
+//! DESIGN.md §3): random init, fit forest, sample K lattice candidates,
 //! pick argmin of μ − κσ, evaluate, repeat.
 
 use crate::baselines::forest::{Forest, ForestConfig};
 use crate::eval::Evaluator;
 use crate::optimizer::{evaluate_point, EvalRecord, History};
 use crate::sampling::rng::Rng;
+use crate::space::Point;
 use crate::uq::UqWeights;
 
 #[derive(Debug, Clone)]
@@ -46,7 +47,7 @@ pub fn run_ambs(evaluator: &dyn Evaluator, cfg: &AmbsConfig) -> History {
     let mut history = History::default();
 
     let record = |history: &mut History,
-                      theta: Vec<i64>,
+                      theta: Point,
                       provenance: Vec<usize>,
                       rng: &mut Rng| {
         let summary = evaluate_point(
@@ -75,7 +76,7 @@ pub fn run_ambs(evaluator: &dyn Evaluator, cfg: &AmbsConfig) -> History {
         let xs: Vec<Vec<f64>> = history
             .records
             .iter()
-            .map(|r| space.to_unit(&r.theta))
+            .map(|r| space.encode(&r.theta))
             .collect();
         let ys: Vec<f64> = history
             .records
@@ -84,15 +85,15 @@ pub fn run_ambs(evaluator: &dyn Evaluator, cfg: &AmbsConfig) -> History {
             .collect();
         let forest = Forest::fit(&xs, &ys, &cfg.forest, &mut rng);
 
-        let evaluated: Vec<Vec<i64>> =
+        let evaluated: Vec<Point> =
             history.records.iter().map(|r| r.theta.clone()).collect();
-        let mut best: Option<(Vec<i64>, f64)> = None;
+        let mut best: Option<(Point, f64)> = None;
         for _ in 0..cfg.n_candidates {
             let cand = space.random_point(&mut rng);
             if evaluated.contains(&cand) {
                 continue;
             }
-            let (mu, sd) = forest.predict(&space.to_unit(&cand));
+            let (mu, sd) = forest.predict(&space.encode(&cand));
             let lcb = mu - cfg.kappa * sd;
             if best.as_ref().map(|(_, b)| lcb < *b).unwrap_or(true) {
                 best = Some((cand, lcb));

@@ -162,10 +162,11 @@ mod tests {
     fn trial_parallel_nested_execution_correct() {
         // Nested inner threads must return all N outcomes in trial order.
         let ev = evaluator();
+        let theta = crate::space::ints(&[5, 5, 5]);
         let trials: Vec<usize> = (0..7).collect();
         let outs = run_evaluation(
             &ev,
-            &[5, 5, 5],
+            &theta,
             &trials,
             42,
             3,
@@ -175,7 +176,7 @@ mod tests {
         assert_eq!(outs.len(), 7);
         // Deterministic per (theta, trial, seed): matches serial run.
         let serial: Vec<f64> =
-            (0..7).map(|t| ev.run_trial(&[5, 5, 5], t, 42).loss).collect();
+            (0..7).map(|t| ev.run_trial(&theta, t, 42).loss).collect();
         let got: Vec<f64> = outs.iter().map(|o| o.loss).collect();
         assert_eq!(got, serial);
     }

@@ -3,8 +3,12 @@
 //! the paper's input configuration file drives HYPPO.
 //!
 //! Supported grammar: `[section]` headers, `key = value` with string,
-//! integer, float, boolean and homogeneous inline arrays — the subset our
-//! configs need (no serde offline).
+//! integer, float, boolean, homogeneous inline arrays, and inline tables
+//! (`{ k = v, ... }`, used by the typed `[space]` grammar) — the subset
+//! our configs need (no serde offline). Comment stripping and
+//! array/table splitting are quote-aware: `#` and `,` inside string
+//! literals are data, not syntax. Strings are basic double-quoted
+//! literals without escape sequences.
 
 use std::collections::BTreeMap;
 
@@ -23,6 +27,7 @@ pub enum Value {
     Float(f64),
     Bool(bool),
     Arr(Vec<Value>),
+    Table(BTreeMap<String, Value>),
 }
 
 impl Value {
@@ -45,14 +50,84 @@ impl Value {
             _ => None,
         }
     }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
 }
 
 /// section -> key -> value.
 pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;
 
+/// Strip a trailing `# comment`, ignoring `#` inside string literals
+/// (the old `line.split('#')` corrupted quoted values like `"a#b"`).
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Split `inner` on top-level `,` — commas inside string literals or
+/// nested `[...]` / `{...}` are data (the old `inner.split(',')`
+/// corrupted both).
+fn split_top_level(inner: &str) -> Result<Vec<&str>> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' | '{' if !in_str => depth += 1,
+            ']' | '}' if !in_str => {
+                depth = depth
+                    .checked_sub(1)
+                    .ok_or_else(|| anyhow!("unbalanced brackets"))?;
+            }
+            ',' if !in_str && depth == 0 => {
+                parts.push(&inner[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        bail!("unterminated string literal");
+    }
+    if depth != 0 {
+        bail!("unbalanced brackets");
+    }
+    parts.push(&inner[start..]);
+    Ok(parts)
+}
+
 fn parse_value(raw: &str) -> Result<Value> {
     let t = raw.trim();
-    if t.starts_with('"') && t.ends_with('"') && t.len() >= 2 {
+    if t.starts_with('"') {
+        if t.len() < 2 || !t.ends_with('"') || t[1..t.len() - 1].contains('"')
+        {
+            bail!("bad string literal: {t}");
+        }
         return Ok(Value::Str(t[1..t.len() - 1].to_string()));
     }
     if t == "true" {
@@ -62,13 +137,25 @@ fn parse_value(raw: &str) -> Result<Value> {
         return Ok(Value::Bool(false));
     }
     if t.starts_with('[') && t.ends_with(']') {
-        let inner = &t[1..t.len() - 1];
-        let items: Result<Vec<Value>> = inner
-            .split(',')
+        let items: Result<Vec<Value>> = split_top_level(&t[1..t.len() - 1])?
+            .into_iter()
             .filter(|s| !s.trim().is_empty())
             .map(parse_value)
             .collect();
         return Ok(Value::Arr(items?));
+    }
+    if t.starts_with('{') && t.ends_with('}') {
+        let mut table = BTreeMap::new();
+        for entry in split_top_level(&t[1..t.len() - 1])? {
+            if entry.trim().is_empty() {
+                continue;
+            }
+            let (k, v) = entry.split_once('=').ok_or_else(|| {
+                anyhow!("inline table entry {entry:?} needs key = value")
+            })?;
+            table.insert(k.trim().to_string(), parse_value(v)?);
+        }
+        return Ok(Value::Table(table));
     }
     if let Ok(i) = t.parse::<i64>() {
         return Ok(Value::Int(i));
@@ -84,7 +171,7 @@ pub fn parse(text: &str) -> Result<Doc> {
     let mut doc: Doc = BTreeMap::new();
     let mut section = String::new();
     for (lineno, raw) in text.lines().enumerate() {
-        let line = raw.split('#').next().unwrap_or("").trim();
+        let line = strip_comment(raw).trim();
         if line.is_empty() {
             continue;
         }
@@ -114,6 +201,146 @@ pub struct RunConfig {
     pub mode: ParallelMode,
 }
 
+/// Build one typed [`ParamSpec`] from its `[space]` entry.
+///
+/// Two syntaxes coexist:
+///
+/// * `name = [lo, hi]` — v1 sugar for an integer range (both bounds
+///   must be integers).
+/// * `name = { kind = "...", ... }` — the typed grammar:
+///   - `{ kind = "int", lo = 1, hi = 8 }`
+///   - `{ kind = "continuous", lo = 0.0, hi = 0.5 }`
+///   - `{ kind = "continuous", lo = 1e-5, hi = 1e-1, log = true }`
+///   - `{ kind = "categorical", choices = ["sgd", "adam"] }`
+///   - `{ kind = "ordinal", levels = [16, 32, 64, 128] }`
+fn build_param(name: &str, v: &Value) -> Result<ParamSpec> {
+    if let Some(arr) = v.as_arr() {
+        if arr.len() != 2 {
+            bail!("space.{name}: [lo, hi] needs exactly two entries");
+        }
+        let lo = arr[0]
+            .as_i64()
+            .with_context(|| format!("space.{name}: lo must be an int"))?;
+        let hi = arr[1]
+            .as_i64()
+            .with_context(|| format!("space.{name}: hi must be an int"))?;
+        if lo > hi {
+            bail!("space.{name}: empty range [{lo}, {hi}]");
+        }
+        return Ok(ParamSpec::int(name, lo, hi));
+    }
+    let table = v.as_table().ok_or_else(|| {
+        anyhow!(
+            "space.{name} must be [lo, hi] (int sugar) or a \
+             {{ kind = \"...\", ... }} table"
+        )
+    })?;
+    let kind = table
+        .get("kind")
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow!("space.{name}: missing kind"))?;
+    let getf = |k: &str| -> Result<f64> {
+        table.get(k).and_then(Value::as_f64).ok_or_else(|| {
+            anyhow!("space.{name}: {kind} needs a numeric {k}")
+        })
+    };
+    match kind {
+        "int" => {
+            // Like the [lo, hi] sugar, bounds must be genuine integers
+            // (silently truncating 1.9 → 1 would mask config typos).
+            let geti = |k: &str| -> Result<i64> {
+                table.get(k).and_then(Value::as_i64).ok_or_else(|| {
+                    anyhow!("space.{name}: int needs an integer {k}")
+                })
+            };
+            let (lo, hi) = (geti("lo")?, geti("hi")?);
+            if lo > hi {
+                bail!("space.{name}: empty range [{lo}, {hi}]");
+            }
+            Ok(ParamSpec::int(name, lo, hi))
+        }
+        "continuous" | "float" => {
+            let (lo, hi) = (getf("lo")?, getf("hi")?);
+            let log = table
+                .get("log")
+                .map(|b| {
+                    b.as_bool().ok_or_else(|| {
+                        anyhow!("space.{name}: log must be a bool")
+                    })
+                })
+                .transpose()?
+                .unwrap_or(false);
+            // Finiteness first: NaN bounds would slip through a plain
+            // `lo > hi` comparison and panic in the ParamSpec asserts.
+            if !lo.is_finite() || !hi.is_finite() || lo > hi {
+                bail!("space.{name}: bad range [{lo}, {hi}]");
+            }
+            if log {
+                if lo <= 0.0 {
+                    bail!("space.{name}: log scale needs lo > 0, got {lo}");
+                }
+                Ok(ParamSpec::log_continuous(name, lo, hi))
+            } else {
+                Ok(ParamSpec::continuous(name, lo, hi))
+            }
+        }
+        "categorical" => {
+            let choices: Vec<&str> = table
+                .get("choices")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| {
+                    anyhow!("space.{name}: categorical needs choices = [..]")
+                })?
+                .iter()
+                .map(|c| {
+                    c.as_str().ok_or_else(|| {
+                        anyhow!("space.{name}: choices must be strings")
+                    })
+                })
+                .collect::<Result<_>>()?;
+            if choices.is_empty() {
+                bail!("space.{name}: choices must be non-empty");
+            }
+            let mut dedup = choices.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            if dedup.len() != choices.len() {
+                bail!("space.{name}: duplicate choices");
+            }
+            Ok(ParamSpec::categorical(name, &choices))
+        }
+        "ordinal" => {
+            let levels: Vec<f64> = table
+                .get("levels")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| {
+                    anyhow!("space.{name}: ordinal needs levels = [..]")
+                })?
+                .iter()
+                .map(|c| {
+                    c.as_f64().ok_or_else(|| {
+                        anyhow!("space.{name}: levels must be numeric")
+                    })
+                })
+                .collect::<Result<_>>()?;
+            if levels.is_empty()
+                || levels.iter().any(|l| !l.is_finite())
+                || levels.windows(2).any(|w| w[0] >= w[1])
+            {
+                bail!(
+                    "space.{name}: levels must be non-empty, finite, and \
+                     strictly increasing"
+                );
+            }
+            Ok(ParamSpec::ordinal(name, &levels))
+        }
+        other => bail!(
+            "space.{name}: unknown kind {other:?} \
+             (int | continuous | categorical | ordinal)"
+        ),
+    }
+}
+
 /// Build a `RunConfig` from a parsed document. Layout:
 ///
 /// ```toml
@@ -134,8 +361,10 @@ pub struct RunConfig {
 /// mode = "trial"           # trial | data
 ///
 /// [space]
-/// layers = [1, 3]
-/// width_idx = [0, 2]
+/// layers = [1, 3]                                    # v1 Int sugar
+/// lr = { kind = "continuous", lo = 1e-5, hi = 1e-1, log = true }
+/// optimizer = { kind = "categorical", choices = ["sgd", "adam"] }
+/// batch = { kind = "ordinal", levels = [16, 32, 64] }
 /// ```
 pub fn build(doc: &Doc) -> Result<RunConfig> {
     let space_sec = doc
@@ -143,13 +372,10 @@ pub fn build(doc: &Doc) -> Result<RunConfig> {
         .ok_or_else(|| anyhow!("missing [space] section"))?;
     let mut params = Vec::new();
     for (name, v) in space_sec {
-        let arr = match v {
-            Value::Arr(a) if a.len() == 2 => a,
-            _ => bail!("space.{name} must be [lo, hi]"),
-        };
-        let lo = arr[0].as_i64().context("lo must be int")?;
-        let hi = arr[1].as_i64().context("hi must be int")?;
-        params.push(ParamSpec::new(name, lo, hi));
+        params.push(build_param(name, v)?);
+    }
+    if params.is_empty() {
+        bail!("[space] section defines no parameters");
     }
     let space = Space::new(params);
 
@@ -285,6 +511,125 @@ width_idx = [0, 2]
         assert!(build(&parse(&bad).unwrap()).is_err());
         let no_space = "[hpo]\nseed = 1\n";
         assert!(build(&parse(no_space).unwrap()).is_err());
+        let empty_space = "[space]\n";
+        assert!(build(&parse(empty_space).unwrap()).is_err());
+    }
+
+    #[test]
+    fn quoted_strings_keep_hash_and_comma() {
+        // Regression: comment stripping via split('#') and array
+        // splitting via split(',') both corrupted quoted strings.
+        let doc = parse(
+            "[s]\n\
+             tag = \"a#b\"      # real comment\n\
+             csv = \"x,y\"\n\
+             arr = [\"p,q\", \"r#s\", \"t\"]\n",
+        )
+        .unwrap();
+        assert_eq!(doc["s"]["tag"], Value::Str("a#b".into()));
+        assert_eq!(doc["s"]["csv"], Value::Str("x,y".into()));
+        assert_eq!(
+            doc["s"]["arr"],
+            Value::Arr(vec![
+                Value::Str("p,q".into()),
+                Value::Str("r#s".into()),
+                Value::Str("t".into()),
+            ])
+        );
+    }
+
+    #[test]
+    fn unterminated_strings_are_errors_not_corruption() {
+        assert!(parse("[s]\nx = [\"a,b]\n").is_err());
+        assert!(parse_value("\"half").is_err());
+        assert!(parse_value("\"a\"b\"").is_err());
+    }
+
+    #[test]
+    fn inline_tables_parse_with_nesting_and_comments() {
+        let doc = parse(
+            "[space]\n\
+             lr = { kind = \"continuous\", lo = 1e-5, hi = 0.1, \
+             log = true }  # log decade sweep\n\
+             opt = { kind = \"categorical\", choices = [\"sgd,momentum\", \
+             \"adam\"] }\n",
+        )
+        .unwrap();
+        let lr = doc["space"]["lr"].as_table().unwrap();
+        assert_eq!(lr["kind"], Value::Str("continuous".into()));
+        assert_eq!(lr["log"], Value::Bool(true));
+        assert_eq!(lr["lo"], Value::Float(1e-5));
+        let opt = doc["space"]["opt"].as_table().unwrap();
+        // The comma inside the quoted choice is data.
+        assert_eq!(
+            opt["choices"],
+            Value::Arr(vec![
+                Value::Str("sgd,momentum".into()),
+                Value::Str("adam".into()),
+            ])
+        );
+    }
+
+    #[test]
+    fn typed_space_grammar_builds_mixed_spaces() {
+        use crate::space::ParamKind;
+        let text = "\
+[space]
+layers = [1, 8]
+lr = { kind = \"continuous\", lo = 1e-5, hi = 1e-1, log = true }
+dropout = { kind = \"continuous\", lo = 0.0, hi = 0.5 }
+optimizer = { kind = \"categorical\", choices = [\"sgd\", \"adam\", \"rmsprop\"] }
+batch = { kind = \"ordinal\", levels = [16, 32, 64, 128] }
+";
+        let cfg = build(&parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.space.dim(), 5);
+        // BTreeMap order: batch, dropout, layers, lr, optimizer.
+        let kinds: Vec<&ParamKind> =
+            cfg.space.params().iter().map(|p| &p.kind).collect();
+        assert!(matches!(kinds[0], ParamKind::Ordinal { levels } if levels.len() == 4));
+        assert!(matches!(
+            kinds[1],
+            ParamKind::Continuous { log: false, .. }
+        ));
+        assert!(matches!(kinds[2], ParamKind::Int { lo: 1, hi: 8 }));
+        assert!(matches!(
+            kinds[3],
+            ParamKind::Continuous { log: true, .. }
+        ));
+        assert!(matches!(kinds[4], ParamKind::Categorical { choices } if choices.len() == 3));
+        // Legacy sugar and the typed kind build the same Int spec.
+        let sugar = build_param("layers", &Value::Arr(vec![
+            Value::Int(1),
+            Value::Int(8),
+        ]))
+        .unwrap();
+        assert_eq!(sugar, crate::space::ParamSpec::int("layers", 1, 8));
+    }
+
+    #[test]
+    fn typed_space_grammar_rejects_bad_tables() {
+        for bad in [
+            "[space]\nx = { lo = 1, hi = 2 }\n", // missing kind
+            "[space]\nx = { kind = \"warp\", lo = 1, hi = 2 }\n",
+            "[space]\nx = { kind = \"continuous\", lo = 0.0, hi = 1.0, \
+             log = true }\n", // log needs lo > 0
+            "[space]\nx = { kind = \"categorical\", choices = [] }\n",
+            "[space]\nx = { kind = \"ordinal\", levels = [3, 2] }\n",
+            "[space]\nx = { kind = \"int\", lo = 5, hi = 2 }\n",
+            "[space]\nx = { kind = \"int\", lo = 1.9, hi = 8 }\n",
+            // Malformed numerics must be clean errors, not panics.
+            "[space]\nx = { kind = \"continuous\", lo = nan, hi = 1.0 }\n",
+            "[space]\nx = { kind = \"continuous\", lo = 0.0, hi = inf }\n",
+            "[space]\nx = { kind = \"categorical\", choices = [\"a\", \"a\"] }\n",
+            "[space]\nx = { kind = \"ordinal\", levels = [nan, 1.0] }\n",
+            "[space]\nx = [1, 2, 3]\n",
+            "[space]\nx = [1.5, 2.5]\n", // float bounds need the table
+        ] {
+            assert!(
+                build(&parse(bad).unwrap()).is_err(),
+                "accepted: {bad}"
+            );
+        }
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Synthetic datasets (DESIGN.md §2 substitutions for Melbourne
+//! Synthetic datasets (DESIGN.md §3 substitutions for Melbourne
 //! temperatures, CIFAR10, and the XDesign phantom corpus).
 
 pub mod images;

@@ -4,13 +4,14 @@
 //! end-to-end path — the same `Evaluator` interface the synthetic backend
 //! implements, but with nothing simulated.
 //!
-//! Hyperparameter encoding over the integer lattice (paper Eq. 2):
-//!   layers      ∈ [1, 3]        (artifact grid axis)
-//!   width_idx   ∈ [0, 2]        -> {16, 32, 64} (artifact grid axis)
-//!   lr_idx      ∈ [0, 11]       -> lr = 10^(-(0.7 + 0.2·idx))
-//!   dropout_idx ∈ [0, 8]        -> p = 0.05·idx
-//!   epochs      ∈ [1, E_max]    (runtime loop length)
-//!   batch       ∈ [4, 32]       (effective rows via the weight vector)
+//! Hyperparameter space (search-space v2, typed — the v1 lattice forced
+//! everything through scaled integers):
+//!   layers  ∈ Int [1, 3]                       (artifact grid axis)
+//!   width   ∈ Ordinal {16, 32, 64}             (artifact grid axis)
+//!   lr      ∈ Continuous [10⁻²·⁹, 10⁻⁰·⁷] log  (was lr_idx ∈ [0, 11])
+//!   dropout ∈ Continuous [0.0, 0.4]            (was dropout_idx ∈ [0, 8])
+//!   epochs  ∈ Int [1, E_max]                   (runtime loop length)
+//!   batch   ∈ Int [4, 32]      (effective rows via the weight vector)
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -18,29 +19,50 @@ use std::time::{Duration, Instant};
 use crate::eval::{Evaluator, TrialOutcome};
 use crate::runtime::{make_batch, Model, SharedEngine};
 use crate::sampling::rng::Rng;
-use crate::space::{ParamSpec, Space};
+use crate::space::{ParamSpec, Space, Value};
 
 pub const WIDTHS: [usize; 3] = [16, 32, 64];
 pub const COMPILED_BATCH: usize = 32;
 
+/// The v1 lattice's learning-rate index mapping, kept for manually
+/// migrating old integer-encoded configs/results:
+/// `lr = 10^(-(0.7 + 0.2·idx))`.
+///
+/// Note that checkpoints written against the *old all-integer
+/// `mlp_space`* are not resumable against the new mixed space — the
+/// space definition itself changed, so `Session::restore` rejects them
+/// with a clean error. Convert old θ by hand via [`lr_of`] /
+/// [`dropout_of`] if an old run must be continued.
 pub fn lr_of(idx: i64) -> f32 {
     10f32.powf(-(0.7 + 0.2 * idx as f32))
 }
 
+/// The v1 lattice's dropout index mapping (`p = 0.05·idx`), kept for
+/// manually migrating old integer-encoded configs/results (see
+/// [`lr_of`] for the checkpoint-migration caveat).
 pub fn dropout_of(idx: i64) -> f32 {
     0.05 * idx as f32
 }
 
 /// The standard MLP search space used by the time-series and polyfit
-/// studies (6 hyperparameters, like the Fig. 4 comparison).
+/// studies (6 hyperparameters, like the Fig. 4 comparison). Since
+/// search-space v2 this is a genuinely mixed space: the learning rate is
+/// a first-class log-continuous parameter spanning the same decades the
+/// v1 `lr_idx` lattice quantized, dropout is continuous, and the width
+/// is an ordinal over the compiled artifact grid.
 pub fn mlp_space(e_max: i64) -> Space {
+    // One source of truth for the width axis: the same WIDTHS table
+    // that arch_name/n_params index with the ordinal level index.
+    let widths: Vec<f64> = WIDTHS.iter().map(|w| *w as f64).collect();
     Space::new(vec![
-        ParamSpec::new("layers", 1, 3),
-        ParamSpec::new("width_idx", 0, 2),
-        ParamSpec::new("lr_idx", 0, 11),
-        ParamSpec::new("dropout_idx", 0, 8),
-        ParamSpec::new("epochs", 1, e_max),
-        ParamSpec::new("batch", 4, 32),
+        ParamSpec::int("layers", 1, 3),
+        ParamSpec::ordinal("width", &widths),
+        // Exactly the v1 index range's endpoints, so every lattice
+        // point of the old lr_idx encoding is inside the new interval.
+        ParamSpec::log_continuous("lr", lr_of(11) as f64, lr_of(0) as f64),
+        ParamSpec::continuous("dropout", 0.0, 0.4),
+        ParamSpec::int("epochs", 1, e_max),
+        ParamSpec::int("batch", 4, 32),
     ])
 }
 
@@ -99,13 +121,13 @@ impl MlpHloEvaluator {
         }
     }
 
-    pub fn arch_name(&self, theta: &[i64]) -> String {
+    pub fn arch_name(&self, theta: &[Value]) -> String {
         format!(
             "mlp_i{}_o{}_l{}_w{}_b{}",
             self.in_dim,
             self.out_dim,
-            theta[0],
-            WIDTHS[theta[1] as usize],
+            theta[0].as_i64(),
+            WIDTHS[theta[1].as_i64() as usize],
             COMPILED_BATCH
         )
     }
@@ -166,14 +188,22 @@ impl Evaluator for MlpHloEvaluator {
         &self.space
     }
 
-    fn run_trial(&self, theta: &[i64], trial: usize, seed: u64) -> TrialOutcome {
+    fn run_trial(
+        &self,
+        theta: &[Value],
+        trial: usize,
+        seed: u64,
+    ) -> TrialOutcome {
         assert!(self.space.contains(theta), "theta out of space: {theta:?}");
         let start = Instant::now();
         let arch = self.arch_name(theta);
-        let lr = lr_of(theta[2]);
-        let p = dropout_of(theta[3]);
-        let epochs = theta[4] as usize;
-        let eff_batch = (theta[5] as usize).min(COMPILED_BATCH);
+        // Typed access: lr and dropout arrive as real values now — no
+        // index decoding in the evaluator (`contains` above guarantees
+        // the variants match the space).
+        let lr = theta[2].as_f64() as f32;
+        let p = theta[3].as_f64() as f32;
+        let epochs = theta[4].as_i64() as usize;
+        let eff_batch = (theta[5].as_i64() as usize).min(COMPILED_BATCH);
 
         let mut rng = Rng::new(
             seed ^ (trial as u64).wrapping_mul(0x9E3779B97F4A7C15),
@@ -235,15 +265,19 @@ impl Evaluator for MlpHloEvaluator {
         }
     }
 
-    fn n_params(&self, theta: &[i64]) -> u64 {
+    fn n_params(&self, theta: &[Value]) -> u64 {
         // in*w + w + (layers-1)*(w*w + w) + w*out + out
-        let w = WIDTHS[theta[1] as usize] as u64;
-        let l = theta[0] as u64;
+        let w = WIDTHS[theta[1].as_i64() as usize] as u64;
+        let l = theta[0].as_i64() as u64;
         let (i, o) = (self.in_dim as u64, self.out_dim as u64);
         i * w + w + (l - 1) * (w * w + w) + w * o + o
     }
 
-    fn loss_of_mean_prediction(&self, _theta: &[i64], mu: &[f64]) -> Option<f64> {
+    fn loss_of_mean_prediction(
+        &self,
+        _theta: &[Value],
+        mu: &[f64],
+    ) -> Option<f64> {
         Some(self.mse_vs_targets(mu))
     }
 }
@@ -263,7 +297,29 @@ mod tests {
     fn space_has_six_hyperparameters() {
         let s = mlp_space(20);
         assert_eq!(s.dim(), 6);
-        assert!(s.contains(&[1, 0, 0, 0, 1, 4]));
-        assert!(s.contains(&[3, 2, 11, 8, 20, 32]));
+        let lo = vec![
+            Value::Int(1),
+            Value::Int(0),
+            Value::Float(lr_of(11) as f64),
+            Value::Float(0.0),
+            Value::Int(1),
+            Value::Int(4),
+        ];
+        let hi = vec![
+            Value::Int(3),
+            Value::Int(2),
+            Value::Float(lr_of(0) as f64),
+            Value::Float(0.4),
+            Value::Int(20),
+            Value::Int(32),
+        ];
+        assert!(s.contains(&lo), "{lo:?}");
+        assert!(s.contains(&hi), "{hi:?}");
+        // The v1 lr_idx decades sit strictly inside the continuous range.
+        for idx in 1..11 {
+            let mut p = lo.clone();
+            p[2] = Value::Float(lr_of(idx) as f64);
+            assert!(s.contains(&p), "lr_idx {idx}");
+        }
     }
 }

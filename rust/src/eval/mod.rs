@@ -5,7 +5,7 @@
 //! prediction vectors so the coordinator can compute μ_pred / V_model via
 //! Eqs. 6-7). The HPO engine and the cluster scheduler only see this
 //! trait, so real AOT-compiled training (`hlo`) and the calibrated
-//! synthetic landscape (`synthetic`) are interchangeable (DESIGN.md §6).
+//! synthetic landscape (`synthetic`) are interchangeable (DESIGN.md §7).
 
 pub mod hlo;
 pub mod polyfit;
@@ -13,7 +13,7 @@ pub mod synthetic;
 
 use std::time::Duration;
 
-use crate::space::Space;
+use crate::space::{Space, Value};
 use crate::uq::{loss_interval, LossInterval, PredictionSet, UqWeights};
 
 /// Result of training one model (one trial) at θ.
@@ -34,21 +34,28 @@ pub struct TrialOutcome {
     pub cost: Duration,
 }
 
-/// The black-box interface (paper Eq. 3).
+/// The black-box interface (paper Eq. 3). θ is a typed point of the
+/// evaluator's [`Space`] (search-space v2): integers, continuous values,
+/// categorical choices, and ordinal levels arrive as [`Value`]s in
+/// parameter order — no more evaluator-specific integer scaling.
 pub trait Evaluator: Send + Sync {
     fn space(&self) -> &Space;
 
     /// Train the `trial`-th model for θ. `seed` controls all stochasticity
     /// so results are replayable.
-    fn run_trial(&self, theta: &[i64], trial: usize, seed: u64)
+    fn run_trial(&self, theta: &[Value], trial: usize, seed: u64)
         -> TrialOutcome;
 
     /// Number of trainable parameters of the θ architecture (Fig. 2 / 9).
-    fn n_params(&self, theta: &[i64]) -> u64;
+    fn n_params(&self, theta: &[Value]) -> u64;
 
     /// ℓ₁ evaluated at a mean prediction μ_pred, when the backend can
     /// (requires knowing the validation targets).
-    fn loss_of_mean_prediction(&self, _theta: &[i64], _mu: &[f64]) -> Option<f64> {
+    fn loss_of_mean_prediction(
+        &self,
+        _theta: &[Value],
+        _mu: &[f64],
+    ) -> Option<f64> {
         None
     }
 }
@@ -73,7 +80,7 @@ pub struct EvalSummary {
 /// Combine N trial outcomes into the paper's evaluation summary.
 pub fn aggregate(
     evaluator: &dyn Evaluator,
-    theta: &[i64],
+    theta: &[Value],
     outcomes: &[TrialOutcome],
     weights: UqWeights,
 ) -> EvalSummary {
@@ -139,7 +146,7 @@ pub fn aggregate(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::space::{ParamSpec, Space};
+    use crate::space::{ints, ParamSpec, Space};
 
     struct Dummy {
         space: Space,
@@ -149,10 +156,15 @@ mod tests {
         fn space(&self) -> &Space {
             &self.space
         }
-        fn run_trial(&self, _t: &[i64], _i: usize, _s: u64) -> TrialOutcome {
+        fn run_trial(
+            &self,
+            _t: &[Value],
+            _i: usize,
+            _s: u64,
+        ) -> TrialOutcome {
             unreachable!()
         }
-        fn n_params(&self, _t: &[i64]) -> u64 {
+        fn n_params(&self, _t: &[Value]) -> u64 {
             0
         }
     }
@@ -174,7 +186,7 @@ mod tests {
             outcome(1.0, &[2.0, 2.0]),
             outcome(3.0, &[4.0, 4.0]),
         ];
-        let s = aggregate(&d, &[0], &outs, UqWeights::default_paper());
+        let s = aggregate(&d, &ints(&[0]), &outs, UqWeights::default_paper());
         // trained mean 2, dropout mean 3 -> center 2.5
         assert!((s.interval.center - 2.5).abs() < 1e-12);
         assert!(s.interval.radius > 0.0);
@@ -186,7 +198,7 @@ mod tests {
     fn aggregate_no_dropout_uses_plain_mean() {
         let d = Dummy { space: Space::new(vec![ParamSpec::new("x", 0, 1)]) };
         let outs = vec![outcome(1.0, &[]), outcome(2.0, &[])];
-        let s = aggregate(&d, &[0], &outs, UqWeights::default_paper());
+        let s = aggregate(&d, &ints(&[0]), &outs, UqWeights::default_paper());
         assert!((s.interval.center - 1.5).abs() < 1e-12);
     }
 
@@ -197,7 +209,7 @@ mod tests {
         // the *plain* mean regardless of the weights.
         let d = Dummy { space: Space::new(vec![ParamSpec::new("x", 0, 1)]) };
         let outs = vec![outcome(1.0, &[]), outcome(3.0, &[])];
-        let s = aggregate(&d, &[0], &outs, UqWeights::new(0.2, 0.8));
+        let s = aggregate(&d, &ints(&[0]), &outs, UqWeights::new(0.2, 0.8));
         assert!((s.interval.center - 2.0).abs() < 1e-12);
         // The CI radius is the member-loss spread: members = trained
         // losses only here, population σ of {1, 3} = 1.
@@ -213,7 +225,7 @@ mod tests {
         // CI radius and the trained std collapse to 0.
         let d = Dummy { space: Space::new(vec![ParamSpec::new("x", 0, 1)]) };
         let outs = vec![outcome(2.5, &[])];
-        let s = aggregate(&d, &[0], &outs, UqWeights::default_paper());
+        let s = aggregate(&d, &ints(&[0]), &outs, UqWeights::default_paper());
         assert_eq!(s.interval.center, 2.5);
         assert_eq!(s.interval.radius, 0.0);
         assert_eq!(s.trained_mean, 2.5);
@@ -231,7 +243,7 @@ mod tests {
         // replica policy keys on.
         let d = Dummy { space: Space::new(vec![ParamSpec::new("x", 0, 1)]) };
         let outs = vec![outcome(1.0, &[2.0, 4.0])];
-        let s = aggregate(&d, &[0], &outs, UqWeights::default_paper());
+        let s = aggregate(&d, &ints(&[0]), &outs, UqWeights::default_paper());
         // trained mean 1, dropout mean 3 → 0.5·1 + 0.5·3 = 2.
         assert!((s.interval.center - 2.0).abs() < 1e-12);
         assert!(s.interval.radius > 0.0);

@@ -15,9 +15,9 @@ use std::time::Duration;
 
 use crate::eval::{Evaluator, TrialOutcome};
 use crate::sampling::rng::Rng;
-use crate::space::Space;
+use crate::space::{ParamKind, Space, Value};
 
-type ParamFn = Box<dyn Fn(&[i64]) -> u64 + Send + Sync>;
+type ParamFn = Box<dyn Fn(&[Value]) -> u64 + Send + Sync>;
 
 pub struct SyntheticEvaluator {
     space: Space,
@@ -73,7 +73,7 @@ impl SyntheticEvaluator {
 
     /// Deterministic noise-free loss at θ — the "true" landscape used by
     /// tests and by convergence-quality assertions.
-    pub fn true_loss(&self, theta: &[i64]) -> f64 {
+    pub fn true_loss(&self, theta: &[Value]) -> f64 {
         let u = self.space.to_unit(theta);
         let mut bowl = 0.0;
         let mut ripple = 0.0;
@@ -87,10 +87,17 @@ impl SyntheticEvaluator {
             + 0.05 * ripple / u.len() as f64
     }
 
-    fn theta_hash(&self, theta: &[i64]) -> u64 {
+    fn theta_hash(&self, theta: &[Value]) -> u64 {
         let mut h = 0xcbf29ce484222325u64 ^ self.base_seed;
         for v in theta {
-            h ^= *v as u64;
+            // Canonical 64-bit reading per kind. `Int` hashes its raw
+            // value — identical to the pre-v2 lattice hash, so all-Int
+            // landscapes are bit-compatible.
+            h ^= match v {
+                Value::Int(v) => *v as u64,
+                Value::Float(f) => f.to_bits(),
+                Value::Cat(i) => *i as u64,
+            };
             h = h.wrapping_mul(0x100000001b3);
         }
         h
@@ -98,11 +105,31 @@ impl SyntheticEvaluator {
 }
 
 /// Default synthetic parameter count: grows geometrically with each
-/// coordinate's offset from its lower bound.
-fn default_n_params(space: &Space, theta: &[i64]) -> u64 {
+/// coordinate's offset from its lower end.
+fn default_n_params(space: &Space, theta: &[Value]) -> u64 {
     let mut p = 64.0f64;
     for (v, spec) in theta.iter().zip(space.params()) {
-        let rel = (v - spec.lo) as f64 / spec.size() as f64;
+        // `Int` keeps the historical (v - lo) / size ratio bit-exactly;
+        // the other kinds use the analogous fraction of their domain.
+        let rel = match (&spec.kind, v) {
+            (ParamKind::Int { lo, hi }, Value::Int(v)) => {
+                (v - lo) as f64 / ((hi - lo) as u64 + 1) as f64
+            }
+            (ParamKind::Ordinal { levels }, Value::Int(i)) => {
+                *i as f64 / levels.len() as f64
+            }
+            (ParamKind::Categorical { choices }, Value::Cat(i)) => {
+                *i as f64 / choices.len() as f64
+            }
+            (ParamKind::Continuous { lo, hi, .. }, Value::Float(f)) => {
+                if lo == hi {
+                    0.0
+                } else {
+                    (f - lo) / (hi - lo)
+                }
+            }
+            _ => 0.0,
+        };
         p *= 1.0 + 3.0 * rel;
     }
     p as u64
@@ -113,7 +140,12 @@ impl Evaluator for SyntheticEvaluator {
         &self.space
     }
 
-    fn run_trial(&self, theta: &[i64], trial: usize, seed: u64) -> TrialOutcome {
+    fn run_trial(
+        &self,
+        theta: &[Value],
+        trial: usize,
+        seed: u64,
+    ) -> TrialOutcome {
         assert!(self.space.contains(theta), "theta out of space: {theta:?}");
         let mut rng = Rng::new(
             self.theta_hash(theta)
@@ -147,7 +179,7 @@ impl Evaluator for SyntheticEvaluator {
         }
     }
 
-    fn n_params(&self, theta: &[i64]) -> u64 {
+    fn n_params(&self, theta: &[Value]) -> u64 {
         (self.n_params_fn)(theta)
     }
 }
@@ -156,7 +188,7 @@ impl Evaluator for SyntheticEvaluator {
 mod tests {
     use super::*;
     use crate::prop_assert;
-    use crate::space::ParamSpec;
+    use crate::space::{ints, ParamSpec, Point};
     use crate::util::prop::forall;
 
     fn space() -> Space {
@@ -170,12 +202,33 @@ mod tests {
     #[test]
     fn deterministic_per_trial_seed() {
         let ev = SyntheticEvaluator::new(space(), 9);
-        let a = ev.run_trial(&[3, 4, 5], 0, 1);
-        let b = ev.run_trial(&[3, 4, 5], 0, 1);
+        let theta = ints(&[3, 4, 5]);
+        let a = ev.run_trial(&theta, 0, 1);
+        let b = ev.run_trial(&theta, 0, 1);
         assert_eq!(a.loss, b.loss);
         assert_eq!(a.dropout_losses, b.dropout_losses);
-        let c = ev.run_trial(&[3, 4, 5], 1, 1);
+        let c = ev.run_trial(&theta, 1, 1);
         assert_ne!(a.loss, c.loss, "different trials must differ");
+    }
+
+    #[test]
+    fn mixed_typed_space_is_deterministic_and_sane() {
+        let sp = Space::new(vec![
+            ParamSpec::int("layers", 1, 4),
+            ParamSpec::log_continuous("lr", 1e-5, 1e-1),
+            ParamSpec::categorical("opt", &["sgd", "adam"]),
+            ParamSpec::ordinal("batch", &[16.0, 32.0, 64.0]),
+        ]);
+        let ev = SyntheticEvaluator::new(sp, 4);
+        forall("mixed synthetic", 100, |rng| {
+            let theta = ev.space().random_point(rng);
+            let a = ev.run_trial(&theta, 0, 7);
+            let b = ev.run_trial(&theta, 0, 7);
+            prop_assert!(a.loss == b.loss, "nondeterministic");
+            prop_assert!(a.loss > 0.0, "loss {}", a.loss);
+            prop_assert!(ev.n_params(&theta) >= 64, "n_params");
+            Ok(())
+        });
     }
 
     #[test]
@@ -201,7 +254,7 @@ mod tests {
         let ev = SyntheticEvaluator::new(space(), 3);
         // Find a good and a bad point by true loss.
         let mut rng = Rng::new(0);
-        let pts: Vec<Vec<i64>> =
+        let pts: Vec<Point> =
             (0..200).map(|_| ev.space().random_point(&mut rng)).collect();
         let best = pts
             .iter()
@@ -215,7 +268,7 @@ mod tests {
                 ev.true_loss(a).partial_cmp(&ev.true_loss(b)).unwrap()
             })
             .unwrap();
-        let spread = |theta: &[i64]| {
+        let spread = |theta: &[Value]| {
             let ls: Vec<f64> = (0..40)
                 .map(|t| ev.run_trial(theta, t, 7).loss)
                 .collect();
@@ -231,8 +284,8 @@ mod tests {
     fn cost_grows_with_param_count() {
         let sp = space();
         let ev = SyntheticEvaluator::new(sp.clone(), 4);
-        let small = ev.run_trial(&[0, 1, 0], 0, 0).cost;
-        let large = ev.run_trial(&[20, 8, 11], 0, 0).cost;
+        let small = ev.run_trial(&ints(&[0, 1, 0]), 0, 0).cost;
+        let large = ev.run_trial(&ints(&[20, 8, 11]), 0, 0).cost;
         assert!(
             large > small,
             "cost must grow with architecture size ({small:?} vs {large:?})"
@@ -241,8 +294,9 @@ mod tests {
 
     #[test]
     fn custom_n_params_used() {
-        let ev = SyntheticEvaluator::new(space(), 5)
-            .with_n_params(Box::new(|t| (t[1] * t[1]) as u64 * 100));
-        assert_eq!(ev.n_params(&[0, 4, 0]), 1600);
+        let ev = SyntheticEvaluator::new(space(), 5).with_n_params(
+            Box::new(|t| (t[1].as_i64() * t[1].as_i64()) as u64 * 100),
+        );
+        assert_eq!(ev.n_params(&ints(&[0, 4, 0])), 1600);
     }
 }

@@ -5,7 +5,7 @@
 //! counters, and the identity of every evaluation that was created but
 //! not yet recorded (in-flight) — and captures everything needed to
 //! continue a killed experiment bit-for-bit (given deterministic
-//! completion order — see DESIGN.md §4-§5). On restore the in-flight
+//! completion order — see DESIGN.md §5-§6). On restore the in-flight
 //! evaluations are asked again from trial 0 with their original
 //! `(θ, seed)` pairs, so deterministic evaluators reproduce the exact
 //! outcomes the killed run would have recorded; partially-told trial
@@ -15,19 +15,35 @@
 //! `u64` values (seeds, RNG words) are encoded as **decimal strings**:
 //! the substrate stores numbers as `f64`, which would silently round
 //! anything above 2⁵³ and break bit-for-bit resumption.
+//!
+//! # Schema history
+//!
+//! * **v1** — the pre-typed-space format: every θ coordinate is a plain
+//!   JSON integer (the Eq. 2 lattice).
+//! * **v2** (current) — typed θ coordinates: integers stay plain
+//!   numbers (so an all-`Int` v2 checkpoint is byte-identical to v1 up
+//!   to the version field), continuous values serialize as `{"f": v}`,
+//!   categorical choices as `{"c": i}`.
+//!
+//! v1 checkpoints load losslessly: plain numbers migrate to
+//! `Value::Int`, which is exactly what they meant, and a resumed run
+//! replays bit-for-bit (asserted in `tests/exec.rs`).
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::analysis::persistence::{record_from_json, record_to_json};
+use crate::analysis::persistence::{
+    record_from_json, record_to_json, value_from_json, value_to_json,
+};
 use crate::optimizer::History;
-use crate::space::Point;
+use crate::space::{Point, Value};
 use crate::util::json::{parse, write, Json};
 
-/// Current checkpoint schema version (see DESIGN.md §4 for the layout).
-pub const CHECKPOINT_VERSION: i64 = 1;
+/// Current checkpoint schema version (see DESIGN.md §5 for the layout
+/// and the module docs for the v1 → v2 migration).
+pub const CHECKPOINT_VERSION: i64 = 2;
 
 /// An evaluation the session created but has not recorded yet (its
 /// trials may be queued, executing, or partially told).
@@ -85,7 +101,7 @@ fn job_to_json(j: &PendingJob) -> Json {
     o.insert("id".into(), Json::Num(j.id as f64));
     o.insert(
         "theta".into(),
-        Json::Arr(j.theta.iter().map(|v| Json::Num(*v as f64)).collect()),
+        Json::Arr(j.theta.iter().map(value_to_json).collect()),
     );
     o.insert(
         "provenance".into(),
@@ -106,8 +122,8 @@ fn job_from_json(v: &Json) -> Result<PendingJob> {
         .as_arr()
         .context("job theta")?
         .iter()
-        .map(|x| x.as_i64().context("job theta item"))
-        .collect::<Result<Vec<i64>>>()?;
+        .map(|x| value_from_json(x).context("job theta item"))
+        .collect::<Result<Vec<Value>>>()?;
     let provenance = v
         .get("provenance")
         .as_arr()
@@ -152,12 +168,15 @@ impl Checkpoint {
         write(&Json::Obj(root))
     }
 
-    /// Parse a checkpoint back from [`Checkpoint::to_json_string`] text.
+    /// Parse a checkpoint back from [`Checkpoint::to_json_string`]
+    /// text. Accepts the current v2 schema and migrates v1 checkpoints
+    /// in place (all-integer θ → `Value::Int`, lossless); the returned
+    /// struct always reports [`CHECKPOINT_VERSION`].
     pub fn from_json_str(text: &str) -> Result<Checkpoint> {
         let root =
             parse(text).map_err(|e| anyhow!("checkpoint parse: {e}"))?;
         let version = root.get("version").as_i64().context("version")?;
-        if version != CHECKPOINT_VERSION {
+        if !(1..=CHECKPOINT_VERSION).contains(&version) {
             bail!("unsupported checkpoint version {version}");
         }
         let rng_arr = root.get("rng_state").as_arr().context("rng_state")?;
@@ -183,7 +202,7 @@ impl Checkpoint {
             .map(job_from_json)
             .collect::<Result<Vec<_>>>()?;
         Ok(Checkpoint {
-            version,
+            version: CHECKPOINT_VERSION,
             seed: u64_from_json(root.get("seed"), "seed")?,
             rng_state,
             next_id: root.get("next_id").as_i64().context("next_id")?
@@ -232,7 +251,7 @@ mod tests {
     use super::*;
     use crate::eval::synthetic::SyntheticEvaluator;
     use crate::optimizer::{run_sync, HpoConfig};
-    use crate::space::{ParamSpec, Space};
+    use crate::space::{ints, ParamSpec, Space};
 
     fn sample() -> Checkpoint {
         let space = Space::new(vec![
@@ -262,13 +281,14 @@ mod tests {
             in_flight: vec![
                 PendingJob {
                     id: 9,
-                    theta: vec![1, 2],
+                    theta: ints(&[1, 2]),
                     provenance: vec![0, 1, 2, 3, 4],
                     seed: u64::MAX - 12345,
                 },
                 PendingJob {
                     id: 10,
-                    theta: vec![7, 3],
+                    // Typed coordinates exercise the v2 encoding.
+                    theta: vec![Value::Float(3.5e-4), Value::Cat(2)],
                     provenance: vec![],
                     seed: 17,
                 },
@@ -310,11 +330,37 @@ mod tests {
     }
 
     #[test]
+    fn v1_checkpoints_parse_and_report_current_version() {
+        // An all-Int v2 checkpoint is byte-identical to v1 except for
+        // the version field — rewriting it back yields a genuine v1
+        // document, which must migrate losslessly.
+        let mut c = sample();
+        c.in_flight.truncate(1); // drop the typed (v2-only) job
+        let v1 = c
+            .to_json_string()
+            .replace("\"version\":2", "\"version\":1");
+        let m = Checkpoint::from_json_str(&v1).unwrap();
+        assert_eq!(m.version, CHECKPOINT_VERSION);
+        assert_eq!(m.seed, c.seed);
+        assert_eq!(m.rng_state, c.rng_state);
+        assert_eq!(m.in_flight, c.in_flight);
+        for (a, b) in m.history.records.iter().zip(&c.history.records) {
+            assert_eq!(a.theta, b.theta);
+        }
+    }
+
+    #[test]
     fn rejects_garbage_and_wrong_version() {
         assert!(Checkpoint::from_json_str("nope").is_err());
         let mut c = sample();
         c.version = 99;
         assert!(Checkpoint::from_json_str(&c.to_json_string()).is_err());
+        assert!(Checkpoint::from_json_str(
+            &sample()
+                .to_json_string()
+                .replace("\"version\":2", "\"version\":0"),
+        )
+        .is_err());
         // A u64 encoded as a JSON number (not a string) must be rejected
         // rather than silently rounded.
         let text = sample().to_json_string().replace(

@@ -16,7 +16,7 @@
 //!
 //! * **Incremental refits** — one `OnlineProposer` lives for the whole
 //!   experiment inside the session, so a completion costs an O(n²)
-//!   rank-1 update instead of an O(n³) from-scratch refit (DESIGN.md §4).
+//!   rank-1 update instead of an O(n³) from-scratch refit (DESIGN.md §5).
 //! * **Checkpoint / resume** — with a `CheckpointPolicy`, the driver
 //!   saves [`Session::snapshot`] after completions; `resume_experiment`
 //!   restores the session and re-runs the in-flight jobs with their
@@ -129,7 +129,7 @@ type JobQueue = Arc<(Mutex<VecDeque<Option<EvalJob>>>, Condvar)>;
 /// data-parallel cost discount).
 pub(crate) fn run_evaluation(
     evaluator: &dyn Evaluator,
-    theta: &[i64],
+    theta: &[crate::space::Value],
     trials: &[usize],
     seed: u64,
     tasks: usize,

@@ -15,10 +15,10 @@
 //! * [`run_sweep`] (`exec::sweep`) — seed × topology grids over the
 //!   threaded shell.
 //! * External executors — embed `Session` directly; see
-//!   `examples/ask_tell.rs` and DESIGN.md §5.
+//!   `examples/ask_tell.rs` and DESIGN.md §6.
 //!
 //! Checkpoints (`exec::checkpoint`) serialize exactly
-//! [`Session::snapshot`]. See DESIGN.md §4-§5 for the design and the
+//! [`Session::snapshot`]. See DESIGN.md §5-§6 for the design and the
 //! schema.
 
 pub mod checkpoint;

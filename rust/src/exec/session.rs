@@ -19,7 +19,7 @@
 //! Everything that *runs* trials — the threaded `exec::driver`, the
 //! virtual-time `cluster::sim::simulate_hpo`, external schedulers, the
 //! `examples/ask_tell.rs` hand-rolled loop — is a shell around this
-//! type, so the optimization brain exists exactly once (DESIGN.md §5).
+//! type, so the optimization brain exists exactly once (DESIGN.md §6).
 //!
 //! # State machine
 //!
@@ -223,6 +223,28 @@ impl<'ev> Session<'ev> {
             );
         }
         let space = evaluator.space().clone();
+        // Every θ in the snapshot must be a well-typed member of the
+        // *current* space: a checkpoint taken under a different space
+        // definition (e.g. a pre-typed-space integer encoding of a
+        // parameter that is continuous now) would otherwise panic deep
+        // inside the evaluator or silently feed the surrogate garbage
+        // features.
+        for theta in ckpt
+            .history
+            .records
+            .iter()
+            .map(|r| &r.theta)
+            .chain(ckpt.in_flight.iter().map(|j| &j.theta))
+        {
+            if !space.contains(theta) {
+                bail!(
+                    "checkpoint θ {:?} is not a member of the current \
+                     search space — the space definition changed since \
+                     the snapshot was written",
+                    theta
+                );
+            }
+        }
         let mut proposer = OnlineProposer::new(hpo);
         proposer.preload(&space, &ckpt.history);
         let n_trials = hpo.n_trials.max(1);

@@ -71,11 +71,11 @@ fn main() {
     }
 }
 
-fn summarize(history: &History, gamma: f64) {
+fn summarize(history: &History, space: &hyppo::space::Space, gamma: f64) {
     let best = history.best(gamma).expect("non-empty history");
     let rows: Vec<Vec<String>> = vec![vec![
         best.id.to_string(),
-        format!("{:?}", best.theta),
+        space.format_point(&best.theta),
         format!("{:.4e}", best.summary.interval.center),
         format!("{:.4e}", best.summary.interval.radius),
         best.n_params.to_string(),
@@ -212,7 +212,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         None => run_experiment(evaluator.as_ref(), &exec_cfg)?,
     };
 
-    summarize(&out.history, cfg.hpo.gamma);
+    summarize(&out.history, evaluator.space(), cfg.hpo.gamma);
     let s = &out.stats;
     println!(
         "refits: {} incremental / {} full   checkpoints: {}   {}",
@@ -309,7 +309,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 ),
                 c.evaluations.to_string(),
                 format!("{:.4e}", c.best_objective),
-                format!("{:?}", c.best_theta),
+                hyppo::space::format_values(&c.best_theta),
                 format!("{:.2}s", c.wall.as_secs_f64()),
                 format!(
                     "{}/{}",

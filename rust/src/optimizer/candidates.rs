@@ -10,7 +10,7 @@
 //! predicted value) and global exploration (high weight on distance).
 
 use crate::sampling::rng::Rng;
-use crate::space::{Point, Space};
+use crate::space::{Point, Space, Value};
 
 /// The cycling value-vs-distance weights of [25].
 pub const WEIGHT_CYCLE: [f64; 4] = [0.3, 0.5, 0.8, 0.95];
@@ -35,7 +35,7 @@ impl Default for CandidateConfig {
 /// Generate the candidate set, excluding already-evaluated points.
 pub fn generate(
     space: &Space,
-    best: &[i64],
+    best: &[Value],
     evaluated: &[Point],
     cfg: &CandidateConfig,
     rng: &mut Rng,
@@ -77,14 +77,16 @@ pub fn select(
     if candidates.is_empty() {
         return None;
     }
-    // Normalize once: dist2() would re-allocate unit coordinates per
-    // pair, which dominated this function in profiling (§Perf: 4.9x).
+    // Encode once: dist2() would re-allocate feature vectors per pair,
+    // which dominated this function in profiling (§Perf: 4.9x). The
+    // encoding layer's feature space is shared with the surrogates, so
+    // categorical blocks weigh into the distance rank consistently.
     let eval_units: Vec<Vec<f64>> =
-        evaluated.iter().map(|e| space.to_unit(e)).collect();
+        evaluated.iter().map(|e| space.encode(e)).collect();
     let dists: Vec<f64> = candidates
         .iter()
         .map(|c| {
-            let cu = space.to_unit(c);
+            let cu = space.encode(c);
             eval_units
                 .iter()
                 .map(|eu| {
@@ -172,10 +174,11 @@ mod tests {
 
     #[test]
     fn high_weight_prefers_low_predicted_value() {
+        use crate::space::ints;
         let sp = space();
-        let cands = vec![vec![1, 1], vec![14, 14]];
+        let cands = vec![ints(&[1, 1]), ints(&[14, 14])];
         let values = vec![0.1, 5.0];
-        let evaluated = vec![vec![0, 0]]; // near cands[0], far from cands[1]
+        let evaluated = vec![ints(&[0, 0])]; // near cands[0], far from [1]
         // weight ~1: value dominates -> candidate 0 despite proximity.
         let i = select(&sp, &cands, &values, &evaluated, 0.99).unwrap();
         assert_eq!(i, 0);

@@ -8,7 +8,7 @@
 //! maximizes EI for the GP surrogate and is reused by tests.
 
 use crate::sampling::rng::Rng;
-use crate::space::{Point, Space};
+use crate::space::{Point, Space, Value};
 
 /// Genetic-algorithm knobs (defaults reproduce the paper's setting).
 #[derive(Debug, Clone)]
@@ -40,8 +40,8 @@ impl Default for GaConfig {
     }
 }
 
-/// Maximize `fitness` over the lattice; returns (best point, best fitness).
-pub fn maximize<F: FnMut(&[i64]) -> f64>(
+/// Maximize `fitness` over the space; returns (best point, best fitness).
+pub fn maximize<F: FnMut(&[Value]) -> f64>(
     space: &Space,
     cfg: &GaConfig,
     rng: &mut Rng,
@@ -94,7 +94,7 @@ fn tournament(fit: &[f64], k: usize, rng: &mut Rng) -> usize {
     best
 }
 
-fn crossover(a: &[i64], b: &[i64], rng: &mut Rng) -> Point {
+fn crossover(a: &[Value], b: &[Value], rng: &mut Rng) -> Point {
     a.iter()
         .zip(b)
         .map(|(x, y)| if rng.f64() < 0.5 { *x } else { *y })
@@ -118,17 +118,21 @@ mod tests {
 
     #[test]
     fn finds_unique_global_maximum() {
+        use crate::space::ints;
         let sp = space();
         let target = [7i64, 21, 13];
         let mut rng = Rng::new(1);
         let (best, f) = maximize(&sp, &GaConfig::default(), &mut rng, |p| {
             -p.iter()
                 .zip(&target)
-                .map(|(x, t)| ((x - t) * (x - t)) as f64)
+                .map(|(x, t)| {
+                    let d = x.as_i64() - t;
+                    (d * d) as f64
+                })
                 .sum::<f64>()
         });
         assert_eq!(f, 0.0, "best {best:?}");
-        assert_eq!(best, target.to_vec());
+        assert_eq!(best, ints(&target));
     }
 
     #[test]
@@ -137,7 +141,7 @@ mod tests {
         forall("GA in-bounds", 10, |rng| {
             let (best, _) =
                 maximize(&sp, &GaConfig { generations: 5, ..Default::default() }, rng, |p| {
-                    p[0] as f64
+                    p[0].as_f64()
                 });
             prop_assert!(sp.contains(&best), "{best:?}");
             Ok(())
@@ -149,9 +153,9 @@ mod tests {
         let sp = space();
         let mut rng = Rng::new(3);
         let (best, _) = maximize(&sp, &GaConfig::default(), &mut rng, |p| {
-            (p[0] + p[1] + p[2]) as f64
+            p[0].as_f64() + p[1].as_f64() + p[2].as_f64()
         });
-        assert_eq!(best, vec![31, 31, 31]);
+        assert_eq!(best, crate::space::ints(&[31, 31, 31]));
     }
 
     #[test]
@@ -166,7 +170,10 @@ mod tests {
                 &sp,
                 &GaConfig { generations: gens, ..Default::default() },
                 &mut r,
-                |p| -((p[0] - 13) * (p[0] - 13)) as f64,
+                |p| {
+                    let d = p[0].as_i64() - 13;
+                    -((d * d) as f64)
+                },
             );
             f
         };

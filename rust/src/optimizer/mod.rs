@@ -185,7 +185,7 @@ impl History {
 /// Evaluate one θ: N trials through the black box, aggregated per Feature 1.
 pub fn evaluate_point(
     evaluator: &dyn Evaluator,
-    theta: &[i64],
+    theta: &[crate::space::Value],
     n_trials: usize,
     weights: UqWeights,
     seed: u64,
@@ -436,8 +436,9 @@ mod tests {
 
     #[test]
     fn initial_points_override_design() {
+        use crate::space::ints;
         let ev = evaluator(3);
-        let fixed = vec![vec![0, 0, 0], vec![24, 24, 24]];
+        let fixed = vec![ints(&[0, 0, 0]), ints(&[24, 24, 24])];
         let cfg = HpoConfig {
             max_evaluations: 4,
             n_init: 10,

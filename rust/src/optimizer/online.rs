@@ -46,8 +46,9 @@ pub struct OnlineProposer {
     candidates: candidates::CandidateConfig,
     rbf: RbfSurrogate,
     gp: GpSurrogate,
-    /// Normalized points / objectives mirroring the history, in the order
-    /// `observe` saw them (the surrogate's training set).
+    /// Encoded feature vectors / objectives mirroring the history, in
+    /// the order `observe` saw them (the surrogate's training set; see
+    /// `space::Encoding` for the feature layout).
     xs: Vec<Vec<f64>>,
     ys: Vec<f64>,
     /// Model must be fully refitted before the next proposal.
@@ -80,7 +81,7 @@ impl OnlineProposer {
         self.xs.clear();
         self.ys.clear();
         for r in &history.records {
-            self.xs.push(space.to_unit(&r.theta));
+            self.xs.push(space.encode(&r.theta));
             self.ys.push(r.objective(self.gamma));
         }
         self.dirty = true;
@@ -90,7 +91,7 @@ impl OnlineProposer {
     /// active surrogate supports it, otherwise the model is marked dirty
     /// and the next `propose` pays one full refit.
     pub fn observe(&mut self, space: &Space, record: &EvalRecord) {
-        let x = space.to_unit(&record.theta);
+        let x = space.encode(&record.theta);
         let y = record.objective(self.gamma);
         self.xs.push(x.clone());
         self.ys.push(y);
@@ -172,7 +173,7 @@ impl OnlineProposer {
                 }
                 let values: Vec<f64> = cands
                     .iter()
-                    .map(|c| self.rbf.predict(&space.to_unit(c)))
+                    .map(|c| self.rbf.predict(&space.encode(c)))
                     .collect();
                 let w = WEIGHT_CYCLE[iter % WEIGHT_CYCLE.len()];
                 match candidates::select(
@@ -202,7 +203,7 @@ impl OnlineProposer {
                         if evaluated.iter().any(|e| e == p) {
                             return f64::NEG_INFINITY;
                         }
-                        let u = space.to_unit(p);
+                        let u = space.encode(p);
                         let mu = gp.predict(&u);
                         let sd = gp.predict_std(&u).unwrap_or(0.0);
                         expected_improvement(mu, sd, best_y)
@@ -241,7 +242,7 @@ impl OnlineProposer {
                 // Eq. (8): score = μ + ασ, then the distance trade-off.
                 let values: Vec<f64> = cands
                     .iter()
-                    .map(|c| ens.score(&space.to_unit(c)))
+                    .map(|c| ens.score(&space.encode(c)))
                     .collect();
                 let w = WEIGHT_CYCLE[iter % WEIGHT_CYCLE.len()];
                 match candidates::select(

@@ -150,7 +150,7 @@ mod tests {
         for i in 0..3 {
             h.records.push(EvalRecord {
                 id: i,
-                theta: vec![i as i64, 2 * i as i64],
+                theta: crate::space::ints(&[i as i64, 2 * i as i64]),
                 summary: EvalSummary {
                     interval: LossInterval {
                         center: 1.0 / (i + 1) as f64,

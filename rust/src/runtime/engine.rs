@@ -3,7 +3,7 @@
 //!
 //! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
 //! serializes protos with 64-bit instruction ids that xla_extension 0.5.1
-//! rejects, while the text parser reassigns ids (see DESIGN.md §2 and
+//! rejects, while the text parser reassigns ids (see DESIGN.md §3 and
 //! /opt/xla-example/README.md).
 //!
 //! Thread-safety: the `xla` crate's wrappers are raw C++ pointers without

@@ -1,6 +1,6 @@
 //! API-identical stand-ins for the PJRT engine and model driver, compiled
 //! when the `pjrt` feature is off (the offline default — see the header
-//! note in Cargo.toml and DESIGN.md §2).
+//! note in Cargo.toml and DESIGN.md §3).
 //!
 //! Everything here typechecks exactly like `runtime::engine` /
 //! `runtime::model` but fails at the construction boundary

@@ -9,7 +9,7 @@
 //! small ranges where naive rounding collapses points.
 
 use crate::sampling::rng::Rng;
-use crate::space::Space;
+use crate::space::{Point, Space};
 
 const PRIMES: [u64; 16] =
     [2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53];
@@ -40,12 +40,13 @@ pub fn halton(index: u64, dim: usize, shift: &[f64]) -> Vec<f64> {
         .collect()
 }
 
-/// Generate `n` integer lattice points with low discrepancy over `space`.
+/// Generate `n` typed points with low discrepancy over `space`.
 ///
-/// Each unit-cube coordinate u is mapped to `lo + floor(u * range_size)`,
-/// i.e. equal-width quantile buckets over the inclusive integer range —
-/// the integer adaptation discussed in the paper's Sec. VI.
-pub fn halton_lattice(space: &Space, n: usize, rng: &mut Rng) -> Vec<Vec<i64>> {
+/// Each unit-cube coordinate u maps through the space's encoding layer:
+/// equal-width quantile buckets for the finite kinds (`lo + floor(u *
+/// range_size)`, the integer adaptation discussed in the paper's Sec.
+/// VI) and the (possibly log) warp for continuous parameters.
+pub fn halton_lattice(space: &Space, n: usize, rng: &mut Rng) -> Vec<Point> {
     let dim = space.dim();
     let shift: Vec<f64> = (0..dim).map(|_| rng.f64()).collect();
     (0..n as u64)
@@ -56,12 +57,12 @@ pub fn halton_lattice(space: &Space, n: usize, rng: &mut Rng) -> Vec<Vec<i64>> {
         .collect()
 }
 
-/// Latin hypercube design on the integer lattice: stratifies each dimension
-/// into `n` slices before mapping to lattice cells. Used for initial
+/// Latin hypercube design: stratifies each dimension into `n` slices
+/// before mapping through the encoding layer. Used for initial
 /// experimental designs when `n` is small.
-pub fn lhs_lattice(space: &Space, n: usize, rng: &mut Rng) -> Vec<Vec<i64>> {
+pub fn lhs_lattice(space: &Space, n: usize, rng: &mut Rng) -> Vec<Point> {
     let dim = space.dim();
-    let mut strata: Vec<Vec<usize>> = (0..dim)
+    let strata: Vec<Vec<usize>> = (0..dim)
         .map(|_| {
             let mut idx: Vec<usize> = (0..n).collect();
             rng.shuffle(&mut idx);
@@ -76,7 +77,6 @@ pub fn lhs_lattice(space: &Space, n: usize, rng: &mut Rng) -> Vec<Vec<i64>> {
                     (stratum as f64 + rng.f64()) / n as f64
                 })
                 .collect();
-            strata.iter_mut().for_each(|_| {});
             space.from_unit(&u)
         })
         .collect()
@@ -130,11 +130,42 @@ mod tests {
         let pts = halton_lattice(&sp, 300, &mut rng);
         let mut counts = [0usize; 3];
         for p in pts {
-            counts[(p[0] - 1) as usize] += 1;
+            counts[(p[0].as_i64() - 1) as usize] += 1;
         }
         for c in counts {
             assert!((80..=120).contains(&c), "{counts:?}");
         }
+    }
+
+    #[test]
+    fn halton_covers_mixed_typed_spaces() {
+        use crate::space::{ParamKind, Value};
+        let sp = Space::new(vec![
+            ParamSpec::log_continuous("lr", 1e-4, 1e-1),
+            ParamSpec::categorical("opt", &["sgd", "adam"]),
+            ParamSpec::int("layers", 1, 3),
+        ]);
+        let mut rng = Rng::new(5);
+        let pts = halton_lattice(&sp, 200, &mut rng);
+        let mut cats = [0usize; 2];
+        let mut low_decade = 0usize;
+        for p in &pts {
+            assert!(sp.contains(p), "{p:?}");
+            cats[p[1].as_index()] += 1;
+            if let Value::Float(lr) = p[0] {
+                if lr < 1e-2 {
+                    low_decade += 1;
+                }
+            }
+        }
+        // Even split across the categorical buckets.
+        assert!((80..=120).contains(&cats[0]), "{cats:?}");
+        // Log warp: two of three decades sit below 1e-2.
+        assert!((110..=160).contains(&low_decade), "{low_decade}");
+        assert!(matches!(
+            sp.params()[0].kind,
+            ParamKind::Continuous { log: true, .. }
+        ));
     }
 
     #[test]
@@ -148,7 +179,7 @@ mod tests {
         let pts = lhs_lattice(&sp, n, &mut rng);
         for d in 0..2 {
             let mut deciles: Vec<usize> =
-                pts.iter().map(|p| (p[d] / 10) as usize).collect();
+                pts.iter().map(|p| (p[d].as_i64() / 10) as usize).collect();
             deciles.sort();
             deciles.dedup();
             assert_eq!(deciles.len(), n, "dim {d} not stratified");

@@ -10,7 +10,7 @@
 //! buckets (`Space::from_unit`), the same scheme validated for Halton.
 
 use crate::sampling::rng::Rng;
-use crate::space::Space;
+use crate::space::{Point, Space};
 
 const BITS: usize = 31;
 
@@ -109,8 +109,9 @@ impl Sobol {
     }
 }
 
-/// `n` integer lattice points from a (shifted) Sobol' sequence.
-pub fn sobol_lattice(space: &Space, n: usize, rng: &mut Rng) -> Vec<Vec<i64>> {
+/// `n` typed points from a (shifted) Sobol' sequence, mapped through
+/// the space's encoding layer.
+pub fn sobol_lattice(space: &Space, n: usize, rng: &mut Rng) -> Vec<Point> {
     let mut seq = Sobol::scrambled(space.dim(), Some(rng));
     // Skip the first point (all-shift), conventional for shifted nets.
     let _ = seq.next_point();
@@ -201,7 +202,7 @@ mod tests {
         let mut counts = [0usize; 4];
         for p in &pts {
             assert!(space.contains(p), "{p:?}");
-            counts[p[0] as usize] += 1;
+            counts[p[0].as_i64() as usize] += 1;
         }
         // Quantile-bucket adaptation keeps each cell near n/4.
         for c in counts {

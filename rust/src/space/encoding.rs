@@ -1,0 +1,393 @@
+//! The encoding layer: every representation mapping of the typed search
+//! space lives here (DESIGN.md §2).
+//!
+//! Three representations exist, and before search-space v2 each consumer
+//! re-derived its own conversions. Now they are owned in one place:
+//!
+//! 1. **Typed points** (`Vec<Value>`) — the API surface: what
+//!    evaluators receive, what histories/checkpoints record.
+//! 2. **Per-parameter unit cube** (`unit` / `point_from_unit`) — one
+//!    coordinate per parameter in `[0,1]`, consumed by the
+//!    low-discrepancy samplers (`sampling::lowdisc`, `sampling::sobol`)
+//!    and the sensitivity analyses. Integer/ordinal/categorical
+//!    parameters map through equal-width buckets — for `Int`, exactly
+//!    the v1 lattice arithmetic, preserving bit-identical designs.
+//! 3. **Surrogate feature space** (`encode` / `decode` / `dist2`) —
+//!    what `Surrogate::fit`/`predict`, the candidate-distance scoring,
+//!    and `Space::dist2` consume. Scalar kinds contribute one feature
+//!    (continuous coordinates are warped, so log-scale parameters are
+//!    *linear in the feature*); categoricals contribute a one-hot block
+//!    scaled by `1/√2` so any two distinct choices are at squared
+//!    distance exactly 1 — the same weight a full-range scalar move
+//!    carries. For all-`Int` spaces the feature vector equals the unit
+//!    vector, which is what keeps v2 bit-compatible with the v1
+//!    surrogate stack.
+
+use crate::space::{ParamKind, ParamSpec, Point, Value};
+
+/// One-hot entries are scaled so two distinct categories sit at squared
+/// feature distance `2 · (1/√2)² = 1`.
+pub const ONE_HOT_SCALE: f64 = std::f64::consts::FRAC_1_SQRT_2;
+
+/// The representation mapper for one [`Space`](crate::space::Space).
+/// Holds only the parameter *kinds* (the domains); names and the spec
+/// list itself stay in the owning `Space`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Encoding {
+    kinds: Vec<ParamKind>,
+    n_features: usize,
+}
+
+/// Unit coordinate of a value under a kind, accepting loosely-typed
+/// values (used by `Space::clamp` coercion and the continuous perturb
+/// path). For well-typed values this equals [`Encoding::unit`]'s entry.
+pub(crate) fn unit_of_loose(kind: &ParamKind, v: &Value) -> f64 {
+    match kind {
+        ParamKind::Int { lo, hi } => {
+            if lo == hi {
+                0.5
+            } else {
+                (v.as_f64() - *lo as f64) / (*hi - *lo) as f64
+            }
+        }
+        ParamKind::Continuous { lo, hi, log } => {
+            if lo == hi {
+                0.5
+            } else if *log {
+                (v.as_f64().max(*lo).ln() - lo.ln()) / (hi.ln() - lo.ln())
+            } else {
+                (v.as_f64() - lo) / (hi - lo)
+            }
+        }
+        ParamKind::Categorical { choices } => {
+            let k = choices.len();
+            if k == 1 {
+                0.5
+            } else {
+                v.as_f64() / (k - 1) as f64
+            }
+        }
+        ParamKind::Ordinal { levels } => {
+            let k = levels.len();
+            if k == 1 {
+                0.5
+            } else {
+                v.as_f64() / (k - 1) as f64
+            }
+        }
+    }
+}
+
+fn feature_width(kind: &ParamKind) -> usize {
+    match kind {
+        ParamKind::Categorical { choices } => choices.len(),
+        _ => 1,
+    }
+}
+
+impl Encoding {
+    pub fn new(specs: &[ParamSpec]) -> Self {
+        let kinds: Vec<ParamKind> =
+            specs.iter().map(|p| p.kind.clone()).collect();
+        let n_features = kinds.iter().map(feature_width).sum();
+        Encoding { kinds, n_features }
+    }
+
+    /// Dimension of the surrogate feature space (≥ the parameter count;
+    /// equal when no parameter is categorical).
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Per-parameter unit coordinates in `[0,1]^d` (representation 2).
+    /// Degenerate single-value parameters map to `0.5` (the v1 rule),
+    /// so they contribute zero to any distance.
+    pub fn unit(&self, x: &[Value]) -> Vec<f64> {
+        assert_eq!(x.len(), self.kinds.len());
+        x.iter()
+            .zip(&self.kinds)
+            .map(|(v, k)| unit_of_loose(k, v))
+            .collect()
+    }
+
+    /// Map per-parameter unit coordinates back to a typed point:
+    /// equal-width buckets for the finite kinds (v1 arithmetic for
+    /// `Int`), the (possibly log) warp for continuous.
+    pub fn point_from_unit(&self, u: &[f64]) -> Point {
+        assert_eq!(u.len(), self.kinds.len());
+        u.iter()
+            .zip(&self.kinds)
+            .map(|(ui, k)| self.value_from_unit(k, *ui))
+            .collect()
+    }
+
+    /// One coordinate of [`Encoding::point_from_unit`].
+    pub fn value_from_unit(&self, kind: &ParamKind, u: f64) -> Value {
+        match kind {
+            ParamKind::Int { lo, hi } => {
+                let size = (*hi - *lo) as u64 + 1;
+                let cell = (u * size as f64).floor() as i64;
+                Value::Int((*lo + cell).min(*hi).max(*lo))
+            }
+            ParamKind::Continuous { lo, hi, log } => {
+                let u = u.clamp(0.0, 1.0);
+                let v = if lo == hi {
+                    *lo
+                } else if *log {
+                    (lo.ln() + u * (hi.ln() - lo.ln())).exp()
+                } else {
+                    lo + u * (hi - lo)
+                };
+                Value::Float(v.clamp(*lo, *hi))
+            }
+            ParamKind::Categorical { choices } => {
+                let k = choices.len();
+                let cell = (u * k as f64).floor().max(0.0) as usize;
+                Value::Cat(cell.min(k - 1))
+            }
+            ParamKind::Ordinal { levels } => {
+                let k = levels.len();
+                let cell = (u * k as f64).floor().max(0.0) as i64;
+                Value::Int(cell.min(k as i64 - 1).max(0))
+            }
+        }
+    }
+
+    /// Surrogate features (representation 3): scalar unit coordinates
+    /// for Int/Continuous/Ordinal, a scaled one-hot block per
+    /// categorical. For all-`Int` spaces this equals [`Encoding::unit`].
+    pub fn encode(&self, x: &[Value]) -> Vec<f64> {
+        assert_eq!(x.len(), self.kinds.len());
+        let mut out = Vec::with_capacity(self.n_features);
+        for (v, kind) in x.iter().zip(&self.kinds) {
+            match kind {
+                ParamKind::Categorical { choices } => {
+                    let hot = v.as_index();
+                    for i in 0..choices.len() {
+                        out.push(if i == hot { ONE_HOT_SCALE } else { 0.0 });
+                    }
+                }
+                kind => out.push(unit_of_loose(kind, v)),
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`Encoding::encode`]: scalar features round to the
+    /// nearest lattice cell / clamp into the continuous range, one-hot
+    /// blocks take their argmax (ties resolve to the lowest index).
+    /// Exact round-trip for the finite kinds; continuous values return
+    /// to within floating-point round-off of the warp.
+    pub fn decode(&self, feats: &[f64]) -> Point {
+        assert_eq!(feats.len(), self.n_features, "feature dim mismatch");
+        let mut out = Vec::with_capacity(self.kinds.len());
+        let mut i = 0;
+        for kind in &self.kinds {
+            match kind {
+                ParamKind::Categorical { choices } => {
+                    let block = &feats[i..i + choices.len()];
+                    i += choices.len();
+                    let best = block
+                        .iter()
+                        .copied()
+                        .fold(f64::NEG_INFINITY, f64::max);
+                    let hot =
+                        block.iter().position(|v| *v == best).unwrap_or(0);
+                    out.push(Value::Cat(hot));
+                }
+                ParamKind::Int { lo, hi } => {
+                    let u = feats[i];
+                    i += 1;
+                    let v = *lo + (u * (*hi - *lo) as f64).round() as i64;
+                    out.push(Value::Int(v.clamp(*lo, *hi)));
+                }
+                ParamKind::Ordinal { levels } => {
+                    let u = feats[i];
+                    i += 1;
+                    let k = levels.len() as i64;
+                    let v = (u * (k - 1) as f64).round() as i64;
+                    out.push(Value::Int(v.clamp(0, k - 1)));
+                }
+                ParamKind::Continuous { .. } => {
+                    let u = feats[i];
+                    i += 1;
+                    out.push(self.value_from_unit(kind, u));
+                }
+            }
+        }
+        out
+    }
+
+    /// Squared Euclidean distance in feature space. Distinct
+    /// categorical choices contribute exactly `1.0` per parameter;
+    /// identical choices contribute `0`.
+    pub fn dist2(&self, a: &[Value], b: &[Value]) -> f64 {
+        let ea = self.encode(a);
+        let eb = self.encode(b);
+        ea.iter().zip(&eb).map(|(x, y)| (x - y) * (x - y)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::sampling::rng::Rng;
+    use crate::space::{ints, Space};
+    use crate::util::prop::forall;
+
+    fn mixed() -> Space {
+        Space::new(vec![
+            ParamSpec::int("layers", 1, 4),
+            ParamSpec::log_continuous("lr", 1e-5, 1e-1),
+            ParamSpec::continuous("dropout", 0.0, 0.5),
+            ParamSpec::categorical("opt", &["sgd", "adam", "rmsprop"]),
+            ParamSpec::ordinal("batch", &[16.0, 32.0, 64.0, 128.0]),
+        ])
+    }
+
+    #[test]
+    fn feature_dim_counts_one_hot_blocks() {
+        let sp = mixed();
+        assert_eq!(sp.encoding().n_features(), 4 + 3);
+        assert_eq!(sp.encode(&sp.from_unit(&[0.0; 5])).len(), 7);
+    }
+
+    /// Satellite: `decode(encode(p)) == p` for all kinds. Exact for the
+    /// finite kinds; continuous coordinates return to within round-off
+    /// of the (possibly log) warp, which the typed equality check makes
+    /// explicit via an ulp-scale tolerance.
+    #[test]
+    fn decode_encode_roundtrip_all_kinds() {
+        let sp = mixed();
+        forall("decode∘encode == id", 500, |rng| {
+            let p = sp.random_point(rng);
+            let q = sp.decode(&sp.encode(&p));
+            for ((a, b), spec) in p.iter().zip(&q).zip(sp.params()) {
+                match (a, b) {
+                    (Value::Float(x), Value::Float(y)) => prop_assert!(
+                        (x - y).abs()
+                            <= 1e-12 * x.abs().max(y.abs()).max(1e-300),
+                        "{} drifted: {x} -> {y}",
+                        spec.name
+                    ),
+                    (a, b) => prop_assert!(
+                        a == b,
+                        "{} changed: {a} -> {b}",
+                        spec.name
+                    ),
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_roundtrip_exact_for_finite_kinds() {
+        let sp = Space::new(vec![
+            ParamSpec::int("a", -3, 9),
+            ParamSpec::categorical("c", &["x", "y", "z", "w"]),
+            ParamSpec::ordinal("o", &[1.0, 2.0, 4.0]),
+        ]);
+        forall("finite kinds exact", 300, |rng| {
+            let p = sp.random_point(rng);
+            prop_assert!(
+                sp.decode(&sp.encode(&p)) == p,
+                "{p:?} not exact"
+            );
+            Ok(())
+        });
+    }
+
+    /// Satellite: log-scale monotonicity — the feature is linear in the
+    /// *exponent*, so consecutive decades are equidistant.
+    #[test]
+    fn log_scale_is_monotone_and_decade_uniform() {
+        let spec = ParamSpec::log_continuous("lr", 1e-5, 1e-1);
+        let sp = Space::new(vec![spec]);
+        let f = |v: f64| sp.encode(&[Value::Float(v)])[0];
+        let mut prev = f(1e-5);
+        for v in [3e-5, 1e-4, 1e-3, 1e-2, 1e-1] {
+            let cur = f(v);
+            assert!(cur > prev, "not monotone at {v}");
+            prev = cur;
+        }
+        let d1 = f(1e-4) - f(1e-5);
+        let d2 = f(1e-3) - f(1e-4);
+        let d3 = f(1e-2) - f(1e-3);
+        assert!((d1 - d2).abs() < 1e-12 && (d2 - d3).abs() < 1e-12);
+        assert_eq!(f(1e-5), 0.0);
+        assert!((f(1e-1) - 1.0).abs() < 1e-12);
+    }
+
+    /// Satellite: one-hot block distances match `dist2` — distinct
+    /// choices are at squared distance exactly 1, like a full-range
+    /// scalar move.
+    #[test]
+    fn one_hot_distance_matches_dist2() {
+        let sp = Space::new(vec![
+            ParamSpec::categorical("opt", &["a", "b", "c"]),
+            ParamSpec::int("w", 0, 10),
+        ]);
+        let p = |c: usize, w: i64| vec![Value::Cat(c), Value::Int(w)];
+        assert_eq!(sp.dist2(&p(0, 5), &p(0, 5)), 0.0);
+        assert!((sp.dist2(&p(0, 5), &p(1, 5)) - 1.0).abs() < 1e-12);
+        assert!((sp.dist2(&p(2, 5), &p(1, 5)) - 1.0).abs() < 1e-12);
+        // Full-range scalar move carries the same weight.
+        assert!((sp.dist2(&p(0, 0), &p(0, 10)) - 1.0).abs() < 1e-12);
+        // And the feature-space distance is what dist2 reports.
+        let (a, b) = (p(0, 3), p(2, 7));
+        let (ea, eb) = (sp.encode(&a), sp.encode(&b));
+        let manual: f64 = ea
+            .iter()
+            .zip(&eb)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum();
+        assert!((sp.dist2(&a, &b) - manual).abs() < 1e-15);
+    }
+
+    #[test]
+    fn int_spaces_encode_exactly_like_v1_to_unit() {
+        // For all-Int spaces the feature vector IS the unit vector —
+        // the invariant that keeps the v2 surrogate stack bit-identical
+        // to the v1 lattice.
+        let sp = Space::new(vec![
+            ParamSpec::new("a", 0, 9),
+            ParamSpec::new("b", -5, 5),
+            ParamSpec::new("fixed", 2, 2),
+        ]);
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let p = sp.random_point(&mut rng);
+            assert_eq!(sp.encode(&p), sp.to_unit(&p));
+        }
+        assert_eq!(sp.to_unit(&ints(&[0, -5, 2])), vec![0.0, 0.0, 0.5]);
+        assert_eq!(sp.to_unit(&ints(&[9, 5, 2])), vec![1.0, 1.0, 0.5]);
+    }
+
+    #[test]
+    fn one_hot_decode_takes_first_argmax() {
+        let sp =
+            Space::new(vec![ParamSpec::categorical("c", &["x", "y", "z"])]);
+        assert_eq!(
+            sp.decode(&[0.3, 0.9, 0.1]),
+            vec![Value::Cat(1)]
+        );
+        // Ties resolve to the lowest index, deterministically.
+        assert_eq!(sp.decode(&[0.5, 0.5, 0.5]), vec![Value::Cat(0)]);
+    }
+
+    #[test]
+    fn unit_bucket_mapping_is_exact_for_categorical_and_ordinal() {
+        let sp = Space::new(vec![
+            ParamSpec::categorical("c", &["x", "y", "z"]),
+            ParamSpec::ordinal("o", &[1.0, 10.0, 100.0, 1000.0]),
+        ]);
+        for c in 0..3usize {
+            for o in 0..4i64 {
+                let p = vec![Value::Cat(c), Value::Int(o)];
+                assert_eq!(sp.from_unit(&sp.to_unit(&p)), p);
+            }
+        }
+    }
+}

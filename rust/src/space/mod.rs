@@ -1,44 +1,345 @@
-//! Integer hyperparameter lattice Ω (paper Eq. 2).
+//! Typed hyperparameter search space Ω (search-space v2).
 //!
-//! Every tunable hyperparameter is an inclusive integer range; continuous
-//! quantities (learning rate, dropout probability, multipliers) are encoded
-//! as scaled integers by their `Evaluator` (e.g. `lr = 10^(-idx/2)`), which
-//! is exactly how the paper handles its "integer lattice" formulation.
+//! The paper's Eq. 2 formulates Ω as an integer lattice, which forced
+//! continuous quantities (learning rate, dropout) to be smuggled in as
+//! evaluator-specific scaled integers and left categoricals (optimizer
+//! choice, activation) inexpressible. Search-space v2 makes the space
+//! typed — [`ParamKind::Int`] keeps the exact lattice semantics (and the
+//! exact RNG streams) of the v1 space, while [`ParamKind::Continuous`]
+//! (optionally log-warped), [`ParamKind::Categorical`], and
+//! [`ParamKind::Ordinal`] are first-class.
+//!
+//! All representation changes go through one place: the [`Encoding`]
+//! layer (`space::encoding`, DESIGN.md §2) owns every mapping between
+//! typed points, the per-parameter unit cube used by the low-discrepancy
+//! samplers, and the surrogate feature space (log-warped continuous
+//! coordinates, one-hot categorical blocks). `Space` re-exports thin
+//! delegating methods so call sites keep reading naturally.
+
+pub mod encoding;
+
+pub use encoding::Encoding;
 
 use crate::sampling::rng::Rng;
 
-/// One hyperparameter: an inclusive integer range.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// How many rejection draws `perturb`'s resample fallback attempts for
+/// an `Int` coordinate before stepping deterministically. Bounding the
+/// loop makes termination explicit; 64 misses at ≥ 1/2 success
+/// probability per draw is a ≤ 2⁻⁶⁴ event, so the RNG stream is
+/// unchanged versus the historical unbounded loop in practice.
+const RESAMPLE_ATTEMPTS: usize = 64;
+
+/// The type (and domain) of one hyperparameter.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamKind {
+    /// Inclusive integer range — the paper's Eq. 2 lattice axis.
+    /// Bit-compatible with the v1 `ParamSpec {lo, hi}`.
+    Int { lo: i64, hi: i64 },
+    /// Real interval `[lo, hi]`. With `log = true` the parameter lives
+    /// on a log scale (`lo > 0` required): sampling, perturbation, and
+    /// the surrogate all see the log-warped coordinate, so e.g. a
+    /// learning rate spans decades uniformly.
+    Continuous { lo: f64, hi: f64, log: bool },
+    /// Unordered finite choice set. Values are [`Value::Cat`] indices
+    /// into `choices`; surrogates see a one-hot block (see `encoding`).
+    Categorical { choices: Vec<String> },
+    /// Ordered numeric levels (e.g. batch sizes `[16, 32, 64, 128]`).
+    /// Values are [`Value::Int`] *indices* into `levels`; the order of
+    /// the levels is meaningful to perturbation and to the surrogate.
+    Ordinal { levels: Vec<f64> },
+}
+
+impl ParamKind {
+    /// Number of distinct values, when finite (`None` for continuous).
+    pub fn cardinality(&self) -> Option<u64> {
+        match self {
+            ParamKind::Int { lo, hi } => Some((hi - lo) as u64 + 1),
+            ParamKind::Continuous { .. } => None,
+            ParamKind::Categorical { choices } => Some(choices.len() as u64),
+            ParamKind::Ordinal { levels } => Some(levels.len() as u64),
+        }
+    }
+
+    /// True when only a single value is possible.
+    pub fn is_fixed(&self) -> bool {
+        match self {
+            ParamKind::Continuous { lo, hi, .. } => lo == hi,
+            other => other.cardinality() == Some(1),
+        }
+    }
+}
+
+/// One hyperparameter: a name plus its typed domain.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ParamSpec {
     pub name: String,
-    pub lo: i64,
-    pub hi: i64,
+    pub kind: ParamKind,
 }
 
 impl ParamSpec {
+    /// Integer-range parameter — the v1 constructor, kept as sugar so
+    /// `ParamSpec::new("layers", 1, 3)` still means what it always did.
     pub fn new(name: &str, lo: i64, hi: i64) -> Self {
-        assert!(lo <= hi, "empty range for {name}: [{lo}, {hi}]");
-        ParamSpec { name: name.to_string(), lo, hi }
+        ParamSpec::int(name, lo, hi)
     }
 
-    pub fn size(&self) -> u64 {
-        (self.hi - self.lo) as u64 + 1
+    /// Integer-range parameter (explicit name for the `Int` kind).
+    pub fn int(name: &str, lo: i64, hi: i64) -> Self {
+        assert!(lo <= hi, "empty range for {name}: [{lo}, {hi}]");
+        ParamSpec { name: name.to_string(), kind: ParamKind::Int { lo, hi } }
+    }
+
+    /// Linear continuous parameter on `[lo, hi]`.
+    pub fn continuous(name: &str, lo: f64, hi: f64) -> Self {
+        assert!(
+            lo.is_finite() && hi.is_finite() && lo <= hi,
+            "bad continuous range for {name}: [{lo}, {hi}]"
+        );
+        ParamSpec {
+            name: name.to_string(),
+            kind: ParamKind::Continuous { lo, hi, log: false },
+        }
+    }
+
+    /// Log-scale continuous parameter on `[lo, hi]`, `lo > 0`.
+    pub fn log_continuous(name: &str, lo: f64, hi: f64) -> Self {
+        assert!(
+            lo.is_finite() && hi.is_finite() && 0.0 < lo && lo <= hi,
+            "bad log-continuous range for {name}: [{lo}, {hi}]"
+        );
+        ParamSpec {
+            name: name.to_string(),
+            kind: ParamKind::Continuous { lo, hi, log: true },
+        }
+    }
+
+    /// Categorical parameter over named choices.
+    pub fn categorical(name: &str, choices: &[&str]) -> Self {
+        assert!(!choices.is_empty(), "no choices for {name}");
+        let choices: Vec<String> =
+            choices.iter().map(|c| c.to_string()).collect();
+        let mut dedup = choices.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert!(
+            dedup.len() == choices.len(),
+            "duplicate choices for {name}: {choices:?}"
+        );
+        ParamSpec {
+            name: name.to_string(),
+            kind: ParamKind::Categorical { choices },
+        }
+    }
+
+    /// Ordinal parameter over strictly increasing numeric levels.
+    pub fn ordinal(name: &str, levels: &[f64]) -> Self {
+        assert!(!levels.is_empty(), "no levels for {name}");
+        assert!(
+            levels.windows(2).all(|w| w[0] < w[1]),
+            "ordinal levels for {name} must be strictly increasing: \
+             {levels:?}"
+        );
+        ParamSpec {
+            name: name.to_string(),
+            kind: ParamKind::Ordinal { levels: levels.to_vec() },
+        }
+    }
+
+    /// Number of distinct values, when finite (`None` for continuous).
+    pub fn cardinality(&self) -> Option<u64> {
+        self.kind.cardinality()
+    }
+
+    /// True when only a single value is possible.
+    pub fn is_fixed(&self) -> bool {
+        self.kind.is_fixed()
+    }
+
+    /// True when `v` is a well-typed, in-bounds value for this spec.
+    pub fn accepts(&self, v: &Value) -> bool {
+        match (&self.kind, v) {
+            (ParamKind::Int { lo, hi }, Value::Int(x)) => {
+                (*lo..=*hi).contains(x)
+            }
+            (ParamKind::Continuous { lo, hi, .. }, Value::Float(x)) => {
+                x.is_finite() && (*lo..=*hi).contains(x)
+            }
+            (ParamKind::Categorical { choices }, Value::Cat(i)) => {
+                *i < choices.len()
+            }
+            (ParamKind::Ordinal { levels }, Value::Int(i)) => {
+                (0..levels.len() as i64).contains(i)
+            }
+            _ => false,
+        }
+    }
+
+    /// The natural numeric reading of `v` under this spec: the integer
+    /// itself, the continuous value, the ordinal *level* (not index), or
+    /// the categorical index as a float.
+    pub fn numeric(&self, v: &Value) -> f64 {
+        match (&self.kind, v) {
+            (ParamKind::Ordinal { levels }, Value::Int(i)) => {
+                levels[*i as usize]
+            }
+            (_, v) => v.as_f64(),
+        }
+    }
+
+    /// Human-readable rendering of `v` under this spec (categorical
+    /// values print their choice name, ordinals their level).
+    pub fn format(&self, v: &Value) -> String {
+        match (&self.kind, v) {
+            (ParamKind::Categorical { choices }, Value::Cat(i)) => {
+                choices[*i].clone()
+            }
+            (ParamKind::Ordinal { levels }, Value::Int(i)) => {
+                format!("{}", levels[*i as usize])
+            }
+            (_, v) => format!("{v}"),
+        }
     }
 }
 
-/// A point on the lattice, one value per `ParamSpec` in order.
-pub type Point = Vec<i64>;
+/// One typed hyperparameter value. The variant must match the parameter
+/// kind at the same position of the owning [`Space`]:
+///
+/// * `Int` kind → `Value::Int(value)`
+/// * `Continuous` kind → `Value::Float(value)`
+/// * `Categorical` kind → `Value::Cat(choice_index)`
+/// * `Ordinal` kind → `Value::Int(level_index)`
+///
+/// Equality, ordering, and hashing are total (floats compare by
+/// `total_cmp` / hash by bit pattern), so points can be deduplicated and
+/// sorted exactly — the optimizer's "never evaluate θ twice" logic
+/// relies on this.
+#[derive(Debug, Clone, Copy)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Cat(usize),
+}
+
+impl Value {
+    /// The integer payload (`Int` value or `Ordinal` level index).
+    /// Panics on other variants — use where the kind is known.
+    pub fn as_i64(&self) -> i64 {
+        match self {
+            Value::Int(v) => *v,
+            other => panic!("expected an Int value, got {other:?}"),
+        }
+    }
+
+    /// The categorical choice index. Panics on other variants.
+    pub fn as_index(&self) -> usize {
+        match self {
+            Value::Cat(i) => *i,
+            other => panic!("expected a Cat value, got {other:?}"),
+        }
+    }
+
+    /// A numeric reading of any variant (categoricals read as their
+    /// index; ordinals as their index — see [`ParamSpec::numeric`] for
+    /// the level value).
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            Value::Int(v) => *v as f64,
+            Value::Float(v) => *v,
+            Value::Cat(i) => *i as f64,
+        }
+    }
+
+    fn rank(&self) -> u8 {
+        match self {
+            Value::Int(_) => 0,
+            Value::Float(_) => 1,
+            Value::Cat(_) => 2,
+        }
+    }
+}
+
+impl PartialEq for Value {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Value::Int(a), Value::Int(b)) => a == b,
+            (Value::Float(a), Value::Float(b)) => {
+                a.to_bits() == b.to_bits()
+            }
+            (Value::Cat(a), Value::Cat(b)) => a == b,
+            _ => false,
+        }
+    }
+}
+
+impl Eq for Value {}
+
+impl PartialOrd for Value {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Value {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        match (self, other) {
+            (Value::Int(a), Value::Int(b)) => a.cmp(b),
+            (Value::Float(a), Value::Float(b)) => a.total_cmp(b),
+            (Value::Cat(a), Value::Cat(b)) => a.cmp(b),
+            (a, b) => a.rank().cmp(&b.rank()),
+        }
+    }
+}
+
+impl std::hash::Hash for Value {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        state.write_u8(self.rank());
+        match self {
+            Value::Int(v) => state.write_i64(*v),
+            Value::Float(v) => state.write_u64(v.to_bits()),
+            Value::Cat(i) => state.write_usize(*i),
+        }
+    }
+}
+
+impl std::fmt::Display for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Value::Int(v) => write!(f, "{v}"),
+            Value::Float(v) => write!(f, "{v}"),
+            Value::Cat(i) => write!(f, "#{i}"),
+        }
+    }
+}
+
+/// A point in the search space: one typed [`Value`] per [`ParamSpec`],
+/// in parameter order.
+pub type Point = Vec<Value>;
+
+/// Build an all-integer [`Point`] — handy for tests and for `Int`-only
+/// (v1-style) spaces.
+pub fn ints(vals: &[i64]) -> Point {
+    vals.iter().map(|v| Value::Int(*v)).collect()
+}
+
+/// Render a point compactly (`[3, 0.01, #1]`); use
+/// [`Space::format_point`] when choice names should appear.
+pub fn format_values(p: &[Value]) -> String {
+    let inner: Vec<String> = p.iter().map(|v| v.to_string()).collect();
+    format!("[{}]", inner.join(", "))
+}
 
 /// The search space Ω.
 #[derive(Debug, Clone)]
 pub struct Space {
     params: Vec<ParamSpec>,
+    encoding: Encoding,
 }
 
 impl Space {
     pub fn new(params: Vec<ParamSpec>) -> Self {
         assert!(!params.is_empty(), "empty search space");
-        Space { params }
+        let encoding = Encoding::new(&params);
+        Space { params, encoding }
     }
 
     pub fn dim(&self) -> usize {
@@ -53,71 +354,124 @@ impl Space {
         self.params.iter().position(|p| p.name == name)
     }
 
-    /// Total lattice cardinality (saturating).
-    pub fn cardinality(&self) -> u64 {
-        self.params
-            .iter()
-            .fold(1u64, |acc, p| acc.saturating_mul(p.size()))
+    /// The encoding layer owning all representation mappings.
+    pub fn encoding(&self) -> &Encoding {
+        &self.encoding
     }
 
-    pub fn contains(&self, x: &[i64]) -> bool {
+    /// Total number of distinct points, when finite (saturating; `None`
+    /// as soon as one parameter is continuous).
+    pub fn cardinality(&self) -> Option<u64> {
+        self.params.iter().try_fold(1u64, |acc, p| {
+            p.cardinality().map(|c| acc.saturating_mul(c))
+        })
+    }
+
+    pub fn contains(&self, x: &[Value]) -> bool {
         x.len() == self.dim()
-            && x.iter()
-                .zip(&self.params)
-                .all(|(v, p)| *v >= p.lo && *v <= p.hi)
+            && x.iter().zip(&self.params).all(|(v, p)| p.accepts(v))
     }
 
-    /// Clamp each coordinate into bounds.
-    pub fn clamp(&self, x: &mut [i64]) {
+    /// Clamp each coordinate into its domain. Values must already be
+    /// the right variant for their parameter kind (like the typed
+    /// accessors, a mismatch is a programmer error and panics); NaN
+    /// continuous coordinates clamp to the lower bound.
+    pub fn clamp(&self, x: &mut [Value]) {
         for (v, p) in x.iter_mut().zip(&self.params) {
-            *v = (*v).clamp(p.lo, p.hi);
+            *v = match (&p.kind, &*v) {
+                (ParamKind::Int { lo, hi }, Value::Int(a)) => {
+                    Value::Int((*a).clamp(*lo, *hi))
+                }
+                (ParamKind::Continuous { lo, hi, .. }, Value::Float(a)) => {
+                    Value::Float(if a.is_nan() {
+                        *lo
+                    } else {
+                        a.clamp(*lo, *hi)
+                    })
+                }
+                (ParamKind::Categorical { choices }, Value::Cat(i)) => {
+                    Value::Cat((*i).min(choices.len() - 1))
+                }
+                (ParamKind::Ordinal { levels }, Value::Int(i)) => {
+                    Value::Int((*i).clamp(0, levels.len() as i64 - 1))
+                }
+                (kind, v) => panic!(
+                    "type mismatch: {v:?} for {kind:?} parameter {}",
+                    p.name
+                ),
+            };
         }
     }
 
-    /// Map a unit-cube sample to lattice cells via equal-width buckets
-    /// (the integer adaptation of Sec. VI; see `sampling::lowdisc`).
+    /// Map a unit-cube sample (one coordinate per *parameter*) to a
+    /// typed point. Integer/ordinal/categorical coordinates use
+    /// equal-width buckets (the integer adaptation of Sec. VI, exactly
+    /// the v1 arithmetic for `Int`); continuous coordinates apply the
+    /// (possibly log) warp. Delegates to [`Encoding::point_from_unit`].
     pub fn from_unit(&self, u: &[f64]) -> Point {
-        assert_eq!(u.len(), self.dim());
-        u.iter()
-            .zip(&self.params)
-            .map(|(ui, p)| {
-                let cell = (ui * p.size() as f64).floor() as i64;
-                (p.lo + cell).min(p.hi)
-            })
-            .collect()
+        self.encoding.point_from_unit(u)
     }
 
-    /// Normalize a lattice point to [0,1]^d (surrogates operate here so
-    /// ranges of very different magnitude contribute comparably to
-    /// distances — same trick as [2]'s scaled RBF).
-    pub fn to_unit(&self, x: &[i64]) -> Vec<f64> {
-        x.iter()
-            .zip(&self.params)
-            .map(|(v, p)| {
-                if p.size() == 1 {
-                    0.5
-                } else {
-                    (v - p.lo) as f64 / (p.hi - p.lo) as f64
+    /// Per-parameter unit coordinates in `[0,1]^d` (one per parameter;
+    /// categorical indices are scaled nominally). Used by sampling and
+    /// the synthetic landscape; surrogates use [`Space::encode`].
+    /// Delegates to [`Encoding::unit`].
+    pub fn to_unit(&self, x: &[Value]) -> Vec<f64> {
+        self.encoding.unit(x)
+    }
+
+    /// Surrogate feature vector: unit/log-warped scalars plus one-hot
+    /// categorical blocks. Delegates to [`Encoding::encode`].
+    pub fn encode(&self, x: &[Value]) -> Vec<f64> {
+        self.encoding.encode(x)
+    }
+
+    /// Inverse of [`Space::encode`] up to lattice rounding. Delegates to
+    /// [`Encoding::decode`].
+    pub fn decode(&self, feats: &[f64]) -> Point {
+        self.encoding.decode(feats)
+    }
+
+    /// Uniform random point (one RNG draw per parameter, in order; the
+    /// `Int` path consumes the RNG exactly as the v1 lattice did).
+    pub fn random_point(&self, rng: &mut Rng) -> Point {
+        self.params
+            .iter()
+            .map(|p| match &p.kind {
+                ParamKind::Int { lo, hi } => Value::Int(rng.i64_in(*lo, *hi)),
+                ParamKind::Continuous { .. } => {
+                    self.encoding.value_from_unit(&p.kind, rng.f64())
+                }
+                ParamKind::Categorical { choices } => {
+                    Value::Cat(rng.usize_below(choices.len()))
+                }
+                ParamKind::Ordinal { levels } => {
+                    Value::Int(rng.usize_below(levels.len()) as i64)
                 }
             })
             .collect()
     }
 
-    /// Uniform random lattice point.
-    pub fn random_point(&self, rng: &mut Rng) -> Point {
-        self.params
-            .iter()
-            .map(|p| rng.i64_in(p.lo, p.hi))
-            .collect()
-    }
-
-    /// Perturb `x`: each coordinate mutates with probability `p_mut` by a
-    /// discretized Gaussian step of relative scale `sigma` (at least ±1).
-    /// This is the local candidate generator of the Regis-Shoemaker
-    /// strategy (paper Feature 2).
+    /// Perturb `x`: each coordinate mutates with probability `p_mut` by
+    /// a kind-appropriate local move of relative scale `sigma` — the
+    /// local candidate generator of the Regis-Shoemaker strategy (paper
+    /// Feature 2):
+    ///
+    /// * `Int` / `Ordinal`: discretized Gaussian step of at least ±1
+    ///   cell (bit-identical to the v1 lattice for `Int`).
+    /// * `Continuous`: Gaussian step of scale `sigma` in (warped) unit
+    ///   coordinates.
+    /// * `Categorical`: resample to a uniformly chosen *different*
+    ///   choice.
+    ///
+    /// If no coordinate moved (nothing fired, or every step clamped
+    /// back at a boundary), one uniformly chosen movable coordinate is
+    /// resampled to a guaranteed-different value; if the space has no
+    /// movable coordinate at all, the input is returned unchanged.
+    /// Termination is explicit: every resample path is bounded.
     pub fn perturb(
         &self,
-        x: &[i64],
+        x: &[Value],
         p_mut: f64,
         sigma: f64,
         rng: &mut Rng,
@@ -125,51 +479,168 @@ impl Space {
         let mut out = x.to_vec();
         for (i, p) in self.params.iter().enumerate() {
             if rng.f64() < p_mut {
-                let scale = (p.size() as f64 * sigma).max(1.0);
-                let step = (rng.normal() * scale).round() as i64;
-                let step = if step == 0 {
-                    if rng.f64() < 0.5 {
-                        -1
-                    } else {
-                        1
-                    }
-                } else {
-                    step
-                };
-                out[i] = (x[i] + step).clamp(p.lo, p.hi);
+                out[i] = self.step_coord(p, &x[i], sigma, rng);
             }
         }
         if out == x {
-            // Mutations may have been clamped back at a boundary (or none
-            // fired); guarantee at least one coordinate moves if the space
-            // is not a single point.
-            let movable: Vec<usize> = (0..self.dim())
-                .filter(|&i| self.params[i].size() > 1)
-                .collect();
-            if let Some(&i) = movable
-                .get(rng.usize_below(movable.len().max(1)))
-                .filter(|_| !movable.is_empty())
-            {
-                let p = &self.params[i];
-                let mut v = out[i];
-                while v == out[i] {
-                    v = rng.i64_in(p.lo, p.hi);
-                }
-                out[i] = v;
+            let movable: Vec<usize> =
+                (0..self.dim()).filter(|&i| !self.params[i].is_fixed()).collect();
+            if movable.is_empty() {
+                // Degenerate single-point space: nothing can move.
+                return out;
             }
+            let i = movable[rng.usize_below(movable.len())];
+            out[i] = self.resample_different(&self.params[i], &out[i], rng);
         }
         out
     }
 
-    /// Squared Euclidean distance in normalized coordinates.
-    pub fn dist2(&self, a: &[i64], b: &[i64]) -> f64 {
-        let ua = self.to_unit(a);
-        let ub = self.to_unit(b);
-        ua.iter()
-            .zip(&ub)
-            .map(|(x, y)| (x - y) * (x - y))
-            .sum()
+    /// One local move of a single coordinate (the `p_mut`-gated body of
+    /// [`Space::perturb`]).
+    fn step_coord(
+        &self,
+        p: &ParamSpec,
+        cur: &Value,
+        sigma: f64,
+        rng: &mut Rng,
+    ) -> Value {
+        match &p.kind {
+            ParamKind::Int { lo, hi } => {
+                let size = (hi - lo) as u64 + 1;
+                let v = cur.as_i64();
+                Value::Int(lattice_step(v, *lo, *hi, size, sigma, rng))
+            }
+            ParamKind::Ordinal { levels } => {
+                let k = levels.len() as i64;
+                let v = cur.as_i64();
+                Value::Int(lattice_step(v, 0, k - 1, k as u64, sigma, rng))
+            }
+            ParamKind::Continuous { lo, hi, .. } => {
+                if lo == hi {
+                    return *cur;
+                }
+                let u = encoding::unit_of_loose(&p.kind, cur);
+                let u2 = (u + sigma * rng.normal()).clamp(0.0, 1.0);
+                self.encoding.value_from_unit(&p.kind, u2)
+            }
+            ParamKind::Categorical { choices } => {
+                let k = choices.len();
+                if k == 1 {
+                    return *cur;
+                }
+                Value::Cat(different_index(k, cur.as_index(), rng))
+            }
+        }
     }
+
+    /// Resample a coordinate to a value guaranteed different from
+    /// `cur`, with bounded RNG consumption. `p` must not be fixed.
+    fn resample_different(
+        &self,
+        p: &ParamSpec,
+        cur: &Value,
+        rng: &mut Rng,
+    ) -> Value {
+        match &p.kind {
+            ParamKind::Int { lo, hi } => {
+                let c = cur.as_i64();
+                // Bounded rejection keeps the historical RNG stream
+                // (the v1 loop was unbounded); the deterministic nudge
+                // guarantees termination.
+                for _ in 0..RESAMPLE_ATTEMPTS {
+                    let v = rng.i64_in(*lo, *hi);
+                    if v != c {
+                        return Value::Int(v);
+                    }
+                }
+                Value::Int(if c < *hi { c + 1 } else { c - 1 })
+            }
+            ParamKind::Ordinal { levels } => {
+                let j = different_index(
+                    levels.len(),
+                    cur.as_i64() as usize,
+                    rng,
+                );
+                Value::Int(j as i64)
+            }
+            ParamKind::Categorical { choices } => {
+                Value::Cat(different_index(
+                    choices.len(),
+                    cur.as_index(),
+                    rng,
+                ))
+            }
+            ParamKind::Continuous { lo, hi, .. } => {
+                let v = self.encoding.value_from_unit(&p.kind, rng.f64());
+                if &v != cur {
+                    return v;
+                }
+                // One-in-2⁵³ collision (or a pathological warp):
+                // deterministic fallback to a bound.
+                let c = match cur {
+                    Value::Float(c) => *c,
+                    _ => *lo,
+                };
+                Value::Float(if c != *lo { *lo } else { *hi })
+            }
+        }
+    }
+
+    /// Squared Euclidean distance in the surrogate feature space
+    /// (distinct categorical choices contribute exactly 1.0; see
+    /// [`Encoding`]).
+    pub fn dist2(&self, a: &[Value], b: &[Value]) -> f64 {
+        self.encoding.dist2(a, b)
+    }
+
+    /// Human-readable rendering with categorical choice names and
+    /// ordinal levels resolved: `{layers=3, lr=0.01, opt=adam}`.
+    pub fn format_point(&self, p: &[Value]) -> String {
+        let inner: Vec<String> = self
+            .params
+            .iter()
+            .zip(p)
+            .map(|(spec, v)| format!("{}={}", spec.name, spec.format(v)))
+            .collect();
+        format!("{{{}}}", inner.join(", "))
+    }
+}
+
+/// Uniform index in `[0, k)` different from `cur`, in exactly one RNG
+/// draw (draw over the `k - 1` other indices, then skip past `cur`).
+/// Requires `k >= 2`.
+fn different_index(k: usize, cur: usize, rng: &mut Rng) -> usize {
+    debug_assert!(k >= 2);
+    let mut j = rng.usize_below(k - 1);
+    if j >= cur {
+        j += 1;
+    }
+    j
+}
+
+/// The v1 integer-lattice Gaussian step: scale from the cell count,
+/// rounded normal step of at least ±1, clamped. Kept verbatim so `Int`
+/// parameters consume the RNG exactly as the pre-v2 lattice did.
+fn lattice_step(
+    v: i64,
+    lo: i64,
+    hi: i64,
+    size: u64,
+    sigma: f64,
+    rng: &mut Rng,
+) -> i64 {
+    let scale = (size as f64 * sigma).max(1.0);
+    let step = (rng.normal() * scale).round() as i64;
+    let step = if step == 0 {
+        if rng.f64() < 0.5 {
+            -1
+        } else {
+            1
+        }
+    } else {
+        step
+    };
+    (v + step).clamp(lo, hi)
 }
 
 #[cfg(test)]
@@ -186,13 +657,41 @@ mod tests {
         ])
     }
 
+    fn mixed_space() -> Space {
+        Space::new(vec![
+            ParamSpec::int("layers", 1, 4),
+            ParamSpec::log_continuous("lr", 1e-5, 1e-1),
+            ParamSpec::continuous("dropout", 0.0, 0.5),
+            ParamSpec::categorical("opt", &["sgd", "adam", "rmsprop"]),
+            ParamSpec::ordinal("batch", &[16.0, 32.0, 64.0, 128.0]),
+        ])
+    }
+
     #[test]
     fn cardinality_and_contains() {
         let sp = space();
-        assert_eq!(sp.cardinality(), 3 * 3 * 12);
-        assert!(sp.contains(&[1, 0, 0]));
-        assert!(!sp.contains(&[0, 0, 0]));
-        assert!(!sp.contains(&[1, 0]));
+        assert_eq!(sp.cardinality(), Some(3 * 3 * 12));
+        assert!(sp.contains(&ints(&[1, 0, 0])));
+        assert!(!sp.contains(&ints(&[0, 0, 0])));
+        assert!(!sp.contains(&ints(&[1, 0])));
+        // Mixed spaces have no finite cardinality.
+        assert_eq!(mixed_space().cardinality(), None);
+    }
+
+    #[test]
+    fn contains_is_type_checked() {
+        let sp = mixed_space();
+        let mut rng = Rng::new(0);
+        let p = sp.random_point(&mut rng);
+        assert!(sp.contains(&p));
+        // A float where an int belongs is rejected even if "in range".
+        let mut bad = p.clone();
+        bad[0] = Value::Float(2.0);
+        assert!(!sp.contains(&bad));
+        // A categorical index out of range is rejected.
+        let mut bad = p;
+        bad[3] = Value::Cat(3);
+        assert!(!sp.contains(&bad));
     }
 
     #[test]
@@ -201,13 +700,13 @@ mod tests {
         forall("to_unit/from_unit roundtrip", 200, |rng| {
             let p = sp.random_point(rng);
             let u = sp.to_unit(&p);
-            // Re-quantizing the normalized point must recover a valid point
-            // within one cell of the original.
+            // Re-quantizing the normalized point must recover a valid
+            // point within one cell of the original.
             let q = sp.from_unit(&u);
             prop_assert!(sp.contains(&q), "{q:?} out of bounds");
             for ((a, b), spec) in p.iter().zip(&q).zip(sp.params()) {
                 prop_assert!(
-                    (a - b).abs() <= 1,
+                    (a.as_i64() - b.as_i64()).abs() <= 1,
                     "{a} vs {b} in {}",
                     spec.name
                 );
@@ -218,29 +717,34 @@ mod tests {
 
     #[test]
     fn perturb_stays_in_bounds_and_moves() {
-        let sp = space();
-        forall("perturb in-bounds", 300, |rng| {
-            let p = sp.random_point(rng);
-            let q = sp.perturb(&p, 0.5, 0.2, rng);
-            prop_assert!(sp.contains(&q), "{q:?}");
-            prop_assert!(p != q, "perturb must move: {p:?}");
-            Ok(())
-        });
+        for sp in [space(), mixed_space()] {
+            forall("perturb in-bounds", 300, |rng| {
+                let p = sp.random_point(rng);
+                let q = sp.perturb(&p, 0.5, 0.2, rng);
+                prop_assert!(sp.contains(&q), "{q:?}");
+                prop_assert!(p != q, "perturb must move: {p:?}");
+                Ok(())
+            });
+        }
     }
 
     #[test]
     fn dist2_is_metric_like() {
-        let sp = space();
-        forall("dist2 symmetry/identity", 200, |rng| {
-            let a = sp.random_point(rng);
-            let b = sp.random_point(rng);
-            let dab = sp.dist2(&a, &b);
-            let dba = sp.dist2(&b, &a);
-            prop_assert!((dab - dba).abs() < 1e-12, "asymmetric");
-            prop_assert!(sp.dist2(&a, &a) == 0.0, "nonzero self-distance");
-            prop_assert!(dab >= 0.0, "negative");
-            Ok(())
-        });
+        for sp in [space(), mixed_space()] {
+            forall("dist2 symmetry/identity", 200, |rng| {
+                let a = sp.random_point(rng);
+                let b = sp.random_point(rng);
+                let dab = sp.dist2(&a, &b);
+                let dba = sp.dist2(&b, &a);
+                prop_assert!((dab - dba).abs() < 1e-12, "asymmetric");
+                prop_assert!(
+                    sp.dist2(&a, &a) == 0.0,
+                    "nonzero self-distance"
+                );
+                prop_assert!(dab >= 0.0, "negative");
+                Ok(())
+            });
+        }
     }
 
     #[test]
@@ -251,9 +755,93 @@ mod tests {
         ]);
         let mut rng = Rng::new(0);
         let p = sp.random_point(&mut rng);
-        assert_eq!(p[0], 5);
+        assert_eq!(p[0], Value::Int(5));
         let q = sp.perturb(&p, 1.0, 0.3, &mut rng);
-        assert_eq!(q[0], 5); // clamped back
+        assert_eq!(q[0], Value::Int(5)); // clamped back
         assert_eq!(sp.to_unit(&p)[0], 0.5);
+    }
+
+    #[test]
+    fn clamp_pulls_every_kind_into_domain() {
+        let sp = mixed_space();
+        let mut p = vec![
+            Value::Int(99),        // above hi
+            Value::Float(5.0),     // above hi
+            Value::Float(f64::NAN),
+            Value::Cat(7),         // index past the choices
+            Value::Int(-2),        // below the first level
+        ];
+        sp.clamp(&mut p);
+        assert!(sp.contains(&p), "{p:?}");
+        assert_eq!(p[0], Value::Int(4));
+        assert_eq!(p[2], Value::Float(0.0)); // NaN -> lower bound
+        assert_eq!(p[3], Value::Cat(2));
+    }
+
+    #[test]
+    fn fully_fixed_space_perturb_returns_input() {
+        // Satellite fix: no movable coordinate → early return, no
+        // unbounded resample loop, no RNG panic.
+        let sp = Space::new(vec![
+            ParamSpec::new("a", 3, 3),
+            ParamSpec::categorical("b", &["only"]),
+        ]);
+        let mut rng = Rng::new(1);
+        let p = sp.random_point(&mut rng);
+        let q = sp.perturb(&p, 1.0, 0.5, &mut rng);
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn resample_fallback_always_moves_every_kind() {
+        // p_mut = 0 forces the fallback path on every call.
+        let sp = mixed_space();
+        forall("fallback moves", 300, |rng| {
+            let p = sp.random_point(rng);
+            let q = sp.perturb(&p, 0.0, 0.2, rng);
+            prop_assert!(p != q, "fallback did not move {p:?}");
+            prop_assert!(sp.contains(&q), "{q:?}");
+            // Exactly one coordinate differs.
+            let moved =
+                p.iter().zip(&q).filter(|(a, b)| a != b).count();
+            prop_assert!(moved == 1, "moved {moved} coords");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn value_order_and_hash_are_total() {
+        use std::collections::HashSet;
+        let mut vals = vec![
+            Value::Float(f64::NAN),
+            Value::Float(0.5),
+            Value::Int(2),
+            Value::Cat(1),
+            Value::Float(-0.0),
+            Value::Float(0.0),
+        ];
+        vals.sort(); // must not panic
+        let set: HashSet<Value> = vals.iter().copied().collect();
+        // -0.0 and 0.0 are distinct bit patterns, NaN equals itself.
+        assert_eq!(set.len(), 6);
+        assert_eq!(Value::Float(f64::NAN), Value::Float(f64::NAN));
+    }
+
+    #[test]
+    fn format_point_resolves_names() {
+        let sp = mixed_space();
+        let p = vec![
+            Value::Int(2),
+            Value::Float(1e-3),
+            Value::Float(0.25),
+            Value::Cat(1),
+            Value::Int(2),
+        ];
+        let s = sp.format_point(&p);
+        assert_eq!(
+            s,
+            "{layers=2, lr=0.001, dropout=0.25, opt=adam, batch=64}"
+        );
+        assert_eq!(format_values(&ints(&[1, 2])), "[1, 2]");
     }
 }

@@ -5,9 +5,12 @@
 //! The `ensemble` module implements the RBF-ensemble-from-confidence-
 //! intervals acquisition of Eq. (8).
 //!
-//! Surrogates operate in *normalized* coordinates ([0,1]^d via
-//! `Space::to_unit`) so heterogeneous integer ranges contribute comparably
-//! to distances.
+//! Surrogates operate on *encoded feature vectors* (`Space::encode`,
+//! see `space::Encoding` / DESIGN.md §2): unit-scaled scalars — with
+//! log-warped continuous coordinates — plus one-hot categorical blocks,
+//! so heterogeneous ranges and unordered choices contribute comparably
+//! to distances. For all-integer spaces this is exactly the historical
+//! `[0,1]^d` normalization.
 
 pub mod ensemble;
 pub mod gp;
@@ -31,7 +34,7 @@ pub trait Surrogate {
 
     /// Absorb one additional observation into an already-fitted model
     /// without refitting from scratch (the asynchronous per-completion
-    /// update of the `exec` driver; see DESIGN.md §4).
+    /// update of the `exec` driver; see DESIGN.md §5).
     ///
     /// Implementations update in O(n²) — a rank-1 Cholesky extension for
     /// the GP, a bordered-inverse extension for the RBF — versus the

@@ -20,7 +20,7 @@ use crate::surrogate::Surrogate;
 /// Beyond the model coefficients (λ, β₀, β), the struct can carry the
 /// bordered saddle matrix and its inverse, which are built lazily on the
 /// first `fit_incremental` call and extended in O(n²) per inserted point
-/// (the bordering method; see DESIGN.md §4). Plain `fit`/`predict` users
+/// (the bordering method; see DESIGN.md §5). Plain `fit`/`predict` users
 /// never pay for them.
 #[derive(Debug, Clone, Default)]
 pub struct RbfSurrogate {

@@ -1,4 +1,4 @@
-//! Random circle phantoms — the XDesign substitute (DESIGN.md §2).
+//! Random circle phantoms — the XDesign substitute (DESIGN.md §3).
 //!
 //! The paper's dataset is 17,500 simulated 128x128 images of "circles of
 //! various sizes, emulating the different feature scales present in

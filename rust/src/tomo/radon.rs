@@ -1,4 +1,4 @@
-//! Parallel-beam projector pair (the TomoPy substitute, DESIGN.md §2).
+//! Parallel-beam projector pair (the TomoPy substitute, DESIGN.md §3).
 //!
 //! Pixel-driven formulation: each pixel splats its value onto the two
 //! detector bins its center projects between, with linear interpolation
@@ -46,7 +46,7 @@ impl Geometry {
 
     /// Paper §V-A geometry: 128x128 images, detector bins = image width.
     /// We use 16 angles (paper: 20) so the U-Net's power-of-two
-    /// down/up-sampling path stays exact; see DESIGN.md §2.
+    /// down/up-sampling path stays exact; see DESIGN.md §3.
     pub fn paper(size: usize, n_angles: usize) -> Self {
         Geometry::new(n_angles, size, size)
     }

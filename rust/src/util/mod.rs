@@ -1,6 +1,6 @@
 //! Shared substrates: JSON, CLI parsing, bench harness, property testing,
 //! CSV emission. All hand-rolled — the offline toolchain ships no serde,
-//! clap, criterion, or proptest (DESIGN.md §6).
+//! clap, criterion, or proptest (DESIGN.md §7).
 
 pub mod bench;
 pub mod cli;

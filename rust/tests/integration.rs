@@ -131,7 +131,17 @@ fn hlo_evaluator_trial_produces_full_outcome() {
         4,
     );
     ev.t_dropout = 4;
-    let theta = vec![1, 0, 2, 2, 2, 16]; // small arch, 2 epochs
+    // Small arch, 2 epochs — typed point over the mixed mlp_space.
+    use hyppo::eval::hlo::lr_of;
+    use hyppo::space::Value;
+    let theta = vec![
+        Value::Int(1),                      // layers
+        Value::Int(0),                      // width level 16
+        Value::Float(lr_of(2) as f64),      // lr
+        Value::Float(0.1),                  // dropout
+        Value::Int(2),                      // epochs
+        Value::Int(16),                     // batch
+    ];
     let out = ev.run_trial(&theta, 0, 42);
     assert!(out.loss.is_finite() && out.loss >= 0.0);
     assert_eq!(out.dropout_losses.len(), 4);

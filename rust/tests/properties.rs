@@ -155,6 +155,52 @@ fn hpo_respects_budget_and_space_under_random_configs() {
 }
 
 #[test]
+fn hpo_respects_budget_and_space_on_mixed_typed_spaces() {
+    // The search-space v2 analogue of the lattice property above: the
+    // whole engine (designs, surrogates, candidate search, GA) runs on
+    // mixed Int/Continuous/Categorical/Ordinal spaces and every record
+    // stays well-typed and in-domain.
+    forall("hpo mixed spaces", 6, |rng| {
+        let space = Space::new(vec![
+            ParamSpec::int("layers", 1, 1 + rng.i64_in(1, 6)),
+            ParamSpec::log_continuous("lr", 1e-5, 1e-1),
+            ParamSpec::continuous("dropout", 0.0, 0.5),
+            ParamSpec::categorical("opt", &["sgd", "adam", "rmsprop"]),
+            ParamSpec::ordinal("batch", &[16.0, 32.0, 64.0]),
+        ]);
+        let ev = SyntheticEvaluator::new(space.clone(), rng.next_u64());
+        let surrogate = match rng.usize_below(3) {
+            0 => SurrogateKind::Rbf,
+            1 => SurrogateKind::Gp,
+            _ => SurrogateKind::RbfEnsemble { alpha: 1.0, members: 4 },
+        };
+        let budget = 8 + rng.usize_below(10);
+        let cfg = HpoConfig {
+            max_evaluations: budget,
+            n_init: 4,
+            n_trials: 1 + rng.usize_below(2),
+            surrogate,
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let h = run_sync(&ev, &cfg);
+        prop_assert!(h.len() == budget, "budget violated: {}", h.len());
+        for r in &h.records {
+            prop_assert!(
+                space.contains(&r.theta),
+                "ill-typed or out of domain: {:?}",
+                r.theta
+            );
+            prop_assert!(
+                r.summary.interval.center.is_finite(),
+                "non-finite loss"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn expected_improvement_nonnegative_and_zero_when_hopeless() {
     forall("EI sign", 500, |rng| {
         let pred = rng.normal() * 3.0;
