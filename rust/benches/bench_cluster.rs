@@ -12,9 +12,10 @@ use hyppo::eval::synthetic::SyntheticEvaluator;
 use hyppo::exec::{run_experiment, CheckpointPolicy, ExecConfig};
 use hyppo::optimizer::HpoConfig;
 use hyppo::space::{ParamSpec, Space};
-use hyppo::util::bench::{bench, bench1, black_box};
+use hyppo::util::bench::{black_box, BenchRun};
 
 fn main() {
+    let mut run = BenchRun::from_args("bench_cluster");
     println!("== cluster benches ==");
     let evals: Vec<EvalCost> = (0..50)
         .map(|i| EvalCost {
@@ -22,12 +23,12 @@ fn main() {
         })
         .collect();
     let cfg = SimConfig::trial_parallel(Topology::new(16, 6));
-    bench1("sim_fig8_grid_cell_50x5", || {
+    run.bench("sim_fig8_grid_cell_50x5", || {
         black_box(simulate(&evals, &cfg));
     });
 
     // Full 5x6 topology grid (one Fig. 8 regeneration).
-    bench1("sim_fig8_full_grid_30cells", || {
+    run.bench("sim_fig8_full_grid_30cells", || {
         for s in [1usize, 2, 4, 8, 16] {
             for t in 1..=6usize {
                 let c = SimConfig::trial_parallel(Topology::new(s, t));
@@ -58,7 +59,7 @@ fn main() {
         mode: ParallelMode::TrialParallel,
         time_scale: 0.0,
     };
-    bench(
+    run.bench_with(
         "async_hpo_32evals_overhead",
         Duration::from_secs(3),
         || {
@@ -75,7 +76,7 @@ fn main() {
         acfg.mode,
         acfg.time_scale,
     );
-    bench(
+    run.bench_with(
         "exec_driver_32evals_overhead",
         Duration::from_secs(3),
         || {
@@ -85,7 +86,7 @@ fn main() {
     let ckpt = std::env::temp_dir().join("hyppo_bench_cluster_ckpt.json");
     let mut ckpt_cfg = exec_cfg.clone();
     ckpt_cfg.checkpoint = Some(CheckpointPolicy::every_completion(&ckpt));
-    bench(
+    run.bench_with(
         "exec_driver_32evals_ckpt_every_completion",
         Duration::from_secs(3),
         || {
@@ -93,4 +94,6 @@ fn main() {
         },
     );
     std::fs::remove_file(&ckpt).ok();
+
+    run.finish().expect("writing bench json");
 }

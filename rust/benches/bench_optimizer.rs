@@ -1,16 +1,22 @@
 //! Optimizer hot paths: candidate generation + scoring (the RBF iteration
 //! of Feature 2), the integer GA maximizing EI (the GP iteration), and a
 //! full propose_next under each surrogate — i.e. the L3 cost per adaptive
-//! evaluation, which must stay negligible vs a training run.
+//! evaluation, which must stay negligible vs a training run. The parallel
+//! cases exercise the deterministic scoring fan-out (bit-identical
+//! proposals, tests/exec.rs). `--json PATH` / `--budget-ms N` as in
+//! bench_surrogates.
 
 use hyppo::eval::synthetic::SyntheticEvaluator;
-use hyppo::optimizer::candidates::{generate, select, CandidateConfig};
-use hyppo::optimizer::ga::{maximize, GaConfig};
+use hyppo::optimizer::candidates::{
+    generate, select, select_many, select_threaded, CandidateConfig,
+    WEIGHT_CYCLE,
+};
+use hyppo::optimizer::ga::{maximize_scalar, GaConfig};
 use hyppo::optimizer::{propose_next, run_random, HpoConfig, SurrogateKind};
 use hyppo::sampling::Rng;
 use hyppo::space::{ParamSpec, Space};
 use hyppo::uq::UqWeights;
-use hyppo::util::bench::{bench1, black_box};
+use hyppo::util::bench::{black_box, BenchRun};
 
 fn space() -> Space {
     Space::new(vec![
@@ -24,6 +30,7 @@ fn space() -> Space {
 }
 
 fn main() {
+    let mut run = BenchRun::from_args("bench_optimizer");
     let sp = space();
     let mut rng = Rng::new(0);
     let evaluated: Vec<hyppo::space::Point> =
@@ -32,24 +39,55 @@ fn main() {
     let cfg = CandidateConfig::default();
 
     println!("== optimizer benches (6-D space) ==");
-    bench1("candidates_generate_200", || {
+    run.bench("candidates_generate_200", || {
         black_box(generate(&sp, &best, &evaluated, &cfg, &mut rng));
     });
 
-    let cands = generate(&sp, &best, &evaluated, &cfg, &mut rng);
+    let cands = generate(&sp, &best, &evaluated, &cfg, &mut rng).points;
     let values: Vec<f64> = (0..cands.len()).map(|i| i as f64).collect();
-    bench1("candidates_select_200", || {
+    let seq = run.bench("candidates_select_200", || {
         black_box(select(&sp, &cands, &values, &evaluated, 0.8));
     });
+    let par = run.bench("candidates_select_200_threads8", || {
+        black_box(select_threaded(
+            &sp, &cands, &values, &evaluated, 0.8, 8,
+        ));
+    });
+    run.ratio(
+        "select_parallel_speedup_8threads",
+        seq.median_ns / par.median_ns,
+    );
+    // One shared distance pass for all four cycle weights vs four full
+    // select calls — the reused-rank-buffer satellite.
+    let four = run.bench("candidates_select_200_4weights_naive", || {
+        for w in WEIGHT_CYCLE {
+            black_box(select(&sp, &cands, &values, &evaluated, w));
+        }
+    });
+    let many = run.bench("candidates_select_200_4weights_shared", || {
+        black_box(select_many(
+            &sp,
+            &cands,
+            &values,
+            &evaluated,
+            &WEIGHT_CYCLE,
+            1,
+        ));
+    });
+    run.ratio(
+        "select_many_speedup_4weights",
+        four.median_ns / many.median_ns,
+    );
 
-    bench1("ga_maximize_40x30", || {
+    run.bench("ga_maximize_40x30", || {
         let mut r = Rng::new(3);
-        black_box(maximize(&sp, &GaConfig::default(), &mut r, |p| {
+        black_box(maximize_scalar(&sp, &GaConfig::default(), &mut r, |p| {
             -(p[0].as_f64() - 3.0).powi(2) - (p[1].as_f64() - 7.0).powi(2)
         }));
     });
 
-    // Full proposal step on a 60-point history, per surrogate kind.
+    // Full proposal step on a 60-point history, per surrogate kind —
+    // sequential and with the deterministic 8-thread scoring fan-out.
     let ev = SyntheticEvaluator::new(sp.clone(), 5);
     let hist = run_random(&ev, 60, 2, UqWeights::default_paper(), 1);
     for (name, kind) in [
@@ -60,10 +98,24 @@ fn main() {
             SurrogateKind::RbfEnsemble { alpha: 1.0, members: 8 },
         ),
     ] {
-        let hcfg = HpoConfig { surrogate: kind, ..Default::default() };
-        bench1(&format!("propose_next_{name}_h60"), || {
-            let mut r = Rng::new(7);
-            black_box(propose_next(&sp, &hist, &hcfg, 1, &mut r));
-        });
+        for threads in [1usize, 8] {
+            let hcfg = HpoConfig {
+                surrogate: kind.clone(),
+                candidates: CandidateConfig {
+                    scoring_threads: threads,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            run.bench(
+                &format!("propose_next_{name}_h60_threads{threads}"),
+                || {
+                    let mut r = Rng::new(7);
+                    black_box(propose_next(&sp, &hist, &hcfg, 1, &mut r));
+                },
+            );
+        }
     }
+
+    run.finish().expect("writing bench json");
 }

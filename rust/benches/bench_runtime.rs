@@ -7,11 +7,14 @@
 use std::time::Duration;
 
 use hyppo::runtime::{artifact_dir, make_batch, Model, SharedEngine};
-use hyppo::util::bench::{bench, black_box};
+use hyppo::util::bench::{black_box, BenchRun};
 
 fn main() {
+    let mut run = BenchRun::from_args("bench_runtime");
     let Some(dir) = artifact_dir() else {
         println!("skipping runtime benches: artifacts not built");
+        // Still emit the (empty) JSON document so CI has an artifact.
+        run.finish().expect("writing bench json");
         return;
     };
     let engine = SharedEngine::load(dir).expect("engine");
@@ -25,7 +28,7 @@ fn main() {
         let ys: Vec<&[f32]> = y.chunks(1).collect();
         let batch = make_batch(&xs, &ys, 32).unwrap();
 
-        bench(
+        run.bench_with(
             &format!("{arch}__train_step"),
             Duration::from_secs(2),
             || {
@@ -34,14 +37,14 @@ fn main() {
                 );
             },
         );
-        bench(
+        run.bench_with(
             &format!("{arch}__predict"),
             Duration::from_secs(2),
             || {
                 black_box(model.predict(&x).unwrap());
             },
         );
-        bench(
+        run.bench_with(
             &format!("{arch}__predict_dropout"),
             Duration::from_secs(2),
             || {
@@ -57,11 +60,13 @@ fn main() {
     let xs: Vec<&[f32]> = x.chunks(16 * 128).collect();
     let ys: Vec<&[f32]> = x.chunks(16 * 128).collect();
     let batch = make_batch(&xs, &ys, 4).unwrap();
-    bench(
+    run.bench_with(
         &format!("{arch}__train_step"),
         Duration::from_secs(3),
         || {
             black_box(model.train_step(&batch, 0.01, 0.05, 3).unwrap());
         },
     );
+
+    run.finish().expect("writing bench json");
 }

@@ -1,14 +1,19 @@
 //! Surrogate hot paths: RBF/GP/ensemble fit + predict scaling in the
 //! number of evaluated points — the per-completion refit cost that bounds
-//! the asynchronous update rate (Fig. 6). Run via `cargo bench`.
+//! the asynchronous update rate (Fig. 6) — plus the batch-vs-scalar
+//! proposal-scoring cases of ISSUE 5 (the per-proposal cost that bounds
+//! candidate-set size). Run via `cargo bench`; `--json PATH` emits the
+//! machine-readable `hyppo-bench-v1` document, `--budget-ms N` shrinks
+//! the per-case budget (CI smoke).
 
+use hyppo::linalg::Workspace;
 use hyppo::sampling::Rng;
 use hyppo::surrogate::ensemble::RbfEnsemble;
 use hyppo::surrogate::gp::GpSurrogate;
 use hyppo::surrogate::rbf::RbfSurrogate;
 use hyppo::surrogate::Surrogate;
 use hyppo::uq::LossInterval;
-use hyppo::util::bench::{bench1, black_box};
+use hyppo::util::bench::{black_box, BenchRun};
 
 fn data(n: usize, d: usize, rng: &mut Rng) -> (Vec<Vec<f64>>, Vec<f64>) {
     let xs: Vec<Vec<f64>> = (0..n)
@@ -22,29 +27,30 @@ fn data(n: usize, d: usize, rng: &mut Rng) -> (Vec<Vec<f64>>, Vec<f64>) {
 }
 
 fn main() {
+    let mut run = BenchRun::from_args("bench_surrogates");
     let mut rng = Rng::new(0);
     println!("== surrogate benches (6-D, paper-scale histories) ==");
     for n in [25usize, 100, 400] {
         let (xs, ys) = data(n, 6, &mut rng);
 
-        bench1(&format!("rbf_fit_n{n}"), || {
+        run.bench(&format!("rbf_fit_n{n}"), || {
             let mut m = RbfSurrogate::new();
             black_box(m.fit(&xs, &ys));
         });
         let mut rbf = RbfSurrogate::new();
         rbf.fit(&xs, &ys);
         let q: Vec<f64> = (0..6).map(|_| rng.f64()).collect();
-        bench1(&format!("rbf_predict_n{n}"), || {
+        run.bench(&format!("rbf_predict_n{n}"), || {
             black_box(rbf.predict(&q));
         });
 
-        bench1(&format!("gp_fit_n{n}"), || {
+        run.bench(&format!("gp_fit_n{n}"), || {
             let mut m = GpSurrogate::new();
             black_box(m.fit(&xs, &ys));
         });
         let mut gp = GpSurrogate::new();
         gp.fit(&xs, &ys);
-        bench1(&format!("gp_predict_std_n{n}"), || {
+        run.bench(&format!("gp_predict_std_n{n}"), || {
             black_box(gp.predict_std(&q));
         });
 
@@ -52,7 +58,7 @@ fn main() {
             .iter()
             .map(|y| LossInterval { center: *y, radius: 0.1 * y })
             .collect();
-        bench1(&format!("ensemble8_fit_n{n}"), || {
+        run.bench(&format!("ensemble8_fit_n{n}"), || {
             let mut e = RbfEnsemble::new(8, 1.0);
             let mut r = Rng::new(1);
             black_box(e.fit(&xs, &intervals, &mut r));
@@ -71,7 +77,7 @@ fn main() {
     let (xs, ys) = data(n, 6, &mut rng);
     let (x_new, y_new) = (xs[n - 1].clone(), ys[n - 1]);
 
-    let full_rbf = bench1("rbf_full_refit_n200", || {
+    let full_rbf = run.bench("rbf_full_refit_n200", || {
         let mut m = RbfSurrogate::new();
         black_box(m.fit(&xs, &ys));
     });
@@ -87,27 +93,102 @@ fn main() {
             "incremental extension must succeed at this scale"
         );
     }
-    let incr_rbf = bench1("rbf_incremental_refit_n200", || {
+    let incr_rbf = run.bench("rbf_incremental_refit_n200", || {
         let mut m = rbf_base.clone();
         black_box(m.fit_incremental(&x_new, y_new));
     });
-    println!(
-        "   rbf incremental speedup vs full refit: {:.1}x",
-        full_rbf.median_ns / incr_rbf.median_ns
+    run.ratio(
+        "rbf_incremental_speedup_vs_full_n200",
+        full_rbf.median_ns / incr_rbf.median_ns,
     );
 
-    let full_gp = bench1("gp_full_refit_n200", || {
+    let full_gp = run.bench("gp_full_refit_n200", || {
         let mut m = GpSurrogate::new();
         black_box(m.fit(&xs, &ys));
     });
     let mut gp_base = GpSurrogate::new();
     assert!(gp_base.fit(&xs[..n - 1], &ys[..n - 1]));
-    let incr_gp = bench1("gp_incremental_refit_n200", || {
+    let incr_gp = run.bench("gp_incremental_refit_n200", || {
         let mut m = gp_base.clone();
         black_box(m.fit_incremental(&x_new, y_new));
     });
-    println!(
-        "   gp incremental speedup vs full refit: {:.1}x",
-        full_gp.median_ns / incr_gp.median_ns
+    run.ratio(
+        "gp_incremental_speedup_vs_full_n200",
+        full_gp.median_ns / incr_gp.median_ns,
     );
+
+    // --- batch vs scalar proposal scoring (ISSUE 5 acceptance: ≥5× for
+    //     200-candidate GP scoring at n = 200 training points) ---
+    //
+    // "Scalar" is the pre-batch proposal path: per candidate, `predict`
+    // rebuilds (and heap-allocates) the n-point correlation vector, and
+    // `predict_std` rebuilds it *again* for the variance solve. "Batch"
+    // is `predict_mean_std_batch`: one cross-correlation block per call,
+    // workspace-reused buffers, mean + std (+ EI downstream) amortized
+    // over it. Results are bit-identical (tests/batch.rs).
+    println!("-- batch vs scalar scoring: 200 candidates, n = 200 --");
+    let cands: Vec<Vec<f64>> = (0..200)
+        .map(|_| (0..6).map(|_| rng.f64()).collect())
+        .collect();
+
+    let mut gp200 = GpSurrogate::new();
+    assert!(gp200.fit(&xs, &ys));
+    let scalar_gp = run.bench("gp_score200_scalar_n200", || {
+        for c in &cands {
+            black_box(gp200.predict(c));
+            black_box(gp200.predict_std(c));
+        }
+    });
+    let mut ws = Workspace::new();
+    let (mut mu, mut sd) = (Vec::new(), Vec::new());
+    let batch_gp = run.bench("gp_score200_batch_n200", || {
+        gp200.predict_mean_std_batch(&cands, &mut ws, &mut mu, &mut sd);
+        black_box((mu.last(), sd.last()));
+    });
+    run.ratio(
+        "gp_batch_score_speedup_n200",
+        scalar_gp.median_ns / batch_gp.median_ns,
+    );
+
+    // A dedicated full-n model (rbf_base above holds n-1 points for
+    // the incremental case; the name must match the training size).
+    let mut rbf200 = RbfSurrogate::new();
+    assert!(rbf200.fit(&xs, &ys));
+    let scalar_rbf = run.bench("rbf_score200_scalar_n200", || {
+        for c in &cands {
+            black_box(rbf200.predict(c));
+        }
+    });
+    let mut out = Vec::new();
+    let batch_rbf = run.bench("rbf_score200_batch_n200", || {
+        rbf200.predict_batch(&cands, &mut ws, &mut out);
+        black_box(out.last());
+    });
+    run.ratio(
+        "rbf_batch_score_speedup_n200",
+        scalar_rbf.median_ns / batch_rbf.median_ns,
+    );
+
+    let intervals: Vec<LossInterval> = ys
+        .iter()
+        .map(|y| LossInterval { center: *y, radius: 0.1 * y })
+        .collect();
+    let mut ens = RbfEnsemble::new(8, 1.0);
+    let mut r = Rng::new(5);
+    assert!(ens.fit(&xs, &intervals, &mut r));
+    let scalar_ens = run.bench("ensemble8_score200_scalar_n200", || {
+        for c in &cands {
+            black_box(ens.score(c));
+        }
+    });
+    let batch_ens = run.bench("ensemble8_score200_batch_n200", || {
+        ens.score_batch(&cands, &mut ws, &mut out);
+        black_box(out.last());
+    });
+    run.ratio(
+        "ensemble8_batch_score_speedup_n200",
+        scalar_ens.median_ns / batch_ens.median_ns,
+    );
+
+    run.finish().expect("writing bench json");
 }

@@ -7,43 +7,44 @@ use hyppo::tomo::noise::poisson_noise;
 use hyppo::tomo::phantom::{generate, PhantomConfig};
 use hyppo::tomo::radon::Geometry;
 use hyppo::tomo::sirt::{reconstruct, SirtConfig};
-use hyppo::util::bench::{bench, bench1, black_box};
+use hyppo::util::bench::{black_box, BenchRun};
 use std::time::Duration;
 
 fn main() {
+    let mut run = BenchRun::from_args("bench_tomo");
     println!("== tomography benches (128x128, 16 angles — paper geometry) ==");
     let cfg = PhantomConfig::default();
     let mut rng = Rng::new(0);
     let img = generate(&cfg, &mut rng);
     let g = Geometry::paper(128, 16);
 
-    bench1("phantom_generate_128", || {
+    run.bench("phantom_generate_128", || {
         let mut r = Rng::new(1);
         black_box(generate(&cfg, &mut r));
     });
-    bench1("radon_forward_128x16", || {
+    run.bench("radon_forward_128x16", || {
         black_box(g.forward(&img));
     });
     let sino = g.forward(&img);
-    bench1("radon_back_128x16", || {
+    run.bench("radon_back_128x16", || {
         black_box(g.back(&sino));
     });
     // §Perf: the precomputed-table projector vs the reference pair.
     let proj = hyppo::tomo::radon::Projector::new(g.clone());
-    bench1("projector_build_128x16", || {
+    run.bench("projector_build_128x16", || {
         black_box(hyppo::tomo::radon::Projector::new(g.clone()));
     });
-    bench1("projector_forward_128x16", || {
+    run.bench("projector_forward_128x16", || {
         black_box(proj.forward(&img));
     });
-    bench1("projector_back_128x16", || {
+    run.bench("projector_back_128x16", || {
         black_box(proj.back(&sino));
     });
-    bench1("poisson_noise_sino", || {
+    run.bench("poisson_noise_sino", || {
         let mut r = Rng::new(2);
         black_box(poisson_noise(&sino, 50.0, &mut r));
     });
-    bench(
+    run.bench_with(
         "sirt_10iters_128x16",
         Duration::from_secs(3),
         || {
@@ -60,13 +61,15 @@ fn main() {
         &SirtConfig { iterations: 30, nonneg: true },
     )
     .image;
-    bench1("metric_mse_128", || {
+    run.bench("metric_mse_128", || {
         black_box(mse(&img, &recon));
     });
-    bench1("metric_psnr_128", || {
+    run.bench("metric_psnr_128", || {
         black_box(psnr(&img, &recon));
     });
-    bench1("metric_ssim_128", || {
+    run.bench("metric_ssim_128", || {
         black_box(ssim(&img, &recon));
     });
+
+    run.finish().expect("writing bench json");
 }

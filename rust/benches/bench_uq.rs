@@ -4,7 +4,7 @@
 
 use hyppo::sampling::Rng;
 use hyppo::uq::{mad, median, PredictionSet, UqWeights};
-use hyppo::util::bench::{bench1, black_box};
+use hyppo::util::bench::{black_box, BenchRun};
 
 fn prediction_set(n: usize, t: usize, d: usize, rng: &mut Rng) -> PredictionSet {
     PredictionSet {
@@ -22,23 +22,26 @@ fn prediction_set(n: usize, t: usize, d: usize, rng: &mut Rng) -> PredictionSet 
 }
 
 fn main() {
+    let mut run = BenchRun::from_args("bench_uq");
     let mut rng = Rng::new(0);
     println!("== UQ benches (N=5, T=30, paper defaults) ==");
     let w = UqWeights::default_paper();
     for d in [32usize, 512, 2048] {
         let set = prediction_set(5, 30, d, &mut rng);
-        bench1(&format!("mu_pred_d{d}"), || {
+        run.bench(&format!("mu_pred_d{d}"), || {
             black_box(set.mu_pred(w));
         });
-        bench1(&format!("v_model_d{d}"), || {
+        run.bench(&format!("v_model_d{d}"), || {
             black_box(set.v_model(w));
         });
     }
     let losses: Vec<f64> = (0..50).map(|_| rng.normal().abs()).collect();
-    bench1("median_50", || {
+    run.bench("median_50", || {
         black_box(median(&losses));
     });
-    bench1("mad_50", || {
+    run.bench("mad_50", || {
         black_box(mad(&losses));
     });
+
+    run.finish().expect("writing bench json");
 }

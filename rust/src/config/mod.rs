@@ -15,6 +15,7 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cluster::{ParallelMode, Topology};
+use crate::optimizer::candidates::CandidateConfig;
 use crate::optimizer::{HpoConfig, InitDesign, SurrogateKind};
 use crate::space::{ParamSpec, Space};
 use crate::uq::UqWeights;
@@ -354,6 +355,8 @@ fn build_param(name: &str, v: &Value) -> Result<ParamSpec> {
 /// seed = 0
 /// init_design = "random"   # random | lhs | halton
 /// w_trained = 0.5
+/// n_candidates = 200       # candidate-set size per proposal
+/// scoring_threads = 1      # parallel proposal scoring (bit-identical)
 ///
 /// [cluster]
 /// steps = 4
@@ -411,6 +414,7 @@ pub fn build(doc: &Doc) -> Result<RunConfig> {
         other => bail!("unknown init_design {other:?}"),
     };
     let w_trained = getf("w_trained", 0.5);
+    let cand_defaults = CandidateConfig::default();
     let hpo = HpoConfig {
         max_evaluations: geti("max_evaluations", 50) as usize,
         n_init: geti("n_init", 10) as usize,
@@ -420,6 +424,15 @@ pub fn build(doc: &Doc) -> Result<RunConfig> {
         gamma: getf("gamma", 0.0),
         seed: geti("seed", 0) as u64,
         init_design,
+        candidates: CandidateConfig {
+            n_candidates: geti(
+                "n_candidates",
+                cand_defaults.n_candidates as i64,
+            )
+            .max(1) as usize,
+            scoring_threads: geti("scoring_threads", 1).max(1) as usize,
+            ..cand_defaults
+        },
         ..Default::default()
     };
 
@@ -465,6 +478,8 @@ alpha = -1.5
 seed = 42
 init_design = "lhs"
 w_trained = 0.3
+n_candidates = 120
+scoring_threads = 4
 
 [cluster]
 steps = 4
@@ -503,6 +518,20 @@ width_idx = [0, 2]
         assert_eq!(cfg.topology, Topology::new(4, 2));
         assert_eq!(cfg.mode, ParallelMode::DataParallel);
         assert!((cfg.hpo.weights.w_trained - 0.3).abs() < 1e-12);
+        assert_eq!(cfg.hpo.candidates.n_candidates, 120);
+        assert_eq!(cfg.hpo.candidates.scoring_threads, 4);
+    }
+
+    #[test]
+    fn candidate_knobs_default_and_clamp() {
+        let minimal = "[space]\na = [0, 3]\n";
+        let cfg = build(&parse(minimal).unwrap()).unwrap();
+        assert_eq!(cfg.hpo.candidates.n_candidates, 200);
+        assert_eq!(cfg.hpo.candidates.scoring_threads, 1);
+        // Zero / negative thread counts clamp to sequential.
+        let zero = "[hpo]\nscoring_threads = 0\n[space]\na = [0, 3]\n";
+        let cfg = build(&parse(zero).unwrap()).unwrap();
+        assert_eq!(cfg.hpo.candidates.scoring_threads, 1);
     }
 
     #[test]

@@ -4,6 +4,49 @@
 //! partial pivoting (the RBF saddle system of Eq. 10 is symmetric but
 //! *indefinite*, so Cholesky does not apply), and Cholesky for the SPD
 //! Gaussian-process covariances.
+//!
+//! The batched proposal path (DESIGN.md §11) additionally relies on the
+//! allocation-free variants: every solver has an `_into` form writing
+//! into caller-owned buffers, factorizations expose multi-RHS
+//! `solve_many`, and [`Workspace`] pools scratch buffers so a whole
+//! candidate batch is scored without per-point heap traffic. All `_into`
+//! and `_many` forms perform the identical floating-point operation
+//! sequence as their scalar counterparts — callers may mix them freely
+//! without perturbing results by a single ULP.
+
+/// Pool of reusable `Vec<f64>` scratch buffers for the batched hot path.
+///
+/// `take` hands out a zeroed buffer of the requested length, reusing a
+/// previously `give`n allocation when one is available: a whole
+/// candidate batch is scored with O(1) buffer allocations (amortized to
+/// zero while a workspace is kept alive across calls) instead of the
+/// per-candidate heap traffic of the scalar path. The pool is
+/// deliberately type-dumb (plain `Vec<f64>`s) so one workspace serves
+/// correlation rows, solve buffers, and score vectors alike.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pool: Vec<Vec<f64>>,
+}
+
+impl Workspace {
+    /// An empty pool; buffers are created on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Borrow a zero-filled buffer of length `len`.
+    pub fn take(&mut self, len: usize) -> Vec<f64> {
+        let mut b = self.pool.pop().unwrap_or_default();
+        b.clear();
+        b.resize(len, 0.0);
+        b
+    }
+
+    /// Return a buffer to the pool for later reuse.
+    pub fn give(&mut self, buf: Vec<f64>) {
+        self.pool.push(buf);
+    }
+}
 
 /// Row-major dense matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -44,16 +87,61 @@ impl Mat {
 
     /// Matrix-vector product.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows];
+        self.matvec_into(x, &mut out);
+        out
+    }
+
+    /// Matrix-vector product into a caller-owned buffer (no allocation).
+    /// Identical accumulation order to [`Mat::matvec`].
+    pub fn matvec_into(&self, x: &[f64], out: &mut [f64]) {
         assert_eq!(x.len(), self.cols);
-        (0..self.rows)
-            .map(|i| {
-                self.row(i)
-                    .iter()
-                    .zip(x)
-                    .map(|(a, b)| a * b)
-                    .sum()
-            })
-            .collect()
+        assert_eq!(out.len(), self.rows);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self
+                .row(i)
+                .iter()
+                .zip(x)
+                .map(|(a, b)| a * b)
+                .sum();
+        }
+    }
+
+    /// Blocked matrix-matrix product `self · other` (i-k-j loop order
+    /// over cache-sized tiles, so the innermost loop streams contiguous
+    /// rows of both the accumulator and `other`).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul dimension mismatch: {}x{} · {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        const BLOCK: usize = 64;
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i0 in (0..m).step_by(BLOCK) {
+            for k0 in (0..k).step_by(BLOCK) {
+                for j0 in (0..n).step_by(BLOCK) {
+                    let jend = (j0 + BLOCK).min(n);
+                    for i in i0..(i0 + BLOCK).min(m) {
+                        let a_row = &self.data[i * k..(i + 1) * k];
+                        let o_row =
+                            &mut out.data[i * n + j0..i * n + jend];
+                        for kk in k0..(k0 + BLOCK).min(k) {
+                            let a = a_row[kk];
+                            let b_row =
+                                &other.data[kk * n + j0..kk * n + jend];
+                            for (o, b) in
+                                o_row.iter_mut().zip(b_row)
+                            {
+                                *o += a * b;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
     }
 }
 
@@ -129,10 +217,44 @@ pub fn lu_factor(a: &Mat) -> Option<LuFactors> {
 impl LuFactors {
     /// Solve `A x = b` using the stored factors (O(n²)).
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
-        let n = self.n;
-        assert_eq!(b.len(), n);
+        let mut x = Vec::new();
+        self.solve_into(b, &mut x);
+        x
+    }
+
+    /// [`LuFactors::solve`] into a caller-owned buffer (no allocation
+    /// when `x` has capacity). Same operation sequence as `solve`.
+    pub fn solve_into(&self, b: &[f64], x: &mut Vec<f64>) {
+        assert_eq!(b.len(), self.n);
         // Apply the row permutation, then forward/back substitution.
-        let mut x: Vec<f64> = self.perm.iter().map(|&p| b[p]).collect();
+        x.clear();
+        x.extend(self.perm.iter().map(|&p| b[p]));
+        self.substitute(x);
+    }
+
+    /// Solve `A X = B` for every column of `B` over the one stored
+    /// factorization (multi-RHS, O(n²) per column; one scratch buffer
+    /// reused across columns).
+    pub fn solve_many(&self, b: &Mat) -> Mat {
+        let n = self.n;
+        assert_eq!(b.rows, n, "solve_many needs n-row right-hand sides");
+        let mut out = Mat::zeros(n, b.cols);
+        let mut col = vec![0.0; n];
+        for j in 0..b.cols {
+            for (i, c) in col.iter_mut().enumerate() {
+                *c = b[(self.perm[i], j)];
+            }
+            self.substitute(&mut col);
+            for (i, c) in col.iter().enumerate() {
+                out[(i, j)] = *c;
+            }
+        }
+        out
+    }
+
+    /// Forward/back substitution on an already-permuted vector.
+    fn substitute(&self, x: &mut [f64]) {
+        let n = self.n;
         for i in 0..n {
             for j in 0..i {
                 x[i] -= self.lu[i * n + j] * x[j];
@@ -144,7 +266,6 @@ impl LuFactors {
             }
             x[i] /= self.lu[i * n + i];
         }
-        x
     }
 }
 
@@ -155,22 +276,12 @@ pub fn lu_solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
     Some(lu_factor(a)?.solve(b))
 }
 
-/// Dense inverse via LU: one factorization plus n unit-vector solves.
-/// Returns `None` when `A` is numerically singular.
+/// Dense inverse via LU: one factorization plus an n-column multi-RHS
+/// solve against the identity. Returns `None` when `A` is numerically
+/// singular.
 pub fn invert(a: &Mat) -> Option<Mat> {
-    let n = a.rows;
     let f = lu_factor(a)?;
-    let mut inv = Mat::zeros(n, n);
-    let mut e = vec![0.0; n];
-    for j in 0..n {
-        e[j] = 1.0;
-        let col = f.solve(&e);
-        e[j] = 0.0;
-        for i in 0..n {
-            inv[(i, j)] = col[i];
-        }
-    }
-    Some(inv)
+    Some(f.solve_many(&Mat::eye(a.rows)))
 }
 
 /// Cholesky factorization of an SPD matrix: returns lower-triangular `L`
@@ -200,35 +311,78 @@ pub fn cholesky(a: &Mat) -> Option<Mat> {
 
 /// Solve `L y = b` (forward) then `L^T x = y` (backward).
 pub fn cholesky_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let mut y = Vec::new();
+    cholesky_solve_into(l, b, &mut y);
+    y
+}
+
+/// [`cholesky_solve`] into a caller-owned buffer (no allocation when
+/// `y` has capacity). Same operation sequence.
+pub fn cholesky_solve_into(l: &Mat, b: &[f64], y: &mut Vec<f64>) {
+    assert_eq!(b.len(), l.rows);
+    y.clear();
+    y.extend_from_slice(b);
+    forward_substitute(l, y);
+    backward_substitute(l, y);
+}
+
+/// Solve `L L^T X = B` for every column of `B` over one Cholesky factor
+/// (multi-RHS; one scratch buffer reused across columns).
+pub fn cholesky_solve_many(l: &Mat, b: &Mat) -> Mat {
     let n = l.rows;
-    assert_eq!(b.len(), n);
-    let mut y = b.to_vec();
+    assert_eq!(b.rows, n, "cholesky_solve_many needs n-row RHS");
+    let mut out = Mat::zeros(n, b.cols);
+    let mut col = vec![0.0; n];
+    for j in 0..b.cols {
+        for (i, c) in col.iter_mut().enumerate() {
+            *c = b[(i, j)];
+        }
+        forward_substitute(l, &mut col);
+        backward_substitute(l, &mut col);
+        for (i, c) in col.iter().enumerate() {
+            out[(i, j)] = *c;
+        }
+    }
+    out
+}
+
+/// Solve only the forward half `L y = b` (used for GP variance terms).
+pub fn forward_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let mut y = Vec::new();
+    forward_solve_into(l, b, &mut y);
+    y
+}
+
+/// [`forward_solve`] into a caller-owned buffer — the per-candidate
+/// variance solve of the batched GP path runs through this with one
+/// [`Workspace`] buffer for the whole candidate set.
+pub fn forward_solve_into(l: &Mat, b: &[f64], y: &mut Vec<f64>) {
+    assert_eq!(b.len(), l.rows);
+    y.clear();
+    y.extend_from_slice(b);
+    forward_substitute(l, y);
+}
+
+/// In-place forward substitution `y ← L⁻¹ y`.
+fn forward_substitute(l: &Mat, y: &mut [f64]) {
+    let n = l.rows;
     for i in 0..n {
         for k in 0..i {
             y[i] -= l[(i, k)] * y[k];
         }
         y[i] /= l[(i, i)];
     }
+}
+
+/// In-place backward substitution `y ← L⁻ᵀ y`.
+fn backward_substitute(l: &Mat, y: &mut [f64]) {
+    let n = l.rows;
     for i in (0..n).rev() {
         for k in (i + 1)..n {
             y[i] -= l[(k, i)] * y[k];
         }
         y[i] /= l[(i, i)];
     }
-    y
-}
-
-/// Solve only the forward half `L y = b` (used for GP variance terms).
-pub fn forward_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
-    let n = l.rows;
-    let mut y = b.to_vec();
-    for i in 0..n {
-        for k in 0..i {
-            y[i] -= l[(i, k)] * y[k];
-        }
-        y[i] /= l[(i, i)];
-    }
-    y
 }
 
 #[cfg(test)]
@@ -380,5 +534,149 @@ mod tests {
         let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
         assert!(invert(&a).is_none());
         assert!(lu_factor(&a).is_none());
+    }
+
+    #[test]
+    fn matvec_into_is_bitwise_matvec() {
+        forall("matvec_into == matvec", 30, |rng| {
+            let n = 1 + rng.usize_below(20);
+            let a = random_mat(n, rng);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut out = vec![f64::NAN; n];
+            a.matvec_into(&x, &mut out);
+            let want = a.matvec(&x);
+            for (o, w) in out.iter().zip(&want) {
+                prop_assert!(o.to_bits() == w.to_bits(), "{o} vs {w}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matmul_matches_naive_product_bitwise() {
+        forall("matmul == naive", 25, |rng| {
+            let (m, k, n) = (
+                1 + rng.usize_below(70),
+                1 + rng.usize_below(70),
+                1 + rng.usize_below(70),
+            );
+            let mut a = Mat::zeros(m, k);
+            let mut b = Mat::zeros(k, n);
+            for v in a.data.iter_mut() {
+                *v = rng.normal();
+            }
+            for v in b.data.iter_mut() {
+                *v = rng.normal();
+            }
+            let c = a.matmul(&b);
+            // Naive triple loop in the same ascending-k accumulation
+            // order the blocked kernel guarantees per output element.
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f64 = (0..k)
+                        .map(|kk| a[(i, kk)] * b[(kk, j)])
+                        .sum();
+                    prop_assert!(
+                        c[(i, j)].to_bits() == want.to_bits(),
+                        "({i},{j}): {} vs {want}",
+                        c[(i, j)]
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn solve_many_is_bitwise_columnwise_solve() {
+        forall("solve_many == per-column solve", 25, |rng| {
+            let n = 2 + rng.usize_below(12);
+            let a = random_mat(n, rng);
+            let Some(f) = lu_factor(&a) else {
+                return Ok(());
+            };
+            let ncols = 1 + rng.usize_below(5);
+            let mut b = Mat::zeros(n, ncols);
+            for v in b.data.iter_mut() {
+                *v = rng.normal();
+            }
+            let many = f.solve_many(&b);
+            for j in 0..ncols {
+                let col: Vec<f64> = (0..n).map(|i| b[(i, j)]).collect();
+                let x = f.solve(&col);
+                for (i, xi) in x.iter().enumerate() {
+                    prop_assert!(
+                        many[(i, j)].to_bits() == xi.to_bits(),
+                        "({i},{j}): {} vs {xi}",
+                        many[(i, j)]
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cholesky_solve_many_is_bitwise_columnwise() {
+        forall("cholesky_solve_many == per-column", 25, |rng| {
+            let n = 2 + rng.usize_below(10);
+            let g = random_mat(n, rng);
+            let mut a = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for k in 0..n {
+                        s += g[(i, k)] * g[(j, k)];
+                    }
+                    a[(i, j)] = s + if i == j { n as f64 } else { 0.0 };
+                }
+            }
+            let l = cholesky(&a).ok_or("not SPD?".to_string())?;
+            let ncols = 1 + rng.usize_below(4);
+            let mut b = Mat::zeros(n, ncols);
+            for v in b.data.iter_mut() {
+                *v = rng.normal();
+            }
+            let many = cholesky_solve_many(&l, &b);
+            for j in 0..ncols {
+                let col: Vec<f64> = (0..n).map(|i| b[(i, j)]).collect();
+                let x = cholesky_solve(&l, &col);
+                let mut fwd = Vec::new();
+                forward_solve_into(&l, &col, &mut fwd);
+                let fwd_ref = forward_solve(&l, &col);
+                for (i, xi) in x.iter().enumerate() {
+                    prop_assert!(
+                        many[(i, j)].to_bits() == xi.to_bits(),
+                        "({i},{j}): {} vs {xi}",
+                        many[(i, j)]
+                    );
+                    prop_assert!(
+                        fwd[i].to_bits() == fwd_ref[i].to_bits(),
+                        "forward_solve_into diverged at {i}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn workspace_reuses_allocations_and_zeroes() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take(8);
+        a.iter_mut().for_each(|v| *v = 7.0);
+        let cap = a.capacity();
+        let ptr = a.as_ptr();
+        ws.give(a);
+        let b = ws.take(4);
+        assert_eq!(b.len(), 4);
+        assert!(b.iter().all(|v| *v == 0.0), "stale data leaked");
+        assert_eq!(b.as_ptr(), ptr, "allocation was not reused");
+        assert!(b.capacity() >= cap.min(8));
+        // A second take while the first is out must still work.
+        let c = ws.take(16);
+        assert_eq!(c.len(), 16);
+        ws.give(b);
+        ws.give(c);
     }
 }

@@ -39,8 +39,10 @@ USAGE:
             [--checkpoint ckpt.json] [--resume ckpt.json]
             [--max-completions N] [--time-scale S]
             [--adaptive-trials STD [--max-trials N]]
+            [--scoring-threads N]
   hyppo sweep --config <file.toml> [--backend synthetic|mlp]
             [--seeds 0,1,2] [--topologies 1x1,4x2] [--out sweep.csv]
+            [--scoring-threads N]
   hyppo slurm [--steps N] [--tasks M] [--cpu]
   hyppo artifacts [--family mlp|cnn|unet]
   hyppo speedup [--steps N] [--tasks M] [--evals E] [--trials T]
@@ -177,6 +179,14 @@ fn cmd_run(args: &Args) -> Result<()> {
         exec_cfg.max_completions =
             Some(n.parse().context("--max-completions must be a count")?);
     }
+    if let Some(raw) = args.get("scoring-threads") {
+        // Purely a throughput knob: proposals are bit-identical for any
+        // thread count (DESIGN.md §11), so this never changes results.
+        let threads: usize = raw
+            .parse()
+            .context("--scoring-threads must be a thread count")?;
+        exec_cfg.hpo.candidates.scoring_threads = threads.max(1);
+    }
     if let Some(raw) = args.get("adaptive-trials") {
         // Paper's trial-level uncertainty accounting, made adaptive:
         // rerun a θ (extra UQ replicas) while its trained-loss spread
@@ -225,6 +235,14 @@ fn cmd_run(args: &Args) -> Result<()> {
             "status: partial (resume with --resume)"
         },
     );
+    if s.refits.exhausted_candidate_sets > 0 {
+        // Aggregated once here instead of a stderr line per proposal.
+        println!(
+            "note: {} candidate set(s) came back short (search space \
+             small or nearly exhausted)",
+            s.refits.exhausted_candidate_sets
+        );
+    }
     if let Some(out_path) = args.get("out") {
         write_history_csv(&out.history, cfg.hpo.gamma, out_path)?;
         println!("history -> {out_path}");
@@ -285,12 +303,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let seeds = parse_seeds(args, cfg.hpo.seed)?;
     let topologies = parse_topologies(args, cfg.topology)?;
 
-    let base = ExecConfig::new(
+    let mut base = ExecConfig::new(
         cfg.hpo.clone(),
         cfg.topology,
         cfg.mode,
         args.f64_or("time-scale", default_time_scale(&backend)),
     );
+    if let Some(raw) = args.get("scoring-threads") {
+        let threads: usize = raw
+            .parse()
+            .context("--scoring-threads must be a thread count")?;
+        base.hpo.candidates.scoring_threads = threads.max(1);
+    }
     let cells = run_sweep(
         |seed| make_evaluator(&backend, &cfg, engine.as_ref(), seed),
         &base,

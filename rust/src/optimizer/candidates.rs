@@ -8,9 +8,18 @@
 //! distance-to-evaluated-points rank; the weight cycles through a fixed
 //! pattern to alternate between local exploitation (high weight on the
 //! predicted value) and global exploration (high weight on distance).
+//!
+//! Scoring is the proposal hot path: distances are computed once per
+//! candidate set (optionally fanned out over deterministic thread chunks,
+//! see [`crate::util::par`]) and reused across every weight, and
+//! generation dedups through a `HashSet` instead of the historical O(n²)
+//! linear scans.
+
+use std::collections::HashSet;
 
 use crate::sampling::rng::Rng;
 use crate::space::{Point, Space, Value};
+use crate::util::par::par_chunks_stable;
 
 /// The cycling value-vs-distance weights of [25].
 pub const WEIGHT_CYCLE: [f64; 4] = [0.3, 0.5, 0.8, 0.95];
@@ -24,12 +33,37 @@ pub struct CandidateConfig {
     pub p_mutate: f64,
     /// Relative perturbation scale (fraction of each range).
     pub sigma: f64,
+    /// Scoped worker threads for candidate/fitness scoring (1 =
+    /// sequential). Proposals are bit-identical for every value — the
+    /// deterministic-chunking rule of DESIGN.md §11, asserted at 1/2/8
+    /// threads in `tests/exec.rs` — so this is purely a throughput knob.
+    pub scoring_threads: usize,
 }
 
 impl Default for CandidateConfig {
     fn default() -> Self {
-        CandidateConfig { n_candidates: 200, p_mutate: 0.5, sigma: 0.1 }
+        CandidateConfig {
+            n_candidates: 200,
+            p_mutate: 0.5,
+            sigma: 0.1,
+            scoring_threads: 1,
+        }
     }
+}
+
+/// A generated candidate set plus generation metadata — the guard-loop
+/// outcome is surfaced to the caller instead of spamming stderr.
+#[derive(Debug, Clone)]
+pub struct Generated {
+    /// The candidate points (deduplicated, never already-evaluated).
+    pub points: Vec<Point>,
+    /// True when the attempt budget (`n_candidates * 20`) ran out before
+    /// the set was filled — expected on small or nearly-exhausted
+    /// spaces; callers should treat the short set as a signal that the
+    /// space is close to fully explored.
+    pub exhausted: bool,
+    /// Perturb/sample attempts consumed.
+    pub attempts: usize,
 }
 
 /// Generate the candidate set, excluding already-evaluated points.
@@ -39,28 +73,37 @@ pub fn generate(
     evaluated: &[Point],
     cfg: &CandidateConfig,
     rng: &mut Rng,
-) -> Vec<Point> {
+) -> Generated {
     let mut out: Vec<Point> = Vec::with_capacity(cfg.n_candidates);
+    // O(1) membership per attempt instead of the former O(n) scans over
+    // both lists. The evaluated history is indexed by reference — no
+    // per-proposal deep clone of the whole history; only accepted
+    // candidates (bounded by n_candidates) are cloned into `chosen`.
+    let evaluated_set: HashSet<&Point> = evaluated.iter().collect();
+    let mut chosen: HashSet<Point> =
+        HashSet::with_capacity(cfg.n_candidates);
     let half = cfg.n_candidates / 2;
-    let mut guard = 0;
-    while out.len() < cfg.n_candidates && guard < cfg.n_candidates * 20 {
-        guard += 1;
+    let mut attempts = 0;
+    while out.len() < cfg.n_candidates && attempts < cfg.n_candidates * 20
+    {
+        attempts += 1;
         let cand = if out.len() < half {
             space.perturb(best, cfg.p_mutate, cfg.sigma, rng)
         } else {
             space.random_point(rng)
         };
-        if evaluated.iter().any(|e| e == &cand)
-            || out.iter().any(|e| e == &cand)
-        {
+        if evaluated_set.contains(&cand) || chosen.contains(&cand) {
             continue;
         }
+        chosen.insert(cand.clone());
         out.push(cand);
     }
-    out
+    let exhausted = out.len() < cfg.n_candidates;
+    Generated { points: out, exhausted, attempts }
 }
 
-/// Score candidates and return the best one.
+/// Score candidates and return the best one (sequential convenience
+/// over [`select_threaded`]).
 ///
 /// `values[i]` is the surrogate prediction for `candidates[i]` (lower is
 /// better). `weight` ∈ [0,1] is the emphasis on the predicted value; the
@@ -73,51 +116,159 @@ pub fn select(
     evaluated: &[Point],
     weight: f64,
 ) -> Option<usize> {
+    select_threaded(space, candidates, values, evaluated, weight, 1)
+}
+
+/// [`select`] with the distance pass fanned out over `threads` scoped
+/// workers. Bit-identical to the sequential path for every thread count
+/// (deterministic contiguous chunking; each candidate's minimum distance
+/// depends on nothing but the candidate itself).
+pub fn select_threaded(
+    space: &Space,
+    candidates: &[Point],
+    values: &[f64],
+    evaluated: &[Point],
+    weight: f64,
+    threads: usize,
+) -> Option<usize> {
+    select_many(space, candidates, values, evaluated, &[weight], threads)
+        .pop()
+        .flatten()
+}
+
+/// [`select_threaded`] over candidates that are **already encoded** —
+/// the proposer encodes the candidate set once and shares the feature
+/// vectors between surrogate scoring and this distance ranking, so no
+/// candidate is encoded twice per proposal.
+pub fn select_encoded(
+    space: &Space,
+    encoded: &[Vec<f64>],
+    values: &[f64],
+    evaluated: &[Point],
+    weight: f64,
+    threads: usize,
+) -> Option<usize> {
+    select_many_encoded(
+        space,
+        encoded,
+        values,
+        evaluated,
+        &[weight],
+        threads,
+    )
+    .pop()
+    .flatten()
+}
+
+/// Select the best candidate for **each** weight over one shared
+/// distance/normalization pass: candidate encodings, distances,
+/// `min`/`max` ranges, and the normalized rank buffers are computed
+/// once and reused per weight instead of re-collected per call.
+pub fn select_many(
+    space: &Space,
+    candidates: &[Point],
+    values: &[f64],
+    evaluated: &[Point],
+    weights: &[f64],
+    threads: usize,
+) -> Vec<Option<usize>> {
     assert_eq!(candidates.len(), values.len());
     if candidates.is_empty() {
-        return None;
+        return vec![None; weights.len()];
     }
-    // Encode once: dist2() would re-allocate feature vectors per pair,
-    // which dominated this function in profiling (§Perf: 4.9x). The
-    // encoding layer's feature space is shared with the surrogates, so
-    // categorical blocks weigh into the distance rank consistently.
-    let eval_units: Vec<Vec<f64>> =
-        evaluated.iter().map(|e| space.encode(e)).collect();
-    let dists: Vec<f64> = candidates
-        .iter()
-        .map(|c| {
-            let cu = space.encode(c);
-            eval_units
-                .iter()
-                .map(|eu| {
-                    cu.iter()
-                        .zip(eu)
-                        .map(|(a, b)| (a - b) * (a - b))
-                        .sum::<f64>()
-                        .sqrt()
-                })
-                .fold(f64::INFINITY, f64::min)
-        })
-        .collect();
+    let encoded: Vec<Vec<f64>> =
+        par_chunks_stable(candidates, threads, |chunk| {
+            chunk.iter().map(|c| space.encode(c)).collect()
+        });
+    select_many_encoded(space, &encoded, values, evaluated, weights, threads)
+}
+
+/// The shared scoring core over pre-encoded candidates.
+pub fn select_many_encoded(
+    space: &Space,
+    encoded: &[Vec<f64>],
+    values: &[f64],
+    evaluated: &[Point],
+    weights: &[f64],
+    threads: usize,
+) -> Vec<Option<usize>> {
+    assert_eq!(encoded.len(), values.len());
+    if encoded.is_empty() {
+        return vec![None; weights.len()];
+    }
+    let dists = min_dists(space, encoded, evaluated, threads);
 
     let (vmin, vmax) = min_max(values);
     let (dmin, dmax) = min_max(&dists);
-    let score = |i: usize| {
-        let v_norm = if vmax > vmin {
-            (values[i] - vmin) / (vmax - vmin)
-        } else {
-            0.0
-        };
-        // Large distance is good -> low score contribution.
-        let d_norm = if dmax > dmin {
-            (dmax - dists[i]) / (dmax - dmin)
-        } else {
-            0.0
-        };
-        weight * v_norm + (1.0 - weight) * d_norm
-    };
-    (0..candidates.len()).min_by(|&a, &b| {
-        score(a).partial_cmp(&score(b)).unwrap()
+    // Normalized ranks, one buffer each, shared by every weight.
+    let v_norm: Vec<f64> = values
+        .iter()
+        .map(|v| if vmax > vmin { (v - vmin) / (vmax - vmin) } else { 0.0 })
+        .collect();
+    // Large distance is good -> low score contribution.
+    let d_norm: Vec<f64> = dists
+        .iter()
+        .map(|d| if dmax > dmin { (dmax - d) / (dmax - dmin) } else { 0.0 })
+        .collect();
+
+    weights
+        .iter()
+        .map(|&weight| {
+            let mut best: Option<(usize, f64)> = None;
+            for (i, (v, d)) in v_norm.iter().zip(&d_norm).enumerate() {
+                let s = weight * v + (1.0 - weight) * d;
+                match best {
+                    None => best = Some((i, s)),
+                    Some((_, bs)) => match s.partial_cmp(&bs) {
+                        // Strict Less keeps the first of equal minima —
+                        // the tie-break `Iterator::min_by` applied
+                        // historically.
+                        Some(std::cmp::Ordering::Less) => {
+                            best = Some((i, s));
+                        }
+                        Some(_) => {}
+                        // A NaN surrogate value must fail loudly (as
+                        // the historical min_by unwrap did), not get
+                        // silently proposed.
+                        None => panic!(
+                            "NaN candidate score at index {i}"
+                        ),
+                    },
+                }
+            }
+            best.map(|(i, _)| i)
+        })
+        .collect()
+}
+
+/// Per-candidate minimum distance (in the shared encoded feature space,
+/// so categorical blocks weigh in consistently with the surrogates) to
+/// the evaluated set. Encode-once + optional deterministic fan-out; this
+/// dominated `select` in profiling (§Perf: 4.9x from encode-once alone).
+fn min_dists(
+    space: &Space,
+    encoded: &[Vec<f64>],
+    evaluated: &[Point],
+    threads: usize,
+) -> Vec<f64> {
+    let eval_units: Vec<Vec<f64>> =
+        evaluated.iter().map(|e| space.encode(e)).collect();
+    par_chunks_stable(encoded, threads, |chunk| {
+        chunk
+            .iter()
+            .map(|cu| {
+                eval_units
+                    .iter()
+                    .map(|eu| {
+                        cu.iter()
+                            .zip(eu)
+                            .map(|(a, b)| (a - b) * (a - b))
+                            .sum::<f64>()
+                            .sqrt()
+                    })
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect()
     })
 }
 
@@ -148,14 +299,16 @@ mod tests {
             let best = sp.random_point(rng);
             let evaluated: Vec<Point> =
                 (0..10).map(|_| sp.random_point(rng)).collect();
-            let cands = generate(
+            let gen = generate(
                 &sp,
                 &best,
                 &evaluated,
                 &CandidateConfig::default(),
                 rng,
             );
+            let cands = gen.points;
             prop_assert!(!cands.is_empty(), "no candidates");
+            prop_assert!(gen.attempts >= cands.len(), "attempt count");
             for c in &cands {
                 prop_assert!(sp.contains(c), "{c:?} out of bounds");
                 prop_assert!(
@@ -170,6 +323,40 @@ mod tests {
             prop_assert!(s.len() == cands.len(), "duplicate candidates");
             Ok(())
         });
+    }
+
+    #[test]
+    fn generate_flags_exhaustion_on_tiny_spaces() {
+        // A 2x2 lattice has 4 points; asking for 200 candidates must
+        // come back short with the exhausted flag set (and no stderr).
+        let sp = Space::new(vec![
+            ParamSpec::new("a", 0, 1),
+            ParamSpec::new("b", 0, 1),
+        ]);
+        let mut rng = Rng::new(3);
+        let best = sp.random_point(&mut rng);
+        let gen = generate(
+            &sp,
+            &best,
+            &[],
+            &CandidateConfig::default(),
+            &mut rng,
+        );
+        assert!(gen.exhausted);
+        assert!(gen.points.len() <= 4);
+        assert_eq!(gen.attempts, 200 * 20);
+
+        // A large space fills the set without exhaustion.
+        let sp = space();
+        let gen = generate(
+            &sp,
+            &sp.random_point(&mut rng),
+            &[],
+            &CandidateConfig::default(),
+            &mut rng,
+        );
+        assert!(!gen.exhausted);
+        assert_eq!(gen.points.len(), 200);
     }
 
     #[test]
@@ -191,6 +378,87 @@ mod tests {
     fn select_empty_returns_none() {
         let sp = space();
         assert!(select(&sp, &[], &[], &[], 0.5).is_none());
+        assert_eq!(
+            select_many(&sp, &[], &[], &[], &[0.3, 0.8], 4),
+            vec![None, None]
+        );
+    }
+
+    #[test]
+    fn select_many_matches_individual_selects() {
+        let sp = space();
+        forall("select_many == per-weight select", 20, |rng| {
+            let evaluated: Vec<Point> =
+                (0..8).map(|_| sp.random_point(rng)).collect();
+            let cands: Vec<Point> =
+                (0..40).map(|_| sp.random_point(rng)).collect();
+            let values: Vec<f64> =
+                (0..cands.len()).map(|_| rng.normal()).collect();
+            let many = select_many(
+                &sp,
+                &cands,
+                &values,
+                &evaluated,
+                &WEIGHT_CYCLE,
+                1,
+            );
+            for (w, got) in WEIGHT_CYCLE.iter().zip(&many) {
+                let want =
+                    select(&sp, &cands, &values, &evaluated, *w);
+                prop_assert!(
+                    *got == want,
+                    "weight {w}: {got:?} vs {want:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn select_encoded_matches_point_level_select() {
+        let sp = space();
+        forall("select_encoded == select", 15, |rng| {
+            let evaluated: Vec<Point> =
+                (0..6).map(|_| sp.random_point(rng)).collect();
+            let cands: Vec<Point> =
+                (0..30).map(|_| sp.random_point(rng)).collect();
+            let values: Vec<f64> =
+                (0..cands.len()).map(|_| rng.normal()).collect();
+            let encoded: Vec<Vec<f64>> =
+                cands.iter().map(|c| sp.encode(c)).collect();
+            for w in WEIGHT_CYCLE {
+                let a = select(&sp, &cands, &values, &evaluated, w);
+                let b = select_encoded(
+                    &sp, &encoded, &values, &evaluated, w, 2,
+                );
+                prop_assert!(a == b, "weight {w}: {a:?} vs {b:?}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn threaded_select_is_bitwise_sequential() {
+        let sp = space();
+        forall("select 1/2/8 threads identical", 15, |rng| {
+            let evaluated: Vec<Point> =
+                (0..12).map(|_| sp.random_point(rng)).collect();
+            let cands: Vec<Point> =
+                (0..60).map(|_| sp.random_point(rng)).collect();
+            let values: Vec<f64> =
+                (0..cands.len()).map(|_| rng.normal()).collect();
+            let seq = select(&sp, &cands, &values, &evaluated, 0.8);
+            for threads in [2usize, 8] {
+                let par = select_threaded(
+                    &sp, &cands, &values, &evaluated, 0.8, threads,
+                );
+                prop_assert!(
+                    par == seq,
+                    "{threads} threads: {par:?} vs {seq:?}"
+                );
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -6,6 +6,13 @@
 //! `Space::perturb` mutation (which respects the lattice by construction),
 //! elitism of 1. Generic over the fitness function so the same machinery
 //! maximizes EI for the GP surrogate and is reused by tests.
+//!
+//! Fitness is evaluated **a generation at a time** (`&[Point] ->
+//! Vec<f64>`): the EI consumer scores the whole population through the
+//! batched surrogate API (one cross-correlation block per generation,
+//! optionally fanned over threads) instead of point-at-a-time calls.
+//! Fitness evaluation consumes no RNG, so the batch rewrite leaves the
+//! evolution stream — and therefore every proposal — bit-identical.
 
 use crate::sampling::rng::Rng;
 use crate::space::{Point, Space, Value};
@@ -40,8 +47,11 @@ impl Default for GaConfig {
     }
 }
 
-/// Maximize `fitness` over the space; returns (best point, best fitness).
-pub fn maximize<F: FnMut(&[Value]) -> f64>(
+/// Maximize a **batch** fitness over the space; returns (best point,
+/// best fitness). The closure scores one whole generation per call and
+/// must return one value per point, each independent of the batch
+/// composition (the determinism contract of DESIGN.md §11).
+pub fn maximize<F: FnMut(&[Point]) -> Vec<f64>>(
     space: &Space,
     cfg: &GaConfig,
     rng: &mut Rng,
@@ -51,7 +61,12 @@ pub fn maximize<F: FnMut(&[Value]) -> f64>(
     let mut pop: Vec<Point> = (0..cfg.population)
         .map(|_| space.random_point(rng))
         .collect();
-    let mut fit: Vec<f64> = pop.iter().map(|p| fitness(p)).collect();
+    let mut fit = fitness(&pop);
+    assert_eq!(
+        fit.len(),
+        pop.len(),
+        "batch fitness must score every individual"
+    );
 
     let best_idx = |fit: &[f64]| {
         (0..fit.len())
@@ -77,10 +92,29 @@ pub fn maximize<F: FnMut(&[Value]) -> f64>(
             next.push(child);
         }
         pop = next;
-        fit = pop.iter().map(|p| fitness(p)).collect();
+        fit = fitness(&pop);
+        assert_eq!(
+            fit.len(),
+            pop.len(),
+            "batch fitness must score every individual"
+        );
     }
     let i = best_idx(&fit);
     (pop[i].clone(), fit[i])
+}
+
+/// Scalar-fitness convenience over [`maximize`] (tests, simple
+/// acquisition functions): wraps the per-point closure in a mapped
+/// batch, which is exactly what the pre-batch GA computed.
+pub fn maximize_scalar<F: FnMut(&[Value]) -> f64>(
+    space: &Space,
+    cfg: &GaConfig,
+    rng: &mut Rng,
+    mut fitness: F,
+) -> (Point, f64) {
+    maximize(space, cfg, rng, |pop| {
+        pop.iter().map(|p| fitness(p)).collect()
+    })
 }
 
 fn tournament(fit: &[f64], k: usize, rng: &mut Rng) -> usize {
@@ -122,7 +156,7 @@ mod tests {
         let sp = space();
         let target = [7i64, 21, 13];
         let mut rng = Rng::new(1);
-        let (best, f) = maximize(&sp, &GaConfig::default(), &mut rng, |p| {
+        let (best, f) = maximize_scalar(&sp, &GaConfig::default(), &mut rng, |p| {
             -p.iter()
                 .zip(&target)
                 .map(|(x, t)| {
@@ -140,7 +174,7 @@ mod tests {
         let sp = space();
         forall("GA in-bounds", 10, |rng| {
             let (best, _) =
-                maximize(&sp, &GaConfig { generations: 5, ..Default::default() }, rng, |p| {
+                maximize_scalar(&sp, &GaConfig { generations: 5, ..Default::default() }, rng, |p| {
                     p[0].as_f64()
                 });
             prop_assert!(sp.contains(&best), "{best:?}");
@@ -152,10 +186,27 @@ mod tests {
     fn monotone_fitness_pushes_to_boundary() {
         let sp = space();
         let mut rng = Rng::new(3);
-        let (best, _) = maximize(&sp, &GaConfig::default(), &mut rng, |p| {
+        let (best, _) = maximize_scalar(&sp, &GaConfig::default(), &mut rng, |p| {
             p[0].as_f64() + p[1].as_f64() + p[2].as_f64()
         });
         assert_eq!(best, crate::space::ints(&[31, 31, 31]));
+    }
+
+    #[test]
+    fn batch_and_scalar_fitness_evolve_identically() {
+        // Same seed, same fitness function expressed both ways: the GA
+        // consumes the RNG identically, so the full outcome matches.
+        let sp = space();
+        let f = |p: &[Value]| -(p[0].as_f64() - 11.0).powi(2)
+            + 0.3 * p[1].as_f64();
+        let (a_pt, a_fit) =
+            maximize_scalar(&sp, &GaConfig::default(), &mut Rng::new(42), f);
+        let (b_pt, b_fit) =
+            maximize(&sp, &GaConfig::default(), &mut Rng::new(42), |pop| {
+                pop.iter().map(|p| f(p)).collect()
+            });
+        assert_eq!(a_pt, b_pt);
+        assert_eq!(a_fit.to_bits(), b_fit.to_bits());
     }
 
     #[test]
@@ -166,7 +217,7 @@ mod tests {
         // increasing generation counts (deterministic RNG per run).
         let fit_at = |gens: usize| {
             let mut r = Rng::new(99);
-            let (_, f) = maximize(
+            let (_, f) = maximize_scalar(
                 &sp,
                 &GaConfig { generations: gens, ..Default::default() },
                 &mut r,

@@ -10,6 +10,9 @@
 //! retune. `propose_next` routes the one-shot sequential path through the
 //! same code, so the candidate-search and acquisition logic exists once.
 
+use std::collections::HashSet;
+
+use crate::linalg::Workspace;
 use crate::optimizer::candidates::{self, WEIGHT_CYCLE};
 use crate::optimizer::ga::{maximize, GaConfig};
 use crate::optimizer::{EvalRecord, History, HpoConfig, SurrogateKind};
@@ -20,6 +23,7 @@ use crate::surrogate::gp::{expected_improvement, GpSurrogate};
 use crate::surrogate::rbf::RbfSurrogate;
 use crate::surrogate::Surrogate;
 use crate::uq::LossInterval;
+use crate::util::par::par_chunks_stable;
 
 /// Retune the GP length-scale (full profile-likelihood refit) after this
 /// many incremental insertions.
@@ -35,6 +39,10 @@ pub struct RefitStats {
     pub full: u64,
     /// Proposals served.
     pub proposals: u64,
+    /// Candidate sets that came back short after exhausting their
+    /// attempt budget (small / nearly-explored spaces; surfaced by
+    /// `hyppo run` instead of warning to stderr per occurrence).
+    pub exhausted_candidate_sets: u64,
 }
 
 /// A surrogate that lives across completions, plus the acquisition logic
@@ -161,23 +169,39 @@ impl OnlineProposer {
                     self.dirty = false;
                 }
                 let best = &history.best(self.gamma).unwrap().theta;
-                let cands = candidates::generate(
+                let gen = candidates::generate(
                     space,
                     best,
                     &evaluated,
                     &self.candidates,
                     rng,
                 );
+                if gen.exhausted {
+                    self.stats.exhausted_candidate_sets += 1;
+                }
+                let cands = gen.points;
                 if cands.is_empty() {
                     return fallback(rng);
                 }
-                let values: Vec<f64> = cands
-                    .iter()
-                    .map(|c| self.rbf.predict(&space.encode(c)))
-                    .collect();
+                // Batched scoring: encode once (fanned out too), then
+                // score deterministic candidate chunks — each chunk
+                // pays one kernel block instead of per-point rebuilds.
+                let threads = self.candidates.scoring_threads;
+                let encoded: Vec<Vec<f64>> =
+                    par_chunks_stable(&cands, threads, |chunk| {
+                        chunk.iter().map(|c| space.encode(c)).collect()
+                    });
+                let rbf = &self.rbf;
+                let values: Vec<f64> =
+                    par_chunks_stable(&encoded, threads, |chunk| {
+                        let mut ws = Workspace::new();
+                        let mut out = Vec::new();
+                        rbf.predict_batch(chunk, &mut ws, &mut out);
+                        out
+                    });
                 let w = WEIGHT_CYCLE[iter % WEIGHT_CYCLE.len()];
-                match candidates::select(
-                    space, &cands, &values, &evaluated, w,
+                match candidates::select_encoded(
+                    space, &encoded, &values, &evaluated, w, threads,
                 ) {
                     Some(i) => cands[i].clone(),
                     None => fallback(rng),
@@ -198,17 +222,47 @@ impl OnlineProposer {
                     .cloned()
                     .fold(f64::INFINITY, f64::min);
                 let gp = &self.gp;
-                let (point, _fit) =
-                    maximize(space, &GaConfig::default(), rng, |p| {
-                        if evaluated.iter().any(|e| e == p) {
-                            return f64::NEG_INFINITY;
-                        }
-                        let u = space.encode(p);
-                        let mu = gp.predict(&u);
-                        let sd = gp.predict_std(&u).unwrap_or(0.0);
-                        expected_improvement(mu, sd, best_y)
-                    });
-                if evaluated.iter().any(|e| e == &point) {
+                let threads = self.candidates.scoring_threads;
+                let evaluated_set: HashSet<&Point> =
+                    evaluated.iter().collect();
+                // Batched EI over each GA generation: one
+                // cross-correlation block per chunk amortizes mean, std,
+                // and EI; already-evaluated points are excluded exactly
+                // as before (their mean/std is computed but unused, so
+                // the surviving scores are bit-identical).
+                let (point, _fit) = maximize(
+                    space,
+                    &GaConfig::default(),
+                    rng,
+                    |pop| {
+                        par_chunks_stable(pop, threads, |chunk| {
+                            let mut ws = Workspace::new();
+                            let encoded: Vec<Vec<f64>> = chunk
+                                .iter()
+                                .map(|p| space.encode(p))
+                                .collect();
+                            let mut mu = Vec::new();
+                            let mut sd = Vec::new();
+                            gp.predict_mean_std_batch(
+                                &encoded, &mut ws, &mut mu, &mut sd,
+                            );
+                            chunk
+                                .iter()
+                                .enumerate()
+                                .map(|(i, p)| {
+                                    if evaluated_set.contains(p) {
+                                        f64::NEG_INFINITY
+                                    } else {
+                                        expected_improvement(
+                                            mu[i], sd[i], best_y,
+                                        )
+                                    }
+                                })
+                                .collect()
+                        })
+                    },
+                );
+                if evaluated_set.contains(&point) {
                     fallback(rng)
                 } else {
                     point
@@ -229,24 +283,39 @@ impl OnlineProposer {
                     return fallback(rng);
                 }
                 let best = &history.best(self.gamma).unwrap().theta;
-                let cands = candidates::generate(
+                let gen = candidates::generate(
                     space,
                     best,
                     &evaluated,
                     &self.candidates,
                     rng,
                 );
+                if gen.exhausted {
+                    self.stats.exhausted_candidate_sets += 1;
+                }
+                let cands = gen.points;
                 if cands.is_empty() {
                     return fallback(rng);
                 }
-                // Eq. (8): score = μ + ασ, then the distance trade-off.
-                let values: Vec<f64> = cands
-                    .iter()
-                    .map(|c| ens.score(&space.encode(c)))
-                    .collect();
+                // Eq. (8): score = μ + ασ, batched so every member
+                // predicts the whole chunk once, then the distance
+                // trade-off. Encoding fans out like the scoring does.
+                let threads = self.candidates.scoring_threads;
+                let encoded: Vec<Vec<f64>> =
+                    par_chunks_stable(&cands, threads, |chunk| {
+                        chunk.iter().map(|c| space.encode(c)).collect()
+                    });
+                let ens_ref = &ens;
+                let values: Vec<f64> =
+                    par_chunks_stable(&encoded, threads, |chunk| {
+                        let mut ws = Workspace::new();
+                        let mut out = Vec::new();
+                        ens_ref.score_batch(chunk, &mut ws, &mut out);
+                        out
+                    });
                 let w = WEIGHT_CYCLE[iter % WEIGHT_CYCLE.len()];
-                match candidates::select(
-                    space, &cands, &values, &evaluated, w,
+                match candidates::select_encoded(
+                    space, &encoded, &values, &evaluated, w, threads,
                 ) {
                     Some(i) => cands[i].clone(),
                     None => fallback(rng),

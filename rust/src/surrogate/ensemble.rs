@@ -8,6 +8,7 @@
 //! member predictions, with α ∈ [−2, 2] steering pessimistic (α > 0) vs
 //! optimistic (α < 0) treatment of prediction variability.
 
+use crate::linalg::Workspace;
 use crate::sampling::rng::Rng;
 use crate::surrogate::rbf::RbfSurrogate;
 use crate::surrogate::Surrogate;
@@ -96,6 +97,70 @@ impl RbfEnsemble {
         let (mu, sigma) = self.mean_std(x);
         mu + self.alpha * sigma
     }
+
+    /// Batched ensemble mean/std: each member predicts the whole
+    /// candidate set once (through the RBF kernel-block batch path),
+    /// then the member axis is reduced per candidate in member order —
+    /// bit-identical to per-point [`RbfEnsemble::mean_std`].
+    pub fn mean_std_batch(
+        &self,
+        xs: &[Vec<f64>],
+        ws: &mut Workspace,
+        means: &mut Vec<f64>,
+        stds: &mut Vec<f64>,
+    ) {
+        assert!(!self.members.is_empty(), "predict before fit");
+        means.clear();
+        stds.clear();
+        if xs.is_empty() {
+            return;
+        }
+        let nm = self.members.len();
+        let npts = xs.len();
+        // Member-major prediction block: preds[k * npts + i] is member
+        // k's prediction at xs[i].
+        let mut preds = ws.take(nm * npts);
+        let mut row: Vec<f64> = ws.take(0);
+        for (k, member) in self.members.iter().enumerate() {
+            member.predict_batch(xs, ws, &mut row);
+            preds[k * npts..(k + 1) * npts].copy_from_slice(&row);
+        }
+        means.reserve(npts);
+        stds.reserve(npts);
+        for i in 0..npts {
+            let mean = (0..nm)
+                .map(|k| preds[k * npts + i])
+                .sum::<f64>()
+                / nm as f64;
+            let var = (0..nm)
+                .map(|k| {
+                    let p = preds[k * npts + i];
+                    (p - mean) * (p - mean)
+                })
+                .sum::<f64>()
+                / nm as f64;
+            means.push(mean);
+            stds.push(var.sqrt());
+        }
+        ws.give(row);
+        ws.give(preds);
+    }
+
+    /// Batched Eq. (8) scores μ + α σ, bit-identical to per-point
+    /// [`RbfEnsemble::score`].
+    pub fn score_batch(
+        &self,
+        xs: &[Vec<f64>],
+        ws: &mut Workspace,
+        out: &mut Vec<f64>,
+    ) {
+        let mut stds = ws.take(0);
+        self.mean_std_batch(xs, ws, out, &mut stds);
+        for (m, s) in out.iter_mut().zip(&stds) {
+            *m += self.alpha * *s;
+        }
+        ws.give(stds);
+    }
 }
 
 impl Surrogate for RbfEnsemble {
@@ -116,6 +181,29 @@ impl Surrogate for RbfEnsemble {
 
     fn predict_std(&self, x: &[f64]) -> Option<f64> {
         Some(self.mean_std(x).1)
+    }
+
+    fn predict_batch(
+        &self,
+        xs: &[Vec<f64>],
+        ws: &mut Workspace,
+        out: &mut Vec<f64>,
+    ) {
+        let mut stds = ws.take(0);
+        self.mean_std_batch(xs, ws, out, &mut stds);
+        ws.give(stds);
+    }
+
+    fn predict_std_batch(
+        &self,
+        xs: &[Vec<f64>],
+        ws: &mut Workspace,
+        out: &mut Vec<f64>,
+    ) -> bool {
+        let mut means = ws.take(0);
+        self.mean_std_batch(xs, ws, &mut means, out);
+        ws.give(means);
+        true
     }
 }
 
@@ -179,6 +267,37 @@ mod tests {
         assert!((pess.score(&q) - (mu + 2.0 * sigma)).abs() < 1e-12);
         assert!((opt.score(&q) - (mu - 2.0 * sigma)).abs() < 1e-12);
         assert!(pess.score(&q) >= opt.score(&q));
+    }
+
+    #[test]
+    fn batch_scoring_is_bitwise_scalar() {
+        let (xs, cis) = data();
+        let mut ens = RbfEnsemble::new(8, 1.5);
+        let mut rng = Rng::new(7);
+        assert!(ens.fit(&xs, &cis, &mut rng));
+        let qs: Vec<Vec<f64>> = (0..25)
+            .map(|_| vec![rng.f64(), rng.f64()])
+            .collect();
+        let mut ws = Workspace::new();
+        let (mut mu, mut sd, mut sc) =
+            (Vec::new(), Vec::new(), Vec::new());
+        ens.mean_std_batch(&qs, &mut ws, &mut mu, &mut sd);
+        ens.score_batch(&qs, &mut ws, &mut sc);
+        let (mut tmu, mut tsd) = (Vec::new(), Vec::new());
+        ens.predict_batch(&qs, &mut ws, &mut tmu);
+        assert!(ens.predict_std_batch(&qs, &mut ws, &mut tsd));
+        for (i, q) in qs.iter().enumerate() {
+            let (m, s) = ens.mean_std(q);
+            assert_eq!(mu[i].to_bits(), m.to_bits(), "mean at {i}");
+            assert_eq!(sd[i].to_bits(), s.to_bits(), "std at {i}");
+            assert_eq!(
+                sc[i].to_bits(),
+                ens.score(q).to_bits(),
+                "score at {i}"
+            );
+            assert_eq!(tmu[i].to_bits(), m.to_bits(), "trait mean {i}");
+            assert_eq!(tsd[i].to_bits(), s.to_bits(), "trait std {i}");
+        }
     }
 
     #[test]

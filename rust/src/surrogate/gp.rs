@@ -9,8 +9,28 @@
 //! small 1-D grid on the profile log-likelihood; a nugget keeps the
 //! covariance SPD under repeated stochastic evaluations of the same θ.
 
-use crate::linalg::{cholesky, cholesky_solve, forward_solve, Mat};
+use crate::linalg::{
+    cholesky, cholesky_solve, cholesky_solve_many, forward_solve,
+    forward_solve_into, Mat, Workspace,
+};
 use crate::surrogate::Surrogate;
+
+/// Solve `K⁻¹ [y | 1]` over one Cholesky factor: the kriging closed
+/// forms need both columns, and the multi-RHS solve walks the factor
+/// once with the identical per-column op sequence as two
+/// `cholesky_solve` calls (so results are bit-equal).
+fn kinv_y_and_1(l: &Mat, ys: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let n = ys.len();
+    let mut rhs = Mat::zeros(n, 2);
+    for (i, y) in ys.iter().enumerate() {
+        rhs[(i, 0)] = *y;
+        rhs[(i, 1)] = 1.0;
+    }
+    let sol = cholesky_solve_many(l, &rhs);
+    let kinv_y = (0..n).map(|i| sol[(i, 0)]).collect();
+    let kinv_1 = (0..n).map(|i| sol[(i, 1)]).collect();
+    (kinv_y, kinv_1)
+}
 
 /// Kriging surrogate state: correlation length-scale, Cholesky factor of
 /// the covariance, and the closed-form mean/scale estimates.
@@ -104,9 +124,7 @@ impl GpSurrogate {
         let Some(l) = cholesky(&k) else {
             return false;
         };
-        let ones = vec![1.0; n];
-        let kinv_y = cholesky_solve(&l, ys);
-        let kinv_1 = cholesky_solve(&l, &ones);
+        let (kinv_y, kinv_1) = kinv_y_and_1(&l, ys);
         let denom = kinv_1.iter().sum::<f64>();
         if denom.abs() < 1e-300 {
             return false;
@@ -131,6 +149,59 @@ impl GpSurrogate {
         self.l = Some(l);
         self.fitted = true;
         true
+    }
+
+    /// Cross-correlation block K(X, X_train): row `i` holds
+    /// `corr(train_j, xs[i])` for every training point `j`, in training
+    /// order — exactly the vector the scalar `predict`/`predict_std`
+    /// rebuild per call, built once per batch into a workspace buffer.
+    fn corr_block(&self, xs: &[Vec<f64>], ws: &mut Workspace) -> Mat {
+        let n = self.xs.len();
+        let mut data = ws.take(xs.len() * n);
+        for (row, x) in data.chunks_mut(n).zip(xs) {
+            for (c, xi) in row.iter_mut().zip(&self.xs) {
+                *c = self.corr(xi, x);
+            }
+        }
+        Mat { rows: xs.len(), cols: n, data }
+    }
+
+    /// Batched mean **and** std sharing one cross-correlation block —
+    /// the EI scoring path pays one K(X_cand, X_train) build instead of
+    /// two per candidate. Results are bit-identical to per-point
+    /// `predict` / `predict_std` (same accumulation order).
+    pub fn predict_mean_std_batch(
+        &self,
+        xs: &[Vec<f64>],
+        ws: &mut Workspace,
+        means: &mut Vec<f64>,
+        stds: &mut Vec<f64>,
+    ) {
+        assert!(self.fitted, "predict before fit");
+        means.clear();
+        stds.clear();
+        if xs.is_empty() {
+            return;
+        }
+        let l = self.l.as_ref().expect("fitted GP holds its factor");
+        let k = self.corr_block(xs, ws);
+        let mut v = ws.take(k.cols);
+        for row in k.data.chunks(k.cols) {
+            means.push(
+                self.nu
+                    + row
+                        .iter()
+                        .zip(&self.alpha)
+                        .map(|(kv, a)| kv * a)
+                        .sum::<f64>(),
+            );
+            forward_solve_into(l, row, &mut v);
+            let kk: f64 = v.iter().map(|a| a * a).sum();
+            let var = self.sigma2 * (1.0 + self.nugget - kk);
+            stds.push(var.max(0.0).sqrt());
+        }
+        ws.give(v);
+        ws.give(k.data);
     }
 
     /// Negative profile log-likelihood for length-scale selection.
@@ -245,10 +316,9 @@ impl Surrogate for GpSurrogate {
         self.xs.push(x.to_vec());
         self.ys.push(y);
         let m = n + 1;
-        let ones = vec![1.0; m];
-        // O(n²): two triangular solves against the extended factor.
-        let kinv_y = cholesky_solve(&l2, &self.ys);
-        let kinv_1 = cholesky_solve(&l2, &ones);
+        // O(n²): one multi-RHS triangular solve against the extended
+        // factor (both kriging columns in a single walk).
+        let (kinv_y, kinv_1) = kinv_y_and_1(&l2, &self.ys);
         let denom = kinv_1.iter().sum::<f64>();
         if denom.abs() < 1e-300 {
             self.xs.pop();
@@ -303,6 +373,60 @@ impl Surrogate for GpSurrogate {
         let kk: f64 = v.iter().map(|a| a * a).sum();
         let var = self.sigma2 * (1.0 + self.nugget - kk);
         Some(var.max(0.0).sqrt())
+    }
+
+    fn predict_batch(
+        &self,
+        xs: &[Vec<f64>],
+        ws: &mut Workspace,
+        out: &mut Vec<f64>,
+    ) {
+        assert!(self.fitted, "predict before fit");
+        out.clear();
+        if xs.is_empty() {
+            return;
+        }
+        let k = self.corr_block(xs, ws);
+        out.reserve(xs.len());
+        for row in k.data.chunks(k.cols) {
+            out.push(
+                self.nu
+                    + row
+                        .iter()
+                        .zip(&self.alpha)
+                        .map(|(kv, a)| kv * a)
+                        .sum::<f64>(),
+            );
+        }
+        ws.give(k.data);
+    }
+
+    fn predict_std_batch(
+        &self,
+        xs: &[Vec<f64>],
+        ws: &mut Workspace,
+        out: &mut Vec<f64>,
+    ) -> bool {
+        assert!(self.fitted, "predict_std before fit");
+        out.clear();
+        let Some(l) = self.l.as_ref() else {
+            return false;
+        };
+        if xs.is_empty() {
+            return true;
+        }
+        let k = self.corr_block(xs, ws);
+        let mut v = ws.take(k.cols);
+        out.reserve(xs.len());
+        for row in k.data.chunks(k.cols) {
+            forward_solve_into(l, row, &mut v);
+            let kk: f64 = v.iter().map(|a| a * a).sum();
+            let var = self.sigma2 * (1.0 + self.nugget - kk);
+            out.push(var.max(0.0).sqrt());
+        }
+        ws.give(v);
+        ws.give(k.data);
+        true
     }
 }
 
@@ -451,6 +575,45 @@ mod tests {
             assert!((inc.predict(&q) - full.predict(&q)).abs() < 1e-8);
         }
         assert!(inc.is_fitted());
+    }
+
+    #[test]
+    fn batch_prediction_is_bitwise_scalar() {
+        forall("GP batch == scalar (bitwise)", 15, |rng| {
+            let (xs, ys) = toy(14, rng);
+            let mut gp = GpSurrogate::new();
+            if !gp.fit(&xs, &ys) {
+                return Ok(());
+            }
+            let qs: Vec<Vec<f64>> = (0..40)
+                .map(|_| {
+                    vec![rng.f64() * 1.4 - 0.2, rng.f64() * 1.4 - 0.2]
+                })
+                .collect();
+            let mut ws = Workspace::new();
+            let (mut mu, mut sd) = (Vec::new(), Vec::new());
+            gp.predict_batch(&qs, &mut ws, &mut mu);
+            assert!(gp.predict_std_batch(&qs, &mut ws, &mut sd));
+            let (mut mu2, mut sd2) = (Vec::new(), Vec::new());
+            gp.predict_mean_std_batch(&qs, &mut ws, &mut mu2, &mut sd2);
+            for (i, q) in qs.iter().enumerate() {
+                let m = gp.predict(q);
+                let s = gp.predict_std(q).unwrap();
+                prop_assert!(
+                    mu[i].to_bits() == m.to_bits()
+                        && mu2[i].to_bits() == m.to_bits(),
+                    "mean diverged at {i}: {} vs {m}",
+                    mu[i]
+                );
+                prop_assert!(
+                    sd[i].to_bits() == s.to_bits()
+                        && sd2[i].to_bits() == s.to_bits(),
+                    "std diverged at {i}: {} vs {s}",
+                    sd[i]
+                );
+            }
+            Ok(())
+        });
     }
 
     #[test]

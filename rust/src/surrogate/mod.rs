@@ -16,6 +16,8 @@ pub mod ensemble;
 pub mod gp;
 pub mod rbf;
 
+use crate::linalg::Workspace;
+
 /// Common fit/predict interface over normalized points.
 pub trait Surrogate {
     /// Fit to (normalized point, observed value) pairs. Returns false if
@@ -30,6 +32,50 @@ pub trait Surrogate {
     /// (GP: yes; single RBF: no).
     fn predict_std(&self, _x: &[f64]) -> Option<f64> {
         None
+    }
+
+    /// Batched prediction: fill `out` with `predict(&xs[i])` for every
+    /// candidate, in order.
+    ///
+    /// Contract (DESIGN.md §11): the result is **bit-identical** to the
+    /// mapped scalar path for any candidate batching — overrides must
+    /// evaluate each candidate independently with the same accumulation
+    /// order `predict` uses, amortizing only allocations and shared
+    /// read-only structure (e.g. the cross-correlation block) through
+    /// `ws`. This is what lets the proposal path fan candidate chunks
+    /// out over threads without perturbing proposals.
+    fn predict_batch(
+        &self,
+        xs: &[Vec<f64>],
+        ws: &mut Workspace,
+        out: &mut Vec<f64>,
+    ) {
+        let _ = ws;
+        out.clear();
+        out.extend(xs.iter().map(|x| self.predict(x)));
+    }
+
+    /// Batched predictive standard deviation under the same bit-identity
+    /// contract as [`Surrogate::predict_batch`]. Returns `false` (with
+    /// `out` cleared) when the model provides no std.
+    fn predict_std_batch(
+        &self,
+        xs: &[Vec<f64>],
+        ws: &mut Workspace,
+        out: &mut Vec<f64>,
+    ) -> bool {
+        let _ = ws;
+        out.clear();
+        for x in xs {
+            match self.predict_std(x) {
+                Some(s) => out.push(s),
+                None => {
+                    out.clear();
+                    return false;
+                }
+            }
+        }
+        true
     }
 
     /// Absorb one additional observation into an already-fitted model

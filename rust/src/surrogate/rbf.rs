@@ -12,7 +12,7 @@
 //! most recent observation for a location, which matters when the same θ
 //! is re-evaluated with different stochastic outcomes).
 
-use crate::linalg::{invert, lu_solve, Mat};
+use crate::linalg::{invert, lu_solve, Mat, Workspace};
 use crate::surrogate::Surrogate;
 
 /// Cubic-RBF interpolant state.
@@ -346,6 +346,41 @@ impl Surrogate for RbfSurrogate {
         }
         v
     }
+
+    fn predict_batch(
+        &self,
+        xs: &[Vec<f64>],
+        ws: &mut Workspace,
+        out: &mut Vec<f64>,
+    ) {
+        assert!(self.fitted, "predict before fit");
+        out.clear();
+        if xs.is_empty() {
+            return;
+        }
+        // Kernel block Φ(X_cand, centers), one workspace buffer for the
+        // whole batch; the accumulation below mirrors `predict`'s order
+        // (tail first, then centers in order) term for term.
+        let nc = self.centers.len();
+        let mut block = ws.take(xs.len() * nc.max(1));
+        for (row, x) in block.chunks_mut(nc.max(1)).zip(xs) {
+            for (p, c) in row.iter_mut().zip(&self.centers) {
+                *p = phi(dist(c, x));
+            }
+        }
+        out.reserve(xs.len());
+        for (row, x) in block.chunks(nc.max(1)).zip(xs) {
+            let mut v = self.beta0;
+            for (b, xi) in self.beta.iter().zip(x) {
+                v += b * xi;
+            }
+            for (l, p) in self.lambda.iter().zip(row) {
+                v += l * p;
+            }
+            out.push(v);
+        }
+        ws.give(block);
+    }
 }
 
 #[cfg(test)]
@@ -484,6 +519,46 @@ mod tests {
         assert!(m.fit(&xs, &ys));
         assert_eq!(m.n_centers(), 3);
         assert!((m.predict(&xs[0]) - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batch_prediction_is_bitwise_scalar() {
+        forall("RBF batch == scalar (bitwise)", 20, |rng| {
+            let d = 1 + rng.usize_below(4);
+            let n = (d + 2) + rng.usize_below(16);
+            let (xs, ys) = sample_points(n, d, rng);
+            let mut m = RbfSurrogate::new();
+            if !m.fit(&xs, &ys) {
+                return Ok(());
+            }
+            let qs: Vec<Vec<f64>> = (0..30)
+                .map(|_| {
+                    (0..d).map(|_| rng.f64() * 1.2 - 0.1).collect()
+                })
+                .collect();
+            let mut ws = Workspace::new();
+            let mut out = Vec::new();
+            m.predict_batch(&qs, &mut ws, &mut out);
+            // A second call through the same workspace must reuse the
+            // pooled buffer and still agree.
+            let mut out2 = Vec::new();
+            m.predict_batch(&qs, &mut ws, &mut out2);
+            for (i, q) in qs.iter().enumerate() {
+                let want = m.predict(q);
+                prop_assert!(
+                    out[i].to_bits() == want.to_bits()
+                        && out2[i].to_bits() == want.to_bits(),
+                    "batch diverged at {i}: {} vs {want}",
+                    out[i]
+                );
+            }
+            // No std for a single RBF: batch std mirrors scalar `None`.
+            prop_assert!(
+                !m.predict_std_batch(&qs, &mut ws, &mut out),
+                "single RBF must not report a std"
+            );
+            Ok(())
+        });
     }
 
     #[test]

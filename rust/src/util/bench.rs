@@ -4,8 +4,22 @@
 //! module: warmup, adaptive iteration count targeting a fixed measurement
 //! window, and median/mean/p95 reporting. Good enough to rank hot-path
 //! changes during the §Perf pass; absolute numbers land in EXPERIMENTS.md.
+//!
+//! Machine-readable output: every target drives a [`BenchRun`], which
+//! understands two flags after the `cargo bench --bench <t> --` separator:
+//!
+//! * `--json PATH` — write all cases (plus derived ratios and the git
+//!   revision) as a `hyppo-bench-v1` JSON document; the `BENCH_*.json`
+//!   files at the repo root and the CI `bench-smoke` artifacts use this.
+//! * `--budget-ms N` — override every case's measurement budget (the CI
+//!   smoke job runs with ~5 ms so regressions surface per-PR without
+//!   burning minutes).
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+use crate::util::json::{write as write_json, Json};
 
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
@@ -30,6 +44,18 @@ impl BenchStats {
             fmt_ns(self.min_ns),
         );
     }
+
+    /// The `hyppo-bench-v1` record for this case.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("name".into(), Json::Str(self.name.clone()));
+        o.insert("iters".into(), Json::Num(self.iters as f64));
+        o.insert("mean_ns".into(), Json::Num(self.mean_ns));
+        o.insert("median_ns".into(), Json::Num(self.median_ns));
+        o.insert("p95_ns".into(), Json::Num(self.p95_ns));
+        o.insert("min_ns".into(), Json::Num(self.min_ns));
+        Json::Obj(o)
+    }
 }
 
 pub fn fmt_ns(ns: f64) -> String {
@@ -47,10 +73,13 @@ pub fn fmt_ns(ns: f64) -> String {
 /// Benchmark `f`, automatically choosing the per-sample iteration count so
 /// that total measurement time is ~`budget`.
 pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchStats {
-    // Warmup + calibration: run until we know the cost of one call.
+    // Warmup + calibration: run until we know the cost of one call. The
+    // calibration window shrinks with tight budgets so a --budget-ms 5
+    // smoke pass is actually fast.
+    let cal_window = budget.min(Duration::from_millis(100));
     let cal_start = Instant::now();
     let mut cal_iters = 0u64;
-    while cal_start.elapsed() < Duration::from_millis(100) {
+    while cal_start.elapsed() < cal_window {
         f();
         cal_iters += 1;
         if cal_iters > 1_000_000 {
@@ -91,15 +120,150 @@ pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchStats {
     stats
 }
 
-/// Convenience: benchmark with the default 1s budget.
-pub fn bench1<F: FnMut()>(name: &str, f: F) -> BenchStats {
-    bench(name, Duration::from_secs(1), f)
-}
-
 /// Prevent the optimizer from discarding a computed value.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+/// One bench-target invocation: collects every case's [`BenchStats`]
+/// (plus named derived ratios), honours the `--budget-ms` override, and
+/// on [`BenchRun::finish`] writes the `--json PATH` document.
+#[derive(Debug)]
+pub struct BenchRun {
+    target: String,
+    budget_override: Option<Duration>,
+    json_path: Option<PathBuf>,
+    results: Vec<BenchStats>,
+    derived: BTreeMap<String, f64>,
+}
+
+impl BenchRun {
+    /// Parse `--json PATH` / `--budget-ms N` from the process arguments
+    /// (everything after `cargo bench --bench <target> --` reaches the
+    /// harness-free main unchanged). Unknown arguments are ignored so
+    /// `cargo bench`'s own filter strings don't break the targets.
+    pub fn from_args(target: &str) -> Self {
+        let argv: Vec<String> = std::env::args().collect();
+        Self::from_arg_slice(target, &argv[1..])
+    }
+
+    /// Testable core of [`BenchRun::from_args`].
+    pub fn from_arg_slice(target: &str, args: &[String]) -> Self {
+        let mut run = BenchRun {
+            target: target.to_string(),
+            budget_override: None,
+            json_path: None,
+            results: Vec::new(),
+            derived: BTreeMap::new(),
+        };
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--json" => {
+                    run.json_path =
+                        it.next().map(PathBuf::from);
+                }
+                "--budget-ms" => {
+                    run.budget_override = it
+                        .next()
+                        .and_then(|v| v.parse::<u64>().ok())
+                        .map(|ms| Duration::from_millis(ms.max(1)));
+                }
+                _ => {}
+            }
+        }
+        run
+    }
+
+    /// The effective measurement budget: the CLI override, else the
+    /// case's own `budget`.
+    fn effective(&self, budget: Duration) -> Duration {
+        self.budget_override.unwrap_or(budget)
+    }
+
+    /// Benchmark with the default 1 s budget (or the CLI override).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> BenchStats {
+        self.bench_with(name, Duration::from_secs(1), f)
+    }
+
+    /// Benchmark with an explicit budget (still subject to the CLI
+    /// override — the smoke job clamps *every* case).
+    pub fn bench_with<F: FnMut()>(
+        &mut self,
+        name: &str,
+        budget: Duration,
+        f: F,
+    ) -> BenchStats {
+        let stats = bench(name, self.effective(budget), f);
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// Record a derived metric (e.g. a batch-vs-scalar speedup ratio)
+    /// into the JSON document and echo it on stdout.
+    pub fn ratio(&mut self, name: &str, value: f64) {
+        println!("   {name}: {value:.1}x");
+        self.derived.insert(name.to_string(), value);
+    }
+
+    /// The `hyppo-bench-v1` document for this run.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert(
+            "schema".into(),
+            Json::Str("hyppo-bench-v1".into()),
+        );
+        o.insert("target".into(), Json::Str(self.target.clone()));
+        o.insert("git_rev".into(), Json::Str(git_rev()));
+        if let Some(b) = self.budget_override {
+            o.insert(
+                "budget_override_ms".into(),
+                Json::Num(b.as_millis() as f64),
+            );
+        }
+        o.insert(
+            "results".into(),
+            Json::Arr(self.results.iter().map(BenchStats::to_json).collect()),
+        );
+        o.insert(
+            "derived".into(),
+            Json::Obj(
+                self.derived
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                    .collect(),
+            ),
+        );
+        Json::Obj(o)
+    }
+
+    /// Write the JSON document when `--json PATH` was given. Call once,
+    /// at the end of the target's `main` (including early-skip paths, so
+    /// CI always has an artifact to upload).
+    pub fn finish(&self) -> std::io::Result<()> {
+        if let Some(path) = &self.json_path {
+            let mut text = write_json(&self.to_json());
+            text.push('\n');
+            std::fs::write(path, text)?;
+            println!("bench json -> {}", path.display());
+        }
+        Ok(())
+    }
+}
+
+/// Short git revision for bench provenance; "unknown" outside a work
+/// tree (or without a git binary, e.g. a bare CI container).
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
 }
 
 #[cfg(test)]
@@ -122,5 +286,69 @@ mod tests {
         assert!(fmt_ns(5_000.0).ends_with("µs"));
         assert!(fmt_ns(5_000_000.0).ends_with("ms"));
         assert!(fmt_ns(5e9).ends_with('s'));
+    }
+
+    #[test]
+    fn bench_run_parses_flags_and_writes_json() {
+        let path = std::env::temp_dir().join("hyppo_bench_run_test.json");
+        let args: Vec<String> = [
+            "--budget-ms",
+            "5",
+            "--json",
+            path.to_str().unwrap(),
+            "somefilter",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let mut run = BenchRun::from_arg_slice("bench_test", &args);
+        assert_eq!(run.budget_override, Some(Duration::from_millis(5)));
+        run.bench_with("tiny", Duration::from_secs(10), || {
+            black_box(3u64 * 7);
+        });
+        run.ratio("speedup_demo", 6.5);
+        run.finish().unwrap();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::parse(&text).unwrap();
+        assert_eq!(doc.get("schema").as_str(), Some("hyppo-bench-v1"));
+        assert_eq!(doc.get("target").as_str(), Some("bench_test"));
+        assert!(doc.get("git_rev").as_str().is_some());
+        assert_eq!(doc.get("budget_override_ms").as_f64(), Some(5.0));
+        let results = doc.get("results").as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").as_str(), Some("tiny"));
+        assert!(results[0].get("mean_ns").as_f64().unwrap() > 0.0);
+        assert_eq!(
+            doc.get("derived").get("speedup_demo").as_f64(),
+            Some(6.5)
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bench_run_without_json_is_quiet() {
+        let run = BenchRun::from_arg_slice("t", &[]);
+        assert!(run.json_path.is_none());
+        assert!(run.budget_override.is_none());
+        run.finish().unwrap(); // no path: nothing written, no error
+    }
+
+    #[test]
+    fn bench_stats_to_json_roundtrips() {
+        let s = BenchStats {
+            name: "case".into(),
+            iters: 10,
+            mean_ns: 1.5,
+            median_ns: 1.25,
+            p95_ns: 2.5,
+            min_ns: 1.0,
+        };
+        let doc =
+            crate::util::json::parse(&crate::util::json::write(&s.to_json()))
+                .unwrap();
+        assert_eq!(doc.get("name").as_str(), Some("case"));
+        assert_eq!(doc.get("iters").as_i64(), Some(10));
+        assert_eq!(doc.get("median_ns").as_f64(), Some(1.25));
     }
 }

@@ -1,9 +1,11 @@
 //! Shared substrates: JSON, CLI parsing, bench harness, property testing,
-//! CSV emission. All hand-rolled — the offline toolchain ships no serde,
-//! clap, criterion, or proptest (DESIGN.md §7).
+//! CSV emission, deterministic fork-join. All hand-rolled — the offline
+//! toolchain ships no serde, clap, criterion, rayon, or proptest
+//! (DESIGN.md §7).
 
 pub mod bench;
 pub mod cli;
 pub mod csv;
 pub mod json;
+pub mod par;
 pub mod prop;

@@ -1,0 +1,94 @@
+//! Deterministic fork-join for the proposal hot path (DESIGN.md §11).
+//!
+//! The rule that keeps parallel candidate scoring bit-identical to the
+//! sequential path: work is split into **contiguous chunks in input
+//! order**, every item's result is computed independently of its
+//! chunk-mates, and results are concatenated back in chunk order. Under
+//! that contract the output is the same `Vec` — bit for bit — for every
+//! thread count, so `scoring_threads` is a pure throughput knob that can
+//! never change a proposal.
+
+/// Map `f` over contiguous chunks of `items` using up to `threads`
+/// scoped threads, concatenating the per-chunk outputs in input order.
+///
+/// `f` receives one chunk and must return exactly one result per item,
+/// each computed independently of the chunk split (no cross-item state).
+/// With `threads <= 1` (or a single item) `f` runs inline on the full
+/// slice — the sequential path is literally the same code.
+pub fn par_chunks_stable<T, R, F>(
+    items: &[T],
+    threads: usize,
+    f: F,
+) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&[T]) -> Vec<R> + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads == 1 {
+        let out = f(items);
+        assert_eq!(
+            out.len(),
+            items.len(),
+            "chunk fn must return one result per item"
+        );
+        return out;
+    }
+    let chunk = items.len().div_ceil(threads);
+    let mut out = Vec::with_capacity(items.len());
+    let fref = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|c| s.spawn(move || fref(c)))
+            .collect();
+        for (h, c) in handles.into_iter().zip(items.chunks(chunk)) {
+            let part = h.join().expect("scoring thread panicked");
+            assert_eq!(
+                part.len(),
+                c.len(),
+                "chunk fn must return one result per item"
+            );
+            out.extend(part);
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_is_identical_for_any_thread_count() {
+        let items: Vec<f64> = (0..257).map(|i| i as f64 * 0.37).collect();
+        let work = |chunk: &[f64]| -> Vec<f64> {
+            chunk.iter().map(|v| (v * 1.7).sin() + v).collect()
+        };
+        let seq = par_chunks_stable(&items, 1, work);
+        for threads in [2usize, 3, 8, 64, 1000] {
+            let par = par_chunks_stable(&items, threads, work);
+            assert_eq!(par.len(), seq.len());
+            for (a, b) in par.iter().zip(&seq) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        let out = par_chunks_stable(&empty, 8, |c| c.to_vec());
+        assert!(out.is_empty());
+        let one = [42u32];
+        assert_eq!(par_chunks_stable(&one, 8, |c| c.to_vec()), vec![42]);
+    }
+
+    #[test]
+    fn chunks_are_contiguous_and_ordered() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = par_chunks_stable(&items, 7, |c| c.to_vec());
+        assert_eq!(out, items);
+    }
+}

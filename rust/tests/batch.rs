@@ -1,0 +1,190 @@
+//! Batch/scalar equivalence suite (ISSUE 5): `predict_batch` and
+//! friends must be **bit-identical** to the mapped scalar calls for
+//! every surrogate on randomized mixed-kind spaces — the property that
+//! makes the parallel scoring fan-out (and any future SIMD/GPU backend
+//! behind the same API) incapable of changing a proposal.
+
+use hyppo::linalg::Workspace;
+use hyppo::sampling::Rng;
+use hyppo::space::{ParamSpec, Space};
+use hyppo::surrogate::ensemble::RbfEnsemble;
+use hyppo::surrogate::gp::GpSurrogate;
+use hyppo::surrogate::rbf::RbfSurrogate;
+use hyppo::surrogate::Surrogate;
+use hyppo::uq::LossInterval;
+use hyppo::util::par::par_chunks_stable;
+
+/// A randomized mixed space: always one Int dimension, plus a random
+/// subset of {continuous, log-continuous, categorical, ordinal}.
+fn mixed_space(rng: &mut Rng) -> Space {
+    let mut params = vec![ParamSpec::int("n", 0, 12)];
+    if rng.f64() < 0.7 {
+        params.push(ParamSpec::continuous("drop", 0.0, 0.9));
+    }
+    if rng.f64() < 0.7 {
+        params.push(ParamSpec::log_continuous("lr", 1e-5, 1e-1));
+    }
+    if rng.f64() < 0.7 {
+        params.push(ParamSpec::categorical(
+            "opt",
+            &["sgd", "adam", "rmsprop"],
+        ));
+    }
+    if rng.f64() < 0.7 {
+        params.push(ParamSpec::ordinal("batch", &[16.0, 32.0, 64.0]));
+    }
+    Space::new(params)
+}
+
+/// Random encoded training set + objective over a mixed space.
+fn training_set(
+    space: &Space,
+    n: usize,
+    rng: &mut Rng,
+) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let xs: Vec<Vec<f64>> = (0..n)
+        .map(|_| space.encode(&space.random_point(rng)))
+        .collect();
+    let ys: Vec<f64> = xs
+        .iter()
+        .map(|x| {
+            x.iter()
+                .enumerate()
+                .map(|(i, v)| (v - 0.3).powi(2) * (1.0 + i as f64 * 0.1))
+                .sum::<f64>()
+                .sin()
+        })
+        .collect();
+    (xs, ys)
+}
+
+fn queries(space: &Space, m: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    (0..m)
+        .map(|_| space.encode(&space.random_point(rng)))
+        .collect()
+}
+
+#[test]
+fn gp_batch_is_bitwise_scalar_on_mixed_spaces() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed);
+        let space = mixed_space(&mut rng);
+        let (xs, ys) = training_set(&space, 18, &mut rng);
+        let mut gp = GpSurrogate::new();
+        if !gp.fit(&xs, &ys) {
+            continue;
+        }
+        let qs = queries(&space, 50, &mut rng);
+        let mut ws = Workspace::new();
+        let (mut mu, mut sd) = (Vec::new(), Vec::new());
+        gp.predict_batch(&qs, &mut ws, &mut mu);
+        assert!(gp.predict_std_batch(&qs, &mut ws, &mut sd));
+        let (mut mu2, mut sd2) = (Vec::new(), Vec::new());
+        gp.predict_mean_std_batch(&qs, &mut ws, &mut mu2, &mut sd2);
+        for (i, q) in qs.iter().enumerate() {
+            let m = gp.predict(q);
+            let s = gp.predict_std(q).unwrap();
+            assert_eq!(mu[i].to_bits(), m.to_bits(), "seed {seed} q {i}");
+            assert_eq!(sd[i].to_bits(), s.to_bits(), "seed {seed} q {i}");
+            assert_eq!(mu2[i].to_bits(), m.to_bits(), "seed {seed} q {i}");
+            assert_eq!(sd2[i].to_bits(), s.to_bits(), "seed {seed} q {i}");
+        }
+    }
+}
+
+#[test]
+fn rbf_batch_is_bitwise_scalar_on_mixed_spaces() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed ^ 0x5BF);
+        let space = mixed_space(&mut rng);
+        let (xs, ys) = training_set(&space, 20, &mut rng);
+        let mut m = RbfSurrogate::new();
+        if !m.fit(&xs, &ys) {
+            continue;
+        }
+        let qs = queries(&space, 50, &mut rng);
+        let mut ws = Workspace::new();
+        let mut out = Vec::new();
+        m.predict_batch(&qs, &mut ws, &mut out);
+        for (i, q) in qs.iter().enumerate() {
+            assert_eq!(
+                out[i].to_bits(),
+                m.predict(q).to_bits(),
+                "seed {seed} q {i}"
+            );
+        }
+        assert!(
+            !m.predict_std_batch(&qs, &mut ws, &mut out),
+            "single RBF has no std"
+        );
+    }
+}
+
+#[test]
+fn ensemble_batch_is_bitwise_scalar_on_mixed_spaces() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37) ^ 0xE25E);
+        let space = mixed_space(&mut rng);
+        let (xs, ys) = training_set(&space, 16, &mut rng);
+        let intervals: Vec<LossInterval> = ys
+            .iter()
+            .map(|y| LossInterval { center: *y, radius: 0.1 })
+            .collect();
+        let mut ens = RbfEnsemble::new(6, 1.0);
+        if !ens.fit(&xs, &intervals, &mut rng) {
+            continue;
+        }
+        let qs = queries(&space, 40, &mut rng);
+        let mut ws = Workspace::new();
+        let (mut mu, mut sd, mut sc) =
+            (Vec::new(), Vec::new(), Vec::new());
+        ens.mean_std_batch(&qs, &mut ws, &mut mu, &mut sd);
+        ens.score_batch(&qs, &mut ws, &mut sc);
+        for (i, q) in qs.iter().enumerate() {
+            let (m, s) = ens.mean_std(q);
+            assert_eq!(mu[i].to_bits(), m.to_bits(), "seed {seed} q {i}");
+            assert_eq!(sd[i].to_bits(), s.to_bits(), "seed {seed} q {i}");
+            assert_eq!(
+                sc[i].to_bits(),
+                ens.score(q).to_bits(),
+                "seed {seed} q {i}"
+            );
+        }
+    }
+}
+
+/// The chunked fan-out composes with the batch API without changing a
+/// bit: any chunking of the candidate set through `predict_batch` (each
+/// chunk with its own workspace, as the proposal path does) equals the
+/// full-batch and the scalar results.
+#[test]
+fn chunked_parallel_batches_equal_full_batch() {
+    let mut rng = Rng::new(99);
+    let space = mixed_space(&mut rng);
+    let (xs, ys) = training_set(&space, 22, &mut rng);
+    let mut gp = GpSurrogate::new();
+    assert!(gp.fit(&xs, &ys));
+    let qs = queries(&space, 101, &mut rng);
+
+    let mut ws = Workspace::new();
+    let mut full = Vec::new();
+    gp.predict_batch(&qs, &mut ws, &mut full);
+    for threads in [1usize, 2, 3, 8] {
+        let gp_ref = &gp;
+        let chunked: Vec<f64> =
+            par_chunks_stable(&qs, threads, |chunk| {
+                let mut ws = Workspace::new();
+                let mut out = Vec::new();
+                gp_ref.predict_batch(chunk, &mut ws, &mut out);
+                out
+            });
+        assert_eq!(chunked.len(), full.len());
+        for (i, (a, b)) in chunked.iter().zip(&full).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{threads} threads diverged at {i}"
+            );
+        }
+    }
+}

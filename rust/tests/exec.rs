@@ -694,6 +694,90 @@ fn restore_rejects_checkpoints_from_a_changed_space() {
     );
 }
 
+/// ISSUE 5 acceptance: parallel candidate scoring produces bit-identical
+/// proposals to the sequential path. Full experiments (mixed typed
+/// space, every surrogate kind) at 1, 2, and 8 scoring threads must
+/// agree record for record — thread count is a pure throughput knob.
+#[test]
+fn parallel_scoring_is_bit_identical_at_1_2_and_8_threads() {
+    use hyppo::optimizer::candidates::CandidateConfig;
+    use hyppo::optimizer::SurrogateKind;
+
+    let space = Space::new(vec![
+        ParamSpec::int("layers", 1, 6),
+        ParamSpec::log_continuous("lr", 1e-5, 1e-1),
+        ParamSpec::categorical("opt", &["sgd", "adam", "rmsprop"]),
+        ParamSpec::ordinal("batch", &[16.0, 32.0, 64.0]),
+    ]);
+    for kind in [
+        SurrogateKind::Rbf,
+        SurrogateKind::Gp,
+        SurrogateKind::RbfEnsemble { alpha: 1.0, members: 6 },
+    ] {
+        let run_with = |threads: usize| {
+            let hpo = HpoConfig {
+                max_evaluations: 14,
+                n_init: 5,
+                n_trials: 2,
+                seed: 4,
+                surrogate: kind.clone(),
+                candidates: CandidateConfig {
+                    scoring_threads: threads,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let ev = SyntheticEvaluator::new(space.clone(), 13);
+            let mut s = Session::new(&ev, &hpo);
+            hand_rolled(&ev, &mut s);
+            s.into_history()
+        };
+        let sequential = run_with(1);
+        assert_eq!(sequential.len(), 14, "{kind:?}");
+        for threads in [2usize, 8] {
+            let parallel = run_with(threads);
+            assert_histories_identical(&sequential, &parallel);
+        }
+    }
+}
+
+/// The same guarantee one level down: a single `propose_next` from the
+/// same RNG state is the same point at any thread count.
+#[test]
+fn propose_next_is_thread_count_invariant() {
+    use hyppo::optimizer::candidates::CandidateConfig;
+    use hyppo::optimizer::{propose_next, run_random, SurrogateKind};
+    use hyppo::uq::UqWeights;
+
+    let ev = evaluator(19);
+    let hist = run_random(&ev, 30, 2, UqWeights::default_paper(), 7);
+    for kind in [
+        SurrogateKind::Rbf,
+        SurrogateKind::Gp,
+        SurrogateKind::RbfEnsemble { alpha: -0.5, members: 5 },
+    ] {
+        let propose_with = |threads: usize| {
+            let cfg = HpoConfig {
+                surrogate: kind.clone(),
+                candidates: CandidateConfig {
+                    scoring_threads: threads,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            propose_next(ev.space(), &hist, &cfg, 2, &mut Rng::new(31))
+        };
+        let seq = propose_with(1);
+        for threads in [2usize, 8] {
+            assert_eq!(
+                seq,
+                propose_with(threads),
+                "{kind:?} diverged at {threads} threads"
+            );
+        }
+    }
+}
+
 #[test]
 fn async_driver_absorbs_completions_incrementally() {
     let ev = evaluator(13);
