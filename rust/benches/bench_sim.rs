@@ -1,0 +1,94 @@
+//! Chaos-simulation benches (DESIGN.md §12): the fault-injected virtual
+//! cluster must stay cheap enough to sweep fault plans interactively,
+//! and the pure-init fleet case bounds the event loop's per-worker cost
+//! at scheduler scale (thousands of virtual workers, zero real threads).
+//!
+//! Besides timing, one un-timed smoke run publishes the full queueing
+//! metric set (`wasted_work_fraction`, `utilization`, ...) into the
+//! bench-v1 `derived` map so CI can gate on recovery efficiency.
+
+use std::time::Duration;
+
+use hyppo::cluster::faults::{Fault, FaultPlan};
+use hyppo::cluster::sim::{simulate_chaos, ChaosConfig, SimConfig};
+use hyppo::cluster::Topology;
+use hyppo::eval::synthetic::SyntheticEvaluator;
+use hyppo::optimizer::HpoConfig;
+use hyppo::space::{ParamSpec, Space};
+use hyppo::util::bench::{black_box, BenchRun};
+
+fn evaluator() -> SyntheticEvaluator {
+    let space = Space::new(vec![
+        ParamSpec::new("a", 0, 24),
+        ParamSpec::new("b", 0, 24),
+    ]);
+    let mut ev = SyntheticEvaluator::new(space, 11);
+    ev.t_dropout = 2;
+    ev.base_cost = Duration::from_millis(40);
+    ev.ns_per_param = 0.0;
+    ev
+}
+
+fn main() {
+    let mut run = BenchRun::from_args("bench_sim");
+    println!("== chaos simulation benches ==");
+
+    let ev = evaluator();
+    let hpo = HpoConfig {
+        max_evaluations: 24,
+        n_init: 8,
+        n_trials: 3,
+        seed: 5,
+        ..Default::default()
+    };
+    let mut chaos =
+        ChaosConfig::fault_free(SimConfig::trial_parallel(Topology::new(
+            4, 2,
+        )));
+    chaos.plan = FaultPlan {
+        events: vec![
+            Fault::CrashAll { frac: 0.3 },
+            Fault::Straggle {
+                worker: 1,
+                factor: 2.0,
+                from: Duration::ZERO,
+                until: Duration::MAX,
+            },
+        ],
+    };
+    run.bench("chaos_sim_4x2_crash_straggle", || {
+        black_box(simulate_chaos(&ev, &hpo, &chaos).unwrap());
+    });
+
+    // Scheduler-scale fleet: 2048 virtual workers, every evaluation in
+    // the initial design (n_init == budget), a quarter of them crashed
+    // once. Measures the event loop + session hand-out, not the
+    // surrogate (no adaptive proposals ever fire).
+    let fleet_hpo = HpoConfig {
+        max_evaluations: 2048,
+        n_init: 2048,
+        n_trials: 1,
+        seed: 5,
+        ..Default::default()
+    };
+    let mut fleet =
+        ChaosConfig::fault_free(SimConfig::trial_parallel(Topology::new(
+            2048, 1,
+        )));
+    fleet.plan = FaultPlan {
+        events: vec![Fault::CrashAll { frac: 0.25 }],
+    };
+    run.bench_with(
+        "chaos_sim_2048_workers_init_wave",
+        Duration::from_secs(3),
+        || {
+            black_box(simulate_chaos(&ev, &fleet_hpo, &fleet).unwrap());
+        },
+    );
+
+    // One un-timed run to publish the queueing metrics CI gates on.
+    let r = simulate_chaos(&ev, &hpo, &chaos).unwrap();
+    r.metrics.record_into(&mut run);
+
+    run.finish().expect("writing bench json");
+}

@@ -1,0 +1,589 @@
+//! Seeded fault plans for the chaos simulator (DESIGN.md §12).
+//!
+//! A [`FaultPlan`] is a declarative list of [`Fault`] events — worker
+//! crashes, stragglers, preemptions, lost/duplicated results, cluster
+//! restarts — injected into `cluster::sim::simulate_chaos` at chosen
+//! virtual times. Plans are plain data: they can be written in a config
+//! file (`[faults]` section, see [`FaultPlan::from_section`]), generated
+//! from a seed ([`FaultPlan::random`]), or built directly in tests.
+//!
+//! Compilation (`FaultPlan::compile`, crate-private) canonicalizes the
+//! event list so that two plans containing the same events in any order
+//! inject identically — the simulation is a function of the *set* of
+//! faults, not of the order they were written down in:
+//!
+//! * per-evaluation crash fractions merge by minimum (earliest kill wins),
+//! * lost-result counts for the same evaluation add up,
+//! * duplicate deliveries collapse to one per evaluation,
+//! * timed faults sort by (time, kind, worker, downtime),
+//! * straggler windows sort by (worker, window, factor).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::Value;
+use crate::sampling::rng::Rng;
+
+/// One fault to inject into a simulated run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fault {
+    /// Kill evaluation `eval` once, after fraction `frac ∈ [0, 1]` of
+    /// its execution has elapsed. The partial work is wasted and the
+    /// evaluation is requeued (consuming retry budget).
+    CrashEval { eval: usize, frac: f64 },
+    /// Kill *every* evaluation once, each at fraction `frac` of its own
+    /// execution — the crash-inject-everything plan of the headline
+    /// equivalence test.
+    CrashAll { frac: f64 },
+    /// Kill whatever is running on `worker` at virtual time `at`
+    /// (a no-op if the worker is idle or down at that moment).
+    CrashWorkerAt { worker: usize, at: Duration },
+    /// Preempt `worker` at `at`: its running evaluation is requeued
+    /// *without* consuming retry budget (preemption is the scheduler's
+    /// fault, not the job's) and the worker stays down for `down`.
+    Preempt { worker: usize, at: Duration, down: Duration },
+    /// Multiply the duration of work *started* on `worker` within
+    /// `[from, until)` by `factor` (> 1 slows the worker down).
+    Straggle { worker: usize, factor: f64, from: Duration, until: Duration },
+    /// Drop the result of evaluation `eval` the first `times` times it
+    /// completes: the work is wasted and the evaluation is requeued
+    /// (consuming retry budget), exactly as if the worker's channel
+    /// died after training finished.
+    LoseResult { eval: usize, times: usize },
+    /// Re-deliver the first trial outcome of `eval` after the evaluation
+    /// completes; the session must reject the duplicate.
+    DuplicateResult { eval: usize },
+    /// Cluster-wide restart at `at`: every running evaluation is killed,
+    /// the session passes through its real snapshot → JSON → restore
+    /// wire, and all workers stay down for `down`.
+    Restart { at: Duration, down: Duration },
+}
+
+/// A full fault schedule (empty = fault-free).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<Fault>,
+}
+
+/// Shape of a randomly generated plan (see [`FaultPlan::random`]).
+#[derive(Debug, Clone)]
+pub struct RandomFaultSpec {
+    /// Single-evaluation crash faults to draw.
+    pub crashes: usize,
+    /// Per-worker straggler windows to draw.
+    pub stragglers: usize,
+    /// Worker preemptions to draw.
+    pub preemptions: usize,
+    /// Lost-result faults to draw.
+    pub lost: usize,
+    /// Evaluation-id universe crash/lose targets are drawn from.
+    pub evals: usize,
+    /// Worker-id universe straggler/preemption targets are drawn from.
+    pub workers: usize,
+    /// Virtual-time horizon timed faults are drawn from.
+    pub horizon: Duration,
+}
+
+impl Default for RandomFaultSpec {
+    fn default() -> Self {
+        RandomFaultSpec {
+            crashes: 0,
+            stragglers: 0,
+            preemptions: 0,
+            lost: 0,
+            evals: 64,
+            workers: 8,
+            horizon: Duration::from_secs(1),
+        }
+    }
+}
+
+/// Timed cluster-level faults in canonical firing order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum TimedKind {
+    Restart { down: Duration },
+    CrashWorker { worker: usize },
+    Preempt { worker: usize, down: Duration },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct TimedFault {
+    pub(crate) at: Duration,
+    pub(crate) kind: TimedKind,
+}
+
+impl TimedFault {
+    /// Total order: (time, kind class, worker, downtime). Restarts fire
+    /// before worker crashes before preemptions at equal times.
+    fn sort_key(&self) -> (Duration, u8, usize, Duration) {
+        match self.kind {
+            TimedKind::Restart { down } => (self.at, 0, 0, down),
+            TimedKind::CrashWorker { worker } => {
+                (self.at, 1, worker, Duration::ZERO)
+            }
+            TimedKind::Preempt { worker, down } => {
+                (self.at, 2, worker, down)
+            }
+        }
+    }
+}
+
+/// A slowdown window: work started on `worker` in `[from, until)` takes
+/// `factor` times as long.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct StraggleWindow {
+    pub(crate) worker: usize,
+    pub(crate) factor: f64,
+    pub(crate) from: Duration,
+    pub(crate) until: Duration,
+}
+
+/// The canonical, order-independent form of a plan that the simulator
+/// consumes (see the module docs for the merge rules).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub(crate) struct CompiledPlan {
+    pub(crate) crash_all: Option<f64>,
+    pub(crate) crash_eval: BTreeMap<usize, f64>,
+    pub(crate) timed: Vec<TimedFault>,
+    pub(crate) straggle: Vec<StraggleWindow>,
+    pub(crate) lose: BTreeMap<usize, usize>,
+    pub(crate) duplicate: BTreeSet<usize>,
+}
+
+fn check_frac(frac: f64, what: &str) -> Result<()> {
+    if !frac.is_finite() || !(0.0..=1.0).contains(&frac) {
+        bail!("{what}: crash fraction {frac} must be in [0, 1]");
+    }
+    Ok(())
+}
+
+impl FaultPlan {
+    /// Canonicalize into the form the simulator consumes; validates
+    /// every event. Plans that contain the same events in a different
+    /// order compile to the same `CompiledPlan`.
+    pub(crate) fn compile(&self) -> Result<CompiledPlan> {
+        let mut c = CompiledPlan::default();
+        for f in &self.events {
+            match *f {
+                Fault::CrashEval { eval, frac } => {
+                    check_frac(frac, "crash")?;
+                    let e = c.crash_eval.entry(eval).or_insert(frac);
+                    *e = e.min(frac);
+                }
+                Fault::CrashAll { frac } => {
+                    check_frac(frac, "crash_all")?;
+                    c.crash_all = Some(match c.crash_all {
+                        Some(prev) => prev.min(frac),
+                        None => frac,
+                    });
+                }
+                Fault::CrashWorkerAt { worker, at } => {
+                    c.timed.push(TimedFault {
+                        at,
+                        kind: TimedKind::CrashWorker { worker },
+                    });
+                }
+                Fault::Preempt { worker, at, down } => {
+                    c.timed.push(TimedFault {
+                        at,
+                        kind: TimedKind::Preempt { worker, down },
+                    });
+                }
+                Fault::Straggle { worker, factor, from, until } => {
+                    if !factor.is_finite() || factor <= 0.0 {
+                        bail!(
+                            "straggle: factor {factor} must be finite \
+                             and > 0"
+                        );
+                    }
+                    if from > until {
+                        bail!(
+                            "straggle: window [{from:?}, {until:?}) is \
+                             empty"
+                        );
+                    }
+                    c.straggle.push(StraggleWindow {
+                        worker,
+                        factor,
+                        from,
+                        until,
+                    });
+                }
+                Fault::LoseResult { eval, times } => {
+                    *c.lose.entry(eval).or_insert(0) += times;
+                }
+                Fault::DuplicateResult { eval } => {
+                    c.duplicate.insert(eval);
+                }
+                Fault::Restart { at, down } => {
+                    c.timed.push(TimedFault {
+                        at,
+                        kind: TimedKind::Restart { down },
+                    });
+                }
+            }
+        }
+        c.timed.sort_by_key(TimedFault::sort_key);
+        c.straggle.sort_by_key(|s| {
+            (s.worker, s.from, s.until, s.factor.to_bits())
+        });
+        c.lose.retain(|_, times| *times > 0);
+        Ok(c)
+    }
+
+    /// Draw a plan from a seed — the same (seed, spec) pair always
+    /// yields the same plan, so a whole chaos run is reproducible from
+    /// its two seeds (experiment seed + fault seed).
+    pub fn random(seed: u64, spec: &RandomFaultSpec) -> FaultPlan {
+        let mut rng = Rng::new(seed);
+        let mut events = Vec::new();
+        let evals = spec.evals.max(1);
+        let workers = spec.workers.max(1);
+        for _ in 0..spec.crashes {
+            events.push(Fault::CrashEval {
+                eval: rng.usize_below(evals),
+                frac: 0.05 + 0.9 * rng.f64(),
+            });
+        }
+        for _ in 0..spec.stragglers {
+            let from = spec.horizon.mul_f64(rng.f64());
+            let len = spec.horizon.mul_f64(0.1 + 0.4 * rng.f64());
+            events.push(Fault::Straggle {
+                worker: rng.usize_below(workers),
+                factor: 1.5 + 2.5 * rng.f64(),
+                from,
+                until: from + len,
+            });
+        }
+        for _ in 0..spec.preemptions {
+            events.push(Fault::Preempt {
+                worker: rng.usize_below(workers),
+                at: spec.horizon.mul_f64(rng.f64()),
+                down: spec.horizon.mul_f64(0.05 * rng.f64()),
+            });
+        }
+        for _ in 0..spec.lost {
+            events.push(Fault::LoseResult {
+                eval: rng.usize_below(evals),
+                times: 1,
+            });
+        }
+        FaultPlan { events }
+    }
+
+    /// Parse a `[faults]` config section. Grammar (all durations in
+    /// virtual milliseconds):
+    ///
+    /// ```toml
+    /// [faults]
+    /// events = [
+    ///     { kind = "crash", eval = 3, frac = 0.5 },
+    ///     { kind = "crash_all", frac = 0.3 },
+    ///     { kind = "crash_worker", worker = 1, at_ms = 120 },
+    ///     { kind = "preempt", worker = 0, at_ms = 200, down_ms = 50 },
+    ///     { kind = "straggle", worker = 2, factor = 3.0,
+    ///       from_ms = 0, until_ms = 400 },
+    ///     { kind = "lose", eval = 4, times = 1 },
+    ///     { kind = "duplicate", eval = 1 },
+    ///     { kind = "restart", at_ms = 300, down_ms = 10 },
+    /// ]
+    /// # optionally, seeded random faults on top:
+    /// random = { seed = 7, crashes = 4, stragglers = 2, preemptions = 1,
+    ///            lost = 2, evals = 24, workers = 4, horizon_ms = 2000 }
+    /// ```
+    pub fn from_section(sec: &BTreeMap<String, Value>) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        if let Some(v) = sec.get("events") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow!("faults.events must be an array"))?;
+            for (i, e) in arr.iter().enumerate() {
+                plan.events.push(
+                    parse_event(e)
+                        .with_context(|| format!("faults.events[{i}]"))?,
+                );
+            }
+        }
+        if let Some(v) = sec.get("random") {
+            let t = v.as_table().ok_or_else(|| {
+                anyhow!("faults.random must be an inline table")
+            })?;
+            let count = |k: &str| -> Result<usize> {
+                match t.get(k) {
+                    None => Ok(0),
+                    Some(v) => v
+                        .as_i64()
+                        .filter(|n| *n >= 0)
+                        .map(|n| n as usize)
+                        .ok_or_else(|| {
+                            anyhow!("faults.random.{k} must be a count")
+                        }),
+                }
+            };
+            let defaults = RandomFaultSpec::default();
+            let spec = RandomFaultSpec {
+                crashes: count("crashes")?,
+                stragglers: count("stragglers")?,
+                preemptions: count("preemptions")?,
+                lost: count("lost")?,
+                evals: match count("evals")? {
+                    0 => defaults.evals,
+                    n => n,
+                },
+                workers: match count("workers")? {
+                    0 => defaults.workers,
+                    n => n,
+                },
+                horizon: t
+                    .get("horizon_ms")
+                    .and_then(Value::as_f64)
+                    .map(|ms| Duration::from_secs_f64(ms.max(0.0) / 1e3))
+                    .unwrap_or(defaults.horizon),
+            };
+            let seed = t
+                .get("seed")
+                .map(|v| {
+                    v.as_i64()
+                        .filter(|s| *s >= 0)
+                        .map(|s| s as u64)
+                        .ok_or_else(|| {
+                            anyhow!("faults.random.seed must be a u64")
+                        })
+                })
+                .transpose()?
+                .unwrap_or(0);
+            plan.events.extend(FaultPlan::random(seed, &spec).events);
+        }
+        // Validate eagerly so config errors surface at load time, not
+        // mid-simulation.
+        plan.compile()?;
+        Ok(plan)
+    }
+}
+
+fn parse_event(v: &Value) -> Result<Fault> {
+    let t = v
+        .as_table()
+        .ok_or_else(|| anyhow!("fault event must be an inline table"))?;
+    let kind = t
+        .get("kind")
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow!("fault event needs kind = \"...\""))?;
+    let num = |k: &str| -> Result<f64> {
+        t.get(k).and_then(Value::as_f64).ok_or_else(|| {
+            anyhow!("{kind} fault needs a numeric {k}")
+        })
+    };
+    let idx = |k: &str| -> Result<usize> {
+        t.get(k)
+            .and_then(Value::as_i64)
+            .filter(|n| *n >= 0)
+            .map(|n| n as usize)
+            .ok_or_else(|| anyhow!("{kind} fault needs an index {k}"))
+    };
+    let ms = |k: &str| -> Result<Duration> {
+        let v = num(k)?;
+        if !v.is_finite() || v < 0.0 {
+            bail!("{kind} fault: {k} = {v} must be a non-negative time");
+        }
+        Ok(Duration::from_secs_f64(v / 1e3))
+    };
+    let ms_or = |k: &str, d: Duration| -> Result<Duration> {
+        if t.contains_key(k) {
+            ms(k)
+        } else {
+            Ok(d)
+        }
+    };
+    match kind {
+        "crash" => Ok(Fault::CrashEval {
+            eval: idx("eval")?,
+            frac: num("frac")?,
+        }),
+        "crash_all" => Ok(Fault::CrashAll { frac: num("frac")? }),
+        "crash_worker" => Ok(Fault::CrashWorkerAt {
+            worker: idx("worker")?,
+            at: ms("at_ms")?,
+        }),
+        "preempt" => Ok(Fault::Preempt {
+            worker: idx("worker")?,
+            at: ms("at_ms")?,
+            down: ms_or("down_ms", Duration::ZERO)?,
+        }),
+        "straggle" => Ok(Fault::Straggle {
+            worker: idx("worker")?,
+            factor: num("factor")?,
+            from: ms_or("from_ms", Duration::ZERO)?,
+            until: ms_or("until_ms", Duration::MAX)?,
+        }),
+        "lose" => Ok(Fault::LoseResult {
+            eval: idx("eval")?,
+            times: if t.contains_key("times") { idx("times")? } else { 1 },
+        }),
+        "duplicate" => Ok(Fault::DuplicateResult { eval: idx("eval")? }),
+        "restart" => Ok(Fault::Restart {
+            at: ms("at_ms")?,
+            down: ms_or("down_ms", Duration::ZERO)?,
+        }),
+        other => bail!(
+            "unknown fault kind {other:?} (crash | crash_all | \
+             crash_worker | preempt | straggle | lose | duplicate | \
+             restart)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    #[test]
+    fn compile_is_order_invariant() {
+        let events = vec![
+            Fault::Restart { at: ms(300), down: ms(10) },
+            Fault::CrashEval { eval: 2, frac: 0.7 },
+            Fault::Straggle {
+                worker: 1,
+                factor: 2.0,
+                from: ms(0),
+                until: ms(100),
+            },
+            Fault::CrashEval { eval: 2, frac: 0.3 },
+            Fault::LoseResult { eval: 4, times: 1 },
+            Fault::Preempt { worker: 0, at: ms(50), down: ms(5) },
+            Fault::LoseResult { eval: 4, times: 2 },
+            Fault::DuplicateResult { eval: 1 },
+            Fault::CrashAll { frac: 0.9 },
+            Fault::CrashAll { frac: 0.4 },
+        ];
+        let fwd = FaultPlan { events: events.clone() }.compile().unwrap();
+        let mut rev = events;
+        rev.reverse();
+        let bwd = FaultPlan { events: rev }.compile().unwrap();
+        assert_eq!(fwd, bwd);
+        // Merge rules: min frac, summed lose counts.
+        assert_eq!(fwd.crash_eval[&2], 0.3);
+        assert_eq!(fwd.crash_all, Some(0.4));
+        assert_eq!(fwd.lose[&4], 3);
+        assert!(fwd.duplicate.contains(&1));
+        // Timed order: preempt@50 before restart@300.
+        assert_eq!(fwd.timed[0].at, ms(50));
+        assert_eq!(fwd.timed[1].at, ms(300));
+    }
+
+    #[test]
+    fn compile_rejects_bad_events() {
+        for bad in [
+            Fault::CrashEval { eval: 0, frac: 1.5 },
+            Fault::CrashAll { frac: -0.1 },
+            Fault::CrashAll { frac: f64::NAN },
+            Fault::Straggle {
+                worker: 0,
+                factor: 0.0,
+                from: ms(0),
+                until: ms(1),
+            },
+            Fault::Straggle {
+                worker: 0,
+                factor: 2.0,
+                from: ms(5),
+                until: ms(1),
+            },
+        ] {
+            let plan = FaultPlan { events: vec![bad.clone()] };
+            assert!(plan.compile().is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn random_plans_are_seed_deterministic() {
+        let spec = RandomFaultSpec {
+            crashes: 5,
+            stragglers: 3,
+            preemptions: 2,
+            lost: 2,
+            evals: 24,
+            workers: 4,
+            horizon: Duration::from_secs(2),
+        };
+        let a = FaultPlan::random(9, &spec);
+        let b = FaultPlan::random(9, &spec);
+        assert_eq!(a, b);
+        assert_eq!(a.events.len(), 12);
+        assert_ne!(a, FaultPlan::random(10, &spec));
+        // Every drawn event passes validation.
+        a.compile().unwrap();
+    }
+
+    #[test]
+    fn from_section_parses_every_kind() {
+        let text = r#"
+[faults]
+events = [
+    { kind = "crash", eval = 3, frac = 0.5 },
+    { kind = "crash_all", frac = 0.3 },
+    { kind = "crash_worker", worker = 1, at_ms = 120 },
+    { kind = "preempt", worker = 0, at_ms = 200, down_ms = 50 },
+    { kind = "straggle", worker = 2, factor = 3.0, from_ms = 0, until_ms = 400 },
+    { kind = "lose", eval = 4 },
+    { kind = "duplicate", eval = 1 },
+    { kind = "restart", at_ms = 300, down_ms = 10 },
+]
+"#;
+        let doc = crate::config::parse(text).unwrap();
+        let plan = FaultPlan::from_section(&doc["faults"]).unwrap();
+        assert_eq!(plan.events.len(), 8);
+        assert_eq!(
+            plan.events[0],
+            Fault::CrashEval { eval: 3, frac: 0.5 }
+        );
+        assert_eq!(
+            plan.events[3],
+            Fault::Preempt { worker: 0, at: ms(200), down: ms(50) }
+        );
+        assert_eq!(
+            plan.events[5],
+            Fault::LoseResult { eval: 4, times: 1 }
+        );
+        let c = plan.compile().unwrap();
+        assert_eq!(c.timed.len(), 3);
+        assert_eq!(c.straggle.len(), 1);
+    }
+
+    #[test]
+    fn from_section_draws_random_faults() {
+        let text = "[faults]\nrandom = { seed = 7, crashes = 4, \
+                    stragglers = 2, evals = 24, workers = 4, \
+                    horizon_ms = 2000 }\n";
+        let doc = crate::config::parse(text).unwrap();
+        let plan = FaultPlan::from_section(&doc["faults"]).unwrap();
+        assert_eq!(plan.events.len(), 6);
+        // Same seed, same section: same plan.
+        let again = FaultPlan::from_section(&doc["faults"]).unwrap();
+        assert_eq!(plan, again);
+    }
+
+    #[test]
+    fn from_section_rejects_garbage() {
+        for bad in [
+            "[faults]\nevents = [ { kind = \"warp\" } ]\n",
+            "[faults]\nevents = [ { eval = 1 } ]\n",
+            "[faults]\nevents = [ { kind = \"crash\", eval = 1, \
+             frac = 2.0 } ]\n",
+            "[faults]\nevents = [ { kind = \"restart\", at_ms = -5 } ]\n",
+            "[faults]\nevents = 3\n",
+        ] {
+            let doc = crate::config::parse(bad).unwrap();
+            assert!(
+                FaultPlan::from_section(&doc["faults"]).is_err(),
+                "accepted {bad}"
+            );
+        }
+    }
+}

@@ -2,16 +2,22 @@
 //! parallelism), rebuilt on threads instead of SLURM/GNU-parallel
 //! (DESIGN.md §Hardware adaptation).
 //!
-//! Three pieces:
+//! Four pieces:
 //!   * `sim`     — deterministic event-driven *virtual-time* simulator of a
 //!                 steps × tasks job. Regenerates the Fig. 8 speedup grid
-//!                 exactly (no sleeps, replayable).
+//!                 exactly (no sleeps, replayable), and doubles as the
+//!                 chaos testbed (fault-injected virtual clusters,
+//!                 DESIGN.md §12).
+//!   * `faults`  — declarative, seedable `FaultPlan`s (crashes,
+//!                 stragglers, preemptions, lost/duplicate results,
+//!                 restarts) the simulator injects.
 //!   * `workers` — the real asynchronous HPO loop: a pool of step-workers,
 //!                 per-completion surrogate refits, provenance tracking
 //!                 (Fig. 6 semantics), nested trial-/data-parallel tasks.
 //!   * `slurm`   — emits the `#SBATCH` + GNU-parallel launcher the paper
 //!                 shows, for documentation/portability parity.
 
+pub mod faults;
 pub mod sim;
 pub mod slurm;
 pub mod workers;

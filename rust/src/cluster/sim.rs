@@ -1,11 +1,19 @@
 //! Deterministic virtual-time simulator of one HPO job on a steps × tasks
 //! topology — regenerates Fig. 8 without wall-clock sleeps.
 //!
-//! Two entry points share the cluster model: [`simulate`] replays a
-//! fixed, pre-generated workload (the paper's static slicing), and
+//! Three entry points share the cluster model: [`simulate`] replays a
+//! fixed, pre-generated workload (the paper's static slicing),
 //! [`simulate_hpo`] drives a live `exec::Session` ask → tell loop in
 //! virtual time — asynchronous surrogate dynamics with deterministic
-//! replay and zero sleeps.
+//! replay and zero sleeps — and [`simulate_chaos`] is the fault-injected
+//! generalization (DESIGN.md §12): the same event loop with a
+//! [`FaultPlan`] killing, slowing, preempting, and restarting virtual
+//! workers at chosen virtual times, recovering through the *real*
+//! machinery ([`Session::requeue`] and the checkpoint JSON wire), and
+//! emitting queueing metrics ([`SimMetrics`]).
+//!
+//! [`simulate_hpo`] is literally `simulate_chaos` with an empty plan, so
+//! the chaos path is exercised by every existing speedup/causality test.
 //!
 //! Semantics follow §IV (Feature 3) exactly:
 //!   * Hyperparameter evaluations are assigned to steps by Python-style
@@ -20,12 +28,18 @@
 //!   * Exclusive processors: a step's tasks are dedicated; steps never
 //!     share processors (asserted by construction, tested).
 
+use std::collections::{BTreeMap, BTreeSet};
 use std::time::Duration;
 
+use anyhow::{bail, Result};
+
+use crate::cluster::faults::{FaultPlan, TimedKind};
 use crate::cluster::{ParallelMode, Topology};
-use crate::eval::Evaluator;
+use crate::eval::{Evaluator, TrialOutcome};
+use crate::exec::driver::DEFAULT_MAX_RETRIES;
 use crate::exec::session::{EvalJob, Session};
-use crate::optimizer::{History, HpoConfig};
+use crate::optimizer::{History, HpoConfig, RefitStats};
+use crate::util::bench::BenchRun;
 
 /// Per-evaluation input: the simulated durations of its N trials.
 #[derive(Debug, Clone)]
@@ -151,15 +165,6 @@ pub struct HpoSimResult {
     pub timeline: Vec<SimEvent>,
 }
 
-/// One job executing on a simulated step, with its (deterministic)
-/// outcomes precomputed; `tell` happens at virtual completion time.
-struct RunningJob {
-    job: EvalJob,
-    outcomes: Vec<crate::eval::TrialOutcome>,
-    start: Duration,
-    end: Duration,
-}
-
 /// Drive a full HPO experiment through the sans-IO [`Session`] in
 /// *virtual time*: the same steps × tasks cluster model as [`simulate`],
 /// but the workload is generated online by `ask` and consumed by `tell`
@@ -171,32 +176,300 @@ struct RunningJob {
 /// job; ties in completion time break by step index. With a 1×1 topology
 /// this reduces to the sequential loop, so the history matches the
 /// threaded driver's single-worker run bit-for-bit.
+///
+/// This is [`simulate_chaos`] with an empty [`FaultPlan`].
 pub fn simulate_hpo(
     evaluator: &dyn Evaluator,
     hpo: &HpoConfig,
     cfg: &SimConfig,
 ) -> HpoSimResult {
-    let steps = cfg.topology.steps;
+    let r =
+        simulate_chaos(evaluator, hpo, &ChaosConfig::fault_free(cfg.clone()))
+            .expect("a fault-free simulation cannot fail");
+    let mut timeline: Vec<SimEvent> = r
+        .events
+        .iter()
+        .filter(|e| e.kind == ChaosEventKind::Finish)
+        .map(|e| SimEvent {
+            eval_index: e.eval.expect("finish events carry an eval id"),
+            step: e.worker.expect("finish events carry a worker"),
+            start: e.since,
+            end: e.at,
+        })
+        .collect();
+    timeline.sort_by_key(|e| (e.end, e.step, e.eval_index));
+    HpoSimResult {
+        history: r.history,
+        makespan: r.metrics.makespan,
+        step_busy: r.metrics.worker_busy,
+        timeline,
+    }
+}
+
+/// Configuration of a fault-injected simulation ([`simulate_chaos`]).
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// The cluster timing model (topology, inner mode, constants).
+    pub sim: SimConfig,
+    /// The fault schedule to inject (empty = fault-free).
+    pub plan: FaultPlan,
+    /// Crashes + lost results tolerated per evaluation before the run
+    /// fails (preemptions and restarts are free — they are the
+    /// scheduler's fault, not the job's).
+    pub max_retries: usize,
+}
+
+impl ChaosConfig {
+    /// A chaos config that injects nothing — [`simulate_hpo`]'s path.
+    pub fn fault_free(sim: SimConfig) -> Self {
+        ChaosConfig {
+            sim,
+            plan: FaultPlan::default(),
+            max_retries: DEFAULT_MAX_RETRIES,
+        }
+    }
+}
+
+/// What happened at one point of a chaos simulation's event log.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosEventKind {
+    /// A worker started (or re-started) executing an evaluation.
+    Start,
+    /// An evaluation completed and its outcomes were told.
+    Finish,
+    /// A running evaluation was killed (fraction-crash or worker crash).
+    Crash,
+    /// A worker was preempted (running work requeued for free).
+    Preempt,
+    /// An evaluation completed but its result was dropped in transit.
+    Lost,
+    /// A duplicated result delivery was rejected by the session.
+    DuplicateRejected,
+    /// Cluster-wide restart through the checkpoint JSON wire.
+    Restart,
+}
+
+/// One entry of the (deterministic, bit-reproducible) chaos event log.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChaosEvent {
+    /// Virtual time the event fired.
+    pub at: Duration,
+    /// Start of the execution segment the event ends (== `at` for
+    /// events that don't end a segment: `Start`, idle `Preempt`,
+    /// `DuplicateRejected`, `Restart`).
+    pub since: Duration,
+    /// Worker involved (`None` for cluster-wide restarts).
+    pub worker: Option<usize>,
+    /// Evaluation involved, if any.
+    pub eval: Option<usize>,
+    /// What happened.
+    pub kind: ChaosEventKind,
+}
+
+/// Queueing + fault metrics of one chaos run, in the shape the
+/// `hyppo-bench-v1` JSON pipe publishes (see [`SimMetrics::record_into`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimMetrics {
+    /// Virtual time of the last event.
+    pub makespan: Duration,
+    /// Worker-time of execution segments whose results were recorded.
+    pub useful_work: Duration,
+    /// Worker-time thrown away by crashes, preemptions, lost results,
+    /// and restarts.
+    pub wasted_work: Duration,
+    /// `wasted / (useful + wasted)` (0 when no work ran).
+    pub wasted_work_fraction: f64,
+    /// `(useful + wasted) / (workers · makespan)`.
+    pub utilization: f64,
+    /// `makespan · workers / useful` — 1.0 means perfectly packed
+    /// fault-free execution, higher means idle or wasted capacity.
+    pub makespan_over_ideal: f64,
+    /// Busy (executing) time per worker, useful or not.
+    pub worker_busy: Vec<Duration>,
+    /// Queue depth over virtual time, recorded when it changes: number
+    /// of evaluations materialized by the session but neither running
+    /// nor finished-and-buffered behind the init barrier.
+    pub queue_depth: Vec<(Duration, usize)>,
+    /// Max of `queue_depth`.
+    pub max_queue_depth: usize,
+    /// Fraction-scheduled + timed worker crashes that fired.
+    pub crashes: usize,
+    /// Preemption faults that fired.
+    pub preemptions: usize,
+    /// Placements slowed by a straggler window.
+    pub straggled_evals: usize,
+    /// Completions whose results were dropped in transit.
+    pub lost_results: usize,
+    /// Duplicate deliveries rejected by the session.
+    pub duplicates_rejected: usize,
+    /// `Session::requeue` calls (crashes + preemptions + losses).
+    pub requeues: usize,
+    /// Cluster-wide restarts executed.
+    pub restarts: usize,
+}
+
+impl SimMetrics {
+    fn new(workers: usize) -> Self {
+        SimMetrics {
+            makespan: Duration::ZERO,
+            useful_work: Duration::ZERO,
+            wasted_work: Duration::ZERO,
+            wasted_work_fraction: 0.0,
+            utilization: 0.0,
+            makespan_over_ideal: 0.0,
+            worker_busy: vec![Duration::ZERO; workers],
+            queue_depth: Vec::new(),
+            max_queue_depth: 0,
+            crashes: 0,
+            preemptions: 0,
+            straggled_evals: 0,
+            lost_results: 0,
+            duplicates_rejected: 0,
+            requeues: 0,
+            restarts: 0,
+        }
+    }
+
+    fn finalize(&mut self) {
+        let useful = self.useful_work.as_secs_f64();
+        let wasted = self.wasted_work.as_secs_f64();
+        let busy = useful + wasted;
+        self.wasted_work_fraction =
+            if busy > 0.0 { wasted / busy } else { 0.0 };
+        let capacity =
+            self.makespan.as_secs_f64() * self.worker_busy.len() as f64;
+        self.utilization = if capacity > 0.0 { busy / capacity } else { 0.0 };
+        self.makespan_over_ideal =
+            if useful > 0.0 { capacity / useful } else { 0.0 };
+    }
+
+    /// Publish every metric into a [`BenchRun`]'s `derived` map (the
+    /// `hyppo-bench-v1` schema; `hyppo simulate --json` and `bench_sim`
+    /// both go through here, and CI gates on `wasted_work_fraction`).
+    pub fn record_into(&self, run: &mut BenchRun) {
+        run.metric("makespan_ms", self.makespan.as_secs_f64() * 1e3);
+        run.metric("useful_work_ms", self.useful_work.as_secs_f64() * 1e3);
+        run.metric("wasted_work_ms", self.wasted_work.as_secs_f64() * 1e3);
+        run.metric("wasted_work_fraction", self.wasted_work_fraction);
+        run.metric("utilization", self.utilization);
+        run.metric("makespan_over_ideal", self.makespan_over_ideal);
+        run.metric("max_queue_depth", self.max_queue_depth as f64);
+        run.metric("crashes", self.crashes as f64);
+        run.metric("preemptions", self.preemptions as f64);
+        run.metric("straggled_evals", self.straggled_evals as f64);
+        run.metric("lost_results", self.lost_results as f64);
+        run.metric(
+            "duplicates_rejected",
+            self.duplicates_rejected as f64,
+        );
+        run.metric("requeues", self.requeues as f64);
+        run.metric("restarts", self.restarts as f64);
+    }
+}
+
+/// Outcome of a fault-injected virtual-time run.
+#[derive(Debug, Clone)]
+pub struct ChaosResult {
+    /// Evaluations recorded, in (virtual) completion order.
+    pub history: History,
+    /// Surrogate refit counters (bit-compared against fault-free runs
+    /// by the equivalence tests).
+    pub refits: RefitStats,
+    /// The full event log, in firing order — bit-reproducible from
+    /// (config seed, fault plan, topology).
+    pub events: Vec<ChaosEvent>,
+    /// Queueing + fault metrics.
+    pub metrics: SimMetrics,
+}
+
+/// A virtual worker's state between events.
+enum WorkerState {
+    Idle,
+    Down { until: Duration },
+    Busy(RunningEval),
+}
+
+/// One evaluation executing on a virtual worker, outcomes precomputed
+/// (deterministic per (θ, trial, seed)), delivered at completion time.
+struct RunningEval {
+    job: EvalJob,
+    outcomes: Vec<TrialOutcome>,
+    start: Duration,
+    end: Duration,
+    /// Scheduled fraction-crash time (`start + frac·duration`), if any.
+    crash_at: Option<Duration>,
+}
+
+/// Count a consumed retry for `id`; fail the run past the budget.
+fn bump_retry(
+    retries: &mut BTreeMap<usize, usize>,
+    id: usize,
+    max: usize,
+) -> Result<()> {
+    let n = retries.entry(id).or_insert(0);
+    *n += 1;
+    if *n > max {
+        bail!(
+            "evaluation {id} lost {n} attempt(s), exceeding \
+             max_retries = {max}"
+        );
+    }
+    Ok(())
+}
+
+/// Drive a full HPO experiment through the sans-IO [`Session`] on a
+/// virtual cluster while injecting a [`FaultPlan`] (DESIGN.md §12).
+///
+/// Recovery is real, not mocked: killed evaluations go through
+/// [`Session::requeue`] (FIFO hand-out re-issues them before new
+/// proposals, usually to the worker that just freed), and cluster-wide
+/// restarts pass the session through the actual checkpoint JSON wire
+/// (`snapshot → to_json_string → from_json_str → restore`).
+///
+/// Event ordering is total and deterministic: the next event is the
+/// lexicographic minimum of `(time, class, worker)` where class ranks
+/// timed faults < fraction-crashes < completions < down-worker wakes;
+/// idle workers refill in index order after every event. Hence the
+/// whole run — event log, history, metrics — is bit-reproducible from
+/// (HpoConfig seed, fault plan, topology).
+pub fn simulate_chaos(
+    evaluator: &dyn Evaluator,
+    hpo: &HpoConfig,
+    cfg: &ChaosConfig,
+) -> Result<ChaosResult> {
+    let plan = cfg.plan.compile()?;
+    let steps = cfg.sim.topology.steps;
     let mut session = Session::new(evaluator, hpo);
-    let mut running: Vec<Option<RunningJob>> = Vec::new();
-    running.resize_with(steps, || None);
-    let mut free_at = vec![Duration::ZERO; steps];
-    let mut step_busy = vec![Duration::ZERO; steps];
-    let mut timeline = Vec::new();
-    // Virtual clock: advances to each completion as it is consumed.
+    let mut workers: Vec<WorkerState> =
+        (0..steps).map(|_| WorkerState::Idle).collect();
+    let mut events: Vec<ChaosEvent> = Vec::new();
+    let mut m = SimMetrics::new(steps);
     let mut now = Duration::ZERO;
+    let mut timed_idx = 0usize;
+    // Crash-once bookkeeping: an evaluation gets at most one scheduled
+    // fraction-crash, marked at placement (it survives restarts).
+    let mut crashed: BTreeSet<usize> = BTreeSet::new();
+    let mut dup_fired: BTreeSet<usize> = BTreeSet::new();
+    let mut lose_left: BTreeMap<usize, usize> = plan.lose.clone();
+    let mut retries: BTreeMap<usize, usize> = BTreeMap::new();
+    // Completed-but-unrecorded evaluations (init barrier), tracked for
+    // the queue-depth metric only.
+    let mut buffered = 0usize;
+    let mut last_depth = usize::MAX;
 
     loop {
-        // Fill every idle step (in index order) with the next job. A
-        // step freed in the past can only pick up work created *now*.
+        // 1. Fill idle workers in index order with evaluation-granular
+        //    jobs. A requeued evaluation re-emerges here first (FIFO).
+        let mut busy = workers
+            .iter()
+            .filter(|w| matches!(w, WorkerState::Busy(_)))
+            .count();
         for s in 0..steps {
-            if running[s].is_some() {
+            if !matches!(workers[s], WorkerState::Idle) {
                 continue;
             }
             let Some(job) = session.ask_eval() else { break };
-            // Outcomes are deterministic per (θ, trial, seed): compute
-            // them at placement, deliver them at completion time.
-            let outcomes: Vec<_> = job
+            let outcomes: Vec<TrialOutcome> = job
                 .trials
                 .iter()
                 .map(|&t| evaluator.run_trial(&job.theta, t, job.seed))
@@ -204,47 +477,297 @@ pub fn simulate_hpo(
             let cost = EvalCost {
                 trial_costs: outcomes.iter().map(|o| o.cost).collect(),
             };
-            let d = eval_duration(&cost, cfg);
-            let start = free_at[s].max(now);
-            step_busy[s] += d;
-            running[s] =
-                Some(RunningJob { job, outcomes, start, end: start + d });
+            let mut d = eval_duration(&cost, &cfg.sim);
+            // Straggler windows matching (worker, start time) multiply
+            // the duration of work *started* inside them.
+            let factor: f64 = plan
+                .straggle
+                .iter()
+                .filter(|w| w.worker == s && now >= w.from && now < w.until)
+                .map(|w| w.factor)
+                .product();
+            if factor != 1.0 {
+                d = d.mul_f64(factor);
+                m.straggled_evals += 1;
+            }
+            let crash_frac =
+                plan.crash_eval.get(&job.id).copied().or(plan.crash_all);
+            let crash_at = match crash_frac {
+                Some(frac) if crashed.insert(job.id) => {
+                    Some(now + d.mul_f64(frac))
+                }
+                _ => None,
+            };
+            events.push(ChaosEvent {
+                at: now,
+                since: now,
+                worker: Some(s),
+                eval: Some(job.id),
+                kind: ChaosEventKind::Start,
+            });
+            workers[s] = WorkerState::Busy(RunningEval {
+                job,
+                outcomes,
+                start: now,
+                end: now + d,
+                crash_at,
+            });
+            busy += 1;
         }
-        // Complete the earliest-finishing job (ties: lowest step).
-        let Some(s) = earliest_running(&running) else { break };
-        let rj = running[s].take().expect("selected step is running");
-        now = rj.end;
-        free_at[s] = rj.end;
-        for (&t, o) in rj.job.trials.iter().zip(rj.outcomes) {
-            session
-                .tell(rj.job.id, t, o)
-                .expect("simulated outcomes match asked trials");
+        // 2. Sample queue depth (recorded on change).
+        let depth = session.in_flight().saturating_sub(busy + buffered);
+        if depth != last_depth {
+            m.queue_depth.push((now, depth));
+            m.max_queue_depth = m.max_queue_depth.max(depth);
+            last_depth = depth;
         }
-        timeline.push(SimEvent {
-            eval_index: rj.job.id,
-            step: s,
-            start: rj.start,
-            end: rj.end,
-        });
+        // 3. Done when the budget is recorded and nothing is running
+        //    (unconsumed timed faults past the end are ignored).
+        if busy == 0 && session.is_complete() {
+            break;
+        }
+        // 4. Next event: lexicographic min of (time, class, worker).
+        let mut cands: Vec<(Duration, u8, usize)> = Vec::new();
+        if let Some(tf) = plan.timed.get(timed_idx) {
+            cands.push((tf.at.max(now), 0, 0));
+        }
+        for (s, w) in workers.iter().enumerate() {
+            match w {
+                WorkerState::Busy(r) => {
+                    if let Some(c) = r.crash_at {
+                        cands.push((c, 1, s));
+                    }
+                    cands.push((r.end, 2, s));
+                }
+                WorkerState::Down { until } => cands.push((*until, 3, s)),
+                WorkerState::Idle => {}
+            }
+        }
+        let Some(&(t, class, s)) = cands.iter().min() else {
+            bail!(
+                "chaos simulation starved: no running work, no pending \
+                 faults, and the session is not complete"
+            );
+        };
+        now = t;
+        match class {
+            // A timed cluster-level fault fires.
+            0 => {
+                let tf = plan.timed[timed_idx];
+                timed_idx += 1;
+                match tf.kind {
+                    TimedKind::CrashWorker { worker } => {
+                        if worker < steps
+                            && matches!(
+                                workers[worker],
+                                WorkerState::Busy(_)
+                            )
+                        {
+                            let WorkerState::Busy(r) = std::mem::replace(
+                                &mut workers[worker],
+                                WorkerState::Idle,
+                            ) else {
+                                unreachable!()
+                            };
+                            m.wasted_work += now - r.start;
+                            m.worker_busy[worker] += now - r.start;
+                            m.crashes += 1;
+                            bump_retry(
+                                &mut retries,
+                                r.job.id,
+                                cfg.max_retries,
+                            )?;
+                            session.requeue(r.job.id)?;
+                            m.requeues += 1;
+                            events.push(ChaosEvent {
+                                at: now,
+                                since: r.start,
+                                worker: Some(worker),
+                                eval: Some(r.job.id),
+                                kind: ChaosEventKind::Crash,
+                            });
+                        }
+                    }
+                    TimedKind::Preempt { worker, down } => {
+                        if worker < steps {
+                            let prev = std::mem::replace(
+                                &mut workers[worker],
+                                WorkerState::Down { until: now + down },
+                            );
+                            if let WorkerState::Busy(r) = prev {
+                                m.wasted_work += now - r.start;
+                                m.worker_busy[worker] += now - r.start;
+                                // Preemption is free: no retry consumed.
+                                session.requeue(r.job.id)?;
+                                m.requeues += 1;
+                                events.push(ChaosEvent {
+                                    at: now,
+                                    since: r.start,
+                                    worker: Some(worker),
+                                    eval: Some(r.job.id),
+                                    kind: ChaosEventKind::Preempt,
+                                });
+                            } else {
+                                events.push(ChaosEvent {
+                                    at: now,
+                                    since: now,
+                                    worker: Some(worker),
+                                    eval: None,
+                                    kind: ChaosEventKind::Preempt,
+                                });
+                            }
+                            m.preemptions += 1;
+                        }
+                    }
+                    TimedKind::Restart { down } => {
+                        for (w_idx, w) in workers.iter_mut().enumerate() {
+                            let prev = std::mem::replace(
+                                w,
+                                WorkerState::Down { until: now + down },
+                            );
+                            if let WorkerState::Busy(r) = prev {
+                                m.wasted_work += now - r.start;
+                                m.worker_busy[w_idx] += now - r.start;
+                            }
+                        }
+                        // The real recovery path: snapshot → JSON wire →
+                        // restore. Un-recorded tells are lost; restored
+                        // in-flight evaluations re-run from trial 0.
+                        let ckpt = session.snapshot().wire_roundtrip()?;
+                        session =
+                            Session::restore(evaluator, hpo, ckpt)?;
+                        buffered = 0;
+                        m.restarts += 1;
+                        events.push(ChaosEvent {
+                            at: now,
+                            since: now,
+                            worker: None,
+                            eval: None,
+                            kind: ChaosEventKind::Restart,
+                        });
+                    }
+                }
+            }
+            // A scheduled fraction-crash kills a running evaluation.
+            1 => {
+                let WorkerState::Busy(r) = std::mem::replace(
+                    &mut workers[s],
+                    WorkerState::Idle,
+                ) else {
+                    unreachable!()
+                };
+                m.wasted_work += now - r.start;
+                m.worker_busy[s] += now - r.start;
+                m.crashes += 1;
+                bump_retry(&mut retries, r.job.id, cfg.max_retries)?;
+                session.requeue(r.job.id)?;
+                m.requeues += 1;
+                events.push(ChaosEvent {
+                    at: now,
+                    since: r.start,
+                    worker: Some(s),
+                    eval: Some(r.job.id),
+                    kind: ChaosEventKind::Crash,
+                });
+            }
+            // An evaluation completes (or its result is lost in transit).
+            2 => {
+                let WorkerState::Busy(r) = std::mem::replace(
+                    &mut workers[s],
+                    WorkerState::Idle,
+                ) else {
+                    unreachable!()
+                };
+                let d = now - r.start;
+                m.worker_busy[s] += d;
+                let lost = lose_left
+                    .get_mut(&r.job.id)
+                    .filter(|n| **n > 0)
+                    .map(|n| *n -= 1)
+                    .is_some();
+                if lost {
+                    m.wasted_work += d;
+                    m.lost_results += 1;
+                    bump_retry(&mut retries, r.job.id, cfg.max_retries)?;
+                    session.requeue(r.job.id)?;
+                    m.requeues += 1;
+                    events.push(ChaosEvent {
+                        at: now,
+                        since: r.start,
+                        worker: Some(s),
+                        eval: Some(r.job.id),
+                        kind: ChaosEventKind::Lost,
+                    });
+                } else {
+                    m.useful_work += d;
+                    let mut recorded = 0usize;
+                    let mut extended = 0usize;
+                    for (&t, o) in r.job.trials.iter().zip(&r.outcomes) {
+                        let told = session
+                            .tell(r.job.id, t, o.clone())
+                            .expect(
+                                "simulated outcomes match asked trials",
+                            );
+                        recorded += told.recorded;
+                        extended += told.extended;
+                    }
+                    // Init-barrier buffer tracking (queue-depth metric):
+                    // a flush empties the buffer; a complete-but-silent
+                    // evaluation joined it.
+                    if recorded > 1 {
+                        buffered = 0;
+                    } else if recorded == 0 && extended == 0 {
+                        buffered += 1;
+                    }
+                    events.push(ChaosEvent {
+                        at: now,
+                        since: r.start,
+                        worker: Some(s),
+                        eval: Some(r.job.id),
+                        kind: ChaosEventKind::Finish,
+                    });
+                    if plan.duplicate.contains(&r.job.id)
+                        && dup_fired.insert(r.job.id)
+                    {
+                        // Deliver the first trial outcome again; the
+                        // session must reject it (duplicate-or-unknown).
+                        let dup = session.tell(
+                            r.job.id,
+                            r.job.trials[0],
+                            r.outcomes[0].clone(),
+                        );
+                        if dup.is_ok() {
+                            bail!(
+                                "duplicate outcome for evaluation {} \
+                                 was accepted",
+                                r.job.id
+                            );
+                        }
+                        m.duplicates_rejected += 1;
+                        events.push(ChaosEvent {
+                            at: now,
+                            since: now,
+                            worker: Some(s),
+                            eval: Some(r.job.id),
+                            kind: ChaosEventKind::DuplicateRejected,
+                        });
+                    }
+                }
+            }
+            // A down worker comes back.
+            _ => workers[s] = WorkerState::Idle,
+        }
     }
 
-    timeline.sort_by_key(|e| (e.end, e.step, e.eval_index));
-    HpoSimResult {
+    m.makespan = now;
+    m.finalize();
+    let refits = session.stats();
+    Ok(ChaosResult {
         history: session.into_history(),
-        makespan: free_at.iter().copied().max().unwrap_or(Duration::ZERO),
-        step_busy,
-        timeline,
-    }
-}
-
-/// Index of the running job with the earliest end (ties: lowest step).
-fn earliest_running(running: &[Option<RunningJob>]) -> Option<usize> {
-    running
-        .iter()
-        .enumerate()
-        .filter_map(|(s, r)| r.as_ref().map(|r| (r.end, s)))
-        .min()
-        .map(|(_, s)| s)
+        refits,
+        events,
+        metrics: m,
+    })
 }
 
 /// Speedup of a topology vs the serial 1×1 baseline on the same workload.

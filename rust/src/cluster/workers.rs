@@ -158,6 +158,116 @@ mod tests {
         }
     }
 
+    /// Wraps a deterministic evaluator and panics (simulating a worker
+    /// death) for the first `deaths` trials it is asked to run. After
+    /// the budget is spent it behaves exactly like the inner evaluator,
+    /// so a retried run must reproduce the clean run bit-for-bit.
+    struct FlakyEvaluator {
+        inner: SyntheticEvaluator,
+        deaths_left: std::sync::atomic::AtomicUsize,
+    }
+
+    impl FlakyEvaluator {
+        fn new(inner: SyntheticEvaluator, deaths: usize) -> Self {
+            Self {
+                inner,
+                deaths_left: std::sync::atomic::AtomicUsize::new(deaths),
+            }
+        }
+    }
+
+    impl crate::eval::Evaluator for FlakyEvaluator {
+        fn space(&self) -> &Space {
+            self.inner.space()
+        }
+
+        fn run_trial(
+            &self,
+            theta: &[crate::space::Value],
+            trial: usize,
+            seed: u64,
+        ) -> crate::eval::TrialOutcome {
+            use std::sync::atomic::Ordering::SeqCst;
+            let died = self
+                .deaths_left
+                .fetch_update(SeqCst, SeqCst, |n| n.checked_sub(1))
+                .is_ok();
+            if died {
+                panic!("injected worker death");
+            }
+            self.inner.run_trial(theta, trial, seed)
+        }
+
+        fn n_params(&self, theta: &[crate::space::Value]) -> u64 {
+            self.inner.n_params(theta)
+        }
+    }
+
+    #[test]
+    fn worker_deaths_are_requeued_without_deadlock() {
+        // Three injected panics across a 4-worker pool: the run must
+        // still complete the full budget with unique ids — no lost
+        // evaluations, no double-tells, no hung coordinator.
+        let ev = FlakyEvaluator::new(evaluator(), 3);
+        let h = run_async(&ev, &config(4, 1, 24));
+        assert_eq!(h.len(), 24);
+        let ids: HashSet<usize> =
+            h.records.iter().map(|r| r.id).collect();
+        assert_eq!(ids.len(), 24);
+    }
+
+    #[test]
+    fn retried_run_matches_clean_run_bit_for_bit() {
+        // One worker: completion order is deterministic, so the flaky
+        // run (2 deaths, then retries through Session::requeue) must
+        // reproduce the clean history exactly.
+        let cfg = config(1, 1, 14);
+        let clean = run_async(&evaluator(), &cfg);
+
+        let ev = FlakyEvaluator::new(evaluator(), 2);
+        let exec_cfg = ExecConfig::new(
+            cfg.hpo.clone(),
+            cfg.topology,
+            cfg.mode,
+            cfg.time_scale,
+        );
+        let out = crate::exec::run_experiment(&ev, &exec_cfg)
+            .expect("flaky run stays under max_retries");
+        assert!(
+            out.stats.requeues >= 1,
+            "injected deaths were never requeued"
+        );
+        assert_eq!(out.history.len(), clean.len());
+        for (a, b) in
+            out.history.records.iter().zip(clean.records.iter())
+        {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.theta, b.theta);
+            assert_eq!(
+                a.summary.trained_mean.to_bits(),
+                b.summary.trained_mean.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_is_a_clean_error() {
+        let ev = FlakyEvaluator::new(evaluator(), usize::MAX);
+        let mut exec_cfg = ExecConfig::new(
+            config(2, 1, 12).hpo,
+            Topology::new(2, 1),
+            ParallelMode::TrialParallel,
+            2e-5,
+        );
+        exec_cfg.max_retries = 0;
+        let err = crate::exec::run_experiment(&ev, &exec_cfg)
+            .expect_err("an always-dying evaluator must fail the run");
+        assert!(
+            err.to_string().contains("max_retries"),
+            "unexpected error: {err}"
+        );
+    }
+
     #[test]
     fn trial_parallel_nested_execution_correct() {
         // Nested inner threads must return all N outcomes in trial order.

@@ -8,7 +8,10 @@
 //! our configs need (no serde offline). Comment stripping and
 //! array/table splitting are quote-aware: `#` and `,` inside string
 //! literals are data, not syntax. Strings are basic double-quoted
-//! literals without escape sequences.
+//! literals without escape sequences. A value whose brackets are still
+//! open at end of line continues on the next line, so arrays of inline
+//! tables (the `[faults]` event grammar) can be written one entry per
+//! line like real TOML.
 
 use std::collections::BTreeMap;
 
@@ -167,11 +170,36 @@ fn parse_value(raw: &str) -> Result<Value> {
     bail!("unparseable value: {t:?}")
 }
 
+/// Net bracket depth of `line` starting from `depth`, ignoring brackets
+/// inside string literals. Errors on a close without an open or on a
+/// string literal left open at end of line (strings don't span lines).
+fn open_depth(line: &str, depth: usize) -> Result<usize> {
+    let mut depth = depth;
+    let mut in_str = false;
+    for c in line.chars() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' | '{' if !in_str => depth += 1,
+            ']' | '}' if !in_str => {
+                depth = depth
+                    .checked_sub(1)
+                    .ok_or_else(|| anyhow!("unbalanced brackets"))?;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        bail!("unterminated string literal");
+    }
+    Ok(depth)
+}
+
 /// Parse a TOML-subset document.
 pub fn parse(text: &str) -> Result<Doc> {
     let mut doc: Doc = BTreeMap::new();
     let mut section = String::new();
-    for (lineno, raw) in text.lines().enumerate() {
+    let mut lines = text.lines().enumerate();
+    while let Some((lineno, raw)) = lines.next() {
         let line = strip_comment(raw).trim();
         if line.is_empty() {
             continue;
@@ -184,7 +212,22 @@ pub fn parse(text: &str) -> Result<Doc> {
         let (k, v) = line
             .split_once('=')
             .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
-        let value = parse_value(v)
+        // A value whose brackets stay open continues on following lines
+        // (arrays of inline tables written one entry per line).
+        let mut value_src = v.trim().to_string();
+        let mut depth = open_depth(&value_src, 0)
+            .with_context(|| format!("line {}", lineno + 1))?;
+        while depth > 0 {
+            let Some((contno, cont_raw)) = lines.next() else {
+                bail!("line {}: value is missing a closing bracket", lineno + 1);
+            };
+            let cont = strip_comment(cont_raw).trim();
+            value_src.push(' ');
+            value_src.push_str(cont);
+            depth = open_depth(cont, depth)
+                .with_context(|| format!("line {}", contno + 1))?;
+        }
+        let value = parse_value(&value_src)
             .with_context(|| format!("line {}", lineno + 1))?;
         doc.entry(section.clone())
             .or_default()
@@ -457,11 +500,17 @@ pub fn build(doc: &Doc) -> Result<RunConfig> {
     })
 }
 
-/// Parse + build from a file path.
-pub fn load(path: &std::path::Path) -> Result<RunConfig> {
+/// Parse a file into a raw [`Doc`] — for callers that read extra
+/// sections (e.g. `[faults]`, `[sim]`) beyond what [`build`] consumes.
+pub fn load_doc(path: &std::path::Path) -> Result<Doc> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading {}", path.display()))?;
-    build(&parse(&text)?)
+    parse(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Parse + build from a file path.
+pub fn load(path: &std::path::Path) -> Result<RunConfig> {
+    build(&load_doc(path)?)
 }
 
 #[cfg(test)]
@@ -665,6 +714,29 @@ batch = { kind = \"ordinal\", levels = [16, 32, 64, 128] }
     fn parse_errors_carry_line_numbers() {
         let err = parse("[s]\nkey value\n").unwrap_err();
         assert!(format!("{err:#}").contains("line 2"));
+    }
+
+    #[test]
+    fn multiline_arrays_of_tables() {
+        let doc = parse(
+            "[faults]\n\
+             events = [   # one entry per line, like real TOML\n\
+             { kind = \"crash\", eval = 3, frac = 0.5 },\n\
+             { kind = \"straggle\", worker = 1, factor = 2.0 },\n\
+             ]\n\
+             after = 7\n",
+        )
+        .unwrap();
+        let events = doc["faults"]["events"].as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(
+            events[0].as_table().unwrap()["kind"],
+            Value::Str("crash".into())
+        );
+        // Parsing resumes normally after the closing bracket.
+        assert_eq!(doc["faults"]["after"], Value::Int(7));
+        // A never-closed bracket is an error, not a hang.
+        assert!(parse("[s]\nx = [1, 2,\n").is_err());
     }
 
     #[test]

@@ -217,6 +217,15 @@ impl Checkpoint {
         })
     }
 
+    /// Serialize to JSON text and parse straight back — the in-memory
+    /// equivalent of a kill + resume from disk. The chaos simulator's
+    /// restart fault (`cluster::sim::simulate_chaos`) recovers through
+    /// this call, so simulated recovery exercises the real wire format,
+    /// not a clone of the live state.
+    pub fn wire_roundtrip(&self) -> Result<Checkpoint> {
+        Self::from_json_str(&self.to_json_string())
+    }
+
     /// Atomically write the checkpoint: serialize to `<path>.tmp`, then
     /// rename over `path`, so a kill mid-write never corrupts the last
     /// good snapshot.
@@ -316,6 +325,16 @@ mod tests {
             assert_eq!(a.summary.interval.center, b.summary.interval.center);
             assert_eq!(a.summary.trained_std, b.summary.trained_std);
         }
+    }
+
+    #[test]
+    fn wire_roundtrip_matches_disk_roundtrip() {
+        let c = sample();
+        let w = c.wire_roundtrip().unwrap();
+        assert_eq!(w.seed, c.seed);
+        assert_eq!(w.rng_state, c.rng_state);
+        assert_eq!(w.in_flight, c.in_flight);
+        assert_eq!(w.to_json_string(), c.to_json_string());
     }
 
     #[test]

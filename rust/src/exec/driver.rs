@@ -24,17 +24,24 @@
 //!   (one worker, or cost-ordered simulated sleeps) the resumed run is
 //!   bit-for-bit the run that was killed.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::cluster::{ParallelMode, Topology};
 use crate::eval::{Evaluator, TrialOutcome};
 use crate::exec::checkpoint::Checkpoint;
 use crate::exec::session::{EvalJob, Session};
 use crate::optimizer::{History, HpoConfig, RefitStats};
+
+/// Default number of times one evaluation may die (worker panic in the
+/// driver, crash/lost-result faults in the chaos simulator) before the
+/// whole run fails. Shared by `ExecConfig` and `cluster::sim::ChaosConfig`
+/// so the real and simulated recovery paths tolerate the same abuse.
+pub const DEFAULT_MAX_RETRIES: usize = 8;
 
 /// When and where the driver snapshots the session.
 #[derive(Debug, Clone)]
@@ -70,6 +77,9 @@ pub struct ExecConfig {
     /// recorded *in this process* — used by tests and by operators who
     /// want to hand an experiment over to a larger allocation.
     pub max_completions: Option<usize>,
+    /// Worker deaths (panics) tolerated per evaluation before the run
+    /// fails; each death requeues the evaluation through the session.
+    pub max_retries: usize,
 }
 
 impl ExecConfig {
@@ -87,6 +97,7 @@ impl ExecConfig {
             time_scale,
             checkpoint: None,
             max_completions: None,
+            max_retries: DEFAULT_MAX_RETRIES,
         }
     }
 }
@@ -100,6 +111,8 @@ pub struct ExecStats {
     pub completions: u64,
     /// Checkpoint snapshots written.
     pub checkpoints_written: u64,
+    /// Evaluations requeued after a worker death.
+    pub requeues: u64,
     /// Whether this run continued a checkpoint.
     pub resumed: bool,
 }
@@ -120,6 +133,15 @@ pub struct ExecOutcome {
 struct Completion {
     id: usize,
     outcomes: Vec<(usize, TrialOutcome)>,
+}
+
+/// What a worker reports back to the coordinator.
+enum WorkerMsg {
+    /// The evaluation ran to completion.
+    Done(Completion),
+    /// The evaluation panicked mid-run (a simulated or genuine worker
+    /// death); the coordinator decides whether to requeue or fail.
+    Died { id: usize },
 }
 
 type JobQueue = Arc<(Mutex<VecDeque<Option<EvalJob>>>, Condvar)>;
@@ -222,7 +244,7 @@ fn drive(
 
     let queue: JobQueue =
         Arc::new((Mutex::new(VecDeque::new()), Condvar::new()));
-    let (done_tx, done_rx) = mpsc::channel::<Completion>();
+    let (done_tx, done_rx) = mpsc::channel::<WorkerMsg>();
 
     std::thread::scope(|scope| {
         // --- workers ------------------------------------------------------
@@ -244,18 +266,33 @@ fn drive(
                     }
                 };
                 let Some(job) = job else { break }; // poison pill
-                let outcomes = run_evaluation(
-                    evaluator,
-                    &job.theta,
-                    &job.trials,
-                    job.seed,
-                    tasks,
-                    mode,
-                    time_scale,
-                );
-                let outcomes =
-                    job.trials.iter().copied().zip(outcomes).collect();
-                let _ = done_tx.send(Completion { id: job.id, outcomes });
+                // Contain evaluator panics to the evaluation: a dead
+                // worker reports `Died` and survives to take the next
+                // job, instead of poisoning the whole pool.
+                let ran = catch_unwind(AssertUnwindSafe(|| {
+                    run_evaluation(
+                        evaluator,
+                        &job.theta,
+                        &job.trials,
+                        job.seed,
+                        tasks,
+                        mode,
+                        time_scale,
+                    )
+                }));
+                let msg = match ran {
+                    Ok(outcomes) => WorkerMsg::Done(Completion {
+                        id: job.id,
+                        outcomes: job
+                            .trials
+                            .iter()
+                            .copied()
+                            .zip(outcomes)
+                            .collect(),
+                    }),
+                    Err(_) => WorkerMsg::Died { id: job.id },
+                };
+                let _ = done_tx.send(msg);
             });
         }
         drop(done_tx);
@@ -285,20 +322,63 @@ fn drive(
 
         let mut completions_this_run: u64 = 0;
         let mut stop_early = fatal.is_some();
+        let mut deaths: HashMap<usize, usize> = HashMap::new();
 
         while outstanding > 0 && !stop_early {
-            let Ok(c) = done_rx.recv() else { break };
+            let msg = match done_rx.recv() {
+                Ok(m) => m,
+                Err(_) => {
+                    // Workers only exit on poison pills, which are sent
+                    // after this loop — a disconnect here means the pool
+                    // died out from under us.
+                    fatal = Some(anyhow!(
+                        "worker pool terminated with {outstanding} \
+                         evaluation(s) outstanding"
+                    ));
+                    break;
+                }
+            };
             outstanding -= 1;
-            // Feed every trial outcome back; the session records the
-            // evaluation (or schedules adaptive replicas) on the last.
             let mut recorded_now = 0u64;
-            for (trial, outcome) in c.outcomes {
-                match session.tell(c.id, trial, outcome) {
-                    Ok(told) => recorded_now += told.recorded as u64,
-                    Err(e) => {
-                        fatal = Some(e);
+            match msg {
+                // Feed every trial outcome back; the session records the
+                // evaluation (or schedules adaptive replicas) on the last.
+                WorkerMsg::Done(c) => {
+                    for (trial, outcome) in c.outcomes {
+                        match session.tell(c.id, trial, outcome) {
+                            Ok(told) => {
+                                recorded_now += told.recorded as u64
+                            }
+                            Err(e) => {
+                                fatal = Some(e);
+                                stop_early = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+                // A worker died mid-evaluation: requeue (the session
+                // re-hands the same (θ, seed) job, so a deterministic
+                // evaluator reproduces the lost work exactly) until the
+                // retry budget runs out.
+                WorkerMsg::Died { id } => {
+                    let n = deaths.entry(id).or_insert(0);
+                    *n += 1;
+                    if *n > cfg.max_retries {
+                        fatal = Some(anyhow!(
+                            "evaluation {id} died {n} time(s), \
+                             exceeding max_retries = {}",
+                            cfg.max_retries
+                        ));
                         stop_early = true;
-                        break;
+                    } else {
+                        match session.requeue(id) {
+                            Ok(()) => stats.requeues += 1,
+                            Err(e) => {
+                                fatal = Some(e);
+                                stop_early = true;
+                            }
+                        }
                     }
                 }
             }

@@ -29,7 +29,7 @@ pub mod sweep;
 pub use checkpoint::{Checkpoint, PendingJob, CHECKPOINT_VERSION};
 pub use driver::{
     resume_experiment, run_experiment, CheckpointPolicy, ExecConfig,
-    ExecOutcome, ExecStats,
+    ExecOutcome, ExecStats, DEFAULT_MAX_RETRIES,
 };
 pub use session::{Ask, EvalJob, Session, Told, Trial, TrialKind};
 pub use sweep::{run_sweep, SweepCell};

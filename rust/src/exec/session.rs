@@ -395,6 +395,34 @@ impl<'ev> Session<'ev> {
         })
     }
 
+    /// Forget every outcome of an in-flight evaluation and hand its
+    /// trials out again from trial 0 — the recovery path for a worker
+    /// that died, was preempted, or lost its result channel. The
+    /// evaluation keeps its identity (id, θ, seed, provenance) and its
+    /// current `planned` count, so a deterministic evaluator replays the
+    /// exact same trial set and the optimization trace is unchanged (the
+    /// chaos testbed's headline invariant, `tests/chaos.rs`). FIFO
+    /// hand-out means a requeued evaluation re-emerges from
+    /// [`Session::ask`] before any new proposal.
+    pub fn requeue(&mut self, eval_id: usize) -> Result<()> {
+        let p = self
+            .pending
+            .iter_mut()
+            .find(|p| p.job.id == eval_id)
+            .ok_or_else(|| {
+                anyhow!("requeue for unknown evaluation {eval_id}")
+            })?;
+        if p.buffered {
+            bail!(
+                "evaluation {eval_id} already completed (buffered behind \
+                 the init barrier); refusing to requeue finished work"
+            );
+        }
+        p.handed = 0;
+        p.outcomes = vec![None; p.planned];
+        Ok(())
+    }
+
     /// Absorb one trial outcome. When this completes the evaluation's
     /// trial set, the evaluation is aggregated (Eqs. 4-9) and recorded —
     /// or extended with a replica when the
@@ -719,6 +747,103 @@ mod tests {
             assert_eq!(*n, 4, "evaluation {id} ran {n} trials");
         }
         assert_eq!(replicas, 8 * 2);
+    }
+
+    #[test]
+    fn requeue_replays_bit_identically() {
+        let ev = evaluator(5);
+        let hpo = cfg(10, 6);
+
+        let mut reference = Session::new(&ev, &hpo);
+        drain(&mut reference);
+        let reference = reference.into_history();
+
+        // Run 13 trials (leaving one proposal mid-evaluation), then
+        // pretend its worker died: requeue and finish.
+        let mut s = Session::new(&ev, &hpo);
+        let mut last_id = 0;
+        for _ in 0..13 {
+            match s.ask() {
+                Ask::Trial(t) => {
+                    last_id = t.eval_id;
+                    let o = ev.run_trial(&t.theta, t.trial, t.seed);
+                    s.tell(t.eval_id, t.trial, o).unwrap();
+                }
+                _ => unreachable!(),
+            }
+        }
+        s.requeue(last_id).unwrap();
+        drain(&mut s);
+        let replayed = s.into_history();
+
+        assert_eq!(reference.len(), replayed.len());
+        for (a, b) in reference.records.iter().zip(&replayed.records) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.theta, b.theta);
+            assert_eq!(a.provenance, b.provenance);
+            assert_eq!(
+                a.summary.interval.center.to_bits(),
+                b.summary.interval.center.to_bits()
+            );
+            assert_eq!(
+                a.summary.interval.radius.to_bits(),
+                b.summary.interval.radius.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn requeue_rejects_unknown_recorded_and_buffered() {
+        let ev = evaluator(2);
+        let mut s = Session::new(&ev, &cfg(10, 3));
+        // Unknown id.
+        assert!(s.requeue(999).is_err());
+        // Complete evaluation 0 only: it buffers behind the init barrier
+        // — its work is finished, so requeueing it must be refused.
+        let mut trials = Vec::new();
+        while let Ask::Trial(t) = s.ask() {
+            trials.push(t);
+        }
+        for t in trials.iter().filter(|t| t.eval_id == 0) {
+            let o = ev.run_trial(&t.theta, t.trial, t.seed);
+            s.tell(t.eval_id, t.trial, o).unwrap();
+        }
+        let err = s.requeue(0).unwrap_err();
+        assert!(format!("{err:#}").contains("completed"));
+        // Finish the rest of the design: recorded evals are unknown.
+        for t in trials.iter().filter(|t| t.eval_id != 0) {
+            let o = ev.run_trial(&t.theta, t.trial, t.seed);
+            s.tell(t.eval_id, t.trial, o).unwrap();
+        }
+        let err = s.requeue(0).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown"));
+    }
+
+    #[test]
+    fn requeued_evaluation_re_emerges_before_new_proposals() {
+        let ev = evaluator(4);
+        let mut s = Session::new(&ev, &cfg(6, 8));
+        // Record the whole initial design.
+        let mut trials = Vec::new();
+        while let Ask::Trial(t) = s.ask() {
+            trials.push(t);
+        }
+        for t in &trials {
+            let o = ev.run_trial(&t.theta, t.trial, t.seed);
+            s.tell(t.eval_id, t.trial, o).unwrap();
+        }
+        // Two proposals dispatched, nothing told.
+        let a = s.ask_eval().unwrap();
+        let b = s.ask_eval().unwrap();
+        assert_eq!((a.id, b.id), (4, 5));
+        // Worker running `a` dies: the requeued evaluation comes back
+        // first, with its full trial set and original identity.
+        s.requeue(a.id).unwrap();
+        let again = s.ask_eval().unwrap();
+        assert_eq!(again.id, a.id);
+        assert_eq!(again.theta, a.theta);
+        assert_eq!(again.seed, a.seed);
+        assert_eq!(again.trials, vec![0, 1]);
     }
 
     #[test]

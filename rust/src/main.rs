@@ -8,6 +8,8 @@
 //!   slurm      emit the SLURM batch script for a steps × tasks topology
 //!   artifacts  inspect the AOT artifact manifest
 //!   speedup    print the Fig. 8-style virtual-time speedup for a topology
+//!   simulate   run the fault-injected virtual cluster (chaos testbed)
+//!              over a config + fault plan, reporting queueing metrics
 //!
 //! See README.md for a walkthrough and DESIGN.md for the architecture.
 
@@ -15,7 +17,10 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use hyppo::cluster::sim::{simulate, speedup, EvalCost, SimConfig};
+use hyppo::cluster::faults::FaultPlan;
+use hyppo::cluster::sim::{
+    simulate, simulate_chaos, speedup, ChaosConfig, EvalCost, SimConfig,
+};
 use hyppo::cluster::slurm::{render, SlurmJobConfig};
 use hyppo::cluster::Topology;
 use hyppo::config::RunConfig;
@@ -46,6 +51,8 @@ USAGE:
   hyppo slurm [--steps N] [--tasks M] [--cpu]
   hyppo artifacts [--family mlp|cnn|unet]
   hyppo speedup [--steps N] [--tasks M] [--evals E] [--trials T]
+  hyppo simulate --config <file.toml> [--faults plan.toml]
+            [--steps N] [--tasks M] [--max-retries R] [--json out.json]
   hyppo help
 ";
 
@@ -58,6 +65,7 @@ fn main() {
         "slurm" => cmd_slurm(&args),
         "artifacts" => cmd_artifacts(&args),
         "speedup" => cmd_speedup(&args),
+        "simulate" => cmd_simulate(&args),
         "help" | "--help" => {
             print!("{USAGE}");
             Ok(())
@@ -409,6 +417,96 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
         &["family", "arch", "role", "param_arrays", "inputs"],
         &rows,
     );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg_path = args
+        .get("config")
+        .context("--config <file.toml> is required")?;
+    let doc = hyppo::config::load_doc(std::path::Path::new(cfg_path))?;
+    let cfg = hyppo::config::build(&doc)?;
+    let evaluator =
+        SyntheticEvaluator::new(cfg.space.clone(), cfg.hpo.seed);
+
+    let topology = Topology::new(
+        args.usize_or("steps", cfg.topology.steps),
+        args.usize_or("tasks", cfg.topology.tasks_per_step),
+    );
+    let mut sim = SimConfig::trial_parallel(topology);
+    sim.mode = cfg.mode;
+    if let Some(sec) = doc.get("sim") {
+        if let Some(v) = sec.get("data_efficiency").and_then(|v| v.as_f64())
+        {
+            sim.data_efficiency = v;
+        }
+        if let Some(v) =
+            sec.get("sync_overhead_ms").and_then(|v| v.as_f64())
+        {
+            sim.sync_overhead = std::time::Duration::from_secs_f64(
+                (v / 1e3).max(0.0),
+            );
+        }
+    }
+
+    // Fault plan: --faults <file> wins, then the run config's own
+    // [faults] section, then fault-free.
+    let plan = match args.get("faults") {
+        Some(path) => {
+            let fdoc =
+                hyppo::config::load_doc(std::path::Path::new(path))?;
+            let sec = fdoc.get("faults").with_context(|| {
+                format!("{path} has no [faults] section")
+            })?;
+            FaultPlan::from_section(sec)?
+        }
+        None => match doc.get("faults") {
+            Some(sec) => FaultPlan::from_section(sec)?,
+            None => FaultPlan::default(),
+        },
+    };
+
+    let mut chaos = ChaosConfig::fault_free(sim);
+    chaos.plan = plan;
+    chaos.max_retries = args.usize_or(
+        "max-retries",
+        doc.get("sim")
+            .and_then(|s| s.get("max_retries"))
+            .and_then(|v| v.as_i64())
+            .map(|v| v.max(0) as usize)
+            .unwrap_or(hyppo::exec::DEFAULT_MAX_RETRIES),
+    );
+
+    let r = simulate_chaos(&evaluator, &cfg.hpo, &chaos)?;
+    summarize(&r.history, evaluator.space(), cfg.hpo.gamma);
+    let m = &r.metrics;
+    println!(
+        "makespan: {:?}   utilization: {:.3}   wasted-work fraction: {:.3}",
+        m.makespan, m.utilization, m.wasted_work_fraction
+    );
+    println!(
+        "faults: {} crash(es), {} preemption(s), {} lost result(s), \
+         {} duplicate(s) rejected, {} restart(s)",
+        m.crashes,
+        m.preemptions,
+        m.lost_results,
+        m.duplicates_rejected,
+        m.restarts
+    );
+    println!(
+        "recovery: {} requeue(s), {} straggled eval(s), \
+         max queue depth {}",
+        m.requeues, m.straggled_evals, m.max_queue_depth
+    );
+    if let Some(json) = args.get("json") {
+        let mut run = hyppo::util::bench::BenchRun::to_path(
+            "simulate",
+            Some(json),
+        );
+        m.record_into(&mut run);
+        run.finish()?;
+        println!("metrics -> {json}");
+    }
     Ok(())
 }
 

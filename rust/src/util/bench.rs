@@ -148,6 +148,19 @@ impl BenchRun {
         Self::from_arg_slice(target, &argv[1..])
     }
 
+    /// A run that writes straight to `path` without CLI parsing — for
+    /// non-bench publishers of `hyppo-bench-v1` documents (the `hyppo
+    /// simulate --json` subcommand emits its queueing metrics this way).
+    pub fn to_path<P: Into<PathBuf>>(target: &str, path: Option<P>) -> Self {
+        BenchRun {
+            target: target.to_string(),
+            budget_override: None,
+            json_path: path.map(Into::into),
+            results: Vec::new(),
+            derived: BTreeMap::new(),
+        }
+    }
+
     /// Testable core of [`BenchRun::from_args`].
     pub fn from_arg_slice(target: &str, args: &[String]) -> Self {
         let mut run = BenchRun {
@@ -204,6 +217,13 @@ impl BenchRun {
     /// into the JSON document and echo it on stdout.
     pub fn ratio(&mut self, name: &str, value: f64) {
         println!("   {name}: {value:.1}x");
+        self.derived.insert(name.to_string(), value);
+    }
+
+    /// Record a plain derived metric (no "x" suffix — queueing metrics,
+    /// counts, fractions) into the JSON document and echo it on stdout.
+    pub fn metric(&mut self, name: &str, value: f64) {
+        println!("   {name} = {value:.4}");
         self.derived.insert(name.to_string(), value);
     }
 
@@ -324,6 +344,27 @@ mod tests {
             Some(6.5)
         );
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn to_path_and_metric_publish_derived_values() {
+        let path = std::env::temp_dir().join("hyppo_bench_to_path_test.json");
+        let mut run = BenchRun::to_path("simulate", Some(&path));
+        run.metric("wasted_work_fraction", 0.25);
+        run.metric("crashes", 18.0);
+        run.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::parse(&text).unwrap();
+        assert_eq!(doc.get("schema").as_str(), Some("hyppo-bench-v1"));
+        assert_eq!(doc.get("target").as_str(), Some("simulate"));
+        assert_eq!(
+            doc.get("derived").get("wasted_work_fraction").as_f64(),
+            Some(0.25)
+        );
+        assert_eq!(doc.get("derived").get("crashes").as_f64(), Some(18.0));
+        std::fs::remove_file(&path).ok();
+        // No path: nothing written, still no error.
+        BenchRun::to_path::<PathBuf>("simulate", None).finish().unwrap();
     }
 
     #[test]

@@ -1,0 +1,377 @@
+//! Chaos-testbed guarantees (DESIGN.md §12): the fault-injected virtual
+//! cluster is bit-reproducible from (seed, fault plan), and recovery
+//! through the real machinery — `Session::requeue` for crashes and lost
+//! results, snapshot/restore through the checkpoint JSON wire for
+//! restarts — leaves the optimization outcome *identical* to the
+//! fault-free run whenever completion order is preserved.
+//!
+//! The headline invariant (ISSUE: deterministic evaluator + any fault
+//! schedule with retries → same best point and surrogate state as the
+//! fault-free run) is proven here on plans where order preservation is
+//! a theorem: uniform-cost same-worker retries, uniform stragglers, and
+//! arbitrary plans on a single worker.
+
+use std::time::Duration;
+
+use hyppo::cluster::faults::{Fault, FaultPlan, RandomFaultSpec};
+use hyppo::cluster::sim::{
+    simulate_chaos, ChaosConfig, ChaosResult, SimConfig,
+};
+use hyppo::cluster::Topology;
+use hyppo::eval::synthetic::SyntheticEvaluator;
+use hyppo::optimizer::{History, HpoConfig};
+use hyppo::space::{ParamSpec, Space};
+
+/// Heterogeneous-cost evaluator (the paper's default cost model).
+fn hetero_evaluator(seed: u64) -> SyntheticEvaluator {
+    let space = Space::new(vec![
+        ParamSpec::new("a", 0, 24),
+        ParamSpec::new("b", 0, 24),
+        ParamSpec::new("c", 0, 24),
+    ]);
+    let mut ev = SyntheticEvaluator::new(space, seed);
+    ev.t_dropout = 3;
+    ev
+}
+
+/// Exactly-uniform trial costs (40 ms each): completion order becomes a
+/// pure function of the greedy assignment, which the uniform-scaling
+/// arguments below rely on.
+fn uniform_evaluator(seed: u64) -> SyntheticEvaluator {
+    let mut ev = hetero_evaluator(seed);
+    ev.base_cost = Duration::from_millis(40);
+    ev.ns_per_param = 0.0;
+    ev
+}
+
+fn hpo(budget: usize, n_init: usize, n_trials: usize) -> HpoConfig {
+    HpoConfig {
+        max_evaluations: budget,
+        n_init,
+        n_trials,
+        seed: 9,
+        ..Default::default()
+    }
+}
+
+fn chaos(topology: Topology, plan: FaultPlan) -> ChaosConfig {
+    let mut cfg = ChaosConfig::fault_free(SimConfig::trial_parallel(
+        topology,
+    ));
+    cfg.plan = plan;
+    cfg
+}
+
+/// Bit-level trace equality: ids, points, provenance, and every derived
+/// statistic the surrogate is trained on, plus the best point.
+fn assert_trace_eq(a: &History, b: &History, what: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{what}: length");
+    for (x, y) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(x.id, y.id, "{what}: completion order");
+        assert_eq!(x.theta, y.theta, "{what}: θ at id {}", x.id);
+        assert_eq!(
+            x.provenance, y.provenance,
+            "{what}: provenance at id {}",
+            x.id
+        );
+        for (p, q, field) in [
+            (x.summary.interval.center, y.summary.interval.center, "center"),
+            (x.summary.interval.radius, y.summary.interval.radius, "radius"),
+            (x.summary.trained_mean, y.summary.trained_mean, "mean"),
+            (x.summary.trained_std, y.summary.trained_std, "std"),
+        ] {
+            assert_eq!(
+                p.to_bits(),
+                q.to_bits(),
+                "{what}: {field} at id {}",
+                x.id
+            );
+        }
+    }
+    let (ba, bb) = (a.best(0.0).unwrap(), b.best(0.0).unwrap());
+    assert_eq!(ba.id, bb.id, "{what}: best point");
+}
+
+fn run(
+    ev: &SyntheticEvaluator,
+    hpo: &HpoConfig,
+    cfg: &ChaosConfig,
+) -> ChaosResult {
+    simulate_chaos(ev, hpo, cfg).expect("simulation under max_retries")
+}
+
+#[test]
+fn chaos_run_is_bit_reproducible_from_seed_and_plan() {
+    // Property: identical (seed, fault plan, topology) → bit-identical
+    // event log, metrics, refit counters, and history.
+    let spec = RandomFaultSpec {
+        crashes: 4,
+        stragglers: 2,
+        preemptions: 2,
+        lost: 2,
+        evals: 20,
+        workers: 4,
+        horizon: Duration::from_secs(1),
+    };
+    assert_eq!(
+        FaultPlan::random(7, &spec),
+        FaultPlan::random(7, &spec),
+        "random plans must be a pure function of the seed"
+    );
+    assert_ne!(FaultPlan::random(7, &spec), FaultPlan::random(8, &spec));
+
+    let ev = hetero_evaluator(3);
+    let h = hpo(20, 6, 3);
+    let cfg = chaos(Topology::new(4, 2), FaultPlan::random(7, &spec));
+    let (a, b) = (run(&ev, &h, &cfg), run(&ev, &h, &cfg));
+    assert_eq!(a.events, b.events, "event logs diverged");
+    assert_eq!(a.metrics, b.metrics, "metrics diverged");
+    assert_eq!(a.refits, b.refits, "refit counters diverged");
+    assert_trace_eq(&a.history, &b.history, "replay");
+}
+
+#[test]
+fn fault_plan_event_order_is_irrelevant() {
+    // compile() canonicalizes, so the declaration order of the plan
+    // never leaks into the simulation.
+    let events = vec![
+        Fault::Straggle {
+            worker: 1,
+            factor: 2.0,
+            from: Duration::ZERO,
+            until: Duration::from_millis(500),
+        },
+        Fault::CrashEval { eval: 3, frac: 0.4 },
+        Fault::LoseResult { eval: 5, times: 1 },
+        Fault::Preempt {
+            worker: 0,
+            at: Duration::from_millis(10),
+            down: Duration::from_millis(20),
+        },
+        Fault::DuplicateResult { eval: 2 },
+    ];
+    let mut reversed = events.clone();
+    reversed.reverse();
+
+    let ev = hetero_evaluator(3);
+    let h = hpo(16, 6, 3);
+    let a = run(&ev, &h, &chaos(Topology::new(3, 2), FaultPlan { events }));
+    let b = run(
+        &ev,
+        &h,
+        &chaos(Topology::new(3, 2), FaultPlan { events: reversed }),
+    );
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.metrics, b.metrics);
+    assert_trace_eq(&a.history, &b.history, "reversed plan");
+}
+
+#[test]
+fn doubling_width_preserves_trajectory_and_halves_makespan() {
+    // Property: with an empty fault plan and uniform trial costs that
+    // divide evenly over the tasks, doubling tasks-per-step only
+    // rescales time — the best-point trajectory is untouched.
+    let ev = uniform_evaluator(5);
+    let h = hpo(18, 6, 4); // 4 trials over 2 vs 4 tasks: 80 ms vs 40 ms
+    let narrow =
+        run(&ev, &h, &chaos(Topology::new(3, 2), FaultPlan::default()));
+    let wide =
+        run(&ev, &h, &chaos(Topology::new(3, 4), FaultPlan::default()));
+    assert_trace_eq(&narrow.history, &wide.history, "width doubling");
+    assert_eq!(narrow.refits, wide.refits);
+    assert_eq!(
+        narrow.metrics.makespan,
+        wide.metrics.makespan * 2,
+        "uniform evals at double width must finish in exactly half the \
+         virtual time"
+    );
+    assert_eq!(narrow.metrics.wasted_work, Duration::ZERO);
+}
+
+#[test]
+fn headline_crash_every_eval_recovers_bit_identically() {
+    // THE headline invariant: crash every evaluation exactly once at
+    // half-way, retry on the same worker → the same best point, the
+    // same history, the same surrogate refit counters as the fault-free
+    // run, with virtual time stretched by exactly the retried half.
+    let ev = uniform_evaluator(5);
+    let h = hpo(18, 6, 4);
+    let top = Topology::new(3, 2);
+    let clean = run(&ev, &h, &chaos(top, FaultPlan::default()));
+    let crashed = run(
+        &ev,
+        &h,
+        &chaos(
+            top,
+            FaultPlan { events: vec![Fault::CrashAll { frac: 0.5 }] },
+        ),
+    );
+
+    assert_trace_eq(&clean.history, &crashed.history, "crash-all");
+    assert_eq!(clean.refits, crashed.refits, "surrogate state diverged");
+
+    // Each 80 ms evaluation wastes 40 ms before succeeding: occupancy
+    // ×1.5, wasted-work fraction exactly 40/120.
+    assert_eq!(crashed.metrics.crashes, 18);
+    assert_eq!(crashed.metrics.requeues, 18);
+    assert_eq!(
+        crashed.metrics.makespan,
+        clean.metrics.makespan.mul_f64(1.5)
+    );
+    assert!(
+        (crashed.metrics.wasted_work_fraction - 1.0 / 3.0).abs() < 1e-9,
+        "wasted fraction {} != 1/3",
+        crashed.metrics.wasted_work_fraction
+    );
+    assert_eq!(clean.metrics.wasted_work, Duration::ZERO);
+}
+
+#[test]
+fn stragglers_change_timing_but_never_the_trace() {
+    // Single worker, heterogeneous costs, straggle window: order is
+    // trivially preserved, and slow work is still useful work.
+    let ev = hetero_evaluator(3);
+    let h = hpo(12, 5, 3);
+    let top = Topology::new(1, 1);
+    let clean = run(&ev, &h, &chaos(top, FaultPlan::default()));
+    let slow = run(
+        &ev,
+        &h,
+        &chaos(
+            top,
+            FaultPlan {
+                events: vec![Fault::Straggle {
+                    worker: 0,
+                    factor: 3.0,
+                    from: Duration::from_millis(50),
+                    until: Duration::from_millis(400),
+                }],
+            },
+        ),
+    );
+    assert_trace_eq(&clean.history, &slow.history, "windowed straggle");
+    assert_eq!(clean.refits, slow.refits);
+    assert_eq!(slow.metrics.wasted_work, Duration::ZERO);
+    assert!(slow.metrics.makespan > clean.metrics.makespan);
+
+    // Uniform costs, every worker straggling by the same factor: the
+    // whole schedule dilates by exactly that factor.
+    let evu = uniform_evaluator(5);
+    let hu = hpo(18, 6, 4);
+    let topu = Topology::new(3, 2);
+    let cleanu = run(&evu, &hu, &chaos(topu, FaultPlan::default()));
+    let events = (0..3)
+        .map(|w| Fault::Straggle {
+            worker: w,
+            factor: 2.0,
+            from: Duration::ZERO,
+            until: Duration::MAX,
+        })
+        .collect();
+    let slowu = run(&evu, &hu, &chaos(topu, FaultPlan { events }));
+    assert_trace_eq(&cleanu.history, &slowu.history, "uniform straggle");
+    assert_eq!(cleanu.refits, slowu.refits);
+    assert_eq!(slowu.metrics.makespan, cleanu.metrics.makespan * 2);
+    assert_eq!(slowu.metrics.straggled_evals, 18);
+}
+
+#[test]
+fn mixed_chaos_on_one_worker_recovers_the_exact_history() {
+    // Every fault kind at once on a single worker: crashes, a lost
+    // result, duplicate deliveries, a preemption, a straggler window,
+    // and a full coordinator restart through the checkpoint JSON wire.
+    // One worker → completion order == submission order whatever the
+    // plan, so the recovered history must be bit-equal. (Refit counters
+    // are NOT compared: restoring from a checkpoint preloads the
+    // surrogate rather than replaying incremental observes.)
+    let ev = hetero_evaluator(3);
+    let h = hpo(10, 4, 2);
+    let top = Topology::new(1, 1);
+    let clean = run(&ev, &h, &chaos(top, FaultPlan::default()));
+    let plan = FaultPlan {
+        events: vec![
+            Fault::CrashEval { eval: 2, frac: 0.3 },
+            Fault::CrashEval { eval: 7, frac: 0.9 },
+            Fault::LoseResult { eval: 4, times: 1 },
+            Fault::DuplicateResult { eval: 1 },
+            Fault::DuplicateResult { eval: 5 },
+            Fault::Preempt {
+                worker: 0,
+                at: Duration::from_millis(1),
+                down: Duration::from_millis(5),
+            },
+            Fault::Restart {
+                at: Duration::from_millis(30),
+                down: Duration::from_millis(10),
+            },
+            Fault::Straggle {
+                worker: 0,
+                factor: 2.0,
+                from: Duration::ZERO,
+                until: Duration::from_millis(60),
+            },
+        ],
+    };
+    let wild = run(&ev, &h, &chaos(top, plan));
+
+    assert_trace_eq(&clean.history, &wild.history, "mixed chaos");
+    let m = &wild.metrics;
+    assert_eq!(m.crashes, 2);
+    assert_eq!(m.lost_results, 1);
+    assert_eq!(m.duplicates_rejected, 2);
+    assert_eq!(m.preemptions, 1);
+    assert_eq!(m.restarts, 1);
+    assert!(m.straggled_evals >= 1);
+    assert!(m.wasted_work > Duration::ZERO);
+    assert!(m.requeues >= 3, "2 crashes + 1 lost result at minimum");
+}
+
+#[test]
+fn random_chaos_on_one_worker_matches_fault_free() {
+    // Arbitrary *random* fault plans (no restarts are drawn, so refit
+    // counters stay comparable) on a single worker leave both the
+    // history and the surrogate state untouched.
+    let ev = hetero_evaluator(3);
+    let h = hpo(12, 5, 3);
+    let top = Topology::new(1, 1);
+    let clean = run(&ev, &h, &chaos(top, FaultPlan::default()));
+    let spec = RandomFaultSpec {
+        crashes: 3,
+        stragglers: 2,
+        preemptions: 2,
+        lost: 2,
+        evals: 12,
+        workers: 1,
+        horizon: Duration::from_millis(800),
+    };
+    for seed in [1u64, 2, 3] {
+        let wild = run(
+            &ev,
+            &h,
+            &chaos(top, FaultPlan::random(seed, &spec)),
+        );
+        assert_trace_eq(
+            &clean.history,
+            &wild.history,
+            &format!("random plan seed {seed}"),
+        );
+        assert_eq!(clean.refits, wild.refits, "seed {seed}");
+    }
+}
+
+#[test]
+fn exhausting_the_retry_budget_is_a_clean_error() {
+    let ev = uniform_evaluator(5);
+    let h = hpo(12, 5, 2);
+    let mut cfg = chaos(
+        Topology::new(2, 1),
+        FaultPlan { events: vec![Fault::CrashAll { frac: 0.5 }] },
+    );
+    cfg.max_retries = 0;
+    let err = simulate_chaos(&ev, &h, &cfg)
+        .expect_err("crashed evaluations with max_retries = 0 must fail");
+    assert!(
+        err.to_string().contains("max_retries"),
+        "unexpected error: {err}"
+    );
+}
