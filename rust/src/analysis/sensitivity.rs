@@ -32,7 +32,7 @@ impl SensitivityResult {
     pub fn ranking(&self) -> Vec<usize> {
         let mut idx: Vec<usize> = (0..self.mu_star.len()).collect();
         idx.sort_by(|&a, &b| {
-            self.mu_star[b].partial_cmp(&self.mu_star[a]).unwrap()
+            self.mu_star[b].total_cmp(&self.mu_star[a])
         });
         idx
     }

@@ -142,7 +142,7 @@ mod tests {
                         .zip(&templates[b])
                         .map(|(x, t)| (x - t) * (x - t))
                         .sum();
-                    da.partial_cmp(&db).unwrap()
+                    da.total_cmp(&db)
                 })
                 .unwrap();
             if best == s.label {

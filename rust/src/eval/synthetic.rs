@@ -259,13 +259,13 @@ mod tests {
         let best = pts
             .iter()
             .min_by(|a, b| {
-                ev.true_loss(a).partial_cmp(&ev.true_loss(b)).unwrap()
+                ev.true_loss(a).total_cmp(&ev.true_loss(b))
             })
             .unwrap();
         let worst = pts
             .iter()
             .max_by(|a, b| {
-                ev.true_loss(a).partial_cmp(&ev.true_loss(b)).unwrap()
+                ev.true_loss(a).total_cmp(&ev.true_loss(b))
             })
             .unwrap();
         let spread = |theta: &[Value]| {

@@ -364,7 +364,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         &rows,
     );
     if let Some(best) = cells.iter().min_by(|a, b| {
-        a.best_objective.partial_cmp(&b.best_objective).unwrap()
+        a.best_objective.total_cmp(&b.best_objective)
     }) {
         println!(
             "best cell: seed {} topology {}x{} objective {:.6e}",

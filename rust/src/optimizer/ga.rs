@@ -70,7 +70,7 @@ pub fn maximize<F: FnMut(&[Point]) -> Vec<f64>>(
 
     let best_idx = |fit: &[f64]| {
         (0..fit.len())
-            .max_by(|&a, &b| fit[a].partial_cmp(&fit[b]).unwrap())
+            .max_by(|&a, &b| fit[a].total_cmp(&fit[b]))
             .unwrap()
     };
 

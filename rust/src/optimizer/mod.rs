@@ -151,7 +151,7 @@ impl History {
     /// The record minimizing the γ-regulated objective.
     pub fn best(&self, gamma: f64) -> Option<&EvalRecord> {
         self.records.iter().min_by(|a, b| {
-            a.objective(gamma).partial_cmp(&b.objective(gamma)).unwrap()
+            a.objective(gamma).total_cmp(&b.objective(gamma))
         })
     }
 

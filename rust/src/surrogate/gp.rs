@@ -260,7 +260,7 @@ impl Surrogate for GpSurrogate {
         let med = if d2s.is_empty() {
             1.0
         } else {
-            d2s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            d2s.sort_by(|a, b| a.total_cmp(b));
             d2s[d2s.len() / 2]
         };
         let center = 1.0 / med.max(1e-9);

@@ -105,7 +105,7 @@ pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchStats {
             t.elapsed().as_nanos() as f64 / iters_per_sample as f64,
         );
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let stats = BenchStats {
         name: name.to_string(),

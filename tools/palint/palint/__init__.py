@@ -1,0 +1,16 @@
+"""palint — self-hosted determinism & integrity analyzer for the hyppo Rust tree.
+
+Zero-dependency (Python stdlib only): runs in containers that have no Rust
+toolchain, which is exactly where this repo has lived since PR 1.  A
+Rust-aware token lexer feeds project-specific checks over module structure,
+cross-file symbol resolution, determinism discipline, panic surface,
+feature-gate hygiene, Cargo target consistency, bench-JSON schemas, and
+DESIGN.md section references.
+
+Entry point: ``python3 tools/palint/run.py`` (see ``--help``).
+Findings schema: ``palint-findings-v1`` (see ``palint.findings``).
+"""
+
+__version__ = "1.0.0"
+
+FINDINGS_SCHEMA = "palint-findings-v1"

@@ -1,0 +1,117 @@
+"""Allowlist + panic-surface baseline handling.
+
+``allowlist.json`` — deliberate, justified exceptions.  Each entry:
+
+    {"rule": "det-hash-iter", "file": "rust/src/...", "match": "substring",
+     "why": "one-line justification"}
+
+An entry matches a finding when the rule matches, the file matches
+(exactly, or as a glob with ``*``), and ``match`` is a substring of the
+finding's slug or message.  ``why`` is mandatory — an exception without a
+reason is itself an error.
+
+``baseline.json`` — the committed panic-surface inventory: a ratchet of
+``{"<file>::<kind>": count}``.  Counts at-or-below baseline are reported
+as ``baselined``; growth over the committed count is ``new`` and fails
+``--strict``.  Shrinkage is reported so the baseline can be tightened
+(``--update-baseline`` rewrites it from current state).
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+from .findings import Finding
+
+
+class Allowlist:
+    def __init__(self, entries: List[Dict]):
+        self.entries = entries
+        self.hits = [0] * len(entries)
+        for k, e in enumerate(entries):
+            if not e.get("why"):
+                raise ValueError(
+                    f"allowlist entry #{k} ({e.get('rule')}/{e.get('file')}) "
+                    "has no 'why' justification")
+
+    @classmethod
+    def load(cls, path: str) -> "Allowlist":
+        if not os.path.isfile(path):
+            return cls([])
+        with open(path, encoding="utf-8") as fh:
+            doc = json.load(fh)
+        return cls(doc.get("allow", []))
+
+    def match(self, f: Finding) -> Optional[str]:
+        """Return the justification when ``f`` is allowlisted, else None."""
+        for k, e in enumerate(self.entries):
+            if e.get("rule") not in (None, f.rule):
+                continue
+            pat = e.get("file", "*")
+            if pat != f.file and not fnmatch.fnmatch(f.file, pat):
+                continue
+            needle = e.get("match", "")
+            if needle and needle not in f.slug and needle not in f.message:
+                continue
+            self.hits[k] += 1
+            return e.get("why", "(allowlisted)")
+        return None
+
+    def unused(self) -> List[Dict]:
+        return [e for e, h in zip(self.entries, self.hits) if h == 0]
+
+
+class Baseline:
+    """Panic-surface ratchet: per (file, kind) counts."""
+
+    def __init__(self, counts: Dict[str, int]):
+        self.counts = counts
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        if not os.path.isfile(path):
+            return cls({})
+        with open(path, encoding="utf-8") as fh:
+            doc = json.load(fh)
+        return cls({k: int(v) for k, v in doc.get("panic_surface", {}).items()})
+
+    def allowed(self, file: str, kind: str) -> int:
+        return self.counts.get(f"{file}::{kind}", 0)
+
+    @staticmethod
+    def write(path: str, counts: Dict[str, int]) -> None:
+        doc = {
+            "schema": "palint-baseline-v1",
+            "note": ("Committed panic-surface inventory (unwrap/expect/"
+                     "panic/indexing per file, test modules excluded). "
+                     "The gate fails on growth only; regenerate with "
+                     "`python3 tools/palint/run.py --update-baseline` "
+                     "after deliberate changes and justify the diff in "
+                     "the PR description."),
+            "panic_surface": {k: counts[k] for k in sorted(counts)},
+        }
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump(doc, fh, indent=2)
+            fh.write("\n")
+
+
+def classify(
+    findings: List[Finding],
+    allowlist: Allowlist,
+) -> Tuple[int, int]:
+    """Apply allowlist to findings in place; returns (new, allowlisted)."""
+    n_new = n_allow = 0
+    for f in findings:
+        if f.status != "new":
+            continue
+        why = allowlist.match(f)
+        if why is not None:
+            f.status = "allowlisted"
+            f.allow_reason = why
+            n_allow += 1
+        else:
+            n_new += 1
+    return n_new, n_allow

@@ -1,0 +1,108 @@
+"""Finding model and the ``palint-findings-v1`` document.
+
+A finding is identified by a *stable key* — ``rule :: file :: slug`` —
+that deliberately excludes line numbers, so unrelated edits that shift
+code do not invalidate the committed allowlist.  Status is one of:
+
+* ``new``         — not allowlisted, not covered by the baseline: fails
+                    ``--strict``;
+* ``allowlisted`` — matched an ``allowlist.json`` entry (deliberate,
+                    justified exception);
+* ``baselined``   — within the committed panic-surface inventory counts
+                    (``baseline.json``); the ratchet only fails on *growth*.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from . import FINDINGS_SCHEMA
+
+
+@dataclass
+class Finding:
+    rule: str
+    file: str      # repo-relative path ('' for repo-level findings)
+    line: int      # 0 when the finding is not line-anchored
+    message: str
+    slug: str      # stable identity fragment (no line numbers)
+    status: str = "new"
+    allow_reason: Optional[str] = None
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}::{self.file}::{self.slug}"
+
+    def to_json(self) -> Dict:
+        d = {
+            "rule": self.rule,
+            "file": self.file,
+            "line": self.line,
+            "message": self.message,
+            "key": self.key,
+            "status": self.status,
+        }
+        if self.allow_reason:
+            d["allow_reason"] = self.allow_reason
+        return d
+
+
+@dataclass
+class Report:
+    root: str
+    rule_descriptions: Dict[str, str] = field(default_factory=dict)
+    findings: List[Finding] = field(default_factory=list)
+    files_scanned: int = 0
+
+    def add(self, f: Finding) -> None:
+        self.findings.append(f)
+
+    def new_findings(self) -> List[Finding]:
+        return [f for f in self.findings if f.status == "new"]
+
+    def counts(self) -> Dict[str, int]:
+        c = {"total": len(self.findings), "new": 0, "allowlisted": 0,
+             "baselined": 0}
+        for f in self.findings:
+            c[f.status] = c.get(f.status, 0) + 1
+        return c
+
+    def to_json(self) -> Dict:
+        by_rule: Dict[str, int] = {}
+        for f in self.findings:
+            by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+        return {
+            "schema": FINDINGS_SCHEMA,
+            "root": self.root,
+            "files_scanned": self.files_scanned,
+            "rules": self.rule_descriptions,
+            "counts": {**self.counts(), "by_rule": by_rule},
+            "findings": [f.to_json() for f in sorted(
+                self.findings, key=lambda x: (x.rule, x.file, x.line))],
+        }
+
+    def write_json(self, path: str) -> None:
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump(self.to_json(), fh, indent=2, sort_keys=False)
+            fh.write("\n")
+
+    def render_text(self, verbose: bool = False) -> str:
+        lines: List[str] = []
+        order = {"new": 0, "allowlisted": 1, "baselined": 2}
+        shown = [f for f in self.findings
+                 if verbose or f.status == "new"]
+        for f in sorted(shown, key=lambda x: (order.get(x.status, 9),
+                                              x.rule, x.file, x.line)):
+            loc = f"{f.file}:{f.line}" if f.line else (f.file or "<repo>")
+            tag = "" if f.status == "new" else f" [{f.status}]"
+            lines.append(f"{loc}: [{f.rule}]{tag} {f.message}")
+        c = self.counts()
+        lines.append("")
+        lines.append(
+            f"palint: {c['total']} finding(s) — {c['new']} new, "
+            f"{c['allowlisted']} allowlisted, {c['baselined']} baselined "
+            f"({self.files_scanned} files scanned)"
+        )
+        return "\n".join(lines)

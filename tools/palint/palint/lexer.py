@@ -1,0 +1,251 @@
+r"""Rust-aware token lexer.
+
+Just enough Rust lexical structure for reliable static analysis:
+
+* line comments (``//``, ``///``, ``//!``) and *nested* block comments
+  (``/* /* */ */`` — Rust nests them, C does not);
+* string literals with escapes, byte strings (``b"..."``), raw strings
+  (``r"..."``, ``r#"..."#``, any hash depth, and the ``br#``/``rb`` forms);
+* char literals (``'a'``, ``'\n'``, ``'\u{1F980}'``) disambiguated from
+  lifetimes (``'a`` in ``Vec<&'a T>``);
+* identifiers (including ``r#keyword`` raw identifiers), numbers, and
+  single-char punctuation — ``>>`` in ``Vec<Vec<u64>>`` is emitted as two
+  ``>`` tokens so nested generics never confuse downstream rules.
+
+Tokens carry (kind, text, line, col).  Comments and whitespace are dropped
+by default; pass ``keep_comments=True`` to receive comment tokens too (the
+panic-surface rule uses them to honour inline ``palint: allow(...)``
+pragmas).
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple
+
+
+class Token(NamedTuple):
+    kind: str  # ident | lifetime | str | char | num | punct | comment
+    text: str
+    line: int
+    col: int
+
+
+_ID_START = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ_")
+_ID_CONT = _ID_START | set("0123456789")
+
+
+class LexError(ValueError):
+    """Raised on structurally broken input (unterminated literal/comment)."""
+
+    def __init__(self, message: str, line: int):
+        super().__init__(f"line {line}: {message}")
+        self.line = line
+
+
+def lex(src: str, keep_comments: bool = False) -> List[Token]:
+    toks: List[Token] = []
+    i, n = 0, len(src)
+    line, col = 1, 1
+
+    def advance(k: int) -> None:
+        nonlocal i, line, col
+        for _ in range(k):
+            if i < n and src[i] == "\n":
+                line += 1
+                col = 1
+            else:
+                col += 1
+            i += 1
+
+    def emit(kind: str, start: int, start_line: int, start_col: int) -> None:
+        text = src[start:i]
+        if kind == "comment" and not keep_comments:
+            return
+        toks.append(Token(kind, text, start_line, start_col))
+
+    while i < n:
+        c = src[i]
+        if c in " \t\r\n":
+            advance(1)
+            continue
+
+        start, sl, sc = i, line, col
+
+        # Comments ---------------------------------------------------------
+        if c == "/" and i + 1 < n:
+            nxt = src[i + 1]
+            if nxt == "/":
+                while i < n and src[i] != "\n":
+                    advance(1)
+                emit("comment", start, sl, sc)
+                continue
+            if nxt == "*":
+                depth = 0
+                while i < n:
+                    if src[i] == "/" and i + 1 < n and src[i + 1] == "*":
+                        depth += 1
+                        advance(2)
+                    elif src[i] == "*" and i + 1 < n and src[i + 1] == "/":
+                        depth -= 1
+                        advance(2)
+                        if depth == 0:
+                            break
+                    else:
+                        advance(1)
+                if depth != 0:
+                    raise LexError("unterminated block comment", sl)
+                emit("comment", start, sl, sc)
+                continue
+
+        # Raw / byte string prefixes --------------------------------------
+        # r"..."  r#"..."#  b"..."  br#"..."#  rb is not legal Rust but
+        # we accept it rather than mis-lex.  A prefix is only a prefix when
+        # immediately followed by " or #" — otherwise `r` / `b` are idents
+        # (and `r#ident` is a raw identifier).
+        if c in "rb":
+            j = i
+            seen = set()
+            while j < n and src[j] in "rb" and src[j] not in seen:
+                seen.add(src[j])
+                j += 1
+            if "r" in seen and j < n and src[j] in '"#':
+                # raw string (maybe byte-raw): count hashes
+                hashes = 0
+                k = j
+                while k < n and src[k] == "#":
+                    hashes += 1
+                    k += 1
+                if k < n and src[k] == '"':
+                    # scan to closing "### with same hash depth
+                    advance(k + 1 - i)
+                    close = '"' + "#" * hashes
+                    end = src.find(close, i)
+                    if end == -1:
+                        raise LexError("unterminated raw string", sl)
+                    advance(end - i + len(close))
+                    emit("str", start, sl, sc)
+                    continue
+                if hashes > 0 and "b" not in seen and seen == {"r"}:
+                    # r#ident — raw identifier
+                    advance(2)  # r#
+                    while i < n and src[i] in _ID_CONT:
+                        advance(1)
+                    emit("ident", start, sl, sc)
+                    continue
+            if "b" in seen and j < n and src[j] == '"':
+                advance(j - i)
+                c = src[i]  # fall through to normal string scan below
+            elif "b" in seen and j < n and src[j] == "'":
+                advance(j - i)
+                c = src[i]  # byte char b'x'
+
+        # Strings ----------------------------------------------------------
+        if c == '"':
+            advance(1)
+            while i < n:
+                if src[i] == "\\":
+                    advance(2)
+                elif src[i] == '"':
+                    advance(1)
+                    break
+                else:
+                    advance(1)
+            else:
+                raise LexError("unterminated string", sl)
+            emit("str", start, sl, sc)
+            continue
+
+        # Char literal vs lifetime ----------------------------------------
+        if c == "'":
+            # Lifetime: 'ident NOT followed by a closing quote.
+            # Char: 'x' or '\..' or 'ident' (the trailing ' decides).
+            j = i + 1
+            if j < n and src[j] == "\\":
+                # escaped char literal, scan to closing '
+                k = j + 1
+                if k < n and src[k] == "u" and k + 1 < n and src[k + 1] == "{":
+                    k = src.find("}", k)
+                    if k == -1:
+                        raise LexError("unterminated \\u escape", sl)
+                k += 1
+                if k < n and src[k] == "'":
+                    advance(k + 1 - i)
+                    emit("char", start, sl, sc)
+                    continue
+                raise LexError("bad char literal", sl)
+            if j < n and src[j] in _ID_START:
+                k = j
+                while k < n and src[k] in _ID_CONT:
+                    k += 1
+                if k < n and src[k] == "'":
+                    advance(k + 1 - i)
+                    emit("char", start, sl, sc)
+                else:
+                    advance(k - i)
+                    emit("lifetime", start, sl, sc)
+                continue
+            if j < n and src[j] not in "'":
+                # non-ident single char like '+' or '0'
+                if j + 1 < n and src[j + 1] == "'":
+                    advance(3)
+                    emit("char", start, sl, sc)
+                    continue
+            # bare ' (macro-land edge); emit as punct
+            advance(1)
+            emit("punct", start, sl, sc)
+            continue
+
+        # Identifiers ------------------------------------------------------
+        if c in _ID_START:
+            while i < n and src[i] in _ID_CONT:
+                advance(1)
+            emit("ident", start, sl, sc)
+            continue
+
+        # Numbers ----------------------------------------------------------
+        if c.isdigit():
+            while i < n and (src[i] in _ID_CONT or src[i] == "."):
+                # stop at `..` range and at method calls on literals `1.max`
+                if src[i] == ".":
+                    if i + 1 < n and (src[i + 1] == "." or src[i + 1] in _ID_START):
+                        break
+                advance(1)
+            emit("num", start, sl, sc)
+            continue
+
+        # Punctuation — single chars, so `>>` is two tokens ---------------
+        advance(1)
+        emit("punct", start, sl, sc)
+
+    return toks
+
+
+def strip_comments_and_strings(src: str) -> str:
+    """Return source with comments/strings blanked (newlines preserved).
+
+    Handy for rules that only grep structure: every literal and comment
+    byte becomes a space, so line/col arithmetic stays valid and a
+    `HashMap` spelled inside a doc-comment never fires a lint.
+    """
+    toks = lex(src, keep_comments=True)
+    keep = []
+    lines = src.split("\n")
+    blanked = [list(ln) for ln in lines]
+    for t in toks:
+        if t.kind not in ("comment", "str", "char"):
+            continue
+        # blank the token's extent
+        tl, tc = t.line - 1, t.col - 1
+        remaining = len(t.text)
+        while remaining > 0 and tl < len(blanked):
+            row = blanked[tl]
+            span = min(remaining, len(row) - tc)
+            for k in range(tc, tc + span):
+                row[k] = " "
+            remaining -= span
+            if remaining > 0:
+                remaining -= 1  # the newline itself
+                tl += 1
+                tc = 0
+    del keep
+    return "\n".join("".join(row) for row in blanked)

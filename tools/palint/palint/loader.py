@@ -1,0 +1,606 @@
+"""Crate model: module tree, item index, use-declarations, cfg gating.
+
+Parses every reachable ``.rs`` file of a crate (starting from its root —
+``lib.rs`` or a standalone target file) with the token lexer and extracts
+exactly the structure the rules need:
+
+* the module tree (``mod x;`` → ``x.rs`` / ``x/mod.rs``, inline ``mod``);
+* per-module item index: name → [Item] (multiple defs may coexist under
+  complementary cfg gates, e.g. the pjrt ``Engine`` and its stub);
+* ``use`` declarations (full tree syntax: groups, globs, renames, ``self``);
+* ``#[cfg(feature = "...")]`` / ``#[cfg(not(feature = "..."))]`` gates on
+  items and mods, and ``#[cfg(test)]`` regions (line ranges) so
+  determinism/panic rules can exempt test code;
+* raw token streams per file for the pattern-level rules.
+
+Everything is intentionally approximate where Rust is hard (macro bodies,
+method resolution) and exact where this repo's guarantees live (module
+reachability, pub-item paths, feature gates).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+from .lexer import Token, lex
+
+# A cfg gate: None (ungated), "feature:pjrt", "not-feature:pjrt", "test",
+# or "other:<raw>" for anything palint does not model.
+Gate = Optional[str]
+
+ITEM_KEYWORDS = {
+    "fn", "struct", "enum", "union", "trait", "type", "const", "static",
+    "mod", "use", "impl", "macro_rules",
+}
+
+
+class Item(NamedTuple):
+    name: str
+    kind: str          # fn|struct|enum|union|trait|type|const|static|mod|macro|reexport
+    vis: str           # "" | "pub" | "pub(crate)" | "pub(super)" | "pub(in ...)"
+    line: int
+    gate: Gate
+    # for kind == "reexport": the source path this name re-exports
+    target: Optional[Tuple[str, ...]] = None
+
+
+class UseDecl(NamedTuple):
+    path: Tuple[str, ...]   # fully expanded single path (groups flattened)
+    alias: Optional[str]
+    is_glob: bool
+    line: int
+    vis: str
+    gate: Gate
+    in_test: bool
+
+
+class Module:
+    def __init__(self, path: Tuple[str, ...], file: str, gate: Gate = None):
+        self.path = path
+        self.file = file
+        self.gate = gate
+        self.items: Dict[str, List[Item]] = {}
+        self.glob_reexports: List[Tuple[Tuple[str, ...], Gate]] = []
+        self.uses: List[UseDecl] = []
+        self.unresolved_mods: List[Tuple[str, int]] = []  # (name, line)
+
+    def add_item(self, it: Item) -> None:
+        self.items.setdefault(it.name, []).append(it)
+
+
+class FileInfo(NamedTuple):
+    path: str
+    tokens: List[Token]
+    test_ranges: List[Tuple[int, int]]   # inclusive line ranges of #[cfg(test)] items
+    gated_ranges: List[Tuple[int, int, str]]  # (start, end, gate) for feature-gated items
+
+
+class Crate:
+    def __init__(self, name: str, root_file: str):
+        self.name = name
+        self.root_file = root_file
+        self.modules: Dict[Tuple[str, ...], Module] = {}
+        self.files: Dict[str, FileInfo] = {}
+        self.errors: List[str] = []
+
+    @property
+    def root(self) -> Module:
+        return self.modules[()]
+
+
+def in_ranges(line: int, ranges: List[Tuple[int, int]]) -> bool:
+    return any(a <= line <= b for a, b in ranges)
+
+
+# --------------------------------------------------------------------------
+# Attribute / cfg parsing
+# --------------------------------------------------------------------------
+
+def _parse_attr(toks: List[Token], i: int) -> Tuple[int, List[Token]]:
+    """``toks[i]`` is '#'. Return (index past attr, inner tokens)."""
+    j = i + 1
+    if j < len(toks) and toks[j].text == "!":
+        j += 1
+    if j >= len(toks) or toks[j].text != "[":
+        return i + 1, []
+    depth = 0
+    inner: List[Token] = []
+    while j < len(toks):
+        t = toks[j]
+        if t.text == "[":
+            depth += 1
+            if depth == 1:
+                j += 1
+                continue
+        elif t.text == "]":
+            depth -= 1
+            if depth == 0:
+                return j + 1, inner
+        inner.append(t)
+        j += 1
+    return j, inner
+
+
+def _gate_of_attr(inner: List[Token]) -> Gate:
+    """Extract a modeled gate from attribute tokens, else None."""
+    texts = [t.text for t in inner]
+    if not texts or texts[0] != "cfg":
+        return None
+    joined = "".join(texts)
+    # cfg(test)
+    if joined == "cfg(test)":
+        return "test"
+    # cfg(feature="x")
+    if len(texts) >= 6 and texts[2] == "feature" and texts[3] == "=":
+        return "feature:" + texts[4].strip('"')
+    # cfg(not(feature="x"))
+    if "not" in texts and "feature" in texts:
+        k = texts.index("feature")
+        if k + 2 < len(texts) and texts[k + 1] == "=":
+            return "not-feature:" + texts[k + 2].strip('"')
+    return "other:" + joined
+
+
+def _has_macro_export(attrs: List[List[Token]]) -> bool:
+    return any(a and a[0].text == "macro_export" for a in attrs)
+
+
+# --------------------------------------------------------------------------
+# Use-tree parsing
+# --------------------------------------------------------------------------
+
+def _parse_use_tree(
+    toks: List[Token], i: int, prefix: Tuple[str, ...]
+) -> Tuple[int, List[Tuple[Tuple[str, ...], Optional[str], bool]]]:
+    """Parse a use tree starting at ``toks[i]``; stop at ';' / ',' / '}'.
+
+    Returns (next index, [(path, alias, is_glob), ...]).
+    """
+    out: List[Tuple[Tuple[str, ...], Optional[str], bool]] = []
+    path: List[str] = list(prefix)
+    n = len(toks)
+    while i < n:
+        t = toks[i]
+        if t.text == "{":
+            i += 1
+            while i < n and toks[i].text != "}":
+                i, sub = _parse_use_tree(toks, i, tuple(path))
+                out.extend(sub)
+                if i < n and toks[i].text == ",":
+                    i += 1
+            return i + 1, out
+        if t.text == "*":
+            out.append((tuple(path), None, True))
+            return i + 1, out
+        if t.kind == "ident":
+            if t.text == "as":
+                i += 1
+                alias = toks[i].text if i < n else None
+                out.append((tuple(path), alias, False))
+                return i + 1, out
+            path.append(t.text)
+            i += 1
+            if i < n and toks[i].text == ":" and i + 1 < n and toks[i + 1].text == ":":
+                i += 2
+                continue
+            out.append((tuple(path), None, False))
+            return i, out
+        break
+    if path != list(prefix):
+        out.append((tuple(path), None, False))
+    return i, out
+
+
+# --------------------------------------------------------------------------
+# File → Module parsing
+# --------------------------------------------------------------------------
+
+def _skip_balanced(toks: List[Token], i: int, open_: str, close: str) -> int:
+    depth = 0
+    n = len(toks)
+    while i < n:
+        t = toks[i].text
+        if t == open_:
+            depth += 1
+        elif t == close:
+            depth -= 1
+            if depth == 0:
+                return i + 1
+        i += 1
+    return i
+
+
+def parse_file(crate: Crate, mod: Module, src: str) -> None:
+    """Parse one file's top level into ``mod`` (recursing into inline mods)."""
+    toks = lex(src)
+    test_ranges: List[Tuple[int, int]] = []
+    gated_ranges: List[Tuple[int, int, str]] = []
+    _parse_items(crate, mod, toks, 0, len(toks), test_ranges, gated_ranges,
+                 in_test=False, gate=mod.gate)
+    crate.files[mod.file] = FileInfo(mod.file, toks, test_ranges, gated_ranges)
+
+
+def _item_end_line(toks: List[Token], i: int, end: int) -> int:
+    """Line where the item starting at i ends (after its ; or balanced {})."""
+    n = min(end, len(toks))
+    j = i
+    while j < n:
+        t = toks[j].text
+        if t == ";":
+            return toks[j].line
+        if t == "{":
+            j = _skip_balanced(toks, j, "{", "}")
+            return toks[j - 1].line if j - 1 < n else toks[-1].line
+        j += 1
+    return toks[n - 1].line if n else 0
+
+
+def _parse_items(
+    crate: Crate,
+    mod: Module,
+    toks: List[Token],
+    i: int,
+    end: int,
+    test_ranges: List[Tuple[int, int]],
+    gated_ranges: List[Tuple[int, int, str]],
+    in_test: bool,
+    gate: Gate,
+) -> None:
+    n = end
+    while i < n:
+        t = toks[i]
+
+        # attributes --------------------------------------------------------
+        attrs: List[List[Token]] = []
+        while i < n and toks[i].text == "#":
+            i, inner = _parse_attr(toks, i)
+            attrs.append(inner)
+        if i >= n:
+            break
+        t = toks[i]
+        item_gate: Gate = gate
+        for a in attrs:
+            g = _gate_of_attr(a)
+            if g is not None:
+                item_gate = g if item_gate is None or item_gate == "test" else item_gate
+                if g == "test":
+                    item_gate = "test"
+        is_test_item = in_test or item_gate == "test"
+
+        # visibility --------------------------------------------------------
+        vis = ""
+        if t.kind == "ident" and t.text == "pub":
+            vis = "pub"
+            i += 1
+            if i < n and toks[i].text == "(":
+                j = _skip_balanced(toks, i, "(", ")")
+                vis = "pub(" + "".join(x.text for x in toks[i + 1:j - 1]) + ")"
+                i = j
+            t = toks[i] if i < n else t
+
+        # modifiers ---------------------------------------------------------
+        while i < n and toks[i].kind == "ident" and toks[i].text in (
+            "unsafe", "async", "extern", "default"
+        ):
+            if toks[i].text == "extern":
+                i += 1
+                if i < n and toks[i].kind == "str":
+                    i += 1
+                continue
+            i += 1
+        if i >= n:
+            break
+        t = toks[i]
+
+        if t.kind != "ident":
+            i += 1
+            continue
+
+        kw = t.text
+        start_line = t.line
+
+        if kw == "mod":
+            name = toks[i + 1].text if i + 1 < n else "?"
+            j = i + 2
+            if j < n and toks[j].text == ";":
+                # file submodule
+                sub_file = _resolve_mod_file(mod.file, name)
+                eff_gate = item_gate if item_gate != "test" else "test"
+                if sub_file is None:
+                    mod.unresolved_mods.append((name, start_line))
+                else:
+                    sub = Module(mod.path + (name,), sub_file, eff_gate)
+                    crate.modules[sub.path] = sub
+                    mod.add_item(Item(name, "mod", vis, start_line, item_gate))
+                    try:
+                        with open(sub_file, encoding="utf-8") as f:
+                            parse_file(crate, sub, f.read())
+                    except Exception as e:  # lexing failure = real finding
+                        crate.errors.append(f"{sub_file}: {e}")
+                i = j + 1
+                continue
+            if j < n and toks[j].text == "{":
+                body_end_tok = _skip_balanced(toks, j, "{", "}")
+                end_line = toks[body_end_tok - 1].line
+                if item_gate == "test" or name == "tests":
+                    test_ranges.append((start_line, end_line))
+                if item_gate and item_gate.startswith(("feature:", "not-feature:")):
+                    gated_ranges.append((start_line, end_line, item_gate))
+                sub = Module(mod.path + (name,), mod.file,
+                             item_gate if item_gate else gate)
+                crate.modules[sub.path] = sub
+                mod.add_item(Item(name, "mod", vis, start_line, item_gate))
+                _parse_items(crate, sub, toks, j + 1, body_end_tok - 1,
+                             test_ranges, gated_ranges,
+                             in_test=is_test_item or name == "tests",
+                             gate=item_gate if item_gate else gate)
+                i = body_end_tok
+                continue
+            i = j
+            continue
+
+        if kw == "use":
+            j, entries = _parse_use_tree(toks, i + 1, ())
+            while j < n and toks[j].text != ";":
+                j += 1
+            for path, alias, is_glob in entries:
+                ud = UseDecl(path, alias, is_glob, start_line, vis,
+                             item_gate, is_test_item)
+                mod.uses.append(ud)
+                if vis.startswith("pub"):
+                    if is_glob:
+                        mod.glob_reexports.append((path, item_gate))
+                    else:
+                        name = alias or path[-1]
+                        mod.add_item(Item(name, "reexport", vis, start_line,
+                                          item_gate, target=path))
+            if item_gate and item_gate.startswith(("feature:", "not-feature:")):
+                gated_ranges.append((start_line, toks[j].line if j < n else start_line,
+                                     item_gate))
+            i = j + 1
+            continue
+
+        if kw == "macro_rules":
+            # macro_rules! name { ... }
+            j = i + 1
+            if j < n and toks[j].text == "!":
+                j += 1
+            name = toks[j].text if j < n else "?"
+            j += 1
+            j = _skip_balanced(toks, j, "{", "}")
+            mod.add_item(Item(name, "macro", "pub", start_line, item_gate))
+            if _has_macro_export(attrs):
+                crate.root.add_item(
+                    Item(name, "macro", "pub", start_line, item_gate))
+            i = j
+            continue
+
+        if kw in ("fn", "struct", "enum", "union", "trait", "type",
+                  "const", "static"):
+            name_i = i + 1
+            # `const fn foo`
+            if kw == "const" and name_i < n and toks[name_i].text == "fn":
+                kw = "fn"
+                name_i += 1
+            name = toks[name_i].text if name_i < n else "?"
+            end_line = _item_end_line(toks, name_i, n)
+            if not is_test_item:
+                mod.add_item(Item(name, kw, vis, start_line, item_gate))
+            if item_gate and item_gate.startswith(("feature:", "not-feature:")):
+                gated_ranges.append((start_line, end_line, item_gate))
+            if item_gate == "test" and not in_test:
+                test_ranges.append((start_line, end_line))
+            # skip to end of item
+            j = name_i
+            while j < n:
+                if toks[j].text == ";":
+                    j += 1
+                    break
+                if toks[j].text == "{":
+                    j = _skip_balanced(toks, j, "{", "}")
+                    break
+                if toks[j].text == "(" and kw == "struct":
+                    j = _skip_balanced(toks, j, "(", ")")
+                    continue
+                j += 1
+            i = j
+            continue
+
+        if kw == "impl":
+            # skip entire impl block
+            j = i + 1
+            while j < n and toks[j].text not in ("{", ";"):
+                if toks[j].text == "(":
+                    j = _skip_balanced(toks, j, "(", ")")
+                    continue
+                j += 1
+            if j < n and toks[j].text == "{":
+                end_line = toks[_skip_balanced(toks, j, "{", "}") - 1].line
+                if item_gate and item_gate.startswith(("feature:", "not-feature:")):
+                    gated_ranges.append((start_line, end_line, item_gate))
+                if item_gate == "test" and not in_test:
+                    test_ranges.append((start_line, end_line))
+                j = _skip_balanced(toks, j, "{", "}")
+            else:
+                j += 1
+            i = j
+            continue
+
+        i += 1
+
+
+def _resolve_mod_file(parent_file: str, name: str) -> Optional[str]:
+    base = os.path.dirname(parent_file)
+    stem = os.path.basename(parent_file)
+    if stem not in ("lib.rs", "main.rs", "mod.rs"):
+        # mod declared from foo.rs resolves under foo/
+        base = os.path.join(base, os.path.splitext(stem)[0])
+    for cand in (os.path.join(base, name + ".rs"),
+                 os.path.join(base, name, "mod.rs")):
+        if os.path.isfile(cand):
+            return cand
+    return None
+
+
+# --------------------------------------------------------------------------
+# Crate loading and path resolution
+# --------------------------------------------------------------------------
+
+def load_crate(name: str, root_file: str) -> Crate:
+    crate = Crate(name, root_file)
+    root = Module((), root_file)
+    crate.modules[()] = root
+    with open(root_file, encoding="utf-8") as f:
+        parse_file(crate, root, f.read())
+    return crate
+
+
+EXTERNAL_CRATES = {"std", "core", "alloc", "proc_macro", "xla"}
+
+
+class Resolution(NamedTuple):
+    ok: bool
+    item: Optional[Item]       # terminal item (None for module / external)
+    module: Optional[Module]   # module that owns the terminal item
+    reason: str                # human-readable failure reason when not ok
+
+
+def resolve_path(
+    crates: Dict[str, Crate],
+    home: Crate,
+    module: Module,
+    path: Tuple[str, ...],
+    is_glob: bool = False,
+    external_view: bool = False,
+    _depth: int = 0,
+) -> Resolution:
+    """Resolve a use-path from ``module`` of ``home``.
+
+    ``external_view``: resolution happens from another crate (tests/
+    benches/examples referencing ``hyppo::...``), so ``pub(crate)`` items
+    are invisible.
+    """
+    if not path:
+        return Resolution(False, None, None, "empty path")
+    head, rest = path[0], path[1:]
+
+    if head in EXTERNAL_CRATES:
+        return Resolution(True, None, None, "")
+    if head == "crate":
+        return _resolve_in(crates, home, home.root, rest, is_glob,
+                           external_view=False, _depth=_depth)
+    if head == "self":
+        return _resolve_in(crates, home, module, rest, is_glob, False, _depth)
+    if head == "super":
+        parent = home.modules.get(module.path[:-1]) if module.path else None
+        if parent is None:
+            return Resolution(False, None, None, "no parent module")
+        return _resolve_in(crates, home, parent, rest, is_glob, False, _depth)
+    if head in crates and crates[head] is not home:
+        target = crates[head]
+        return _resolve_in(crates, target, target.root, rest, is_glob,
+                           external_view=True, _depth=_depth)
+    if head in crates and crates[head] is home:
+        return _resolve_in(crates, home, home.root, rest, is_glob,
+                           external_view, _depth)
+    # First segment may be a module/item in scope of the current module
+    # (Rust 2018: only via `self::`/`crate::`, but be permissive for
+    # macro-expanded paths); try current module then crate root.
+    res = _resolve_in(crates, home, module, path, is_glob, external_view,
+                      _depth)
+    if res.ok:
+        return res
+    # If the uniform-path head does name something in scope, surface the
+    # deeper failure instead of blaming the root segment.
+    if home.modules.get(module.path + (head,)) is not None \
+            or head in module.items:
+        return res
+    return Resolution(False, None, None, f"unknown crate or root `{head}`")
+
+
+def _lookup(module: Module, name: str) -> List[Item]:
+    return module.items.get(name, [])
+
+
+def _resolve_in(
+    crates: Dict[str, Crate],
+    crate: Crate,
+    module: Module,
+    rest: Tuple[str, ...],
+    is_glob: bool,
+    external_view: bool,
+    _depth: int,
+) -> Resolution:
+    if _depth > 8:
+        return Resolution(False, None, None, "re-export cycle")
+    cur = module
+    for k, seg in enumerate(rest):
+        is_last = k == len(rest) - 1
+        if seg == "self":
+            # `use x::y::{self, Z}` — the group's `self` names the module
+            if is_last:
+                return Resolution(True, None, cur, "")
+            continue
+        # 1. submodule?
+        sub = crate.modules.get(cur.path + (seg,))
+        if sub is not None:
+            mods = _lookup(cur, seg)
+            if external_view and mods and not any(
+                it.vis == "pub" for it in mods if it.kind == "mod"
+            ):
+                return Resolution(False, None, None,
+                                  f"module `{seg}` is not pub")
+            cur = sub
+            if is_last:
+                return Resolution(True, None, cur, "")
+            continue
+        # 2. item in current module?
+        items = _lookup(cur, seg)
+        vis_items = [
+            it for it in items
+            if not external_view or it.vis == "pub"
+        ]
+        if vis_items:
+            it = vis_items[0]
+            if it.kind == "reexport" and it.target is not None:
+                if is_last:
+                    return Resolution(True, it, cur, "")
+                # path continues through a re-export: chase it
+                chased = resolve_path(crates, crate, cur, it.target,
+                                      False, external_view, _depth + 1)
+                if chased.ok and chased.module is not None and chased.item is None:
+                    cur = chased.module
+                    continue
+                if chased.ok:
+                    # re-export of an item; allow one trailing segment
+                    if k + 2 >= len(rest):
+                        return Resolution(True, chased.item, cur, "")
+                return Resolution(False, None, None,
+                                  f"cannot traverse re-export `{seg}`")
+            if is_last:
+                return Resolution(True, it, cur, "")
+            # non-module item with trailing segments: enum variant or
+            # associated const — allow exactly one more segment.
+            if k + 2 == len(rest) and it.kind in ("enum", "struct", "trait",
+                                                  "type"):
+                return Resolution(True, it, cur, "")
+            return Resolution(False, None, None,
+                              f"`{seg}` is a {it.kind}, not a module")
+        # 3. glob re-exports into this module?
+        for gpath, _ggate in cur.glob_reexports:
+            chased = resolve_path(crates, crate, cur, gpath + (seg,),
+                                  is_glob and is_last, external_view,
+                                  _depth + 1)
+            if chased.ok:
+                if is_last:
+                    return chased
+                if chased.module is not None and chased.item is None:
+                    cur = chased.module
+                    break
+        else:
+            where = "::".join(cur.path) or "crate root"
+            return Resolution(False, None, None,
+                              f"`{seg}` not found in {where}")
+        continue
+    return Resolution(True, None, cur, "")

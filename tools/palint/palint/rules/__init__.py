@@ -1,0 +1,112 @@
+"""Rule registry and the shared analysis context.
+
+Each rule module exposes ``RULES = {rule_id: description}`` and a
+``run(ctx, report)`` function appending :class:`palint.findings.Finding`
+objects.  ``Context`` owns everything expensive — parsed crates, file
+texts — so rules stay cheap and composable.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional
+
+from ..lexer import lex
+from ..loader import Crate, Module, load_crate, parse_file
+
+
+class Context:
+    """Parsed view of the repository, shared by every rule."""
+
+    def __init__(self, root: str):
+        self.root = os.path.abspath(root)
+        self.rust_dir = os.path.join(self.root, "rust")
+        self.src_dir = os.path.join(self.rust_dir, "src")
+        self.cargo_toml = os.path.join(self.rust_dir, "Cargo.toml")
+        self.crates: Dict[str, Crate] = {}
+        # standalone target crates (unit = one root file): name -> Crate
+        self.targets: Dict[str, Crate] = {}
+        self.parse_errors: List[str] = []
+        self._texts: Dict[str, str] = {}
+        self._load()
+
+    # -- helpers ----------------------------------------------------------
+
+    def rel(self, path: str) -> str:
+        return os.path.relpath(path, self.root)
+
+    def text(self, path: str) -> str:
+        if path not in self._texts:
+            with open(path, encoding="utf-8") as fh:
+                self._texts[path] = fh.read()
+        return self._texts[path]
+
+    def rs_files_under(self, *parts: str) -> List[str]:
+        base = os.path.join(self.root, *parts)
+        out: List[str] = []
+        for dirpath, _dirnames, filenames in os.walk(base):
+            for fn in sorted(filenames):
+                if fn.endswith(".rs"):
+                    out.append(os.path.join(dirpath, fn))
+        return out
+
+    # -- loading ----------------------------------------------------------
+
+    def _load(self) -> None:
+        lib_rs = os.path.join(self.src_dir, "lib.rs")
+        if os.path.isfile(lib_rs):
+            self.crates["hyppo"] = self._load_crate("hyppo", lib_rs)
+        anyhow_rs = os.path.join(
+            self.rust_dir, "vendor", "anyhow", "src", "lib.rs")
+        if os.path.isfile(anyhow_rs):
+            self.crates["anyhow"] = self._load_crate("anyhow", anyhow_rs)
+
+        # Standalone target crates: bin, tests, benches, examples (both the
+        # cargo-discovered rust/examples and the repo-root examples/ that
+        # Cargo.toml wires in by explicit path).
+        main_rs = os.path.join(self.src_dir, "main.rs")
+        if os.path.isfile(main_rs):
+            self.targets["bin:hyppo"] = self._load_crate("bin:hyppo", main_rs)
+        for kind, sub in (("test", ("rust", "tests")),
+                          ("bench", ("rust", "benches")),
+                          ("example", ("rust", "examples")),
+                          ("example", ("examples",))):
+            base = os.path.join(self.root, *sub)
+            if not os.path.isdir(base):
+                continue
+            for fn in sorted(os.listdir(base)):
+                if fn.endswith(".rs"):
+                    path = os.path.join(base, fn)
+                    name = f"{kind}:{self.rel(path)}"
+                    self.targets[name] = self._load_crate(name, path)
+
+    def _load_crate(self, name: str, root_file: str) -> Crate:
+        try:
+            crate = load_crate(name, root_file)
+        except Exception as e:
+            self.parse_errors.append(f"{self.rel(root_file)}: {e}")
+            crate = Crate(name, root_file)
+            crate.modules[()] = Module((), root_file)
+        self.parse_errors.extend(
+            f"{self.rel(root_file)}: {err}" for err in crate.errors)
+        return crate
+
+    # -- cross-rule utilities --------------------------------------------
+
+    def hyppo(self) -> Optional[Crate]:
+        return self.crates.get("hyppo")
+
+
+def all_rules():
+    """Import and return every rule module, in report order."""
+    from . import (structure, determinism, panic_surface, cargo_targets,
+                   bench_schema, doc_refs)
+    return [structure, determinism, panic_surface, cargo_targets,
+            bench_schema, doc_refs]
+
+
+def rule_descriptions() -> Dict[str, str]:
+    out: Dict[str, str] = {}
+    for m in all_rules():
+        out.update(m.RULES)
+    return out

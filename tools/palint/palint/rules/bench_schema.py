@@ -1,0 +1,91 @@
+"""``hyppo-bench-v1`` schema validation for committed ``BENCH_*.json``.
+
+The bench JSON pipe (``rust/src/util/bench.rs``) emits: ``schema``
+(= ``"hyppo-bench-v1"``), ``target``, ``git_rev``, optional
+``budget_override_ms``, ``results`` (list of per-case records with
+``name``/``iters``/``mean_ns``/``median_ns``/``p95_ns``/``min_ns``) and
+``derived`` (flat name → number map).  Committed baselines must conform,
+and — because this container cannot run ``cargo bench`` — an *empty*
+``results`` array is only honest when flagged with an explicit
+``"placeholder": true`` marker, so downstream consumers can distinguish
+"no numbers yet" from "bench produced nothing" instead of special-casing
+file contents.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+from ..findings import Finding, Report
+
+RULES = {
+    "bench-schema": "committed BENCH_*.json conform to hyppo-bench-v1 "
+                    "(empty results require an explicit placeholder marker)",
+}
+
+RESULT_FIELDS = ("name", "iters", "mean_ns", "median_ns", "p95_ns", "min_ns")
+
+
+def _is_num(v: Any) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def validate_doc(doc: Any):
+    """Yield (slug, message) pairs for every schema violation."""
+    if not isinstance(doc, dict):
+        yield "not-object", "document is not a JSON object"
+        return
+    if doc.get("schema") != "hyppo-bench-v1":
+        yield "bad-schema", (f"schema is {doc.get('schema')!r}, expected "
+                             "'hyppo-bench-v1'")
+    for key, ty in (("target", str), ("git_rev", str)):
+        if not isinstance(doc.get(key), ty):
+            yield f"bad-{key}", f"`{key}` missing or not a string"
+    results = doc.get("results")
+    if not isinstance(results, list):
+        yield "bad-results", "`results` missing or not an array"
+        results = []
+    for k, rec in enumerate(results):
+        if not isinstance(rec, dict):
+            yield f"bad-result-{k}", f"results[{k}] is not an object"
+            continue
+        for fld in RESULT_FIELDS:
+            v = rec.get(fld)
+            ok = isinstance(v, str) if fld == "name" else _is_num(v)
+            if not ok:
+                yield (f"bad-result-{k}-{fld}",
+                       f"results[{k}].{fld} missing or wrong type")
+    derived = doc.get("derived")
+    if not isinstance(derived, dict):
+        yield "bad-derived", "`derived` missing or not an object"
+    else:
+        for k, v in derived.items():
+            if not _is_num(v):
+                yield f"bad-derived-{k}", f"derived[{k!r}] is not a number"
+    if isinstance(results, list) and not results:
+        if doc.get("placeholder") is not True:
+            yield ("missing-placeholder-marker",
+                   "`results` is empty but the document carries no "
+                   '`"placeholder": true` marker — empty baselines must '
+                   "be explicit, not inferred from a prose note")
+
+
+def run(ctx, report: Report) -> None:
+    names = sorted(fn for fn in os.listdir(ctx.root)
+                   if fn.startswith("BENCH_") and fn.endswith(".json"))
+    for fn in names:
+        path = os.path.join(ctx.root, fn)
+        try:
+            with open(path, encoding="utf-8") as fh:
+                doc = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            report.add(Finding(
+                rule="bench-schema", file=fn, line=0,
+                message=f"unreadable JSON: {e}", slug="unreadable"))
+            continue
+        for slug, message in validate_doc(doc):
+            report.add(Finding(
+                rule="bench-schema", file=fn, line=0,
+                message=message, slug=slug))

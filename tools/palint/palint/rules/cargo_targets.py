@@ -1,0 +1,114 @@
+"""Cargo.toml target consistency.
+
+Every declared target path must exist, and every target-shaped file must
+be declared (or auto-discoverable): benches with ``harness = false`` are
+only built when listed, and the repo-root ``examples/`` directory sits
+*outside* cargo's auto-discovery, so an undeclared file there is dead
+code that no CI will ever compile — precisely the drift this rule exists
+to catch.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Set
+
+from ..findings import Finding, Report
+from ..toml_min import TomlError, load
+
+RULES = {
+    "cargo-targets": "every [[bench]]/[[test]]/[[example]]/[[bin]]/[lib] "
+                     "path exists and every target-shaped file is declared",
+}
+
+
+def run(ctx, report: Report) -> None:
+    if not os.path.isfile(ctx.cargo_toml):
+        report.add(Finding(
+            rule="cargo-targets", file="rust/Cargo.toml", line=0,
+            message="Cargo.toml is missing", slug="missing-manifest"))
+        return
+    try:
+        tables, arrays = load(ctx.cargo_toml)
+    except TomlError as e:
+        report.add(Finding(
+            rule="cargo-targets", file="rust/Cargo.toml", line=0,
+            message=f"Cargo.toml parse error: {e}", slug="manifest-parse"))
+        return
+
+    rust = ctx.rust_dir
+
+    def exists(rel_path: str) -> bool:
+        return os.path.isfile(os.path.normpath(os.path.join(rust, rel_path)))
+
+    # [lib] / [[bin]] / arrays-of-tables target paths ----------------------
+    declared_paths: Dict[str, Set[str]] = {k: set() for k in
+                                           ("bench", "test", "example",
+                                            "bin")}
+    lib = tables.get("lib")
+    if lib is not None:
+        p = lib.get("path", "src/lib.rs")
+        if not exists(p):
+            report.add(Finding(
+                rule="cargo-targets", file="rust/Cargo.toml", line=0,
+                message=f"[lib] path `{p}` does not exist",
+                slug=f"missing-target:lib:{p}"))
+    names_seen: Dict[str, str] = {}
+    for kind in ("bin", "bench", "test", "example"):
+        for entry in arrays.get(kind, []):
+            name = entry.get("name", "?")
+            path = entry.get("path")
+            if path is None:
+                # cargo infers the path for named targets; only explicit
+                # paths can drift, but a nameless entry is always wrong
+                if "name" not in entry:
+                    report.add(Finding(
+                        rule="cargo-targets", file="rust/Cargo.toml", line=0,
+                        message=f"[[{kind}]] entry without a name",
+                        slug=f"anon-target:{kind}"))
+                continue
+            declared_paths[kind].add(os.path.normpath(path))
+            if not exists(path):
+                report.add(Finding(
+                    rule="cargo-targets", file="rust/Cargo.toml", line=0,
+                    message=f"[[{kind}]] `{name}` path `{path}` does not "
+                            "exist",
+                    slug=f"missing-target:{kind}:{name}"))
+            dup = names_seen.get(f"{kind}:{name}")
+            if dup:
+                report.add(Finding(
+                    rule="cargo-targets", file="rust/Cargo.toml", line=0,
+                    message=f"duplicate [[{kind}]] name `{name}`",
+                    slug=f"dup-target:{kind}:{name}"))
+            names_seen[f"{kind}:{name}"] = path
+
+    # benches must be declared (harness = false ⇒ no auto-discovery works)
+    for path in ctx.rs_files_under("rust", "benches"):
+        rel = os.path.relpath(path, rust)
+        if os.path.normpath(rel) not in declared_paths["bench"]:
+            report.add(Finding(
+                rule="cargo-targets", file=ctx.rel(path), line=0,
+                message=f"bench file `{rel}` has no [[bench]] entry in "
+                        "Cargo.toml — it will never be built",
+                slug=f"undeclared-bench:{rel}"))
+
+    # repo-root examples/ sit outside auto-discovery -----------------------
+    for path in ctx.rs_files_under("examples"):
+        rel_repo = ctx.rel(path)
+        rel_cargo = os.path.normpath(os.path.relpath(path, rust))
+        if rel_cargo not in declared_paths["example"]:
+            report.add(Finding(
+                rule="cargo-targets", file=rel_repo, line=0,
+                message=f"example `{rel_repo}` is outside rust/examples "
+                        "auto-discovery and has no [[example]] entry — "
+                        "it is never compiled by any build or CI job",
+                slug=f"undeclared-example:{rel_repo}"))
+
+    # workspace members ----------------------------------------------------
+    ws = tables.get("workspace", {})
+    for member in ws.get("members", []):
+        if not os.path.isfile(os.path.join(rust, member, "Cargo.toml")):
+            report.add(Finding(
+                rule="cargo-targets", file="rust/Cargo.toml", line=0,
+                message=f"workspace member `{member}` has no Cargo.toml",
+                slug=f"missing-member:{member}"))

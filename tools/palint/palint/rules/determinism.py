@@ -1,0 +1,200 @@
+"""Determinism lints — the invariants DESIGN.md §5/§6/§12 promise.
+
+* ``det-hash-iter``   — no iteration over ``HashMap``/``HashSet`` in the
+  hot-path subsystems (``exec``, ``cluster``, ``optimizer`` including
+  ``candidates``) without a canonicalizing step (sort / BTree collect) or
+  an order-insensitive consumer (``len``/``count``/``sum``/``contains``/
+  ``all``/``any``/``is_empty``).  Hash iteration order is randomized per
+  process (SipHash keys), so an unsorted walk is a bit-reproducibility
+  bug by construction.
+* ``det-wall-clock``  — no ``Instant``/``SystemTime`` inside the
+  virtual-time simulator (``cluster::sim``, ``cluster::faults``) or the
+  sans-IO ``exec::session``: those surfaces are *defined* by not reading
+  ambient time.
+* ``det-ambient-rng`` — no ``thread_rng``/``rand::random``/``OsRng``/
+  ``from_entropy`` anywhere in the Rust tree; all randomness flows from
+  the seeded ``sampling::rng::Rng``.
+
+Test modules (``#[cfg(test)]``) are exempt from ``det-hash-iter`` —
+asserting set-equality over a hash container is order-insensitive by
+nature — but not from the other two.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import List, Set, Tuple
+
+from ..findings import Finding, Report
+from ..lexer import lex, strip_comments_and_strings
+from ..loader import in_ranges
+
+RULES = {
+    "det-hash-iter": "no HashMap/HashSet iteration without canonical sort "
+                     "in exec/cluster/optimizer hot paths",
+    "det-wall-clock": "no Instant/SystemTime inside cluster::sim, "
+                      "cluster::faults, or exec::session",
+    "det-ambient-rng": "no thread_rng/rand::random/OsRng/from_entropy "
+                       "anywhere in the Rust tree",
+}
+
+HOT_SUBSYSTEMS = ("exec", "cluster", "optimizer")
+CLOCK_FREE_FILES = (
+    os.path.join("rust", "src", "cluster", "sim.rs"),
+    os.path.join("rust", "src", "cluster", "faults.rs"),
+    os.path.join("rust", "src", "exec", "session.rs"),
+)
+ORDER_INSENSITIVE = (
+    ".len()", ".count()", ".sum()", ".sum::<", ".is_empty()",
+    ".contains(", ".contains_key(", ".all(", ".any(", ".get(",
+)
+CANONICALIZERS = ("sort", "BTreeMap", "BTreeSet", "BinaryHeap")
+
+_BIND_TY = re.compile(
+    r"\b(\w+)\s*:\s*(?:&\s*(?:mut\s+)?)?(?:std\s*::\s*collections\s*::\s*)?"
+    r"Hash(?:Map|Set)\b")
+_BIND_EXPR = re.compile(
+    r"\blet\s+(?:mut\s+)?(\w+)\s*(?::[^=;]*)?=\s*"
+    r"(?:std\s*::\s*collections\s*::\s*)?Hash(?:Map|Set)\s*::")
+_ITER_METHODS = ("iter", "iter_mut", "keys", "values", "values_mut",
+                 "into_iter", "drain", "into_keys", "into_values",
+                 "retain")
+
+
+def run(ctx, report: Report) -> None:
+    _check_hash_iter(ctx, report)
+    _check_wall_clock(ctx, report)
+    _check_ambient_rng(ctx, report)
+
+
+def _test_ranges_for(ctx, path: str) -> List[Tuple[int, int]]:
+    for crate in list(ctx.crates.values()) + list(ctx.targets.values()):
+        fi = crate.files.get(path)
+        if fi is not None:
+            return fi.test_ranges
+    return []
+
+
+def _pragma_lines(src: str, rule: str) -> Set[int]:
+    out: Set[int] = set()
+    for k, line in enumerate(src.split("\n"), 1):
+        if f"palint: allow({rule})" in line:
+            out.add(k)
+            out.add(k + 1)  # pragma on the preceding line covers the next
+    return out
+
+
+# --------------------------------------------------------------------------
+# det-hash-iter
+# --------------------------------------------------------------------------
+
+def _check_hash_iter(ctx, report: Report) -> None:
+    files: List[str] = []
+    for sub in HOT_SUBSYSTEMS:
+        files.extend(ctx.rs_files_under("rust", "src", sub))
+    for path in files:
+        src = ctx.text(path)
+        stripped = strip_comments_and_strings(src)
+        lines = stripped.split("\n")
+        tests = _test_ranges_for(ctx, path)
+        pragmas = _pragma_lines(src, "det-hash-iter")
+
+        hash_bound: Set[str] = set()
+        for m in _BIND_TY.finditer(stripped):
+            hash_bound.add(m.group(1))
+        for m in _BIND_EXPR.finditer(stripped):
+            hash_bound.add(m.group(1))
+        hash_bound.discard("e")  # over-eager generic captures
+
+        sites: List[Tuple[int, str, str]] = []  # (line, name, how)
+        for k, line in enumerate(lines, 1):
+            for name in hash_bound:
+                for meth in _ITER_METHODS:
+                    if re.search(rf"\b{re.escape(name)}\s*\.\s*{meth}\b",
+                                 line):
+                        sites.append((k, name, f".{meth}()"))
+            m = re.search(r"\bfor\s+.+?\bin\s+&?(?:mut\s+)?(\w+)\b", line)
+            if m and m.group(1) in hash_bound:
+                sites.append((k, m.group(1), "for-loop"))
+
+        for lineno, name, how in sites:
+            if in_ranges(lineno, tests) or lineno in pragmas:
+                continue
+            window = "\n".join(lines[max(0, lineno - 2):lineno + 3])
+            if any(c in window for c in CANONICALIZERS):
+                continue
+            if any(tok in window for tok in ORDER_INSENSITIVE):
+                continue
+            report.add(Finding(
+                rule="det-hash-iter",
+                file=ctx.rel(path), line=lineno,
+                message=f"iteration over hash container `{name}` ({how}) "
+                        "without canonical sort — hash order is "
+                        "process-random; sort or use a BTree collection",
+                slug=f"hash-iter:{name}:{how}",
+            ))
+
+
+# --------------------------------------------------------------------------
+# det-wall-clock
+# --------------------------------------------------------------------------
+
+def _check_wall_clock(ctx, report: Report) -> None:
+    for rel in CLOCK_FREE_FILES:
+        path = os.path.join(ctx.root, rel)
+        if not os.path.isfile(path):
+            continue
+        src = ctx.text(path)
+        pragmas = _pragma_lines(src, "det-wall-clock")
+        tests = _test_ranges_for(ctx, path)
+        for t in lex(src):
+            if t.kind == "ident" and t.text in ("Instant", "SystemTime"):
+                if t.line in pragmas or in_ranges(t.line, tests):
+                    continue
+                report.add(Finding(
+                    rule="det-wall-clock",
+                    file=ctx.rel(path), line=t.line,
+                    message=f"`{t.text}` in a virtual-time / sans-IO "
+                            "surface — wall-clock reads break determinism "
+                            "and the sim ≡ threaded equivalence proofs",
+                    slug=f"wall-clock:{t.text}",
+                ))
+
+
+# --------------------------------------------------------------------------
+# det-ambient-rng
+# --------------------------------------------------------------------------
+
+def _check_ambient_rng(ctx, report: Report) -> None:
+    roots = [("rust", "src"), ("rust", "tests"), ("rust", "benches"),
+             ("rust", "examples"), ("examples",)]
+    seen: Set[str] = set()
+    for parts in roots:
+        for path in ctx.rs_files_under(*parts):
+            if path in seen:
+                continue
+            seen.add(path)
+            src = ctx.text(path)
+            pragmas = _pragma_lines(src, "det-ambient-rng")
+            toks = lex(src)
+            for i, t in enumerate(toks):
+                if t.kind != "ident":
+                    continue
+                bad = None
+                if t.text in ("thread_rng", "from_entropy", "OsRng"):
+                    bad = t.text
+                elif (t.text == "random" and i >= 3
+                      and toks[i - 1].text == ":"
+                      and toks[i - 2].text == ":"
+                      and toks[i - 3].text == "rand"):
+                    bad = "rand::random"
+                if bad is None or t.line in pragmas:
+                    continue
+                report.add(Finding(
+                    rule="det-ambient-rng",
+                    file=ctx.rel(path), line=t.line,
+                    message=f"ambient RNG `{bad}` — all randomness must "
+                            "flow from the seeded sampling::rng::Rng",
+                    slug=f"ambient-rng:{bad}",
+                ))

@@ -1,0 +1,140 @@
+"""DESIGN.md / README section-reference integrity.
+
+DESIGN.md's sections have been renumbered twice already; every ``§N``
+citation that survives a renumbering silently points at the wrong
+design. This rule resolves:
+
+* ``DESIGN.md §N`` (numeric, incl. ``§N.M`` sub-refs and ``§N-§M``
+  ranges) in any ``.rs`` file, README.md, or DESIGN.md against the
+  actual ``## §N Title`` headings;
+* ``DESIGN.md §Title`` (named) against section titles, case-insensitive;
+* ``README §Title`` against README headings;
+* bare ``§N`` self-references inside DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import Dict, List, Set, Tuple
+
+from ..findings import Finding, Report
+
+RULES = {
+    "doc-refs": "DESIGN.md §N / README §Title citations resolve to real "
+                "sections",
+}
+
+_DESIGN_HEADING = re.compile(r"^##\s*§(\d+)\s+(.*?)\s*$", re.M)
+_MD_HEADING = re.compile(r"^#{2,}\s+(.*?)\s*$", re.M)
+_REF = re.compile(
+    r"(DESIGN\.md|README(?:\.md)?)\s+§\s*([0-9]+(?:\.[0-9]+)?"
+    r"|[A-Za-z][A-Za-z0-9 /-]*)")
+_BARE_NUM = re.compile(r"§\s*(\d+)")
+
+
+def _clean_title(t: str) -> str:
+    # strip markdown backticks/links and trailing punctuation for matching
+    t = re.sub(r"[`*_]", "", t)
+    t = re.sub(r"\(.*?\)", "", t)
+    return " ".join(t.split()).casefold()
+
+
+def run(ctx, report: Report) -> None:
+    design_path = os.path.join(ctx.root, "DESIGN.md")
+    readme_path = os.path.join(ctx.root, "README.md")
+    design = ctx.text(design_path) if os.path.isfile(design_path) else ""
+    readme = ctx.text(readme_path) if os.path.isfile(readme_path) else ""
+
+    design_nums: Set[int] = set()
+    design_titles: Dict[str, int] = {}
+    for m in _DESIGN_HEADING.finditer(design):
+        num = int(m.group(1))
+        design_nums.add(num)
+        design_titles[_clean_title(m.group(2))] = num
+    readme_titles: Set[str] = {
+        _clean_title(m.group(1)) for m in _MD_HEADING.finditer(readme)}
+
+    files: List[str] = []
+    for parts in (("rust",), ("examples",)):
+        files.extend(ctx.rs_files_under(*parts))
+    if os.path.isfile(readme_path):
+        files.append(readme_path)
+    if os.path.isfile(design_path):
+        files.append(design_path)
+
+    for path in files:
+        text = ctx.text(path)
+        rel = ctx.rel(path)
+        for m in _REF.finditer(text):
+            doc, ref = m.group(1), m.group(2).strip()
+            line = text.count("\n", 0, m.start()) + 1
+            if doc == "DESIGN.md":
+                _check_design_ref(report, rel, line, ref, design_nums,
+                                  design_titles)
+            else:
+                _check_readme_ref(report, rel, line, ref, readme_titles)
+        if os.path.abspath(path) == os.path.abspath(design_path):
+            # bare §N self-references (skip the headings themselves and
+            # spans already matched as prefixed refs)
+            prefixed = {(mm.start(2)) for mm in _REF.finditer(text)}
+            for m in _BARE_NUM.finditer(text):
+                if m.start(1) in prefixed:
+                    continue
+                at_heading = text.rfind("\n", 0, m.start()) + 1
+                if text[at_heading:m.start()].strip() in ("##", "#"):
+                    continue
+                num = int(m.group(1))
+                if num not in design_nums:
+                    line = text.count("\n", 0, m.start()) + 1
+                    report.add(Finding(
+                        rule="doc-refs", file=rel, line=line,
+                        message=f"self-reference §{num} does not match any "
+                                "`## §N` heading in DESIGN.md",
+                        slug=f"bad-self-ref:{num}"))
+
+
+def _check_design_ref(report: Report, rel: str, line: int, ref: str,
+                      nums: Set[int], titles: Dict[str, int]) -> None:
+    if ref[0].isdigit():
+        major = int(ref.split(".")[0])
+        if major not in nums:
+            report.add(Finding(
+                rule="doc-refs", file=rel, line=line,
+                message=f"citation `DESIGN.md §{ref}` does not resolve: "
+                        f"no `## §{major}` heading exists "
+                        f"(have §{min(nums) if nums else '?'}–"
+                        f"§{max(nums) if nums else '?'})",
+                slug=f"bad-design-ref:{ref}"))
+        return
+    # named reference — match longest title prefix of the captured text
+    cand = _clean_title(ref)
+    while cand and cand not in titles:
+        if " " not in cand:
+            cand = ""
+            break
+        cand = cand.rsplit(" ", 1)[0]
+    if not cand:
+        report.add(Finding(
+            rule="doc-refs", file=rel, line=line,
+            message=f"citation `DESIGN.md §{ref}` does not match any "
+                    "section title",
+            slug=f"bad-design-ref:{ref}"))
+
+
+def _check_readme_ref(report: Report, rel: str, line: int, ref: str,
+                      titles: Set[str]) -> None:
+    if ref[0].isdigit():
+        return  # README sections are not numbered; nothing to resolve
+    cand = _clean_title(ref)
+    while cand and cand not in titles:
+        if " " not in cand:
+            cand = ""
+            break
+        cand = cand.rsplit(" ", 1)[0]
+    if not cand:
+        report.add(Finding(
+            rule="doc-refs", file=rel, line=line,
+            message=f"citation `README §{ref}` does not match any README "
+                    "heading",
+            slug=f"bad-readme-ref:{ref}"))

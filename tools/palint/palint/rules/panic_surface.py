@@ -1,0 +1,106 @@
+"""Panic-surface audit: unwrap/expect/panic!/indexing inventory.
+
+Counts panic-capable constructs per file (test modules excluded — a
+panicking assertion in a test is the mechanism working) and ratchets the
+counts against the committed ``tools/palint/baseline.json``:
+
+* count > baseline  → ``new`` finding (fails ``--strict``): the PR grew
+  the panic surface and must either handle the error or consciously
+  re-baseline with justification;
+* 0 < count ≤ baseline → ``baselined`` (visible in ``--verbose``/JSON);
+* count < baseline  → ``baselined`` with a tightening note so stale
+  headroom does not accumulate.
+
+Kinds: ``unwrap``, ``expect``, ``panic`` (also ``unreachable!``/``todo!``/
+``unimplemented!``/``assert!`` family excluding test mods), ``index``
+(``x[...]`` expressions — slice/array indexing panics on out-of-bounds).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from ..findings import Finding, Report
+from ..loader import in_ranges
+
+RULES = {
+    "panic-surface": "unwrap/expect/panic!/indexing inventory ratcheted "
+                     "against the committed baseline (growth fails)",
+}
+
+PANIC_MACROS = ("panic", "unreachable", "todo", "unimplemented",
+                "assert", "assert_eq", "assert_ne", "debug_assert")
+
+
+def count_file(tokens, test_ranges) -> Dict[str, int]:
+    counts = {"unwrap": 0, "expect": 0, "panic": 0, "index": 0}
+    n = len(tokens)
+    for i, t in enumerate(tokens):
+        if in_ranges(t.line, test_ranges):
+            continue
+        prev = tokens[i - 1] if i > 0 else None
+        nxt = tokens[i + 1] if i + 1 < n else None
+        if t.kind == "ident" and t.text in ("unwrap", "expect"):
+            if prev is not None and prev.text == "." and nxt is not None \
+                    and nxt.text == "(":
+                counts[t.text] += 1
+        elif t.kind == "ident" and t.text in PANIC_MACROS:
+            if nxt is not None and nxt.text == "!":
+                counts["panic"] += 1
+        elif t.text == "[" and prev is not None:
+            # index expression: `expr[...]` — previous token ends an
+            # expression.  Excludes attributes (#[...]), macro brackets
+            # (vec![...]), types ([f64; 4] follows punctuation).
+            if prev.kind in ("ident", "num") or prev.text in (")", "]"):
+                counts["index"] += 1
+    return counts
+
+
+def run(ctx, report: Report) -> None:
+    baseline = ctx.panic_baseline  # set by the runner
+    current: Dict[str, int] = {}
+    hy = ctx.hyppo()
+    crates = [c for c in [hy, ctx.targets.get("bin:hyppo")] if c]
+    seen = set()
+    for crate in crates:
+        for fi in crate.files.values():
+            if fi.path in seen:
+                continue
+            seen.add(fi.path)
+            rel = ctx.rel(fi.path)
+            if not rel.startswith("rust/src"):
+                continue
+            counts = count_file(fi.tokens, fi.test_ranges)
+            for kind, cnt in counts.items():
+                key = f"{rel}::{kind}"
+                if cnt:
+                    current[key] = cnt
+                allowed = baseline.allowed(rel, kind)
+                if cnt > allowed:
+                    report.add(Finding(
+                        rule="panic-surface", file=rel, line=0,
+                        message=f"{kind} count grew: {cnt} vs baseline "
+                                f"{allowed} — handle the error or "
+                                "re-baseline deliberately "
+                                "(--update-baseline) with justification",
+                        slug=f"panic-growth:{kind}",
+                    ))
+                elif cnt > 0:
+                    note = (f"{kind}: {cnt} (= baseline)" if cnt == allowed
+                            else f"{kind}: {cnt} < baseline {allowed} — "
+                                 "baseline can be tightened")
+                    f = Finding(
+                        rule="panic-surface", file=rel, line=0,
+                        message=note, slug=f"panic-count:{kind}",
+                        status="baselined")
+                    report.add(f)
+    # stale baseline entries (file/kind no longer present at all)
+    for key, allowed in baseline.counts.items():
+        if allowed > 0 and key not in current:
+            rel, _, kind = key.rpartition("::")
+            report.add(Finding(
+                rule="panic-surface", file=rel, line=0,
+                message=f"baseline entry {kind}={allowed} is stale (now 0) "
+                        "— tighten with --update-baseline",
+                slug=f"panic-stale:{kind}", status="baselined"))
+    ctx.panic_current = current

@@ -1,0 +1,338 @@
+"""Structural integrity rules.
+
+* ``mod-tree``     — every ``mod x;`` resolves to a file; every ``.rs``
+                     file under ``rust/src`` is reachable from ``lib.rs``
+                     or ``main.rs`` (dead files are how hand-verified
+                     refactors silently drop code).
+* ``use-resolve``  — every ``use crate::...`` / ``use hyppo::...`` path,
+                     and every inline-qualified ``hyppo::a::b`` /
+                     ``crate::a::b`` reference in tests, benches and
+                     examples, resolves to a declared item.  This is the
+                     breakage class the toolchain reckoning expects.
+* ``feature-gate`` — items gated ``#[cfg(feature = "pjrt")]`` are never
+                     referenced from ungated code (and vice versa for the
+                     ``not(feature)`` stub), unless a complementary
+                     definition covers both build configurations.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..findings import Finding, Report
+from ..loader import (Crate, FileInfo, Module, Resolution, in_ranges,
+                      resolve_path)
+
+RULES = {
+    "mod-tree": "module declarations resolve to files; no unreachable .rs "
+                "files under rust/src",
+    "use-resolve": "use-paths and qualified crate:: / hyppo:: references "
+                   "resolve to declared items",
+    "feature-gate": "pjrt-gated items are only referenced from "
+                    "equally-gated code",
+}
+
+
+def run(ctx, report: Report) -> None:
+    _check_parse_errors(ctx, report)
+    _check_mod_tree(ctx, report)
+    _check_use_resolution(ctx, report)
+    _check_qualified_refs(ctx, report)
+
+
+# --------------------------------------------------------------------------
+# mod-tree
+# --------------------------------------------------------------------------
+
+def _check_mod_tree(ctx, report: Report) -> None:
+    reachable: Set[str] = set()
+    for crate in list(ctx.crates.values()) + list(ctx.targets.values()):
+        for mod in crate.modules.values():
+            reachable.add(os.path.abspath(mod.file))
+            for name, line in mod.unresolved_mods:
+                report.add(Finding(
+                    rule="mod-tree",
+                    file=ctx.rel(mod.file), line=line,
+                    message=f"`mod {name};` does not resolve to {name}.rs "
+                            f"or {name}/mod.rs",
+                    slug=f"unresolved-mod:{name}",
+                ))
+    for path in ctx.rs_files_under("rust", "src"):
+        if os.path.abspath(path) not in reachable:
+            report.add(Finding(
+                rule="mod-tree",
+                file=ctx.rel(path), line=1,
+                message="file is not reachable from lib.rs or main.rs "
+                        "(dead module — wire it in or delete it)",
+                slug="unreachable-file",
+            ))
+
+
+def _check_parse_errors(ctx, report: Report) -> None:
+    for err in ctx.parse_errors:
+        file, _, msg = err.partition(": ")
+        report.add(Finding(
+            rule="mod-tree", file=file, line=0,
+            message=f"file failed to lex/parse: {msg}",
+            slug=f"parse-error:{msg[:40]}",
+        ))
+
+
+# --------------------------------------------------------------------------
+# use-resolve (+ feature-gate on the same walk)
+# --------------------------------------------------------------------------
+
+def _gate_context_matches(required: Optional[str], have: Optional[str]) -> bool:
+    if required is None:
+        return True
+    return required == have
+
+
+def _gate_requirement(items) -> Optional[str]:
+    """Gate a reference must carry to safely name this item, or None."""
+    gates = {it.gate for it in items}
+    if None in gates or "test" in gates:
+        return None
+    feats = {g for g in gates if g and g.startswith("feature:")}
+    notfeats = {g[len("not-"):] for g in gates
+                if g and g.startswith("not-feature:")}
+    # complementary cfg(feature)/cfg(not(feature)) pair: always defined
+    if feats & notfeats:
+        return None
+    if len(gates) == 1:
+        g = next(iter(gates))
+        if g and g.startswith(("feature:", "not-feature:")):
+            return g
+    return None
+
+
+def _walk_gates(
+    ctx, crate: Crate, start: Module, path: Tuple[str, ...]
+) -> Optional[Tuple[str, str]]:
+    """Return (segment, required-gate) if the path crosses a gated item."""
+    hy = ctx.hyppo()
+    cur_crate, cur = crate, start
+    segs = list(path)
+    while segs:
+        seg = segs.pop(0)
+        if seg == "crate":
+            cur = cur_crate.root
+            continue
+        if seg == "self":
+            continue
+        if seg == "super":
+            cur = cur_crate.modules.get(cur.path[:-1], cur)
+            continue
+        if seg in ctx.crates and (not cur.path) and cur is cur_crate.root \
+                and ctx.crates[seg] is not cur_crate:
+            cur_crate = ctx.crates[seg]
+            cur = cur_crate.root
+            continue
+        if seg == "hyppo" and hy is not None and cur_crate is not hy:
+            cur_crate = hy
+            cur = hy.root
+            continue
+        items = cur.items.get(seg, [])
+        if items:
+            req = _gate_requirement(items)
+            if req is not None:
+                return seg, req
+        sub = cur_crate.modules.get(cur.path + (seg,))
+        if sub is None:
+            return None
+        cur = sub
+    return None
+
+
+def _check_use_resolution(ctx, report: Report) -> None:
+    hy = ctx.hyppo()
+    if hy is None:
+        return
+    crates: Dict[str, Crate] = dict(ctx.crates)
+
+    jobs: List[Tuple[Crate, bool]] = [(c, False) for c in ctx.crates.values()]
+    jobs += [(c, True) for c in ctx.targets.values()]
+
+    for crate, external in jobs:
+        for mod in crate.modules.values():
+            for ud in mod.uses:
+                first = ud.path[0] if ud.path else ""
+                if external and first in ("crate", "self", "super"):
+                    # target-internal helper modules; resolution against
+                    # the target's own (tiny) module tree
+                    res = resolve_path(crates | {crate.name: crate}, crate,
+                                       mod, ud.path, ud.is_glob)
+                else:
+                    res = resolve_path(crates, crate, mod, ud.path,
+                                       ud.is_glob,
+                                       external_view=external and
+                                       first not in ("crate", "self",
+                                                     "super"))
+                if not res.ok:
+                    p = "::".join(ud.path) + ("::*" if ud.is_glob else "")
+                    report.add(Finding(
+                        rule="use-resolve",
+                        file=ctx.rel(mod.file), line=ud.line,
+                        message=f"`use {p}` does not resolve: {res.reason}",
+                        slug=f"unresolved-use:{p}",
+                    ))
+                    continue
+                gated = _walk_gates(ctx, crate, mod, ud.path)
+                if gated is not None:
+                    seg, req = gated
+                    if not _gate_context_matches(req, ud.gate):
+                        p = "::".join(ud.path)
+                        report.add(Finding(
+                            rule="feature-gate",
+                            file=ctx.rel(mod.file), line=ud.line,
+                            message=f"`use {p}` names `{seg}` which is "
+                                    f"gated `#[cfg({_fmt_gate(req)})]`, but "
+                                    f"this use is "
+                                    f"{_fmt_ctx_gate(ud.gate)}",
+                            slug=f"gate-leak:{p}",
+                        ))
+
+
+def _fmt_gate(g: str) -> str:
+    if g.startswith("feature:"):
+        return f'feature = "{g.split(":", 1)[1]}"'
+    if g.startswith("not-feature:"):
+        return f'not(feature = "{g.split(":", 1)[1]}")'
+    return g
+
+
+def _fmt_ctx_gate(g: Optional[str]) -> str:
+    return "ungated" if g is None else f"gated `{_fmt_gate(g)}`"
+
+
+# --------------------------------------------------------------------------
+# Inline qualified references: hyppo::a::b in targets, crate::a::b in src
+# --------------------------------------------------------------------------
+
+def _collect_qualified(tokens, root_ident: str) -> List[Tuple[int, List[str]]]:
+    """Find ``root_ident :: seg :: seg ...`` chains; returns (line, segs)."""
+    out = []
+    n = len(tokens)
+    for i, t in enumerate(tokens):
+        if t.kind != "ident" or t.text != root_ident:
+            continue
+        # not a path root if preceded by `::` (mid-path), `$` (macro), or
+        # `.` (field/method), or followed by anything but `::`
+        if i > 0 and tokens[i - 1].text in (":", "$", "."):
+            continue
+        if i + 2 >= n or tokens[i + 1].text != ":" or tokens[i + 2].text != ":":
+            continue
+        segs, j = [], i + 1
+        while j + 1 < n and tokens[j].text == ":" and tokens[j + 1].text == ":":
+            j += 2
+            if j < n and tokens[j].kind == "ident":
+                segs.append(tokens[j].text)
+                j += 1
+            else:
+                break
+        if segs:
+            out.append((t.line, segs))
+    return out
+
+
+def _check_qualified_refs(ctx, report: Report) -> None:
+    hy = ctx.hyppo()
+    if hy is None:
+        return
+    # targets: hyppo::...  — external view of the library
+    for crate in ctx.targets.values():
+        for fi in crate.files.values():
+            for line, segs in _collect_qualified(fi.tokens, "hyppo"):
+                _check_chain(ctx, report, hy, fi, line, segs,
+                             external=True, base_gate=None)
+    # library + bin: crate::...
+    for crate_name in ("hyppo",):
+        crate = ctx.crates.get(crate_name)
+        if crate is None:
+            continue
+        for fi in crate.files.values():
+            base = _file_gate(crate, fi.path)
+            for line, segs in _collect_qualified(fi.tokens, "crate"):
+                _check_chain(ctx, report, crate, fi, line, segs,
+                             external=False, base_gate=base)
+
+
+def _file_gate(crate: Crate, path: str) -> Optional[str]:
+    """Whole-file gate: the gate of the shortest-path module in ``path``
+    (e.g. engine.rs is pjrt-gated via its ``mod engine;`` declaration)."""
+    best: Optional[Module] = None
+    for mod in crate.modules.values():
+        if mod.file == path and (best is None or len(mod.path) < len(best.path)):
+            best = mod
+    if best is not None and best.gate and best.gate.startswith(
+            ("feature:", "not-feature:")):
+        return best.gate
+    return None
+
+
+def _check_chain(ctx, report: Report, crate: Crate, fi: FileInfo,
+                 line: int, segs: List[str], external: bool,
+                 base_gate: Optional[str] = None) -> None:
+    """Walk a qualified path as far as modules go, then require an item."""
+    cur = crate.root
+    for k, seg in enumerate(segs):
+        sub = crate.modules.get(cur.path + (seg,))
+        if sub is not None:
+            mod_items = cur.items.get(seg, [])
+            req = _gate_requirement(mod_items) if mod_items else None
+            if req is not None:
+                have = base_gate
+                for a, b, g in fi.gated_ranges:
+                    if a <= line <= b:
+                        have = g
+                        break
+                if not _gate_context_matches(req, have):
+                    report.add(Finding(
+                        rule="feature-gate",
+                        file=ctx.rel(fi.path), line=line,
+                        message=f"reference to `{'::'.join(segs)}` crosses "
+                                f"module `{seg}` gated "
+                                f"`#[cfg({_fmt_gate(req)})]` from "
+                                f"{_fmt_ctx_gate(have)} code",
+                        slug=f"gate-leak:{'::'.join(segs)}",
+                    ))
+                    return
+            cur = sub
+            continue
+        items = [it for it in cur.items.get(seg, [])
+                 if not external or it.vis == "pub"]
+        if not items:
+            # glob re-exports may satisfy it
+            for gpath, _g in cur.glob_reexports:
+                res = resolve_path(ctx.crates, crate, cur, gpath + (seg,))
+                if res.ok:
+                    return
+            path = "::".join(segs[:k + 1])
+            where = "::".join(cur.path) or "crate root"
+            report.add(Finding(
+                rule="use-resolve",
+                file=ctx.rel(fi.path), line=line,
+                message=f"qualified reference `{'::'.join(segs)}`: "
+                        f"`{seg}` not found in {where}",
+                slug=f"unresolved-ref:{path}",
+            ))
+            return
+        req = _gate_requirement(items)
+        if req is not None:
+            have = base_gate
+            for a, b, g in fi.gated_ranges:
+                if a <= line <= b:
+                    have = g
+                    break
+            if not _gate_context_matches(req, have):
+                report.add(Finding(
+                    rule="feature-gate",
+                    file=ctx.rel(fi.path), line=line,
+                    message=f"reference to `{'::'.join(segs)}` crosses "
+                            f"`{seg}` gated `#[cfg({_fmt_gate(req)})]` from "
+                            f"{_fmt_ctx_gate(have)} code",
+                    slug=f"gate-leak:{'::'.join(segs)}",
+                ))
+        return  # chain ends at first item — methods/variants beyond
+    # path is all modules — fine

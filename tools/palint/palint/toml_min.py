@@ -1,0 +1,120 @@
+"""Minimal TOML-subset reader for Cargo.toml target checking.
+
+Python 3.10 has no ``tomllib`` and palint must stay stdlib-only, so this
+parses exactly the subset Cargo manifests in this repo use: ``[table]``
+and ``[[array-of-tables]]`` headers, ``key = "string"``, ``key = true/
+false``, ``key = 123``, and ``key = ["a", "b"]`` one-line arrays.
+Comments (``#``) and blank lines are skipped.  Unknown constructs raise,
+which is the correct failure mode for a linter: a manifest this parser
+cannot read is a manifest worth a human look.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+
+class TomlError(ValueError):
+    pass
+
+
+def _parse_value(raw: str, line_no: int) -> Any:
+    raw = raw.strip()
+    if raw.startswith('"'):
+        if not raw.endswith('"') or len(raw) < 2:
+            raise TomlError(f"line {line_no}: unterminated string")
+        return raw[1:-1]
+    if raw in ("true", "false"):
+        return raw == "true"
+    if raw.startswith("["):
+        if not raw.endswith("]"):
+            raise TomlError(f"line {line_no}: multi-line arrays unsupported")
+        inner = raw[1:-1].strip()
+        if not inner:
+            return []
+        parts = _split_top_commas(inner)
+        return [_parse_value(p, line_no) for p in parts]
+    if raw.startswith("{"):
+        if not raw.endswith("}"):
+            raise TomlError(f"line {line_no}: unterminated inline table")
+        out: Dict[str, Any] = {}
+        inner = raw[1:-1].strip()
+        if inner:
+            for part in _split_top_commas(inner):
+                k, _, v = part.partition("=")
+                out[k.strip()] = _parse_value(v, line_no)
+        return out
+    try:
+        return int(raw)
+    except ValueError:
+        pass
+    try:
+        return float(raw)
+    except ValueError:
+        raise TomlError(f"line {line_no}: unsupported value {raw!r}")
+
+
+def _split_top_commas(s: str) -> List[str]:
+    parts, depth, cur, in_str = [], 0, [], False
+    for ch in s:
+        if ch == '"':
+            in_str = not in_str
+        if not in_str:
+            if ch in "[{":
+                depth += 1
+            elif ch in "]}":
+                depth -= 1
+            elif ch == "," and depth == 0:
+                parts.append("".join(cur))
+                cur = []
+                continue
+        cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
+def _strip_comment(line: str) -> str:
+    out, in_str = [], False
+    for ch in line:
+        if ch == '"':
+            in_str = not in_str
+        if ch == "#" and not in_str:
+            break
+        out.append(ch)
+    return "".join(out)
+
+
+def load(path: str) -> Tuple[Dict[str, Any], Dict[str, List[Dict[str, Any]]]]:
+    """Parse a Cargo.toml.  Returns (tables, arrays_of_tables).
+
+    ``tables["package"]["name"]`` — plain ``[section]`` keys;
+    ``arrays["bench"]`` — list of ``[[bench]]`` entry dicts.
+    """
+    tables: Dict[str, Any] = {}
+    arrays: Dict[str, List[Dict[str, Any]]] = {}
+    current: Dict[str, Any] = tables.setdefault("", {})
+    with open(path, encoding="utf-8") as fh:
+        for line_no, raw in enumerate(fh, 1):
+            line = _strip_comment(raw).strip()
+            if not line:
+                continue
+            if line.startswith("[["):
+                if not line.endswith("]]"):
+                    raise TomlError(f"line {line_no}: bad table header")
+                name = line[2:-2].strip()
+                entry: Dict[str, Any] = {}
+                arrays.setdefault(name, []).append(entry)
+                current = entry
+                continue
+            if line.startswith("["):
+                if not line.endswith("]"):
+                    raise TomlError(f"line {line_no}: bad table header")
+                name = line[1:-1].strip()
+                current = tables.setdefault(name, {})
+                continue
+            key, eq, value = line.partition("=")
+            if not eq:
+                raise TomlError(f"line {line_no}: expected key = value")
+            current[key.strip()] = _parse_value(value, line_no)
+    return tables, arrays

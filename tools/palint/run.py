@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""palint — self-hosted determinism & integrity analyzer for the hyppo tree.
+
+Runs with nothing but a Python 3 stdlib — no cargo, no rustc, no pip —
+so the container that has never had a Rust toolchain (and the CI job
+that refuses to install one) can still mechanically enforce the repo's
+static guarantees.
+
+Usage:
+    python3 tools/palint/run.py                  # human-readable findings
+    python3 tools/palint/run.py --strict         # exit 1 on new findings
+    python3 tools/palint/run.py --json out.json  # palint-findings-v1 doc
+    python3 tools/palint/run.py --verbose        # include allowlisted/baselined
+    python3 tools/palint/run.py --update-baseline  # rewrite panic baseline
+    python3 tools/palint/run.py --list-rules
+
+Exit codes: 0 clean (or only allowlisted/baselined findings), 1 new
+findings under --strict, 2 configuration error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from palint.allow import Allowlist, Baseline, classify  # noqa: E402
+from palint.findings import Report  # noqa: E402
+from palint.rules import Context, all_rules, rule_descriptions  # noqa: E402
+
+TOOL_DIR = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_ROOT = os.path.abspath(os.path.join(TOOL_DIR, "..", ".."))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="palint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--root", default=DEFAULT_ROOT,
+                    help="repository root (default: inferred from tool path)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero when new findings exist")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the palint-findings-v1 document here")
+    ap.add_argument("--verbose", "-v", action="store_true",
+                    help="also print allowlisted and baselined findings")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite tools/palint/baseline.json from the "
+                         "current panic-surface counts")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print rule ids and descriptions, then exit")
+    args = ap.parse_args(argv)
+
+    descriptions = rule_descriptions()
+    if args.list_rules:
+        for rid in sorted(descriptions):
+            print(f"{rid:<16} {descriptions[rid]}")
+        return 0
+
+    root = os.path.abspath(args.root)
+    if not os.path.isdir(os.path.join(root, "rust", "src")):
+        print(f"palint: {root} does not look like the hyppo repo "
+              "(no rust/src)", file=sys.stderr)
+        return 2
+
+    try:
+        allowlist = Allowlist.load(os.path.join(TOOL_DIR, "allowlist.json"))
+    except ValueError as e:
+        print(f"palint: {e}", file=sys.stderr)
+        return 2
+    baseline = Baseline.load(os.path.join(TOOL_DIR, "baseline.json"))
+
+    ctx = Context(root)
+    ctx.panic_baseline = baseline
+    ctx.panic_current = {}
+
+    report = Report(root=root, rule_descriptions=descriptions)
+    report.files_scanned = sum(
+        len(c.files) for c in list(ctx.crates.values())
+        + list(ctx.targets.values()))
+    for mod in all_rules():
+        mod.run(ctx, report)
+
+    classify(report.findings, allowlist)
+
+    if args.update_baseline:
+        Baseline.write(os.path.join(TOOL_DIR, "baseline.json"),
+                       ctx.panic_current)
+        print(f"palint: baseline.json rewritten "
+              f"({len(ctx.panic_current)} entries)")
+        # re-classify against the fresh baseline for honest output
+        return 0
+
+    for entry in allowlist.unused():
+        print(f"palint: note: unused allowlist entry "
+              f"{entry.get('rule')}/{entry.get('file')} — remove it",
+              file=sys.stderr)
+
+    print(report.render_text(verbose=args.verbose))
+    if args.json:
+        report.write_json(args.json)
+        print(f"palint: findings json -> {args.json}")
+
+    if args.strict and report.new_findings():
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,194 @@
+"""Synthetic-repo fixture support for rule tests.
+
+``BASE_REPO`` is a minimal, palint-clean hyppo-shaped repository; each
+test materializes it (plus overrides) into a temp directory and runs the
+full rule set over it.  Keeping the baseline clean means every positive
+test demonstrates exactly one injected defect, and the shared negative
+test proves the fixture itself contributes zero findings.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from palint.allow import Allowlist, Baseline, classify
+from palint.findings import Report
+from palint.rules import Context, all_rules, rule_descriptions
+
+BASE_REPO: Dict[str, str] = {
+    "rust/Cargo.toml": """
+[package]
+name = "hyppo"
+version = "0.0.1"
+edition = "2021"
+
+[lib]
+name = "hyppo"
+path = "src/lib.rs"
+
+[[bench]]
+name = "bench_demo"
+path = "benches/bench_demo.rs"
+harness = false
+""",
+    "rust/src/lib.rs": """
+//! Fixture crate (DESIGN.md §1).
+pub mod cluster;
+pub mod exec;
+pub mod optimizer;
+pub mod runtime;
+""",
+    "rust/src/cluster/mod.rs": """
+pub mod sim;
+pub use sim::simulate;
+""",
+    "rust/src/cluster/sim.rs": """
+/// Virtual-time simulator (DESIGN.md §2).
+pub struct SimConfig {
+    pub workers: usize,
+}
+
+pub fn simulate(cfg: &SimConfig) -> usize {
+    cfg.workers
+}
+""",
+    "rust/src/exec/mod.rs": """
+pub mod session;
+pub use session::Session;
+""",
+    "rust/src/exec/session.rs": """
+pub struct Session {
+    pub evals: usize,
+}
+
+impl Session {
+    pub fn ask(&mut self) -> usize {
+        self.evals
+    }
+}
+""",
+    "rust/src/optimizer/mod.rs": """
+pub fn propose(xs: &[f64]) -> f64 {
+    xs.iter().sum()
+}
+""",
+    "rust/src/runtime/mod.rs": """
+#[cfg(feature = "pjrt")]
+pub mod engine;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+
+#[cfg(feature = "pjrt")]
+pub use engine::Engine;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Engine;
+""",
+    "rust/src/runtime/engine.rs": """
+pub struct Engine;
+
+impl Engine {
+    pub fn cpu() -> Engine {
+        Engine
+    }
+}
+""",
+    "rust/src/runtime/stub.rs": """
+pub struct Engine;
+
+impl Engine {
+    pub fn cpu() -> Engine {
+        Engine
+    }
+}
+""",
+    "rust/benches/bench_demo.rs": """
+use hyppo::cluster::sim::{simulate, SimConfig};
+
+fn main() {
+    let n = simulate(&SimConfig { workers: 4 });
+    assert!(n == 4, "fixture bench");
+}
+""",
+    "rust/tests/basic.rs": """
+use hyppo::exec::Session;
+
+#[test]
+fn session_asks() {
+    let mut s = Session { evals: 3 };
+    assert_eq!(s.ask(), 3);
+}
+""",
+    "DESIGN.md": """
+# DESIGN
+
+## §1 Fixture architecture
+
+See §2 for the simulator.
+
+## §2 Virtual time
+
+Nothing here reads wall clocks.
+""",
+    "README.md": """
+# fixture
+
+## Quickstart
+
+Run the thing.
+
+## Benchmark JSON workflow
+
+cargo bench.
+""",
+    "BENCH_demo.json": """
+{
+  "schema": "hyppo-bench-v1",
+  "target": "bench_demo",
+  "git_rev": "unknown",
+  "placeholder": true,
+  "results": [],
+  "derived": {}
+}
+""",
+}
+
+
+def run_palint(
+    overrides: Optional[Dict[str, Optional[str]]] = None,
+    baseline_counts: Optional[Dict[str, int]] = None,
+) -> Report:
+    """Materialize BASE_REPO (+overrides; None value = delete) and lint it.
+
+    Returns the classified Report.  ``baseline_counts`` feeds the
+    panic-surface ratchet (empty by default, so any panic construct in a
+    fixture is a *new* finding).
+    """
+    files = dict(BASE_REPO)
+    for key, value in (overrides or {}).items():
+        if value is None:
+            files.pop(key, None)
+        else:
+            files[key] = value
+    with tempfile.TemporaryDirectory(prefix="palint-fixture-") as root:
+        for rel, content in files.items():
+            path = os.path.join(root, rel)
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            with open(path, "w", encoding="utf-8") as fh:
+                fh.write(content.lstrip("\n"))
+        ctx = Context(root)
+        ctx.panic_baseline = Baseline(baseline_counts or {})
+        ctx.panic_current = {}
+        report = Report(root=root, rule_descriptions=rule_descriptions())
+        for mod in all_rules():
+            mod.run(ctx, report)
+        classify(report.findings, Allowlist([]))
+        return report
+
+
+def new_by_rule(report: Report, rule: str) -> List:
+    return [f for f in report.new_findings() if f.rule == rule]

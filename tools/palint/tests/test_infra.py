@@ -1,0 +1,121 @@
+"""Infrastructure tests: allowlist matching, baseline ratchet, findings doc."""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from palint import FINDINGS_SCHEMA
+from palint.allow import Allowlist, Baseline, classify
+from palint.findings import Finding, Report
+from palint.toml_min import TomlError, load as toml_load
+
+
+def mk_finding(rule="det-hash-iter", file="rust/src/exec/driver.rs",
+               slug="hash-iter:m:.iter()", message="iteration over `m`"):
+    return Finding(rule=rule, file=file, line=10, message=message, slug=slug)
+
+
+class TestAllowlist(unittest.TestCase):
+    def test_match_by_rule_file_substring(self):
+        al = Allowlist([{"rule": "det-hash-iter",
+                         "file": "rust/src/exec/driver.rs",
+                         "match": "hash-iter:m",
+                         "why": "sorted upstream"}])
+        f = mk_finding()
+        n_new, n_allow = classify([f], al)
+        self.assertEqual((n_new, n_allow), (0, 1))
+        self.assertEqual(f.status, "allowlisted")
+        self.assertEqual(f.allow_reason, "sorted upstream")
+
+    def test_glob_file_pattern(self):
+        al = Allowlist([{"rule": "det-hash-iter", "file": "rust/src/exec/*",
+                         "why": "exec is audited"}])
+        f = mk_finding()
+        classify([f], al)
+        self.assertEqual(f.status, "allowlisted")
+
+    def test_no_match_stays_new(self):
+        al = Allowlist([{"rule": "doc-refs", "file": "*", "why": "x"}])
+        f = mk_finding()
+        n_new, _ = classify([f], al)
+        self.assertEqual(n_new, 1)
+        self.assertEqual(f.status, "new")
+        self.assertEqual(len(al.unused()), 1)
+
+    def test_entry_without_why_rejected(self):
+        with self.assertRaises(ValueError):
+            Allowlist([{"rule": "doc-refs", "file": "*"}])
+
+
+class TestBaseline(unittest.TestCase):
+    def test_roundtrip_and_ratchet(self):
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "baseline.json")
+            Baseline.write(path, {"rust/src/a.rs::unwrap": 3})
+            b = Baseline.load(path)
+            self.assertEqual(b.allowed("rust/src/a.rs", "unwrap"), 3)
+            self.assertEqual(b.allowed("rust/src/a.rs", "index"), 0)
+            with open(path, encoding="utf-8") as fh:
+                doc = json.load(fh)
+            self.assertEqual(doc["schema"], "palint-baseline-v1")
+
+
+class TestFindingsDocument(unittest.TestCase):
+    def test_schema_and_counts(self):
+        r = Report(root="/repo")
+        f1 = mk_finding()
+        f2 = mk_finding(rule="doc-refs", slug="bad-design-ref:99",
+                        message="stale")
+        f2.status = "allowlisted"
+        r.add(f1)
+        r.add(f2)
+        doc = r.to_json()
+        self.assertEqual(doc["schema"], FINDINGS_SCHEMA)
+        self.assertEqual(doc["counts"]["total"], 2)
+        self.assertEqual(doc["counts"]["new"], 1)
+        self.assertEqual(doc["counts"]["allowlisted"], 1)
+        self.assertEqual(doc["counts"]["by_rule"]["det-hash-iter"], 1)
+        keys = {f["key"] for f in doc["findings"]}
+        self.assertIn(
+            "det-hash-iter::rust/src/exec/driver.rs::hash-iter:m:.iter()",
+            keys)
+
+    def test_key_is_line_stable(self):
+        a = mk_finding()
+        b = mk_finding()
+        b.line = 999
+        self.assertEqual(a.key, b.key)
+
+
+class TestTomlMin(unittest.TestCase):
+    def test_tables_and_arrays(self):
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "Cargo.toml")
+            with open(path, "w", encoding="utf-8") as fh:
+                fh.write(
+                    '[package]\nname = "hyppo"  # trailing comment\n'
+                    'members = ["vendor/anyhow"]\n'
+                    '[[bench]]\nname = "b1"\npath = "benches/b1.rs"\n'
+                    'harness = false\n'
+                    '[[bench]]\nname = "b2"\npath = "benches/b2.rs"\n')
+            tables, arrays = toml_load(path)
+            self.assertEqual(tables["package"]["name"], "hyppo")
+            self.assertEqual(tables["package"]["members"], ["vendor/anyhow"])
+            self.assertEqual(len(arrays["bench"]), 2)
+            self.assertIs(arrays["bench"][0]["harness"], False)
+
+    def test_unsupported_construct_raises(self):
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "Cargo.toml")
+            with open(path, "w", encoding="utf-8") as fh:
+                fh.write("[a]\nkey = 2026-08-08\n")
+            with self.assertRaises(TomlError):
+                toml_load(path)
+
+
+if __name__ == "__main__":
+    unittest.main()

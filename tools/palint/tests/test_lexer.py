@@ -1,0 +1,138 @@
+r"""Lexer unit tests: the Rust edge cases the analyzer must not trip on."""
+
+import os
+import sys
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from palint.lexer import LexError, lex, strip_comments_and_strings
+
+
+def kinds(src):
+    return [(t.kind, t.text) for t in lex(src)]
+
+
+def idents(src):
+    return [t.text for t in lex(src) if t.kind == "ident"]
+
+
+class TestStringsAndComments(unittest.TestCase):
+    def test_line_comment_dropped(self):
+        self.assertEqual(idents("let x = 1; // HashMap here\nlet y;"),
+                         ["let", "x", "let", "y"])
+
+    def test_nested_block_comments(self):
+        src = "a /* outer /* inner */ still comment */ b"
+        self.assertEqual(idents(src), ["a", "b"])
+
+    def test_unterminated_block_comment_raises(self):
+        with self.assertRaises(LexError):
+            lex("/* /* */")
+
+    def test_string_with_escapes(self):
+        src = r'let s = "quote \" and \\ backslash"; x'
+        toks = kinds(src)
+        strs = [t for t in toks if t[0] == "str"]
+        self.assertEqual(len(strs), 1)
+        self.assertIn(("ident", "x"), toks)
+
+    def test_string_containing_comment_markers(self):
+        self.assertEqual(idents('let s = "// not /* a comment"; y'),
+                         ["let", "s", "y"])
+
+    def test_raw_string_no_hash(self):
+        self.assertEqual(idents(r'let p = r"C:\no\escapes"; z'),
+                         ["let", "p", "z"])
+
+    def test_raw_string_hashes_with_embedded_quote(self):
+        src = 'let s = r#"she said "hi" loudly"#; after'
+        self.assertEqual(idents(src), ["let", "s", "after"])
+
+    def test_raw_string_double_hash(self):
+        src = 'let s = r##"contains "# inside"##; tail'
+        self.assertEqual(idents(src), ["let", "s", "tail"])
+
+    def test_byte_string(self):
+        self.assertEqual(idents('let b = b"bytes"; k'), ["let", "b", "k"])
+
+    def test_byte_raw_string(self):
+        self.assertEqual(idents('let b = br#"raw "bytes""#; k'),
+                         ["let", "b", "k"])
+
+    def test_unterminated_string_raises(self):
+        with self.assertRaises(LexError):
+            lex('let s = "never closed')
+
+
+class TestCharVsLifetime(unittest.TestCase):
+    def test_simple_char(self):
+        toks = kinds("let c = 'a';")
+        self.assertIn(("char", "'a'"), toks)
+
+    def test_escaped_char(self):
+        toks = kinds(r"let c = '\n';")
+        self.assertEqual([t for t in toks if t[0] == "char"],
+                         [("char", r"'\n'")])
+
+    def test_unicode_escape_char(self):
+        toks = kinds(r"let c = '\u{1F980}';")
+        self.assertEqual(len([t for t in toks if t[0] == "char"]), 1)
+
+    def test_lifetime_in_generics(self):
+        toks = kinds("fn f<'a>(x: &'a str) {}")
+        lifetimes = [t for t in toks if t[0] == "lifetime"]
+        self.assertEqual(lifetimes, [("lifetime", "'a"), ("lifetime", "'a")])
+        self.assertNotIn("char", [k for k, _ in toks])
+
+    def test_static_lifetime(self):
+        toks = kinds("const S: &'static str = \"x\";")
+        self.assertIn(("lifetime", "'static"), toks)
+
+    def test_char_literal_with_ident_like_body(self):
+        # 'a' is a char even though `a` alone would be a lifetime
+        toks = kinds("let x: char = 'z'; fn g<'z>() {}")
+        self.assertIn(("char", "'z'"), toks)
+        self.assertIn(("lifetime", "'z"), toks)
+
+
+class TestGenericsAndPunct(unittest.TestCase):
+    def test_shift_right_is_two_tokens(self):
+        # Vec<Vec<u64>> must close two generic scopes, not lex a `>>`
+        toks = kinds("let v: Vec<Vec<u64>> = Vec::new();")
+        closes = [t for t in toks if t == ("punct", ">")]
+        self.assertEqual(len(closes), 2)
+
+    def test_raw_identifier(self):
+        self.assertIn("r#type", idents("fn r#type() {}"))
+
+    def test_numbers_not_merged_with_methods(self):
+        toks = kinds("let x = 1.max(2);")
+        self.assertIn(("num", "1"), toks)
+        self.assertIn(("ident", "max"), toks)
+
+    def test_float_literal(self):
+        self.assertIn(("num", "1.5"), kinds("let x = 1.5;"))
+
+    def test_range_not_swallowed(self):
+        toks = kinds("for i in 0..10 {}")
+        self.assertIn(("num", "0"), toks)
+        self.assertIn(("num", "10"), toks)
+
+
+class TestStripper(unittest.TestCase):
+    def test_strip_preserves_line_structure(self):
+        src = 'let a = "two\nline"; // tail\nlet b = 1;'
+        out = strip_comments_and_strings(src)
+        self.assertEqual(out.count("\n"), src.count("\n"))
+        self.assertNotIn("two", out)
+        self.assertNotIn("tail", out)
+        self.assertIn("let b", out)
+
+    def test_hashmap_in_comment_not_visible(self):
+        src = "// iterate the HashMap here\nlet x = 1;"
+        self.assertNotIn("HashMap", strip_comments_and_strings(src))
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -1,0 +1,354 @@
+"""Per-rule positive + negative tests over the synthetic fixture repo."""
+
+import os
+import sys
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from tests.fixtures import new_by_rule, run_palint
+
+
+class TestFixtureBaseline(unittest.TestCase):
+    """The shared negative test: the base fixture is palint-clean."""
+
+    def test_base_repo_is_clean(self):
+        report = run_palint()
+        self.assertEqual(
+            [f"{f.rule}:{f.file}:{f.message}" for f in report.new_findings()],
+            [])
+
+
+class TestModTree(unittest.TestCase):
+    def test_missing_mod_file_fires(self):
+        report = run_palint({
+            "rust/src/lib.rs":
+                "pub mod cluster;\npub mod exec;\npub mod optimizer;\n"
+                "pub mod runtime;\npub mod ghost;\n"})
+        found = new_by_rule(report, "mod-tree")
+        self.assertTrue(any("ghost" in f.message for f in found), found)
+
+    def test_unreachable_file_fires(self):
+        report = run_palint({
+            "rust/src/orphan.rs": "pub fn lonely() {}\n"})
+        found = new_by_rule(report, "mod-tree")
+        self.assertTrue(any("not reachable" in f.message
+                            and f.file.endswith("orphan.rs")
+                            for f in found), found)
+
+
+class TestUseResolve(unittest.TestCase):
+    def test_broken_use_path_fires(self):
+        report = run_palint({
+            "rust/src/exec/mod.rs":
+                "pub mod session;\npub use session::Session;\n"
+                "use crate::cluster::sim::NoSuchThing;\n"})
+        found = new_by_rule(report, "use-resolve")
+        self.assertTrue(any("NoSuchThing" in f.message for f in found), found)
+
+    def test_broken_external_use_fires(self):
+        report = run_palint({
+            "rust/tests/basic.rs":
+                "use hyppo::exec::MissingItem;\n\n#[test]\nfn t() {}\n"})
+        found = new_by_rule(report, "use-resolve")
+        self.assertTrue(any("MissingItem" in f.message for f in found), found)
+
+    def test_broken_qualified_ref_fires(self):
+        report = run_palint({
+            "rust/tests/basic.rs":
+                "#[test]\nfn t() {\n"
+                "    let _ = hyppo::cluster::sim::vanished();\n}\n"})
+        found = new_by_rule(report, "use-resolve")
+        self.assertTrue(any("vanished" in f.message for f in found), found)
+
+    def test_valid_reexport_chain_is_clean(self):
+        report = run_palint({
+            "rust/tests/basic.rs":
+                "use hyppo::cluster::simulate;\n\n#[test]\nfn t() {\n"
+                "    let _ = simulate;\n}\n"})
+        self.assertEqual(new_by_rule(report, "use-resolve"), [])
+
+
+class TestFeatureGate(unittest.TestCase):
+    def test_ungated_ref_to_gated_module_fires(self):
+        report = run_palint({
+            "rust/src/optimizer/mod.rs":
+                "pub fn propose(xs: &[f64]) -> f64 {\n"
+                "    let _ = crate::runtime::engine::Engine::cpu();\n"
+                "    xs.iter().sum()\n}\n"})
+        found = new_by_rule(report, "feature-gate")
+        self.assertTrue(any("engine" in f.message for f in found), found)
+
+    def test_complementary_reexport_is_clean(self):
+        # runtime::Engine exists under both pjrt and not(pjrt): ungated
+        # callers may reference it freely.
+        report = run_palint({
+            "rust/src/optimizer/mod.rs":
+                "pub fn propose(xs: &[f64]) -> f64 {\n"
+                "    let _ = crate::runtime::Engine::cpu();\n"
+                "    xs.iter().sum()\n}\n"})
+        self.assertEqual(new_by_rule(report, "feature-gate"), [])
+
+
+class TestHashIter(unittest.TestCase):
+    def test_unsorted_iteration_fires(self):
+        report = run_palint({
+            "rust/src/exec/session.rs":
+                "use std::collections::HashMap;\n"
+                "pub struct Session { pub evals: usize }\n"
+                "pub fn walk(m: &HashMap<u32, u32>) -> Vec<u32> {\n"
+                "    let mut out = Vec::new();\n"
+                "    for (_k, v) in m.iter() {\n"
+                "        out.push(*v);\n"
+                "    }\n"
+                "    out\n}\n"})
+        found = new_by_rule(report, "det-hash-iter")
+        self.assertTrue(found, report.new_findings())
+
+    def test_sorted_iteration_is_clean(self):
+        report = run_palint({
+            "rust/src/exec/session.rs":
+                "use std::collections::HashMap;\n"
+                "pub struct Session { pub evals: usize }\n"
+                "pub fn walk(m: &HashMap<u32, u32>) -> Vec<u32> {\n"
+                "    let mut keys: Vec<_> = m.keys().collect();\n"
+                "    keys.sort();\n"
+                "    keys.iter().map(|k| m[k]).collect()\n}\n"},
+            baseline_counts={"rust/src/exec/session.rs::index": 1})
+        self.assertEqual(new_by_rule(report, "det-hash-iter"), [])
+
+    def test_order_insensitive_consumer_is_clean(self):
+        report = run_palint({
+            "rust/src/exec/session.rs":
+                "use std::collections::HashSet;\n"
+                "pub struct Session { pub evals: usize }\n"
+                "pub fn total(s: &HashSet<u32>) -> usize {\n"
+                "    s.iter().count()\n}\n"})
+        self.assertEqual(new_by_rule(report, "det-hash-iter"), [])
+
+    def test_test_module_exempt(self):
+        report = run_palint({
+            "rust/src/exec/session.rs":
+                "pub struct Session { pub evals: usize }\n"
+                "#[cfg(test)]\nmod tests {\n"
+                "    use std::collections::HashMap;\n"
+                "    #[test]\n    fn t() {\n"
+                "        let m: HashMap<u32, u32> = HashMap::new();\n"
+                "        for _ in m.iter() {}\n"
+                "    }\n}\n"})
+        self.assertEqual(new_by_rule(report, "det-hash-iter"), [])
+
+
+class TestWallClock(unittest.TestCase):
+    def test_instant_in_sim_fires(self):
+        report = run_palint({
+            "rust/src/cluster/sim.rs":
+                "pub struct SimConfig { pub workers: usize }\n"
+                "pub fn simulate(cfg: &SimConfig) -> u128 {\n"
+                "    let t = std::time::Instant::now();\n"
+                "    t.elapsed().as_nanos() + cfg.workers as u128\n}\n"})
+        found = new_by_rule(report, "det-wall-clock")
+        self.assertTrue(any("Instant" in f.message for f in found), found)
+
+    def test_instant_elsewhere_is_fine(self):
+        report = run_palint({
+            "rust/src/optimizer/mod.rs":
+                "pub fn propose(xs: &[f64]) -> f64 {\n"
+                "    let _t = std::time::Instant::now();\n"
+                "    xs.iter().sum()\n}\n"})
+        self.assertEqual(new_by_rule(report, "det-wall-clock"), [])
+
+
+class TestAmbientRng(unittest.TestCase):
+    def test_thread_rng_fires(self):
+        report = run_palint({
+            "rust/src/optimizer/mod.rs":
+                "pub fn propose(xs: &[f64]) -> f64 {\n"
+                "    let _r = rand::thread_rng();\n"
+                "    xs.iter().sum()\n}\n"})
+        found = new_by_rule(report, "det-ambient-rng")
+        self.assertTrue(any("thread_rng" in f.message for f in found), found)
+
+    def test_rand_random_fires(self):
+        report = run_palint({
+            "rust/src/optimizer/mod.rs":
+                "pub fn propose(xs: &[f64]) -> f64 {\n"
+                "    xs.iter().sum::<f64>() + rand::random::<f64>()\n}\n"})
+        found = new_by_rule(report, "det-ambient-rng")
+        self.assertTrue(any("rand::random" in f.message for f in found),
+                        found)
+
+    def test_seeded_rng_is_clean(self):
+        report = run_palint({
+            "rust/src/optimizer/mod.rs":
+                "pub fn propose(xs: &[f64], seed: u64) -> f64 {\n"
+                "    let state = seed.wrapping_mul(6364136223846793005);\n"
+                "    xs.iter().sum::<f64>() + (state >> 33) as f64\n}\n"})
+        self.assertEqual(new_by_rule(report, "det-ambient-rng"), [])
+
+
+class TestPanicSurface(unittest.TestCase):
+    def test_growth_over_baseline_fires(self):
+        report = run_palint({
+            "rust/src/optimizer/mod.rs":
+                "pub fn propose(xs: &[f64]) -> f64 {\n"
+                "    let first = xs.first().unwrap();\n"
+                "    *first\n}\n"})
+        found = new_by_rule(report, "panic-surface")
+        self.assertTrue(any("unwrap" in f.message for f in found), found)
+
+    def test_within_baseline_is_not_new(self):
+        report = run_palint({
+            "rust/src/optimizer/mod.rs":
+                "pub fn propose(xs: &[f64]) -> f64 {\n"
+                "    let first = xs.first().unwrap();\n"
+                "    *first\n}\n"},
+            baseline_counts={"rust/src/optimizer/mod.rs::unwrap": 1})
+        self.assertEqual(new_by_rule(report, "panic-surface"), [])
+        baselined = [f for f in report.findings
+                     if f.rule == "panic-surface" and f.status == "baselined"]
+        self.assertTrue(baselined)
+
+    def test_test_module_not_counted(self):
+        report = run_palint({
+            "rust/src/optimizer/mod.rs":
+                "pub fn propose(xs: &[f64]) -> f64 {\n"
+                "    xs.iter().sum()\n}\n"
+                "#[cfg(test)]\nmod tests {\n"
+                "    #[test]\n    fn t() {\n"
+                "        assert_eq!(super::propose(&[1.0]).max(0.0), 1.0);\n"
+                "        let v: Vec<u32> = vec![1];\n"
+                "        let _ = v.first().unwrap();\n"
+                "    }\n}\n"})
+        self.assertEqual(new_by_rule(report, "panic-surface"), [])
+
+
+class TestCargoTargets(unittest.TestCase):
+    def test_missing_bench_path_fires(self):
+        report = run_palint({"rust/benches/bench_demo.rs": None})
+        found = new_by_rule(report, "cargo-targets")
+        self.assertTrue(any("bench_demo" in f.message for f in found), found)
+
+    def test_undeclared_bench_file_fires(self):
+        report = run_palint({
+            "rust/benches/bench_extra.rs":
+                "fn main() { assert!(true, \"bench\"); }\n"})
+        found = new_by_rule(report, "cargo-targets")
+        self.assertTrue(any("bench_extra" in f.message for f in found), found)
+
+    def test_undeclared_root_example_fires(self):
+        report = run_palint({
+            "examples/demo.rs":
+                "use hyppo::cluster::simulate;\nfn main() { let _ = simulate; }\n"})
+        found = new_by_rule(report, "cargo-targets")
+        self.assertTrue(any("examples/demo.rs" in f.message for f in found),
+                        found)
+
+    def test_declared_root_example_is_clean(self):
+        report = run_palint({
+            "examples/demo.rs":
+                "use hyppo::cluster::simulate;\nfn main() { let _ = simulate; }\n",
+            "rust/Cargo.toml": run_cargo_with_example()})
+        self.assertEqual(new_by_rule(report, "cargo-targets"), [])
+
+
+def run_cargo_with_example() -> str:
+    from tests.fixtures import BASE_REPO
+    return BASE_REPO["rust/Cargo.toml"] + (
+        '\n[[example]]\nname = "demo"\npath = "../examples/demo.rs"\n')
+
+
+class TestBenchSchema(unittest.TestCase):
+    def test_empty_results_without_marker_fires(self):
+        report = run_palint({
+            "BENCH_demo.json":
+                '{"schema": "hyppo-bench-v1", "target": "bench_demo",\n'
+                ' "git_rev": "unknown", "results": [], "derived": {}}\n'})
+        found = new_by_rule(report, "bench-schema")
+        self.assertTrue(any("placeholder" in f.message for f in found), found)
+
+    def test_wrong_schema_fires(self):
+        report = run_palint({
+            "BENCH_demo.json":
+                '{"schema": "hyppo-bench-v0", "target": "bench_demo",\n'
+                ' "git_rev": "unknown", "placeholder": true,\n'
+                ' "results": [], "derived": {}}\n'})
+        found = new_by_rule(report, "bench-schema")
+        self.assertTrue(any("hyppo-bench-v1" in f.message for f in found),
+                        found)
+
+    def test_populated_results_validated(self):
+        report = run_palint({
+            "BENCH_demo.json":
+                '{"schema": "hyppo-bench-v1", "target": "bench_demo",\n'
+                ' "git_rev": "abc123",\n'
+                ' "results": [{"name": "case", "iters": 100,\n'
+                '   "mean_ns": 5.0, "median_ns": 4.0, "p95_ns": 9.0,\n'
+                '   "min_ns": 3.0}],\n'
+                ' "derived": {"speedup": 2.0}}\n'})
+        self.assertEqual(new_by_rule(report, "bench-schema"), [])
+
+    def test_malformed_result_record_fires(self):
+        report = run_palint({
+            "BENCH_demo.json":
+                '{"schema": "hyppo-bench-v1", "target": "bench_demo",\n'
+                ' "git_rev": "abc123",\n'
+                ' "results": [{"name": "case", "iters": "lots"}],\n'
+                ' "derived": {}}\n'})
+        found = new_by_rule(report, "bench-schema")
+        self.assertTrue(any("iters" in f.message for f in found), found)
+
+
+class TestDocRefs(unittest.TestCase):
+    def test_stale_numeric_ref_fires(self):
+        report = run_palint({
+            "rust/src/cluster/sim.rs":
+                "/// See DESIGN.md §9 for the event loop.\n"
+                "pub struct SimConfig { pub workers: usize }\n"
+                "pub fn simulate(cfg: &SimConfig) -> usize { cfg.workers }\n"})
+        found = new_by_rule(report, "doc-refs")
+        self.assertTrue(any("§9" in f.message for f in found), found)
+
+    def test_valid_numeric_ref_is_clean(self):
+        report = run_palint({
+            "rust/src/cluster/sim.rs":
+                "/// See DESIGN.md §2 for virtual time.\n"
+                "pub struct SimConfig { pub workers: usize }\n"
+                "pub fn simulate(cfg: &SimConfig) -> usize { cfg.workers }\n"})
+        self.assertEqual(new_by_rule(report, "doc-refs"), [])
+
+    def test_named_ref_resolves_by_title(self):
+        report = run_palint({
+            "rust/src/cluster/sim.rs":
+                "/// See DESIGN.md §Virtual time for details.\n"
+                "pub struct SimConfig { pub workers: usize }\n"
+                "pub fn simulate(cfg: &SimConfig) -> usize { cfg.workers }\n"})
+        self.assertEqual(new_by_rule(report, "doc-refs"), [])
+
+    def test_bad_named_ref_fires(self):
+        report = run_palint({
+            "rust/src/cluster/sim.rs":
+                "/// See DESIGN.md §Imaginary Section for details.\n"
+                "pub struct SimConfig { pub workers: usize }\n"
+                "pub fn simulate(cfg: &SimConfig) -> usize { cfg.workers }\n"})
+        found = new_by_rule(report, "doc-refs")
+        self.assertTrue(any("Imaginary" in f.message for f in found), found)
+
+    def test_bad_self_ref_inside_design_fires(self):
+        report = run_palint({
+            "DESIGN.md":
+                "# DESIGN\n\n## §1 Fixture architecture\n\nSee §7.\n"})
+        found = new_by_rule(report, "doc-refs")
+        self.assertTrue(any("§7" in f.message for f in found), found)
+
+    def test_readme_named_ref(self):
+        report = run_palint({
+            "rust/src/cluster/sim.rs":
+                "/// See README §Benchmark JSON workflow.\n"
+                "pub struct SimConfig { pub workers: usize }\n"
+                "pub fn simulate(cfg: &SimConfig) -> usize { cfg.workers }\n"})
+        self.assertEqual(new_by_rule(report, "doc-refs"), [])
+
+
+if __name__ == "__main__":
+    unittest.main()
