@@ -19,7 +19,9 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cluster::{ParallelMode, Topology};
 use crate::optimizer::candidates::CandidateConfig;
-use crate::optimizer::{HpoConfig, InitDesign, SurrogateKind};
+use crate::optimizer::{
+    HpoConfig, InitDesign, ScalingConfig, ScalingMode, SurrogateKind,
+};
 use crate::space::{ParamSpec, Space};
 use crate::uq::UqWeights;
 
@@ -401,6 +403,11 @@ fn build_param(name: &str, v: &Value) -> Result<ParamSpec> {
 /// n_candidates = 200       # candidate-set size per proposal
 /// scoring_threads = 1      # parallel proposal scoring (bit-identical)
 ///
+/// [surrogate]
+/// max_exact_n = 1024       # exact-surrogate observation budget
+/// scaling = "subset"       # subset | forest (regime past the budget)
+/// max_history = 8192       # surrogate mirror cap (clamped ≥ max_exact_n)
+///
 /// [cluster]
 /// steps = 4
 /// tasks_per_step = 2
@@ -477,6 +484,37 @@ pub fn build(doc: &Doc) -> Result<RunConfig> {
             ..cand_defaults
         },
         ..Default::default()
+    };
+
+    // [surrogate]: observation budgets for the scaling policy
+    // (DESIGN.md §14). Absent section ⇒ defaults (exact path for every
+    // paper-scale study).
+    let s = doc.get("surrogate").unwrap_or(&empty);
+    let scaling_defaults = ScalingConfig::default();
+    let mode = match s
+        .get("scaling")
+        .and_then(Value::as_str)
+        .unwrap_or("subset")
+    {
+        "subset" => ScalingMode::Subset,
+        "forest" => ScalingMode::Forest,
+        other => bail!("unknown surrogate scaling mode {other:?}"),
+    };
+    let hpo = HpoConfig {
+        scaling: ScalingConfig {
+            max_exact_n: s
+                .get("max_exact_n")
+                .and_then(Value::as_i64)
+                .unwrap_or(scaling_defaults.max_exact_n as i64)
+                .max(1) as usize,
+            mode,
+            max_history: s
+                .get("max_history")
+                .and_then(Value::as_i64)
+                .unwrap_or(scaling_defaults.max_history as i64)
+                .max(1) as usize,
+        },
+        ..hpo
     };
 
     let c = doc.get("cluster").unwrap_or(&empty);
@@ -581,6 +619,30 @@ width_idx = [0, 2]
         let zero = "[hpo]\nscoring_threads = 0\n[space]\na = [0, 3]\n";
         let cfg = build(&parse(zero).unwrap()).unwrap();
         assert_eq!(cfg.hpo.candidates.scoring_threads, 1);
+    }
+
+    #[test]
+    fn surrogate_scaling_section_parses_and_defaults() {
+        // Absent section: inert defaults (exact path).
+        let minimal = "[space]\na = [0, 3]\n";
+        let cfg = build(&parse(minimal).unwrap()).unwrap();
+        assert_eq!(cfg.hpo.scaling, ScalingConfig::default());
+        // Explicit budgets.
+        let tuned = "[surrogate]\n\
+                     max_exact_n = 64\n\
+                     scaling = \"forest\"\n\
+                     max_history = 256\n\
+                     [space]\na = [0, 3]\n";
+        let cfg = build(&parse(tuned).unwrap()).unwrap();
+        assert_eq!(cfg.hpo.scaling.max_exact_n, 64);
+        assert_eq!(cfg.hpo.scaling.mode, ScalingMode::Forest);
+        assert_eq!(cfg.hpo.scaling.max_history, 256);
+        // Unknown mode is an error, zero budgets clamp to 1.
+        let bad = "[surrogate]\nscaling = \"magic\"\n[space]\na = [0, 3]\n";
+        assert!(build(&parse(bad).unwrap()).is_err());
+        let zero = "[surrogate]\nmax_exact_n = 0\n[space]\na = [0, 3]\n";
+        let cfg = build(&parse(zero).unwrap()).unwrap();
+        assert_eq!(cfg.hpo.scaling.max_exact_n, 1);
     }
 
     #[test]

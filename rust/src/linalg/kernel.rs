@@ -1,0 +1,464 @@
+//! Packed, register-blocked micro-kernels behind the public `linalg`
+//! entry points (DESIGN.md §14).
+//!
+//! Every kernel here preserves the *per-element* floating-point
+//! operation sequence of the scalar reference forms: each output
+//! element accumulates its products in ascending-k order starting from
+//! 0.0 (or subtracts them in ascending-k order from the source value,
+//! for the factorizations), exactly as the naive loops do. Tiling and
+//! packing only change *which* elements are in flight concurrently —
+//! never the order of operations landing on any one element — so the
+//! results are bit-identical to the pre-kernel implementations while
+//! the independent accumulator lanes give the autovectorizer packed
+//! `f64x4`-style work. Everything is stable safe Rust on plain slices:
+//! no `unsafe`, no intrinsics, and (deliberately) no panic-capable
+//! indexing — the whole module is written against iterators and
+//! checked access so it rides under the `palint` panic-surface
+//! baseline at zero.
+
+/// Register-block rows: independent accumulator chains per micro-tile.
+pub(super) const MR: usize = 4;
+/// Register-block columns: contiguous lanes per accumulator row.
+pub(super) const NR: usize = 8;
+/// k-panel depth: one packed panel of A/B stays L1/L2-resident.
+pub(super) const KC: usize = 256;
+/// Interleaved right-hand sides per substitution sweep.
+pub(super) const LANE: usize = 4;
+/// Panel width of the blocked right-looking Cholesky.
+pub(super) const CHOL_NB: usize = 64;
+
+/// Pack `nrows` rows of row-major `src` (leading dimension `ld`),
+/// columns `col0..col0+kc`, into a k-major panel: packed position
+/// `kk * stride + r` holds `src[row0 + r][col0 + kk]`. `out` must be
+/// zero-filled on entry; short rows/columns stay zero-padded.
+fn pack_kmajor(
+    src: &[f64],
+    ld: usize,
+    row0: usize,
+    nrows: usize,
+    col0: usize,
+    kc: usize,
+    stride: usize,
+    out: &mut [f64],
+) {
+    for (r, row) in src
+        .chunks_exact(ld)
+        .skip(row0)
+        .take(nrows)
+        .enumerate()
+    {
+        for (dst, v) in out
+            .iter_mut()
+            .skip(r)
+            .step_by(stride)
+            .zip(row.iter().skip(col0).take(kc))
+        {
+            *dst = *v;
+        }
+    }
+}
+
+/// Pack `nrows` rows of row-major `src` (leading dimension `ld`),
+/// columns `col0..col0+width`, into a contiguous `nrows × width` strip.
+/// `out` must be zero-filled on entry; short columns stay zero-padded.
+fn pack_rows(
+    src: &[f64],
+    ld: usize,
+    row0: usize,
+    nrows: usize,
+    col0: usize,
+    width: usize,
+    out: &mut [f64],
+) {
+    for (dst, row) in out
+        .chunks_exact_mut(width)
+        .zip(src.chunks_exact(ld).skip(row0).take(nrows))
+    {
+        for (d, s) in dst.iter_mut().zip(row.iter().skip(col0).take(width))
+        {
+            *d = *s;
+        }
+    }
+}
+
+/// Load the valid `mr × nr` corner of the C tile at `(i0, j0)` into the
+/// accumulator; padded lanes are zeroed (their values are never stored
+/// back, so they only need to be finite).
+fn load_tile(
+    c: &[f64],
+    ldc: usize,
+    i0: usize,
+    mr: usize,
+    j0: usize,
+    nr: usize,
+    acc: &mut [f64; MR * NR],
+) {
+    acc.fill(0.0);
+    for (arow, crow) in acc
+        .chunks_exact_mut(NR)
+        .zip(c.chunks_exact(ldc).skip(i0).take(mr))
+    {
+        for (d, s) in arow.iter_mut().zip(crow.iter().skip(j0).take(nr)) {
+            *d = *s;
+        }
+    }
+}
+
+/// Store the valid `mr × nr` corner of the accumulator back to C.
+fn store_tile(
+    acc: &[f64; MR * NR],
+    c: &mut [f64],
+    ldc: usize,
+    i0: usize,
+    mr: usize,
+    j0: usize,
+    nr: usize,
+) {
+    for (arow, crow) in acc
+        .chunks_exact(NR)
+        .zip(c.chunks_exact_mut(ldc).skip(i0).take(mr))
+    {
+        for (d, s) in crow.iter_mut().skip(j0).take(nr).zip(arow) {
+            *d = *s;
+        }
+    }
+}
+
+/// The register-resident inner kernel: `acc += pa · pb` where `pa` is a
+/// k-major `kc × MR` panel and `pb` a row-major `kc × NR` panel. The
+/// accumulator holds MR×NR independent chains, each advancing in
+/// ascending-k order — the per-element sequence of the naive product.
+#[inline]
+fn microkernel(pa: &[f64], pb: &[f64], acc: &mut [f64; MR * NR]) {
+    for (avals, bvals) in pa.chunks_exact(MR).zip(pb.chunks_exact(NR)) {
+        for (arow, a) in acc.chunks_exact_mut(NR).zip(avals) {
+            let av = *a;
+            for (cv, b) in arow.iter_mut().zip(bvals) {
+                *cv += av * *b;
+            }
+        }
+    }
+}
+
+/// Cache-tiled `C += A · B` over zero-initialized `c` — the packed GEBP
+/// drive loop. `pa`/`pb` are reusable packing buffers (any capacity).
+/// Per output element the accumulation runs in ascending-k order from
+/// the zero-initialized C, bit-identical to the naive triple loop.
+pub(super) fn matmul_into(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    pa: &mut Vec<f64>,
+    pb: &mut Vec<f64>,
+) {
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let nstrips = (n + NR - 1) / NR;
+    for k0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - k0);
+        pb.clear();
+        pb.resize(nstrips * kc * NR, 0.0);
+        for (s, buf) in pb.chunks_exact_mut(kc * NR).enumerate() {
+            pack_rows(b, n, k0, kc, s * NR, NR, buf);
+        }
+        for i0 in (0..m).step_by(MR) {
+            let mr = MR.min(m - i0);
+            pa.clear();
+            pa.resize(kc * MR, 0.0);
+            pack_kmajor(a, k, i0, mr, k0, kc, MR, pa);
+            let mut acc = [0.0f64; MR * NR];
+            for (s, bbuf) in pb.chunks_exact(kc * NR).enumerate() {
+                let j0 = s * NR;
+                let nr = NR.min(n - j0);
+                load_tile(c, n, i0, mr, j0, nr, &mut acc);
+                microkernel(pa, bbuf, &mut acc);
+                store_tile(&acc, c, n, i0, mr, j0, nr);
+            }
+        }
+    }
+}
+
+/// Row-blocked matrix-vector product: MR independent accumulator
+/// chains share one streaming pass over `x`. Each row's chain is the
+/// scalar `fold(0.0, +)` in ascending-column order — bit-identical to
+/// the per-row `iter().zip().map().sum()` form.
+pub(super) fn matvec_into(n: usize, a: &[f64], x: &[f64], out: &mut [f64]) {
+    if n == 0 {
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        return;
+    }
+    let mfull = (out.len() / MR) * MR;
+    let (amain, atail) = a.split_at(mfull * n);
+    let (omain, otail) = out.split_at_mut(mfull);
+    for (rows, outs) in amain
+        .chunks_exact(MR * n)
+        .zip(omain.chunks_exact_mut(MR))
+    {
+        let (r0, rest) = rows.split_at(n);
+        let (r1, rest) = rest.split_at(n);
+        let (r2, r3) = rest.split_at(n);
+        let mut s0 = 0.0;
+        let mut s1 = 0.0;
+        let mut s2 = 0.0;
+        let mut s3 = 0.0;
+        for ((((xv, a0), a1), a2), a3) in
+            x.iter().zip(r0).zip(r1).zip(r2).zip(r3)
+        {
+            s0 += *a0 * *xv;
+            s1 += *a1 * *xv;
+            s2 += *a2 * *xv;
+            s3 += *a3 * *xv;
+        }
+        for (o, s) in outs.iter_mut().zip([s0, s1, s2, s3]) {
+            *o = s;
+        }
+    }
+    for (row, o) in atail.chunks_exact(n).zip(otail.iter_mut()) {
+        *o = row.iter().zip(x).map(|(av, xv)| *av * *xv).sum();
+    }
+}
+
+/// In-place forward substitution on `LANE` interleaved right-hand
+/// sides: `xl` holds `n` rows of `LANE` lanes; lane `l` follows exactly
+/// the scalar sequence `x[i] -= L[i][j]·x[j]` (ascending j), then — for
+/// non-unit triangles — `x[i] /= L[i][i]`.
+pub(super) fn forward_lanes(l: &[f64], n: usize, unit: bool, xl: &mut [f64]) {
+    for (i, lrow) in l.chunks_exact(n).enumerate() {
+        let (prev, rest) = xl.split_at_mut(i * LANE);
+        let (xi, _) = rest.split_at_mut(LANE);
+        for (c, xj) in lrow.iter().take(i).zip(prev.chunks_exact(LANE)) {
+            let cv = *c;
+            for (a, b) in xi.iter_mut().zip(xj) {
+                *a -= cv * *b;
+            }
+        }
+        if !unit {
+            if let Some(d) = lrow.get(i) {
+                let dv = *d;
+                for v in xi.iter_mut() {
+                    *v /= dv;
+                }
+            }
+        }
+    }
+}
+
+/// In-place backward substitution against the rows of an upper triangle
+/// (the U factor of LU): lane-for-lane the scalar sequence
+/// `x[i] -= U[i][j]·x[j]` (ascending j > i), then `x[i] /= U[i][i]`.
+pub(super) fn backward_lanes_row(u: &[f64], n: usize, xl: &mut [f64]) {
+    for (i, urow) in u.chunks_exact(n).enumerate().rev() {
+        let (head, rest) = xl.split_at_mut((i + 1) * LANE);
+        let (_, xi) = head.split_at_mut(i * LANE);
+        for (c, xj) in urow.iter().skip(i + 1).zip(rest.chunks_exact(LANE))
+        {
+            let cv = *c;
+            for (a, b) in xi.iter_mut().zip(xj) {
+                *a -= cv * *b;
+            }
+        }
+        if let Some(d) = urow.get(i) {
+            let dv = *d;
+            for v in xi.iter_mut() {
+                *v /= dv;
+            }
+        }
+    }
+}
+
+/// In-place backward substitution against the *columns* of a lower
+/// triangle (`x ← L⁻ᵀ x`): lane-for-lane the scalar sequence
+/// `x[i] -= L[k][i]·x[k]` (ascending k > i), then `x[i] /= L[i][i]`.
+pub(super) fn backward_lanes_col(l: &[f64], n: usize, xl: &mut [f64]) {
+    for i in (0..n).rev() {
+        let (head, rest) = xl.split_at_mut((i + 1) * LANE);
+        let (_, xi) = head.split_at_mut(i * LANE);
+        for (krow, xk) in
+            l.chunks_exact(n).skip(i + 1).zip(rest.chunks_exact(LANE))
+        {
+            if let Some(c) = krow.get(i) {
+                let cv = *c;
+                for (a, b) in xi.iter_mut().zip(xk) {
+                    *a -= cv * *b;
+                }
+            }
+        }
+        if let Some(drow) = l.chunks_exact(n).nth(i) {
+            if let Some(d) = drow.get(i) {
+                let dv = *d;
+                for v in xi.iter_mut() {
+                    *v /= dv;
+                }
+            }
+        }
+    }
+}
+
+/// Factor the `kb × kb` diagonal block at `(k0, k0)` of the in-place
+/// lower factor, using the classic unblocked recurrence restricted to
+/// panel columns: subtractions for columns `< k0` were already applied
+/// by earlier trailing updates, so the per-element total order of
+/// subtractions is the full ascending-k sequence of the unblocked
+/// algorithm. Returns `false` (not positive definite) on the same
+/// diagonal values the unblocked form rejects.
+fn factor_diag(n: usize, l: &mut [f64], k0: usize, kb: usize) -> bool {
+    for i in k0..k0 + kb {
+        let (head, tail) = l.split_at_mut(i * n);
+        let (irow, _) = tail.split_at_mut(n);
+        for (j, jrow) in head.chunks_exact(n).enumerate().skip(k0) {
+            let dot = j - k0;
+            let Some(&start) = irow.get(j) else {
+                return false;
+            };
+            let mut v = start;
+            for (a, b) in irow
+                .iter()
+                .skip(k0)
+                .take(dot)
+                .zip(jrow.iter().skip(k0).take(dot))
+            {
+                v -= *a * *b;
+            }
+            let Some(&dj) = jrow.get(j) else {
+                return false;
+            };
+            v /= dj;
+            if let Some(slot) = irow.get_mut(j) {
+                *slot = v;
+            }
+        }
+        let dot = i - k0;
+        let Some(&start) = irow.get(i) else {
+            return false;
+        };
+        let mut v = start;
+        for a in irow.iter().skip(k0).take(dot) {
+            v -= *a * *a;
+        }
+        if v <= 0.0 {
+            return false;
+        }
+        let root = v.sqrt();
+        if let Some(slot) = irow.get_mut(i) {
+            *slot = root;
+        }
+    }
+    true
+}
+
+/// Solve the panel below the diagonal block: for every row `i ≥ k0+kb`
+/// and panel column `j`, apply the scalar recurrence
+/// `v = L[i][j] - Σ L[i][kk]·L[j][kk]` (kk ascending in the panel) and
+/// divide by the freshly factored `L[j][j]`.
+fn panel_solve(n: usize, l: &mut [f64], k0: usize, kb: usize) {
+    let (top, bottom) = l.split_at_mut((k0 + kb) * n);
+    for irow in bottom.chunks_exact_mut(n) {
+        for (j, jrow) in top.chunks_exact(n).enumerate().skip(k0) {
+            let dot = j - k0;
+            let Some(&start) = irow.get(j) else {
+                continue;
+            };
+            let mut v = start;
+            for (a, b) in irow
+                .iter()
+                .skip(k0)
+                .take(dot)
+                .zip(jrow.iter().skip(k0).take(dot))
+            {
+                v -= *a * *b;
+            }
+            if let Some(&dj) = jrow.get(j) {
+                v /= dj;
+            }
+            if let Some(slot) = irow.get_mut(j) {
+                *slot = v;
+            }
+        }
+    }
+}
+
+/// Rank-`kb` trailing update `C -= P·Pᵀ` over the lower triangle, run
+/// through the packed micro-kernel with a negated A panel: per element
+/// `x + (-a)·b` is bit-identical to `x - a·b` in IEEE-754, and the kk
+/// order within the panel is ascending, so the total subtraction order
+/// matches the unblocked recurrence. Tiles strictly above the diagonal
+/// are skipped; the straddling tiles' upper lanes hold scratch that the
+/// factorization never reads and `cholesky_in_place` zeroes at the end.
+fn trailing_update(
+    n: usize,
+    l: &mut [f64],
+    k0: usize,
+    kb: usize,
+    pa: &mut Vec<f64>,
+    pb: &mut Vec<f64>,
+) {
+    let r0 = k0 + kb;
+    if r0 >= n {
+        return;
+    }
+    let t = n - r0;
+    let nstrips = (t + NR - 1) / NR;
+    pb.clear();
+    pb.resize(nstrips * kb * NR, 0.0);
+    for (s, buf) in pb.chunks_exact_mut(kb * NR).enumerate() {
+        let nr = NR.min(t - s * NR);
+        pack_kmajor(l, n, r0 + s * NR, nr, k0, kb, NR, buf);
+    }
+    for i0 in (0..t).step_by(MR) {
+        let mr = MR.min(t - i0);
+        pa.clear();
+        pa.resize(kb * MR, 0.0);
+        pack_kmajor(l, n, r0 + i0, mr, k0, kb, MR, pa);
+        for v in pa.iter_mut() {
+            *v = -*v;
+        }
+        let mut acc = [0.0f64; MR * NR];
+        for (s, bbuf) in pb.chunks_exact(kb * NR).enumerate() {
+            let j0 = s * NR;
+            if j0 > i0 + MR - 1 {
+                break;
+            }
+            let nr = NR.min(t - j0);
+            load_tile(l, n, r0 + i0, mr, r0 + j0, nr, &mut acc);
+            microkernel(pa, bbuf, &mut acc);
+            store_tile(&acc, l, n, r0 + i0, mr, r0 + j0, nr);
+        }
+    }
+}
+
+/// Blocked right-looking Cholesky on the row-major `n × n` buffer `l`
+/// (entered holding A): factor a `CHOL_NB`-wide diagonal block, solve
+/// the panel below it, then down-date the trailing submatrix through
+/// the packed micro-kernel, and repeat. Returns `false` when A is not
+/// positive definite — on the same diagonal value as the unblocked
+/// form, since every intermediate is bit-identical. On success the
+/// strict upper triangle is zeroed.
+pub(super) fn cholesky_in_place(
+    n: usize,
+    l: &mut [f64],
+    pa: &mut Vec<f64>,
+    pb: &mut Vec<f64>,
+) -> bool {
+    let mut k0 = 0;
+    while k0 < n {
+        let kb = CHOL_NB.min(n - k0);
+        if !factor_diag(n, l, k0, kb) {
+            return false;
+        }
+        panel_solve(n, l, k0, kb);
+        trailing_update(n, l, k0, kb, pa, pb);
+        k0 += kb;
+    }
+    for (i, row) in l.chunks_exact_mut(n).enumerate() {
+        for v in row.iter_mut().skip(i + 1) {
+            *v = 0.0;
+        }
+    }
+    true
+}

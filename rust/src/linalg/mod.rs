@@ -13,6 +13,14 @@
 //! and `_many` forms perform the identical floating-point operation
 //! sequence as their scalar counterparts — callers may mix them freely
 //! without perturbing results by a single ULP.
+//!
+//! The heavy loops (`matmul`, `matvec_into`, the `_many` substitution
+//! sweeps, and the blocked Cholesky) execute inside the packed
+//! micro-kernel layer of [`kernel`] (DESIGN.md §14), which preserves
+//! the per-element operation order of the scalar forms exactly — the
+//! tiling is a throughput change, never a numerical one.
+
+mod kernel;
 
 /// Pool of reusable `Vec<f64>` scratch buffers for the batched hot path.
 ///
@@ -22,10 +30,18 @@
 /// zero while a workspace is kept alive across calls) instead of the
 /// per-candidate heap traffic of the scalar path. The pool is
 /// deliberately type-dumb (plain `Vec<f64>`s) so one workspace serves
-/// correlation rows, solve buffers, and score vectors alike.
-#[derive(Debug, Default)]
+/// correlation rows, solve buffers, score vectors, and — via
+/// [`Workspace::take_mat`] — whole factor/RHS matrices alike.
+///
+/// The pool also meters itself: every byte of *capacity growth* that a
+/// `take` forces (a fresh allocation, or a reused buffer resized past
+/// its capacity) accumulates in [`Workspace::alloc_bytes`], so callers
+/// like `RefitStats` can prove a steady-state refit loop stopped
+/// touching the heap instead of assuming it.
+#[derive(Debug, Default, Clone)]
 pub struct Workspace {
     pool: Vec<Vec<f64>>,
+    alloc_bytes: u64,
 }
 
 impl Workspace {
@@ -37,14 +53,39 @@ impl Workspace {
     /// Borrow a zero-filled buffer of length `len`.
     pub fn take(&mut self, len: usize) -> Vec<f64> {
         let mut b = self.pool.pop().unwrap_or_default();
+        let cap0 = b.capacity();
         b.clear();
         b.resize(len, 0.0);
+        if b.capacity() > cap0 {
+            self.alloc_bytes += ((b.capacity() - cap0)
+                * std::mem::size_of::<f64>()) as u64;
+        }
         b
     }
 
     /// Return a buffer to the pool for later reuse.
     pub fn give(&mut self, buf: Vec<f64>) {
         self.pool.push(buf);
+    }
+
+    /// Borrow a zero-filled `rows × cols` matrix backed by the pool.
+    pub fn take_mat(&mut self, rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: self.take(rows * cols) }
+    }
+
+    /// Return a matrix's backing buffer to the pool.
+    pub fn give_mat(&mut self, m: Mat) {
+        self.give(m.data);
+    }
+
+    /// Total bytes of capacity growth forced through this pool so far.
+    pub fn alloc_bytes(&self) -> u64 {
+        self.alloc_bytes
+    }
+
+    /// Read and reset the allocation meter (per-refit accounting).
+    pub fn take_alloc_bytes(&mut self) -> u64 {
+        std::mem::take(&mut self.alloc_bytes)
     }
 }
 
@@ -93,54 +134,43 @@ impl Mat {
     }
 
     /// Matrix-vector product into a caller-owned buffer (no allocation).
-    /// Identical accumulation order to [`Mat::matvec`].
+    /// Identical accumulation order to [`Mat::matvec`]: the row-blocked
+    /// kernel keeps one sequential ascending-column chain per row.
     pub fn matvec_into(&self, x: &[f64], out: &mut [f64]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(out.len(), self.rows);
-        for (i, o) in out.iter_mut().enumerate() {
-            *o = self
-                .row(i)
-                .iter()
-                .zip(x)
-                .map(|(a, b)| a * b)
-                .sum();
-        }
+        kernel::matvec_into(self.cols, &self.data, x, out);
     }
 
-    /// Blocked matrix-matrix product `self · other` (i-k-j loop order
-    /// over cache-sized tiles, so the innermost loop streams contiguous
-    /// rows of both the accumulator and `other`).
+    /// Cache-tiled matrix-matrix product `self · other` through the
+    /// packed register-blocked micro-kernel ([`kernel`], DESIGN.md §14).
+    /// Per output element the products accumulate in ascending-k order
+    /// from 0.0 — bit-identical to the naive triple loop and to the
+    /// earlier blocked form this replaces.
     pub fn matmul(&self, other: &Mat) -> Mat {
+        let mut ws = Workspace::new();
+        self.matmul_ws(other, &mut ws)
+    }
+
+    /// [`Mat::matmul`] with packing buffers and the output drawn from a
+    /// caller-owned [`Workspace`] (steady-state: zero heap traffic).
+    /// Same operation sequence as `matmul`.
+    pub fn matmul_ws(&self, other: &Mat, ws: &mut Workspace) -> Mat {
         assert_eq!(
             self.cols, other.rows,
             "matmul dimension mismatch: {}x{} · {}x{}",
             self.rows, self.cols, other.rows, other.cols
         );
-        const BLOCK: usize = 64;
         let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
-        for i0 in (0..m).step_by(BLOCK) {
-            for k0 in (0..k).step_by(BLOCK) {
-                for j0 in (0..n).step_by(BLOCK) {
-                    let jend = (j0 + BLOCK).min(n);
-                    for i in i0..(i0 + BLOCK).min(m) {
-                        let a_row = &self.data[i * k..(i + 1) * k];
-                        let o_row =
-                            &mut out.data[i * n + j0..i * n + jend];
-                        for kk in k0..(k0 + BLOCK).min(k) {
-                            let a = a_row[kk];
-                            let b_row =
-                                &other.data[kk * n + j0..kk * n + jend];
-                            for (o, b) in
-                                o_row.iter_mut().zip(b_row)
-                            {
-                                *o += a * b;
-                            }
-                        }
-                    }
-                }
-            }
-        }
+        let mut out = ws.take_mat(m, n);
+        let mut pa = ws.take(0);
+        let mut pb = ws.take(0);
+        kernel::matmul_into(
+            m, k, n, &self.data, &other.data, &mut out.data, &mut pa,
+            &mut pb,
+        );
+        ws.give(pa);
+        ws.give(pb);
         out
     }
 }
@@ -233,23 +263,58 @@ impl LuFactors {
     }
 
     /// Solve `A X = B` for every column of `B` over the one stored
-    /// factorization (multi-RHS, O(n²) per column; one scratch buffer
-    /// reused across columns).
+    /// factorization (multi-RHS, O(n²) per column). Columns run through
+    /// the lane-interleaved substitution kernel four at a time — the
+    /// per-column operation sequence is exactly [`LuFactors::solve`]'s.
     pub fn solve_many(&self, b: &Mat) -> Mat {
+        let mut ws = Workspace::new();
+        self.solve_many_ws(b, &mut ws)
+    }
+
+    /// [`LuFactors::solve_many`] with all scratch (and the output
+    /// matrix) drawn from a caller-owned [`Workspace`]. Same operation
+    /// sequence.
+    pub fn solve_many_ws(&self, b: &Mat, ws: &mut Workspace) -> Mat {
         let n = self.n;
         assert_eq!(b.rows, n, "solve_many needs n-row right-hand sides");
-        let mut out = Mat::zeros(n, b.cols);
-        let mut col = vec![0.0; n];
-        for j in 0..b.cols {
-            for (i, c) in col.iter_mut().enumerate() {
-                *c = b[(self.perm[i], j)];
+        let mut out = ws.take_mat(n, b.cols);
+        let mut lanes = ws.take(n * kernel::LANE);
+        for j0 in (0..b.cols).step_by(kernel::LANE) {
+            for (row_lanes, &p) in
+                lanes.chunks_exact_mut(kernel::LANE).zip(&self.perm)
+            {
+                let brow = b.row(p);
+                for (l, slot) in row_lanes.iter_mut().enumerate() {
+                    *slot =
+                        brow.get(j0 + l).copied().unwrap_or(0.0);
+                }
             }
-            self.substitute(&mut col);
-            for (i, c) in col.iter().enumerate() {
-                out[(i, j)] = *c;
+            kernel::forward_lanes(&self.lu, n, true, &mut lanes);
+            kernel::backward_lanes_row(&self.lu, n, &mut lanes);
+            for (row_lanes, orow) in lanes
+                .chunks_exact(kernel::LANE)
+                .zip(out.data.chunks_exact_mut(b.cols))
+            {
+                for (dst, src) in orow
+                    .iter_mut()
+                    .skip(j0)
+                    .take(kernel::LANE)
+                    .zip(row_lanes)
+                {
+                    *dst = *src;
+                }
             }
         }
+        ws.give(lanes);
         out
+    }
+
+    /// Hand the factorization's backing buffer back to a workspace pool
+    /// (the permutation vector is dropped; it is integer-typed and
+    /// small). Lets steady-state refit loops factor → solve → recycle
+    /// without net heap traffic.
+    pub fn recycle(self, ws: &mut Workspace) {
+        ws.give(self.lu);
     }
 
     /// Forward/back substitution on an already-permuted vector.
@@ -280,33 +345,57 @@ pub fn lu_solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
 /// solve against the identity. Returns `None` when `A` is numerically
 /// singular.
 pub fn invert(a: &Mat) -> Option<Mat> {
+    let mut ws = Workspace::new();
+    invert_ws(a, &mut ws)
+}
+
+/// [`invert`] with the factorization scratch, identity RHS, and output
+/// all drawn from a caller-owned [`Workspace`] — the steady-state
+/// incremental-refit path allocates nothing here once the pool is warm.
+/// Same operation sequence as `invert`.
+pub fn invert_ws(a: &Mat, ws: &mut Workspace) -> Option<Mat> {
     let f = lu_factor(a)?;
-    Some(f.solve_many(&Mat::eye(a.rows)))
+    let n = a.rows;
+    let mut eye = ws.take_mat(n, n);
+    for (i, row) in eye.data.chunks_exact_mut(n).enumerate() {
+        if let Some(d) = row.get_mut(i) {
+            *d = 1.0;
+        }
+    }
+    let out = f.solve_many_ws(&eye, ws);
+    ws.give_mat(eye);
+    f.recycle(ws);
+    Some(out)
 }
 
 /// Cholesky factorization of an SPD matrix: returns lower-triangular `L`
-/// with `A = L L^T`, or `None` if not positive definite.
+/// with `A = L L^T`, or `None` if not positive definite. Runs the
+/// blocked right-looking algorithm of [`kernel::cholesky_in_place`];
+/// every intermediate — including the rejection point for indefinite
+/// input — is bit-identical to the classic unblocked recurrence.
 pub fn cholesky(a: &Mat) -> Option<Mat> {
+    let mut ws = Workspace::new();
+    cholesky_ws(a, &mut ws)
+}
+
+/// [`cholesky`] with the factor and packing scratch drawn from a
+/// caller-owned [`Workspace`]. Same operation sequence.
+pub fn cholesky_ws(a: &Mat, ws: &mut Workspace) -> Option<Mat> {
     assert_eq!(a.rows, a.cols);
     let n = a.rows;
-    let mut l = Mat::zeros(n, n);
-    for i in 0..n {
-        for j in 0..=i {
-            let mut sum = a[(i, j)];
-            for k in 0..j {
-                sum -= l[(i, k)] * l[(j, k)];
-            }
-            if i == j {
-                if sum <= 0.0 {
-                    return None;
-                }
-                l[(i, j)] = sum.sqrt();
-            } else {
-                l[(i, j)] = sum / l[(j, j)];
-            }
-        }
+    let mut l = ws.take_mat(n, n);
+    l.data.copy_from_slice(&a.data);
+    let mut pa = ws.take(0);
+    let mut pb = ws.take(0);
+    let ok = kernel::cholesky_in_place(n, &mut l.data, &mut pa, &mut pb);
+    ws.give(pa);
+    ws.give(pb);
+    if ok {
+        Some(l)
+    } else {
+        ws.give_mat(l);
+        None
     }
-    Some(l)
 }
 
 /// Solve `L y = b` (forward) then `L^T x = y` (backward).
@@ -327,22 +416,47 @@ pub fn cholesky_solve_into(l: &Mat, b: &[f64], y: &mut Vec<f64>) {
 }
 
 /// Solve `L L^T X = B` for every column of `B` over one Cholesky factor
-/// (multi-RHS; one scratch buffer reused across columns).
+/// (multi-RHS). Columns run through the lane-interleaved substitution
+/// kernel four at a time; the per-column operation sequence is exactly
+/// [`cholesky_solve`]'s.
 pub fn cholesky_solve_many(l: &Mat, b: &Mat) -> Mat {
+    let mut ws = Workspace::new();
+    cholesky_solve_many_ws(l, b, &mut ws)
+}
+
+/// [`cholesky_solve_many`] with scratch and output drawn from a
+/// caller-owned [`Workspace`]. Same operation sequence.
+pub fn cholesky_solve_many_ws(l: &Mat, b: &Mat, ws: &mut Workspace) -> Mat {
     let n = l.rows;
     assert_eq!(b.rows, n, "cholesky_solve_many needs n-row RHS");
-    let mut out = Mat::zeros(n, b.cols);
-    let mut col = vec![0.0; n];
-    for j in 0..b.cols {
-        for (i, c) in col.iter_mut().enumerate() {
-            *c = b[(i, j)];
+    let mut out = ws.take_mat(n, b.cols);
+    let mut lanes = ws.take(n * kernel::LANE);
+    for j0 in (0..b.cols).step_by(kernel::LANE) {
+        for (row_lanes, brow) in lanes
+            .chunks_exact_mut(kernel::LANE)
+            .zip(b.data.chunks_exact(b.cols))
+        {
+            for (lidx, slot) in row_lanes.iter_mut().enumerate() {
+                *slot = brow.get(j0 + lidx).copied().unwrap_or(0.0);
+            }
         }
-        forward_substitute(l, &mut col);
-        backward_substitute(l, &mut col);
-        for (i, c) in col.iter().enumerate() {
-            out[(i, j)] = *c;
+        kernel::forward_lanes(&l.data, n, false, &mut lanes);
+        kernel::backward_lanes_col(&l.data, n, &mut lanes);
+        for (row_lanes, orow) in lanes
+            .chunks_exact(kernel::LANE)
+            .zip(out.data.chunks_exact_mut(b.cols))
+        {
+            for (dst, src) in orow
+                .iter_mut()
+                .skip(j0)
+                .take(kernel::LANE)
+                .zip(row_lanes)
+            {
+                *dst = *src;
+            }
         }
     }
+    ws.give(lanes);
     out
 }
 

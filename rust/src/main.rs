@@ -45,6 +45,7 @@ USAGE:
             [--max-completions N] [--time-scale S]
             [--adaptive-trials STD [--max-trials N]]
             [--scoring-threads N]
+            [--max-exact-n N] [--scaling-mode subset|forest]
   hyppo sweep --config <file.toml> [--backend synthetic|mlp]
             [--seeds 0,1,2] [--topologies 1x1,4x2] [--out sweep.csv]
             [--scoring-threads N]
@@ -195,6 +196,24 @@ fn cmd_run(args: &Args) -> Result<()> {
             .context("--scoring-threads must be a thread count")?;
         exec_cfg.hpo.candidates.scoring_threads = threads.max(1);
     }
+    if let Some(raw) = args.get("max-exact-n") {
+        // Surrogate scaling budget (DESIGN.md §14): largest training set
+        // the exact O(n³) surrogate serves before the study hands off to
+        // the scaled regime. Overrides the [surrogate] config section.
+        let n: usize = raw
+            .parse()
+            .context("--max-exact-n must be an observation count")?;
+        exec_cfg.hpo.scaling.max_exact_n = n.max(1);
+    }
+    if let Some(raw) = args.get("scaling-mode") {
+        exec_cfg.hpo.scaling.mode = match raw.as_str() {
+            "subset" => hyppo::optimizer::ScalingMode::Subset,
+            "forest" => hyppo::optimizer::ScalingMode::Forest,
+            other => bail!(
+                "--scaling-mode {other:?} (expected subset|forest)"
+            ),
+        };
+    }
     if let Some(raw) = args.get("adaptive-trials") {
         // Paper's trial-level uncertainty accounting, made adaptive:
         // rerun a θ (extra UQ replicas) while its trained-loss spread
@@ -251,6 +270,20 @@ fn cmd_run(args: &Args) -> Result<()> {
             s.refits.exhausted_candidate_sets
         );
     }
+    if s.refits.handoffs > 0 || s.refits.evicted > 0 {
+        println!(
+            "scaling: {} handoff(s), {} scaled proposal(s), {} evicted \
+             observation(s) (exact budget {})",
+            s.refits.handoffs,
+            s.refits.scaled_fits,
+            s.refits.evicted,
+            exec_cfg.hpo.scaling.max_exact_n,
+        );
+    }
+    println!(
+        "refit workspace growth: {} bytes (flat after warm-up = pooled)",
+        s.refits.refit_alloc_bytes
+    );
     if let Some(out_path) = args.get("out") {
         write_history_csv(&out.history, cfg.hpo.gamma, out_path)?;
         println!("history -> {out_path}");

@@ -11,6 +11,7 @@ pub mod ga;
 pub mod online;
 
 pub use online::{OnlineProposer, RefitStats};
+pub use crate::surrogate::scaling::{ScalingConfig, ScalingMode};
 
 use crate::eval::{aggregate, EvalSummary, Evaluator};
 use crate::optimizer::candidates::CandidateConfig;
@@ -83,6 +84,11 @@ pub struct HpoConfig {
     /// Optional adaptive replica policy (extra trials for high-variance
     /// θ, `exec::Session` only; the sync reference loop ignores it).
     pub adaptive_trials: Option<AdaptiveTrials>,
+    /// Surrogate observation budgets: exact below `max_exact_n`,
+    /// subset-GP/forest past it, mirror eviction past `max_history`
+    /// (`surrogate::scaling`, DESIGN.md §14). The defaults keep every
+    /// paper-scale study on the exact, bit-stable path.
+    pub scaling: ScalingConfig,
 }
 
 impl Default for HpoConfig {
@@ -99,6 +105,7 @@ impl Default for HpoConfig {
             init_design: InitDesign::Random,
             initial_points: None,
             adaptive_trials: None,
+            scaling: ScalingConfig::default(),
         }
     }
 }

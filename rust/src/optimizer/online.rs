@@ -12,6 +12,7 @@
 
 use std::collections::HashSet;
 
+use crate::baselines::forest::{Forest, ForestConfig};
 use crate::linalg::Workspace;
 use crate::optimizer::candidates::{self, WEIGHT_CYCLE};
 use crate::optimizer::ga::{maximize, GaConfig};
@@ -21,6 +22,7 @@ use crate::space::{Point, Space};
 use crate::surrogate::ensemble::RbfEnsemble;
 use crate::surrogate::gp::{expected_improvement, GpSurrogate};
 use crate::surrogate::rbf::RbfSurrogate;
+use crate::surrogate::scaling::{self, ScalingConfig, ScalingMode};
 use crate::surrogate::Surrogate;
 use crate::uq::LossInterval;
 use crate::util::par::par_chunks_stable;
@@ -43,6 +45,19 @@ pub struct RefitStats {
     /// attempt budget (small / nearly-explored spaces; surfaced by
     /// `hyppo run` instead of warning to stderr per occurrence).
     pub exhausted_candidate_sets: u64,
+    /// Bytes of *new* scratch capacity the refit workspace had to grow
+    /// by, cumulative. After warm-up this should stay flat — growth per
+    /// refit means an allocation leaked past the `Workspace` pool
+    /// (the PR 8 asymmetry bug made visible; see DESIGN.md §14).
+    pub refit_alloc_bytes: u64,
+    /// Exact→scaled regime transitions (0 or 1 per study: the handoff
+    /// latch is one-way).
+    pub handoffs: u64,
+    /// Observations evicted from the surrogate training mirror after
+    /// the handoff (the executor `History` is never evicted).
+    pub evicted: u64,
+    /// Proposals served by the scaled regime (subset-GP or forest).
+    pub scaled_fits: u64,
 }
 
 /// A surrogate that lives across completions, plus the acquisition logic
@@ -63,6 +78,19 @@ pub struct OnlineProposer {
     dirty: bool,
     inserts_since_tune: usize,
     stats: RefitStats,
+    /// Observation budgets; inert until the mirror outgrows
+    /// `scaling.max_exact_n` (see `surrogate::scaling`).
+    scaling: ScalingConfig,
+    /// One-way latch: once the mirror exceeds the exact budget the
+    /// study stays in the scaled regime (re-entering the exact path
+    /// after evictions would silently change its training set).
+    handed_off: bool,
+    /// Study seed, used to derive deterministic seeds for the scaled
+    /// regime (forest refits).
+    seed: u64,
+    /// Pooled linear-algebra scratch threaded through every refit so
+    /// steady-state updates do no heap traffic (DESIGN.md §14).
+    ws: Workspace,
 }
 
 impl OnlineProposer {
@@ -79,6 +107,10 @@ impl OnlineProposer {
             dirty: true,
             inserts_since_tune: 0,
             stats: RefitStats::default(),
+            scaling: cfg.scaling,
+            handed_off: false,
+            seed: cfg.seed,
+            ws: Workspace::new(),
         }
     }
 
@@ -93,6 +125,28 @@ impl OnlineProposer {
             self.ys.push(r.objective(self.gamma));
         }
         self.dirty = true;
+        // A resumed study past the exact budget re-enters the scaled
+        // regime immediately (the latch is part of derived state, not
+        // the checkpoint); `stats.handoffs` only counts live
+        // transitions, so it stays 0 here.
+        if self.xs.len() > self.scaling.max_exact_n {
+            self.handed_off = true;
+            self.enforce_history_cap();
+        }
+    }
+
+    /// Evict the surrogate mirror down to the configured history cap
+    /// (scaled regime only; the exact regime never evicts).
+    fn enforce_history_cap(&mut self) {
+        let dropped = scaling::evict_mirror(
+            &mut self.xs,
+            &mut self.ys,
+            self.scaling.effective_max_history(),
+        );
+        if dropped > 0 {
+            self.stats.evicted += dropped as u64;
+            self.dirty = true;
+        }
     }
 
     /// Absorb one completed evaluation. Incremental (O(n²)) when the
@@ -103,11 +157,26 @@ impl OnlineProposer {
         let y = record.objective(self.gamma);
         self.xs.push(x.clone());
         self.ys.push(y);
+        if !self.handed_off && self.xs.len() > self.scaling.max_exact_n {
+            // One-way handoff: the exact incremental state is abandoned
+            // and every subsequent proposal is served by the scaled
+            // regime (`propose_scaled`).
+            self.handed_off = true;
+            self.stats.handoffs += 1;
+            self.dirty = true;
+        }
+        if self.handed_off {
+            self.enforce_history_cap();
+            // Scaled regimes refit per proposal; per-completion O(n²)
+            // updates against an evicted mirror would drift.
+            self.dirty = true;
+            return;
+        }
         match self.kind {
             SurrogateKind::Rbf => {
                 if !self.dirty
                     && self.rbf.is_fitted()
-                    && self.rbf.fit_incremental(&x, y)
+                    && self.rbf.fit_incremental_ws(&x, y, &mut self.ws)
                 {
                     self.stats.incremental += 1;
                 } else {
@@ -119,7 +188,7 @@ impl OnlineProposer {
                 if !self.dirty
                     && self.gp.is_fitted()
                     && self.inserts_since_tune < GP_RETUNE_EVERY
-                    && self.gp.fit_incremental(&x, y)
+                    && self.gp.fit_incremental_ws(&x, y, &mut self.ws)
                 {
                     self.stats.incremental += 1;
                 } else {
@@ -131,6 +200,7 @@ impl OnlineProposer {
             // persistent model to update.
             SurrogateKind::RbfEnsemble { .. } => {}
         }
+        self.stats.refit_alloc_bytes += self.ws.take_alloc_bytes();
     }
 
     /// Refit counters accumulated so far.
@@ -148,6 +218,9 @@ impl OnlineProposer {
         rng: &mut Rng,
     ) -> Point {
         self.stats.proposals += 1;
+        if self.handed_off {
+            return self.propose_scaled(space, history, iter, rng);
+        }
         let evaluated = history.points();
         let fallback = |rng: &mut Rng| {
             let mut p = space.random_point(rng);
@@ -163,7 +236,11 @@ impl OnlineProposer {
             SurrogateKind::Rbf => {
                 if self.dirty || !self.rbf.is_fitted() {
                     self.stats.full += 1;
-                    if !self.rbf.fit(&self.xs, &self.ys) {
+                    let ok =
+                        self.rbf.fit_ws(&self.xs, &self.ys, &mut self.ws);
+                    self.stats.refit_alloc_bytes +=
+                        self.ws.take_alloc_bytes();
+                    if !ok {
                         return fallback(rng);
                     }
                     self.dirty = false;
@@ -211,7 +288,11 @@ impl OnlineProposer {
                 if self.dirty || !self.gp.is_fitted() {
                     self.stats.full += 1;
                     self.inserts_since_tune = 0;
-                    if !self.gp.fit(&self.xs, &self.ys) {
+                    let ok =
+                        self.gp.fit_ws(&self.xs, &self.ys, &mut self.ws);
+                    self.stats.refit_alloc_bytes +=
+                        self.ws.take_alloc_bytes();
+                    if !ok {
                         return fallback(rng);
                     }
                     self.dirty = false;
@@ -318,6 +399,169 @@ impl OnlineProposer {
                     space, &encoded, &values, &evaluated, w, threads,
                 ) {
                     Some(i) => cands[i].clone(),
+                    None => fallback(rng),
+                }
+            }
+        }
+    }
+
+    /// Proposal service once the study has outgrown the exact budget
+    /// (`surrogate::scaling`, DESIGN.md §14). `Subset` refits the GP on
+    /// `max_exact_n` deterministic landmarks and maximizes EI with the
+    /// integer GA; `Forest` fits the extra-trees surrogate on the whole
+    /// (evicted) mirror and scores Regis–Shoemaker candidates by the
+    /// forest mean. Seeded-deterministic, but *not* bit-compatible with
+    /// the unbounded exact path — that guarantee stops at the handoff.
+    fn propose_scaled(
+        &mut self,
+        space: &Space,
+        history: &History,
+        iter: usize,
+        rng: &mut Rng,
+    ) -> Point {
+        self.stats.scaled_fits += 1;
+        let evaluated = history.points();
+        let fallback = |rng: &mut Rng| {
+            let mut p = space.random_point(rng);
+            let mut guard = 0;
+            while evaluated.contains(&p) && guard < 1000 {
+                p = space.random_point(rng);
+                guard += 1;
+            }
+            p
+        };
+        match self.scaling.mode {
+            ScalingMode::Subset => {
+                // Subset-of-data sparse GP: landmark selection is
+                // deterministic (greedy max–min from the incumbent), so
+                // a resumed study refits the same model.
+                if self.dirty {
+                    let idx = scaling::select_landmarks(
+                        &self.xs,
+                        &self.ys,
+                        self.scaling.max_exact_n,
+                    );
+                    let sub_xs: Vec<Vec<f64>> = idx
+                        .iter()
+                        .filter_map(|i| self.xs.get(*i).cloned())
+                        .collect();
+                    let sub_ys: Vec<f64> = idx
+                        .iter()
+                        .filter_map(|i| self.ys.get(*i).copied())
+                        .collect();
+                    let ok =
+                        self.gp.fit_ws(&sub_xs, &sub_ys, &mut self.ws);
+                    self.stats.refit_alloc_bytes +=
+                        self.ws.take_alloc_bytes();
+                    if !ok {
+                        return fallback(rng);
+                    }
+                    self.dirty = false;
+                }
+                let best_y = self
+                    .ys
+                    .iter()
+                    .cloned()
+                    .fold(f64::INFINITY, f64::min);
+                let gp = &self.gp;
+                let threads = self.candidates.scoring_threads;
+                let evaluated_set: HashSet<&Point> =
+                    evaluated.iter().collect();
+                let (point, _fit) = maximize(
+                    space,
+                    &GaConfig::default(),
+                    rng,
+                    |pop| {
+                        par_chunks_stable(pop, threads, |chunk| {
+                            let mut ws = Workspace::new();
+                            let encoded: Vec<Vec<f64>> = chunk
+                                .iter()
+                                .map(|p| space.encode(p))
+                                .collect();
+                            let mut mu = Vec::new();
+                            let mut sd = Vec::new();
+                            gp.predict_mean_std_batch(
+                                &encoded, &mut ws, &mut mu, &mut sd,
+                            );
+                            chunk
+                                .iter()
+                                .zip(mu.iter().zip(&sd))
+                                .map(|(p, (m, s))| {
+                                    if evaluated_set.contains(p) {
+                                        f64::NEG_INFINITY
+                                    } else {
+                                        expected_improvement(
+                                            *m, *s, best_y,
+                                        )
+                                    }
+                                })
+                                .collect()
+                        })
+                    },
+                );
+                if evaluated_set.contains(&point) {
+                    fallback(rng)
+                } else {
+                    point
+                }
+            }
+            ScalingMode::Forest => {
+                // Forest refits are cheap enough to do per proposal;
+                // the seed mixes the study seed with the mirror length
+                // so each refit is deterministic yet distinct.
+                let mut frng = Rng::new(
+                    self.seed ^ 0xF0E5_u64 ^ (self.xs.len() as u64) << 16,
+                );
+                if self.xs.is_empty() {
+                    return fallback(rng);
+                }
+                let forest = Forest::fit(
+                    &self.xs,
+                    &self.ys,
+                    &ForestConfig::default(),
+                    &mut frng,
+                );
+                let Some(best_rec) = history.best(self.gamma) else {
+                    return fallback(rng);
+                };
+                let gen = candidates::generate(
+                    space,
+                    &best_rec.theta,
+                    &evaluated,
+                    &self.candidates,
+                    rng,
+                );
+                if gen.exhausted {
+                    self.stats.exhausted_candidate_sets += 1;
+                }
+                let cands = gen.points;
+                if cands.is_empty() {
+                    return fallback(rng);
+                }
+                let threads = self.candidates.scoring_threads;
+                let encoded: Vec<Vec<f64>> =
+                    par_chunks_stable(&cands, threads, |chunk| {
+                        chunk.iter().map(|c| space.encode(c)).collect()
+                    });
+                let forest_ref = &forest;
+                let values: Vec<f64> =
+                    par_chunks_stable(&encoded, threads, |chunk| {
+                        chunk
+                            .iter()
+                            .map(|x| forest_ref.predict(x).0)
+                            .collect()
+                    });
+                let w = WEIGHT_CYCLE
+                    .get(iter % WEIGHT_CYCLE.len())
+                    .copied()
+                    .unwrap_or(0.5);
+                match candidates::select_encoded(
+                    space, &encoded, &values, &evaluated, w, threads,
+                ) {
+                    Some(i) => cands
+                        .get(i)
+                        .cloned()
+                        .unwrap_or_else(|| fallback(rng)),
                     None => fallback(rng),
                 }
             }

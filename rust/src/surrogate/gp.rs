@@ -10,25 +10,46 @@
 //! covariance SPD under repeated stochastic evaluations of the same θ.
 
 use crate::linalg::{
-    cholesky, cholesky_solve, cholesky_solve_many, forward_solve,
-    forward_solve_into, Mat, Workspace,
+    cholesky_solve_into, cholesky_solve_many_ws, cholesky_ws,
+    forward_solve, forward_solve_into, Mat, Workspace,
 };
 use crate::surrogate::Surrogate;
 
 /// Solve `K⁻¹ [y | 1]` over one Cholesky factor: the kriging closed
 /// forms need both columns, and the multi-RHS solve walks the factor
 /// once with the identical per-column op sequence as two
-/// `cholesky_solve` calls (so results are bit-equal).
-fn kinv_y_and_1(l: &Mat, ys: &[f64]) -> (Vec<f64>, Vec<f64>) {
+/// `cholesky_solve` calls (so results are bit-equal). The RHS matrix,
+/// the solve scratch, and the returned column vectors all come from the
+/// workspace pool; callers `give` the columns back when done.
+fn kinv_y_and_1(
+    l: &Mat,
+    ys: &[f64],
+    ws: &mut Workspace,
+) -> (Vec<f64>, Vec<f64>) {
     let n = ys.len();
-    let mut rhs = Mat::zeros(n, 2);
-    for (i, y) in ys.iter().enumerate() {
-        rhs[(i, 0)] = *y;
-        rhs[(i, 1)] = 1.0;
+    let mut rhs = ws.take_mat(n, 2);
+    for (row, y) in rhs.data.chunks_exact_mut(2).zip(ys) {
+        if let [r0, r1] = row {
+            *r0 = *y;
+            *r1 = 1.0;
+        }
     }
-    let sol = cholesky_solve_many(l, &rhs);
-    let kinv_y = (0..n).map(|i| sol[(i, 0)]).collect();
-    let kinv_1 = (0..n).map(|i| sol[(i, 1)]).collect();
+    let sol = cholesky_solve_many_ws(l, &rhs, ws);
+    let mut kinv_y = ws.take(n);
+    let mut kinv_1 = ws.take(n);
+    for ((row, a), b) in sol
+        .data
+        .chunks_exact(2)
+        .zip(kinv_y.iter_mut())
+        .zip(kinv_1.iter_mut())
+    {
+        if let [s0, s1] = row {
+            *a = *s0;
+            *b = *s1;
+        }
+    }
+    ws.give_mat(rhs);
+    ws.give_mat(sol);
     (kinv_y, kinv_1)
 }
 
@@ -94,9 +115,9 @@ impl GpSurrogate {
         (-self.theta * dist2(a, b)).exp()
     }
 
-    fn build_k(&self, xs: &[Vec<f64>]) -> Mat {
+    fn build_k_ws(&self, xs: &[Vec<f64>], ws: &mut Workspace) -> Mat {
         let n = xs.len();
-        let mut k = Mat::zeros(n, n);
+        let mut k = ws.take_mat(n, n);
         for i in 0..n {
             for j in 0..=i {
                 let c = self.corr(&xs[i], &xs[j]);
@@ -114,38 +135,71 @@ impl GpSurrogate {
     /// of `fit_incremental` calls, `refit_full` over the same data and ϑ
     /// produces the same model (up to fp round-off).
     pub fn refit_full(&mut self, xs: &[Vec<f64>], ys: &[f64]) -> bool {
+        let mut ws = Workspace::new();
+        self.refit_full_ws(xs, ys, &mut ws)
+    }
+
+    /// [`GpSurrogate::refit_full`] with every intermediate — covariance,
+    /// factor, kriging RHS/solution columns — drawn from a caller-owned
+    /// [`Workspace`]; the evicted previous factor is recycled into the
+    /// pool, so a steady-state refit loop runs with zero heap traffic
+    /// (metered by [`Workspace::alloc_bytes`]). Identical operation
+    /// sequence to `refit_full`.
+    pub fn refit_full_ws(
+        &mut self,
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        ws: &mut Workspace,
+    ) -> bool {
         assert_eq!(xs.len(), ys.len());
         self.fitted = false;
         if xs.is_empty() {
             return false;
         }
         let n = xs.len();
-        let k = self.build_k(xs);
-        let Some(l) = cholesky(&k) else {
+        let k = self.build_k_ws(xs, ws);
+        if let Some(old) = self.l.take() {
+            ws.give_mat(old);
+        }
+        let factor = cholesky_ws(&k, ws);
+        ws.give_mat(k);
+        let Some(l) = factor else {
             return false;
         };
-        let (kinv_y, kinv_1) = kinv_y_and_1(&l, ys);
+        let (kinv_y, kinv_1) = kinv_y_and_1(&l, ys, ws);
         let denom = kinv_1.iter().sum::<f64>();
         if denom.abs() < 1e-300 {
+            ws.give(kinv_y);
+            ws.give(kinv_1);
+            ws.give_mat(l);
             return false;
         }
         self.nu =
             ys.iter().zip(&kinv_1).map(|(y, a)| y * a).sum::<f64>() / denom;
-        self.alpha = kinv_y
+        self.alpha.clear();
+        self.alpha.extend(
+            kinv_y
+                .iter()
+                .zip(&kinv_1)
+                .map(|(a, b)| a - self.nu * b),
+        );
+        self.sigma2 = ys
             .iter()
-            .zip(&kinv_1)
-            .map(|(a, b)| a - self.nu * b)
-            .collect();
-        let resid: Vec<f64> = ys.iter().map(|y| y - self.nu).collect();
-        self.sigma2 = resid
-            .iter()
+            .map(|y| y - self.nu)
             .zip(&self.alpha)
             .map(|(r, a)| r * a)
             .sum::<f64>()
             .max(1e-12)
             / n as f64;
-        self.xs = xs.to_vec();
-        self.ys = ys.to_vec();
+        ws.give(kinv_y);
+        ws.give(kinv_1);
+        self.xs.resize_with(xs.len(), Vec::new);
+        for (dst, src) in self.xs.iter_mut().zip(xs) {
+            dst.clear();
+            dst.extend_from_slice(src);
+        }
+        self.ys.clear();
+        self.ys.extend_from_slice(ys);
         self.l = Some(l);
         self.fitted = true;
         true
@@ -205,41 +259,70 @@ impl GpSurrogate {
     }
 
     /// Negative profile log-likelihood for length-scale selection.
-    fn neg_loglik(&mut self, xs: &[Vec<f64>], ys: &[f64], theta: f64) -> f64 {
+    /// All scratch comes from the workspace pool.
+    fn neg_loglik(
+        &mut self,
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        theta: f64,
+        ws: &mut Workspace,
+    ) -> f64 {
         self.theta = theta;
         let n = xs.len();
-        let k = self.build_k(xs);
-        let Some(l) = cholesky(&k) else {
+        let k = self.build_k_ws(xs, ws);
+        let factor = cholesky_ws(&k, ws);
+        ws.give_mat(k);
+        let Some(l) = factor else {
             return f64::INFINITY;
         };
-        let ones = vec![1.0; n];
-        let kinv_y = cholesky_solve(&l, ys);
-        let kinv_1 = cholesky_solve(&l, &ones);
+        let mut ones = ws.take(n);
+        ones.fill(1.0);
+        let mut kinv_y = ws.take(0);
+        let mut kinv_1 = ws.take(0);
+        cholesky_solve_into(&l, ys, &mut kinv_y);
+        cholesky_solve_into(&l, &ones, &mut kinv_1);
         let nu = ys.iter().zip(&kinv_1).map(|(y, a)| y * a).sum::<f64>()
             / kinv_1.iter().sum::<f64>().max(1e-300);
-        let resid: Vec<f64> = ys.iter().map(|y| y - nu).collect();
-        let kinv_r: Vec<f64> = kinv_y
+        let sigma2 = ys
             .iter()
-            .zip(&kinv_1)
-            .map(|(a, b)| a - nu * b)
-            .collect();
-        let sigma2 = resid
-            .iter()
-            .zip(&kinv_r)
+            .map(|y| y - nu)
+            .zip(
+                kinv_y
+                    .iter()
+                    .zip(&kinv_1)
+                    .map(|(a, b)| a - nu * b),
+            )
             .map(|(r, a)| r * a)
             .sum::<f64>()
             / n as f64;
+        let logdet: f64 = l
+            .data
+            .iter()
+            .step_by(n + 1)
+            .map(|d| d.ln())
+            .sum::<f64>()
+            * 2.0;
+        ws.give(ones);
+        ws.give(kinv_y);
+        ws.give(kinv_1);
+        ws.give_mat(l);
         if sigma2 <= 0.0 {
             return f64::INFINITY;
         }
-        let logdet: f64 =
-            (0..n).map(|i| l[(i, i)].ln()).sum::<f64>() * 2.0;
         0.5 * (n as f64 * sigma2.ln() + logdet)
     }
 }
 
-impl Surrogate for GpSurrogate {
-    fn fit(&mut self, xs: &[Vec<f64>], ys: &[f64]) -> bool {
+impl GpSurrogate {
+    /// Full fit (length-scale search + refit) with all linear-algebra
+    /// scratch drawn from a caller-owned [`Workspace`]. Identical
+    /// operation sequence to the trait [`Surrogate::fit`].
+    pub fn fit_ws(
+        &mut self,
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        ws: &mut Workspace,
+    ) -> bool {
         assert_eq!(xs.len(), ys.len());
         self.fitted = false;
         if xs.is_empty() {
@@ -269,16 +352,25 @@ impl Surrogate for GpSurrogate {
         let mut best = (f64::INFINITY, center);
         for mult in [0.1, 0.3, 1.0, 3.0, 10.0] {
             let th = center * mult;
-            let nll = self.neg_loglik(xs, ys, th);
+            let nll = self.neg_loglik(xs, ys, th, ws);
             if nll < best.0 {
                 best = (nll, th);
             }
         }
         self.theta = best.1;
-        self.refit_full(xs, ys)
+        self.refit_full_ws(xs, ys, ws)
     }
 
-    fn fit_incremental(&mut self, x: &[f64], y: f64) -> bool {
+    /// Incremental (bordered-factor) update with all scratch drawn from
+    /// a caller-owned [`Workspace`]; the superseded factor is recycled
+    /// into the pool. Identical operation sequence to the trait
+    /// [`Surrogate::fit_incremental`].
+    pub fn fit_incremental_ws(
+        &mut self,
+        x: &[f64],
+        y: f64,
+        ws: &mut Workspace,
+    ) -> bool {
         if !self.fitted {
             return false;
         }
@@ -288,41 +380,61 @@ impl Surrogate for GpSurrogate {
             return false;
         }
         let n = self.xs.len();
-        let l = self.l.as_ref().expect("fitted GP holds its factor");
+        let Some(l) = self.l.as_ref() else {
+            return false;
+        };
         // New row of the extended Cholesky factor: solving L w = k applies
         // exactly the recurrences a from-scratch factorization would use
         // for row n, so the extended factor matches `refit_full`.
-        let kvec: Vec<f64> =
-            self.xs.iter().map(|xi| self.corr(xi, x)).collect();
-        let w = forward_solve(l, &kvec);
+        let mut kvec = ws.take(n);
+        for (c, xi) in kvec.iter_mut().zip(&self.xs) {
+            *c = self.corr(xi, x);
+        }
+        let mut w = ws.take(0);
+        forward_solve_into(l, &kvec, &mut w);
         let d2 = 1.0 + self.nugget - w.iter().map(|v| v * v).sum::<f64>();
         if d2 <= 1e-10 {
             // Near-duplicate point: the rank-1 extension would be
             // numerically fragile. Let the caller refit fully (the nugget
             // absorbs duplicates there).
+            ws.give(kvec);
+            ws.give(w);
             return false;
         }
-        let mut l2 = Mat::zeros(n + 1, n + 1);
-        for i in 0..n {
-            for j in 0..=i {
-                l2[(i, j)] = l[(i, j)];
+        let mut l2 = ws.take_mat(n + 1, n + 1);
+        for (dst, src) in l2
+            .data
+            .chunks_exact_mut(n + 1)
+            .zip(l.data.chunks_exact(n.max(1)))
+        {
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d = *s;
             }
         }
-        for (j, wj) in w.iter().enumerate() {
-            l2[(n, j)] = *wj;
+        if let Some(last) = l2.data.chunks_exact_mut(n + 1).nth(n) {
+            for (d, s) in last.iter_mut().zip(&w) {
+                *d = *s;
+            }
+            if let Some(diag) = last.get_mut(n) {
+                *diag = d2.sqrt();
+            }
         }
-        l2[(n, n)] = d2.sqrt();
+        ws.give(kvec);
+        ws.give(w);
 
         self.xs.push(x.to_vec());
         self.ys.push(y);
         let m = n + 1;
         // O(n²): one multi-RHS triangular solve against the extended
         // factor (both kriging columns in a single walk).
-        let (kinv_y, kinv_1) = kinv_y_and_1(&l2, &self.ys);
+        let (kinv_y, kinv_1) = kinv_y_and_1(&l2, &self.ys, ws);
         let denom = kinv_1.iter().sum::<f64>();
         if denom.abs() < 1e-300 {
             self.xs.pop();
             self.ys.pop();
+            ws.give(kinv_y);
+            ws.give(kinv_1);
+            ws.give_mat(l2);
             return false;
         }
         self.nu = self
@@ -332,11 +444,13 @@ impl Surrogate for GpSurrogate {
             .map(|(y, a)| y * a)
             .sum::<f64>()
             / denom;
-        self.alpha = kinv_y
-            .iter()
-            .zip(&kinv_1)
-            .map(|(a, b)| a - self.nu * b)
-            .collect();
+        self.alpha.clear();
+        self.alpha.extend(
+            kinv_y
+                .iter()
+                .zip(&kinv_1)
+                .map(|(a, b)| a - self.nu * b),
+        );
         self.sigma2 = self
             .ys
             .iter()
@@ -346,8 +460,32 @@ impl Surrogate for GpSurrogate {
             .sum::<f64>()
             .max(1e-12)
             / m as f64;
-        self.l = Some(l2);
+        ws.give(kinv_y);
+        ws.give(kinv_1);
+        if let Some(old) = self.l.replace(l2) {
+            ws.give_mat(old);
+        }
         true
+    }
+}
+
+impl Surrogate for GpSurrogate {
+    fn fit(&mut self, xs: &[Vec<f64>], ys: &[f64]) -> bool {
+        let mut ws = Workspace::new();
+        self.fit_ws(xs, ys, &mut ws)
+    }
+
+    fn fit_incremental(&mut self, x: &[f64], y: f64) -> bool {
+        let mut ws = Workspace::new();
+        self.fit_incremental_ws(x, y, &mut ws)
+    }
+
+    fn fit_ws(&mut self, xs: &[Vec<f64>], ys: &[f64], ws: &mut Workspace) -> bool {
+        GpSurrogate::fit_ws(self, xs, ys, ws)
+    }
+
+    fn fit_incremental_ws(&mut self, x: &[f64], y: f64, ws: &mut Workspace) -> bool {
+        GpSurrogate::fit_incremental_ws(self, x, y, ws)
     }
 
     fn predict(&self, x: &[f64]) -> f64 {

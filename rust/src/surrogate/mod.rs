@@ -15,6 +15,7 @@
 pub mod ensemble;
 pub mod gp;
 pub mod rbf;
+pub mod scaling;
 
 use crate::linalg::Workspace;
 
@@ -93,5 +94,23 @@ pub trait Surrogate {
     /// 1e-8 in the test suite).
     fn fit_incremental(&mut self, _x: &[f64], _y: f64) -> bool {
         false
+    }
+
+    /// [`Surrogate::fit`] with linear-algebra scratch drawn from a
+    /// caller-owned [`Workspace`] so steady-state refits do no heap
+    /// traffic. Produces bit-identical model state to `fit`; the default
+    /// simply ignores the pool. Implementations that allocate during
+    /// fitting should override this and route every temporary through
+    /// `ws` (the GP and RBF surrogates do).
+    fn fit_ws(&mut self, xs: &[Vec<f64>], ys: &[f64], ws: &mut Workspace) -> bool {
+        let _ = ws;
+        self.fit(xs, ys)
+    }
+
+    /// [`Surrogate::fit_incremental`] with pooled scratch, under the same
+    /// bit-identity contract as [`Surrogate::fit_ws`].
+    fn fit_incremental_ws(&mut self, x: &[f64], y: f64, ws: &mut Workspace) -> bool {
+        let _ = ws;
+        self.fit_incremental(x, y)
     }
 }

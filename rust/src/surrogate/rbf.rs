@@ -12,7 +12,7 @@
 //! most recent observation for a location, which matters when the same θ
 //! is re-evaluated with different stochastic outcomes).
 
-use crate::linalg::{invert, lu_solve, Mat, Workspace};
+use crate::linalg::{invert_ws, lu_solve, Mat, Workspace};
 use crate::surrogate::Surrogate;
 
 /// Cubic-RBF interpolant state.
@@ -90,7 +90,14 @@ impl RbfSurrogate {
     /// Returns false for models without a saddle system (mean-only
     /// fallback) or when the system is numerically singular.
     pub fn prepare_incremental(&mut self) -> bool {
-        self.supports_incremental() && self.ensure_inverse()
+        let mut ws = Workspace::new();
+        self.prepare_incremental_ws(&mut ws)
+    }
+
+    /// [`RbfSurrogate::prepare_incremental`] with the factorization
+    /// scratch drawn from a caller-owned [`Workspace`].
+    pub fn prepare_incremental_ws(&mut self, ws: &mut Workspace) -> bool {
+        self.supports_incremental() && self.ensure_inverse(ws)
     }
 
     /// Rebuild the saddle matrix in slot ordering from the centers.
@@ -115,13 +122,15 @@ impl RbfSurrogate {
         a
     }
 
-    /// Ensure `a` and `inv` exist (one O(n³) build on first use).
-    fn ensure_inverse(&mut self) -> bool {
+    /// Ensure `a` and `inv` exist (one O(n³) build on first use). The
+    /// inversion scratch — LU buffer, identity RHS, solve lanes — comes
+    /// from the workspace pool.
+    fn ensure_inverse(&mut self, ws: &mut Workspace) -> bool {
         if self.inv.is_some() {
             return true;
         }
         let a = self.build_saddle();
-        match invert(&a) {
+        match invert_ws(&a, ws) {
             Some(inv) => {
                 self.a = Some(a);
                 self.inv = Some(inv);
@@ -134,43 +143,182 @@ impl RbfSurrogate {
     /// Solve `a · sol = rhs` through the maintained inverse with one step
     /// of iterative refinement, and verify the residual. Returns `None`
     /// when the inverse has drifted too far (caller falls back to `fit`).
-    fn solve_checked(a: &Mat, inv: &Mat, rhs: &[f64]) -> Option<Vec<f64>> {
-        let mut sol = inv.matvec(rhs);
+    /// The returned solution and all scratch come from the workspace
+    /// pool; the caller gives the solution back after adopting it.
+    fn solve_checked(
+        a: &Mat,
+        inv: &Mat,
+        rhs: &[f64],
+        ws: &mut Workspace,
+    ) -> Option<Vec<f64>> {
+        let mut sol = ws.take(inv.rows);
+        inv.matvec_into(rhs, &mut sol);
         // Two refinement steps squash the O(cond·eps) error of the
         // explicitly-maintained inverse down to direct-solve accuracy
         // (each step scales the residual by ‖I − A·inv‖).
+        let mut ax = ws.take(a.rows);
+        let mut r = ws.take(a.rows);
+        let mut corr = ws.take(inv.rows);
         for _ in 0..2 {
-            let ax = a.matvec(&sol);
-            let r: Vec<f64> =
-                rhs.iter().zip(&ax).map(|(b, v)| b - v).collect();
-            let corr = inv.matvec(&r);
+            a.matvec_into(&sol, &mut ax);
+            for ((ri, b), v) in r.iter_mut().zip(rhs).zip(&ax) {
+                *ri = b - v;
+            }
+            inv.matvec_into(&r, &mut corr);
             for (s, c) in sol.iter_mut().zip(&corr) {
                 *s += c;
             }
         }
-        let ax = a.matvec(&sol);
+        a.matvec_into(&sol, &mut ax);
         let scale = rhs.iter().fold(1.0f64, |m, v| m.max(v.abs()));
         let resid = rhs
             .iter()
             .zip(&ax)
             .fold(0.0f64, |m, (b, v)| m.max((b - v).abs()));
+        ws.give(ax);
+        ws.give(r);
+        ws.give(corr);
         if resid <= 1e-8 * scale {
             Some(sol)
         } else {
+            ws.give(sol);
             None
         }
     }
 
-    /// Extract λ/β₀/β from a slot-ordered solution vector.
+    /// Extract λ/β₀/β from a slot-ordered solution vector (reusing the
+    /// coefficient buffers' capacity).
     fn adopt_solution(&mut self, sol: &[f64]) {
-        self.lambda = self
-            .slot_of_center
-            .iter()
-            .map(|&s| sol[s])
-            .collect();
+        self.lambda.clear();
+        self.lambda
+            .extend(self.slot_of_center.iter().map(|&s| sol[s]));
         self.beta0 = sol[self.const_slot];
-        self.beta =
-            sol[self.const_slot + 1..self.const_slot + 1 + self.d].to_vec();
+        self.beta.clear();
+        self.beta.extend_from_slice(
+            &sol[self.const_slot + 1..self.const_slot + 1 + self.d],
+        );
+    }
+
+    /// Incremental (bordered) update with every O(n²) intermediate —
+    /// border vector, extended inverse/saddle matrices, refinement
+    /// scratch — drawn from a caller-owned [`Workspace`]; superseded
+    /// matrices are recycled into the pool, so the steady-state
+    /// insertion loop runs without net heap traffic (metered by
+    /// [`Workspace::alloc_bytes`]). Identical operation sequence to the
+    /// trait [`Surrogate::fit_incremental`].
+    pub fn fit_incremental_ws(
+        &mut self,
+        x: &[f64],
+        y: f64,
+        ws: &mut Workspace,
+    ) -> bool {
+        if !self.supports_incremental() || x.len() != self.d {
+            return false;
+        }
+        // Re-observation of an existing location: keep the full-fit
+        // "last observation wins" semantics by swapping the value in the
+        // right-hand side and re-solving through the inverse.
+        if let Some(i) =
+            self.centers.iter().position(|c| dist(c, x) < 1e-12)
+        {
+            if !self.ensure_inverse(ws) {
+                return false;
+            }
+            let mut rhs = ws.take(self.rhs.len());
+            rhs.copy_from_slice(&self.rhs);
+            rhs[self.slot_of_center[i]] = y;
+            let a = self.a.as_ref().expect("ensured");
+            let inv = self.inv.as_ref().expect("ensured");
+            let Some(sol) = Self::solve_checked(a, inv, &rhs, ws) else {
+                ws.give(rhs);
+                return false;
+            };
+            let old = std::mem::replace(&mut self.rhs, rhs);
+            ws.give(old);
+            self.adopt_solution(&sol);
+            ws.give(sol);
+            return true;
+        }
+
+        if !self.ensure_inverse(ws) {
+            return false;
+        }
+        let a = self.a.as_ref().expect("ensured");
+        let inv = self.inv.as_ref().expect("ensured");
+        let m = self.rhs.len();
+
+        // Border vector of the new point against every existing slot.
+        let mut b = ws.take(m);
+        for (j, cj) in self.centers.iter().enumerate() {
+            b[self.slot_of_center[j]] = phi(dist(cj, x));
+        }
+        b[self.const_slot] = 1.0;
+        for k in 0..self.d {
+            b[self.const_slot + 1 + k] = x[k];
+        }
+
+        // Schur complement of the bordered system; the diagonal entry is
+        // φ(0) = 0 for the cubic kernel.
+        let mut v = ws.take(m);
+        inv.matvec_into(&b, &mut v);
+        let s = -b.iter().zip(&v).map(|(bi, vi)| bi * vi).sum::<f64>();
+        if s.abs() < 1e-10 {
+            ws.give(b);
+            ws.give(v);
+            return false; // (near-)singular extension: full refit instead
+        }
+
+        // Extended inverse via the block-inversion identity (O(m²)).
+        let mut inv2 = ws.take_mat(m + 1, m + 1);
+        for i in 0..m {
+            for j in 0..m {
+                inv2[(i, j)] = inv[(i, j)] + v[i] * v[j] / s;
+            }
+            inv2[(i, m)] = -v[i] / s;
+            inv2[(m, i)] = -v[i] / s;
+        }
+        inv2[(m, m)] = 1.0 / s;
+
+        // Extended saddle matrix (kept for residual checks/refinement).
+        let mut a2 = ws.take_mat(m + 1, m + 1);
+        for i in 0..m {
+            for j in 0..m {
+                a2[(i, j)] = a[(i, j)];
+            }
+            a2[(i, m)] = b[i];
+            a2[(m, i)] = b[i];
+        }
+
+        let mut rhs2 = ws.take(m + 1);
+        for (d, s) in rhs2.iter_mut().zip(&self.rhs) {
+            *d = *s;
+        }
+        if let Some(last) = rhs2.last_mut() {
+            *last = y;
+        }
+        let Some(sol) = Self::solve_checked(&a2, &inv2, &rhs2, ws) else {
+            ws.give(b);
+            ws.give(v);
+            ws.give_mat(inv2);
+            ws.give_mat(a2);
+            ws.give(rhs2);
+            return false; // inverse drifted: caller refits fully
+        };
+
+        // Everything verified — commit, recycling the superseded state.
+        if let Some(old) = self.a.replace(a2) {
+            ws.give_mat(old);
+        }
+        if let Some(old) = self.inv.replace(inv2) {
+            ws.give_mat(old);
+        }
+        let old_rhs = std::mem::replace(&mut self.rhs, rhs2);
+        ws.give(old_rhs);
+        self.centers.push(x.to_vec());
+        self.slot_of_center.push(m);
+        self.adopt_solution(&sol);
+        ws.give(sol);
+        true
     }
 }
 
@@ -249,90 +397,12 @@ impl Surrogate for RbfSurrogate {
     }
 
     fn fit_incremental(&mut self, x: &[f64], y: f64) -> bool {
-        if !self.supports_incremental() || x.len() != self.d {
-            return false;
-        }
-        // Re-observation of an existing location: keep the full-fit
-        // "last observation wins" semantics by swapping the value in the
-        // right-hand side and re-solving through the inverse.
-        if let Some(i) =
-            self.centers.iter().position(|c| dist(c, x) < 1e-12)
-        {
-            if !self.ensure_inverse() {
-                return false;
-            }
-            let mut rhs = self.rhs.clone();
-            rhs[self.slot_of_center[i]] = y;
-            let a = self.a.as_ref().expect("ensured");
-            let inv = self.inv.as_ref().expect("ensured");
-            let Some(sol) = Self::solve_checked(a, inv, &rhs) else {
-                return false;
-            };
-            self.rhs = rhs;
-            self.adopt_solution(&sol);
-            return true;
-        }
+        let mut ws = Workspace::new();
+        self.fit_incremental_ws(x, y, &mut ws)
+    }
 
-        if !self.ensure_inverse() {
-            return false;
-        }
-        let a = self.a.as_ref().expect("ensured");
-        let inv = self.inv.as_ref().expect("ensured");
-        let m = self.rhs.len();
-
-        // Border vector of the new point against every existing slot.
-        let mut b = vec![0.0; m];
-        for (j, cj) in self.centers.iter().enumerate() {
-            b[self.slot_of_center[j]] = phi(dist(cj, x));
-        }
-        b[self.const_slot] = 1.0;
-        for k in 0..self.d {
-            b[self.const_slot + 1 + k] = x[k];
-        }
-
-        // Schur complement of the bordered system; the diagonal entry is
-        // φ(0) = 0 for the cubic kernel.
-        let v = inv.matvec(&b);
-        let s = -b.iter().zip(&v).map(|(bi, vi)| bi * vi).sum::<f64>();
-        if s.abs() < 1e-10 {
-            return false; // (near-)singular extension: full refit instead
-        }
-
-        // Extended inverse via the block-inversion identity (O(m²)).
-        let mut inv2 = Mat::zeros(m + 1, m + 1);
-        for i in 0..m {
-            for j in 0..m {
-                inv2[(i, j)] = inv[(i, j)] + v[i] * v[j] / s;
-            }
-            inv2[(i, m)] = -v[i] / s;
-            inv2[(m, i)] = -v[i] / s;
-        }
-        inv2[(m, m)] = 1.0 / s;
-
-        // Extended saddle matrix (kept for residual checks/refinement).
-        let mut a2 = Mat::zeros(m + 1, m + 1);
-        for i in 0..m {
-            for j in 0..m {
-                a2[(i, j)] = a[(i, j)];
-            }
-            a2[(i, m)] = b[i];
-            a2[(m, i)] = b[i];
-        }
-
-        let mut rhs2 = self.rhs.clone();
-        rhs2.push(y);
-        let Some(sol) = Self::solve_checked(&a2, &inv2, &rhs2) else {
-            return false; // inverse drifted: caller refits fully
-        };
-
-        // Everything verified — commit.
-        self.a = Some(a2);
-        self.inv = Some(inv2);
-        self.rhs = rhs2;
-        self.centers.push(x.to_vec());
-        self.slot_of_center.push(m);
-        self.adopt_solution(&sol);
-        true
+    fn fit_incremental_ws(&mut self, x: &[f64], y: f64, ws: &mut Workspace) -> bool {
+        RbfSurrogate::fit_incremental_ws(self, x, y, ws)
     }
 
     fn predict(&self, x: &[f64]) -> f64 {

@@ -1,0 +1,268 @@
+//! Capacity-scaling policy for the exact surrogates (DESIGN.md §14).
+//!
+//! The exact GP/RBF stack is O(n²) per incremental update and O(n³) per
+//! refit, which collapses somewhere in the low thousands of observations
+//! per study. This module keeps the exact path authoritative below a
+//! configurable observation budget (`max_exact_n`) and, past it, hands
+//! the study off to a cheaper regime: a subset-of-data sparse GP over
+//! deterministically selected landmarks, or the extra-trees forest
+//! surrogate. Above a second budget (`max_history`) stale observations
+//! are evicted from the surrogate's training mirror (never from the
+//! executor's `History`, which stays complete for reporting).
+//!
+//! Determinism contract: below `max_exact_n` the policy is inert — the
+//! proposer takes exactly the code path it took before this module
+//! existed, so histories are bit-identical (asserted in
+//! `rust/tests/scaling.rs`). Above it, behavior stays seeded-
+//! deterministic (landmark selection is a greedy max–min sweep with
+//! fixed tie-breaking; the forest seed is derived from the study seed)
+//! but is explicitly *not* bit-compatible with the unbounded exact path.
+
+/// Which cheap regime a study degrades to past `max_exact_n`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalingMode {
+    /// Subset-of-data sparse GP/RBF: refit the exact surrogate on
+    /// `max_exact_n` landmark observations chosen by greedy max–min
+    /// distance (k-center) seeded from the incumbent best.
+    Subset,
+    /// Hand off to the `baselines::forest` extra-trees surrogate fitted
+    /// on the full (evicted) mirror — O(n log n)-ish per refit.
+    Forest,
+}
+
+/// Observation budgets for one study's surrogate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScalingConfig {
+    /// Largest training-set size served by the exact O(n³) surrogates.
+    /// Below (≤) this the policy is inert and the exact path is
+    /// bit-identical to a build without the policy layer.
+    pub max_exact_n: usize,
+    /// Regime used once the mirror exceeds `max_exact_n`.
+    pub mode: ScalingMode,
+    /// Hard cap on the surrogate training mirror; beyond it the oldest
+    /// non-incumbent observations are evicted. Clamped to at least
+    /// `max_exact_n` by [`ScalingConfig::effective_max_history`].
+    pub max_history: usize,
+}
+
+impl Default for ScalingConfig {
+    fn default() -> Self {
+        ScalingConfig {
+            max_exact_n: 1024,
+            mode: ScalingMode::Subset,
+            max_history: 8192,
+        }
+    }
+}
+
+impl ScalingConfig {
+    /// `max_history` with the `≥ max_exact_n` invariant enforced, so a
+    /// config with an inconsistent pair degrades gracefully instead of
+    /// evicting the exact window.
+    pub fn effective_max_history(&self) -> usize {
+        self.max_history.max(self.max_exact_n)
+    }
+}
+
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Greedy max–min (k-center) landmark selection: start from the
+/// incumbent best (argmin `ys`, lowest index on ties), then repeatedly
+/// take the point farthest from the chosen set (again lowest index on
+/// ties). Deterministic — no RNG — so a resumed study picks the same
+/// landmarks. Returns ascending indices into `xs` so the subset
+/// preserves observation order (stable training-set ordering for the
+/// downstream fit).
+pub fn select_landmarks(xs: &[Vec<f64>], ys: &[f64], m: usize) -> Vec<usize> {
+    let n = xs.len().min(ys.len());
+    if m == 0 || n == 0 {
+        return Vec::new();
+    }
+    if m >= n {
+        return (0..n).collect();
+    }
+    let mut seed = 0usize;
+    let mut seed_y = f64::INFINITY;
+    for (i, y) in ys.iter().enumerate().take(n) {
+        if *y < seed_y {
+            seed_y = *y;
+            seed = i;
+        }
+    }
+    // mind[i] = squared distance from point i to the chosen set;
+    // chosen points are parked at -inf so argmax never revisits them.
+    let mut mind = vec![f64::INFINITY; n];
+    let mut chosen = Vec::with_capacity(m);
+    let mut current = seed;
+    loop {
+        chosen.push(current);
+        if let Some(md) = mind.get_mut(current) {
+            *md = f64::NEG_INFINITY;
+        }
+        if chosen.len() >= m {
+            break;
+        }
+        let Some(cur_x) = xs.get(current) else { break };
+        let mut next = current;
+        let mut next_d = f64::NEG_INFINITY;
+        for ((i, x), md) in xs.iter().enumerate().zip(mind.iter_mut()) {
+            if *md != f64::NEG_INFINITY {
+                let d = dist2(cur_x, x);
+                if d < *md {
+                    *md = d;
+                }
+                if *md > next_d {
+                    next_d = *md;
+                    next = i;
+                }
+            }
+        }
+        if next == current {
+            break; // everything selectable is already chosen
+        }
+        current = next;
+    }
+    chosen.sort_unstable();
+    chosen
+}
+
+/// Which mirror indices survive an eviction pass: the incumbent best
+/// (argmin `ys`, lowest index on ties) plus the most recent
+/// observations, `max_history` total, in ascending (observation) order.
+/// Returns `0..n` untouched when the mirror already fits.
+pub fn eviction_keep(ys: &[f64], max_history: usize) -> Vec<usize> {
+    let n = ys.len();
+    let cap = max_history.max(1);
+    if n <= cap {
+        return (0..n).collect();
+    }
+    let mut best = 0usize;
+    let mut best_y = f64::INFINITY;
+    for (i, y) in ys.iter().enumerate() {
+        if *y < best_y {
+            best_y = *y;
+            best = i;
+        }
+    }
+    let tail = n - (cap - 1);
+    if best >= tail {
+        // Incumbent already inside the recent window: keep the newest
+        // `cap` observations.
+        ((n - cap)..n).collect()
+    } else {
+        let mut keep = Vec::with_capacity(cap);
+        keep.push(best);
+        keep.extend(tail..n);
+        keep
+    }
+}
+
+/// Apply [`eviction_keep`] to a parallel (xs, ys) mirror in place,
+/// returning how many observations were dropped.
+pub fn evict_mirror(
+    xs: &mut Vec<Vec<f64>>,
+    ys: &mut Vec<f64>,
+    max_history: usize,
+) -> usize {
+    let n = ys.len().min(xs.len());
+    let keep = eviction_keep(ys, max_history);
+    if keep.len() >= n {
+        return 0;
+    }
+    // `keep` is ascending, so compaction by swap-in order is stable.
+    for (dst, src) in keep.iter().enumerate() {
+        xs.swap(dst, *src);
+        ys.swap(dst, *src);
+    }
+    xs.truncate(keep.len());
+    ys.truncate(keep.len());
+    n - keep.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts(vals: &[(f64, f64)]) -> (Vec<Vec<f64>>, Vec<f64>) {
+        (
+            vals.iter().map(|(x, _)| vec![*x]).collect(),
+            vals.iter().map(|(_, y)| *y).collect(),
+        )
+    }
+
+    #[test]
+    fn landmarks_start_from_incumbent_and_are_deterministic() {
+        let (xs, ys) =
+            pts(&[(0.0, 5.0), (1.0, 1.0), (2.0, 3.0), (10.0, 4.0)]);
+        let a = select_landmarks(&xs, &ys, 2);
+        let b = select_landmarks(&xs, &ys, 2);
+        assert_eq!(a, b);
+        // Incumbent (index 1, y=1.0) plus the farthest point (index 3).
+        assert_eq!(a, vec![1, 3]);
+    }
+
+    #[test]
+    fn landmarks_cover_degenerate_sizes() {
+        let (xs, ys) = pts(&[(0.0, 1.0), (1.0, 2.0)]);
+        assert!(select_landmarks(&xs, &ys, 0).is_empty());
+        assert_eq!(select_landmarks(&xs, &ys, 2), vec![0, 1]);
+        assert_eq!(select_landmarks(&xs, &ys, 99), vec![0, 1]);
+        assert!(select_landmarks(&[], &[], 3).is_empty());
+    }
+
+    #[test]
+    fn landmarks_are_max_min_spread() {
+        // Cluster near 0 plus one outlier: the outlier must be chosen
+        // before a second cluster member.
+        let (xs, ys) = pts(&[
+            (0.0, 0.0),
+            (0.1, 1.0),
+            (0.2, 1.0),
+            (9.0, 1.0),
+        ]);
+        let sel = select_landmarks(&xs, &ys, 2);
+        assert_eq!(sel, vec![0, 3]);
+    }
+
+    #[test]
+    fn eviction_keeps_best_and_most_recent() {
+        let ys: Vec<f64> =
+            vec![9.0, 0.5, 8.0, 7.0, 6.0, 5.0, 4.0, 3.0];
+        // Cap 4: incumbent (index 1) + 3 most recent.
+        assert_eq!(eviction_keep(&ys, 4), vec![1, 5, 6, 7]);
+        // Incumbent inside the window: plain tail.
+        let ys2: Vec<f64> = vec![9.0, 8.0, 7.0, 6.0, 5.0, 0.5];
+        assert_eq!(eviction_keep(&ys2, 3), vec![3, 4, 5]);
+        // Under cap: identity.
+        assert_eq!(eviction_keep(&ys2, 10), (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn evict_mirror_compacts_in_order() {
+        let mut xs: Vec<Vec<f64>> =
+            (0..6).map(|i| vec![i as f64]).collect();
+        let mut ys = vec![5.0, 0.5, 4.0, 3.0, 2.0, 1.0];
+        let dropped = evict_mirror(&mut xs, &mut ys, 3);
+        assert_eq!(dropped, 3);
+        assert_eq!(ys, vec![0.5, 2.0, 1.0]);
+        assert_eq!(xs, vec![vec![1.0], vec![4.0], vec![5.0]]);
+        // Already under cap: no-op.
+        assert_eq!(evict_mirror(&mut xs, &mut ys, 3), 0);
+    }
+
+    #[test]
+    fn effective_max_history_clamps() {
+        let cfg = ScalingConfig {
+            max_exact_n: 100,
+            max_history: 10,
+            ..Default::default()
+        };
+        assert_eq!(cfg.effective_max_history(), 100);
+        assert!(
+            ScalingConfig::default().effective_max_history()
+                >= ScalingConfig::default().max_exact_n
+        );
+    }
+}

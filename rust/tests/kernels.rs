@@ -1,0 +1,257 @@
+//! Bitwise-equivalence tests for the PR 8 tiled micro-kernel linalg
+//! backend (DESIGN.md §14) against the pre-tiling reference forms.
+//!
+//! The contract: per output element, floating-point products accumulate
+//! in ascending-k order starting from 0.0 (factorizations subtract the
+//! ascending-k chain from the source element). The PR 5 blocked loops
+//! honored that order, the naive triple loops honor it, and the packed
+//! register-blocked kernels must keep honoring it — so every comparison
+//! here is exact (`to_bits()` equality), not epsilon-based, at shapes
+//! chosen to straddle every tile boundary (MR=4, NR=8, LANE=4,
+//! CHOL_NB=64): {1, 3, 63, 64, 65, 133}.
+
+use hyppo::linalg::{
+    cholesky, cholesky_solve, cholesky_solve_many, lu_factor, Mat,
+    Workspace,
+};
+
+/// Adversarial sizes: unit, sub-tile, straddling the 64-wide block
+/// boundary from below/on/above, and 2·64+5.
+const SIZES: [usize; 6] = [1, 3, 63, 64, 65, 133];
+
+/// Deterministic pseudo-random matrix (splitmix-style, no external rng).
+fn fill_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut m = Mat::zeros(rows, cols);
+    let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+    for v in &mut m.data {
+        s = s
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        // Map to [-1, 1); plenty of signal in every mantissa bit.
+        *v = ((s >> 11) as f64 / (1u64 << 53) as f64) * 2.0 - 1.0;
+    }
+    m
+}
+
+/// Symmetric positive definite test matrix: MᵀM + n·I.
+fn spd(n: usize, seed: u64) -> Mat {
+    let m = fill_mat(n, n, seed);
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for k in 0..n {
+                acc += m[(k, i)] * m[(k, j)];
+            }
+            a[(i, j)] = acc;
+        }
+        a[(i, i)] += n as f64;
+    }
+    a
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: element {i} differs: {x:e} vs {y:e}"
+        );
+    }
+}
+
+/// Pre-tiling reference: naive i-j-k triple loop, ascending-k chain
+/// from 0.0 per element — the order the PR 5 blocked form preserved
+/// and the micro-kernel must keep preserving.
+fn matmul_ref(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut acc = 0.0;
+            for k in 0..a.cols {
+                acc += a[(i, k)] * b[(k, j)];
+            }
+            c[(i, j)] = acc;
+        }
+    }
+    c
+}
+
+/// Reference unblocked right-looking Cholesky recurrence (the pre-PR 8
+/// `cholesky` loop): identical pivot test (`v <= 0.0`) and identical
+/// per-element subtraction order.
+fn cholesky_ref(a: &Mat) -> Option<Mat> {
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut v = a[(i, j)];
+            for k in 0..j {
+                v -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if v <= 0.0 {
+                    return None;
+                }
+                l[(i, j)] = v.sqrt();
+            } else {
+                l[(i, j)] = v / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+fn column(b: &Mat, j: usize) -> Vec<f64> {
+    (0..b.rows).map(|i| b[(i, j)]).collect()
+}
+
+#[test]
+fn tiled_matmul_is_bitwise_identical_at_all_tile_straddles() {
+    for &m in &SIZES {
+        for &k in &SIZES {
+            for &n in &SIZES {
+                let a = fill_mat(m, k, (m * 1000 + k) as u64);
+                let b = fill_mat(k, n, (k * 1000 + n + 7) as u64);
+                let c = a.matmul(&b);
+                let r = matmul_ref(&a, &b);
+                assert_bits_eq(
+                    &c.data,
+                    &r.data,
+                    &format!("matmul {m}x{k}·{k}x{n}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tiled_matmul_reuses_workspace_without_changing_bits() {
+    let mut ws = Workspace::new();
+    for round in 0..3u64 {
+        let a = fill_mat(65, 133, round);
+        let b = fill_mat(133, 63, round + 99);
+        let c = a.matmul_ws(&b, &mut ws);
+        let r = matmul_ref(&a, &b);
+        assert_bits_eq(&c.data, &r.data, "matmul_ws round");
+        ws.give_mat(c);
+    }
+    // Warm pool: later rounds must not have grown scratch.
+    ws.take_alloc_bytes();
+    let a = fill_mat(65, 133, 11);
+    let b = fill_mat(133, 63, 12);
+    let c = a.matmul_ws(&b, &mut ws);
+    ws.give_mat(c);
+    assert_eq!(ws.take_alloc_bytes(), 0, "steady-state matmul allocated");
+}
+
+#[test]
+fn blocked_matvec_is_bitwise_identical() {
+    for &m in &SIZES {
+        for &n in &SIZES {
+            let a = fill_mat(m, n, (m + n * 31) as u64);
+            let x: Vec<f64> = (0..n)
+                .map(|i| ((i * 37 + 5) % 97) as f64 / 97.0 - 0.5)
+                .collect();
+            let got = a.matvec(&x);
+            let mut want = vec![0.0; m];
+            for i in 0..m {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += a[(i, k)] * x[k];
+                }
+                want[i] = s;
+            }
+            assert_bits_eq(&got, &want, &format!("matvec {m}x{n}"));
+        }
+    }
+}
+
+#[test]
+fn blocked_cholesky_matches_unblocked_recurrence_bitwise() {
+    for &n in &SIZES {
+        let a = spd(n, n as u64 + 3);
+        let l = cholesky(&a).expect("spd factors");
+        let r = cholesky_ref(&a).expect("reference factors");
+        assert_bits_eq(&l.data, &r.data, &format!("cholesky n={n}"));
+    }
+}
+
+#[test]
+fn blocked_cholesky_rejects_indefinite_like_the_reference() {
+    for &n in &[3usize, 64, 65] {
+        let mut a = spd(n, 1); // make it indefinite
+        a[(n - 1, n - 1)] = -1.0;
+        for j in 0..n.saturating_sub(1) {
+            a[(n - 1, j)] = 0.0;
+            a[(j, n - 1)] = 0.0;
+        }
+        assert_eq!(
+            cholesky(&a).is_none(),
+            cholesky_ref(&a).is_none(),
+            "pivot rejection differs at n={n}"
+        );
+        assert!(cholesky(&a).is_none());
+    }
+}
+
+#[test]
+fn lane_solve_many_is_bitwise_columnwise_solve() {
+    // Column counts straddling the LANE=4 interleave width.
+    for &n in &[1usize, 3, 63, 64, 65] {
+        for &cols in &[1usize, 3, 4, 5, 9] {
+            let a = fill_mat(n, n, (n * 7 + cols) as u64);
+            let mut ad = a.clone();
+            for i in 0..n {
+                ad[(i, i)] += n as f64 + 1.0; // diagonally dominant
+            }
+            let b = fill_mat(n, cols, (cols * 13 + n) as u64);
+            let f = lu_factor(&ad).expect("nonsingular");
+            let many = f.solve_many(&b);
+            for j in 0..cols {
+                let want = f.solve(&column(&b, j));
+                let got = column(&many, j);
+                assert_bits_eq(
+                    &got,
+                    &want,
+                    &format!("solve_many n={n} col {j}/{cols}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lane_cholesky_solve_many_is_bitwise_columnwise() {
+    for &n in &[1usize, 3, 63, 64, 65] {
+        for &cols in &[1usize, 3, 4, 5, 9] {
+            let a = spd(n, (n + cols * 101) as u64);
+            let l = cholesky(&a).expect("spd factors");
+            let b = fill_mat(n, cols, (n * 19 + cols) as u64);
+            let many = cholesky_solve_many(&l, &b);
+            for j in 0..cols {
+                let want = cholesky_solve(&l, &column(&b, j));
+                let got = column(&many, j);
+                assert_bits_eq(
+                    &got,
+                    &want,
+                    &format!("chol_solve_many n={n} col {j}/{cols}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_dimension_products_are_well_defined() {
+    let a = Mat::zeros(0, 5);
+    let b = Mat::zeros(5, 0);
+    let c = a.matmul(&Mat::zeros(5, 4));
+    assert_eq!((c.rows, c.cols), (0, 4));
+    let d = Mat::zeros(4, 5).matmul(&b);
+    assert_eq!((d.rows, d.cols), (4, 0));
+    let e = Mat::zeros(3, 0).matmul(&Mat::zeros(0, 2));
+    assert_eq!((e.rows, e.cols), (3, 2));
+    assert!(e.data.iter().all(|v| *v == 0.0));
+}

@@ -1,0 +1,209 @@
+//! Property tests for the `surrogate::scaling` policy layer (PR 8,
+//! DESIGN.md §14): below the exact budget the policy must be perfectly
+//! inert — histories bit-identical to a run without any budget — and
+//! above it the study must keep completing proposals through the scaled
+//! regime with the handoff/eviction counters telling the story.
+
+use hyppo::eval::synthetic::SyntheticEvaluator;
+use hyppo::eval::Evaluator;
+use hyppo::optimizer::{
+    evaluate_point, initial_design, run_sync, EvalRecord, History,
+    HpoConfig, OnlineProposer, RefitStats, ScalingConfig, ScalingMode,
+    SurrogateKind,
+};
+use hyppo::sampling::rng::Rng;
+use hyppo::space::{ParamSpec, Space};
+
+fn space() -> Space {
+    Space::new(vec![
+        ParamSpec::new("a", 0, 24),
+        ParamSpec::new("b", 0, 24),
+    ])
+}
+
+fn base_cfg(kind: SurrogateKind) -> HpoConfig {
+    HpoConfig {
+        max_evaluations: 22,
+        n_init: 6,
+        n_trials: 2,
+        surrogate: kind,
+        seed: 5,
+        ..Default::default()
+    }
+}
+
+fn assert_histories_bit_identical(a: &History, b: &History, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: lengths differ");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.theta, rb.theta, "{what}: θ diverged at id {}", ra.id);
+        assert_eq!(
+            ra.objective(0.0).to_bits(),
+            rb.objective(0.0).to_bits(),
+            "{what}: objective bits diverged at id {}",
+            ra.id
+        );
+    }
+}
+
+/// All-exact-path histories (n ≤ threshold) are bit-identical whether
+/// the threshold is the default (effectively unbounded for this run) or
+/// exactly the evaluation budget — the policy layer is inert until
+/// crossed, for every surrogate kind and both scaled modes.
+#[test]
+fn histories_below_threshold_are_bit_identical_to_exact_path() {
+    for kind in [
+        SurrogateKind::Rbf,
+        SurrogateKind::Gp,
+        SurrogateKind::RbfEnsemble { alpha: 1.0, members: 6 },
+    ] {
+        let ev = SyntheticEvaluator::new(space(), 9);
+        let unbounded = run_sync(&ev, &base_cfg(kind.clone()));
+        for mode in [ScalingMode::Subset, ScalingMode::Forest] {
+            let cfg = HpoConfig {
+                scaling: ScalingConfig {
+                    // Tightest inert budget: the mirror never exceeds
+                    // max_evaluations while proposals are still served.
+                    max_exact_n: base_cfg(kind.clone()).max_evaluations,
+                    mode,
+                    max_history: 8192,
+                },
+                ..base_cfg(kind.clone())
+            };
+            let bounded = run_sync(&ev, &cfg);
+            assert_histories_bit_identical(
+                &unbounded,
+                &bounded,
+                &format!("{kind:?}/{mode:?}"),
+            );
+        }
+    }
+}
+
+/// Drive an OnlineProposer loop (the executor's code path) to
+/// completion and return its history + stats.
+fn drive(cfg: &HpoConfig, ev_seed: u64) -> (History, RefitStats) {
+    let ev = SyntheticEvaluator::new(space(), ev_seed);
+    let sp = ev.space().clone();
+    let mut rng = Rng::new(cfg.seed);
+    let mut history = History::default();
+    let mut prop = OnlineProposer::new(cfg);
+    for theta in initial_design(&sp, cfg, &mut rng) {
+        let summary = evaluate_point(
+            &ev,
+            &theta,
+            cfg.n_trials,
+            cfg.weights,
+            rng.next_u64(),
+        );
+        let rec = EvalRecord {
+            id: history.len(),
+            n_params: ev.n_params(&theta),
+            theta,
+            summary,
+            provenance: vec![],
+        };
+        prop.observe(&sp, &rec);
+        history.records.push(rec);
+    }
+    let mut iter = 0;
+    while history.len() < cfg.max_evaluations {
+        let theta = prop.propose(&sp, &history, iter, &mut rng);
+        assert!(sp.contains(&theta), "proposed θ outside the space");
+        let summary = evaluate_point(
+            &ev,
+            &theta,
+            cfg.n_trials,
+            cfg.weights,
+            rng.next_u64(),
+        );
+        let rec = EvalRecord {
+            id: history.len(),
+            n_params: ev.n_params(&theta),
+            theta,
+            summary,
+            provenance: (0..history.len()).collect(),
+        };
+        prop.observe(&sp, &rec);
+        history.records.push(rec);
+        iter += 1;
+    }
+    (history, prop.stats())
+}
+
+/// Crossing the budget latches exactly one handoff and serves every
+/// remaining proposal from the scaled regime — for both modes and for
+/// each exact surrogate kind.
+#[test]
+fn handoff_latches_once_and_keeps_serving_proposals() {
+    for kind in [SurrogateKind::Rbf, SurrogateKind::Gp] {
+        for mode in [ScalingMode::Subset, ScalingMode::Forest] {
+            let cfg = HpoConfig {
+                scaling: ScalingConfig {
+                    max_exact_n: 8,
+                    mode,
+                    max_history: 8192,
+                },
+                ..base_cfg(kind.clone())
+            };
+            let (history, s) = drive(&cfg, 13);
+            assert_eq!(history.len(), 22, "{kind:?}/{mode:?}");
+            assert_eq!(s.handoffs, 1, "{kind:?}/{mode:?}: {s:?}");
+            assert!(
+                s.scaled_fits > 0,
+                "{kind:?}/{mode:?}: no scaled proposals: {s:?}"
+            );
+            // 16 proposals total; the mirror crosses the 8-observation
+            // budget after the 3rd, so exactly 13 are scaled.
+            assert_eq!(s.proposals, 16, "{kind:?}/{mode:?}: {s:?}");
+            assert_eq!(s.scaled_fits, 13, "{kind:?}/{mode:?}: {s:?}");
+            // The search still improves on the initial design.
+            let trace = history.best_trace(0.0);
+            assert!(trace.last().unwrap() <= &trace[5]);
+        }
+    }
+}
+
+/// Past `max_history` the surrogate mirror is evicted (the executor
+/// history itself never shrinks) and the run still completes.
+#[test]
+fn eviction_bounds_the_training_mirror() {
+    let cfg = HpoConfig {
+        max_evaluations: 26,
+        scaling: ScalingConfig {
+            max_exact_n: 6,
+            mode: ScalingMode::Forest,
+            max_history: 10,
+        },
+        ..base_cfg(SurrogateKind::Rbf)
+    };
+    let (history, s) = drive(&cfg, 21);
+    assert_eq!(history.len(), 26);
+    assert_eq!(s.handoffs, 1);
+    // 26 observations into a 10-slot mirror: 16 must have been evicted.
+    assert_eq!(s.evicted, 16, "stats: {s:?}");
+}
+
+/// The handoff threshold is honored by the one-shot `propose_next` path
+/// too (fresh proposer + preload): a resumed/preloaded study past the
+/// budget serves scaled proposals without counting a live handoff.
+#[test]
+fn preload_past_budget_enters_scaled_regime() {
+    let cfg = HpoConfig {
+        scaling: ScalingConfig {
+            max_exact_n: 8,
+            mode: ScalingMode::Subset,
+            max_history: 8192,
+        },
+        ..base_cfg(SurrogateKind::Gp)
+    };
+    let ev = SyntheticEvaluator::new(space(), 3);
+    let h = run_sync(&ev, &cfg);
+    assert_eq!(h.len(), 22);
+    let mut prop = OnlineProposer::new(&cfg);
+    prop.preload(ev.space(), &h);
+    let p = prop.propose(ev.space(), &h, 0, &mut Rng::new(42));
+    assert!(ev.space().contains(&p));
+    let s = prop.stats();
+    assert_eq!(s.handoffs, 0, "preload must not count a live handoff");
+    assert_eq!(s.scaled_fits, 1, "stats: {s:?}");
+}

@@ -27,12 +27,25 @@ RULES = {
 
 RESULT_FIELDS = ("name", "iters", "mean_ns", "median_ns", "p95_ns", "min_ns")
 
+# Derived metrics each published baseline must carry once it holds real
+# numbers (``placeholder`` documents are exempt: they publish the gates
+# in their regeneration note instead). A bench target that silently
+# stops emitting one of these would otherwise pass CI with the canary
+# gate reading a KeyError-shaped hole.
+REQUIRED_DERIVED = {
+    "BENCH_surrogates.json": (
+        "gp_batch_score_speedup_n200",
+        "kernel_matmul_gflops_speedup",
+        "refit_n2000_speedup",
+    ),
+}
+
 
 def _is_num(v: Any) -> bool:
     return isinstance(v, (int, float)) and not isinstance(v, bool)
 
 
-def validate_doc(doc: Any):
+def validate_doc(doc: Any, filename: str | None = None):
     """Yield (slug, message) pairs for every schema violation."""
     if not isinstance(doc, dict):
         yield "not-object", "document is not a JSON object"
@@ -70,6 +83,14 @@ def validate_doc(doc: Any):
                    "`results` is empty but the document carries no "
                    '`"placeholder": true` marker — empty baselines must '
                    "be explicit, not inferred from a prose note")
+    if (filename in REQUIRED_DERIVED and doc.get("placeholder") is not True
+            and isinstance(derived, dict)):
+        for key in REQUIRED_DERIVED[filename]:
+            if key not in derived:
+                yield (f"missing-derived-{key}",
+                       f"derived metric {key!r} is gated by CI but absent "
+                       "from this non-placeholder baseline — the bench "
+                       "target stopped publishing it")
 
 
 def run(ctx, report: Report) -> None:
@@ -85,7 +106,7 @@ def run(ctx, report: Report) -> None:
                 rule="bench-schema", file=fn, line=0,
                 message=f"unreadable JSON: {e}", slug="unreadable"))
             continue
-        for slug, message in validate_doc(doc):
+        for slug, message in validate_doc(doc, filename=fn):
             report.add(Finding(
                 rule="bench-schema", file=fn, line=0,
                 message=message, slug=slug))

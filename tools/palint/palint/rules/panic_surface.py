@@ -31,6 +31,15 @@ RULES = {
 PANIC_MACROS = ("panic", "unreachable", "todo", "unimplemented",
                 "assert", "assert_eq", "assert_ne", "debug_assert")
 
+# Keywords the lexer tags as plain idents but that can never *end* an
+# expression — `mut [f64]` is a slice type, `return [..]`/`in [..]` open
+# an array literal. Without this, every `&mut [f64]` parameter counted
+# as a panicking index expression.
+_NON_EXPR_KEYWORDS = frozenset((
+    "mut", "ref", "dyn", "in", "return", "else", "box", "move", "as",
+    "const", "static", "impl", "where", "break", "continue", "yield",
+))
+
 
 def count_file(tokens, test_ranges) -> Dict[str, int]:
     counts = {"unwrap": 0, "expect": 0, "panic": 0, "index": 0}
@@ -50,8 +59,11 @@ def count_file(tokens, test_ranges) -> Dict[str, int]:
         elif t.text == "[" and prev is not None:
             # index expression: `expr[...]` — previous token ends an
             # expression.  Excludes attributes (#[...]), macro brackets
-            # (vec![...]), types ([f64; 4] follows punctuation).
-            if prev.kind in ("ident", "num") or prev.text in (")", "]"):
+            # (vec![...]), types ([f64; 4] follows punctuation), and
+            # keyword-prefixed types/literals (`&mut [f64]`, `return [..]`).
+            if (prev.kind in ("ident", "num")
+                    and prev.text not in _NON_EXPR_KEYWORDS) \
+                    or prev.text in (")", "]"):
                 counts["index"] += 1
     return counts
 

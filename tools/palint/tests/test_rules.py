@@ -222,6 +222,26 @@ class TestPanicSurface(unittest.TestCase):
                 "    }\n}\n"})
         self.assertEqual(new_by_rule(report, "panic-surface"), [])
 
+    def test_slice_types_are_not_index_expressions(self):
+        # `&mut [f64]` parameters and `return [..]` array literals must
+        # not count as panicking index expressions.
+        report = run_palint({
+            "rust/src/optimizer/mod.rs":
+                "pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {\n"
+                "    for (yo, xi) in y.iter_mut().zip(x) {\n"
+                "        *yo += alpha * xi;\n    }\n}\n"
+                "pub fn pair() -> [f64; 2] {\n"
+                "    return [0.0, 1.0];\n}\n"})
+        self.assertEqual(new_by_rule(report, "panic-surface"), [])
+
+    def test_real_indexing_still_counted(self):
+        report = run_palint({
+            "rust/src/optimizer/mod.rs":
+                "pub fn head(xs: &[f64]) -> f64 {\n"
+                "    xs[0]\n}\n"})
+        found = new_by_rule(report, "panic-surface")
+        self.assertTrue(any("index" in f.message for f in found), found)
+
 
 class TestCargoTargets(unittest.TestCase):
     def test_missing_bench_path_fires(self):
@@ -297,6 +317,45 @@ class TestBenchSchema(unittest.TestCase):
                 ' "derived": {}}\n'})
         found = new_by_rule(report, "bench-schema")
         self.assertTrue(any("iters" in f.message for f in found), found)
+
+    @staticmethod
+    def surrogates_doc(derived: str) -> str:
+        return (
+            '{"schema": "hyppo-bench-v1", "target": "bench_surrogates",\n'
+            ' "git_rev": "abc123",\n'
+            ' "results": [{"name": "case", "iters": 100,\n'
+            '   "mean_ns": 5.0, "median_ns": 4.0, "p95_ns": 9.0,\n'
+            '   "min_ns": 3.0}],\n'
+            f' "derived": {derived}}}\n')
+
+    def test_required_derived_missing_fires(self):
+        # A populated BENCH_surrogates.json that stopped publishing the
+        # CI-gated derived metrics must fail, one finding per hole.
+        report = run_palint({
+            "BENCH_surrogates.json":
+                self.surrogates_doc('{"gp_batch_score_speedup_n200": 7.0}')})
+        found = new_by_rule(report, "bench-schema")
+        for key in ("kernel_matmul_gflops_speedup", "refit_n2000_speedup"):
+            self.assertTrue(any(key in f.message for f in found), found)
+
+    def test_required_derived_present_is_clean(self):
+        report = run_palint({
+            "BENCH_surrogates.json":
+                self.surrogates_doc(
+                    '{"gp_batch_score_speedup_n200": 7.0,\n'
+                    '  "kernel_matmul_gflops_speedup": 2.1,\n'
+                    '  "refit_n2000_speedup": 40.0}')})
+        self.assertEqual(new_by_rule(report, "bench-schema"), [])
+
+    def test_required_derived_exempts_placeholder(self):
+        # A placeholder baseline publishes its gates in the regeneration
+        # note; it must not be forced to fabricate derived numbers.
+        report = run_palint({
+            "BENCH_surrogates.json":
+                '{"schema": "hyppo-bench-v1", "target": "bench_surrogates",\n'
+                ' "git_rev": "unknown", "placeholder": true,\n'
+                ' "results": [], "derived": {}}\n'})
+        self.assertEqual(new_by_rule(report, "bench-schema"), [])
 
 
 class TestDocRefs(unittest.TestCase):
