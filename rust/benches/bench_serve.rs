@@ -1,0 +1,135 @@
+//! Serve-subsystem benches (DESIGN.md §15): multi-study throughput
+//! through the in-process sharded service, the wire codec's per-message
+//! cost, and — as a derived metric CI can gate on — the price of
+//! durability: `serve_replay_overhead`, WAL-replay (crash recovery)
+//! time as a fraction of the live run it reconstructs.
+//!
+//! Timing uses `std::time::Instant` directly where a ratio of two
+//! one-shot wall times is wanted; benches live outside `rust/src`, so
+//! the determinism lint does not (and should not) apply here.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hyppo::serve::{
+    run_local, Request, ServeConfig, Service, ShardPool, VirtualClock,
+};
+use hyppo::serve::proto::{request_to_line, response_from_line};
+use hyppo::util::bench::{black_box, BenchRun};
+
+/// A small synthetic study: cheap enough that the bench measures the
+/// service (queues, WAL, protocol), not the surrogate.
+fn study_toml(seed: u64) -> String {
+    format!(
+        "[hpo]\n\
+         max_evaluations = 6\n\
+         n_init = 3\n\
+         n_trials = 1\n\
+         surrogate = \"rbf\"\n\
+         seed = {seed}\n\
+         \n\
+         [space]\n\
+         x = {{ kind = \"continuous\", lo = -2.0, hi = 2.0 }}\n\
+         n = [1, 16]\n"
+    )
+}
+
+fn studies(n: u64, seed0: u64) -> Vec<(String, String)> {
+    (0..n)
+        .map(|i| (format!("s{i:03}"), study_toml(seed0 + i)))
+        .collect()
+}
+
+/// Create a fresh in-memory (or WAL-backed) 2-shard service, drive
+/// every study to completion with `n_workers` local workers, shut the
+/// pool down. Returns the recovered `Service` for inspection.
+fn drive(
+    cfg: ServeConfig,
+    studies: &[(String, String)],
+    n_workers: usize,
+) -> Service {
+    let service = Service::new(cfg, VirtualClock::shared())
+        .expect("fresh service");
+    let pool = Arc::new(ShardPool::new(service, 10));
+    let reports =
+        run_local(&pool, studies, n_workers).expect("local run");
+    let done: usize =
+        reports.iter().map(|r| r.studies_done.len()).sum();
+    assert_eq!(done, studies.len(), "all studies must complete");
+    match Arc::try_unwrap(pool) {
+        Ok(pool) => pool.shutdown().expect("clean shutdown"),
+        Err(_) => unreachable!("workers joined inside run_local"),
+    }
+}
+
+fn main() {
+    let mut run = BenchRun::from_args("bench_serve");
+    println!("== serve benches ==");
+
+    // Headline: 64 concurrent studies across 2 shards, 4 local
+    // workers. Each iteration is a full service lifecycle — create,
+    // drive every study to completion, shut down.
+    let fleet = studies(64, 9000);
+    let stats = run.bench_with(
+        "serve_2shard_64studies_lifecycle",
+        Duration::from_secs(3),
+        || {
+            black_box(drive(ServeConfig::default(), &fleet, 4));
+        },
+    );
+    let studies_per_sec = 64.0 / (stats.mean_ns / 1e9);
+    run.metric("serve_studies_per_sec", studies_per_sec);
+
+    // Wire codec: one ask request encoded to its line form and a
+    // (worst-case-ish) error line decoded back. Pure CPU, no I/O.
+    let ask = Request::Ask {
+        study: "s001".to_string(),
+        worker: "w0".to_string(),
+    };
+    run.bench("proto_encode_ask_line", || {
+        black_box(request_to_line(&ask));
+    });
+    let line = "{\"v\":\"hyppo-serve-v1\",\"type\":\"error\",\
+                \"code\":\"duplicate-tell\",\
+                \"message\":\"eval 12 trial 1 already recorded\"}";
+    run.bench("proto_decode_error_line", || {
+        black_box(response_from_line(line).expect("valid line"));
+    });
+
+    // Durability price: run a WAL-backed fleet once (live), then
+    // rebuild the whole service from the logs alone (replay). The
+    // ratio is the headline `derived` metric; one-shot wall times are
+    // the honest measure here since both sides do real fsyncs exactly
+    // once.
+    let dir = std::env::temp_dir()
+        .join(format!("hyppo_bench_serve_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = ServeConfig {
+        wal_dir: Some(dir.clone()),
+        ..ServeConfig::default()
+    };
+    let fleet16 = studies(16, 41_000);
+    let live = Instant::now();
+    let service = drive(cfg.clone(), &fleet16, 4);
+    let live_s = live.elapsed().as_secs_f64();
+    drop(service);
+
+    let replay = Instant::now();
+    let recovered = Service::recover(cfg, VirtualClock::shared())
+        .expect("recovery from WAL");
+    let replay_s = replay.elapsed().as_secs_f64();
+    for (name, _) in &fleet16 {
+        assert!(
+            recovered.history(name).is_some(),
+            "study {name} lost in replay"
+        );
+    }
+    println!(
+        "   wal live run {live_s:.3}s, replay {replay_s:.3}s \
+         (16 studies, 2 shards)"
+    );
+    run.metric("serve_replay_overhead", replay_s / live_s);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    run.finish().expect("writing bench json");
+}

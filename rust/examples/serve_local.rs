@@ -1,0 +1,129 @@
+//! CI smoke for the serve subsystem: four studies across a two-shard
+//! in-process service, driven end to end by the local worker-pool
+//! backend, then checked — every study complete, and bit-identical to
+//! its solo bare-`Session` reference run. Exits nonzero on any
+//! divergence, so the `serve-smoke` CI job can gate on it.
+//!
+//! Run with:
+//!
+//! ```sh
+//! cargo run --release --example serve_local
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use hyppo::config;
+use hyppo::eval::synthetic::SyntheticEvaluator;
+use hyppo::eval::Evaluator;
+use hyppo::exec::Session;
+use hyppo::serve::{
+    run_local, ServeConfig, Service, ShardPool, VirtualClock,
+};
+
+fn study_toml(seed: u64) -> String {
+    format!(
+        "[hpo]\n\
+         max_evaluations = 8\n\
+         n_init = 3\n\
+         n_trials = 2\n\
+         surrogate = \"rbf\"\n\
+         seed = {seed}\n\
+         \n\
+         [space]\n\
+         lr = {{ kind = \"continuous\", lo = 1e-4, hi = 1e-1, log = true }}\n\
+         width = [4, 64]\n"
+    )
+}
+
+/// The solo reference: a bare session driven sequentially.
+fn reference_best(config_toml: &str) -> Result<(usize, f64)> {
+    let cfg = config::build(&config::parse(config_toml)?)?;
+    let ev =
+        SyntheticEvaluator::new(cfg.space.clone(), cfg.hpo.seed);
+    let mut session = Session::new(&ev, &cfg.hpo);
+    while !session.is_complete() {
+        let job = session
+            .ask_eval()
+            .context("sequential loop never waits")?;
+        for trial in job.trials.clone() {
+            let outcome = ev.run_trial(&job.theta, trial, job.seed);
+            session.tell(job.id, trial, outcome)?;
+        }
+    }
+    let gamma = cfg.hpo.gamma;
+    let best = session
+        .history()
+        .best(gamma)
+        .context("non-empty history")?;
+    Ok((best.id, best.objective(gamma)))
+}
+
+fn main() -> Result<()> {
+    let studies: Vec<(String, String)> = (0..4)
+        .map(|i| (format!("smoke-{i}"), study_toml(1000 + i)))
+        .collect();
+
+    let cfg = ServeConfig {
+        n_shards: 2,
+        lease_ms: 60_000,
+        compact_every: 0,
+        wal_dir: None,
+    };
+    let service = Service::new(cfg, VirtualClock::shared())?;
+    let pool = Arc::new(ShardPool::new(service, 10));
+
+    println!(
+        "serve_local: 4 studies over 2 shards, 2 in-process workers"
+    );
+    let reports = run_local(&pool, &studies, 2)?;
+    for r in &reports {
+        println!(
+            "  worker {}: {} asks, {} tells, studies done: {}",
+            r.worker,
+            r.asks,
+            r.tells,
+            r.studies_done.join(" ")
+        );
+    }
+    let done: usize = reports.iter().map(|r| r.studies_done.len()).sum();
+    if done != studies.len() {
+        bail!("{done}/{} studies completed", studies.len());
+    }
+
+    let service = match Arc::try_unwrap(pool) {
+        Ok(pool) => pool.shutdown()?,
+        Err(_) => bail!("worker threads still hold the pool"),
+    };
+    for (name, toml) in &studies {
+        let hist = service
+            .history(name)
+            .with_context(|| format!("history of {name}"))?;
+        let cfg = config::build(&config::parse(toml)?)?;
+        let gamma = cfg.hpo.gamma;
+        let best = hist.best(gamma).context("non-empty history")?;
+        let (ref_id, ref_obj) = reference_best(toml)?;
+        println!(
+            "  {name}: shard {:?}, {} evaluations, best #{} = {:.6e}",
+            service.shard_of(name),
+            hist.len(),
+            best.id,
+            best.objective(gamma)
+        );
+        if best.id != ref_id
+            || best.objective(gamma).to_bits() != ref_obj.to_bits()
+        {
+            bail!(
+                "{name} diverged from its bare-session reference: \
+                 service best #{} {:.6e}, reference #{} {:.6e}",
+                best.id,
+                best.objective(gamma),
+                ref_id,
+                ref_obj
+            );
+        }
+    }
+    println!("serve_local: OK (all studies bit-match their references)");
+    Ok(())
+}

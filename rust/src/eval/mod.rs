@@ -60,6 +60,31 @@ pub trait Evaluator: Send + Sync {
     }
 }
 
+/// A shared reference to an evaluator is itself an evaluator (delegating
+/// every method), so `Box<&dyn Evaluator>` coerces to `Box<dyn Evaluator>`
+/// and callers that only hold a borrow can feed APIs that want ownership
+/// (`exec::Session::new` boxes the borrowed evaluator through exactly
+/// this impl; the `serve` shards pass genuinely owned boxes instead).
+impl<T: Evaluator + ?Sized> Evaluator for &T {
+    fn space(&self) -> &Space {
+        (**self).space()
+    }
+    fn run_trial(&self, theta: &[Value], trial: usize, seed: u64)
+        -> TrialOutcome {
+        (**self).run_trial(theta, trial, seed)
+    }
+    fn n_params(&self, theta: &[Value]) -> u64 {
+        (**self).n_params(theta)
+    }
+    fn loss_of_mean_prediction(
+        &self,
+        theta: &[Value],
+        mu: &[f64],
+    ) -> Option<f64> {
+        (**self).loss_of_mean_prediction(theta, mu)
+    }
+}
+
 /// Aggregated evaluation of one θ (paper Feature 1): CI over the outer
 /// loss plus the variability measures driving Eq. (8)/(9).
 #[derive(Debug, Clone)]

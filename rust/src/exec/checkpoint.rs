@@ -226,23 +226,16 @@ impl Checkpoint {
         Self::from_json_str(&self.to_json_string())
     }
 
-    /// Atomically write the checkpoint: serialize to `<path>.tmp`, then
-    /// rename over `path`, so a kill mid-write never corrupts the last
-    /// good snapshot.
+    /// Atomically and durably write the checkpoint: serialize to
+    /// `<path>.tmp`, `fsync`, rename over `path`, then `fsync` the
+    /// parent directory ([`crate::util::fsio::atomic_write_sync`]), so a
+    /// kill at any point — including between the rename and the
+    /// directory sync — never corrupts or loses the last good snapshot.
     pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
-        let path = path.as_ref();
-        if let Some(dir) = path.parent() {
-            if !dir.as_os_str().is_empty() {
-                std::fs::create_dir_all(dir)
-                    .with_context(|| format!("mkdir {}", dir.display()))?;
-            }
-        }
-        let tmp = path.with_extension("tmp");
-        std::fs::write(&tmp, self.to_json_string())
-            .with_context(|| format!("writing {}", tmp.display()))?;
-        std::fs::rename(&tmp, path)
-            .with_context(|| format!("renaming into {}", path.display()))?;
-        Ok(())
+        crate::util::fsio::atomic_write_sync(
+            path.as_ref(),
+            self.to_json_string().as_bytes(),
+        )
     }
 
     /// Load a checkpoint from disk.

@@ -31,5 +31,7 @@ pub use driver::{
     resume_experiment, run_experiment, CheckpointPolicy, ExecConfig,
     ExecOutcome, ExecStats, DEFAULT_MAX_RETRIES,
 };
-pub use session::{Ask, EvalJob, Session, Told, Trial, TrialKind};
+pub use session::{
+    Ask, EvalJob, Session, TellCheck, Told, Trial, TrialKind,
+};
 pub use sweep::{run_sweep, SweepCell};

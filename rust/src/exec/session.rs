@@ -132,6 +132,23 @@ pub struct Told {
     pub extended: usize,
 }
 
+/// What a [`Session::tell`] for `(eval_id, trial)` would do — the typed
+/// pre-flight the service boundary (`serve::shard`) uses to reject
+/// duplicate or misaddressed deliveries with a protocol error code
+/// instead of string-matching `tell`'s error text.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TellCheck {
+    /// The outcome would be absorbed.
+    Accept,
+    /// No pending *or recorded* evaluation has this id.
+    UnknownEval,
+    /// The trial index is outside the evaluation's planned set.
+    BadTrial,
+    /// The outcome was already delivered (or the whole evaluation is
+    /// already recorded) — a redelivery to reject idempotently.
+    Duplicate,
+}
+
 /// One in-flight evaluation: its serializable identity plus the trial
 /// bookkeeping that lives only between `ask` and `tell`.
 #[derive(Debug, Clone)]
@@ -169,7 +186,7 @@ impl PendingEval {
 /// The pure ask/tell experiment core. See the module docs for the state
 /// machine; see `exec::driver` for the threaded shell.
 pub struct Session<'ev> {
-    evaluator: &'ev dyn Evaluator,
+    evaluator: Box<dyn Evaluator + 'ev>,
     hpo: HpoConfig,
     space: Space,
     rng: Rng,
@@ -190,10 +207,21 @@ impl<'ev> Session<'ev> {
     /// `space()`, `n_params()`, `loss_of_mean_prediction()` — never for
     /// `run_trial`; running trials is the caller's job.
     pub fn new(evaluator: &'ev dyn Evaluator, hpo: &HpoConfig) -> Self {
+        Self::new_boxed(Box::new(evaluator), hpo)
+    }
+
+    /// [`Session::new`] taking ownership of the evaluator. A
+    /// `Box<dyn Evaluator>` (`'ev = 'static`) makes the session
+    /// free-standing — the form the `serve` shards need to own a fleet
+    /// of sessions whose studies come and go dynamically.
+    pub fn new_boxed(
+        evaluator: Box<dyn Evaluator + 'ev>,
+        hpo: &HpoConfig,
+    ) -> Self {
         let mut s = Session {
+            space: evaluator.space().clone(),
             evaluator,
             hpo: hpo.clone(),
-            space: evaluator.space().clone(),
             rng: Rng::new(hpo.seed),
             next_id: 0,
             iter: 0,
@@ -212,6 +240,16 @@ impl<'ev> Session<'ev> {
     /// configuration matches.
     pub fn restore(
         evaluator: &'ev dyn Evaluator,
+        hpo: &HpoConfig,
+        ckpt: Checkpoint,
+    ) -> Result<Self> {
+        Self::restore_boxed(Box::new(evaluator), hpo, ckpt)
+    }
+
+    /// [`Session::restore`] taking ownership of the evaluator (see
+    /// [`Session::new_boxed`]).
+    pub fn restore_boxed(
+        evaluator: Box<dyn Evaluator + 'ev>,
         hpo: &HpoConfig,
         ckpt: Checkpoint,
     ) -> Result<Self> {
@@ -510,7 +548,7 @@ impl<'ev> Session<'ev> {
             .map(|o| o.expect("recorded evaluation is complete"))
             .collect();
         let summary = aggregate(
-            self.evaluator,
+            &*self.evaluator,
             &p.job.theta,
             &outcomes,
             self.hpo.weights,
@@ -570,6 +608,55 @@ impl<'ev> Session<'ev> {
     /// The problem configuration the session was built with.
     pub fn hpo(&self) -> &HpoConfig {
         &self.hpo
+    }
+
+    /// The search space the session was built over.
+    pub fn space(&self) -> &Space {
+        &self.space
+    }
+
+    /// Ids of evaluations created but not yet recorded, in FIFO order.
+    pub fn pending_ids(&self) -> Vec<usize> {
+        self.pending.iter().map(|p| p.job.id).collect()
+    }
+
+    /// Pending evaluations whose trials were handed out but whose set is
+    /// not yet complete — the evaluations some executor still owes
+    /// outcomes for. After a crash no executor will answer: recovery
+    /// ([`serve`](crate::serve)) requeues exactly this set.
+    pub fn outstanding_ids(&self) -> Vec<usize> {
+        self.pending
+            .iter()
+            .filter(|p| p.handed > 0 && !p.buffered)
+            .map(|p| p.job.id)
+            .collect()
+    }
+
+    /// Classify what [`Session::tell`] would do with `(eval_id, trial)`,
+    /// without mutating anything.
+    pub fn check_tell(&self, eval_id: usize, trial: usize) -> TellCheck {
+        match self.pending.iter().find(|p| p.job.id == eval_id) {
+            Some(p) if trial >= p.planned => TellCheck::BadTrial,
+            Some(p) => {
+                let delivered = p
+                    .outcomes
+                    .get(trial)
+                    .map(|o| o.is_some())
+                    .unwrap_or(false);
+                if delivered || p.buffered {
+                    TellCheck::Duplicate
+                } else {
+                    TellCheck::Accept
+                }
+            }
+            None => {
+                if self.history.records.iter().any(|r| r.id == eval_id) {
+                    TellCheck::Duplicate
+                } else {
+                    TellCheck::UnknownEval
+                }
+            }
+        }
     }
 }
 

@@ -18,6 +18,7 @@ pub mod optimizer;
 pub mod report;
 pub mod runtime;
 pub mod sampling;
+pub mod serve;
 pub mod space;
 pub mod surrogate;
 pub mod tomo;

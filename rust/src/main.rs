@@ -10,6 +10,9 @@
 //!   speedup    print the Fig. 8-style virtual-time speedup for a topology
 //!   simulate   run the fault-injected virtual cluster (chaos testbed)
 //!              over a config + fault plan, reporting queueing metrics
+//!   serve      run the sharded multi-study HPO service (write-ahead
+//!              logged, ask/tell wire protocol over TCP)
+//!   worker     connect to a `hyppo serve` endpoint and run trials
 //!
 //! See README.md for a walkthrough and DESIGN.md for the architecture.
 
@@ -34,6 +37,11 @@ use hyppo::exec::{
 use hyppo::optimizer::{AdaptiveTrials, History};
 use hyppo::report::{print_table, write_history_csv, write_sweep_csv};
 use hyppo::runtime::{artifact_dir, SharedEngine};
+use hyppo::serve::{
+    serve_listener, worker_loop, ErrorCode, Request, Response,
+    ServeConfig, Service, ShardPool, SystemClock, TcpClient,
+    PROTO_VERSION,
+};
 use hyppo::util::cli::Args;
 
 const USAGE: &str = "\
@@ -54,6 +62,10 @@ USAGE:
   hyppo speedup [--steps N] [--tasks M] [--evals E] [--trials T]
   hyppo simulate --config <file.toml> [--faults plan.toml]
             [--steps N] [--tasks M] [--max-retries R] [--json out.json]
+  hyppo serve --config <serve.toml> [--listen HOST:PORT]
+            [--shards N] [--wal DIR]
+  hyppo worker [--connect HOST:PORT] [--worker-id ID]
+            [--studies a,b,c]
   hyppo help
 ";
 
@@ -67,6 +79,8 @@ fn main() {
         "artifacts" => cmd_artifacts(&args),
         "speedup" => cmd_speedup(&args),
         "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
         "help" | "--help" => {
             print!("{USAGE}");
             Ok(())
@@ -573,6 +587,98 @@ fn cmd_speedup(args: &Args) -> Result<()> {
         steps * tasks,
         r.makespan,
         speedup(&evals, &cfg)
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg_path = args
+        .get("config")
+        .context("--config <serve.toml> is required")?;
+    let doc = hyppo::config::load_doc(std::path::Path::new(cfg_path))?;
+    let mut cfg = ServeConfig::from_doc(&doc)?;
+    if let Some(n) = args.get("shards") {
+        cfg.n_shards = n.parse().context("--shards: expected integer")?;
+        if cfg.n_shards == 0 {
+            bail!("--shards must be >= 1");
+        }
+    }
+    if let Some(dir) = args.get("wal") {
+        cfg.wal_dir = Some(dir.into());
+    }
+    let studies = ServeConfig::studies_from_doc(&doc)?;
+    let clock = SystemClock::shared();
+    let mut service = Service::open(cfg.clone(), clock)?;
+    for (name, path) in &studies {
+        let text = std::fs::read_to_string(path).with_context(|| {
+            format!("reading study config {path} for {name:?}")
+        })?;
+        let resp = service.handle(&Request::CreateStudy {
+            study: name.clone(),
+            config_toml: text,
+        });
+        match resp {
+            Response::Created { .. } => println!("study {name}: created"),
+            Response::Error {
+                code: ErrorCode::DuplicateStudy, ..
+            } => println!("study {name}: recovered from WAL"),
+            Response::Error { code, message } => bail!(
+                "creating study {name:?} failed: {}: {message}",
+                code.as_str()
+            ),
+            other => bail!("unexpected create reply: {other:?}"),
+        }
+    }
+    let listen = args.str_or("listen", "127.0.0.1:7077");
+    // Quarter-lease ticks keep expiry resolution well under the lease.
+    let tick_ms = (cfg.lease_ms / 4).max(1);
+    let pool = Arc::new(ShardPool::new(service, tick_ms));
+    let listener = std::net::TcpListener::bind(&listen)
+        .with_context(|| format!("binding {listen}"))?;
+    println!(
+        "hyppo serve: {} shard(s), {} stud(ies), listening on {listen} \
+         [{PROTO_VERSION}]",
+        pool.n_shards(),
+        studies.len(),
+    );
+    serve_listener(listener, pool)
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args.str_or("connect", "127.0.0.1:7077");
+    let worker = args.str_or("worker-id", "w0");
+    let mut client = TcpClient::connect(&addr)?;
+    let studies: Vec<String> = match args.get("studies") {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        None => {
+            match hyppo::serve::Client::call(
+                &mut client,
+                &Request::ListStudies,
+            )? {
+                Response::Studies { studies } => studies,
+                other => bail!("unexpected list reply: {other:?}"),
+            }
+        }
+    };
+    if studies.is_empty() {
+        bail!(
+            "no studies to drive; pass --studies or add [studies] to \
+             the serve config"
+        );
+    }
+    println!("worker {worker}: driving {}", studies.join(", "));
+    let report = worker_loop(&mut client, &worker, &studies)?;
+    println!(
+        "worker {}: {} evaluations leased, {} outcomes delivered, \
+         {} studies completed",
+        report.worker,
+        report.asks,
+        report.tells,
+        report.studies_done.len()
     );
     Ok(())
 }

@@ -1,0 +1,92 @@
+//! Injected time for the service's lease machinery (DESIGN.md §15).
+//!
+//! Every wall-clock read the `serve` subsystem performs flows through
+//! the [`Clock`] trait: the shard cores compare lease deadlines against
+//! `now_ms()` and never touch `Instant`/`SystemTime` themselves (palint's
+//! `det-wall-clock` rule bans those identifiers from `serve::shard`,
+//! `serve::wal`, `serve::proto`, and `serve::service`; this file is the
+//! one deliberate exception). Tests and the deterministic interleaving
+//! proofs drive a [`VirtualClock`] by hand; the TCP/process shells
+//! install a [`SystemClock`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A monotonically non-decreasing millisecond counter. The zero point is
+/// arbitrary (process start, simulation start) — only differences are
+/// ever compared, so leases need no epoch.
+pub trait Clock: Send + Sync {
+    /// Milliseconds elapsed since the clock's origin.
+    fn now_ms(&self) -> u64;
+}
+
+/// Deterministic clock: time moves only when the owner says so. The
+/// virtual scheduler in `tests/serve.rs` advances it between commands,
+/// making lease expiry (and therefore heartbeat-timeout requeues) part
+/// of the reproducible command stream.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    now_ms: AtomicU64,
+}
+
+impl VirtualClock {
+    /// A shared clock starting at 0 ms.
+    pub fn shared() -> Arc<VirtualClock> {
+        Arc::new(VirtualClock::default())
+    }
+
+    /// Move time forward by `ms`.
+    pub fn advance(&self, ms: u64) {
+        self.now_ms.fetch_add(ms, Ordering::SeqCst);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_ms(&self) -> u64 {
+        self.now_ms.load(Ordering::SeqCst)
+    }
+}
+
+/// Real time for the TCP/process shells: milliseconds since the clock
+/// was created, read from the OS monotonic clock (immune to NTP steps —
+/// a lease granted for 5 s means 5 s of real time, not of calendar).
+#[derive(Debug)]
+pub struct SystemClock {
+    origin: std::time::Instant,
+}
+
+impl SystemClock {
+    /// A shared clock whose origin is now.
+    pub fn shared() -> Arc<SystemClock> {
+        Arc::new(SystemClock { origin: std::time::Instant::now() })
+    }
+}
+
+impl Clock for SystemClock {
+    fn now_ms(&self) -> u64 {
+        u64::try_from(self.origin.elapsed().as_millis())
+            .unwrap_or(u64::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_advances_only_on_demand() {
+        let c = VirtualClock::shared();
+        assert_eq!(c.now_ms(), 0);
+        c.advance(250);
+        c.advance(50);
+        assert_eq!(c.now_ms(), 300);
+    }
+
+    #[test]
+    fn system_clock_is_monotone() {
+        let c = SystemClock::shared();
+        let a = c.now_ms();
+        let b = c.now_ms();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,207 @@
+//! Worker loop and in-process worker pool (DESIGN.md §15).
+//!
+//! [`worker_loop`] is the reference trial worker, written against the
+//! transport-agnostic [`Client`] trait so the identical loop drives an
+//! in-process [`PoolClient`](crate::serve::pool::PoolClient) (tests,
+//! CI smoke, benches) or a [`TcpClient`](crate::serve::net::TcpClient)
+//! (`hyppo worker`). It self-configures from the service: `status`
+//! returns the study's config document, from which the worker builds
+//! the same deterministic [`SyntheticEvaluator`] the server used for
+//! its search space — so outcomes are exactly what a server-side run
+//! would have produced, and the bit-identity proofs in
+//! `tests/serve.rs` can compare against a bare `exec::Session` loop.
+//!
+//! [`run_local`] is the process-pool backend: M worker threads over
+//! one shard pool, each study assigned to exactly one worker
+//! (`study index mod M`). One worker per study keeps each study's
+//! command arrival order — and therefore its result — deterministic;
+//! multiple workers per study are supported by the protocol (leases
+//! make it safe) but race on arrival order, like any asynchronous
+//! optimizer.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config;
+use crate::eval::synthetic::SyntheticEvaluator;
+use crate::eval::Evaluator;
+use crate::serve::pool::{PoolClient, ShardPool};
+use crate::serve::proto::{Client, ErrorCode, Request, Response};
+
+/// What one worker did, for logs and smoke checks.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerReport {
+    /// Worker id.
+    pub worker: String,
+    /// Evaluations leased.
+    pub asks: usize,
+    /// Outcomes delivered and accepted.
+    pub tells: usize,
+    /// Deliveries the service rejected as duplicates (redelivery
+    /// drills; 0 in a clean run).
+    pub duplicate_tells: usize,
+    /// Studies this worker drove to completion (`done` from ask).
+    pub studies_done: Vec<String>,
+}
+
+fn evaluator_for(config_toml: &str) -> Result<SyntheticEvaluator> {
+    let doc = config::parse(config_toml).context("study config")?;
+    let cfg = config::build(&doc).context("study config")?;
+    Ok(SyntheticEvaluator::new(cfg.space.clone(), cfg.hpo.seed))
+}
+
+/// Drive `studies` to completion through `client`. Round-robins over
+/// the studies, heartbeating each pass, until every study reports
+/// `done`.
+pub fn worker_loop(
+    client: &mut dyn Client,
+    worker: &str,
+    studies: &[String],
+) -> Result<WorkerReport> {
+    let mut report = WorkerReport {
+        worker: worker.to_string(),
+        ..WorkerReport::default()
+    };
+    // Self-configure: fetch each study's config and build its
+    // deterministic evaluator.
+    let mut evs: BTreeMap<String, SyntheticEvaluator> = BTreeMap::new();
+    for study in studies {
+        let resp = client.call(&Request::StudyStatus {
+            study: study.clone(),
+        })?;
+        match resp {
+            Response::Status { config_toml, .. } => {
+                evs.insert(study.clone(), evaluator_for(&config_toml)?);
+            }
+            Response::Error { code, message } => bail!(
+                "status of {study:?} failed: {}: {message}",
+                code.as_str()
+            ),
+            other => bail!("unexpected status reply: {other:?}"),
+        }
+    }
+    let mut done: BTreeMap<&str, bool> =
+        studies.iter().map(|s| (s.as_str(), false)).collect();
+    while done.values().any(|d| !d) {
+        let mut progressed = false;
+        for study in studies {
+            if done.get(study.as_str()).copied().unwrap_or(true) {
+                continue;
+            }
+            client.call(&Request::Heartbeat {
+                study: study.clone(),
+                worker: worker.to_string(),
+            })?;
+            let resp = client.call(&Request::Ask {
+                study: study.clone(),
+                worker: worker.to_string(),
+            })?;
+            let job = match resp {
+                Response::Asked { job: Some(job), .. } => job,
+                Response::Asked { job: None, done: true, .. } => {
+                    done.insert(study.as_str(), true);
+                    report.studies_done.push(study.clone());
+                    progressed = true;
+                    continue;
+                }
+                Response::Asked { job: None, done: false, .. } => {
+                    // Another worker's lease is in flight; back off.
+                    continue;
+                }
+                Response::Error { code, message } => bail!(
+                    "ask on {study:?} failed: {}: {message}",
+                    code.as_str()
+                ),
+                other => bail!("unexpected ask reply: {other:?}"),
+            };
+            report.asks += 1;
+            progressed = true;
+            let ev = evs
+                .get(study.as_str())
+                .ok_or_else(|| anyhow!("no evaluator for {study:?}"))?;
+            for trial in &job.trials {
+                let outcome = ev.run_trial(&job.theta, *trial, job.seed);
+                let resp = client.call(&Request::Tell {
+                    study: study.clone(),
+                    worker: worker.to_string(),
+                    eval_id: job.eval_id,
+                    trial: *trial,
+                    outcome,
+                })?;
+                match resp {
+                    Response::Told { .. } => report.tells += 1,
+                    Response::Error {
+                        code: ErrorCode::DuplicateTell,
+                        ..
+                    } => report.duplicate_tells += 1,
+                    Response::Error { code, message } => bail!(
+                        "tell on {study:?} eval {} trial {trial} \
+                         failed: {}: {message}",
+                        job.eval_id,
+                        code.as_str()
+                    ),
+                    other => bail!("unexpected tell reply: {other:?}"),
+                }
+            }
+        }
+        if !progressed {
+            // Every incomplete study is waiting on someone else's
+            // lease; yield rather than hot-spin.
+            std::thread::yield_now();
+        }
+    }
+    Ok(report)
+}
+
+/// The process-pool backend: create `studies` on `pool`, then drive
+/// them with `n_workers` threads, study *i* owned by worker *i* mod
+/// `n_workers` (deterministic per-study command order — see module
+/// docs).
+pub fn run_local(
+    pool: &Arc<ShardPool>,
+    studies: &[(String, String)],
+    n_workers: usize,
+) -> Result<Vec<WorkerReport>> {
+    if n_workers == 0 {
+        bail!("run_local needs at least one worker");
+    }
+    for (study, config_toml) in studies {
+        let resp = pool.call(&Request::CreateStudy {
+            study: study.clone(),
+            config_toml: config_toml.clone(),
+        });
+        match resp {
+            Response::Created { .. } => {}
+            Response::Error { code, message } => bail!(
+                "create {study:?} failed: {}: {message}",
+                code.as_str()
+            ),
+            other => bail!("unexpected create reply: {other:?}"),
+        }
+    }
+    let handles: Vec<_> = (0..n_workers)
+        .map(|w| {
+            let assigned: Vec<String> = studies
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % n_workers == w)
+                .map(|(_, (name, _))| name.clone())
+                .collect();
+            let pool = Arc::clone(pool);
+            std::thread::spawn(move || {
+                let mut client = PoolClient::new(pool);
+                worker_loop(&mut client, &format!("w{w}"), &assigned)
+            })
+        })
+        .collect();
+    let mut reports = Vec::with_capacity(handles.len());
+    for h in handles {
+        let report = h
+            .join()
+            .map_err(|_| anyhow!("a worker thread panicked"))??;
+        reports.push(report);
+    }
+    Ok(reports)
+}

@@ -1,0 +1,49 @@
+//! `serve`: the sharded multi-study HPO service (DESIGN.md §15).
+//!
+//! Layers, inside out:
+//!
+//! * [`shard`] — the single-owner state machine: a [`ShardCore`] owns a
+//!   disjoint set of studies (each an `exec::Session` plus a lease
+//!   table) and processes commands one at a time. Determinism contract:
+//!   same commands, same order, same clock readings → bit-identical
+//!   sessions.
+//! * [`wal`] — per-shard write-ahead log: every state-changing command
+//!   (asks included — they advance the RNG) is a durable
+//!   length-prefixed JSON record; replay rebuilds the shard
+//!   bit-for-bit, snapshot+truncate compaction bounds the log, and the
+//!   snapshot unit doubles as the migration hand-off.
+//! * [`proto`] — the versioned (`hyppo-serve-v1`) line-delimited JSON
+//!   ask/tell wire protocol and the transport-agnostic [`Client`]
+//!   trait.
+//! * [`service`] — N shards plus FNV-1a routing, recovery, and
+//!   migration; [`pool`] — the threaded shell (one owning thread and
+//!   FIFO queue per shard); [`net`] — the TCP accept loop and client;
+//!   [`local`] — the reference worker loop and in-process worker pool.
+//! * [`clock`] — injected time ([`Clock`]): lease expiry is driven by
+//!   a [`VirtualClock`] in tests (making timeouts part of the
+//!   reproducible command stream) and a [`SystemClock`] in production.
+//!
+//! Entry points: `hyppo serve` (TCP server) and `hyppo worker` (remote
+//! trial worker); `tests/serve.rs` proves crash-replay and
+//! service-vs-bare-session bit-identity.
+
+pub mod clock;
+pub mod local;
+pub mod net;
+pub mod pool;
+pub mod proto;
+pub mod service;
+pub mod shard;
+pub mod wal;
+
+pub use clock::{Clock, SystemClock, VirtualClock};
+pub use local::{run_local, worker_loop, WorkerReport};
+pub use net::{serve_listener, TcpClient};
+pub use pool::{PoolClient, ShardPool};
+pub use proto::{
+    Client, ErrorCode, Request, Response, WireBest, WireJob,
+    PROTO_VERSION,
+};
+pub use service::{route, ServeConfig, Service};
+pub use shard::{Lease, ShardCore, ShardCounters};
+pub use wal::{ShardSnapshot, StudySnapshot, Wal, WalRecord};

@@ -1,0 +1,102 @@
+//! TCP transport for the `hyppo-serve-v1` protocol (DESIGN.md §15).
+//!
+//! The server is an accept loop handing each connection its own
+//! thread; every request line is routed through the shared
+//! [`ShardPool`], so per-shard FIFO ordering (and therefore
+//! determinism and WAL consistency) is enforced by the pool, not the
+//! socket layer. Malformed lines get a typed `protocol` error reply
+//! and the connection stays up — a flaky worker can't poison the
+//! service.
+//!
+//! [`TcpClient`] is the matching [`Client`] implementation: one
+//! request line out, one response line back, blocking.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::serve::pool::ShardPool;
+use crate::serve::proto::{
+    request_from_line, request_to_line, response_from_line,
+    response_to_line, Client, ErrorCode, Request, Response,
+};
+
+/// Serve one established connection until the peer hangs up.
+pub fn handle_conn(stream: TcpStream, pool: &ShardPool) -> Result<()> {
+    let reader = BufReader::new(stream.try_clone().context("clone stream")?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line.context("reading request line")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match request_from_line(&line) {
+            Ok(req) => pool.call(&req),
+            Err(e) => {
+                Response::error(ErrorCode::Protocol, format!("{e:#}"))
+            }
+        };
+        let mut out = response_to_line(&resp);
+        out.push('\n');
+        writer
+            .write_all(out.as_bytes())
+            .context("writing response line")?;
+    }
+    Ok(())
+}
+
+/// Accept loop: one thread per connection, all sharing `pool`. Runs
+/// until the listener errors (normally: forever).
+pub fn serve_listener(
+    listener: TcpListener,
+    pool: Arc<ShardPool>,
+) -> Result<()> {
+    for conn in listener.incoming() {
+        let stream = conn.context("accepting connection")?;
+        let pool = Arc::clone(&pool);
+        std::thread::spawn(move || {
+            // Peer disconnects are routine; real errors surface when a
+            // test or operator inspects the shard state instead.
+            let _ = handle_conn(stream, &pool);
+        });
+    }
+    Ok(())
+}
+
+/// Blocking line-protocol client over TCP.
+pub struct TcpClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl TcpClient {
+    /// Connect to a `hyppo serve` endpoint, e.g. `127.0.0.1:7077`.
+    pub fn connect(addr: &str) -> Result<TcpClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to {addr}"))?;
+        let reader =
+            BufReader::new(stream.try_clone().context("clone stream")?);
+        Ok(TcpClient { reader, writer: stream })
+    }
+}
+
+impl Client for TcpClient {
+    fn call(&mut self, req: &Request) -> Result<Response> {
+        let mut line = request_to_line(req);
+        line.push('\n');
+        self.writer
+            .write_all(line.as_bytes())
+            .context("sending request")?;
+        let mut buf = String::new();
+        let n = self
+            .reader
+            .read_line(&mut buf)
+            .context("awaiting response")?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        response_from_line(&buf)
+    }
+}

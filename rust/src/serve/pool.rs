@@ -1,0 +1,203 @@
+//! Threaded shard shell: one owning thread per shard, FIFO command
+//! queues (DESIGN.md §15).
+//!
+//! [`ShardPool`] decomposes a [`Service`] into its shard cores, parks
+//! each on its own thread behind an `mpsc` channel, and routes
+//! commands by the shared routing table. Because a shard's channel is
+//! FIFO and its core is single-owner, the pool preserves the service's
+//! determinism contract *per shard*: commands that arrive in the same
+//! order produce the same state, byte for byte. Cross-shard ordering
+//! is whatever the transport delivers — studies never share state, so
+//! that is unobservable.
+//!
+//! Threads idle on `recv_timeout`; a timeout fires the core's `tick`
+//! (lease expiry, due compactions) so worker death is noticed without
+//! traffic. `shutdown` reassembles the cores into a [`Service`] for
+//! inspection — the chaos tests compare post-shutdown state against
+//! reference runs.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::serve::proto::{Client, ErrorCode, Request, Response};
+use crate::serve::service::{route, Service};
+use crate::serve::shard::ShardCore;
+
+enum Cmd {
+    Req(Request, mpsc::Sender<Response>),
+    Shutdown,
+}
+
+struct ShardThread {
+    sender: mpsc::Sender<Cmd>,
+    handle: JoinHandle<ShardCore>,
+}
+
+/// The running, threaded form of a [`Service`].
+pub struct ShardPool {
+    threads: Vec<ShardThread>,
+    routes: Mutex<BTreeMap<String, usize>>,
+    cfg: crate::serve::service::ServeConfig,
+    clock: Arc<dyn crate::serve::clock::Clock>,
+}
+
+fn shard_main(mut core: ShardCore, rx: mpsc::Receiver<Cmd>, tick_ms: u64) -> ShardCore {
+    loop {
+        match rx.recv_timeout(Duration::from_millis(tick_ms)) {
+            Ok(Cmd::Req(req, reply)) => {
+                let resp = core.handle(&req);
+                // A dropped reply sender means the caller gave up;
+                // the command still executed (and was logged).
+                let _ = reply.send(resp);
+            }
+            Ok(Cmd::Shutdown)
+            | Err(RecvTimeoutError::Disconnected) => return core,
+            Err(RecvTimeoutError::Timeout) => core.tick(),
+        }
+    }
+}
+
+fn lock_routes<'a>(
+    m: &'a Mutex<BTreeMap<String, usize>>,
+) -> std::sync::MutexGuard<'a, BTreeMap<String, usize>> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+impl ShardPool {
+    /// Spawn one owning thread per shard. `tick_ms` is the idle
+    /// maintenance interval (lease expiry resolution).
+    pub fn new(service: Service, tick_ms: u64) -> ShardPool {
+        let (cfg, clock, shards, routes) = service.into_parts();
+        let tick_ms = tick_ms.max(1);
+        let threads = shards
+            .into_iter()
+            .map(|core| {
+                let (tx, rx) = mpsc::channel();
+                let handle = std::thread::spawn(move || {
+                    shard_main(core, rx, tick_ms)
+                });
+                ShardThread { sender: tx, handle }
+            })
+            .collect();
+        ShardPool { threads, routes: Mutex::new(routes), cfg, clock }
+    }
+
+    /// Route one command to its shard's queue and wait for the reply.
+    pub fn call(&self, req: &Request) -> Response {
+        let target = match req {
+            Request::ListStudies => {
+                let routes = lock_routes(&self.routes);
+                return Response::Studies {
+                    studies: routes.keys().cloned().collect(),
+                };
+            }
+            Request::CreateStudy { study, .. } => {
+                let routes = lock_routes(&self.routes);
+                if routes.contains_key(study) {
+                    return Response::error(
+                        ErrorCode::DuplicateStudy,
+                        format!("study {study:?} already exists"),
+                    );
+                }
+                route(study, self.threads.len())
+            }
+            Request::Ask { study, .. }
+            | Request::Tell { study, .. }
+            | Request::Heartbeat { study, .. }
+            | Request::StudyStatus { study }
+            | Request::StopStudy { study } => {
+                match lock_routes(&self.routes).get(study) {
+                    Some(s) => *s,
+                    None => {
+                        return Response::error(
+                            ErrorCode::UnknownStudy,
+                            format!("no study {study:?} on this service"),
+                        )
+                    }
+                }
+            }
+        };
+        let Some(thread) = self.threads.get(target) else {
+            return Response::error(
+                ErrorCode::Internal,
+                format!("route to missing shard {target}"),
+            );
+        };
+        let (reply_tx, reply_rx) = mpsc::channel();
+        if thread.sender.send(Cmd::Req(req.clone(), reply_tx)).is_err() {
+            return Response::error(
+                ErrorCode::Internal,
+                format!("shard {target} thread is gone"),
+            );
+        }
+        let resp = match reply_rx.recv() {
+            Ok(r) => r,
+            Err(_) => {
+                return Response::error(
+                    ErrorCode::Internal,
+                    format!("shard {target} died mid-command"),
+                )
+            }
+        };
+        if let (Request::CreateStudy { study, .. }, Response::Created { .. }) =
+            (req, &resp)
+        {
+            lock_routes(&self.routes).insert(study.clone(), target);
+        }
+        resp
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.threads.len()
+    }
+
+    /// Drain the queues, join every shard thread, and reassemble the
+    /// [`Service`] for inspection.
+    pub fn shutdown(self) -> Result<Service> {
+        for t in &self.threads {
+            // A full queue drains first: Shutdown is FIFO like any
+            // other command.
+            let _ = t.sender.send(Cmd::Shutdown);
+        }
+        let mut shards = Vec::with_capacity(self.threads.len());
+        for t in self.threads {
+            let core = t
+                .handle
+                .join()
+                .map_err(|_| anyhow!("a shard thread panicked"))?;
+            shards.push(core);
+        }
+        let routes = match self.routes.into_inner() {
+            Ok(r) => r,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        Ok(Service::from_parts(self.cfg, self.clock, shards, routes))
+    }
+}
+
+/// In-process [`Client`]: calls go straight into the pool's queues.
+pub struct PoolClient {
+    pool: Arc<ShardPool>,
+}
+
+impl PoolClient {
+    /// A client handle onto `pool`.
+    pub fn new(pool: Arc<ShardPool>) -> PoolClient {
+        PoolClient { pool }
+    }
+}
+
+impl Client for PoolClient {
+    fn call(&mut self, req: &Request) -> Result<Response> {
+        Ok(self.pool.call(req))
+    }
+}

@@ -1,0 +1,688 @@
+//! `hyppo-serve-v1`: the versioned line-delimited JSON ask/tell wire
+//! protocol (DESIGN.md §15).
+//!
+//! One request or response per line, each a compact JSON object carrying
+//! a `"v"` envelope field (= [`PROTO_VERSION`]) and a `"type"` tag. The
+//! payload grammar reuses the checkpoint substrate — typed θ coordinates
+//! via `analysis::persistence`, `u64` values as decimal strings (the
+//! JSON substrate stores numbers as `f64`, which would round seeds above
+//! 2⁵³) — so any language with a JSON library can implement a trial
+//! worker.
+//!
+//! | request      | fields                                   | response |
+//! |--------------|------------------------------------------|----------|
+//! | `create`     | `study`, `config_toml`                   | `created`|
+//! | `ask`        | `study`, `worker`                        | `asked`  |
+//! | `tell`       | `study`, `worker`, `eval`, `trial`, `outcome` | `told` |
+//! | `heartbeat`  | `study`, `worker`                        | `beat`   |
+//! | `status`     | `study`                                  | `status` |
+//! | `stop`       | `study`                                  | `stopped`|
+//! | `list`       | —                                        | `studies`|
+//!
+//! Every request may instead yield an `error` response with a typed
+//! [`ErrorCode`]. The in-process [`Client`] trait abstracts the
+//! transport, so the same worker loop (`serve::local`) drives a shard
+//! pool directly or a TCP socket (`serve::net`).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::analysis::persistence::{value_from_json, value_to_json};
+use crate::eval::TrialOutcome;
+use crate::space::{Point, Value};
+use crate::util::json::{parse, write, Json};
+
+/// Protocol version tag carried by every message envelope. A server
+/// rejects mismatched versions with [`ErrorCode::Protocol`] rather than
+/// guessing at field semantics.
+pub const PROTO_VERSION: &str = "hyppo-serve-v1";
+
+/// Typed failure classes of the service boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// No study with that id exists on this service.
+    UnknownStudy,
+    /// `create` for a study id that already exists.
+    DuplicateStudy,
+    /// The study config failed to parse or build.
+    BadConfig,
+    /// `tell` for an evaluation the session never created.
+    UnknownEval,
+    /// `tell` with a trial index outside the evaluation's planned set.
+    BadTrial,
+    /// Redelivered `tell` (outcome already absorbed, or the whole
+    /// evaluation already recorded) — rejected idempotently.
+    DuplicateTell,
+    /// Admin command on a stopped study.
+    StudyStopped,
+    /// Malformed or version-mismatched message.
+    Protocol,
+    /// Service-side invariant failure (WAL write error, wedged shard).
+    Internal,
+}
+
+impl ErrorCode {
+    /// Stable wire identifier.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::UnknownStudy => "unknown-study",
+            ErrorCode::DuplicateStudy => "duplicate-study",
+            ErrorCode::BadConfig => "bad-config",
+            ErrorCode::UnknownEval => "unknown-eval",
+            ErrorCode::BadTrial => "bad-trial",
+            ErrorCode::DuplicateTell => "duplicate-tell",
+            ErrorCode::StudyStopped => "study-stopped",
+            ErrorCode::Protocol => "protocol",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    fn from_str(s: &str) -> Result<ErrorCode> {
+        Ok(match s {
+            "unknown-study" => ErrorCode::UnknownStudy,
+            "duplicate-study" => ErrorCode::DuplicateStudy,
+            "bad-config" => ErrorCode::BadConfig,
+            "unknown-eval" => ErrorCode::UnknownEval,
+            "bad-trial" => ErrorCode::BadTrial,
+            "duplicate-tell" => ErrorCode::DuplicateTell,
+            "study-stopped" => ErrorCode::StudyStopped,
+            "protocol" => ErrorCode::Protocol,
+            "internal" => ErrorCode::Internal,
+            other => return Err(anyhow!("unknown error code {other:?}")),
+        })
+    }
+}
+
+/// An evaluation-granular work lease handed to a worker by `ask`: run
+/// `trials` (usually the full set `0..planned`, or a single adaptive
+/// replica) for θ with the evaluation seed, and `tell` each outcome
+/// before the lease expires.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireJob {
+    /// Evaluation id (stable across requeue and crash-replay).
+    pub eval_id: usize,
+    /// The hyperparameter set under evaluation.
+    pub theta: Point,
+    /// The evaluation seed shared by all its trials.
+    pub seed: u64,
+    /// Trial indices to run.
+    pub trials: Vec<usize>,
+    /// Lease duration granted, in clock milliseconds; heartbeats renew.
+    pub lease_ms: u64,
+}
+
+/// A client → service command.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Register a study: `config_toml` is a full run-config document
+    /// (`[space]` + `[hpo]`), parsed server-side by `config::build`.
+    CreateStudy { study: String, config_toml: String },
+    /// Lease the next evaluation of `study` for `worker`.
+    Ask { study: String, worker: String },
+    /// Deliver one trial outcome.
+    Tell {
+        study: String,
+        worker: String,
+        eval_id: usize,
+        trial: usize,
+        outcome: TrialOutcome,
+    },
+    /// Renew every lease `worker` holds in `study`.
+    Heartbeat { study: String, worker: String },
+    /// Progress snapshot of a study.
+    StudyStatus { study: String },
+    /// Stop handing out work for a study (in-flight tells still drain).
+    StopStudy { study: String },
+    /// All study ids on the service, sorted.
+    ListStudies,
+}
+
+/// Best-evaluation summary inside a [`Response::Status`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireBest {
+    /// Evaluation id of the incumbent.
+    pub eval_id: usize,
+    /// Its γ-regulated objective value.
+    pub objective: f64,
+}
+
+/// A service → client reply.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Study registered.
+    Created { study: String },
+    /// `job` is the leased work; `None` with `done == false` means wait
+    /// (all work in flight), `None` with `done == true` means the study
+    /// is complete or stopped — the worker can move on.
+    Asked { study: String, job: Option<WireJob>, done: bool },
+    /// Outcome absorbed: how many evaluations it recorded and how many
+    /// adaptive replica trials it scheduled.
+    Told { recorded: usize, extended: usize },
+    /// Leases renewed for the heartbeating worker.
+    Beat { renewed: usize },
+    /// Study progress.
+    Status {
+        study: String,
+        recorded: usize,
+        in_flight: usize,
+        complete: bool,
+        stopped: bool,
+        best: Option<WireBest>,
+        config_toml: String,
+    },
+    /// Study stopped.
+    Stopped { study: String },
+    /// Sorted study ids.
+    Studies { studies: Vec<String> },
+    /// Typed failure.
+    Error { code: ErrorCode, message: String },
+}
+
+impl Response {
+    /// Shorthand for a typed error reply.
+    pub fn error(code: ErrorCode, message: impl Into<String>) -> Response {
+        Response::Error { code, message: message.into() }
+    }
+}
+
+/// Transport abstraction: the worker loop (`serve::local`) is written
+/// against this, so in-process shard pools and TCP sockets
+/// (`serve::net::TcpClient`) are interchangeable.
+pub trait Client {
+    /// Send one request and wait for its reply.
+    fn call(&mut self, req: &Request) -> Result<Response>;
+}
+
+// ---------------------------------------------------------------------
+// JSON encoding
+// ---------------------------------------------------------------------
+
+fn u64_to_json(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn u64_from_json(v: &Json, what: &str) -> Result<u64> {
+    let s = v
+        .as_str()
+        .with_context(|| format!("{what}: expected decimal string"))?;
+    s.parse::<u64>()
+        .map_err(|e| anyhow!("{what}: bad u64 {s:?}: {e}"))
+}
+
+fn usize_from_json(v: &Json, what: &str) -> Result<usize> {
+    let i = v.as_i64().with_context(|| format!("{what}: expected int"))?;
+    usize::try_from(i).map_err(|_| anyhow!("{what}: negative"))
+}
+
+fn str_from_json(v: &Json, what: &str) -> Result<String> {
+    Ok(v.as_str()
+        .with_context(|| format!("{what}: expected string"))?
+        .to_string())
+}
+
+fn f64s_to_json(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|v| Json::Num(*v)).collect())
+}
+
+fn f64s_from_json(v: &Json, what: &str) -> Result<Vec<f64>> {
+    v.as_arr()
+        .with_context(|| format!("{what}: expected array"))?
+        .iter()
+        .map(|x| x.as_f64().with_context(|| format!("{what}: non-number")))
+        .collect()
+}
+
+fn theta_to_json(theta: &[Value]) -> Json {
+    Json::Arr(theta.iter().map(value_to_json).collect())
+}
+
+fn theta_from_json(v: &Json, what: &str) -> Result<Point> {
+    v.as_arr()
+        .with_context(|| format!("{what}: expected array"))?
+        .iter()
+        .map(|x| value_from_json(x).with_context(|| format!("{what} item")))
+        .collect()
+}
+
+/// Serialize a trial outcome. Losses and predictions travel as plain
+/// JSON numbers (exact: the writer emits shortest-roundtrip `f64`
+/// text); the cost travels as decimal-string nanoseconds.
+pub fn outcome_to_json(o: &TrialOutcome) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("loss".into(), Json::Num(o.loss));
+    m.insert("dl".into(), f64s_to_json(&o.dropout_losses));
+    m.insert(
+        "pred".into(),
+        match &o.predictions {
+            Some(p) => f64s_to_json(p),
+            None => Json::Null,
+        },
+    );
+    m.insert(
+        "dpred".into(),
+        Json::Arr(
+            o.dropout_predictions.iter().map(|p| f64s_to_json(p)).collect(),
+        ),
+    );
+    let ns = u64::try_from(o.cost.as_nanos()).unwrap_or(u64::MAX);
+    m.insert("cost_ns".into(), u64_to_json(ns));
+    Json::Obj(m)
+}
+
+/// Parse a trial outcome written by [`outcome_to_json`].
+pub fn outcome_from_json(v: &Json) -> Result<TrialOutcome> {
+    let predictions = match v.get("pred") {
+        Json::Null => None,
+        other => Some(f64s_from_json(other, "outcome pred")?),
+    };
+    let dropout_predictions = v
+        .get("dpred")
+        .as_arr()
+        .context("outcome dpred")?
+        .iter()
+        .map(|p| f64s_from_json(p, "outcome dpred row"))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TrialOutcome {
+        loss: v.get("loss").as_f64().context("outcome loss")?,
+        dropout_losses: f64s_from_json(v.get("dl"), "outcome dl")?,
+        predictions,
+        dropout_predictions,
+        cost: Duration::from_nanos(u64_from_json(
+            v.get("cost_ns"),
+            "outcome cost_ns",
+        )?),
+    })
+}
+
+fn job_to_json(j: &WireJob) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("eval".into(), Json::Num(j.eval_id as f64));
+    m.insert("theta".into(), theta_to_json(&j.theta));
+    m.insert("seed".into(), u64_to_json(j.seed));
+    m.insert(
+        "trials".into(),
+        Json::Arr(j.trials.iter().map(|t| Json::Num(*t as f64)).collect()),
+    );
+    m.insert("lease_ms".into(), u64_to_json(j.lease_ms));
+    Json::Obj(m)
+}
+
+fn job_from_json(v: &Json) -> Result<WireJob> {
+    Ok(WireJob {
+        eval_id: usize_from_json(v.get("eval"), "job eval")?,
+        theta: theta_from_json(v.get("theta"), "job theta")?,
+        seed: u64_from_json(v.get("seed"), "job seed")?,
+        trials: v
+            .get("trials")
+            .as_arr()
+            .context("job trials")?
+            .iter()
+            .map(|t| usize_from_json(t, "job trial"))
+            .collect::<Result<Vec<_>>>()?,
+        lease_ms: u64_from_json(v.get("lease_ms"), "job lease_ms")?,
+    })
+}
+
+fn envelope(kind: &str) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("v".into(), Json::Str(PROTO_VERSION.into()));
+    m.insert("type".into(), Json::Str(kind.into()));
+    m
+}
+
+fn check_envelope(root: &Json) -> Result<String> {
+    let v = root.get("v").as_str().context("missing protocol version")?;
+    if v != PROTO_VERSION {
+        return Err(anyhow!(
+            "protocol version mismatch: got {v:?}, want {PROTO_VERSION:?}"
+        ));
+    }
+    str_from_json(root.get("type"), "type")
+}
+
+/// Encode a request as one compact JSON line (no trailing newline).
+pub fn request_to_line(req: &Request) -> String {
+    let mut m;
+    match req {
+        Request::CreateStudy { study, config_toml } => {
+            m = envelope("create");
+            m.insert("study".into(), Json::Str(study.clone()));
+            m.insert("config_toml".into(), Json::Str(config_toml.clone()));
+        }
+        Request::Ask { study, worker } => {
+            m = envelope("ask");
+            m.insert("study".into(), Json::Str(study.clone()));
+            m.insert("worker".into(), Json::Str(worker.clone()));
+        }
+        Request::Tell { study, worker, eval_id, trial, outcome } => {
+            m = envelope("tell");
+            m.insert("study".into(), Json::Str(study.clone()));
+            m.insert("worker".into(), Json::Str(worker.clone()));
+            m.insert("eval".into(), Json::Num(*eval_id as f64));
+            m.insert("trial".into(), Json::Num(*trial as f64));
+            m.insert("outcome".into(), outcome_to_json(outcome));
+        }
+        Request::Heartbeat { study, worker } => {
+            m = envelope("heartbeat");
+            m.insert("study".into(), Json::Str(study.clone()));
+            m.insert("worker".into(), Json::Str(worker.clone()));
+        }
+        Request::StudyStatus { study } => {
+            m = envelope("status");
+            m.insert("study".into(), Json::Str(study.clone()));
+        }
+        Request::StopStudy { study } => {
+            m = envelope("stop");
+            m.insert("study".into(), Json::Str(study.clone()));
+        }
+        Request::ListStudies => {
+            m = envelope("list");
+        }
+    }
+    write(&Json::Obj(m))
+}
+
+/// Parse one request line written by [`request_to_line`].
+pub fn request_from_line(line: &str) -> Result<Request> {
+    let root = parse(line.trim())
+        .map_err(|e| anyhow!("request parse: {e}"))?;
+    let kind = check_envelope(&root)?;
+    let study = || str_from_json(root.get("study"), "study");
+    let worker = || str_from_json(root.get("worker"), "worker");
+    Ok(match kind.as_str() {
+        "create" => Request::CreateStudy {
+            study: study()?,
+            config_toml: str_from_json(
+                root.get("config_toml"),
+                "config_toml",
+            )?,
+        },
+        "ask" => Request::Ask { study: study()?, worker: worker()? },
+        "tell" => Request::Tell {
+            study: study()?,
+            worker: worker()?,
+            eval_id: usize_from_json(root.get("eval"), "eval")?,
+            trial: usize_from_json(root.get("trial"), "trial")?,
+            outcome: outcome_from_json(root.get("outcome"))?,
+        },
+        "heartbeat" => {
+            Request::Heartbeat { study: study()?, worker: worker()? }
+        }
+        "status" => Request::StudyStatus { study: study()? },
+        "stop" => Request::StopStudy { study: study()? },
+        "list" => Request::ListStudies,
+        other => return Err(anyhow!("unknown request type {other:?}")),
+    })
+}
+
+/// Encode a response as one compact JSON line (no trailing newline).
+pub fn response_to_line(resp: &Response) -> String {
+    let mut m;
+    match resp {
+        Response::Created { study } => {
+            m = envelope("created");
+            m.insert("study".into(), Json::Str(study.clone()));
+        }
+        Response::Asked { study, job, done } => {
+            m = envelope("asked");
+            m.insert("study".into(), Json::Str(study.clone()));
+            m.insert(
+                "job".into(),
+                match job {
+                    Some(j) => job_to_json(j),
+                    None => Json::Null,
+                },
+            );
+            m.insert("done".into(), Json::Bool(*done));
+        }
+        Response::Told { recorded, extended } => {
+            m = envelope("told");
+            m.insert("recorded".into(), Json::Num(*recorded as f64));
+            m.insert("extended".into(), Json::Num(*extended as f64));
+        }
+        Response::Beat { renewed } => {
+            m = envelope("beat");
+            m.insert("renewed".into(), Json::Num(*renewed as f64));
+        }
+        Response::Status {
+            study,
+            recorded,
+            in_flight,
+            complete,
+            stopped,
+            best,
+            config_toml,
+        } => {
+            m = envelope("status");
+            m.insert("study".into(), Json::Str(study.clone()));
+            m.insert("recorded".into(), Json::Num(*recorded as f64));
+            m.insert("in_flight".into(), Json::Num(*in_flight as f64));
+            m.insert("complete".into(), Json::Bool(*complete));
+            m.insert("stopped".into(), Json::Bool(*stopped));
+            m.insert(
+                "best".into(),
+                match best {
+                    Some(b) => {
+                        let mut bm = BTreeMap::new();
+                        bm.insert(
+                            "eval".into(),
+                            Json::Num(b.eval_id as f64),
+                        );
+                        bm.insert(
+                            "objective".into(),
+                            Json::Num(b.objective),
+                        );
+                        Json::Obj(bm)
+                    }
+                    None => Json::Null,
+                },
+            );
+            m.insert("config_toml".into(), Json::Str(config_toml.clone()));
+        }
+        Response::Stopped { study } => {
+            m = envelope("stopped");
+            m.insert("study".into(), Json::Str(study.clone()));
+        }
+        Response::Studies { studies } => {
+            m = envelope("studies");
+            m.insert(
+                "studies".into(),
+                Json::Arr(
+                    studies.iter().map(|s| Json::Str(s.clone())).collect(),
+                ),
+            );
+        }
+        Response::Error { code, message } => {
+            m = envelope("error");
+            m.insert("code".into(), Json::Str(code.as_str().into()));
+            m.insert("message".into(), Json::Str(message.clone()));
+        }
+    }
+    write(&Json::Obj(m))
+}
+
+/// Parse one response line written by [`response_to_line`].
+pub fn response_from_line(line: &str) -> Result<Response> {
+    let root = parse(line.trim())
+        .map_err(|e| anyhow!("response parse: {e}"))?;
+    let kind = check_envelope(&root)?;
+    let study = || str_from_json(root.get("study"), "study");
+    Ok(match kind.as_str() {
+        "created" => Response::Created { study: study()? },
+        "asked" => Response::Asked {
+            study: study()?,
+            job: match root.get("job") {
+                Json::Null => None,
+                other => Some(job_from_json(other)?),
+            },
+            done: root.get("done").as_bool().context("done")?,
+        },
+        "told" => Response::Told {
+            recorded: usize_from_json(root.get("recorded"), "recorded")?,
+            extended: usize_from_json(root.get("extended"), "extended")?,
+        },
+        "beat" => Response::Beat {
+            renewed: usize_from_json(root.get("renewed"), "renewed")?,
+        },
+        "status" => Response::Status {
+            study: study()?,
+            recorded: usize_from_json(root.get("recorded"), "recorded")?,
+            in_flight: usize_from_json(
+                root.get("in_flight"),
+                "in_flight",
+            )?,
+            complete: root.get("complete").as_bool().context("complete")?,
+            stopped: root.get("stopped").as_bool().context("stopped")?,
+            best: match root.get("best") {
+                Json::Null => None,
+                other => Some(WireBest {
+                    eval_id: usize_from_json(
+                        other.get("eval"),
+                        "best eval",
+                    )?,
+                    objective: other
+                        .get("objective")
+                        .as_f64()
+                        .context("best objective")?,
+                }),
+            },
+            config_toml: str_from_json(
+                root.get("config_toml"),
+                "config_toml",
+            )?,
+        },
+        "stopped" => Response::Stopped { study: study()? },
+        "studies" => Response::Studies {
+            studies: root
+                .get("studies")
+                .as_arr()
+                .context("studies")?
+                .iter()
+                .map(|s| str_from_json(s, "study id"))
+                .collect::<Result<Vec<_>>>()?,
+        },
+        "error" => Response::Error {
+            code: ErrorCode::from_str(
+                root.get("code").as_str().context("code")?,
+            )?,
+            message: str_from_json(root.get("message"), "message")?,
+        },
+        other => return Err(anyhow!("unknown response type {other:?}")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome() -> TrialOutcome {
+        TrialOutcome {
+            loss: 0.123456789123456789,
+            dropout_losses: vec![0.5, 0.25],
+            predictions: Some(vec![1.0, -2.5]),
+            dropout_predictions: vec![vec![0.1], vec![0.2]],
+            cost: Duration::from_nanos(u64::MAX - 3),
+        }
+    }
+
+    #[test]
+    fn every_request_roundtrips() {
+        let reqs = vec![
+            Request::CreateStudy {
+                study: "s1".into(),
+                config_toml: "[hpo]\nseed = 1\n".into(),
+            },
+            Request::Ask { study: "s1".into(), worker: "w0".into() },
+            Request::Tell {
+                study: "s1".into(),
+                worker: "w0".into(),
+                eval_id: 7,
+                trial: 2,
+                outcome: outcome(),
+            },
+            Request::Heartbeat { study: "s1".into(), worker: "w0".into() },
+            Request::StudyStatus { study: "s1".into() },
+            Request::StopStudy { study: "s1".into() },
+            Request::ListStudies,
+        ];
+        for r in reqs {
+            let line = request_to_line(&r);
+            assert!(!line.contains('\n'), "line-delimited framing");
+            let back = request_from_line(&line).unwrap();
+            match (&r, &back) {
+                (
+                    Request::Tell { outcome: a, .. },
+                    Request::Tell { outcome: b, .. },
+                ) => {
+                    assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+                    assert_eq!(a.cost, b.cost);
+                    assert_eq!(a.predictions, b.predictions);
+                }
+                _ => assert_eq!(r, back),
+            }
+        }
+    }
+
+    #[test]
+    fn every_response_roundtrips() {
+        let resps = vec![
+            Response::Created { study: "s".into() },
+            Response::Asked {
+                study: "s".into(),
+                job: Some(WireJob {
+                    eval_id: 3,
+                    theta: vec![
+                        crate::space::Value::Int(4),
+                        crate::space::Value::Float(0.25),
+                    ],
+                    seed: u64::MAX - 1,
+                    trials: vec![0, 1, 2],
+                    lease_ms: 5000,
+                }),
+                done: false,
+            },
+            Response::Asked { study: "s".into(), job: None, done: true },
+            Response::Told { recorded: 1, extended: 0 },
+            Response::Beat { renewed: 2 },
+            Response::Status {
+                study: "s".into(),
+                recorded: 5,
+                in_flight: 2,
+                complete: false,
+                stopped: false,
+                best: Some(WireBest { eval_id: 4, objective: -0.5 }),
+                config_toml: "[hpo]\n".into(),
+            },
+            Response::Stopped { study: "s".into() },
+            Response::Studies { studies: vec!["a".into(), "b".into()] },
+            Response::error(ErrorCode::DuplicateTell, "again"),
+        ];
+        for r in resps {
+            let line = response_to_line(&r);
+            assert!(!line.contains('\n'));
+            assert_eq!(response_from_line(&line).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let line = request_to_line(&Request::ListStudies)
+            .replace(PROTO_VERSION, "hyppo-serve-v0");
+        let err = request_from_line(&line).unwrap_err();
+        assert!(format!("{err:#}").contains("version"));
+    }
+
+    #[test]
+    fn outcome_roundtrip_is_bit_exact() {
+        let o = outcome();
+        let back =
+            outcome_from_json(&outcome_to_json(&o)).unwrap();
+        assert_eq!(o.loss.to_bits(), back.loss.to_bits());
+        assert_eq!(o.dropout_losses, back.dropout_losses);
+        assert_eq!(o.predictions, back.predictions);
+        assert_eq!(o.dropout_predictions, back.dropout_predictions);
+        assert_eq!(o.cost, back.cost);
+    }
+}

@@ -1,0 +1,425 @@
+//! Multi-shard service assembly: routing, recovery, migration
+//! (DESIGN.md §15).
+//!
+//! A [`Service`] is N [`ShardCore`]s plus a routing table. Studies hash
+//! to shards with FNV-1a 64 (a fixed, documented function — *not*
+//! `DefaultHasher`, whose SipHash keys are randomized per process and
+//! would scatter studies differently on every restart), and the
+//! `routes` override map records where each study actually lives so
+//! migration can move a study off its hash-home without breaking
+//! lookups.
+//!
+//! This type is itself single-threaded and sans-IO apart from the WAL —
+//! the deterministic interleaving proofs in `tests/serve.rs` drive it
+//! directly with a virtual scheduler. The threaded shell
+//! (`serve::pool`) splits it into per-shard threads and reassembles it
+//! on shutdown.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Doc, Value};
+use crate::serve::clock::Clock;
+use crate::serve::proto::{ErrorCode, Request, Response};
+use crate::serve::shard::ShardCore;
+use crate::serve::wal::Wal;
+
+/// FNV-1a 64-bit: tiny, stable across processes and platforms.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A study's hash-home shard.
+pub fn route(study: &str, n_shards: usize) -> usize {
+    if n_shards <= 1 {
+        return 0;
+    }
+    // Modulo keeps the map obvious and re-derivable by operators; the
+    // shard count is fixed for a service's lifetime (migration, not
+    // rehashing, rebalances load).
+    usize::try_from(fnv1a64(study.as_bytes()) % n_shards as u64)
+        .unwrap_or(0)
+}
+
+/// Service-level knobs, read from a config document's `[serve]` table
+/// (see `examples/configs/serve.toml`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Number of shards (owning threads under the pool shell).
+    pub n_shards: usize,
+    /// Worker lease duration in clock milliseconds.
+    pub lease_ms: u64,
+    /// Compact a shard's WAL after this many appends; 0 disables.
+    pub compact_every: usize,
+    /// WAL directory; `None` runs without durability.
+    pub wal_dir: Option<PathBuf>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            n_shards: 2,
+            lease_ms: 5_000,
+            compact_every: 0,
+            wal_dir: None,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Read the `[serve]` table (all keys optional).
+    pub fn from_doc(doc: &Doc) -> Result<ServeConfig> {
+        let mut cfg = ServeConfig::default();
+        let Some(table) = doc.get("serve") else { return Ok(cfg) };
+        for (key, value) in table {
+            match key.as_str() {
+                "shards" => {
+                    let n = value
+                        .as_i64()
+                        .context("[serve] shards: expected integer")?;
+                    if n < 1 {
+                        bail!("[serve] shards must be >= 1, got {n}");
+                    }
+                    cfg.n_shards = n as usize;
+                }
+                "lease_ms" => {
+                    let n = value
+                        .as_i64()
+                        .context("[serve] lease_ms: expected integer")?;
+                    if n < 1 {
+                        bail!("[serve] lease_ms must be >= 1, got {n}");
+                    }
+                    cfg.lease_ms = n as u64;
+                }
+                "compact_every" => {
+                    let n = value.as_i64().context(
+                        "[serve] compact_every: expected integer",
+                    )?;
+                    if n < 0 {
+                        bail!("[serve] compact_every must be >= 0");
+                    }
+                    cfg.compact_every = n as usize;
+                }
+                "wal_dir" => {
+                    let s = value
+                        .as_str()
+                        .context("[serve] wal_dir: expected string")?;
+                    cfg.wal_dir = Some(PathBuf::from(s));
+                }
+                other => bail!("unknown [serve] key {other:?}"),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Read the `[studies]` table: `name = "path/to/config.toml"`.
+    pub fn studies_from_doc(doc: &Doc) -> Result<Vec<(String, String)>> {
+        let Some(table) = doc.get("studies") else {
+            return Ok(Vec::new());
+        };
+        let mut out = Vec::new();
+        for (name, value) in table {
+            match value {
+                Value::Str(path) => {
+                    out.push((name.clone(), path.clone()))
+                }
+                _ => bail!(
+                    "[studies] {name}: expected a config path string"
+                ),
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// N shards plus the routing table. See the module docs.
+pub struct Service {
+    cfg: ServeConfig,
+    clock: Arc<dyn Clock>,
+    shards: Vec<ShardCore>,
+    /// Where each study lives (usually its hash-home; migration moves
+    /// entries).
+    routes: BTreeMap<String, usize>,
+}
+
+impl Service {
+    fn shard_wal(cfg: &ServeConfig, shard: usize) -> Result<Option<Wal>> {
+        match &cfg.wal_dir {
+            Some(dir) => Ok(Some(Wal::open(dir, shard)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// A fresh service. Refuses to start over an existing WAL (that
+    /// state belongs to [`Service::recover`]).
+    pub fn new(cfg: ServeConfig, clock: Arc<dyn Clock>) -> Result<Service> {
+        if let Some(dir) = &cfg.wal_dir {
+            for shard in 0..cfg.n_shards {
+                if Wal::exists(dir, shard) {
+                    bail!(
+                        "WAL for shard {shard} already exists in {}; \
+                         use recovery instead of overwriting it",
+                        dir.display()
+                    );
+                }
+            }
+        }
+        let shards = (0..cfg.n_shards)
+            .map(|i| {
+                Ok(ShardCore::new(
+                    i,
+                    Arc::clone(&clock),
+                    cfg.lease_ms,
+                    cfg.compact_every,
+                    Self::shard_wal(&cfg, i)?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Service { cfg, clock, shards, routes: BTreeMap::new() })
+    }
+
+    /// Rebuild every shard from its WAL and re-derive the routing table
+    /// from actual study placement.
+    pub fn recover(
+        cfg: ServeConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Result<Service> {
+        let Some(dir) = cfg.wal_dir.clone() else {
+            bail!("recovery requires [serve] wal_dir");
+        };
+        let mut shards = Vec::with_capacity(cfg.n_shards);
+        let mut routes = BTreeMap::new();
+        for i in 0..cfg.n_shards {
+            let core = ShardCore::recover(
+                i,
+                Arc::clone(&clock),
+                cfg.lease_ms,
+                cfg.compact_every,
+                &dir,
+            )
+            .with_context(|| format!("recovering shard {i}"))?;
+            for study in core.study_names() {
+                if let Some(prev) = routes.insert(study.clone(), i) {
+                    bail!(
+                        "study {study:?} present on shards {prev} and \
+                         {i}; the WAL set is inconsistent"
+                    );
+                }
+            }
+            shards.push(core);
+        }
+        Ok(Service { cfg, clock, shards, routes })
+    }
+
+    /// Open: recover when any shard WAL exists, start fresh otherwise.
+    pub fn open(cfg: ServeConfig, clock: Arc<dyn Clock>) -> Result<Service> {
+        let existing = cfg.wal_dir.as_ref().is_some_and(|dir| {
+            (0..cfg.n_shards).any(|s| Wal::exists(dir, s))
+        });
+        if existing {
+            Service::recover(cfg, clock)
+        } else {
+            Service::new(cfg, clock)
+        }
+    }
+
+    /// Route and process one command.
+    pub fn handle(&mut self, req: &Request) -> Response {
+        let target = match req {
+            Request::ListStudies => {
+                return Response::Studies {
+                    studies: self.routes.keys().cloned().collect(),
+                }
+            }
+            Request::CreateStudy { study, .. } => {
+                if self.routes.contains_key(study) {
+                    return Response::error(
+                        ErrorCode::DuplicateStudy,
+                        format!("study {study:?} already exists"),
+                    );
+                }
+                route(study, self.shards.len())
+            }
+            Request::Ask { study, .. }
+            | Request::Tell { study, .. }
+            | Request::Heartbeat { study, .. }
+            | Request::StudyStatus { study }
+            | Request::StopStudy { study } => {
+                match self.routes.get(study) {
+                    Some(s) => *s,
+                    None => {
+                        return Response::error(
+                            ErrorCode::UnknownStudy,
+                            format!("no study {study:?} on this service"),
+                        )
+                    }
+                }
+            }
+        };
+        let Some(shard) = self.shards.get_mut(target) else {
+            return Response::error(
+                ErrorCode::Internal,
+                format!("route to missing shard {target}"),
+            );
+        };
+        let resp = shard.handle(req);
+        if let (Request::CreateStudy { study, .. }, Response::Created { .. }) =
+            (req, &resp)
+        {
+            self.routes.insert(study.clone(), target);
+        }
+        resp
+    }
+
+    /// Lease maintenance across all shards (the pool shell calls the
+    /// per-shard equivalent on idle timeouts).
+    pub fn tick(&mut self) {
+        for shard in &mut self.shards {
+            shard.tick();
+        }
+    }
+
+    /// Move a study to another shard by snapshot hand-off: the source
+    /// logs an eviction, the destination logs the imported snapshot,
+    /// and the routing table flips. In-flight evaluations re-emerge
+    /// from future asks on the new shard.
+    pub fn migrate(&mut self, study: &str, to: usize) -> Result<()> {
+        let from = *self
+            .routes
+            .get(study)
+            .ok_or_else(|| anyhow::anyhow!("unknown study {study:?}"))?;
+        if to >= self.shards.len() {
+            bail!("no shard {to} (have {})", self.shards.len());
+        }
+        if from == to {
+            return Ok(());
+        }
+        let snap = match self.shards.get_mut(from) {
+            Some(s) => s.export_study(study)?,
+            None => bail!("route to missing shard {from}"),
+        };
+        match self.shards.get_mut(to) {
+            Some(s) => s.import_study(snap)?,
+            None => bail!("no shard {to}"),
+        }
+        self.routes.insert(study.to_string(), to);
+        Ok(())
+    }
+
+    /// Compact every shard's WAL now.
+    pub fn compact_all(&mut self) -> Result<()> {
+        for shard in &mut self.shards {
+            shard.compact()?;
+        }
+        Ok(())
+    }
+
+    // -- inspection / decomposition -----------------------------------
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard a study currently lives on.
+    pub fn shard_of(&self, study: &str) -> Option<usize> {
+        self.routes.get(study).copied()
+    }
+
+    /// A study's recorded history.
+    pub fn history(
+        &self,
+        study: &str,
+    ) -> Option<&crate::optimizer::History> {
+        self.shards.get(*self.routes.get(study)?)?.history(study)
+    }
+
+    /// A study's surrogate refit counters.
+    pub fn stats(&self, study: &str) -> Option<crate::optimizer::RefitStats> {
+        self.shards.get(*self.routes.get(study)?)?.stats(study)
+    }
+
+    /// Direct access to a shard core (tests).
+    pub fn shard(&self, i: usize) -> Option<&ShardCore> {
+        self.shards.get(i)
+    }
+
+    /// Split into parts for the threaded pool shell.
+    pub fn into_parts(
+        self,
+    ) -> (ServeConfig, Arc<dyn Clock>, Vec<ShardCore>, BTreeMap<String, usize>)
+    {
+        (self.cfg, self.clock, self.shards, self.routes)
+    }
+
+    /// Reassemble after the pool shell shuts down.
+    pub fn from_parts(
+        cfg: ServeConfig,
+        clock: Arc<dyn Clock>,
+        shards: Vec<ShardCore>,
+        routes: BTreeMap<String, usize>,
+    ) -> Service {
+        Service { cfg, clock, shards, routes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_is_stable() {
+        // Reference vectors for the canonical FNV-1a 64 parameters —
+        // pinned so the study→shard map can never drift across builds.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_in_range() {
+        for n in 1..8 {
+            for name in ["alpha", "beta", "gamma", "s-0", "s-1"] {
+                let r = route(name, n);
+                assert!(r < n);
+                assert_eq!(r, route(name, n));
+            }
+        }
+    }
+
+    #[test]
+    fn serve_config_defaults_and_overrides() {
+        let doc = crate::config::parse(
+            "[serve]\nshards = 3\nlease_ms = 100\ncompact_every = 8\n",
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.n_shards, 3);
+        assert_eq!(cfg.lease_ms, 100);
+        assert_eq!(cfg.compact_every, 8);
+        assert!(cfg.wal_dir.is_none());
+
+        let empty = crate::config::parse("").unwrap();
+        let def = ServeConfig::from_doc(&empty).unwrap();
+        assert_eq!(def.n_shards, 2);
+    }
+
+    #[test]
+    fn serve_config_rejects_bad_values() {
+        for text in [
+            "[serve]\nshards = 0\n",
+            "[serve]\nlease_ms = 0\n",
+            "[serve]\nbogus = 1\n",
+        ] {
+            let doc = crate::config::parse(text).unwrap();
+            assert!(ServeConfig::from_doc(&doc).is_err(), "{text}");
+        }
+    }
+}

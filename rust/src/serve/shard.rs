@@ -1,0 +1,732 @@
+//! Shard core: the single-owner state machine behind the service
+//! (DESIGN.md §15).
+//!
+//! A [`ShardCore`] owns a disjoint set of studies — each a full
+//! `exec::Session` plus its lease table — and processes one command at
+//! a time. All concurrency lives *outside* this type: the threaded
+//! shell (`serve::pool`) gives each core its own thread and a FIFO
+//! command queue, so a core never needs interior locking and its
+//! behaviour is a pure function of the command arrival order. That is
+//! the service's determinism contract: same commands, same order, same
+//! clock readings → bit-identical sessions.
+//!
+//! Durability follows write-ahead discipline: a command is (1) checked
+//! against the session (rejections log nothing), (2) applied, (3)
+//! appended to the WAL, and only then (4) acknowledged. If the append
+//! fails the core **wedges** — it refuses every further command with
+//! [`ErrorCode::Internal`] — because its in-memory state is now ahead
+//! of the log; the unacknowledged command is simply absent from the
+//! replay, which is exactly the crash the WAL already handles.
+//!
+//! Leases make worker death survivable: `ask` grants an
+//! evaluation-granular lease of `lease_ms` clock-milliseconds, renewed
+//! by `heartbeat`; on every command (and on idle `tick`s) expired
+//! leases are requeued — the evaluation re-emerges from a later `ask`
+//! with the same id, θ, and seed, which `exec::Session` guarantees
+//! keeps the decision sequence bit-identical. Time is read only
+//! through the injected [`Clock`], never from the OS.
+//!
+//! The server side never runs trials, so the session's evaluator is a
+//! [`SyntheticEvaluator`] built deterministically from the study's
+//! config — only its *pure* surface (space, `n_params`,
+//! `loss_of_mean_prediction`) is exercised, by proposal scoring and
+//! aggregation. Workers run the actual trials client-side.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config;
+use crate::eval::synthetic::SyntheticEvaluator;
+use crate::eval::Evaluator;
+use crate::exec::{Session, TellCheck};
+use crate::optimizer::{HpoConfig, RefitStats};
+use crate::serve::clock::Clock;
+use crate::serve::proto::{
+    ErrorCode, Request, Response, WireBest, WireJob,
+};
+use crate::serve::wal::{StudySnapshot, Wal, WalRecord};
+
+/// An evaluation-granular work grant: `worker` may deliver trials of
+/// the evaluation until `expires_ms` on the shard's clock.
+#[derive(Debug, Clone)]
+pub struct Lease {
+    /// Worker id that asked for the evaluation.
+    pub worker: String,
+    /// Clock reading after which the lease is expired.
+    pub expires_ms: u64,
+}
+
+/// One study owned by a shard.
+struct Study {
+    config_toml: String,
+    gamma: f64,
+    session: Session<'static>,
+    /// Live leases by evaluation id.
+    leases: BTreeMap<usize, Lease>,
+    stopped: bool,
+}
+
+/// Operational counters (not part of the replayed state).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardCounters {
+    /// Evaluations handed out.
+    pub asks: u64,
+    /// Trial outcomes absorbed.
+    pub tells: u64,
+    /// Lease-expiry and recovery requeues.
+    pub requeues: u64,
+    /// WAL records durably appended.
+    pub wal_appends: u64,
+    /// Snapshot+truncate compactions performed.
+    pub compactions: u64,
+}
+
+/// Build a study's session (and γ) from its config document. The
+/// evaluator is synthetic and derived from the config alone, so every
+/// replica of the study — server, replayed server, worker — agrees on
+/// the search space bit-for-bit.
+fn build_parts(
+    config_toml: &str,
+) -> Result<(Box<dyn Evaluator>, HpoConfig, f64)> {
+    let doc = config::parse(config_toml).context("parsing study config")?;
+    let cfg = config::build(&doc).context("building study config")?;
+    let ev: Box<dyn Evaluator> = Box::new(SyntheticEvaluator::new(
+        cfg.space.clone(),
+        cfg.hpo.seed,
+    ));
+    let gamma = cfg.hpo.gamma;
+    Ok((ev, cfg.hpo, gamma))
+}
+
+fn fresh_study(config_toml: &str) -> Result<Study> {
+    let (ev, hpo, gamma) = build_parts(config_toml)?;
+    Ok(Study {
+        config_toml: config_toml.to_string(),
+        gamma,
+        session: Session::new_boxed(ev, &hpo),
+        leases: BTreeMap::new(),
+        stopped: false,
+    })
+}
+
+fn restored_study(snap: &StudySnapshot) -> Result<Study> {
+    let (ev, hpo, gamma) = build_parts(&snap.config_toml)?;
+    let session = Session::restore_boxed(ev, &hpo, &snap.checkpoint)
+        .with_context(|| {
+            format!("restoring study {:?}", snap.study)
+        })?;
+    Ok(Study {
+        config_toml: snap.config_toml.clone(),
+        gamma,
+        session,
+        leases: BTreeMap::new(),
+        stopped: snap.stopped,
+    })
+}
+
+/// A shard: a disjoint set of studies, their leases, and (optionally)
+/// their write-ahead log. Single-owner — see the module docs.
+pub struct ShardCore {
+    id: usize,
+    clock: Arc<dyn Clock>,
+    lease_ms: u64,
+    /// Compact after this many WAL appends; 0 disables.
+    compact_every: usize,
+    appends_since_compact: usize,
+    wal: Option<Wal>,
+    wedged: bool,
+    studies: BTreeMap<String, Study>,
+    counters: ShardCounters,
+}
+
+impl ShardCore {
+    /// A fresh, empty shard. `wal` of `None` runs without durability
+    /// (pure in-memory service).
+    pub fn new(
+        id: usize,
+        clock: Arc<dyn Clock>,
+        lease_ms: u64,
+        compact_every: usize,
+        wal: Option<Wal>,
+    ) -> ShardCore {
+        ShardCore {
+            id,
+            clock,
+            lease_ms,
+            compact_every,
+            appends_since_compact: 0,
+            wal,
+            wedged: false,
+            studies: BTreeMap::new(),
+            counters: ShardCounters::default(),
+        }
+    }
+
+    /// Rebuild a shard from its WAL directory: load the newest
+    /// snapshot, replay every record appended since (verifying ask
+    /// divergence), then requeue every evaluation that was in a
+    /// worker's hands at the crash — their leases died with the
+    /// process, so they must re-emerge from future asks.
+    pub fn recover(
+        id: usize,
+        clock: Arc<dyn Clock>,
+        lease_ms: u64,
+        compact_every: usize,
+        dir: &std::path::Path,
+    ) -> Result<ShardCore> {
+        let wal = Wal::open(dir, id)?;
+        let (snapshot, records) = wal.load()?;
+        let mut core =
+            ShardCore::new(id, clock, lease_ms, compact_every, None);
+        if let Some(snap) = snapshot {
+            for s in &snap.studies {
+                core.studies
+                    .insert(s.study.clone(), restored_study(s)?);
+            }
+        }
+        for rec in records {
+            core.replay(rec)?;
+        }
+        // Orphaned in-flight work: logged Ask, no live worker. (Studies
+        // restored from a snapshot re-hand their in-flight evaluations
+        // automatically — checkpoints don't capture hand-out state — so
+        // only post-snapshot asks appear here.)
+        core.wal = Some(wal);
+        let orphans: Vec<(String, usize)> = core
+            .studies
+            .iter()
+            .flat_map(|(name, st)| {
+                st.session
+                    .outstanding_ids()
+                    .into_iter()
+                    .map(move |id| (name.clone(), id))
+            })
+            .collect();
+        for (study, eval_id) in orphans {
+            core.append(&WalRecord::Requeue {
+                study: study.clone(),
+                eval_id,
+            })?;
+            if let Some(st) = core.studies.get_mut(&study) {
+                st.session.requeue(eval_id).with_context(|| {
+                    format!("requeueing orphan {eval_id} of {study:?}")
+                })?;
+                core.counters.requeues += 1;
+            }
+        }
+        Ok(core)
+    }
+
+    /// Apply one replayed WAL record. Rebuilds must match what the
+    /// live shard did — a session that answers differently than the
+    /// log claims is corruption and fails loudly.
+    fn replay(&mut self, rec: WalRecord) -> Result<()> {
+        match rec {
+            WalRecord::Create { study, config_toml } => {
+                if self.studies.contains_key(&study) {
+                    bail!("replay: duplicate create for {study:?}");
+                }
+                self.studies
+                    .insert(study, fresh_study(&config_toml)?);
+            }
+            WalRecord::Ask { study, eval_id, trials } => {
+                let st = self.study_mut(&study)?;
+                let job = st.session.ask_eval().ok_or_else(|| {
+                    anyhow!(
+                        "replay diverged: log asks {eval_id} of \
+                         {study:?} but the session has nothing to hand \
+                         out"
+                    )
+                })?;
+                if job.id != eval_id || job.trials != trials {
+                    bail!(
+                        "replay diverged on {study:?}: log handed out \
+                         evaluation {eval_id} trials {trials:?}, \
+                         session hands out {} trials {:?}",
+                        job.id,
+                        job.trials
+                    );
+                }
+            }
+            WalRecord::Tell { study, eval_id, trial, outcome } => {
+                self.study_mut(&study)?
+                    .session
+                    .tell(eval_id, trial, outcome)
+                    .with_context(|| format!("replay tell on {study:?}"))?;
+            }
+            WalRecord::Requeue { study, eval_id } => {
+                self.study_mut(&study)?
+                    .session
+                    .requeue(eval_id)
+                    .with_context(|| {
+                        format!("replay requeue on {study:?}")
+                    })?;
+            }
+            WalRecord::Stop { study } => {
+                self.study_mut(&study)?.stopped = true;
+            }
+            WalRecord::Evict { study } => {
+                self.studies.remove(&study);
+            }
+            WalRecord::Import(snap) => {
+                let study = snap.study.clone();
+                self.studies.insert(study, restored_study(&snap)?);
+            }
+        }
+        Ok(())
+    }
+
+    fn study_mut(&mut self, name: &str) -> Result<&mut Study> {
+        self.studies
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("unknown study {name:?}"))
+    }
+
+    /// Durably append one record; wedge on failure. Returns the error
+    /// response to emit instead of an acknowledgement.
+    fn append(&mut self, rec: &WalRecord) -> Result<()> {
+        if let Some(w) = &self.wal {
+            w.append(rec)?;
+            self.counters.wal_appends += 1;
+            self.appends_since_compact += 1;
+        }
+        Ok(())
+    }
+
+    fn log_or_wedge(&mut self, rec: WalRecord) -> Option<Response> {
+        match self.append(&rec) {
+            Ok(()) => None,
+            Err(e) => {
+                self.wedged = true;
+                Some(Response::error(
+                    ErrorCode::Internal,
+                    format!(
+                        "shard {}: write-ahead log append failed: {e:#}",
+                        self.id
+                    ),
+                ))
+            }
+        }
+    }
+
+    /// Snapshot every study into the next WAL generation and retire
+    /// the old one. Note refit counters reset across this boundary
+    /// (snapshot restore refits from scratch); histories and the RNG
+    /// stream are bit-identical.
+    pub fn compact(&mut self) -> Result<()> {
+        let Some(wal) = &mut self.wal else { return Ok(()) };
+        let studies = self
+            .studies
+            .iter()
+            .map(|(name, st)| StudySnapshot {
+                study: name.clone(),
+                config_toml: st.config_toml.clone(),
+                stopped: st.stopped,
+                checkpoint: st.session.snapshot(),
+            })
+            .collect();
+        wal.compact(studies)?;
+        self.appends_since_compact = 0;
+        self.counters.compactions += 1;
+        Ok(())
+    }
+
+    fn maybe_compact(&mut self) {
+        if self.compact_every > 0
+            && self.appends_since_compact >= self.compact_every
+            && self.compact().is_err()
+        {
+            // A failed compaction leaves the previous generation
+            // intact and authoritative; wedging is not needed, but we
+            // stop trying until the next threshold crossing.
+            self.appends_since_compact = 0;
+        }
+    }
+
+    /// Requeue every expired lease (WAL-logged, so replay reproduces
+    /// the timeout decision). Called on every command and on idle
+    /// ticks.
+    fn expire_leases(&mut self) {
+        let now = self.clock.now_ms();
+        let expired: Vec<(String, usize)> = self
+            .studies
+            .iter()
+            .flat_map(|(name, st)| {
+                st.leases
+                    .iter()
+                    .filter(|(_, l)| l.expires_ms <= now)
+                    .map(move |(id, _)| (name.clone(), *id))
+            })
+            .collect();
+        for (study, eval_id) in expired {
+            // Apply, then log: the record is only written for requeues
+            // that actually happened, so replay can never diverge. A
+            // failed append wedges the shard (state ahead of the log).
+            let requeued = match self.studies.get_mut(&study) {
+                Some(st) => {
+                    st.leases.remove(&eval_id);
+                    st.session.requeue(eval_id).is_ok()
+                }
+                None => false,
+            };
+            if !requeued {
+                continue;
+            }
+            self.counters.requeues += 1;
+            if self
+                .log_or_wedge(WalRecord::Requeue {
+                    study: study.clone(),
+                    eval_id,
+                })
+                .is_some()
+            {
+                return; // wedged; stop mutating
+            }
+        }
+    }
+
+    /// Idle maintenance: lease expiry (and any due compaction).
+    pub fn tick(&mut self) {
+        if self.wedged {
+            return;
+        }
+        self.expire_leases();
+        self.maybe_compact();
+    }
+
+    /// Process one command. Never blocks, never panics; all failures
+    /// are typed [`Response::Error`]s.
+    pub fn handle(&mut self, req: &Request) -> Response {
+        if self.wedged {
+            return Response::error(
+                ErrorCode::Internal,
+                format!(
+                    "shard {} is wedged after a WAL write failure; \
+                     restart and recover from the log",
+                    self.id
+                ),
+            );
+        }
+        self.expire_leases();
+        if self.wedged {
+            return Response::error(
+                ErrorCode::Internal,
+                format!("shard {} wedged during lease expiry", self.id),
+            );
+        }
+        let resp = self.dispatch(req);
+        self.maybe_compact();
+        resp
+    }
+
+    fn dispatch(&mut self, req: &Request) -> Response {
+        match req {
+            Request::CreateStudy { study, config_toml } => {
+                self.handle_create(study, config_toml)
+            }
+            Request::Ask { study, worker } => self.handle_ask(study, worker),
+            Request::Tell { study, worker, eval_id, trial, outcome } => {
+                self.handle_tell(study, worker, *eval_id, *trial, outcome)
+            }
+            Request::Heartbeat { study, worker } => {
+                self.handle_heartbeat(study, worker)
+            }
+            Request::StudyStatus { study } => self.handle_status(study),
+            Request::StopStudy { study } => self.handle_stop(study),
+            Request::ListStudies => Response::Studies {
+                studies: self.studies.keys().cloned().collect(),
+            },
+        }
+    }
+
+    fn unknown(study: &str) -> Response {
+        Response::error(
+            ErrorCode::UnknownStudy,
+            format!("no study {study:?} on this shard"),
+        )
+    }
+
+    fn handle_create(&mut self, study: &str, config_toml: &str) -> Response {
+        if self.studies.contains_key(study) {
+            return Response::error(
+                ErrorCode::DuplicateStudy,
+                format!("study {study:?} already exists"),
+            );
+        }
+        let st = match fresh_study(config_toml) {
+            Ok(st) => st,
+            Err(e) => {
+                return Response::error(
+                    ErrorCode::BadConfig,
+                    format!("study {study:?}: {e:#}"),
+                )
+            }
+        };
+        if let Some(resp) = self.log_or_wedge(WalRecord::Create {
+            study: study.to_string(),
+            config_toml: config_toml.to_string(),
+        }) {
+            return resp;
+        }
+        self.studies.insert(study.to_string(), st);
+        Response::Created { study: study.to_string() }
+    }
+
+    fn handle_ask(&mut self, study: &str, worker: &str) -> Response {
+        let lease_ms = self.lease_ms;
+        let now = self.clock.now_ms();
+        let Some(st) = self.studies.get_mut(study) else {
+            return Self::unknown(study);
+        };
+        if st.stopped || st.session.is_complete() {
+            return Response::Asked {
+                study: study.to_string(),
+                job: None,
+                done: true,
+            };
+        }
+        let Some(job) = st.session.ask_eval() else {
+            return Response::Asked {
+                study: study.to_string(),
+                job: None,
+                done: false, // work in flight; ask again after tells
+            };
+        };
+        st.leases.insert(
+            job.id,
+            Lease {
+                worker: worker.to_string(),
+                expires_ms: now.saturating_add(lease_ms),
+            },
+        );
+        if let Some(resp) = self.log_or_wedge(WalRecord::Ask {
+            study: study.to_string(),
+            eval_id: job.id,
+            trials: job.trials.clone(),
+        }) {
+            return resp;
+        }
+        self.counters.asks += 1;
+        Response::Asked {
+            study: study.to_string(),
+            job: Some(WireJob {
+                eval_id: job.id,
+                theta: job.theta,
+                seed: job.seed,
+                trials: job.trials,
+                lease_ms,
+            }),
+            done: false,
+        }
+    }
+
+    fn handle_tell(
+        &mut self,
+        study: &str,
+        _worker: &str,
+        eval_id: usize,
+        trial: usize,
+        outcome: &crate::eval::TrialOutcome,
+    ) -> Response {
+        let Some(st) = self.studies.get_mut(study) else {
+            return Self::unknown(study);
+        };
+        // Typed pre-flight: rejections must not mutate the session or
+        // the log, so redelivered tells are idempotent no-ops.
+        match st.session.check_tell(eval_id, trial) {
+            TellCheck::Accept => {}
+            TellCheck::UnknownEval => {
+                return Response::error(
+                    ErrorCode::UnknownEval,
+                    format!(
+                        "study {study:?} has no evaluation {eval_id}"
+                    ),
+                )
+            }
+            TellCheck::BadTrial => {
+                return Response::error(
+                    ErrorCode::BadTrial,
+                    format!(
+                        "trial {trial} outside evaluation {eval_id}'s \
+                         planned set"
+                    ),
+                )
+            }
+            TellCheck::Duplicate => {
+                return Response::error(
+                    ErrorCode::DuplicateTell,
+                    format!(
+                        "outcome for evaluation {eval_id} trial {trial} \
+                         already delivered"
+                    ),
+                )
+            }
+        }
+        if let Some(resp) = self.log_or_wedge(WalRecord::Tell {
+            study: study.to_string(),
+            eval_id,
+            trial,
+            outcome: outcome.clone(),
+        }) {
+            return resp;
+        }
+        let Some(st) = self.studies.get_mut(study) else {
+            return Self::unknown(study);
+        };
+        let told = match st.session.tell(eval_id, trial, outcome.clone()) {
+            Ok(t) => t,
+            Err(e) => {
+                // check_tell said Accept, so this is an invariant break.
+                self.wedged = true;
+                return Response::error(
+                    ErrorCode::Internal,
+                    format!("tell accepted then failed: {e:#}"),
+                );
+            }
+        };
+        // Leases are per evaluation: release those whose evaluation is
+        // no longer in a worker's hands (recorded, buffered, or
+        // requeued).
+        let live: BTreeSet<usize> =
+            st.session.outstanding_ids().into_iter().collect();
+        st.leases.retain(|id, _| live.contains(id));
+        self.counters.tells += 1;
+        Response::Told { recorded: told.recorded, extended: told.extended }
+    }
+
+    fn handle_heartbeat(&mut self, study: &str, worker: &str) -> Response {
+        let now = self.clock.now_ms();
+        let lease_ms = self.lease_ms;
+        let Some(st) = self.studies.get_mut(study) else {
+            return Self::unknown(study);
+        };
+        let mut renewed = 0usize;
+        for lease in st.leases.values_mut() {
+            if lease.worker == worker {
+                lease.expires_ms = now.saturating_add(lease_ms);
+                renewed += 1;
+            }
+        }
+        Response::Beat { renewed }
+    }
+
+    fn handle_status(&self, study: &str) -> Response {
+        let Some(st) = self.studies.get(study) else {
+            return Self::unknown(study);
+        };
+        let best = st.session.history().best(st.gamma).map(|r| WireBest {
+            eval_id: r.id,
+            objective: r.objective(st.gamma),
+        });
+        Response::Status {
+            study: study.to_string(),
+            recorded: st.session.history().len(),
+            in_flight: st.session.in_flight(),
+            complete: st.session.is_complete(),
+            stopped: st.stopped,
+            best,
+            config_toml: st.config_toml.clone(),
+        }
+    }
+
+    fn handle_stop(&mut self, study: &str) -> Response {
+        let Some(st) = self.studies.get(study) else {
+            return Self::unknown(study);
+        };
+        if !st.stopped {
+            if let Some(resp) = self
+                .log_or_wedge(WalRecord::Stop { study: study.to_string() })
+            {
+                return resp;
+            }
+            if let Some(st) = self.studies.get_mut(study) {
+                st.stopped = true;
+            }
+        }
+        Response::Stopped { study: study.to_string() }
+    }
+
+    // -- migration ----------------------------------------------------
+
+    /// Hand a study off: log the eviction, remove the study, and return
+    /// its durable snapshot for the receiving shard's
+    /// [`ShardCore::import_study`].
+    pub fn export_study(&mut self, study: &str) -> Result<StudySnapshot> {
+        let st = self
+            .studies
+            .get(study)
+            .ok_or_else(|| anyhow!("unknown study {study:?}"))?;
+        let snap = StudySnapshot {
+            study: study.to_string(),
+            config_toml: st.config_toml.clone(),
+            stopped: st.stopped,
+            checkpoint: st.session.snapshot(),
+        };
+        self.append(&WalRecord::Evict { study: study.to_string() })?;
+        self.studies.remove(study);
+        Ok(snap)
+    }
+
+    /// Accept a migrated study. Its in-flight evaluations re-emerge
+    /// from future asks (hand-out state is not part of a checkpoint),
+    /// so no requeue is needed; old leases die with the old shard.
+    pub fn import_study(&mut self, snap: StudySnapshot) -> Result<()> {
+        if self.studies.contains_key(&snap.study) {
+            bail!("study {:?} already on shard {}", snap.study, self.id);
+        }
+        let st = restored_study(&snap)?;
+        self.append(&WalRecord::Import(snap.clone()))?;
+        self.studies.insert(snap.study, st);
+        Ok(())
+    }
+
+    // -- inspection ---------------------------------------------------
+
+    /// Shard index.
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// True once a WAL append failed and the shard refuses commands.
+    pub fn is_wedged(&self) -> bool {
+        self.wedged
+    }
+
+    /// Operational counters.
+    pub fn counters(&self) -> ShardCounters {
+        self.counters
+    }
+
+    /// Sorted study ids owned by this shard.
+    pub fn study_names(&self) -> Vec<String> {
+        self.studies.keys().cloned().collect()
+    }
+
+    /// A study's recorded history (None if unknown).
+    pub fn history(
+        &self,
+        study: &str,
+    ) -> Option<&crate::optimizer::History> {
+        self.studies.get(study).map(|st| st.session.history())
+    }
+
+    /// A study's surrogate refit counters (None if unknown).
+    pub fn stats(&self, study: &str) -> Option<RefitStats> {
+        self.studies.get(study).map(|st| st.session.stats())
+    }
+
+    /// Live leases of a study, by evaluation id.
+    pub fn leases(&self, study: &str) -> Vec<(usize, Lease)> {
+        self.studies
+            .get(study)
+            .map(|st| {
+                st.leases
+                    .iter()
+                    .map(|(id, l)| (*id, l.clone()))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}

@@ -1,0 +1,581 @@
+//! Per-shard append-only write-ahead log (DESIGN.md §15).
+//!
+//! The shard's in-memory state (a fleet of `exec::Session`s) is the
+//! *cache*; the WAL is the truth. Every state-changing command — study
+//! creation, evaluation hand-out, outcome delivery, requeue, stop,
+//! migration — is appended as one length-prefixed JSON record and
+//! `fsync`ed (`util::fsio::append_sync`) before the command is
+//! acknowledged, so replaying the log from an empty shard rebuilds a
+//! **bit-identical** session fleet: same RNG stream, same histories,
+//! same refit counters (proven in `tests/serve.rs`).
+//!
+//! Ask records are logged too, not just tells: a proposal-creating
+//! `ask` advances the session RNG and depends on the history at ask
+//! time, so the ask stream is part of the decision state. Each ask
+//! record carries the evaluation id and trial set it handed out, which
+//! replay verifies against the rebuilt session — any divergence is a
+//! corruption error, never a silently different experiment.
+//!
+//! # Framing
+//!
+//! One record per line: `<len> <json>\n`, where `len` is the byte
+//! length of the JSON text. A crash mid-append leaves a torn tail —
+//! a record whose bytes run out before `len` (or whose trailing
+//! newline is missing) — which recovery tolerates by dropping it: it
+//! was never acknowledged. Malformed bytes *followed by more records*
+//! are corruption and fail loudly.
+//!
+//! # Generations and compaction
+//!
+//! Files are `wal-<shard>.<gen>.log` plus `snap-<shard>.<gen>.json`.
+//! Compaction snapshots every study (config + `Checkpoint` wire form,
+//! reusing the `Checkpoint::wire_roundtrip` plumbing) into generation
+//! G+1 with one atomic durable write, then retires generation G. A
+//! snapshot restore rebuilds the surrogate by preloading the recorded
+//! history (a full refit), so refit *counters* reset across a
+//! compaction boundary — histories stay bit-identical (the same
+//! semantics as the chaos testbed's checkpoint restarts). The same
+//! `StudySnapshot` unit is the migration hand-off between shards.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::eval::TrialOutcome;
+use crate::exec::Checkpoint;
+use crate::serve::proto::{outcome_from_json, outcome_to_json};
+use crate::util::fsio::{append_sync, atomic_write_sync};
+use crate::util::json::{parse, write, Json};
+
+/// WAL format version tag carried by every record and snapshot.
+pub const WAL_VERSION: &str = "hyppo-wal-v1";
+
+/// One logged state transition of a shard.
+#[derive(Debug, Clone)]
+pub enum WalRecord {
+    /// A study was registered with this config document.
+    Create { study: String, config_toml: String },
+    /// `ask_eval` handed out `trials` of evaluation `eval_id`. Replay
+    /// re-asks and verifies the session hands out exactly this.
+    Ask { study: String, eval_id: usize, trials: Vec<usize> },
+    /// One trial outcome was absorbed.
+    Tell {
+        study: String,
+        eval_id: usize,
+        trial: usize,
+        outcome: TrialOutcome,
+    },
+    /// An in-flight evaluation was requeued (lease expiry or recovery).
+    Requeue { study: String, eval_id: usize },
+    /// The study stopped handing out work.
+    Stop { study: String },
+    /// The study migrated away from this shard.
+    Evict { study: String },
+    /// The study migrated onto this shard with this snapshot.
+    Import(StudySnapshot),
+}
+
+/// A study's durable form: everything needed to rebuild its session on
+/// another shard (migration) or after compaction.
+#[derive(Debug, Clone)]
+pub struct StudySnapshot {
+    /// Study id.
+    pub study: String,
+    /// The run-config document the study was created with.
+    pub config_toml: String,
+    /// Whether the study was stopped.
+    pub stopped: bool,
+    /// The session's decision state in checkpoint wire form.
+    pub checkpoint: Checkpoint,
+}
+
+/// A whole-shard snapshot written by compaction.
+#[derive(Debug, Clone)]
+pub struct ShardSnapshot {
+    /// Generation this snapshot begins.
+    pub generation: u64,
+    /// Every study owned by the shard, sorted by id.
+    pub studies: Vec<StudySnapshot>,
+}
+
+// ---------------------------------------------------------------------
+// JSON forms
+// ---------------------------------------------------------------------
+
+fn study_snapshot_to_json(s: &StudySnapshot) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("study".into(), Json::Str(s.study.clone()));
+    m.insert("config_toml".into(), Json::Str(s.config_toml.clone()));
+    m.insert("stopped".into(), Json::Bool(s.stopped));
+    // The checkpoint travels in its own wire format (a JSON string),
+    // so WAL snapshots exercise exactly the kill/resume serialization.
+    m.insert(
+        "checkpoint".into(),
+        Json::Str(s.checkpoint.to_json_string()),
+    );
+    Json::Obj(m)
+}
+
+fn study_snapshot_from_json(v: &Json) -> Result<StudySnapshot> {
+    let ckpt_text =
+        v.get("checkpoint").as_str().context("snapshot checkpoint")?;
+    Ok(StudySnapshot {
+        study: v
+            .get("study")
+            .as_str()
+            .context("snapshot study")?
+            .to_string(),
+        config_toml: v
+            .get("config_toml")
+            .as_str()
+            .context("snapshot config_toml")?
+            .to_string(),
+        stopped: v.get("stopped").as_bool().context("snapshot stopped")?,
+        checkpoint: Checkpoint::from_json_str(ckpt_text)
+            .context("snapshot checkpoint body")?,
+    })
+}
+
+fn record_to_json(r: &WalRecord) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("v".into(), Json::Str(WAL_VERSION.into()));
+    match r {
+        WalRecord::Create { study, config_toml } => {
+            m.insert("t".into(), Json::Str("create".into()));
+            m.insert("study".into(), Json::Str(study.clone()));
+            m.insert("config_toml".into(), Json::Str(config_toml.clone()));
+        }
+        WalRecord::Ask { study, eval_id, trials } => {
+            m.insert("t".into(), Json::Str("ask".into()));
+            m.insert("study".into(), Json::Str(study.clone()));
+            m.insert("eval".into(), Json::Num(*eval_id as f64));
+            m.insert(
+                "trials".into(),
+                Json::Arr(
+                    trials.iter().map(|t| Json::Num(*t as f64)).collect(),
+                ),
+            );
+        }
+        WalRecord::Tell { study, eval_id, trial, outcome } => {
+            m.insert("t".into(), Json::Str("tell".into()));
+            m.insert("study".into(), Json::Str(study.clone()));
+            m.insert("eval".into(), Json::Num(*eval_id as f64));
+            m.insert("trial".into(), Json::Num(*trial as f64));
+            m.insert("outcome".into(), outcome_to_json(outcome));
+        }
+        WalRecord::Requeue { study, eval_id } => {
+            m.insert("t".into(), Json::Str("requeue".into()));
+            m.insert("study".into(), Json::Str(study.clone()));
+            m.insert("eval".into(), Json::Num(*eval_id as f64));
+        }
+        WalRecord::Stop { study } => {
+            m.insert("t".into(), Json::Str("stop".into()));
+            m.insert("study".into(), Json::Str(study.clone()));
+        }
+        WalRecord::Evict { study } => {
+            m.insert("t".into(), Json::Str("evict".into()));
+            m.insert("study".into(), Json::Str(study.clone()));
+        }
+        WalRecord::Import(snap) => {
+            m.insert("t".into(), Json::Str("import".into()));
+            m.insert("snapshot".into(), study_snapshot_to_json(snap));
+        }
+    }
+    Json::Obj(m)
+}
+
+fn usize_field(v: &Json, what: &str) -> Result<usize> {
+    let i = v.as_i64().with_context(|| format!("{what}: expected int"))?;
+    usize::try_from(i).map_err(|_| anyhow!("{what}: negative"))
+}
+
+fn str_field(v: &Json, what: &str) -> Result<String> {
+    Ok(v.as_str()
+        .with_context(|| format!("{what}: expected string"))?
+        .to_string())
+}
+
+fn record_from_json(root: &Json) -> Result<WalRecord> {
+    let ver = root.get("v").as_str().context("record version")?;
+    if ver != WAL_VERSION {
+        bail!("WAL version mismatch: got {ver:?}, want {WAL_VERSION:?}");
+    }
+    let tag = root.get("t").as_str().context("record tag")?;
+    let study = || str_field(root.get("study"), "record study");
+    Ok(match tag {
+        "create" => WalRecord::Create {
+            study: study()?,
+            config_toml: str_field(
+                root.get("config_toml"),
+                "record config_toml",
+            )?,
+        },
+        "ask" => WalRecord::Ask {
+            study: study()?,
+            eval_id: usize_field(root.get("eval"), "record eval")?,
+            trials: root
+                .get("trials")
+                .as_arr()
+                .context("record trials")?
+                .iter()
+                .map(|t| usize_field(t, "record trial"))
+                .collect::<Result<Vec<_>>>()?,
+        },
+        "tell" => WalRecord::Tell {
+            study: study()?,
+            eval_id: usize_field(root.get("eval"), "record eval")?,
+            trial: usize_field(root.get("trial"), "record trial")?,
+            outcome: outcome_from_json(root.get("outcome"))?,
+        },
+        "requeue" => WalRecord::Requeue {
+            study: study()?,
+            eval_id: usize_field(root.get("eval"), "record eval")?,
+        },
+        "stop" => WalRecord::Stop { study: study()? },
+        "evict" => WalRecord::Evict { study: study()? },
+        "import" => WalRecord::Import(study_snapshot_from_json(
+            root.get("snapshot"),
+        )?),
+        other => bail!("unknown WAL record tag {other:?}"),
+    })
+}
+
+/// Encode one record in the `<len> <json>\n` framing.
+pub fn encode_record(r: &WalRecord) -> String {
+    let body = write(&record_to_json(r));
+    format!("{} {}\n", body.len(), body)
+}
+
+/// Parse `<len> ` starting at byte `at`; returns `(len, body_start)`.
+fn parse_len(bytes: &[u8], mut at: usize) -> Option<(usize, usize)> {
+    let mut len = 0usize;
+    let mut digits = 0usize;
+    loop {
+        match bytes.get(at) {
+            Some(b @ b'0'..=b'9') => {
+                len = len
+                    .checked_mul(10)?
+                    .checked_add(usize::from(b - b'0'))?;
+                digits += 1;
+                at += 1;
+            }
+            Some(b' ') if digits > 0 => return Some((len, at + 1)),
+            _ => return None,
+        }
+    }
+}
+
+/// Decode a record stream. The torn tail a crash mid-append leaves —
+/// a final record whose bytes run out early or whose newline is
+/// missing — is silently dropped (it was never acknowledged); any
+/// malformation *before* the end of the stream is a hard error.
+pub fn decode_stream(bytes: &[u8]) -> Result<Vec<WalRecord>> {
+    let mut records = Vec::new();
+    let mut at = 0usize;
+    while at < bytes.len() {
+        let Some((len, body_start)) = parse_len(bytes, at) else {
+            // No complete `<len> ` prefix: only legal as a torn tail.
+            if bytes.get(at..).map(|r| r.contains(&b'\n')).unwrap_or(false)
+            {
+                bail!("corrupt WAL framing at byte {at}");
+            }
+            break;
+        };
+        let body_end = body_start.saturating_add(len);
+        let Some(body) = bytes.get(body_start..body_end) else {
+            break; // body runs past EOF: torn tail
+        };
+        match bytes.get(body_end) {
+            Some(b'\n') => {}
+            None => break, // newline missing at EOF: torn tail
+            Some(_) => bail!(
+                "corrupt WAL record at byte {at}: missing newline"
+            ),
+        }
+        let text = std::str::from_utf8(body)
+            .map_err(|_| anyhow!("corrupt WAL record at byte {at}"))?;
+        let root = parse(text).map_err(|e| {
+            anyhow!("corrupt WAL record at byte {at}: {e}")
+        })?;
+        records.push(record_from_json(&root)?);
+        at = body_end + 1;
+    }
+    Ok(records)
+}
+
+fn shard_snapshot_to_json(s: &ShardSnapshot) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("v".into(), Json::Str(WAL_VERSION.into()));
+    m.insert("generation".into(), Json::Str(s.generation.to_string()));
+    m.insert(
+        "studies".into(),
+        Json::Arr(s.studies.iter().map(study_snapshot_to_json).collect()),
+    );
+    Json::Obj(m)
+}
+
+fn shard_snapshot_from_json(root: &Json) -> Result<ShardSnapshot> {
+    let ver = root.get("v").as_str().context("snapshot version")?;
+    if ver != WAL_VERSION {
+        bail!("snapshot version mismatch: got {ver:?}");
+    }
+    let generation = root
+        .get("generation")
+        .as_str()
+        .context("snapshot generation")?
+        .parse::<u64>()
+        .context("snapshot generation")?;
+    Ok(ShardSnapshot {
+        generation,
+        studies: root
+            .get("studies")
+            .as_arr()
+            .context("snapshot studies")?
+            .iter()
+            .map(study_snapshot_from_json)
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+// ---------------------------------------------------------------------
+// On-disk layout
+// ---------------------------------------------------------------------
+
+/// One shard's log handle: the current generation's append target plus
+/// the compaction machinery.
+#[derive(Debug)]
+pub struct Wal {
+    dir: PathBuf,
+    shard: usize,
+    generation: u64,
+}
+
+fn log_path(dir: &Path, shard: usize, generation: u64) -> PathBuf {
+    dir.join(format!("wal-{shard}.{generation}.log"))
+}
+
+fn snap_path(dir: &Path, shard: usize, generation: u64) -> PathBuf {
+    dir.join(format!("snap-{shard}.{generation}.json"))
+}
+
+/// Parse `<stem>-<shard>.<gen>.<ext>`; returns the generation when the
+/// name belongs to this shard.
+fn parse_gen(name: &str, stem: &str, shard: usize, ext: &str) -> Option<u64> {
+    let rest = name.strip_prefix(&format!("{stem}-{shard}."))?;
+    rest.strip_suffix(&format!(".{ext}"))?.parse().ok()
+}
+
+impl Wal {
+    /// Open (or initialize) the shard's WAL under `dir`, resuming the
+    /// highest generation present on disk.
+    pub fn open(dir: &Path, shard: usize) -> Result<Wal> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("mkdir {}", dir.display()))?;
+        let mut generation = 0u64;
+        for entry in std::fs::read_dir(dir)
+            .with_context(|| format!("scanning {}", dir.display()))?
+        {
+            let name = entry?.file_name();
+            let Some(name) = name.to_str() else { continue };
+            for g in [
+                parse_gen(name, "wal", shard, "log"),
+                parse_gen(name, "snap", shard, "json"),
+            ]
+            .into_iter()
+            .flatten()
+            {
+                generation = generation.max(g);
+            }
+        }
+        Ok(Wal { dir: dir.to_path_buf(), shard, generation })
+    }
+
+    /// True when any WAL or snapshot file for `shard` exists in `dir`.
+    pub fn exists(dir: &Path, shard: usize) -> bool {
+        let Ok(entries) = std::fs::read_dir(dir) else { return false };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if parse_gen(name, "wal", shard, "log").is_some()
+                || parse_gen(name, "snap", shard, "json").is_some()
+            {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// The generation currently being appended to.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// The current generation's log file.
+    pub fn log_file(&self) -> PathBuf {
+        log_path(&self.dir, self.shard, self.generation)
+    }
+
+    /// Durably append one record (fsync before return — see
+    /// `util::fsio::append_sync`).
+    pub fn append(&self, record: &WalRecord) -> Result<()> {
+        append_sync(&self.log_file(), encode_record(record).as_bytes())
+    }
+
+    /// Load the current generation: its snapshot (if compaction ever
+    /// ran) plus every record appended since, torn tail dropped.
+    pub fn load(&self) -> Result<(Option<ShardSnapshot>, Vec<WalRecord>)> {
+        let snap = snap_path(&self.dir, self.shard, self.generation);
+        let snapshot = if snap.is_file() {
+            let text = std::fs::read_to_string(&snap)
+                .with_context(|| format!("reading {}", snap.display()))?;
+            let root = parse(&text).map_err(|e| {
+                anyhow!("parsing {}: {e}", snap.display())
+            })?;
+            Some(shard_snapshot_from_json(&root)?)
+        } else {
+            None
+        };
+        let log = self.log_file();
+        let records = if log.is_file() {
+            let bytes = std::fs::read(&log)
+                .with_context(|| format!("reading {}", log.display()))?;
+            decode_stream(&bytes)
+                .with_context(|| format!("replaying {}", log.display()))?
+        } else {
+            Vec::new()
+        };
+        Ok((snapshot, records))
+    }
+
+    /// Snapshot + truncate: durably write `studies` as generation G+1,
+    /// switch appends to the new generation, then retire generation G's
+    /// files (best-effort — stale files are ignored by recovery, which
+    /// always loads the highest generation).
+    pub fn compact(&mut self, studies: Vec<StudySnapshot>) -> Result<()> {
+        let next = self.generation + 1;
+        let snap = ShardSnapshot { generation: next, studies };
+        let body = write(&shard_snapshot_to_json(&snap));
+        atomic_write_sync(
+            &snap_path(&self.dir, self.shard, next),
+            body.as_bytes(),
+        )?;
+        let old = self.generation;
+        self.generation = next;
+        std::fs::remove_file(log_path(&self.dir, self.shard, old)).ok();
+        std::fs::remove_file(snap_path(&self.dir, self.shard, old)).ok();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn outcome(loss: f64) -> TrialOutcome {
+        TrialOutcome {
+            loss,
+            dropout_losses: vec![loss * 2.0],
+            predictions: None,
+            dropout_predictions: vec![],
+            cost: Duration::from_millis(3),
+        }
+    }
+
+    fn records() -> Vec<WalRecord> {
+        vec![
+            WalRecord::Create {
+                study: "s1".into(),
+                config_toml: "[hpo]\nseed = 1\n".into(),
+            },
+            WalRecord::Ask {
+                study: "s1".into(),
+                eval_id: 0,
+                trials: vec![0, 1],
+            },
+            WalRecord::Tell {
+                study: "s1".into(),
+                eval_id: 0,
+                trial: 0,
+                outcome: outcome(0.5),
+            },
+            WalRecord::Requeue { study: "s1".into(), eval_id: 0 },
+            WalRecord::Stop { study: "s1".into() },
+            WalRecord::Evict { study: "s1".into() },
+        ]
+    }
+
+    #[test]
+    fn stream_roundtrips() {
+        let mut buf = String::new();
+        for r in records() {
+            buf.push_str(&encode_record(&r));
+        }
+        let back = decode_stream(buf.as_bytes()).unwrap();
+        assert_eq!(back.len(), records().len());
+        match (&back[2], &records()[2]) {
+            (
+                WalRecord::Tell { outcome: a, .. },
+                WalRecord::Tell { outcome: b, .. },
+            ) => assert_eq!(a.loss.to_bits(), b.loss.to_bits()),
+            _ => panic!("record order changed"),
+        }
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_not_fatal() {
+        let mut buf = String::new();
+        for r in records().into_iter().take(3) {
+            buf.push_str(&encode_record(&r));
+        }
+        let full = decode_stream(buf.as_bytes()).unwrap().len();
+        // Chop bytes off the end: every prefix decodes to ≤ full
+        // records and never errors (the torn record simply vanishes).
+        for cut in 1..60 {
+            let bytes = &buf.as_bytes()[..buf.len() - cut];
+            let got = decode_stream(bytes).unwrap();
+            assert!(got.len() <= full);
+        }
+    }
+
+    #[test]
+    fn mid_stream_corruption_is_fatal() {
+        let mut buf = String::new();
+        for r in records().into_iter().take(2) {
+            buf.push_str(&encode_record(&r));
+        }
+        let mut bytes = buf.into_bytes();
+        // Flip a byte inside the FIRST record's JSON body.
+        bytes[10] ^= 0x55;
+        assert!(decode_stream(&bytes).is_err());
+    }
+
+    #[test]
+    fn wal_open_append_load_compact() {
+        let dir =
+            std::env::temp_dir().join("hyppo_wal_test_open_append");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut wal = Wal::open(&dir, 0).unwrap();
+        assert_eq!(wal.generation(), 0);
+        assert!(!Wal::exists(&dir, 0));
+        for r in records().into_iter().take(2) {
+            wal.append(&r).unwrap();
+        }
+        assert!(Wal::exists(&dir, 0));
+        let (snap, recs) = wal.load().unwrap();
+        assert!(snap.is_none());
+        assert_eq!(recs.len(), 2);
+
+        // Compaction bumps the generation and retires the old log.
+        wal.compact(vec![]).unwrap();
+        assert_eq!(wal.generation(), 1);
+        let (snap, recs) = wal.load().unwrap();
+        assert_eq!(snap.unwrap().generation, 1);
+        assert!(recs.is_empty());
+
+        // Reopen resumes the highest generation.
+        let again = Wal::open(&dir, 0).unwrap();
+        assert_eq!(again.generation(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,129 @@
+//! Crash-durable filesystem primitives shared by `exec::checkpoint` and
+//! the `serve::wal` write-ahead log.
+//!
+//! The classic atomic-replace recipe (write `<path>.tmp`, rename over
+//! `path`) has two holes on real filesystems:
+//!
+//! 1. the tmp file's *contents* may still sit in the page cache when the
+//!    rename lands, so a crash can leave `path` pointing at an empty or
+//!    truncated inode — fixed by `fsync`ing the file before the rename;
+//! 2. the rename itself is a directory-entry update, and a crash between
+//!    the rename and the directory sync can lose the entry — fixed by
+//!    opening the parent directory and `fsync`ing *it* after the rename
+//!    (POSIX filesystems persist directory updates through the directory
+//!    fd; on platforms where directories cannot be opened this step is a
+//!    no-op, which is no worse than the previous behaviour).
+//!
+//! [`append_sync`] is the WAL half: append bytes and flush them to
+//! stable storage before acknowledging, so a record that was reported
+//! durable survives a crash immediately after.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// `fsync` the parent directory of `path`, persisting directory-entry
+/// updates (renames, creations). No-op when `path` has no parent or on
+/// platforms where directories cannot be opened as files.
+pub fn sync_parent_dir(path: &Path) -> Result<()> {
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d,
+        _ => return Ok(()),
+    };
+    #[cfg(unix)]
+    {
+        let d = File::open(dir)
+            .with_context(|| format!("opening dir {}", dir.display()))?;
+        d.sync_all()
+            .with_context(|| format!("fsync dir {}", dir.display()))?;
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = dir;
+    }
+    Ok(())
+}
+
+/// Atomically and durably replace `path` with `contents`: create the
+/// parent directory, write `<path>.tmp`, `fsync` it, rename it over
+/// `path`, then `fsync` the parent directory (see module docs for why
+/// each step exists). A crash at any point leaves either the old
+/// complete file or the new complete file.
+pub fn atomic_write_sync(path: &Path, contents: &[u8]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("mkdir {}", dir.display()))?;
+        }
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(contents)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all()
+            .with_context(|| format!("fsync {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    sync_parent_dir(path)
+}
+
+/// Durably append `bytes` to `path` (creating it if absent): the bytes
+/// are `fsync`ed before this returns, so a caller that acknowledges a
+/// write-ahead-log record after `append_sync` never acknowledges
+/// something a crash can take back.
+pub fn append_sync(path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut f = OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("opening {} for append", path.display()))?;
+    f.write_all(bytes)
+        .with_context(|| format!("appending to {}", path.display()))?;
+    f.sync_all()
+        .with_context(|| format!("fsync {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("hyppo_fsio_{name}"))
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_cleans_tmp() {
+        let p = tmp_path("atomic.json");
+        atomic_write_sync(&p, b"one").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"one");
+        atomic_write_sync(&p, b"two").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"two");
+        assert!(!p.with_extension("tmp").exists(), "tmp left behind");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn atomic_write_creates_missing_parent() {
+        let dir = tmp_path("nested_dir");
+        let p = dir.join("deep").join("ckpt.json");
+        atomic_write_sync(&p, b"x").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"x");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn append_sync_accumulates() {
+        let p = tmp_path("append.log");
+        std::fs::remove_file(&p).ok();
+        append_sync(&p, b"a\n").unwrap();
+        append_sync(&p, b"b\n").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"a\nb\n");
+        std::fs::remove_file(&p).ok();
+    }
+}

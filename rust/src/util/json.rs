@@ -29,6 +29,12 @@ impl Json {
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|v| v as i64)
     }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),

@@ -6,6 +6,7 @@
 pub mod bench;
 pub mod cli;
 pub mod csv;
+pub mod fsio;
 pub mod json;
 pub mod par;
 pub mod prop;

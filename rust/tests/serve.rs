@@ -1,0 +1,784 @@
+//! Serve-subsystem guarantees (DESIGN.md §15).
+//!
+//! Headline proofs:
+//!
+//! * **(a) crash-replay bit-identity** — kill a WAL-backed service
+//!   mid-stream (between an ask and its tells), recover from the log,
+//!   finish the schedule: every study's history *and* surrogate refit
+//!   counters are bit-identical to an uninterrupted run.
+//! * **(b) service ≡ bare session** — a 1-shard/1-study service driven
+//!   through the wire-protocol commands produces exactly the history
+//!   and refit counters of a bare `exec::Session` ask/tell loop.
+//! * **(c) deterministic interleaving** — a seeded virtual scheduler
+//!   interleaving many studies over many shards yields per-study
+//!   results identical to sequential runs, for every seed, and
+//!   identical across repeats of the same seed.
+//!
+//! Plus: duplicate/misaddressed tells are rejected with typed error
+//! codes and zero state change; lease expiry requeues through the
+//! injected clock; migration hands a study across shards without
+//! changing its result; the TCP shell round-trips the protocol over a
+//! real socket.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use hyppo::config;
+use hyppo::eval::synthetic::SyntheticEvaluator;
+use hyppo::eval::Evaluator;
+use hyppo::exec::Session;
+use hyppo::optimizer::{History, RefitStats};
+use hyppo::sampling::Rng;
+use hyppo::serve::{
+    Request, Response, ServeConfig, Service, VirtualClock, WireJob,
+};
+use hyppo::serve::{Clock, ErrorCode};
+
+/// A small mixed-space study config; `seed` differentiates studies.
+fn study_toml(seed: u64, max_evals: usize) -> String {
+    format!(
+        "[hpo]\n\
+         max_evaluations = {max_evals}\n\
+         n_init = 3\n\
+         n_trials = 2\n\
+         surrogate = \"rbf\"\n\
+         seed = {seed}\n\
+         \n\
+         [space]\n\
+         x = {{ kind = \"continuous\", lo = -2.0, hi = 2.0 }}\n\
+         n = [1, 16]\n"
+    )
+}
+
+fn evaluator_for(config_toml: &str) -> SyntheticEvaluator {
+    let cfg = config::build(&config::parse(config_toml).unwrap()).unwrap();
+    SyntheticEvaluator::new(cfg.space.clone(), cfg.hpo.seed)
+}
+
+/// Bit-level digest of a history: ids, θ, and every aggregate the
+/// optimizer consumes, as exact bit patterns.
+fn fingerprint(h: &History) -> String {
+    h.records
+        .iter()
+        .map(|r| {
+            format!(
+                "{}|{:?}|{:016x}|{:016x}|{:016x}|{:016x};",
+                r.id,
+                r.theta,
+                r.summary.interval.center.to_bits(),
+                r.summary.interval.radius.to_bits(),
+                r.summary.trained_mean.to_bits(),
+                r.summary.v_model_g.to_bits(),
+            )
+        })
+        .collect()
+}
+
+/// The reference: a bare `exec::Session` driven by the canonical
+/// one-worker loop (ask an evaluation, tell all its trials, repeat).
+fn bare_session_run(config_toml: &str) -> (History, RefitStats) {
+    let cfg = config::build(&config::parse(config_toml).unwrap()).unwrap();
+    let ev = evaluator_for(config_toml);
+    let mut session = Session::new(&ev, &cfg.hpo);
+    while !session.is_complete() {
+        let job = session.ask_eval().expect("sequential loop never waits");
+        for trial in job.trials.clone() {
+            let outcome = ev.run_trial(&job.theta, trial, job.seed);
+            session.tell(job.id, trial, outcome).unwrap();
+        }
+    }
+    let stats = session.stats();
+    (session.into_history(), stats)
+}
+
+fn ask(study: &str) -> Request {
+    Request::Ask { study: study.into(), worker: "w0".into() }
+}
+
+fn tell(study: &str, job: &WireJob, trial: usize, ev: &SyntheticEvaluator) -> Request {
+    Request::Tell {
+        study: study.into(),
+        worker: "w0".into(),
+        eval_id: job.eval_id,
+        trial,
+        outcome: ev.run_trial(&job.theta, trial, job.seed),
+    }
+}
+
+fn create(service: &mut Service, study: &str, toml: &str) {
+    match service.handle(&Request::CreateStudy {
+        study: study.into(),
+        config_toml: toml.into(),
+    }) {
+        Response::Created { .. } => {}
+        other => panic!("create failed: {other:?}"),
+    }
+}
+
+/// Ask one evaluation of `study` and tell all its trials. Returns false
+/// once the study reports done.
+fn drive_one(
+    service: &mut Service,
+    study: &str,
+    ev: &SyntheticEvaluator,
+) -> bool {
+    match service.handle(&ask(study)) {
+        Response::Asked { job: Some(job), .. } => {
+            for trial in job.trials.clone() {
+                match service.handle(&tell(study, &job, trial, ev)) {
+                    Response::Told { .. } => {}
+                    other => panic!("tell failed: {other:?}"),
+                }
+            }
+            true
+        }
+        Response::Asked { job: None, done, .. } => !done,
+        other => panic!("ask failed: {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// (b) 1-shard / 1-study service ≡ bare session, bit for bit
+// ---------------------------------------------------------------------
+
+#[test]
+fn single_study_service_equals_bare_session() {
+    let toml = study_toml(7, 10);
+    let (ref_hist, ref_stats) = bare_session_run(&toml);
+
+    let cfg = ServeConfig {
+        n_shards: 1,
+        lease_ms: 1_000_000,
+        compact_every: 0,
+        wal_dir: None,
+    };
+    let mut service =
+        Service::new(cfg, VirtualClock::shared()).unwrap();
+    create(&mut service, "solo", &toml);
+    let ev = evaluator_for(&toml);
+    while drive_one(&mut service, "solo", &ev) {}
+
+    let hist = service.history("solo").expect("study exists");
+    assert_eq!(fingerprint(hist), fingerprint(&ref_hist));
+    assert_eq!(service.stats("solo").unwrap(), ref_stats);
+}
+
+// ---------------------------------------------------------------------
+// (a) kill mid-stream + WAL replay ≡ uninterrupted, per study
+// ---------------------------------------------------------------------
+
+/// Round-robin the studies; when `kill_at_ask` asks have been handed
+/// out, drop the whole service right between an ask and its tells (the
+/// leased job dies with the worker) and recover from the WAL.
+fn run_schedule(
+    mut service: Service,
+    cfg: &ServeConfig,
+    clock: &Arc<VirtualClock>,
+    studies: &[(String, String)],
+    mut kill_at_ask: Option<usize>,
+) -> Service {
+    let evs: BTreeMap<&str, SyntheticEvaluator> = studies
+        .iter()
+        .map(|(name, toml)| (name.as_str(), evaluator_for(toml)))
+        .collect();
+    let mut done: BTreeMap<&str, bool> =
+        studies.iter().map(|(n, _)| (n.as_str(), false)).collect();
+    let mut asks_handed = 0usize;
+    while done.values().any(|d| !d) {
+        for (study, _) in studies {
+            if done[study.as_str()] {
+                continue;
+            }
+            let ev = &evs[study.as_str()];
+            loop {
+                match service.handle(&ask(study)) {
+                    Response::Asked { job: Some(job), .. } => {
+                        asks_handed += 1;
+                        if kill_at_ask == Some(asks_handed) {
+                            kill_at_ask = None;
+                            // Crash: no shutdown, no flush beyond what
+                            // each command already fsynced.
+                            service = Service::recover(
+                                cfg.clone(),
+                                Arc::clone(clock) as Arc<dyn Clock>,
+                            )
+                            .expect("recovery from WAL");
+                            continue; // the job died with its worker
+                        }
+                        for trial in job.trials.clone() {
+                            match service
+                                .handle(&tell(study, &job, trial, ev))
+                            {
+                                Response::Told { .. } => {}
+                                other => panic!("tell: {other:?}"),
+                            }
+                        }
+                        break;
+                    }
+                    Response::Asked { job: None, done: d, .. } => {
+                        if d {
+                            done.insert(study.as_str(), true);
+                        }
+                        break;
+                    }
+                    other => panic!("ask: {other:?}"),
+                }
+            }
+        }
+    }
+    service
+}
+
+#[test]
+fn wal_crash_replay_is_bit_identical_to_uninterrupted_run() {
+    let studies: Vec<(String, String)> = (0..3)
+        .map(|i| (format!("study-{i}"), study_toml(100 + i, 8)))
+        .collect();
+
+    // Control: same schedule, no WAL, never killed.
+    let mem_cfg = ServeConfig {
+        n_shards: 2,
+        lease_ms: 1_000_000,
+        compact_every: 0,
+        wal_dir: None,
+    };
+    let clock = VirtualClock::shared();
+    let mut control = Service::new(
+        mem_cfg.clone(),
+        Arc::clone(&clock) as Arc<dyn Clock>,
+    )
+    .unwrap();
+    for (name, toml) in &studies {
+        create(&mut control, name, toml);
+    }
+    let control =
+        run_schedule(control, &mem_cfg, &clock, &studies, None);
+
+    // Victim: WAL-backed, killed between the 7th ask and its tells.
+    let dir = std::env::temp_dir().join("hyppo_serve_crash_replay");
+    std::fs::remove_dir_all(&dir).ok();
+    let wal_cfg = ServeConfig { wal_dir: Some(dir.clone()), ..mem_cfg };
+    let mut victim = Service::new(
+        wal_cfg.clone(),
+        Arc::clone(&clock) as Arc<dyn Clock>,
+    )
+    .unwrap();
+    for (name, toml) in &studies {
+        create(&mut victim, name, toml);
+    }
+    let victim =
+        run_schedule(victim, &wal_cfg, &clock, &studies, Some(7));
+
+    for (name, _) in &studies {
+        assert_eq!(
+            fingerprint(victim.history(name).unwrap()),
+            fingerprint(control.history(name).unwrap()),
+            "history of {name} diverged across kill+replay"
+        );
+        assert_eq!(
+            victim.stats(name).unwrap(),
+            control.stats(name).unwrap(),
+            "refit counters of {name} diverged across kill+replay"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// (c) deterministic multi-study interleaving under a seeded scheduler
+// ---------------------------------------------------------------------
+
+/// Interleave studies in a seeded random order; per-study command
+/// sequences stay canonical (ask, then its tells), so results must
+/// match the sequential reference exactly.
+fn seeded_interleaved_run(
+    studies: &[(String, String)],
+    n_shards: usize,
+    sched_seed: u64,
+) -> Vec<(String, String, RefitStats)> {
+    let cfg = ServeConfig {
+        n_shards,
+        lease_ms: 1_000_000,
+        compact_every: 0,
+        wal_dir: None,
+    };
+    let mut service =
+        Service::new(cfg, VirtualClock::shared()).unwrap();
+    for (name, toml) in studies {
+        create(&mut service, name, toml);
+    }
+    let evs: BTreeMap<&str, SyntheticEvaluator> = studies
+        .iter()
+        .map(|(name, toml)| (name.as_str(), evaluator_for(toml)))
+        .collect();
+    let mut rng = Rng::new(sched_seed);
+    let mut live: Vec<&str> =
+        studies.iter().map(|(n, _)| n.as_str()).collect();
+    while !live.is_empty() {
+        let pick = rng.usize_below(live.len());
+        let study = live[pick];
+        if !drive_one(&mut service, study, &evs[study]) {
+            live.remove(pick);
+        }
+    }
+    studies
+        .iter()
+        .map(|(name, _)| {
+            (
+                name.clone(),
+                fingerprint(service.history(name).unwrap()),
+                service.stats(name).unwrap(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn seeded_interleaving_is_deterministic_and_isolation_preserving() {
+    let studies: Vec<(String, String)> = (0..4)
+        .map(|i| (format!("s{i}"), study_toml(40 + i, 7)))
+        .collect();
+
+    let run_a = seeded_interleaved_run(&studies, 2, 0xfeed);
+    let run_b = seeded_interleaved_run(&studies, 2, 0xfeed);
+    assert_eq!(run_a, run_b, "same scheduler seed must replay exactly");
+
+    // A different interleaving — and a different shard count — still
+    // cannot change any study's result.
+    let run_c = seeded_interleaved_run(&studies, 3, 0xbeef);
+    for ((name, fp, stats), (_, fp_c, stats_c)) in
+        run_a.iter().zip(run_c.iter())
+    {
+        assert_eq!(fp, fp_c, "{name} result depends on interleaving");
+        assert_eq!(stats, stats_c);
+    }
+
+    // And every study matches its solo sequential reference.
+    for ((name, fp, stats), (_, toml)) in run_a.iter().zip(&studies) {
+        let (ref_hist, ref_stats) = bare_session_run(toml);
+        assert_eq!(fp, &fingerprint(&ref_hist), "{name} != bare session");
+        assert_eq!(stats, &ref_stats);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Duplicate / misaddressed tells: typed rejection, zero state change
+// ---------------------------------------------------------------------
+
+#[test]
+fn duplicate_and_misaddressed_tells_are_typed_noops() {
+    let toml = study_toml(9, 6);
+    let (ref_hist, ref_stats) = bare_session_run(&toml);
+
+    let cfg = ServeConfig {
+        n_shards: 1,
+        lease_ms: 1_000_000,
+        compact_every: 0,
+        wal_dir: None,
+    };
+    let mut service =
+        Service::new(cfg, VirtualClock::shared()).unwrap();
+    create(&mut service, "dup", &toml);
+    let ev = evaluator_for(&toml);
+
+    loop {
+        let job = match service.handle(&ask("dup")) {
+            Response::Asked { job: Some(job), .. } => job,
+            Response::Asked { job: None, done: true, .. } => break,
+            other => panic!("ask: {other:?}"),
+        };
+        // Misaddressed first: unknown study, unknown eval, bad trial.
+        match service.handle(&tell("nope", &job, 0, &ev)) {
+            Response::Error { code: ErrorCode::UnknownStudy, .. } => {}
+            other => panic!("want unknown-study, got {other:?}"),
+        }
+        let mut ghost = job.clone();
+        ghost.eval_id = 4096;
+        match service.handle(&tell("dup", &ghost, 0, &ev)) {
+            Response::Error { code: ErrorCode::UnknownEval, .. } => {}
+            other => panic!("want unknown-eval, got {other:?}"),
+        }
+        match service.handle(&tell("dup", &job, 4096, &ev)) {
+            Response::Error { code: ErrorCode::BadTrial, .. } => {}
+            other => panic!("want bad-trial, got {other:?}"),
+        }
+        for trial in job.trials.clone() {
+            match service.handle(&tell("dup", &job, trial, &ev)) {
+                Response::Told { .. } => {}
+                other => panic!("tell: {other:?}"),
+            }
+            // Immediate redelivery of the same outcome.
+            match service.handle(&tell("dup", &job, trial, &ev)) {
+                Response::Error {
+                    code: ErrorCode::DuplicateTell, ..
+                } => {}
+                other => panic!("want duplicate-tell, got {other:?}"),
+            }
+        }
+        // Redelivery after the whole evaluation resolved.
+        match service.handle(&tell("dup", &job, 0, &ev)) {
+            Response::Error { code, .. } => assert!(
+                code == ErrorCode::DuplicateTell
+                    || code == ErrorCode::UnknownEval,
+                "late redelivery must stay typed, got {code:?}"
+            ),
+            other => panic!("want typed error, got {other:?}"),
+        }
+    }
+
+    // All that abuse changed nothing.
+    assert_eq!(
+        fingerprint(service.history("dup").unwrap()),
+        fingerprint(&ref_hist)
+    );
+    assert_eq!(service.stats("dup").unwrap(), ref_stats);
+}
+
+// ---------------------------------------------------------------------
+// Leases: heartbeat renewal, timeout requeue via the injected clock
+// ---------------------------------------------------------------------
+
+#[test]
+fn expired_lease_requeues_and_survivor_takes_over() {
+    // n_init = 1 so the init barrier guarantees a single outstanding
+    // evaluation (the second ask must Wait, not hand out new work).
+    let toml = "[hpo]\n\
+                max_evaluations = 4\n\
+                n_init = 1\n\
+                n_trials = 1\n\
+                seed = 3\n\
+                \n\
+                [space]\n\
+                x = { kind = \"continuous\", lo = 0.0, hi = 1.0 }\n";
+    let clock = VirtualClock::shared();
+    let cfg = ServeConfig {
+        n_shards: 1,
+        lease_ms: 100,
+        compact_every: 0,
+        wal_dir: None,
+    };
+    let mut service =
+        Service::new(cfg, Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    create(&mut service, "lease", toml);
+    let ev = evaluator_for(toml);
+
+    let job = match service.handle(&Request::Ask {
+        study: "lease".into(),
+        worker: "dying".into(),
+    }) {
+        Response::Asked { job: Some(j), .. } => j,
+        other => panic!("ask: {other:?}"),
+    };
+    assert_eq!(job.lease_ms, 100);
+
+    // Heartbeat pushes the deadline out...
+    clock.advance(80);
+    match service.handle(&Request::Heartbeat {
+        study: "lease".into(),
+        worker: "dying".into(),
+    }) {
+        Response::Beat { renewed } => assert_eq!(renewed, 1),
+        other => panic!("heartbeat: {other:?}"),
+    }
+    // ...so 80 ms later the lease is still live and a second worker
+    // gets nothing (init barrier + lease in flight).
+    clock.advance(80);
+    match service.handle(&Request::Ask {
+        study: "lease".into(),
+        worker: "survivor".into(),
+    }) {
+        Response::Asked { job: None, done: false, .. } => {}
+        other => panic!("want wait, got {other:?}"),
+    }
+
+    // Then the worker dies (no more heartbeats): past the deadline the
+    // evaluation is requeued and re-handed — same id, same θ, same
+    // seed — to whoever asks next.
+    clock.advance(101);
+    let retry = match service.handle(&Request::Ask {
+        study: "lease".into(),
+        worker: "survivor".into(),
+    }) {
+        Response::Asked { job: Some(j), .. } => j,
+        other => panic!("want requeued job, got {other:?}"),
+    };
+    assert_eq!(retry.eval_id, job.eval_id);
+    assert_eq!(retry.theta, job.theta);
+    assert_eq!(retry.seed, job.seed);
+
+    // The survivor finishes the study; the timeout detour is invisible
+    // in the result.
+    for trial in retry.trials.clone() {
+        match service.handle(&tell("lease", &retry, trial, &ev)) {
+            Response::Told { .. } => {}
+            other => panic!("tell: {other:?}"),
+        }
+    }
+    while drive_one(&mut service, "lease", &ev) {}
+    let (ref_hist, ref_stats) = bare_session_run(toml);
+    assert_eq!(
+        fingerprint(service.history("lease").unwrap()),
+        fingerprint(&ref_hist)
+    );
+    assert_eq!(service.stats("lease").unwrap(), ref_stats);
+}
+
+// ---------------------------------------------------------------------
+// Compaction and migration preserve the history (refit counters reset
+// by design at snapshot-restore boundaries — documented in §15)
+// ---------------------------------------------------------------------
+
+#[test]
+fn compaction_then_recovery_preserves_history() {
+    let toml = study_toml(21, 8);
+    let dir = std::env::temp_dir().join("hyppo_serve_compaction");
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = ServeConfig {
+        n_shards: 1,
+        lease_ms: 1_000_000,
+        compact_every: 0,
+        wal_dir: Some(dir.clone()),
+    };
+    let clock = VirtualClock::shared();
+    let mut service = Service::new(
+        cfg.clone(),
+        Arc::clone(&clock) as Arc<dyn Clock>,
+    )
+    .unwrap();
+    create(&mut service, "c", &toml);
+    let ev = evaluator_for(&toml);
+    for _ in 0..3 {
+        assert!(drive_one(&mut service, "c", &ev));
+    }
+    // Snapshot + truncate mid-run, then keep going on the new
+    // generation and crash at the end.
+    service.compact_all().unwrap();
+    while drive_one(&mut service, "c", &ev) {}
+    let live_fp = fingerprint(service.history("c").unwrap());
+    drop(service);
+
+    let recovered =
+        Service::recover(cfg, Arc::clone(&clock) as Arc<dyn Clock>)
+            .unwrap();
+    assert_eq!(fingerprint(recovered.history("c").unwrap()), live_fp);
+
+    let (ref_hist, _) = bare_session_run(&toml);
+    assert_eq!(live_fp, fingerprint(&ref_hist));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn torn_wal_tail_is_tolerated_on_recovery() {
+    let toml = study_toml(33, 6);
+    let dir = std::env::temp_dir().join("hyppo_serve_torn_tail");
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = ServeConfig {
+        n_shards: 1,
+        lease_ms: 1_000_000,
+        compact_every: 0,
+        wal_dir: Some(dir.clone()),
+    };
+    let clock = VirtualClock::shared();
+    let mut service = Service::new(
+        cfg.clone(),
+        Arc::clone(&clock) as Arc<dyn Clock>,
+    )
+    .unwrap();
+    create(&mut service, "t", &toml);
+    let ev = evaluator_for(&toml);
+    while drive_one(&mut service, "t", &ev) {}
+    let live_fp = fingerprint(service.history("t").unwrap());
+    drop(service);
+
+    // Simulate a crash halfway through an append: the last record is
+    // a length-prefixed fragment with no terminating newline.
+    let wal = hyppo::serve::Wal::open(&dir, 0).unwrap();
+    let log = wal.log_file();
+    let mut bytes = std::fs::read(&log).unwrap();
+    bytes.extend_from_slice(b"999 {\"v\":\"hyppo-wal-v1\",\"t\":\"tel");
+    std::fs::write(&log, &bytes).unwrap();
+
+    let recovered =
+        Service::recover(cfg, Arc::clone(&clock) as Arc<dyn Clock>)
+            .unwrap();
+    assert_eq!(fingerprint(recovered.history("t").unwrap()), live_fp);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn migration_hands_off_mid_study_without_changing_results() {
+    let toml = study_toml(55, 8);
+    let dir = std::env::temp_dir().join("hyppo_serve_migration");
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = ServeConfig {
+        n_shards: 2,
+        lease_ms: 1_000_000,
+        compact_every: 0,
+        wal_dir: Some(dir.clone()),
+    };
+    let clock = VirtualClock::shared();
+    let mut service = Service::new(
+        cfg.clone(),
+        Arc::clone(&clock) as Arc<dyn Clock>,
+    )
+    .unwrap();
+    create(&mut service, "m", &toml);
+    let ev = evaluator_for(&toml);
+    let home = service.shard_of("m").unwrap();
+    for _ in 0..3 {
+        assert!(drive_one(&mut service, "m", &ev));
+    }
+    let away = 1 - home;
+    service.migrate("m", away).unwrap();
+    assert_eq!(service.shard_of("m"), Some(away));
+    while drive_one(&mut service, "m", &ev) {}
+    let live_fp = fingerprint(service.history("m").unwrap());
+
+    // Kill + recover: the Evict/Import records must land the study on
+    // its migrated-to shard with the same history.
+    drop(service);
+    let recovered = Service::recover(
+        cfg,
+        Arc::clone(&clock) as Arc<dyn Clock>,
+    )
+    .unwrap();
+    assert_eq!(recovered.shard_of("m"), Some(away));
+    assert_eq!(fingerprint(recovered.history("m").unwrap()), live_fp);
+
+    let (ref_hist, _) = bare_session_run(&toml);
+    assert_eq!(live_fp, fingerprint(&ref_hist));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// The wire over a real socket: pool + TCP shell + worker loop
+// ---------------------------------------------------------------------
+
+#[test]
+fn tcp_round_trip_drives_studies_to_completion() {
+    use hyppo::serve::{
+        serve_listener, worker_loop, Client, ShardPool, SystemClock,
+        TcpClient,
+    };
+
+    let cfg = ServeConfig {
+        n_shards: 2,
+        lease_ms: 60_000,
+        compact_every: 0,
+        wal_dir: None,
+    };
+    let mut service =
+        Service::new(cfg, SystemClock::shared()).unwrap();
+    let studies: Vec<(String, String)> = (0..2)
+        .map(|i| (format!("net-{i}"), study_toml(70 + i, 5)))
+        .collect();
+    for (name, toml) in &studies {
+        create(&mut service, name, toml);
+    }
+    let pool = Arc::new(ShardPool::new(service, 10));
+
+    let listener =
+        std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let pool = Arc::clone(&pool);
+        std::thread::spawn(move || {
+            let _ = serve_listener(listener, pool);
+        });
+    }
+
+    let mut client = TcpClient::connect(&addr.to_string()).unwrap();
+    let listed = match client.call(&Request::ListStudies).unwrap() {
+        Response::Studies { studies } => studies,
+        other => panic!("list: {other:?}"),
+    };
+    assert_eq!(listed, vec!["net-0".to_string(), "net-1".to_string()]);
+
+    let names: Vec<String> =
+        studies.iter().map(|(n, _)| n.clone()).collect();
+    let report = worker_loop(&mut client, "tcp-w0", &names).unwrap();
+    assert_eq!(report.studies_done.len(), 2);
+    assert!(report.asks >= 5, "leased work over the socket");
+
+    // Results over the socket are the bare-session results.
+    for (name, toml) in &studies {
+        let status = client
+            .call(&Request::StudyStatus { study: name.clone() })
+            .unwrap();
+        let (ref_hist, _) = bare_session_run(toml);
+        match status {
+            Response::Status { complete, recorded, best, .. } => {
+                assert!(complete);
+                assert_eq!(recorded, ref_hist.len());
+                let ref_best = ref_hist.best(0.0).unwrap();
+                let got = best.expect("complete study has a best");
+                assert_eq!(got.eval_id, ref_best.id);
+                assert_eq!(
+                    got.objective.to_bits(),
+                    ref_best.objective(0.0).to_bits()
+                );
+            }
+            other => panic!("status: {other:?}"),
+        }
+    }
+
+    // A garbage line must produce a typed protocol error, not a hangup.
+    use std::io::{BufRead, BufReader, Write};
+    let mut raw = std::net::TcpStream::connect(addr).unwrap();
+    raw.write_all(b"not json at all\n").unwrap();
+    let mut line = String::new();
+    BufReader::new(raw.try_clone().unwrap())
+        .read_line(&mut line)
+        .unwrap();
+    match hyppo::serve::proto::response_from_line(&line).unwrap() {
+        Response::Error { code: ErrorCode::Protocol, .. } => {}
+        other => panic!("want protocol error, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// The local (in-process pool) backend: the CI smoke path
+// ---------------------------------------------------------------------
+
+#[test]
+fn local_backend_completes_and_matches_references() {
+    use hyppo::serve::{run_local, ShardPool, VirtualClock};
+
+    let cfg = ServeConfig {
+        n_shards: 2,
+        lease_ms: 60_000,
+        compact_every: 0,
+        wal_dir: None,
+    };
+    let service =
+        Service::new(cfg, VirtualClock::shared()).unwrap();
+    let pool = Arc::new(ShardPool::new(service, 10));
+    let studies: Vec<(String, String)> = (0..4)
+        .map(|i| (format!("local-{i}"), study_toml(200 + i, 6)))
+        .collect();
+    let reports = run_local(&pool, &studies, 2).unwrap();
+    assert_eq!(reports.len(), 2);
+    let done: usize =
+        reports.iter().map(|r| r.studies_done.len()).sum();
+    assert_eq!(done, 4);
+    assert_eq!(
+        reports.iter().map(|r| r.duplicate_tells).sum::<usize>(),
+        0
+    );
+
+    // Reassemble and compare every study to its solo reference — one
+    // worker per study makes this exact despite the threading.
+    let service = match Arc::try_unwrap(pool) {
+        Ok(pool) => pool.shutdown().unwrap(),
+        Err(_) => panic!("worker threads still hold the pool"),
+    };
+    for (name, toml) in &studies {
+        let (ref_hist, ref_stats) = bare_session_run(toml);
+        assert_eq!(
+            fingerprint(service.history(name).unwrap()),
+            fingerprint(&ref_hist),
+            "{name} diverged under the threaded pool"
+        );
+        assert_eq!(service.stats(name).unwrap(), ref_stats);
+    }
+}

@@ -8,9 +8,13 @@
   process (SipHash keys), so an unsorted walk is a bit-reproducibility
   bug by construction.
 * ``det-wall-clock``  — no ``Instant``/``SystemTime`` inside the
-  virtual-time simulator (``cluster::sim``, ``cluster::faults``) or the
-  sans-IO ``exec::session``: those surfaces are *defined* by not reading
-  ambient time.
+  virtual-time simulator (``cluster::sim``, ``cluster::faults``), the
+  sans-IO ``exec::session``, or the serve-subsystem state machines
+  (``serve::shard``, ``serve::wal``, ``serve::proto``,
+  ``serve::service``): those surfaces are *defined* by not reading
+  ambient time — the service sees time only through the injected
+  ``serve::Clock`` (whose ``SystemClock`` impl is the one sanctioned
+  wall-clock reader, in ``serve/clock.rs``).
 * ``det-ambient-rng`` — no ``thread_rng``/``rand::random``/``OsRng``/
   ``from_entropy`` anywhere in the Rust tree; all randomness flows from
   the seeded ``sampling::rng::Rng``.
@@ -34,7 +38,8 @@ RULES = {
     "det-hash-iter": "no HashMap/HashSet iteration without canonical sort "
                      "in exec/cluster/optimizer hot paths",
     "det-wall-clock": "no Instant/SystemTime inside cluster::sim, "
-                      "cluster::faults, or exec::session",
+                      "cluster::faults, exec::session, or the serve "
+                      "state machines (shard/wal/proto/service)",
     "det-ambient-rng": "no thread_rng/rand::random/OsRng/from_entropy "
                        "anywhere in the Rust tree",
 }
@@ -44,6 +49,13 @@ CLOCK_FREE_FILES = (
     os.path.join("rust", "src", "cluster", "sim.rs"),
     os.path.join("rust", "src", "cluster", "faults.rs"),
     os.path.join("rust", "src", "exec", "session.rs"),
+    # The serve state machines: time only via the injected serve::Clock
+    # (serve/clock.rs hosts SystemClock and is deliberately NOT listed;
+    # the I/O shells net.rs/pool.rs/local.rs are transport, not state).
+    os.path.join("rust", "src", "serve", "shard.rs"),
+    os.path.join("rust", "src", "serve", "wal.rs"),
+    os.path.join("rust", "src", "serve", "proto.rs"),
+    os.path.join("rust", "src", "serve", "service.rs"),
 )
 ORDER_INSENSITIVE = (
     ".len()", ".count()", ".sum()", ".sum::<", ".is_empty()",

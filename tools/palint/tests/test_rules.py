@@ -158,6 +158,36 @@ class TestWallClock(unittest.TestCase):
                 "    xs.iter().sum()\n}\n"})
         self.assertEqual(new_by_rule(report, "det-wall-clock"), [])
 
+    def test_instant_in_serve_shard_fires(self):
+        report = run_palint({
+            "rust/src/serve/shard.rs":
+                "pub struct ShardCore { pub id: usize }\n"
+                "pub fn now_ms() -> u128 {\n"
+                "    std::time::Instant::now().elapsed().as_millis()\n"
+                "}\n"})
+        found = new_by_rule(report, "det-wall-clock")
+        self.assertTrue(any("Instant" in f.message for f in found), found)
+
+    def test_clock_free_serve_files_are_clean(self):
+        report = run_palint({
+            "rust/src/serve/wal.rs":
+                "pub fn frame(body: &str) -> String {\n"
+                "    format!(\"{} {body}\\n\", body.len())\n}\n",
+            "rust/src/serve/service.rs":
+                "pub fn route(study: &str, n: usize) -> usize {\n"
+                "    study.len() % n.max(1)\n}\n"})
+        self.assertEqual(new_by_rule(report, "det-wall-clock"), [])
+
+    def test_serve_clock_rs_hosts_the_system_clock(self):
+        # serve/clock.rs is the sanctioned wall-clock reader and must
+        # stay off the clock-free list.
+        report = run_palint({
+            "rust/src/serve/clock.rs":
+                "pub fn wall_ms() -> u128 {\n"
+                "    std::time::Instant::now().elapsed().as_millis()\n"
+                "}\n"})
+        self.assertEqual(new_by_rule(report, "det-wall-clock"), [])
+
 
 class TestAmbientRng(unittest.TestCase):
     def test_thread_rng_fires(self):
