@@ -1,0 +1,258 @@
+//! CI smoke for the serve failure domains (DESIGN.md §16): run two
+//! deterministic fault plans against the real in-process service and
+//! publish the analytically-known outcomes as a `hyppo-bench-v1`
+//! document, so the `serve-chaos` CI job can gate
+//! `derived.poisoned_trials` and `derived.shard_restarts` at their
+//! exact values.
+//!
+//! Plan A (quarantine): a worker repeatedly leases one evaluation and
+//! dies; after `max_eval_retries = 2` lease expiries on the virtual
+//! clock the evaluation must be quarantined — exactly 1 poisoned trial,
+//! study still runs to completion with the penalty recorded in history.
+//!
+//! Plan B (supervision): a WAL-backed shard panics with an evaluation
+//! in flight; the supervisor must restart it from WAL replay — exactly
+//! 1 restart, the orphan re-handed with identical identity, and the
+//! finished history bit-identical to an undisturbed reference run.
+//!
+//! Run with:
+//!
+//! ```sh
+//! cargo run --release --example serve_chaos -- --json serve_chaos.json
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use hyppo::config;
+use hyppo::eval::synthetic::SyntheticEvaluator;
+use hyppo::eval::Evaluator;
+use hyppo::exec::Session;
+use hyppo::serve::{
+    Clock, Request, Response, ServeConfig, Service, ShardPool,
+    VirtualClock, WireJob,
+};
+use hyppo::util::bench::BenchRun;
+
+fn study_toml(seed: u64, max_evals: usize) -> String {
+    format!(
+        "[hpo]\n\
+         max_evaluations = {max_evals}\n\
+         n_init = 1\n\
+         n_trials = 1\n\
+         surrogate = \"rbf\"\n\
+         seed = {seed}\n\
+         \n\
+         [space]\n\
+         x = {{ kind = \"continuous\", lo = -2.0, hi = 2.0 }}\n\
+         n = [1, 16]\n"
+    )
+}
+
+fn evaluator_for(config_toml: &str) -> Result<SyntheticEvaluator> {
+    let cfg = config::build(&config::parse(config_toml)?)?;
+    Ok(SyntheticEvaluator::new(cfg.space.clone(), cfg.hpo.seed))
+}
+
+fn ask(study: &str) -> Request {
+    Request::Ask { study: study.into(), worker: "w0".into() }
+}
+
+fn tell(
+    study: &str,
+    job: &WireJob,
+    trial: usize,
+    ev: &SyntheticEvaluator,
+) -> Request {
+    Request::Tell {
+        study: study.into(),
+        worker: "w0".into(),
+        eval_id: job.eval_id,
+        trial,
+        outcome: ev.run_trial(&job.theta, trial, job.seed),
+    }
+}
+
+/// Ask-and-tell one evaluation through `handle`; false once done.
+fn drive_one(
+    mut handle: impl FnMut(&Request) -> Response,
+    study: &str,
+    ev: &SyntheticEvaluator,
+) -> Result<bool> {
+    match handle(&ask(study)) {
+        Response::Asked { job: Some(job), .. } => {
+            for trial in job.trials.clone() {
+                match handle(&tell(study, &job, trial, ev)) {
+                    Response::Told { .. } => {}
+                    other => bail!("tell failed: {other:?}"),
+                }
+            }
+            Ok(true)
+        }
+        Response::Asked { job: None, done, .. } => Ok(!done),
+        other => bail!("ask failed: {other:?}"),
+    }
+}
+
+/// Plan A: repeated lease expiry quarantines exactly one evaluation.
+fn poison_plan() -> Result<f64> {
+    let toml = study_toml(101, 4);
+    let cfg = ServeConfig {
+        n_shards: 1,
+        lease_ms: 100,
+        max_eval_retries: 2,
+        poison_penalty: 1.0e9,
+        ..ServeConfig::default()
+    };
+    let clock = VirtualClock::shared();
+    let mut service =
+        Service::new(cfg, Arc::clone(&clock) as Arc<dyn Clock>)?;
+    match service.handle(&Request::CreateStudy {
+        study: "toxic".into(),
+        config_toml: toml.clone(),
+    }) {
+        Response::Created { .. } => {}
+        other => bail!("create failed: {other:?}"),
+    }
+    // Two lease-and-die rounds on the same evaluation.
+    for round in 0..2 {
+        match service.handle(&ask("toxic")) {
+            Response::Asked { job: Some(_), .. } => {}
+            other => bail!("round {round} ask failed: {other:?}"),
+        }
+        clock.advance(101);
+    }
+    // The next command's expiry sweep fires the quarantine; finish the
+    // study normally.
+    let ev = evaluator_for(&toml)?;
+    while drive_one(|r| service.handle(r), "toxic", &ev)? {}
+    let poisoned = match service
+        .handle(&Request::StudyStatus { study: "toxic".into() })
+    {
+        Response::Status { poisoned, complete, .. } => {
+            if !complete {
+                bail!("poison plan did not complete the study");
+            }
+            poisoned
+        }
+        other => bail!("status failed: {other:?}"),
+    };
+    println!(
+        "serve_chaos: poison plan — {poisoned} quarantined, study \
+         complete"
+    );
+    Ok(poisoned as f64)
+}
+
+/// The solo reference for plan B: a bare session driven sequentially.
+fn reference_history(config_toml: &str) -> Result<Vec<(usize, u64)>> {
+    let cfg = config::build(&config::parse(config_toml)?)?;
+    let ev = evaluator_for(config_toml)?;
+    let mut session = Session::new(&ev, &cfg.hpo);
+    while !session.is_complete() {
+        let job = session
+            .ask_eval()
+            .context("sequential loop never waits")?;
+        for trial in job.trials.clone() {
+            let outcome = ev.run_trial(&job.theta, trial, job.seed);
+            session.tell(job.id, trial, outcome)?;
+        }
+    }
+    Ok(session
+        .history()
+        .records
+        .iter()
+        .map(|r| (r.id, r.summary.interval.center.to_bits()))
+        .collect())
+}
+
+/// Plan B: an injected shard panic costs exactly one supervised
+/// restart and zero bits.
+fn restart_plan() -> Result<f64> {
+    let toml = study_toml(202, 6);
+    let reference = reference_history(&toml)?;
+    let dir = std::env::temp_dir().join("hyppo_serve_chaos_example");
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = ServeConfig {
+        n_shards: 1,
+        lease_ms: 1_000_000,
+        wal_dir: Some(dir.clone()),
+        restart_backoff_ms: 1,
+        restart_backoff_max_ms: 2,
+        ..ServeConfig::default()
+    };
+    let clock = VirtualClock::shared();
+    let mut service =
+        Service::new(cfg, Arc::clone(&clock) as Arc<dyn Clock>)?;
+    match service.handle(&Request::CreateStudy {
+        study: "jolt".into(),
+        config_toml: toml.clone(),
+    }) {
+        Response::Created { .. } => {}
+        other => bail!("create failed: {other:?}"),
+    }
+    let ev = evaluator_for(&toml)?;
+    let pool = Arc::new(ShardPool::new(service, 60_000));
+    // Some clean progress, then a panic with a lease outstanding.
+    for _ in 0..2 {
+        if !drive_one(|r| pool.call(r), "jolt", &ev)? {
+            bail!("study finished before the fault fired");
+        }
+    }
+    match pool.call(&ask("jolt")) {
+        Response::Asked { job: Some(_), .. } => {}
+        other => bail!("pre-crash ask failed: {other:?}"),
+    }
+    match pool.inject_panic(0) {
+        Response::Error { .. } => {}
+        other => bail!("inject_panic reply: {other:?}"),
+    }
+    while drive_one(|r| pool.call(r), "jolt", &ev)? {}
+    let restarts: u64 = pool.restarts().iter().sum();
+    let pool = match Arc::try_unwrap(pool) {
+        Ok(pool) => pool,
+        Err(_) => bail!("pool still shared"),
+    };
+    let service = pool.shutdown()?;
+    let got: Vec<(usize, u64)> = service
+        .history("jolt")
+        .context("history of jolt")?
+        .records
+        .iter()
+        .map(|r| (r.id, r.summary.interval.center.to_bits()))
+        .collect();
+    if got != reference {
+        bail!(
+            "restarted run diverged from the bare-session reference \
+             ({} vs {} records)",
+            got.len(),
+            reference.len()
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    println!(
+        "serve_chaos: restart plan — {restarts} supervised restart(s), \
+         history bit-matches the reference"
+    );
+    Ok(restarts as f64)
+}
+
+fn main() -> Result<()> {
+    let mut run = BenchRun::from_args("serve_chaos");
+    let poisoned = poison_plan()?;
+    let restarts = restart_plan()?;
+    run.metric("poisoned_trials", poisoned);
+    run.metric("shard_restarts", restarts);
+    run.finish()?;
+    // The analytic values double as a local gate so the example fails
+    // loudly even without the CI JSON check.
+    if poisoned != 1.0 || restarts != 1.0 {
+        bail!(
+            "analytic outcomes off: poisoned_trials = {poisoned} \
+             (want 1), shard_restarts = {restarts} (want 1)"
+        );
+    }
+    println!("serve_chaos: OK");
+    Ok(())
+}

@@ -70,6 +70,7 @@ fn main() -> Result<()> {
         lease_ms: 60_000,
         compact_every: 0,
         wal_dir: None,
+        ..ServeConfig::default()
     };
     let service = Service::new(cfg, VirtualClock::shared())?;
     let pool = Arc::new(ShardPool::new(service, 10));

@@ -435,6 +435,331 @@ fn parse_event(v: &Value) -> Result<Fault> {
     }
 }
 
+// ===== serve-stack fault injection (DESIGN.md §16) ==================
+//
+// The simulator faults above act on *virtual cluster* runs; the types
+// below act on the *serve stack*: scripted disk misbehaviour beneath a
+// shard WAL ([`FaultyWalIo`]) and scripted connection misbehaviour
+// beneath the line protocol ([`ChaosConnector`]). Both are plans over
+// operation indices, so a chaos test is a pure function of its script —
+// no timing races, no flaky sleeps.
+
+/// One scripted disk fault, firing at a 0-based append index.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DiskFault {
+    /// Append `at_append` fails outright; nothing reaches the file.
+    WalAppendError { at_append: usize },
+    /// Append `at_append` writes only the first `keep` bytes, then
+    /// errors — the torn tail a power cut leaves behind.
+    WalTornTail { at_append: usize, keep: usize },
+    /// Append `at_append` succeeds but stalls the disk: the attached
+    /// virtual clock jumps `delay_ms` first (lease expiry sees the
+    /// stall; the data is fine).
+    SlowFsync { at_append: usize, delay_ms: u64 },
+}
+
+impl DiskFault {
+    fn at_append(&self) -> usize {
+        match *self {
+            DiskFault::WalAppendError { at_append }
+            | DiskFault::WalTornTail { at_append, .. }
+            | DiskFault::SlowFsync { at_append, .. } => at_append,
+        }
+    }
+}
+
+/// A [`WalIo`] wrapper that injects a [`DiskFault`] plan over an inner
+/// implementation. Append indices count *attempts* on this instance,
+/// across every path it is asked to write (primary and failover), so a
+/// script addresses "the third write this disk sees".
+#[derive(Debug)]
+pub struct FaultyWalIo {
+    inner: Box<dyn crate::serve::wal::WalIo>,
+    plan: Vec<DiskFault>,
+    appends: usize,
+    clock: Option<std::sync::Arc<crate::serve::clock::VirtualClock>>,
+}
+
+impl FaultyWalIo {
+    /// Wrap `inner` with a fault script.
+    pub fn new(
+        inner: Box<dyn crate::serve::wal::WalIo>,
+        plan: Vec<DiskFault>,
+    ) -> FaultyWalIo {
+        FaultyWalIo { inner, plan, appends: 0, clock: None }
+    }
+
+    /// Attach a virtual clock for [`DiskFault::SlowFsync`] stalls.
+    pub fn with_clock(
+        mut self,
+        clock: std::sync::Arc<crate::serve::clock::VirtualClock>,
+    ) -> FaultyWalIo {
+        self.clock = Some(clock);
+        self
+    }
+
+    /// Append attempts seen so far.
+    pub fn appends(&self) -> usize {
+        self.appends
+    }
+}
+
+impl crate::serve::wal::WalIo for FaultyWalIo {
+    fn append(
+        &mut self,
+        path: &std::path::Path,
+        bytes: &[u8],
+    ) -> Result<()> {
+        let idx = self.appends;
+        self.appends += 1;
+        let fault =
+            self.plan.iter().find(|f| f.at_append() == idx).cloned();
+        match fault {
+            Some(DiskFault::WalAppendError { .. }) => {
+                bail!("injected WAL append error at append {idx}")
+            }
+            Some(DiskFault::WalTornTail { keep, .. }) => {
+                let head = bytes.get(..keep.min(bytes.len()));
+                if let Some(head) = head {
+                    if !head.is_empty() {
+                        self.inner.append(path, head)?;
+                    }
+                }
+                bail!("injected torn tail at append {idx}")
+            }
+            Some(DiskFault::SlowFsync { delay_ms, .. }) => {
+                if let Some(clock) = &self.clock {
+                    clock.advance(delay_ms);
+                }
+                self.inner.append(path, bytes)
+            }
+            None => self.inner.append(path, bytes),
+        }
+    }
+
+    fn atomic_write(
+        &mut self,
+        path: &std::path::Path,
+        bytes: &[u8],
+    ) -> Result<()> {
+        // Snapshots are atomic-rename writes; the faults above model
+        // append-path failures only.
+        self.inner.atomic_write(path, bytes)
+    }
+}
+
+/// A cloneable [`WalIo`] sharing one [`FaultyWalIo`] behind a mutex, so
+/// a supervisor restart (which opens a fresh WAL through the pool's IO
+/// factory) keeps talking to the *same* scripted disk — a disk that
+/// "stays broken" keeps failing the rebuilt shard.
+#[derive(Debug, Clone)]
+pub struct SharedWalIo(std::sync::Arc<std::sync::Mutex<FaultyWalIo>>);
+
+impl SharedWalIo {
+    /// Share `io` across clones.
+    pub fn new(io: FaultyWalIo) -> SharedWalIo {
+        SharedWalIo(std::sync::Arc::new(std::sync::Mutex::new(io)))
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, FaultyWalIo> {
+        match self.0.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Append attempts the shared disk has seen.
+    pub fn appends(&self) -> usize {
+        self.lock().appends()
+    }
+}
+
+impl crate::serve::wal::WalIo for SharedWalIo {
+    fn append(
+        &mut self,
+        path: &std::path::Path,
+        bytes: &[u8],
+    ) -> Result<()> {
+        self.lock().append(path, bytes)
+    }
+
+    fn atomic_write(
+        &mut self,
+        path: &std::path::Path,
+        bytes: &[u8],
+    ) -> Result<()> {
+        self.lock().atomic_write(path, bytes)
+    }
+}
+
+/// One scripted connection fault, firing at a 0-based send index
+/// (counted across reconnects — the script addresses "the third send
+/// this client ever makes").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportFault {
+    /// The request never reaches the service; the client notices only
+    /// when the read fails.
+    DropRequest { at_send: usize },
+    /// The request *executes* but its response is lost — the lost-ack
+    /// case the dedup window exists for.
+    DropResponse { at_send: usize },
+    /// The request is delivered twice (both responses queue; the
+    /// duplicate must be a typed no-op server-side).
+    DuplicateRequest { at_send: usize },
+    /// The request is delivered twice and the responses queue in
+    /// reverse order, leaving a stale line for the client to skip.
+    ReorderResponses { at_send: usize },
+    /// The connection drops at send time; the client must reconnect.
+    Disconnect { at_send: usize },
+}
+
+impl TransportFault {
+    fn at_send(&self) -> usize {
+        match *self {
+            TransportFault::DropRequest { at_send }
+            | TransportFault::DropResponse { at_send }
+            | TransportFault::DuplicateRequest { at_send }
+            | TransportFault::ReorderResponses { at_send }
+            | TransportFault::Disconnect { at_send } => at_send,
+        }
+    }
+}
+
+/// Shared state behind a chaos connection: the in-process endpoint
+/// (usually `LineServer::serve`), the fault script, and the simulated
+/// socket (pending responses + broken flag).
+struct ChaosState {
+    endpoint: Box<dyn FnMut(&str) -> String + Send>,
+    plan: Vec<TransportFault>,
+    sends: usize,
+    pending: std::collections::VecDeque<String>,
+    broken: bool,
+}
+
+/// A [`Connector`] whose connections run a [`TransportFault`] script
+/// against an in-process endpoint. Reconnecting clears the simulated
+/// socket (pending lines are gone, the broken flag resets) but the
+/// send counter persists — exactly TCP's semantics, where a new
+/// connection starts clean but the world has still seen your traffic.
+///
+/// Clones share the scripted state, so a test can keep a probe handle
+/// on the send counter after moving the connector into a client.
+///
+/// [`Connector`]: crate::serve::net::Connector
+#[derive(Clone)]
+pub struct ChaosConnector(
+    std::sync::Arc<std::sync::Mutex<ChaosState>>,
+);
+
+impl ChaosConnector {
+    /// A chaos connector over `endpoint` running `plan`.
+    pub fn new(
+        endpoint: impl FnMut(&str) -> String + Send + 'static,
+        plan: Vec<TransportFault>,
+    ) -> ChaosConnector {
+        ChaosConnector(std::sync::Arc::new(std::sync::Mutex::new(
+            ChaosState {
+                endpoint: Box::new(endpoint),
+                plan,
+                sends: 0,
+                pending: std::collections::VecDeque::new(),
+                broken: false,
+            },
+        )))
+    }
+
+    /// Sends the script has seen so far (including dropped ones).
+    pub fn sends(&self) -> usize {
+        lock_chaos(&self.0).sends
+    }
+}
+
+fn lock_chaos(
+    m: &std::sync::Mutex<ChaosState>,
+) -> std::sync::MutexGuard<'_, ChaosState> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+impl crate::serve::net::Connector for ChaosConnector {
+    fn connect(
+        &mut self,
+    ) -> Result<Box<dyn crate::serve::net::Transport>> {
+        let mut st = lock_chaos(&self.0);
+        st.broken = false;
+        st.pending.clear();
+        Ok(Box::new(ChaosTransport(std::sync::Arc::clone(&self.0))))
+    }
+}
+
+/// One live chaos connection (see [`ChaosConnector`]).
+pub struct ChaosTransport(
+    std::sync::Arc<std::sync::Mutex<ChaosState>>,
+);
+
+impl crate::serve::net::Transport for ChaosTransport {
+    fn send_line(&mut self, line: &str) -> Result<()> {
+        let mut st = lock_chaos(&self.0);
+        if st.broken {
+            bail!("chaos connection is broken");
+        }
+        let idx = st.sends;
+        st.sends += 1;
+        let fault =
+            st.plan.iter().find(|f| f.at_send() == idx).copied();
+        match fault {
+            Some(TransportFault::DropRequest { .. }) => {
+                // Lost on the wire: nothing executes, nothing comes
+                // back; the client's next read fails.
+                st.broken = true;
+                Ok(())
+            }
+            Some(TransportFault::DropResponse { .. }) => {
+                let resp = (st.endpoint)(line);
+                drop(resp);
+                st.broken = true;
+                Ok(())
+            }
+            Some(TransportFault::DuplicateRequest { .. }) => {
+                let first = (st.endpoint)(line);
+                let second = (st.endpoint)(line);
+                st.pending.push_back(first);
+                st.pending.push_back(second);
+                Ok(())
+            }
+            Some(TransportFault::ReorderResponses { .. }) => {
+                let first = (st.endpoint)(line);
+                let second = (st.endpoint)(line);
+                st.pending.push_back(second);
+                st.pending.push_back(first);
+                Ok(())
+            }
+            Some(TransportFault::Disconnect { .. }) => {
+                st.broken = true;
+                bail!("injected disconnect at send {idx}")
+            }
+            None => {
+                let resp = (st.endpoint)(line);
+                st.pending.push_back(resp);
+                Ok(())
+            }
+        }
+    }
+
+    fn recv_line(&mut self) -> Result<String> {
+        let mut st = lock_chaos(&self.0);
+        if let Some(line) = st.pending.pop_front() {
+            return Ok(line);
+        }
+        if st.broken {
+            bail!("chaos connection reset");
+        }
+        bail!("no response pending (script/read mismatch)")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

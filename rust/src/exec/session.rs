@@ -53,6 +53,8 @@
 //!   `(θ, seed)` pair, so deterministic evaluators reproduce (and, under
 //!   adaptive replicas, re-extend) the killed run exactly.
 
+use std::time::Duration;
+
 use anyhow::{anyhow, bail, Result};
 
 use crate::eval::{aggregate, Evaluator, TrialOutcome};
@@ -513,13 +515,19 @@ impl<'ev> Session<'ev> {
                 return Ok(Told { recorded: 0, extended: 1 });
             }
         }
-        // Record — directly for adaptive-phase evaluations, behind the
-        // id-order barrier for the initial design.
+        Ok(self.finish(idx))
+    }
+
+    /// Record the complete pending evaluation at `idx` — directly for
+    /// adaptive-phase evaluations, behind the id-order barrier for the
+    /// initial design. Shared completion tail of [`Session::tell`] and
+    /// [`Session::poison`].
+    fn finish(&mut self, idx: usize) -> Told {
         let mut told = Told::default();
         if self.pending[idx].init {
             self.pending[idx].buffered = true;
             if self.pending.iter().any(|p| p.init && !p.buffered) {
-                return Ok(told);
+                return told;
             }
             let (mut inits, rest): (Vec<_>, Vec<_>) =
                 std::mem::take(&mut self.pending)
@@ -536,7 +544,54 @@ impl<'ev> Session<'ev> {
             self.record(p);
             told.recorded = 1;
         }
-        Ok(told)
+        told
+    }
+
+    /// Quarantine a pending evaluation: overwrite whatever partial
+    /// outcomes exist with a deterministic penalty outcome for every
+    /// planned trial, then record the evaluation through the normal
+    /// completion path (init barrier included).
+    ///
+    /// This is the `serve` layer's poison-trial endpoint: an evaluation
+    /// whose lease keeps expiring is *scored* as `penalty` rather than
+    /// requeued forever or silently dropped — the record stays in the
+    /// history (checkpoint schema unchanged) so replay and audit see it.
+    /// The synthesized record is a function of `(θ, planned, penalty)`
+    /// only — independent of which partial outcomes had arrived and of
+    /// *when* the quarantine fired — so poisoned entries are bit-stable
+    /// across faulted/fault-free runs. The adaptive-trials extension is
+    /// deliberately bypassed: the trial set is synthetic, its spread is
+    /// zero by construction, and extending a quarantined evaluation
+    /// would hand out more doomed work.
+    pub fn poison(&mut self, eval_id: usize, penalty: f64) -> Result<Told> {
+        if !penalty.is_finite() {
+            bail!("poison penalty must be finite, got {penalty}");
+        }
+        let idx = self
+            .pending
+            .iter()
+            .position(|p| p.job.id == eval_id)
+            .ok_or_else(|| {
+                anyhow!("poison for unknown evaluation {eval_id}")
+            })?;
+        let Some(p) = self.pending.get_mut(idx) else {
+            bail!("poison lost evaluation {eval_id} mid-flight");
+        };
+        if p.buffered {
+            bail!(
+                "evaluation {eval_id} already completed (buffered behind \
+                 the init barrier); refusing to poison finished work"
+            );
+        }
+        let quarantined = TrialOutcome {
+            loss: penalty,
+            dropout_losses: Vec::new(),
+            predictions: None,
+            dropout_predictions: Vec::new(),
+            cost: Duration::ZERO,
+        };
+        p.outcomes = vec![Some(quarantined); p.planned];
+        Ok(self.finish(idx))
     }
 
     /// Aggregate a completed evaluation into the history and feed the
@@ -802,6 +857,134 @@ mod tests {
         s.tell(t.eval_id, t.trial, o.clone()).unwrap();
         assert!(s.tell(t.eval_id, t.trial, o.clone()).is_err());
         assert!(s.tell(t.eval_id, 99, o).is_err());
+    }
+
+    #[test]
+    fn poison_scores_penalty_and_ignores_partial_outcomes() {
+        // Two sessions, same seed. In A the quarantined evaluation is
+        // poisoned untouched; in B it first absorbs a partial outcome.
+        // The poisoned record — and everything downstream of it — must
+        // be bit-identical: quarantine is a function of (θ, planned,
+        // penalty) only.
+        let penalty = 123.5;
+        let run = |partial: bool| {
+            let ev = evaluator(11);
+            let mut s = Session::new(&ev, &cfg(8, 6));
+            drain_init(&mut s);
+            let job = s.ask_eval().expect("proposal available");
+            if partial {
+                let t0 = *job.trials.first().unwrap();
+                let o = ev.run_trial(&job.theta, t0, job.seed);
+                s.tell(job.id, t0, o).unwrap();
+            }
+            let told = s.poison(job.id, penalty).unwrap();
+            assert_eq!(told.recorded, 1);
+            drain(&mut s);
+            s.into_history()
+        };
+        let a = run(false);
+        let b = run(true);
+        assert_eq!(
+            serde_json::to_string(&a).unwrap(),
+            serde_json::to_string(&b).unwrap(),
+            "poisoned history depends on partial outcomes"
+        );
+        // First proposal after the 4-evaluation initial design.
+        let r = a.records.iter().find(|r| r.id == 4).unwrap();
+        assert_eq!(r.summary.trained_mean, penalty);
+        assert_eq!(r.summary.trained_std, 0.0);
+        assert_eq!(r.summary.interval.center, penalty);
+        assert_eq!(r.summary.v_model_g, 0.0);
+        assert_eq!(r.summary.total_cost, Duration::ZERO);
+    }
+
+    /// Complete exactly the initial design, leaving the session at the
+    /// start of the proposal phase.
+    fn drain_init(s: &mut Session) {
+        loop {
+            match s.ask() {
+                Ask::Trial(t) => {
+                    let o =
+                        s.evaluator.run_trial(&t.theta, t.trial, t.seed);
+                    s.tell(t.eval_id, t.trial, o).unwrap();
+                }
+                Ask::Wait => unreachable!("init never starves"),
+                Ask::Done => unreachable!("budget > init design"),
+            }
+            if !s.history().records.is_empty() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn poison_rejects_unknown_buffered_and_nonfinite() {
+        let ev = evaluator(1);
+        let mut s = Session::new(&ev, &cfg(6, 2));
+        assert!(s.poison(999, 1.0).is_err(), "unknown eval");
+        let t = match s.ask() {
+            Ask::Trial(t) => t,
+            _ => unreachable!(),
+        };
+        assert!(s.poison(t.eval_id, f64::NAN).is_err(), "NaN penalty");
+        assert!(
+            s.poison(t.eval_id, f64::INFINITY).is_err(),
+            "infinite penalty"
+        );
+        // Complete one init evaluation fully: buffered behind the
+        // barrier, so poisoning it must be refused like requeue is.
+        let mut done_id = None;
+        loop {
+            match s.ask() {
+                Ask::Trial(t) => {
+                    let o =
+                        s.evaluator.run_trial(&t.theta, t.trial, t.seed);
+                    s.tell(t.eval_id, t.trial, o).unwrap();
+                    // Pending but no longer outstanding ⇒ complete and
+                    // buffered behind the init barrier.
+                    if s.pending_ids().contains(&t.eval_id)
+                        && !s.outstanding_ids().contains(&t.eval_id)
+                    {
+                        done_id = Some(t.eval_id);
+                        break;
+                    }
+                }
+                _ => break,
+            }
+        }
+        let id = done_id.expect("one init evaluation completed");
+        assert!(s.poison(id, 1.0).is_err(), "buffered eval");
+    }
+
+    #[test]
+    fn poison_flushes_the_init_barrier() {
+        // Poisoning the last outstanding init evaluation must release
+        // the whole buffered design, exactly like the final tell does.
+        let ev = evaluator(2);
+        let mut s = Session::new(&ev, &cfg(10, 3));
+        let mut trials = Vec::new();
+        loop {
+            match s.ask() {
+                Ask::Trial(t) => trials.push(t),
+                Ask::Wait => break,
+                Ask::Done => unreachable!(),
+            }
+        }
+        // Finish every evaluation except the last one's trials.
+        let last_id = trials.iter().map(|t| t.eval_id).max().unwrap();
+        for t in trials.iter().filter(|t| t.eval_id != last_id) {
+            let o = ev.run_trial(&t.theta, t.trial, t.seed);
+            assert_eq!(s.tell(t.eval_id, t.trial, o).unwrap().recorded, 0);
+        }
+        let told = s.poison(last_id, 9.0).unwrap();
+        assert_eq!(told.recorded, 4);
+        let poisoned = s
+            .history()
+            .records
+            .iter()
+            .find(|r| r.id == last_id)
+            .unwrap();
+        assert_eq!(poisoned.summary.trained_mean, 9.0);
     }
 
     #[test]

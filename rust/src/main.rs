@@ -39,7 +39,7 @@ use hyppo::report::{print_table, write_history_csv, write_sweep_csv};
 use hyppo::runtime::{artifact_dir, SharedEngine};
 use hyppo::serve::{
     serve_listener, worker_loop, ErrorCode, Request, Response,
-    ServeConfig, Service, ShardPool, SystemClock, TcpClient,
+    ServeConfig, Service, ShardPool, SystemClock,
     PROTO_VERSION,
 };
 use hyppo::util::cli::Args;
@@ -64,8 +64,9 @@ USAGE:
             [--steps N] [--tasks M] [--max-retries R] [--json out.json]
   hyppo serve --config <serve.toml> [--listen HOST:PORT]
             [--shards N] [--wal DIR]
+            [--wal-failure wedge|readonly|failover] [--wal-failover DIR]
   hyppo worker [--connect HOST:PORT] [--worker-id ID]
-            [--studies a,b,c]
+            [--studies a,b,c] [--retries N] [--retry-backoff-ms MS]
   hyppo help
 ";
 
@@ -606,6 +607,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(dir) = args.get("wal") {
         cfg.wal_dir = Some(dir.into());
     }
+    if let Some(policy) = args.get("wal-failure") {
+        cfg.wal_failure = hyppo::serve::WalFailure::from_str(policy)
+            .context("--wal-failure")?;
+    }
+    if let Some(dir) = args.get("wal-failover") {
+        cfg.wal_failover_dir = Some(dir.into());
+    }
+    if cfg.wal_failure == hyppo::serve::WalFailure::Failover
+        && cfg.wal_failover_dir.is_none()
+    {
+        bail!("--wal-failure failover requires --wal-failover DIR");
+    }
     let studies = ServeConfig::studies_from_doc(&doc)?;
     let clock = SystemClock::shared();
     let mut service = Service::open(cfg.clone(), clock)?;
@@ -647,7 +660,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_worker(args: &Args) -> Result<()> {
     let addr = args.str_or("connect", "127.0.0.1:7077");
     let worker = args.str_or("worker-id", "w0");
-    let mut client = TcpClient::connect(&addr)?;
+    let mut policy = hyppo::serve::RetryPolicy::default();
+    if let Some(n) = args.get("retries") {
+        policy.max_attempts = n
+            .parse::<u32>()
+            .context("--retries: expected integer")?
+            .max(1);
+    }
+    if let Some(ms) = args.get("retry-backoff-ms") {
+        policy.backoff_base_ms = ms
+            .parse::<u64>()
+            .context("--retry-backoff-ms: expected integer")?
+            .max(1);
+    }
+    // Resends are idempotent: each request carries a sequence number
+    // and the service answers replays from its dedup window.
+    let mut client = hyppo::serve::RetryClient::tcp(addr, policy);
     let studies: Vec<String> = match args.get("studies") {
         Some(list) => list
             .split(',')

@@ -93,6 +93,7 @@ pub fn worker_loop(
             client.call(&Request::Heartbeat {
                 study: study.clone(),
                 worker: worker.to_string(),
+                eval: None,
             })?;
             let resp = client.call(&Request::Ask {
                 study: study.clone(),

@@ -22,10 +22,16 @@
 //! * [`clock`] — injected time ([`Clock`]): lease expiry is driven by
 //!   a [`VirtualClock`] in tests (making timeouts part of the
 //!   reproducible command stream) and a [`SystemClock`] in production.
+//! * [`supervisor`] — the sans-IO restart policy behind shard
+//!   supervision: jittered exponential backoff under a cumulative
+//!   restart budget; exhaustion parks the shard in the typed
+//!   `Degraded` state (DESIGN.md §16).
 //!
 //! Entry points: `hyppo serve` (TCP server) and `hyppo worker` (remote
 //! trial worker); `tests/serve.rs` proves crash-replay and
-//! service-vs-bare-session bit-identity.
+//! service-vs-bare-session bit-identity, and `tests/serve_chaos.rs`
+//! proves the failure-domain contracts (supervised restart identity,
+//! WAL failover chains, poison-trial quarantine, retry/dedup).
 
 pub mod clock;
 pub mod local;
@@ -34,16 +40,26 @@ pub mod pool;
 pub mod proto;
 pub mod service;
 pub mod shard;
+pub mod supervisor;
 pub mod wal;
 
 pub use clock::{Clock, SystemClock, VirtualClock};
 pub use local::{run_local, worker_loop, WorkerReport};
-pub use net::{serve_listener, TcpClient};
-pub use pool::{PoolClient, ShardPool};
+pub use net::{
+    serve_listener, Connector, LineServer, RetryClient, RetryPolicy,
+    TcpClient, Transport,
+};
+pub use pool::{PoolClient, ShardPool, WalIoFactory};
 pub use proto::{
     Client, ErrorCode, Request, Response, WireBest, WireJob,
     PROTO_VERSION,
 };
 pub use service::{route, ServeConfig, Service};
-pub use shard::{Lease, ShardCore, ShardCounters};
-pub use wal::{ShardSnapshot, StudySnapshot, Wal, WalRecord};
+pub use shard::{
+    Lease, ShardCore, ShardCounters, ShardHealth, ShardOpts,
+};
+pub use supervisor::{Supervisor, SupervisorConfig, SupervisorDecision};
+pub use wal::{
+    FsWalIo, ShardSnapshot, StudySnapshot, Wal, WalFailure, WalIo,
+    WalRecord,
+};

@@ -1,30 +1,135 @@
-//! TCP transport for the `hyppo-serve-v1` protocol (DESIGN.md §15).
+//! TCP transport for the `hyppo-serve-v1` protocol (DESIGN.md §15–16).
 //!
 //! The server is an accept loop handing each connection its own
 //! thread; every request line is routed through the shared
-//! [`ShardPool`], so per-shard FIFO ordering (and therefore
+//! [`LineServer`], so per-shard FIFO ordering (and therefore
 //! determinism and WAL consistency) is enforced by the pool, not the
 //! socket layer. Malformed lines get a typed `protocol` error reply
 //! and the connection stays up — a flaky worker can't poison the
 //! service.
 //!
-//! [`TcpClient`] is the matching [`Client`] implementation: one
-//! request line out, one response line back, blocking.
+//! # Retry + dedup (DESIGN.md §16)
+//!
+//! The failure mode a line protocol cannot hide is the *lost ack*: a
+//! worker sends a tell, the connection dies, and the worker cannot know
+//! whether the service applied it. [`RetryClient`] resends the same
+//! request under a fresh connection with the same `req` sequence
+//! number; the [`LineServer`] keeps a one-deep dedup window per
+//! `(study, worker)` and answers a replayed sequence number from cache
+//! without re-executing. A duplicated *ask* (no dedup hit, e.g. after
+//! the window advanced) is still safe: the extra lease expires and its
+//! trials re-enter the queue with identical `(θ, seed)`, so recorded
+//! history stays byte-for-byte identical.
+//!
+//! [`TcpClient`] remains the bare one-connection [`Client`] for tests
+//! and debugging; production workers wrap a [`Connector`] in
+//! [`RetryClient`].
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use crate::sampling::rng::Rng;
 use crate::serve::pool::ShardPool;
 use crate::serve::proto::{
-    request_from_line, request_to_line, response_from_line,
-    response_to_line, Client, ErrorCode, Request, Response,
+    request_from_line_seq, request_to_line,
+    request_to_line_seq, response_from_line, response_from_line_seq,
+    response_to_line, response_to_line_seq, Client, ErrorCode, Request,
+    Response,
 };
 
+/// Stale responses a [`RetryClient`] will read past while hunting for
+/// its own sequence number (bounds the damage of a reordering peer).
+const MAX_STALE_RESPONSES: usize = 32;
+
+/// Requests that carry a worker identity are idempotently resendable;
+/// the dedup window keys on `(study, worker)`.
+fn dedup_key(req: &Request) -> Option<String> {
+    match req {
+        Request::Ask { study, worker }
+        | Request::Tell { study, worker, .. }
+        | Request::Heartbeat { study, worker, .. } => {
+            // U+001F as separator: not a character any sane study or
+            // worker id contains, so keys don't collide in practice.
+            Some(format!("{study}\u{1f}{worker}"))
+        }
+        _ => None,
+    }
+}
+
+/// Shared line-level service: parses, dedups, routes through the pool,
+/// and serializes the reply. One instance serves every connection so
+/// the dedup window survives worker reconnects.
+pub struct LineServer {
+    pool: Arc<ShardPool>,
+    /// Latest `(seq, cached response line)` per `(study, worker)`.
+    window: Mutex<BTreeMap<String, (u64, String)>>,
+}
+
+impl LineServer {
+    /// A line server over `pool` with an empty dedup window.
+    pub fn new(pool: Arc<ShardPool>) -> LineServer {
+        LineServer { pool, window: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The underlying pool (status inspection, tests).
+    pub fn pool(&self) -> &Arc<ShardPool> {
+        &self.pool
+    }
+
+    fn lock_window(
+        &self,
+    ) -> std::sync::MutexGuard<'_, BTreeMap<String, (u64, String)>> {
+        match self.window.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Process one request line into one response line (no trailing
+    /// newline). A replayed `(study, worker, seq)` returns the cached
+    /// response without re-executing — the typed no-op that makes
+    /// resend-after-lost-ack safe.
+    pub fn serve(&self, line: &str) -> String {
+        let (seq, req) = match request_from_line_seq(line) {
+            Ok(parsed) => parsed,
+            Err(e) => {
+                return response_to_line_seq(
+                    &Response::error(
+                        ErrorCode::Protocol,
+                        format!("{e:#}"),
+                    ),
+                    None,
+                )
+            }
+        };
+        let key = match (&seq, dedup_key(&req)) {
+            (Some(seq), Some(key)) => {
+                let window = self.lock_window();
+                if let Some((cached_seq, cached)) = window.get(&key) {
+                    if cached_seq == seq {
+                        return cached.clone();
+                    }
+                }
+                Some(key)
+            }
+            _ => None,
+        };
+        let resp = self.pool.call(&req);
+        let out = response_to_line_seq(&resp, seq);
+        if let (Some(seq), Some(key)) = (seq, key) {
+            self.lock_window().insert(key, (seq, out.clone()));
+        }
+        out
+    }
+}
+
 /// Serve one established connection until the peer hangs up.
-pub fn handle_conn(stream: TcpStream, pool: &ShardPool) -> Result<()> {
+pub fn handle_conn(stream: TcpStream, server: &LineServer) -> Result<()> {
     let reader = BufReader::new(stream.try_clone().context("clone stream")?);
     let mut writer = stream;
     for line in reader.lines() {
@@ -32,13 +137,7 @@ pub fn handle_conn(stream: TcpStream, pool: &ShardPool) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let resp = match request_from_line(&line) {
-            Ok(req) => pool.call(&req),
-            Err(e) => {
-                Response::error(ErrorCode::Protocol, format!("{e:#}"))
-            }
-        };
-        let mut out = response_to_line(&resp);
+        let mut out = server.serve(&line);
         out.push('\n');
         writer
             .write_all(out.as_bytes())
@@ -47,25 +146,236 @@ pub fn handle_conn(stream: TcpStream, pool: &ShardPool) -> Result<()> {
     Ok(())
 }
 
-/// Accept loop: one thread per connection, all sharing `pool`. Runs
-/// until the listener errors (normally: forever).
+/// Accept loop: one thread per connection, all sharing one
+/// [`LineServer`] (and therefore one dedup window). Runs until the
+/// listener errors (normally: forever).
 pub fn serve_listener(
     listener: TcpListener,
     pool: Arc<ShardPool>,
 ) -> Result<()> {
+    let server = Arc::new(LineServer::new(pool));
     for conn in listener.incoming() {
         let stream = conn.context("accepting connection")?;
-        let pool = Arc::clone(&pool);
+        let server = Arc::clone(&server);
         std::thread::spawn(move || {
             // Peer disconnects are routine; real errors surface when a
             // test or operator inspects the shard state instead.
-            let _ = handle_conn(stream, &pool);
+            let _ = handle_conn(stream, &server);
         });
     }
     Ok(())
 }
 
-/// Blocking line-protocol client over TCP.
+/// One request/response exchange surface, injectable for fault
+/// simulation (`cluster::faults` scripts implementations that drop,
+/// duplicate, and reorder).
+pub trait Transport: Send {
+    /// Send one request line (no trailing newline).
+    fn send_line(&mut self, line: &str) -> Result<()>;
+    /// Receive one response line (no trailing newline).
+    fn recv_line(&mut self) -> Result<String>;
+}
+
+/// Builds fresh [`Transport`]s; called once per (re)connection.
+pub trait Connector: Send {
+    /// Establish a new transport.
+    fn connect(&mut self) -> Result<Box<dyn Transport>>;
+}
+
+/// Plain TCP [`Transport`].
+pub struct TcpTransport {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl TcpTransport {
+    /// Wrap an established stream.
+    pub fn new(stream: TcpStream) -> Result<TcpTransport> {
+        let reader =
+            BufReader::new(stream.try_clone().context("clone stream")?);
+        Ok(TcpTransport { reader, writer: stream })
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send_line(&mut self, line: &str) -> Result<()> {
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|()| self.writer.write_all(b"\n"))
+            .context("sending request")
+    }
+
+    fn recv_line(&mut self) -> Result<String> {
+        let mut buf = String::new();
+        let n = self.reader.read_line(&mut buf).context("awaiting response")?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        while buf.ends_with('\n') || buf.ends_with('\r') {
+            buf.pop();
+        }
+        Ok(buf)
+    }
+}
+
+/// Reconnects to a fixed address.
+pub struct TcpConnector {
+    addr: String,
+}
+
+impl TcpConnector {
+    /// A connector for `addr`, e.g. `127.0.0.1:7077`.
+    pub fn new(addr: impl Into<String>) -> TcpConnector {
+        TcpConnector { addr: addr.into() }
+    }
+}
+
+impl Connector for TcpConnector {
+    fn connect(&mut self) -> Result<Box<dyn Transport>> {
+        let stream = TcpStream::connect(&self.addr)
+            .with_context(|| format!("connecting to {}", self.addr))?;
+        Ok(Box::new(TcpTransport::new(stream)?))
+    }
+}
+
+/// Client-side retry knobs.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Attempts per logical request (first try included).
+    pub max_attempts: u32,
+    /// Backoff envelope base, milliseconds (attempt 2 waits in
+    /// `[base/2, base]`).
+    pub backoff_base_ms: u64,
+    /// Backoff envelope cap, milliseconds.
+    pub backoff_max_ms: u64,
+    /// Jitter stream seed (decorrelates a fleet of workers retrying
+    /// after the same outage).
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 8,
+            backoff_base_ms: 50,
+            backoff_max_ms: 2_000,
+            jitter_seed: 0xbac0_ff,
+        }
+    }
+}
+
+/// A [`Client`] that survives connection loss: each logical request is
+/// stamped with a sequence number and resent over a fresh connection
+/// under capped jittered backoff until a response with the matching
+/// number (or no number — a pre-seq peer) arrives. Combined with the
+/// server's dedup window this makes every request idempotently
+/// resendable.
+pub struct RetryClient {
+    connector: Box<dyn Connector>,
+    policy: RetryPolicy,
+    rng: Rng,
+    transport: Option<Box<dyn Transport>>,
+    seq: u64,
+}
+
+impl RetryClient {
+    /// A retrying client over `connector`.
+    pub fn new(
+        connector: Box<dyn Connector>,
+        policy: RetryPolicy,
+    ) -> RetryClient {
+        let rng = Rng::new(policy.jitter_seed);
+        RetryClient { connector, policy, rng, transport: None, seq: 0 }
+    }
+
+    /// Convenience: retrying client for a TCP address.
+    pub fn tcp(addr: impl Into<String>, policy: RetryPolicy) -> RetryClient {
+        RetryClient::new(Box::new(TcpConnector::new(addr)), policy)
+    }
+
+    /// Sequence number of the most recent logical request.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Full-jitter delay before retry `attempt` (2-based: the first
+    /// retry is attempt 2).
+    fn backoff_ms(&mut self, attempt: u32) -> u64 {
+        let exp = self
+            .policy
+            .backoff_base_ms
+            .saturating_mul(
+                1u64.checked_shl(attempt.saturating_sub(2))
+                    .unwrap_or(u64::MAX),
+            )
+            .min(self.policy.backoff_max_ms);
+        let span = exp - exp / 2;
+        exp / 2
+            + if span > 0 { self.rng.next_u64() % (span + 1) } else { 0 }
+    }
+
+    /// One wire exchange: connect if needed, send, then read until the
+    /// response matching `self.seq` appears (skipping stale lines a
+    /// reordering peer may deliver first).
+    fn attempt(&mut self, line: &str) -> Result<Response> {
+        if self.transport.is_none() {
+            self.transport = Some(self.connector.connect()?);
+        }
+        let Some(t) = self.transport.as_mut() else {
+            bail!("transport vanished after connect");
+        };
+        t.send_line(line)?;
+        for _ in 0..MAX_STALE_RESPONSES {
+            let resp_line = t.recv_line()?;
+            let (seq, resp) = response_from_line_seq(&resp_line)?;
+            match seq {
+                Some(s) if s == self.seq => return Ok(resp),
+                // Stale response from a resent predecessor: skip.
+                Some(_) => continue,
+                // Peer doesn't echo sequence numbers: trust ordering.
+                None => return Ok(resp),
+            }
+        }
+        bail!(
+            "no response matched request seq {} within {} lines",
+            self.seq,
+            MAX_STALE_RESPONSES
+        );
+    }
+}
+
+impl Client for RetryClient {
+    fn call(&mut self, req: &Request) -> Result<Response> {
+        self.seq = self.seq.wrapping_add(1);
+        let line = request_to_line_seq(req, self.seq);
+        let mut last_err = None;
+        for attempt in 1..=self.policy.max_attempts.max(1) {
+            if attempt > 1 {
+                let ms = self.backoff_ms(attempt);
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            match self.attempt(&line) {
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    // Connection state is unknown; rebuild it next
+                    // attempt and resend under the same seq (the
+                    // server's dedup window absorbs the duplicate).
+                    self.transport = None;
+                    last_err = Some(e);
+                }
+            }
+        }
+        match last_err {
+            Some(e) => Err(e.context(format!(
+                "request failed after {} attempts",
+                self.policy.max_attempts.max(1)
+            ))),
+            None => bail!("request failed with no attempts made"),
+        }
+    }
+}
+
+/// Blocking single-connection line-protocol client (tests, debugging).
 pub struct TcpClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,

@@ -15,8 +15,26 @@
 //! traffic. `shutdown` reassembles the cores into a [`Service`] for
 //! inspection — the chaos tests compare post-shutdown state against
 //! reference runs.
+//!
+//! # Supervision (DESIGN.md §16)
+//!
+//! Each shard thread is a *seat*: the core plus a sans-IO
+//! [`Supervisor`] and an optional [`RestartSpec`]. Command handling and
+//! ticks run under `catch_unwind`; a panic (or a WAL wedge surfacing
+//! from the core) hands the seat to the supervisor, which sleeps a
+//! jittered exponential backoff and rebuilds the core from WAL replay —
+//! the exact kill-and-recover path the durability proofs already pin
+//! down, so a restarted shard is byte-identical to a rebooted one.
+//! When the restart budget runs out (or there is no WAL to replay),
+//! the core is parked in the typed `Degraded` state: asks and tells are
+//! rejected with `shard-degraded`, status queries still answer. The
+//! shard *thread* never dies outside shutdown, so queued commands
+//! always get a reply.
 
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -24,12 +42,24 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
+use crate::serve::clock::Clock;
 use crate::serve::proto::{Client, ErrorCode, Request, Response};
 use crate::serve::service::{route, Service};
-use crate::serve::shard::ShardCore;
+use crate::serve::shard::{ShardCore, ShardOpts};
+use crate::serve::supervisor::{Supervisor, SupervisorDecision};
+use crate::serve::wal::{FsWalIo, Wal, WalIo};
+
+/// Builds the storage layer for a (re)opened shard WAL. The default is
+/// [`FsWalIo`]; the chaos suite injects fault-scripted implementations
+/// that survive restarts (so a disk that "stays broken" keeps failing
+/// the rebuilt shard too).
+pub type WalIoFactory = Arc<dyn Fn() -> Box<dyn WalIo> + Send + Sync>;
 
 enum Cmd {
     Req(Request, mpsc::Sender<Response>),
+    /// Chaos injection: panic inside the shard thread, exactly where a
+    /// real handler panic would unwind, then let supervision run.
+    Crash(mpsc::Sender<Response>),
     Shutdown,
 }
 
@@ -38,26 +68,141 @@ struct ShardThread {
     handle: JoinHandle<ShardCore>,
 }
 
-/// The running, threaded form of a [`Service`].
-pub struct ShardPool {
-    threads: Vec<ShardThread>,
-    routes: Mutex<BTreeMap<String, usize>>,
-    cfg: crate::serve::service::ServeConfig,
-    clock: Arc<dyn crate::serve::clock::Clock>,
+/// Everything needed to rebuild a shard core from durable state.
+struct RestartSpec {
+    shard: usize,
+    wal_dir: PathBuf,
+    failover: Option<PathBuf>,
+    opts: ShardOpts,
+    io: WalIoFactory,
+    clock: Arc<dyn Clock>,
 }
 
-fn shard_main(mut core: ShardCore, rx: mpsc::Receiver<Cmd>, tick_ms: u64) -> ShardCore {
+impl RestartSpec {
+    fn rebuild(&self) -> Result<ShardCore> {
+        let wal = Wal::open_with(
+            &self.wal_dir,
+            self.failover.as_deref(),
+            self.shard,
+            (self.io)(),
+        )?;
+        ShardCore::recover(
+            self.shard,
+            Arc::clone(&self.clock),
+            self.opts.clone(),
+            wal,
+        )
+    }
+}
+
+/// A shard core plus its supervision state, owned by one thread.
+struct Seat {
+    core: ShardCore,
+    supervisor: Supervisor,
+    spec: Option<RestartSpec>,
+    restarts: Arc<AtomicU64>,
+}
+
+impl Seat {
+    /// Run the supervisor after a panic or wedge: restart from WAL
+    /// under backoff, or degrade when the budget (or the WAL) is gone.
+    /// The discarded core's in-memory state is suspect after a panic;
+    /// only the WAL replay (or the typed `Degraded` surface, which
+    /// mutates nothing) is trusted afterwards.
+    fn recover_or_degrade(&mut self, why: &str) {
+        let Some(spec) = &self.spec else {
+            self.core.set_degraded(format!(
+                "{why}; no WAL to restart from"
+            ));
+            return;
+        };
+        loop {
+            match self.supervisor.on_failure() {
+                SupervisorDecision::Degrade => {
+                    self.core.set_degraded(format!(
+                        "{why}; restart budget exhausted"
+                    ));
+                    return;
+                }
+                SupervisorDecision::RestartAfterMs(ms) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                    match spec.rebuild() {
+                        Ok(fresh) => {
+                            self.core = fresh;
+                            self.restarts.fetch_add(1, Ordering::Relaxed);
+                            return;
+                        }
+                        // Rebuild failed (disk still broken, WAL
+                        // unreadable): burn another budget unit and
+                        // back off longer.
+                        Err(_) => {}
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn shard_main(mut seat: Seat, rx: mpsc::Receiver<Cmd>, tick_ms: u64) -> ShardCore {
     loop {
         match rx.recv_timeout(Duration::from_millis(tick_ms)) {
             Ok(Cmd::Req(req, reply)) => {
-                let resp = core.handle(&req);
-                // A dropped reply sender means the caller gave up;
-                // the command still executed (and was logged).
-                let _ = reply.send(resp);
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    seat.core.handle(&req)
+                }));
+                match outcome {
+                    Ok(resp) => {
+                        // A dropped reply sender means the caller gave
+                        // up; the command still executed (and was
+                        // logged).
+                        let _ = reply.send(resp);
+                        if seat.core.is_wedged() {
+                            seat.recover_or_degrade("WAL wedge");
+                        }
+                    }
+                    Err(_) => {
+                        let _ = reply.send(Response::error(
+                            ErrorCode::Internal,
+                            format!(
+                                "shard {} panicked handling the \
+                                 command; supervisor engaged",
+                                seat.core.id()
+                            ),
+                        ));
+                        seat.recover_or_degrade("handler panic");
+                    }
+                }
+            }
+            Ok(Cmd::Crash(reply)) => {
+                // Unwind through the same machinery a real fault would.
+                // `panic_any`, not the macro: serve/ is pinned at zero
+                // panic-*macro* surface (accidental panic paths), and
+                // this is the one deliberate unwind — the chaos hook.
+                let boom = catch_unwind(AssertUnwindSafe(|| {
+                    std::panic::panic_any("injected shard crash")
+                }));
+                let _ = boom;
+                let _ = reply.send(Response::error(
+                    ErrorCode::Internal,
+                    format!(
+                        "shard {} panicked (injected); supervisor \
+                         engaged",
+                        seat.core.id()
+                    ),
+                ));
+                seat.recover_or_degrade("injected crash");
             }
             Ok(Cmd::Shutdown)
-            | Err(RecvTimeoutError::Disconnected) => return core,
-            Err(RecvTimeoutError::Timeout) => core.tick(),
+            | Err(RecvTimeoutError::Disconnected) => return seat.core,
+            Err(RecvTimeoutError::Timeout) => {
+                if catch_unwind(AssertUnwindSafe(|| seat.core.tick()))
+                    .is_err()
+                {
+                    seat.recover_or_degrade("tick panic");
+                } else if seat.core.is_wedged() {
+                    seat.recover_or_degrade("WAL wedge during tick");
+                }
+            }
         }
     }
 }
@@ -71,23 +216,79 @@ fn lock_routes<'a>(
     }
 }
 
+/// The running, threaded form of a [`Service`].
+pub struct ShardPool {
+    threads: Vec<ShardThread>,
+    routes: Mutex<BTreeMap<String, usize>>,
+    cfg: crate::serve::service::ServeConfig,
+    clock: Arc<dyn Clock>,
+    /// Supervisor restarts granted per shard (the chaos proofs assert
+    /// these analytically).
+    restarts: Vec<Arc<AtomicU64>>,
+}
+
 impl ShardPool {
-    /// Spawn one owning thread per shard. `tick_ms` is the idle
-    /// maintenance interval (lease expiry resolution).
+    /// Spawn one owning thread per shard with the default filesystem
+    /// WAL storage. `tick_ms` is the idle maintenance interval (lease
+    /// expiry resolution).
     pub fn new(service: Service, tick_ms: u64) -> ShardPool {
+        ShardPool::with_io(
+            service,
+            tick_ms,
+            Arc::new(|| Box::new(FsWalIo) as Box<dyn WalIo>),
+        )
+    }
+
+    /// Spawn with an injected WAL storage factory. The factory is
+    /// called once per supervisor restart, so a fault-scripted
+    /// implementation shared through the factory persists across
+    /// restarts of the same shard.
+    pub fn with_io(
+        service: Service,
+        tick_ms: u64,
+        io: WalIoFactory,
+    ) -> ShardPool {
         let (cfg, clock, shards, routes) = service.into_parts();
         let tick_ms = tick_ms.max(1);
+        let sup_cfg = cfg.supervisor_config();
+        let restarts: Vec<Arc<AtomicU64>> = (0..shards.len())
+            .map(|_| Arc::new(AtomicU64::new(0)))
+            .collect();
         let threads = shards
             .into_iter()
-            .map(|core| {
+            .enumerate()
+            .map(|(i, core)| {
                 let (tx, rx) = mpsc::channel();
+                let spec = cfg.wal_dir.as_ref().map(|dir| RestartSpec {
+                    shard: i,
+                    wal_dir: dir.clone(),
+                    failover: cfg.wal_failover_dir.clone(),
+                    opts: cfg.shard_opts(),
+                    io: Arc::clone(&io),
+                    clock: Arc::clone(&clock),
+                });
+                let seat = Seat {
+                    core,
+                    supervisor: Supervisor::new(sup_cfg.clone(), i),
+                    spec,
+                    restarts: restarts
+                        .get(i)
+                        .map(Arc::clone)
+                        .unwrap_or_default(),
+                };
                 let handle = std::thread::spawn(move || {
-                    shard_main(core, rx, tick_ms)
+                    shard_main(seat, rx, tick_ms)
                 });
                 ShardThread { sender: tx, handle }
             })
             .collect();
-        ShardPool { threads, routes: Mutex::new(routes), cfg, clock }
+        ShardPool {
+            threads,
+            routes: Mutex::new(routes),
+            cfg,
+            clock,
+            restarts,
+        }
     }
 
     /// Route one command to its shard's queue and wait for the reply.
@@ -158,6 +359,40 @@ impl ShardPool {
     /// Number of shards.
     pub fn n_shards(&self) -> usize {
         self.threads.len()
+    }
+
+    /// Supervisor restarts granted so far, per shard.
+    pub fn restarts(&self) -> Vec<u64> {
+        self.restarts.iter().map(|r| r.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Chaos hook: panic shard `i`'s thread at the top of its command
+    /// loop and let supervision run its course. Blocks until the
+    /// injected fault has been answered (the returned response is the
+    /// typed internal error a real panic would produce); the restart
+    /// or degradation itself happens before the shard touches its next
+    /// command.
+    pub fn inject_panic(&self, shard: usize) -> Response {
+        let Some(thread) = self.threads.get(shard) else {
+            return Response::error(
+                ErrorCode::Internal,
+                format!("no shard {shard} to crash"),
+            );
+        };
+        let (reply_tx, reply_rx) = mpsc::channel();
+        if thread.sender.send(Cmd::Crash(reply_tx)).is_err() {
+            return Response::error(
+                ErrorCode::Internal,
+                format!("shard {shard} thread is gone"),
+            );
+        }
+        match reply_rx.recv() {
+            Ok(r) => r,
+            Err(_) => Response::error(
+                ErrorCode::Internal,
+                format!("shard {shard} died mid-crash"),
+            ),
+        }
     }
 
     /// Drain the queues, join every shard thread, and reassemble the

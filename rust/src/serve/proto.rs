@@ -55,8 +55,15 @@ pub enum ErrorCode {
     /// Redelivered `tell` (outcome already absorbed, or the whole
     /// evaluation already recorded) — rejected idempotently.
     DuplicateTell,
+    /// `heartbeat` for an evaluation the worker holds no live lease on
+    /// (expired, never granted, or granted to someone else) — a typed
+    /// no-op, mirroring the duplicate-tell treatment.
+    UnknownLease,
     /// Admin command on a stopped study.
     StudyStopped,
+    /// The shard is degraded (restart budget exhausted, or read-only
+    /// WAL policy engaged): mutations are rejected, status still works.
+    ShardDegraded,
     /// Malformed or version-mismatched message.
     Protocol,
     /// Service-side invariant failure (WAL write error, wedged shard).
@@ -73,7 +80,9 @@ impl ErrorCode {
             ErrorCode::UnknownEval => "unknown-eval",
             ErrorCode::BadTrial => "bad-trial",
             ErrorCode::DuplicateTell => "duplicate-tell",
+            ErrorCode::UnknownLease => "unknown-lease",
             ErrorCode::StudyStopped => "study-stopped",
+            ErrorCode::ShardDegraded => "shard-degraded",
             ErrorCode::Protocol => "protocol",
             ErrorCode::Internal => "internal",
         }
@@ -87,7 +96,9 @@ impl ErrorCode {
             "unknown-eval" => ErrorCode::UnknownEval,
             "bad-trial" => ErrorCode::BadTrial,
             "duplicate-tell" => ErrorCode::DuplicateTell,
+            "unknown-lease" => ErrorCode::UnknownLease,
             "study-stopped" => ErrorCode::StudyStopped,
+            "shard-degraded" => ErrorCode::ShardDegraded,
             "protocol" => ErrorCode::Protocol,
             "internal" => ErrorCode::Internal,
             other => return Err(anyhow!("unknown error code {other:?}")),
@@ -129,8 +140,12 @@ pub enum Request {
         trial: usize,
         outcome: TrialOutcome,
     },
-    /// Renew every lease `worker` holds in `study`.
-    Heartbeat { study: String, worker: String },
+    /// Renew leases: all of `worker`'s leases in `study` when `eval`
+    /// is `None`, or exactly that evaluation's lease. A targeted
+    /// heartbeat for a lease the worker does not hold gets a typed
+    /// [`ErrorCode::UnknownLease`] no-op instead of a silent renew of
+    /// nothing.
+    Heartbeat { study: String, worker: String, eval: Option<usize> },
     /// Progress snapshot of a study.
     StudyStatus { study: String },
     /// Stop handing out work for a study (in-flight tells still drain).
@@ -169,6 +184,10 @@ pub enum Response {
         in_flight: usize,
         complete: bool,
         stopped: bool,
+        /// Evaluations quarantined with a penalty score (never silently
+        /// dropped — they are regular history records; this counts
+        /// them).
+        poisoned: usize,
         best: Option<WireBest>,
         config_toml: String,
     },
@@ -342,8 +361,7 @@ fn check_envelope(root: &Json) -> Result<String> {
     str_from_json(root.get("type"), "type")
 }
 
-/// Encode a request as one compact JSON line (no trailing newline).
-pub fn request_to_line(req: &Request) -> String {
+fn request_map(req: &Request) -> BTreeMap<String, Json> {
     let mut m;
     match req {
         Request::CreateStudy { study, config_toml } => {
@@ -364,10 +382,13 @@ pub fn request_to_line(req: &Request) -> String {
             m.insert("trial".into(), Json::Num(*trial as f64));
             m.insert("outcome".into(), outcome_to_json(outcome));
         }
-        Request::Heartbeat { study, worker } => {
+        Request::Heartbeat { study, worker, eval } => {
             m = envelope("heartbeat");
             m.insert("study".into(), Json::Str(study.clone()));
             m.insert("worker".into(), Json::Str(worker.clone()));
+            if let Some(id) = eval {
+                m.insert("eval".into(), Json::Num(*id as f64));
+            }
         }
         Request::StudyStatus { study } => {
             m = envelope("status");
@@ -381,14 +402,35 @@ pub fn request_to_line(req: &Request) -> String {
             m = envelope("list");
         }
     }
+    m
+}
+
+/// Encode a request as one compact JSON line (no trailing newline).
+pub fn request_to_line(req: &Request) -> String {
+    write(&Json::Obj(request_map(req)))
+}
+
+/// Encode a request with a client-chosen sequence number in the
+/// envelope (top-level `"req"`, decimal string). A retrying client
+/// stamps every attempt of the same logical request with the same
+/// sequence number, and uses the echo in the response envelope to
+/// discard stale replies surfacing from duplicated or reordered
+/// transport frames.
+pub fn request_to_line_seq(req: &Request, seq: u64) -> String {
+    let mut m = request_map(req);
+    m.insert("req".into(), u64_to_json(seq));
     write(&Json::Obj(m))
 }
 
-/// Parse one request line written by [`request_to_line`].
-pub fn request_from_line(line: &str) -> Result<Request> {
-    let root = parse(line.trim())
-        .map_err(|e| anyhow!("request parse: {e}"))?;
-    let kind = check_envelope(&root)?;
+fn seq_from_root(root: &Json) -> Result<Option<u64>> {
+    match root.get("req") {
+        Json::Null => Ok(None),
+        other => Ok(Some(u64_from_json(other, "req")?)),
+    }
+}
+
+fn request_from_root(root: &Json) -> Result<Request> {
+    let kind = check_envelope(root)?;
     let study = || str_from_json(root.get("study"), "study");
     let worker = || str_from_json(root.get("worker"), "worker");
     Ok(match kind.as_str() {
@@ -407,9 +449,14 @@ pub fn request_from_line(line: &str) -> Result<Request> {
             trial: usize_from_json(root.get("trial"), "trial")?,
             outcome: outcome_from_json(root.get("outcome"))?,
         },
-        "heartbeat" => {
-            Request::Heartbeat { study: study()?, worker: worker()? }
-        }
+        "heartbeat" => Request::Heartbeat {
+            study: study()?,
+            worker: worker()?,
+            eval: match root.get("eval") {
+                Json::Null => None,
+                other => Some(usize_from_json(other, "eval")?),
+            },
+        },
         "status" => Request::StudyStatus { study: study()? },
         "stop" => Request::StopStudy { study: study()? },
         "list" => Request::ListStudies,
@@ -417,8 +464,23 @@ pub fn request_from_line(line: &str) -> Result<Request> {
     })
 }
 
-/// Encode a response as one compact JSON line (no trailing newline).
-pub fn response_to_line(resp: &Response) -> String {
+/// Parse one request line written by [`request_to_line`].
+pub fn request_from_line(line: &str) -> Result<Request> {
+    let root = parse(line.trim())
+        .map_err(|e| anyhow!("request parse: {e}"))?;
+    request_from_root(&root)
+}
+
+/// Parse one request line plus its optional envelope sequence number
+/// (see [`request_to_line_seq`]). Requests from pre-retry clients carry
+/// no sequence number and parse as `(None, req)`.
+pub fn request_from_line_seq(line: &str) -> Result<(Option<u64>, Request)> {
+    let root = parse(line.trim())
+        .map_err(|e| anyhow!("request parse: {e}"))?;
+    Ok((seq_from_root(&root)?, request_from_root(&root)?))
+}
+
+fn response_map(resp: &Response) -> BTreeMap<String, Json> {
     let mut m;
     match resp {
         Response::Created { study } => {
@@ -452,6 +514,7 @@ pub fn response_to_line(resp: &Response) -> String {
             in_flight,
             complete,
             stopped,
+            poisoned,
             best,
             config_toml,
         } => {
@@ -461,6 +524,7 @@ pub fn response_to_line(resp: &Response) -> String {
             m.insert("in_flight".into(), Json::Num(*in_flight as f64));
             m.insert("complete".into(), Json::Bool(*complete));
             m.insert("stopped".into(), Json::Bool(*stopped));
+            m.insert("poisoned".into(), Json::Num(*poisoned as f64));
             m.insert(
                 "best".into(),
                 match best {
@@ -500,14 +564,28 @@ pub fn response_to_line(resp: &Response) -> String {
             m.insert("message".into(), Json::Str(message.clone()));
         }
     }
+    m
+}
+
+/// Encode a response as one compact JSON line (no trailing newline).
+pub fn response_to_line(resp: &Response) -> String {
+    write(&Json::Obj(response_map(resp)))
+}
+
+/// Encode a response, echoing the request's envelope sequence number
+/// when it carried one (see [`request_to_line_seq`]). `None` omits the
+/// field — the reply to a sequence-free request, or a protocol error
+/// for a line too garbled to recover a sequence number from.
+pub fn response_to_line_seq(resp: &Response, seq: Option<u64>) -> String {
+    let mut m = response_map(resp);
+    if let Some(s) = seq {
+        m.insert("req".into(), u64_to_json(s));
+    }
     write(&Json::Obj(m))
 }
 
-/// Parse one response line written by [`response_to_line`].
-pub fn response_from_line(line: &str) -> Result<Response> {
-    let root = parse(line.trim())
-        .map_err(|e| anyhow!("response parse: {e}"))?;
-    let kind = check_envelope(&root)?;
+fn response_from_root(root: &Json) -> Result<Response> {
+    let kind = check_envelope(root)?;
     let study = || str_from_json(root.get("study"), "study");
     Ok(match kind.as_str() {
         "created" => Response::Created { study: study()? },
@@ -535,6 +613,11 @@ pub fn response_from_line(line: &str) -> Result<Response> {
             )?,
             complete: root.get("complete").as_bool().context("complete")?,
             stopped: root.get("stopped").as_bool().context("stopped")?,
+            // Absent in pre-quarantine peers; default 0.
+            poisoned: match root.get("poisoned") {
+                Json::Null => 0,
+                other => usize_from_json(other, "poisoned")?,
+            },
             best: match root.get("best") {
                 Json::Null => None,
                 other => Some(WireBest {
@@ -573,6 +656,21 @@ pub fn response_from_line(line: &str) -> Result<Response> {
     })
 }
 
+/// Parse one response line written by [`response_to_line`].
+pub fn response_from_line(line: &str) -> Result<Response> {
+    let root = parse(line.trim())
+        .map_err(|e| anyhow!("response parse: {e}"))?;
+    response_from_root(&root)
+}
+
+/// Parse one response line plus its optional echoed sequence number
+/// (see [`response_to_line_seq`]).
+pub fn response_from_line_seq(line: &str) -> Result<(Option<u64>, Response)> {
+    let root = parse(line.trim())
+        .map_err(|e| anyhow!("response parse: {e}"))?;
+    Ok((seq_from_root(&root)?, response_from_root(&root)?))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -602,7 +700,16 @@ mod tests {
                 trial: 2,
                 outcome: outcome(),
             },
-            Request::Heartbeat { study: "s1".into(), worker: "w0".into() },
+            Request::Heartbeat {
+                study: "s1".into(),
+                worker: "w0".into(),
+                eval: None,
+            },
+            Request::Heartbeat {
+                study: "s1".into(),
+                worker: "w0".into(),
+                eval: Some(7),
+            },
             Request::StudyStatus { study: "s1".into() },
             Request::StopStudy { study: "s1".into() },
             Request::ListStudies,
@@ -652,6 +759,7 @@ mod tests {
                 in_flight: 2,
                 complete: false,
                 stopped: false,
+                poisoned: 1,
                 best: Some(WireBest { eval_id: 4, objective: -0.5 }),
                 config_toml: "[hpo]\n".into(),
             },
@@ -672,6 +780,47 @@ mod tests {
             .replace(PROTO_VERSION, "hyppo-serve-v0");
         let err = request_from_line(&line).unwrap_err();
         assert!(format!("{err:#}").contains("version"));
+    }
+
+    #[test]
+    fn seq_envelope_roundtrips_and_stays_optional() {
+        let req = Request::Ask { study: "s".into(), worker: "w".into() };
+        let line = request_to_line_seq(&req, u64::MAX - 5);
+        let (seq, back) = request_from_line_seq(&line).unwrap();
+        assert_eq!(seq, Some(u64::MAX - 5));
+        assert_eq!(back, req);
+        // A sequence-free line parses with seq = None via the same fn,
+        // and a seq-stamped line still parses via the plain parser.
+        let bare = request_to_line(&req);
+        assert_eq!(request_from_line_seq(&bare).unwrap(), (None, req.clone()));
+        assert_eq!(request_from_line(&line).unwrap(), req);
+
+        let resp = Response::Told { recorded: 1, extended: 0 };
+        let echoed = response_to_line_seq(&resp, Some(9));
+        let (seq, back) = response_from_line_seq(&echoed).unwrap();
+        assert_eq!((seq, &back), (Some(9), &resp));
+        let silent = response_to_line_seq(&resp, None);
+        assert_eq!(silent, response_to_line(&resp));
+        assert_eq!(response_from_line_seq(&silent).unwrap(), (None, resp));
+    }
+
+    #[test]
+    fn status_without_poisoned_field_defaults_to_zero() {
+        // PR 9 peers never emit "poisoned"; their status lines must
+        // still parse.
+        let modern = Response::Status {
+            study: "s".into(),
+            recorded: 2,
+            in_flight: 0,
+            complete: false,
+            stopped: false,
+            poisoned: 0,
+            best: None,
+            config_toml: String::new(),
+        };
+        let line = response_to_line(&modern).replace("\"poisoned\":0,", "");
+        assert!(!line.contains("poisoned"), "field really removed");
+        assert_eq!(response_from_line(&line).unwrap(), modern);
     }
 
     #[test]

@@ -24,8 +24,9 @@ use anyhow::{bail, Context, Result};
 use crate::config::{Doc, Value};
 use crate::serve::clock::Clock;
 use crate::serve::proto::{ErrorCode, Request, Response};
-use crate::serve::shard::ShardCore;
-use crate::serve::wal::Wal;
+use crate::serve::shard::{ShardCore, ShardOpts};
+use crate::serve::supervisor::SupervisorConfig;
+use crate::serve::wal::{Wal, WalFailure};
 
 /// FNV-1a 64-bit: tiny, stable across processes and platforms.
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
@@ -61,15 +62,40 @@ pub struct ServeConfig {
     pub compact_every: usize,
     /// WAL directory; `None` runs without durability.
     pub wal_dir: Option<PathBuf>,
+    /// What a shard does when a WAL append fails.
+    pub wal_failure: WalFailure,
+    /// Secondary WAL directory for the `failover` policy (required by
+    /// it, rejected otherwise).
+    pub wal_failover_dir: Option<PathBuf>,
+    /// Lease-expiry strikes before an evaluation is quarantined; 0
+    /// disables quarantine.
+    pub max_eval_retries: usize,
+    /// Loss scored for each trial of a quarantined evaluation.
+    pub poison_penalty: f64,
+    /// Supervisor restarts granted to a shard before it degrades.
+    pub max_restarts: u32,
+    /// Supervisor backoff envelope base, milliseconds.
+    pub restart_backoff_ms: u64,
+    /// Supervisor backoff envelope cap, milliseconds.
+    pub restart_backoff_max_ms: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
+        let sup = SupervisorConfig::default();
+        let shard = ShardOpts::default();
         ServeConfig {
             n_shards: 2,
             lease_ms: 5_000,
             compact_every: 0,
             wal_dir: None,
+            wal_failure: shard.wal_failure,
+            wal_failover_dir: None,
+            max_eval_retries: shard.max_eval_retries,
+            poison_penalty: shard.poison_penalty,
+            max_restarts: sup.max_restarts,
+            restart_backoff_ms: sup.backoff_base_ms,
+            restart_backoff_max_ms: sup.backoff_max_ms,
         }
     }
 }
@@ -114,10 +140,120 @@ impl ServeConfig {
                         .context("[serve] wal_dir: expected string")?;
                     cfg.wal_dir = Some(PathBuf::from(s));
                 }
+                "wal_failure" => {
+                    let s = value
+                        .as_str()
+                        .context("[serve] wal_failure: expected string")?;
+                    cfg.wal_failure = WalFailure::from_str(s)
+                        .context("[serve] wal_failure")?;
+                }
+                "wal_failover_dir" => {
+                    let s = value.as_str().context(
+                        "[serve] wal_failover_dir: expected string",
+                    )?;
+                    cfg.wal_failover_dir = Some(PathBuf::from(s));
+                }
+                "max_eval_retries" => {
+                    let n = value.as_i64().context(
+                        "[serve] max_eval_retries: expected integer",
+                    )?;
+                    if n < 0 {
+                        bail!("[serve] max_eval_retries must be >= 0");
+                    }
+                    cfg.max_eval_retries = n as usize;
+                }
+                "poison_penalty" => {
+                    let x = value.as_f64().context(
+                        "[serve] poison_penalty: expected number",
+                    )?;
+                    if !x.is_finite() {
+                        bail!("[serve] poison_penalty must be finite");
+                    }
+                    cfg.poison_penalty = x;
+                }
+                "max_restarts" => {
+                    let n = value.as_i64().context(
+                        "[serve] max_restarts: expected integer",
+                    )?;
+                    if n < 0 {
+                        bail!("[serve] max_restarts must be >= 0");
+                    }
+                    cfg.max_restarts = n as u32;
+                }
+                "restart_backoff_ms" => {
+                    let n = value.as_i64().context(
+                        "[serve] restart_backoff_ms: expected integer",
+                    )?;
+                    if n < 1 {
+                        bail!("[serve] restart_backoff_ms must be >= 1");
+                    }
+                    cfg.restart_backoff_ms = n as u64;
+                }
+                "restart_backoff_max_ms" => {
+                    let n = value.as_i64().context(
+                        "[serve] restart_backoff_max_ms: expected \
+                         integer",
+                    )?;
+                    if n < 1 {
+                        bail!(
+                            "[serve] restart_backoff_max_ms must be >= 1"
+                        );
+                    }
+                    cfg.restart_backoff_max_ms = n as u64;
+                }
                 other => bail!("unknown [serve] key {other:?}"),
             }
         }
+        match (cfg.wal_failure, &cfg.wal_failover_dir) {
+            (WalFailure::Failover, None) => bail!(
+                "[serve] wal_failure = \"failover\" requires \
+                 wal_failover_dir"
+            ),
+            (WalFailure::Failover, Some(_)) if cfg.wal_dir.is_none() => {
+                bail!(
+                    "[serve] wal_failure = \"failover\" requires wal_dir \
+                     (nothing to fail over without a primary WAL)"
+                )
+            }
+            (WalFailure::Failover, Some(f)) => {
+                if Some(f) == cfg.wal_dir.as_ref() {
+                    bail!(
+                        "[serve] wal_failover_dir must differ from \
+                         wal_dir (a failover on the same disk protects \
+                         nothing)"
+                    );
+                }
+            }
+            (_, Some(_)) => bail!(
+                "[serve] wal_failover_dir is only meaningful with \
+                 wal_failure = \"failover\""
+            ),
+            (_, None) => {}
+        }
         Ok(cfg)
+    }
+
+    /// The per-shard behaviour knobs this config implies.
+    pub fn shard_opts(&self) -> ShardOpts {
+        ShardOpts {
+            lease_ms: self.lease_ms,
+            compact_every: self.compact_every,
+            max_eval_retries: self.max_eval_retries,
+            poison_penalty: self.poison_penalty,
+            wal_failure: self.wal_failure,
+        }
+    }
+
+    /// The supervisor policy this config implies (jitter seed is the
+    /// library default — delays are deterministic per shard, which is
+    /// all the chaos proofs need).
+    pub fn supervisor_config(&self) -> SupervisorConfig {
+        SupervisorConfig {
+            max_restarts: self.max_restarts,
+            backoff_base_ms: self.restart_backoff_ms,
+            backoff_max_ms: self.restart_backoff_max_ms,
+            ..SupervisorConfig::default()
+        }
     }
 
     /// Read the `[studies]` table: `name = "path/to/config.toml"`.
@@ -153,32 +289,41 @@ pub struct Service {
 impl Service {
     fn shard_wal(cfg: &ServeConfig, shard: usize) -> Result<Option<Wal>> {
         match &cfg.wal_dir {
-            Some(dir) => Ok(Some(Wal::open(dir, shard)?)),
+            Some(dir) => Ok(Some(Wal::open_with(
+                dir,
+                cfg.wal_failover_dir.as_deref(),
+                shard,
+                Box::new(crate::serve::wal::FsWalIo),
+            )?)),
             None => Ok(None),
         }
+    }
+
+    /// True when any shard WAL exists in the primary or failover dir.
+    fn wal_present(cfg: &ServeConfig) -> bool {
+        [cfg.wal_dir.as_deref(), cfg.wal_failover_dir.as_deref()]
+            .into_iter()
+            .flatten()
+            .any(|dir| {
+                (0..cfg.n_shards).any(|s| Wal::exists(dir, s))
+            })
     }
 
     /// A fresh service. Refuses to start over an existing WAL (that
     /// state belongs to [`Service::recover`]).
     pub fn new(cfg: ServeConfig, clock: Arc<dyn Clock>) -> Result<Service> {
-        if let Some(dir) = &cfg.wal_dir {
-            for shard in 0..cfg.n_shards {
-                if Wal::exists(dir, shard) {
-                    bail!(
-                        "WAL for shard {shard} already exists in {}; \
-                         use recovery instead of overwriting it",
-                        dir.display()
-                    );
-                }
-            }
+        if Self::wal_present(&cfg) {
+            bail!(
+                "a WAL already exists under the configured \
+                 directories; use recovery instead of overwriting it"
+            );
         }
         let shards = (0..cfg.n_shards)
             .map(|i| {
                 Ok(ShardCore::new(
                     i,
                     Arc::clone(&clock),
-                    cfg.lease_ms,
-                    cfg.compact_every,
+                    cfg.shard_opts(),
                     Self::shard_wal(&cfg, i)?,
                 ))
             })
@@ -186,24 +331,25 @@ impl Service {
         Ok(Service { cfg, clock, shards, routes: BTreeMap::new() })
     }
 
-    /// Rebuild every shard from its WAL and re-derive the routing table
-    /// from actual study placement.
+    /// Rebuild every shard from its WAL (chasing any failover chain)
+    /// and re-derive the routing table from actual study placement.
     pub fn recover(
         cfg: ServeConfig,
         clock: Arc<dyn Clock>,
     ) -> Result<Service> {
-        let Some(dir) = cfg.wal_dir.clone() else {
+        if cfg.wal_dir.is_none() {
             bail!("recovery requires [serve] wal_dir");
-        };
+        }
         let mut shards = Vec::with_capacity(cfg.n_shards);
         let mut routes = BTreeMap::new();
         for i in 0..cfg.n_shards {
+            let wal = Self::shard_wal(&cfg, i)?
+                .ok_or_else(|| anyhow::anyhow!("no WAL for shard {i}"))?;
             let core = ShardCore::recover(
                 i,
                 Arc::clone(&clock),
-                cfg.lease_ms,
-                cfg.compact_every,
-                &dir,
+                cfg.shard_opts(),
+                wal,
             )
             .with_context(|| format!("recovering shard {i}"))?;
             for study in core.study_names() {
@@ -221,10 +367,7 @@ impl Service {
 
     /// Open: recover when any shard WAL exists, start fresh otherwise.
     pub fn open(cfg: ServeConfig, clock: Arc<dyn Clock>) -> Result<Service> {
-        let existing = cfg.wal_dir.as_ref().is_some_and(|dir| {
-            (0..cfg.n_shards).any(|s| Wal::exists(dir, s))
-        });
-        if existing {
+        if Self::wal_present(&cfg) {
             Service::recover(cfg, clock)
         } else {
             Service::new(cfg, clock)
@@ -417,9 +560,45 @@ mod tests {
             "[serve]\nshards = 0\n",
             "[serve]\nlease_ms = 0\n",
             "[serve]\nbogus = 1\n",
+            "[serve]\nwal_failure = \"explode\"\n",
+            "[serve]\nmax_eval_retries = -1\n",
+            "[serve]\npoison_penalty = 1e999\n",
+            "[serve]\nrestart_backoff_ms = 0\n",
+            // failover needs both dirs, distinct, and a primary.
+            "[serve]\nwal_failure = \"failover\"\n",
+            "[serve]\nwal_failure = \"failover\"\n\
+             wal_failover_dir = \"w2\"\n",
+            "[serve]\nwal_dir = \"w\"\nwal_failure = \"failover\"\n\
+             wal_failover_dir = \"w\"\n",
+            // a failover dir without the failover policy is a typo.
+            "[serve]\nwal_dir = \"w\"\nwal_failover_dir = \"w2\"\n",
         ] {
             let doc = crate::config::parse(text).unwrap();
             assert!(ServeConfig::from_doc(&doc).is_err(), "{text}");
         }
+    }
+
+    #[test]
+    fn serve_config_failure_domain_knobs_parse() {
+        let doc = crate::config::parse(
+            "[serve]\nwal_dir = \"w\"\nwal_failure = \"failover\"\n\
+             wal_failover_dir = \"w2\"\nmax_eval_retries = 3\n\
+             poison_penalty = 5.5\nmax_restarts = 7\n\
+             restart_backoff_ms = 20\nrestart_backoff_max_ms = 400\n",
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.wal_failure, WalFailure::Failover);
+        assert_eq!(
+            cfg.wal_failover_dir.as_deref(),
+            Some(std::path::Path::new("w2"))
+        );
+        let opts = cfg.shard_opts();
+        assert_eq!(opts.max_eval_retries, 3);
+        assert_eq!(opts.poison_penalty, 5.5);
+        let sup = cfg.supervisor_config();
+        assert_eq!(sup.max_restarts, 7);
+        assert_eq!(sup.backoff_base_ms, 20);
+        assert_eq!(sup.backoff_max_ms, 400);
     }
 }

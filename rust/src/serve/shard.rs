@@ -12,11 +12,17 @@
 //!
 //! Durability follows write-ahead discipline: a command is (1) checked
 //! against the session (rejections log nothing), (2) applied, (3)
-//! appended to the WAL, and only then (4) acknowledged. If the append
-//! fails the core **wedges** — it refuses every further command with
-//! [`ErrorCode::Internal`] — because its in-memory state is now ahead
-//! of the log; the unacknowledged command is simply absent from the
-//! replay, which is exactly the crash the WAL already handles.
+//! appended to the WAL, and only then (4) acknowledged. What happens
+//! when the append fails is the `wal_failure` policy
+//! ([`crate::serve::wal::WalFailure`]): **wedge** (refuse every
+//! further command with [`ErrorCode::Internal`] — state is ahead of
+//! the log, and the unacknowledged command is simply absent from the
+//! replay, which is exactly the crash the WAL already handles),
+//! **readonly** (enter [`ShardHealth::Degraded`]: mutations are
+//! rejected with [`ErrorCode::ShardDegraded`] but status queries keep
+//! working), or **failover** (the WAL switches to a secondary
+//! directory — see the failover-chain docs in `serve::wal` — and the
+//! shard keeps serving; only a failed failover wedges).
 //!
 //! Leases make worker death survivable: `ask` grants an
 //! evaluation-granular lease of `lease_ms` clock-milliseconds, renewed
@@ -24,7 +30,22 @@
 //! leases are requeued — the evaluation re-emerges from a later `ask`
 //! with the same id, θ, and seed, which `exec::Session` guarantees
 //! keeps the decision sequence bit-identical. Time is read only
-//! through the injected [`Clock`], never from the OS.
+//! through the injected [`Clock`], never from the OS. Ties are pinned:
+//! a lease with `expires_ms <= now` is expired *before* the incoming
+//! command is dispatched, so a heartbeat landing exactly at the expiry
+//! tick finds its lease already gone (and gets the typed
+//! [`ErrorCode::UnknownLease`] when it named the evaluation).
+//!
+//! A trial that kills every worker it lands on would requeue forever
+//! under that scheme, wedging the study's tail. Quarantine bounds it:
+//! each lease expiry is a *strike* against the evaluation, and on the
+//! `max_eval_retries`-th strike the shard poisons it instead of
+//! requeueing — every outstanding trial is scored as the configured
+//! `poison_penalty` via [`Session::poison`] and the evaluation becomes
+//! a regular (loudly marked-by-value) history record, so the study
+//! completes and the incident is remembered rather than silently
+//! dropped. The strike counts live in the study snapshot and the
+//! requeue/poison WAL records, so replay reproduces the decision.
 //!
 //! The server side never runs trials, so the session's evaluator is a
 //! [`SyntheticEvaluator`] built deterministically from the study's
@@ -46,7 +67,7 @@ use crate::serve::clock::Clock;
 use crate::serve::proto::{
     ErrorCode, Request, Response, WireBest, WireJob,
 };
-use crate::serve::wal::{StudySnapshot, Wal, WalRecord};
+use crate::serve::wal::{StudySnapshot, Wal, WalFailure, WalRecord};
 
 /// An evaluation-granular work grant: `worker` may deliver trials of
 /// the evaluation until `expires_ms` on the shard's clock.
@@ -65,6 +86,10 @@ struct Study {
     session: Session<'static>,
     /// Live leases by evaluation id.
     leases: BTreeMap<usize, Lease>,
+    /// Lease-expiry strikes per pending evaluation (quarantine state).
+    fail_counts: BTreeMap<usize, usize>,
+    /// Evaluations quarantined so far.
+    poisoned: usize,
     stopped: bool,
 }
 
@@ -77,10 +102,65 @@ pub struct ShardCounters {
     pub tells: u64,
     /// Lease-expiry and recovery requeues.
     pub requeues: u64,
+    /// Evaluations quarantined with a penalty score.
+    pub poisoned: u64,
     /// WAL records durably appended.
     pub wal_appends: u64,
+    /// Appends that switched to the failover directory.
+    pub wal_failovers: u64,
     /// Snapshot+truncate compactions performed.
     pub compactions: u64,
+}
+
+/// A shard's operational state. Transitions are one-way within a
+/// process lifetime — only the supervisor's restart-from-WAL (or an
+/// operator restart) returns a shard to `Healthy`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShardHealth {
+    /// Serving normally.
+    Healthy,
+    /// A WAL append failed with in-memory state ahead of the log (or
+    /// an invariant broke): every command is rejected with
+    /// [`ErrorCode::Internal`] until restart + recovery.
+    Wedged,
+    /// Restart budget exhausted or read-only WAL policy engaged:
+    /// mutations are rejected with [`ErrorCode::ShardDegraded`], but
+    /// `study_status` / `list_studies` still work.
+    Degraded {
+        /// Human-readable cause, echoed in every rejection.
+        reason: String,
+    },
+}
+
+/// Per-shard behaviour knobs (`[serve]` config). Split from the
+/// constructor arguments so adding a knob does not ripple through
+/// every call site.
+#[derive(Debug, Clone)]
+pub struct ShardOpts {
+    /// Lease duration granted by `ask`, in clock-milliseconds.
+    pub lease_ms: u64,
+    /// Compact after this many WAL appends; 0 disables.
+    pub compact_every: usize,
+    /// Lease-expiry strikes before an evaluation is quarantined;
+    /// 0 disables quarantine (PR 9 behaviour: requeue forever).
+    pub max_eval_retries: usize,
+    /// Loss scored for every outstanding trial of a quarantined
+    /// evaluation. Must be finite; pick it worse than any real loss.
+    pub poison_penalty: f64,
+    /// What to do when a WAL append fails.
+    pub wal_failure: WalFailure,
+}
+
+impl Default for ShardOpts {
+    fn default() -> ShardOpts {
+        ShardOpts {
+            lease_ms: 30_000,
+            compact_every: 0,
+            max_eval_retries: 8,
+            poison_penalty: 1.0e9,
+            wal_failure: WalFailure::Wedge,
+        }
+    }
 }
 
 /// Build a study's session (and γ) from its config document. The
@@ -107,6 +187,8 @@ fn fresh_study(config_toml: &str) -> Result<Study> {
         gamma,
         session: Session::new_boxed(ev, &hpo),
         leases: BTreeMap::new(),
+        fail_counts: BTreeMap::new(),
+        poisoned: 0,
         stopped: false,
     })
 }
@@ -122,6 +204,8 @@ fn restored_study(snap: &StudySnapshot) -> Result<Study> {
         gamma,
         session,
         leases: BTreeMap::new(),
+        fail_counts: snap.fail_counts.clone(),
+        poisoned: snap.poisoned,
         stopped: snap.stopped,
     })
 }
@@ -131,12 +215,10 @@ fn restored_study(snap: &StudySnapshot) -> Result<Study> {
 pub struct ShardCore {
     id: usize,
     clock: Arc<dyn Clock>,
-    lease_ms: u64,
-    /// Compact after this many WAL appends; 0 disables.
-    compact_every: usize,
+    opts: ShardOpts,
     appends_since_compact: usize,
     wal: Option<Wal>,
-    wedged: bool,
+    health: ShardHealth,
     studies: BTreeMap<String, Study>,
     counters: ShardCounters,
 }
@@ -147,39 +229,36 @@ impl ShardCore {
     pub fn new(
         id: usize,
         clock: Arc<dyn Clock>,
-        lease_ms: u64,
-        compact_every: usize,
+        opts: ShardOpts,
         wal: Option<Wal>,
     ) -> ShardCore {
         ShardCore {
             id,
             clock,
-            lease_ms,
-            compact_every,
+            opts,
             appends_since_compact: 0,
             wal,
-            wedged: false,
+            health: ShardHealth::Healthy,
             studies: BTreeMap::new(),
             counters: ShardCounters::default(),
         }
     }
 
-    /// Rebuild a shard from its WAL directory: load the newest
-    /// snapshot, replay every record appended since (verifying ask
-    /// divergence), then requeue every evaluation that was in a
-    /// worker's hands at the crash — their leases died with the
-    /// process, so they must re-emerge from future asks.
+    /// Rebuild a shard from an opened WAL: load the newest snapshot,
+    /// replay every record appended since (verifying ask divergence),
+    /// then requeue every evaluation that was in a worker's hands at
+    /// the crash — their leases died with the process, so they must
+    /// re-emerge from future asks. Each such requeue is a quarantine
+    /// strike, so an evaluation that crashes the *shard* on every
+    /// hand-out also runs out of retries.
     pub fn recover(
         id: usize,
         clock: Arc<dyn Clock>,
-        lease_ms: u64,
-        compact_every: usize,
-        dir: &std::path::Path,
+        opts: ShardOpts,
+        wal: Wal,
     ) -> Result<ShardCore> {
-        let wal = Wal::open(dir, id)?;
         let (snapshot, records) = wal.load()?;
-        let mut core =
-            ShardCore::new(id, clock, lease_ms, compact_every, None);
+        let mut core = ShardCore::new(id, clock, opts, None);
         if let Some(snap) = snapshot {
             for s in &snap.studies {
                 core.studies
@@ -205,15 +284,48 @@ impl ShardCore {
             })
             .collect();
         for (study, eval_id) in orphans {
-            core.append(&WalRecord::Requeue {
-                study: study.clone(),
-                eval_id,
-            })?;
-            if let Some(st) = core.studies.get_mut(&study) {
-                st.session.requeue(eval_id).with_context(|| {
-                    format!("requeueing orphan {eval_id} of {study:?}")
+            let strikes = core
+                .studies
+                .get(&study)
+                .and_then(|st| st.fail_counts.get(&eval_id))
+                .copied()
+                .unwrap_or(0)
+                + 1;
+            let max = core.opts.max_eval_retries;
+            if max > 0 && strikes >= max {
+                let penalty = core.opts.poison_penalty;
+                core.append(&WalRecord::Poison {
+                    study: study.clone(),
+                    eval_id,
+                    penalty,
                 })?;
-                core.counters.requeues += 1;
+                if let Some(st) = core.studies.get_mut(&study) {
+                    st.session.poison(eval_id, penalty).with_context(
+                        || {
+                            format!(
+                                "quarantining orphan {eval_id} of \
+                                 {study:?}"
+                            )
+                        },
+                    )?;
+                    st.fail_counts.remove(&eval_id);
+                    st.poisoned += 1;
+                    core.counters.poisoned += 1;
+                }
+            } else {
+                core.append(&WalRecord::Requeue {
+                    study: study.clone(),
+                    eval_id,
+                })?;
+                if let Some(st) = core.studies.get_mut(&study) {
+                    st.session.requeue(eval_id).with_context(|| {
+                        format!(
+                            "requeueing orphan {eval_id} of {study:?}"
+                        )
+                    })?;
+                    st.fail_counts.insert(eval_id, strikes);
+                    core.counters.requeues += 1;
+                }
             }
         }
         Ok(core)
@@ -251,18 +363,37 @@ impl ShardCore {
                 }
             }
             WalRecord::Tell { study, eval_id, trial, outcome } => {
-                self.study_mut(&study)?
-                    .session
+                let st = self.study_mut(&study)?;
+                st.session
                     .tell(eval_id, trial, outcome)
                     .with_context(|| format!("replay tell on {study:?}"))?;
+                let pending: BTreeSet<usize> =
+                    st.session.pending_ids().into_iter().collect();
+                st.fail_counts.retain(|id, _| pending.contains(id));
             }
             WalRecord::Requeue { study, eval_id } => {
-                self.study_mut(&study)?
-                    .session
+                let st = self.study_mut(&study)?;
+                st.session
                     .requeue(eval_id)
                     .with_context(|| {
                         format!("replay requeue on {study:?}")
                     })?;
+                *st.fail_counts.entry(eval_id).or_insert(0) += 1;
+            }
+            WalRecord::Poison { study, eval_id, penalty } => {
+                // The penalty comes from the record, not the current
+                // config — replay reproduces the logged decision.
+                let st = self.study_mut(&study)?;
+                st.session.poison(eval_id, penalty).with_context(
+                    || format!("replay poison on {study:?}"),
+                )?;
+                st.fail_counts.remove(&eval_id);
+                st.poisoned += 1;
+            }
+            WalRecord::WalSwitch { .. } => {
+                // `Wal::load` consumes switch frames while chasing the
+                // failover chain; one reaching replay is corruption.
+                bail!("WalSwitch record surfaced to shard replay");
             }
             WalRecord::Stop { study } => {
                 self.study_mut(&study)?.stopped = true;
@@ -284,30 +415,52 @@ impl ShardCore {
             .ok_or_else(|| anyhow!("unknown study {name:?}"))
     }
 
-    /// Durably append one record; wedge on failure. Returns the error
-    /// response to emit instead of an acknowledgement.
+    /// Durably append one record, counting a failover switch when the
+    /// WAL reports one.
     fn append(&mut self, rec: &WalRecord) -> Result<()> {
-        if let Some(w) = &self.wal {
-            w.append(rec)?;
+        if let Some(w) = &mut self.wal {
+            if w.append(rec)? {
+                self.counters.wal_failovers += 1;
+            }
             self.counters.wal_appends += 1;
             self.appends_since_compact += 1;
         }
         Ok(())
     }
 
-    fn log_or_wedge(&mut self, rec: WalRecord) -> Option<Response> {
+    /// Durably append one record, applying the `wal_failure` policy on
+    /// failure. Returns the error response to emit instead of an
+    /// acknowledgement. (A `Failover` policy that still fails here
+    /// means the failover append itself failed — state is ahead of the
+    /// log, so it wedges like `Wedge`.)
+    fn log_or_degrade(&mut self, rec: WalRecord) -> Option<Response> {
         match self.append(&rec) {
             Ok(()) => None,
-            Err(e) => {
-                self.wedged = true;
-                Some(Response::error(
-                    ErrorCode::Internal,
-                    format!(
-                        "shard {}: write-ahead log append failed: {e:#}",
-                        self.id
-                    ),
-                ))
-            }
+            Err(e) => match self.opts.wal_failure {
+                WalFailure::Readonly => {
+                    let reason = format!(
+                        "WAL append failed under the read-only \
+                         policy: {e:#}"
+                    );
+                    self.health =
+                        ShardHealth::Degraded { reason: reason.clone() };
+                    Some(Response::error(
+                        ErrorCode::ShardDegraded,
+                        format!("shard {}: {reason}", self.id),
+                    ))
+                }
+                WalFailure::Wedge | WalFailure::Failover => {
+                    self.health = ShardHealth::Wedged;
+                    Some(Response::error(
+                        ErrorCode::Internal,
+                        format!(
+                            "shard {}: write-ahead log append failed: \
+                             {e:#}",
+                            self.id
+                        ),
+                    ))
+                }
+            },
         }
     }
 
@@ -324,6 +477,8 @@ impl ShardCore {
                 study: name.clone(),
                 config_toml: st.config_toml.clone(),
                 stopped: st.stopped,
+                poisoned: st.poisoned,
+                fail_counts: st.fail_counts.clone(),
                 checkpoint: st.session.snapshot(),
             })
             .collect();
@@ -334,8 +489,8 @@ impl ShardCore {
     }
 
     fn maybe_compact(&mut self) {
-        if self.compact_every > 0
-            && self.appends_since_compact >= self.compact_every
+        if self.opts.compact_every > 0
+            && self.appends_since_compact >= self.opts.compact_every
             && self.compact().is_err()
         {
             // A failed compaction leaves the previous generation
@@ -345,9 +500,12 @@ impl ShardCore {
         }
     }
 
-    /// Requeue every expired lease (WAL-logged, so replay reproduces
-    /// the timeout decision). Called on every command and on idle
-    /// ticks.
+    /// Requeue — or, on the `max_eval_retries`-th strike, quarantine —
+    /// every expired lease (WAL-logged, so replay reproduces both
+    /// decisions). Called on every command and on idle ticks, *before*
+    /// dispatch, which pins the tie-break: at the exact expiry tick
+    /// (`expires_ms == now`) the lease is already gone when the
+    /// command runs.
     fn expire_leases(&mut self) {
         let now = self.clock.now_ms();
         let expired: Vec<(String, usize)> = self
@@ -361,60 +519,107 @@ impl ShardCore {
             })
             .collect();
         for (study, eval_id) in expired {
-            // Apply, then log: the record is only written for requeues
-            // that actually happened, so replay can never diverge. A
-            // failed append wedges the shard (state ahead of the log).
-            let requeued = match self.studies.get_mut(&study) {
-                Some(st) => {
-                    st.leases.remove(&eval_id);
-                    st.session.requeue(eval_id).is_ok()
-                }
-                None => false,
-            };
-            if !requeued {
+            // Apply, then log: the record is only written for
+            // transitions that actually happened, so replay can never
+            // diverge. A failed append engages the wal_failure policy.
+            let max = self.opts.max_eval_retries;
+            let penalty = self.opts.poison_penalty;
+            let Some(st) = self.studies.get_mut(&study) else {
                 continue;
-            }
-            self.counters.requeues += 1;
-            if self
-                .log_or_wedge(WalRecord::Requeue {
-                    study: study.clone(),
-                    eval_id,
-                })
-                .is_some()
-            {
-                return; // wedged; stop mutating
+            };
+            st.leases.remove(&eval_id);
+            let strikes =
+                st.fail_counts.get(&eval_id).copied().unwrap_or(0) + 1;
+            if max > 0 && strikes >= max {
+                if st.session.poison(eval_id, penalty).is_err() {
+                    continue;
+                }
+                st.fail_counts.remove(&eval_id);
+                st.poisoned += 1;
+                self.counters.poisoned += 1;
+                if self
+                    .log_or_degrade(WalRecord::Poison {
+                        study: study.clone(),
+                        eval_id,
+                        penalty,
+                    })
+                    .is_some()
+                {
+                    return; // unhealthy; stop mutating
+                }
+            } else {
+                if st.session.requeue(eval_id).is_err() {
+                    continue;
+                }
+                st.fail_counts.insert(eval_id, strikes);
+                self.counters.requeues += 1;
+                if self
+                    .log_or_degrade(WalRecord::Requeue {
+                        study: study.clone(),
+                        eval_id,
+                    })
+                    .is_some()
+                {
+                    return; // unhealthy; stop mutating
+                }
             }
         }
     }
 
     /// Idle maintenance: lease expiry (and any due compaction).
     pub fn tick(&mut self) {
-        if self.wedged {
+        if !matches!(self.health, ShardHealth::Healthy) {
             return;
         }
         self.expire_leases();
         self.maybe_compact();
     }
 
-    /// Process one command. Never blocks, never panics; all failures
-    /// are typed [`Response::Error`]s.
-    pub fn handle(&mut self, req: &Request) -> Response {
-        if self.wedged {
-            return Response::error(
+    /// The typed rejection for the current (unhealthy) state.
+    fn health_error(&self, when: &str) -> Response {
+        match &self.health {
+            ShardHealth::Wedged => Response::error(
                 ErrorCode::Internal,
                 format!(
-                    "shard {} is wedged after a WAL write failure; \
-                     restart and recover from the log",
+                    "shard {} is wedged after a WAL write \
+                     failure{when}; restart and recover from the log",
                     self.id
                 ),
-            );
+            ),
+            ShardHealth::Degraded { reason } => Response::error(
+                ErrorCode::ShardDegraded,
+                format!("shard {} is degraded{when}: {reason}", self.id),
+            ),
+            ShardHealth::Healthy => Response::error(
+                ErrorCode::Internal,
+                format!("shard {}: spurious health rejection", self.id),
+            ),
+        }
+    }
+
+    /// Process one command. Never blocks, never panics; all failures
+    /// are typed [`Response::Error`]s. A degraded shard still answers
+    /// status queries — that is the point of `Degraded` over `Wedged`:
+    /// operators can see what is stranded.
+    pub fn handle(&mut self, req: &Request) -> Response {
+        match &self.health {
+            ShardHealth::Healthy => {}
+            ShardHealth::Wedged => return self.health_error(""),
+            ShardHealth::Degraded { .. } => {
+                return match req {
+                    Request::StudyStatus { study } => {
+                        self.handle_status(study)
+                    }
+                    Request::ListStudies => Response::Studies {
+                        studies: self.studies.keys().cloned().collect(),
+                    },
+                    _ => self.health_error(""),
+                }
+            }
         }
         self.expire_leases();
-        if self.wedged {
-            return Response::error(
-                ErrorCode::Internal,
-                format!("shard {} wedged during lease expiry", self.id),
-            );
+        if !matches!(self.health, ShardHealth::Healthy) {
+            return self.health_error(" during lease expiry");
         }
         let resp = self.dispatch(req);
         self.maybe_compact();
@@ -430,8 +635,8 @@ impl ShardCore {
             Request::Tell { study, worker, eval_id, trial, outcome } => {
                 self.handle_tell(study, worker, *eval_id, *trial, outcome)
             }
-            Request::Heartbeat { study, worker } => {
-                self.handle_heartbeat(study, worker)
+            Request::Heartbeat { study, worker, eval } => {
+                self.handle_heartbeat(study, worker, *eval)
             }
             Request::StudyStatus { study } => self.handle_status(study),
             Request::StopStudy { study } => self.handle_stop(study),
@@ -464,7 +669,7 @@ impl ShardCore {
                 )
             }
         };
-        if let Some(resp) = self.log_or_wedge(WalRecord::Create {
+        if let Some(resp) = self.log_or_degrade(WalRecord::Create {
             study: study.to_string(),
             config_toml: config_toml.to_string(),
         }) {
@@ -475,7 +680,7 @@ impl ShardCore {
     }
 
     fn handle_ask(&mut self, study: &str, worker: &str) -> Response {
-        let lease_ms = self.lease_ms;
+        let lease_ms = self.opts.lease_ms;
         let now = self.clock.now_ms();
         let Some(st) = self.studies.get_mut(study) else {
             return Self::unknown(study);
@@ -501,7 +706,7 @@ impl ShardCore {
                 expires_ms: now.saturating_add(lease_ms),
             },
         );
-        if let Some(resp) = self.log_or_wedge(WalRecord::Ask {
+        if let Some(resp) = self.log_or_degrade(WalRecord::Ask {
             study: study.to_string(),
             eval_id: job.id,
             trials: job.trials.clone(),
@@ -564,7 +769,7 @@ impl ShardCore {
                 )
             }
         }
-        if let Some(resp) = self.log_or_wedge(WalRecord::Tell {
+        if let Some(resp) = self.log_or_degrade(WalRecord::Tell {
             study: study.to_string(),
             eval_id,
             trial,
@@ -579,7 +784,7 @@ impl ShardCore {
             Ok(t) => t,
             Err(e) => {
                 // check_tell said Accept, so this is an invariant break.
-                self.wedged = true;
+                self.health = ShardHealth::Wedged;
                 return Response::error(
                     ErrorCode::Internal,
                     format!("tell accepted then failed: {e:#}"),
@@ -592,24 +797,56 @@ impl ShardCore {
         let live: BTreeSet<usize> =
             st.session.outstanding_ids().into_iter().collect();
         st.leases.retain(|id, _| live.contains(id));
+        // Strike counts die with their evaluation: drop those whose
+        // evaluation left the pending set (recorded or barrier-flushed
+        // — requeued and buffered evaluations are still pending and
+        // keep theirs).
+        let pending: BTreeSet<usize> =
+            st.session.pending_ids().into_iter().collect();
+        st.fail_counts.retain(|id, _| pending.contains(id));
         self.counters.tells += 1;
         Response::Told { recorded: told.recorded, extended: told.extended }
     }
 
-    fn handle_heartbeat(&mut self, study: &str, worker: &str) -> Response {
+    fn handle_heartbeat(
+        &mut self,
+        study: &str,
+        worker: &str,
+        eval: Option<usize>,
+    ) -> Response {
         let now = self.clock.now_ms();
-        let lease_ms = self.lease_ms;
+        let lease_ms = self.opts.lease_ms;
         let Some(st) = self.studies.get_mut(study) else {
             return Self::unknown(study);
         };
-        let mut renewed = 0usize;
-        for lease in st.leases.values_mut() {
-            if lease.worker == worker {
-                lease.expires_ms = now.saturating_add(lease_ms);
-                renewed += 1;
+        match eval {
+            None => {
+                let mut renewed = 0usize;
+                for lease in st.leases.values_mut() {
+                    if lease.worker == worker {
+                        lease.expires_ms = now.saturating_add(lease_ms);
+                        renewed += 1;
+                    }
+                }
+                Response::Beat { renewed }
             }
+            Some(id) => match st.leases.get_mut(&id) {
+                Some(l) if l.worker == worker => {
+                    l.expires_ms = now.saturating_add(lease_ms);
+                    Response::Beat { renewed: 1 }
+                }
+                // Expired, never granted, or someone else's: a typed
+                // no-op — the worker learns its lease is gone without
+                // perturbing anyone's state.
+                _ => Response::error(
+                    ErrorCode::UnknownLease,
+                    format!(
+                        "worker {worker:?} holds no live lease on \
+                         evaluation {id} of study {study:?}"
+                    ),
+                ),
+            },
         }
-        Response::Beat { renewed }
     }
 
     fn handle_status(&self, study: &str) -> Response {
@@ -626,6 +863,7 @@ impl ShardCore {
             in_flight: st.session.in_flight(),
             complete: st.session.is_complete(),
             stopped: st.stopped,
+            poisoned: st.poisoned,
             best,
             config_toml: st.config_toml.clone(),
         }
@@ -636,9 +874,9 @@ impl ShardCore {
             return Self::unknown(study);
         };
         if !st.stopped {
-            if let Some(resp) = self
-                .log_or_wedge(WalRecord::Stop { study: study.to_string() })
-            {
+            if let Some(resp) = self.log_or_degrade(WalRecord::Stop {
+                study: study.to_string(),
+            }) {
                 return resp;
             }
             if let Some(st) = self.studies.get_mut(study) {
@@ -662,6 +900,8 @@ impl ShardCore {
             study: study.to_string(),
             config_toml: st.config_toml.clone(),
             stopped: st.stopped,
+            poisoned: st.poisoned,
+            fail_counts: st.fail_counts.clone(),
             checkpoint: st.session.snapshot(),
         };
         self.append(&WalRecord::Evict { study: study.to_string() })?;
@@ -689,9 +929,33 @@ impl ShardCore {
         self.id
     }
 
-    /// True once a WAL append failed and the shard refuses commands.
+    /// True once a WAL append failed (or an invariant broke) and the
+    /// shard refuses every command.
     pub fn is_wedged(&self) -> bool {
-        self.wedged
+        matches!(self.health, ShardHealth::Wedged)
+    }
+
+    /// True when the shard rejects mutations but still serves status.
+    pub fn is_degraded(&self) -> bool {
+        matches!(self.health, ShardHealth::Degraded { .. })
+    }
+
+    /// The shard's operational state.
+    pub fn health(&self) -> &ShardHealth {
+        &self.health
+    }
+
+    /// Force the shard into [`ShardHealth::Degraded`] — the
+    /// supervisor's terminal state once a shard's restart budget is
+    /// exhausted. Status queries keep working; mutations are rejected
+    /// with [`ErrorCode::ShardDegraded`].
+    pub fn set_degraded(&mut self, reason: impl Into<String>) {
+        self.health = ShardHealth::Degraded { reason: reason.into() };
+    }
+
+    /// The shard's behaviour knobs.
+    pub fn opts(&self) -> &ShardOpts {
+        &self.opts
     }
 
     /// Operational counters.

@@ -1,0 +1,200 @@
+//! Shard supervision policy: restart budget + jittered exponential
+//! backoff (DESIGN.md §16).
+//!
+//! The policy is sans-IO and deterministic: it owns no threads, reads
+//! no clock, and draws jitter from a seeded [`Rng`], so the exact
+//! delay sequence a shard will see is a pure function of
+//! `(config, shard id, failure count)` — which is what lets the chaos
+//! suite assert restart counts analytically. The threaded shell
+//! (`serve::pool`) does the actual sleeping, `catch_unwind`ing, and
+//! WAL re-recovery; it asks this type only "what now?" after each
+//! failure.
+//!
+//! Backoff is *full jitter* over an exponential envelope: failure
+//! `n` (1-based) draws uniformly from `[base·2ⁿ⁻¹ / 2, base·2ⁿ⁻¹]`,
+//! capped at `backoff_max_ms`. The budget is cumulative over the
+//! shard's lifetime, not per-incident: a shard that keeps crashing
+//! eventually stops burning CPU and degrades, exactly like a crash
+//!-looping unit under any sane init system.
+
+use crate::sampling::rng::Rng;
+
+/// Restart-policy knobs (`[serve]` config).
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// Restarts granted before the shard is declared [`Degrade`]d;
+    /// 0 means never restart (every failure degrades immediately).
+    ///
+    /// [`Degrade`]: SupervisorDecision::Degrade
+    pub max_restarts: u32,
+    /// Backoff envelope base, in milliseconds (failure 1 draws from
+    /// `[base/2, base]`).
+    pub backoff_base_ms: u64,
+    /// Backoff envelope cap, in milliseconds.
+    pub backoff_max_ms: u64,
+    /// Seed for the jitter stream (forked per shard, so restarts of
+    /// different shards don't synchronize into a thundering herd).
+    pub jitter_seed: u64,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> SupervisorConfig {
+        SupervisorConfig {
+            max_restarts: 3,
+            backoff_base_ms: 100,
+            backoff_max_ms: 5_000,
+            jitter_seed: 0x5u64 << 32 | 0xec0_5ec,
+        }
+    }
+}
+
+/// What the shell should do about a shard failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SupervisorDecision {
+    /// Sleep this many milliseconds, then restart the shard from its
+    /// WAL (replay rebuilds the exact pre-crash state).
+    RestartAfterMs(u64),
+    /// Budget exhausted: put the shard into the typed `Degraded`
+    /// state — reject mutations, keep serving status — instead of
+    /// crash-looping.
+    Degrade,
+}
+
+/// Per-shard supervision state: how many restarts were spent, and the
+/// shard's private jitter stream.
+#[derive(Debug)]
+pub struct Supervisor {
+    cfg: SupervisorConfig,
+    shard: usize,
+    restarts: u32,
+    rng: Rng,
+}
+
+impl Supervisor {
+    /// A fresh supervisor for `shard`. The jitter stream is
+    /// `jitter_seed` forked by the shard index, so equal configs give
+    /// different shards decorrelated delays.
+    pub fn new(cfg: SupervisorConfig, shard: usize) -> Supervisor {
+        let mut root = Rng::new(cfg.jitter_seed);
+        let rng = root.fork(shard as u64);
+        Supervisor { cfg, shard, restarts: 0, rng }
+    }
+
+    /// Shard index this supervisor governs.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Restarts spent so far.
+    pub fn restarts(&self) -> u32 {
+        self.restarts
+    }
+
+    /// Record one failure (panic or wedge) and decide what happens
+    /// next. Consumes one unit of budget per restart granted.
+    pub fn on_failure(&mut self) -> SupervisorDecision {
+        if self.restarts >= self.cfg.max_restarts {
+            return SupervisorDecision::Degrade;
+        }
+        self.restarts += 1;
+        // Exponential envelope, saturating: base·2^(n-1) capped at max.
+        let exp = self
+            .cfg
+            .backoff_base_ms
+            .saturating_mul(
+                1u64.checked_shl(self.restarts - 1).unwrap_or(u64::MAX),
+            )
+            .min(self.cfg.backoff_max_ms);
+        // Full jitter: uniform in [exp/2, exp].
+        let span = exp - exp / 2;
+        let delay = exp / 2
+            + if span > 0 { self.rng.next_u64() % (span + 1) } else { 0 };
+        SupervisorDecision::RestartAfterMs(delay)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SupervisorConfig {
+        SupervisorConfig {
+            max_restarts: 3,
+            backoff_base_ms: 100,
+            backoff_max_ms: 5_000,
+            jitter_seed: 42,
+        }
+    }
+
+    #[test]
+    fn budget_then_degrade() {
+        let mut s = Supervisor::new(cfg(), 0);
+        for n in 1..=3u32 {
+            match s.on_failure() {
+                SupervisorDecision::RestartAfterMs(d) => {
+                    // Envelope for failure n: [base·2ⁿ⁻¹/2, base·2ⁿ⁻¹].
+                    let exp = 100u64 * (1 << (n - 1));
+                    assert!(
+                        d >= exp / 2 && d <= exp,
+                        "failure {n}: delay {d} outside [{}, {exp}]",
+                        exp / 2
+                    );
+                }
+                SupervisorDecision::Degrade => {
+                    panic!("degraded inside the budget (failure {n})")
+                }
+            }
+            assert_eq!(s.restarts(), n);
+        }
+        assert_eq!(s.on_failure(), SupervisorDecision::Degrade);
+        assert_eq!(s.on_failure(), SupervisorDecision::Degrade);
+        assert_eq!(s.restarts(), 3, "degrade spends no budget");
+    }
+
+    #[test]
+    fn delays_are_deterministic_per_seed_and_shard() {
+        let seq = |shard| {
+            let mut s = Supervisor::new(cfg(), shard);
+            (0..3)
+                .map(|_| match s.on_failure() {
+                    SupervisorDecision::RestartAfterMs(d) => d,
+                    SupervisorDecision::Degrade => u64::MAX,
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(seq(0), seq(0), "same shard, same delays");
+        assert_ne!(seq(0), seq(1), "shards are decorrelated");
+    }
+
+    #[test]
+    fn backoff_saturates_at_the_cap() {
+        let mut s = Supervisor::new(
+            SupervisorConfig {
+                max_restarts: 80,
+                backoff_base_ms: 1_000,
+                backoff_max_ms: 2_000,
+                jitter_seed: 7,
+            },
+            0,
+        );
+        // Far past where 2ⁿ would overflow a shift: the envelope must
+        // sit at the cap, not wrap.
+        for _ in 0..80 {
+            match s.on_failure() {
+                SupervisorDecision::RestartAfterMs(d) => {
+                    assert!(d <= 2_000);
+                }
+                SupervisorDecision::Degrade => break,
+            }
+        }
+    }
+
+    #[test]
+    fn zero_budget_degrades_immediately() {
+        let mut s = Supervisor::new(
+            SupervisorConfig { max_restarts: 0, ..cfg() },
+            0,
+        );
+        assert_eq!(s.on_failure(), SupervisorDecision::Degrade);
+    }
+}

@@ -36,6 +36,21 @@
 //! compaction boundary — histories stay bit-identical (the same
 //! semantics as the chaos testbed's checkpoint restarts). The same
 //! `StudySnapshot` unit is the migration hand-off between shards.
+//!
+//! # Failover chain (DESIGN.md §16)
+//!
+//! Under `wal_failure = failover` the WAL carries a secondary
+//! directory. When an append to the primary fails, the log *switches*:
+//! a `WalSwitch` frame is appended to the same generation's log file in
+//! the failover directory, followed by the record that failed, and all
+//! subsequent appends go there. Replay chases the chain — primary
+//! records first (a torn tail from the failed append is dropped as
+//! usual), then, after verifying the `WalSwitch` frame names this shard
+//! and generation, the failover records — so a switched log replays
+//! exactly like an unswitched one. `WalSwitch` frames are consumed by
+//! the chain logic and never surface to the shard. Disk access goes
+//! through the [`WalIo`] trait so `cluster::faults` can inject append
+//! errors, torn tails, and slow fsyncs underneath an unmodified shard.
 
 use std::path::{Path, PathBuf};
 
@@ -49,6 +64,70 @@ use crate::util::json::{parse, write, Json};
 
 /// WAL format version tag carried by every record and snapshot.
 pub const WAL_VERSION: &str = "hyppo-wal-v1";
+
+/// What a shard does when a WAL append fails (`[serve] wal_failure`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WalFailure {
+    /// Wedge the shard: every subsequent command is rejected with
+    /// `Internal` (PR 9 behaviour, and the safest default — nothing
+    /// unlogged is ever acknowledged).
+    Wedge,
+    /// Degrade to read-only: mutations are rejected with
+    /// `ShardDegraded`, but `study_status` / `list_studies` keep
+    /// working so operators can see what is stranded.
+    Readonly,
+    /// Switch appends to the configured failover directory, recording a
+    /// `WalSwitch` frame so replay chases the chain.
+    Failover,
+}
+
+impl WalFailure {
+    /// Stable config-file identifier.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WalFailure::Wedge => "wedge",
+            WalFailure::Readonly => "readonly",
+            WalFailure::Failover => "failover",
+        }
+    }
+
+    /// Parse a config-file identifier.
+    pub fn from_str(s: &str) -> Result<WalFailure> {
+        Ok(match s {
+            "wedge" => WalFailure::Wedge,
+            "readonly" => WalFailure::Readonly,
+            "failover" => WalFailure::Failover,
+            other => bail!(
+                "unknown wal_failure policy {other:?} \
+                 (expected wedge | readonly | failover)"
+            ),
+        })
+    }
+}
+
+/// Durable-storage access used by [`Wal`]. The production
+/// implementation is [`FsWalIo`] (fsync-on-append via `util::fsio`);
+/// `cluster::faults::FaultyWalIo` wraps one to inject append errors,
+/// torn tails, and slow fsyncs for the chaos suite.
+pub trait WalIo: Send + std::fmt::Debug {
+    /// Durably append `bytes` to `path` (create if absent).
+    fn append(&mut self, path: &Path, bytes: &[u8]) -> Result<()>;
+    /// Atomically and durably replace `path` with `bytes`.
+    fn atomic_write(&mut self, path: &Path, bytes: &[u8]) -> Result<()>;
+}
+
+/// The real filesystem: `util::fsio`'s crash-durable primitives.
+#[derive(Debug, Default)]
+pub struct FsWalIo;
+
+impl WalIo for FsWalIo {
+    fn append(&mut self, path: &Path, bytes: &[u8]) -> Result<()> {
+        append_sync(path, bytes)
+    }
+    fn atomic_write(&mut self, path: &Path, bytes: &[u8]) -> Result<()> {
+        atomic_write_sync(path, bytes)
+    }
+}
 
 /// One logged state transition of a shard.
 #[derive(Debug, Clone)]
@@ -67,6 +146,15 @@ pub enum WalRecord {
     },
     /// An in-flight evaluation was requeued (lease expiry or recovery).
     Requeue { study: String, eval_id: usize },
+    /// An evaluation exhausted its retry budget and was quarantined:
+    /// every outstanding trial was scored as `penalty`. The penalty is
+    /// logged *in the record* so replay reproduces the history even if
+    /// the configured penalty changes between runs.
+    Poison { study: String, eval_id: usize, penalty: f64 },
+    /// The log switched to the failover directory mid-generation. Only
+    /// legal as the first frame of a failover log; consumed by
+    /// [`Wal::load`], never surfaced to the shard.
+    WalSwitch { shard: usize, generation: u64, from: String },
     /// The study stopped handing out work.
     Stop { study: String },
     /// The study migrated away from this shard.
@@ -85,6 +173,14 @@ pub struct StudySnapshot {
     pub config_toml: String,
     /// Whether the study was stopped.
     pub stopped: bool,
+    /// Evaluations quarantined so far (monotone counter; the penalty
+    /// records themselves live in the checkpoint history).
+    pub poisoned: usize,
+    /// Lease-expiry strike counts for still-pending evaluations, by
+    /// evaluation id — the quarantine decision state, which must
+    /// survive compaction and migration or a pathological trial's
+    /// count would reset with every snapshot.
+    pub fail_counts: std::collections::BTreeMap<usize, usize>,
     /// The session's decision state in checkpoint wire form.
     pub checkpoint: Checkpoint,
 }
@@ -107,6 +203,12 @@ fn study_snapshot_to_json(s: &StudySnapshot) -> Json {
     m.insert("study".into(), Json::Str(s.study.clone()));
     m.insert("config_toml".into(), Json::Str(s.config_toml.clone()));
     m.insert("stopped".into(), Json::Bool(s.stopped));
+    m.insert("poisoned".into(), Json::Num(s.poisoned as f64));
+    let mut fc = std::collections::BTreeMap::new();
+    for (id, strikes) in &s.fail_counts {
+        fc.insert(id.to_string(), Json::Num(*strikes as f64));
+    }
+    m.insert("fail_counts".into(), Json::Obj(fc));
     // The checkpoint travels in its own wire format (a JSON string),
     // so WAL snapshots exercise exactly the kill/resume serialization.
     m.insert(
@@ -119,6 +221,23 @@ fn study_snapshot_to_json(s: &StudySnapshot) -> Json {
 fn study_snapshot_from_json(v: &Json) -> Result<StudySnapshot> {
     let ckpt_text =
         v.get("checkpoint").as_str().context("snapshot checkpoint")?;
+    // `poisoned` / `fail_counts` are absent in pre-quarantine
+    // snapshots; default to a clean record.
+    let poisoned = match v.get("poisoned") {
+        Json::Null => 0,
+        other => usize_field(other, "snapshot poisoned")?,
+    };
+    let mut fail_counts = std::collections::BTreeMap::new();
+    if let Json::Obj(fc) = v.get("fail_counts") {
+        for (id, strikes) in fc {
+            fail_counts.insert(
+                id.parse::<usize>().with_context(|| {
+                    format!("snapshot fail_counts key {id:?}")
+                })?,
+                usize_field(strikes, "snapshot fail_counts value")?,
+            );
+        }
+    }
     Ok(StudySnapshot {
         study: v
             .get("study")
@@ -131,6 +250,8 @@ fn study_snapshot_from_json(v: &Json) -> Result<StudySnapshot> {
             .context("snapshot config_toml")?
             .to_string(),
         stopped: v.get("stopped").as_bool().context("snapshot stopped")?,
+        poisoned,
+        fail_counts,
         checkpoint: Checkpoint::from_json_str(ckpt_text)
             .context("snapshot checkpoint body")?,
     })
@@ -167,6 +288,21 @@ fn record_to_json(r: &WalRecord) -> Json {
             m.insert("t".into(), Json::Str("requeue".into()));
             m.insert("study".into(), Json::Str(study.clone()));
             m.insert("eval".into(), Json::Num(*eval_id as f64));
+        }
+        WalRecord::Poison { study, eval_id, penalty } => {
+            m.insert("t".into(), Json::Str("poison".into()));
+            m.insert("study".into(), Json::Str(study.clone()));
+            m.insert("eval".into(), Json::Num(*eval_id as f64));
+            m.insert("penalty".into(), Json::Num(*penalty));
+        }
+        WalRecord::WalSwitch { shard, generation, from } => {
+            m.insert("t".into(), Json::Str("walswitch".into()));
+            m.insert("shard".into(), Json::Num(*shard as f64));
+            m.insert(
+                "generation".into(),
+                Json::Str(generation.to_string()),
+            );
+            m.insert("from".into(), Json::Str(from.clone()));
         }
         WalRecord::Stop { study } => {
             m.insert("t".into(), Json::Str("stop".into()));
@@ -230,6 +366,24 @@ fn record_from_json(root: &Json) -> Result<WalRecord> {
         "requeue" => WalRecord::Requeue {
             study: study()?,
             eval_id: usize_field(root.get("eval"), "record eval")?,
+        },
+        "poison" => WalRecord::Poison {
+            study: study()?,
+            eval_id: usize_field(root.get("eval"), "record eval")?,
+            penalty: root
+                .get("penalty")
+                .as_f64()
+                .context("record penalty")?,
+        },
+        "walswitch" => WalRecord::WalSwitch {
+            shard: usize_field(root.get("shard"), "record shard")?,
+            generation: str_field(
+                root.get("generation"),
+                "record generation",
+            )?
+            .parse::<u64>()
+            .context("record generation")?,
+            from: str_field(root.get("from"), "record from")?,
         },
         "stop" => WalRecord::Stop { study: study()? },
         "evict" => WalRecord::Evict { study: study()? },
@@ -342,12 +496,16 @@ fn shard_snapshot_from_json(root: &Json) -> Result<ShardSnapshot> {
 // ---------------------------------------------------------------------
 
 /// One shard's log handle: the current generation's append target plus
-/// the compaction machinery.
+/// the compaction machinery and (optionally) a failover directory the
+/// log can switch to when the primary disk fails.
 #[derive(Debug)]
 pub struct Wal {
     dir: PathBuf,
+    failover: Option<PathBuf>,
     shard: usize,
     generation: u64,
+    switched: bool,
+    io: Box<dyn WalIo>,
 }
 
 fn log_path(dir: &Path, shard: usize, generation: u64) -> PathBuf {
@@ -367,27 +525,58 @@ fn parse_gen(name: &str, stem: &str, shard: usize, ext: &str) -> Option<u64> {
 
 impl Wal {
     /// Open (or initialize) the shard's WAL under `dir`, resuming the
-    /// highest generation present on disk.
+    /// highest generation present on disk. No failover directory, real
+    /// filesystem io.
     pub fn open(dir: &Path, shard: usize) -> Result<Wal> {
+        Wal::open_with(dir, None, shard, Box::new(FsWalIo))
+    }
+
+    /// Open with an optional failover directory and injectable storage.
+    /// The resumed generation is the highest present in *either*
+    /// directory, and the log counts as already switched when the
+    /// failover directory holds files at that generation (a prior run
+    /// failed over, or compacted after failing over).
+    pub fn open_with(
+        dir: &Path,
+        failover: Option<&Path>,
+        shard: usize,
+        io: Box<dyn WalIo>,
+    ) -> Result<Wal> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("mkdir {}", dir.display()))?;
         let mut generation = 0u64;
-        for entry in std::fs::read_dir(dir)
-            .with_context(|| format!("scanning {}", dir.display()))?
-        {
-            let name = entry?.file_name();
-            let Some(name) = name.to_str() else { continue };
-            for g in [
-                parse_gen(name, "wal", shard, "log"),
-                parse_gen(name, "snap", shard, "json"),
-            ]
-            .into_iter()
-            .flatten()
+        for d in [Some(dir), failover].into_iter().flatten() {
+            if !d.is_dir() {
+                continue; // failover dir is created lazily on switch
+            }
+            for entry in std::fs::read_dir(d)
+                .with_context(|| format!("scanning {}", d.display()))?
             {
-                generation = generation.max(g);
+                let name = entry?.file_name();
+                let Some(name) = name.to_str() else { continue };
+                for g in [
+                    parse_gen(name, "wal", shard, "log"),
+                    parse_gen(name, "snap", shard, "json"),
+                ]
+                .into_iter()
+                .flatten()
+                {
+                    generation = generation.max(g);
+                }
             }
         }
-        Ok(Wal { dir: dir.to_path_buf(), shard, generation })
+        let switched = failover.is_some_and(|f| {
+            log_path(f, shard, generation).is_file()
+                || snap_path(f, shard, generation).is_file()
+        });
+        Ok(Wal {
+            dir: dir.to_path_buf(),
+            failover: failover.map(Path::to_path_buf),
+            shard,
+            generation,
+            switched,
+            io,
+        })
     }
 
     /// True when any WAL or snapshot file for `shard` exists in `dir`.
@@ -410,59 +599,175 @@ impl Wal {
         self.generation
     }
 
-    /// The current generation's log file.
-    pub fn log_file(&self) -> PathBuf {
-        log_path(&self.dir, self.shard, self.generation)
+    /// True when appends have switched to the failover directory.
+    pub fn is_switched(&self) -> bool {
+        self.switched
     }
 
-    /// Durably append one record (fsync before return — see
-    /// `util::fsio::append_sync`).
-    pub fn append(&self, record: &WalRecord) -> Result<()> {
-        append_sync(&self.log_file(), encode_record(record).as_bytes())
+    /// The directory currently receiving appends.
+    fn active_dir(&self) -> &Path {
+        if self.switched {
+            self.failover.as_deref().unwrap_or(&self.dir)
+        } else {
+            &self.dir
+        }
+    }
+
+    /// The current generation's append-target log file.
+    pub fn log_file(&self) -> PathBuf {
+        log_path(self.active_dir(), self.shard, self.generation)
+    }
+
+    /// Durably append one record (fsync before return). Returns `true`
+    /// when this call failed over to the secondary directory: the
+    /// primary append failed, and a `WalSwitch` frame plus the record
+    /// itself landed in the failover log instead. Without a failover
+    /// directory (or when the failover itself fails) the error
+    /// propagates — the caller applies its `wal_failure` policy.
+    pub fn append(&mut self, record: &WalRecord) -> Result<bool> {
+        let framed = encode_record(record);
+        let target = self.log_file();
+        let primary_err = match self.io.append(&target, framed.as_bytes())
+        {
+            Ok(()) => return Ok(false),
+            Err(e) => e,
+        };
+        if self.switched {
+            return Err(primary_err);
+        }
+        let Some(fdir) = self.failover.clone() else {
+            return Err(primary_err);
+        };
+        std::fs::create_dir_all(&fdir)
+            .with_context(|| format!("mkdir {}", fdir.display()))?;
+        let switch = WalRecord::WalSwitch {
+            shard: self.shard,
+            generation: self.generation,
+            from: self.dir.display().to_string(),
+        };
+        let flog = log_path(&fdir, self.shard, self.generation);
+        self.io
+            .append(&flog, encode_record(&switch).as_bytes())
+            .with_context(|| {
+                format!(
+                    "failover append to {} after primary failure: \
+                     {primary_err:#}",
+                    flog.display()
+                )
+            })?;
+        // The switch frame is durable: from here on this generation's
+        // tail lives in the failover log, even if re-appending the
+        // record below fails (recovery then sees an empty tail).
+        self.switched = true;
+        self.io.append(&flog, framed.as_bytes()).with_context(|| {
+            format!("re-appending record to {}", flog.display())
+        })?;
+        Ok(true)
     }
 
     /// Load the current generation: its snapshot (if compaction ever
-    /// ran) plus every record appended since, torn tail dropped.
+    /// ran) plus every record appended since, torn tail dropped. When a
+    /// failover log exists for this generation the record stream is the
+    /// primary log followed by the failover log's records (its leading
+    /// `WalSwitch` frame verified and stripped).
     pub fn load(&self) -> Result<(Option<ShardSnapshot>, Vec<WalRecord>)> {
-        let snap = snap_path(&self.dir, self.shard, self.generation);
-        let snapshot = if snap.is_file() {
-            let text = std::fs::read_to_string(&snap)
-                .with_context(|| format!("reading {}", snap.display()))?;
-            let root = parse(&text).map_err(|e| {
-                anyhow!("parsing {}: {e}", snap.display())
-            })?;
-            Some(shard_snapshot_from_json(&root)?)
-        } else {
-            None
-        };
-        let log = self.log_file();
-        let records = if log.is_file() {
-            let bytes = std::fs::read(&log)
-                .with_context(|| format!("reading {}", log.display()))?;
+        let mut snapshot = None;
+        for d in [Some(self.dir.as_path()), self.failover.as_deref()]
+            .into_iter()
+            .flatten()
+        {
+            let snap = snap_path(d, self.shard, self.generation);
+            if snap.is_file() {
+                let text = std::fs::read_to_string(&snap).with_context(
+                    || format!("reading {}", snap.display()),
+                )?;
+                let root = parse(&text).map_err(|e| {
+                    anyhow!("parsing {}: {e}", snap.display())
+                })?;
+                snapshot = Some(shard_snapshot_from_json(&root)?);
+                break;
+            }
+        }
+        let plog = log_path(&self.dir, self.shard, self.generation);
+        let mut records = if plog.is_file() {
+            let bytes = std::fs::read(&plog)
+                .with_context(|| format!("reading {}", plog.display()))?;
             decode_stream(&bytes)
-                .with_context(|| format!("replaying {}", log.display()))?
+                .with_context(|| format!("replaying {}", plog.display()))?
         } else {
             Vec::new()
         };
+        if let Some(fdir) = &self.failover {
+            let flog = log_path(fdir, self.shard, self.generation);
+            if flog.is_file() {
+                let bytes = std::fs::read(&flog).with_context(|| {
+                    format!("reading {}", flog.display())
+                })?;
+                let mut tail = decode_stream(&bytes).with_context(
+                    || format!("replaying {}", flog.display()),
+                )?;
+                match tail.first() {
+                    Some(WalRecord::WalSwitch {
+                        shard,
+                        generation,
+                        ..
+                    }) => {
+                        if *shard != self.shard
+                            || *generation != self.generation
+                        {
+                            bail!(
+                                "{}: WalSwitch frame names shard {shard} \
+                                 gen {generation}, expected shard {} gen \
+                                 {}",
+                                flog.display(),
+                                self.shard,
+                                self.generation
+                            );
+                        }
+                        records.extend(tail.drain(..).skip(1));
+                    }
+                    _ if !plog.is_file() => {
+                        // A generation born in the failover directory
+                        // (compaction after a switch) has no frame.
+                        records = tail;
+                    }
+                    _ => bail!(
+                        "{}: failover log lacks a leading WalSwitch \
+                         frame while the primary log exists",
+                        flog.display()
+                    ),
+                }
+            }
+        }
+        if records
+            .iter()
+            .any(|r| matches!(r, WalRecord::WalSwitch { .. }))
+        {
+            bail!("WalSwitch frame in the middle of a record stream");
+        }
         Ok((snapshot, records))
     }
 
-    /// Snapshot + truncate: durably write `studies` as generation G+1,
-    /// switch appends to the new generation, then retire generation G's
-    /// files (best-effort — stale files are ignored by recovery, which
+    /// Snapshot + truncate: durably write `studies` as generation G+1
+    /// into the active directory, switch appends to the new generation,
+    /// then retire generation G's files in both directories
+    /// (best-effort — stale files are ignored by recovery, which
     /// always loads the highest generation).
     pub fn compact(&mut self, studies: Vec<StudySnapshot>) -> Result<()> {
         let next = self.generation + 1;
         let snap = ShardSnapshot { generation: next, studies };
         let body = write(&shard_snapshot_to_json(&snap));
-        atomic_write_sync(
-            &snap_path(&self.dir, self.shard, next),
-            body.as_bytes(),
-        )?;
+        let target = snap_path(self.active_dir(), self.shard, next);
+        self.io.atomic_write(&target, body.as_bytes())?;
         let old = self.generation;
         self.generation = next;
-        std::fs::remove_file(log_path(&self.dir, self.shard, old)).ok();
-        std::fs::remove_file(snap_path(&self.dir, self.shard, old)).ok();
+        for d in [Some(self.dir.clone()), self.failover.clone()]
+            .into_iter()
+            .flatten()
+        {
+            std::fs::remove_file(log_path(&d, self.shard, old)).ok();
+            std::fs::remove_file(snap_path(&d, self.shard, old)).ok();
+        }
         Ok(())
     }
 }
@@ -500,6 +805,11 @@ mod tests {
                 outcome: outcome(0.5),
             },
             WalRecord::Requeue { study: "s1".into(), eval_id: 0 },
+            WalRecord::Poison {
+                study: "s1".into(),
+                eval_id: 0,
+                penalty: 1.0e9,
+            },
             WalRecord::Stop { study: "s1".into() },
             WalRecord::Evict { study: "s1".into() },
         ]
@@ -577,5 +887,152 @@ mod tests {
         let again = Wal::open(&dir, 0).unwrap();
         assert_eq!(again.generation(), 1);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wal_failure_policy_parses() {
+        for p in
+            [WalFailure::Wedge, WalFailure::Readonly, WalFailure::Failover]
+        {
+            assert_eq!(WalFailure::from_str(p.as_str()).unwrap(), p);
+        }
+        assert!(WalFailure::from_str("explode").is_err());
+    }
+
+    #[test]
+    fn poison_and_walswitch_records_roundtrip() {
+        let rs = vec![
+            WalRecord::Poison {
+                study: "s".into(),
+                eval_id: 9,
+                penalty: 0.123456789123456789,
+            },
+            WalRecord::WalSwitch {
+                shard: 3,
+                generation: u64::MAX - 7,
+                from: "/tmp/primary".into(),
+            },
+        ];
+        let mut buf = String::new();
+        for r in &rs {
+            buf.push_str(&encode_record(r));
+        }
+        let back = decode_stream(buf.as_bytes()).unwrap();
+        match (&back[0], &rs[0]) {
+            (
+                WalRecord::Poison { eval_id: ea, penalty: pa, .. },
+                WalRecord::Poison { eval_id: eb, penalty: pb, .. },
+            ) => {
+                assert_eq!(ea, eb);
+                assert_eq!(pa.to_bits(), pb.to_bits());
+            }
+            _ => panic!("poison did not roundtrip"),
+        }
+        match &back[1] {
+            WalRecord::WalSwitch { shard, generation, from } => {
+                assert_eq!(*shard, 3);
+                assert_eq!(*generation, u64::MAX - 7);
+                assert_eq!(from, "/tmp/primary");
+            }
+            _ => panic!("walswitch did not roundtrip"),
+        }
+    }
+
+    /// Io that fails every append under `primary`, delegating the rest
+    /// to the real filesystem — the minimal dead-primary-disk model.
+    #[derive(Debug)]
+    struct PrimaryDies {
+        primary: PathBuf,
+        dead: bool,
+    }
+
+    impl WalIo for PrimaryDies {
+        fn append(&mut self, path: &Path, bytes: &[u8]) -> Result<()> {
+            if self.dead && path.starts_with(&self.primary) {
+                bail!("injected: primary disk gone");
+            }
+            append_sync(path, bytes)
+        }
+        fn atomic_write(&mut self, path: &Path, bytes: &[u8]) -> Result<()> {
+            atomic_write_sync(path, bytes)
+        }
+    }
+
+    #[test]
+    fn failover_chain_appends_switch_and_replay_identically() {
+        let base = std::env::temp_dir().join("hyppo_wal_test_failover");
+        std::fs::remove_dir_all(&base).ok();
+        let primary = base.join("primary");
+        let failover = base.join("failover");
+
+        // Two healthy appends, then the primary disk dies.
+        let io = PrimaryDies { primary: primary.clone(), dead: false };
+        let mut wal = Wal::open_with(
+            &primary,
+            Some(&failover),
+            0,
+            Box::new(io),
+        )
+        .unwrap();
+        let rs = records();
+        assert!(!wal.append(&rs[0]).unwrap());
+        assert!(!wal.append(&rs[1]).unwrap());
+
+        let io = PrimaryDies { primary: primary.clone(), dead: true };
+        let mut wal = Wal::open_with(
+            &primary,
+            Some(&failover),
+            0,
+            Box::new(io),
+        )
+        .unwrap();
+        assert!(!wal.is_switched());
+        // This append fails over: WalSwitch frame + the record itself.
+        assert!(wal.append(&rs[2]).unwrap());
+        assert!(wal.is_switched());
+        // Subsequent appends go straight to the failover log.
+        assert!(!wal.append(&rs[3]).unwrap());
+
+        // Replay chases the chain and strips the WalSwitch frame.
+        let (snap, got) = wal.load().unwrap();
+        assert!(snap.is_none());
+        assert_eq!(got.len(), 4);
+        assert!(matches!(&got[3], WalRecord::Requeue { eval_id: 0, .. }));
+
+        // A fresh open detects the switch and replays identically.
+        let reopened = Wal::open_with(
+            &primary,
+            Some(&failover),
+            0,
+            Box::new(FsWalIo),
+        )
+        .unwrap();
+        assert!(reopened.is_switched());
+        let (_, again) = reopened.load().unwrap();
+        assert_eq!(
+            got.iter().map(encode_record).collect::<Vec<_>>(),
+            again.iter().map(encode_record).collect::<Vec<_>>(),
+        );
+
+        // Compaction lands in the failover dir and retires generation
+        // 0 from both directories.
+        let mut wal = reopened;
+        wal.compact(vec![]).unwrap();
+        assert_eq!(wal.generation(), 1);
+        assert!(!log_path(&primary, 0, 0).is_file());
+        assert!(!log_path(&failover, 0, 0).is_file());
+        let resumed = Wal::open_with(
+            &primary,
+            Some(&failover),
+            0,
+            Box::new(FsWalIo),
+        )
+        .unwrap();
+        assert_eq!(resumed.generation(), 1);
+        assert!(resumed.is_switched(), "post-switch gen stays failover");
+        let (snap, tail) = resumed.load().unwrap();
+        assert_eq!(snap.unwrap().generation, 1);
+        assert!(tail.is_empty());
+        std::fs::remove_dir_all(&base).ok();
     }
 }

@@ -19,10 +19,51 @@
 //! durable survives a crash immediately after.
 
 use std::fs::{File, OpenOptions};
-use std::io::Write;
+use std::io::{ErrorKind, Write};
 use std::path::Path;
 
 use anyhow::{Context, Result};
+
+/// Retry `op` while it fails with [`ErrorKind::Interrupted`] (EINTR).
+///
+/// A signal landing mid-syscall is not a filesystem failure: `open`,
+/// `fsync`, and friends may all surface EINTR on POSIX, and treating it
+/// as fatal turns an innocuous `SIGCHLD` into a spurious WAL failure
+/// (which under `wal_failure = wedge` takes a whole shard down). Any
+/// other error is returned unchanged.
+pub fn retry_interrupted<T>(
+    mut op: impl FnMut() -> std::io::Result<T>,
+) -> std::io::Result<T> {
+    loop {
+        match op() {
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            done => return done,
+        }
+    }
+}
+
+/// Write all of `buf` to `w`, retrying interrupted and short writes.
+///
+/// Equivalent to `Write::write_all` but with the EINTR handling spelled
+/// out and the writer injectable, so the retry behaviour is unit-tested
+/// against a deliberately interrupting writer rather than trusted.
+pub fn write_all_retrying(w: &mut dyn Write, buf: &[u8]) -> std::io::Result<()> {
+    let mut rest = buf;
+    while !rest.is_empty() {
+        match w.write(rest) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    ErrorKind::WriteZero,
+                    "writer accepted 0 bytes",
+                ))
+            }
+            Ok(n) => rest = rest.get(n..).unwrap_or(&[]),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
 
 /// `fsync` the parent directory of `path`, persisting directory-entry
 /// updates (renames, creations). No-op when `path` has no parent or on
@@ -34,9 +75,9 @@ pub fn sync_parent_dir(path: &Path) -> Result<()> {
     };
     #[cfg(unix)]
     {
-        let d = File::open(dir)
+        let d = retry_interrupted(|| File::open(dir))
             .with_context(|| format!("opening dir {}", dir.display()))?;
-        d.sync_all()
+        retry_interrupted(|| d.sync_all())
             .with_context(|| format!("fsync dir {}", dir.display()))?;
     }
     #[cfg(not(unix))]
@@ -60,11 +101,11 @@ pub fn atomic_write_sync(path: &Path, contents: &[u8]) -> Result<()> {
     }
     let tmp = path.with_extension("tmp");
     {
-        let mut f = File::create(&tmp)
+        let mut f = retry_interrupted(|| File::create(&tmp))
             .with_context(|| format!("creating {}", tmp.display()))?;
-        f.write_all(contents)
+        write_all_retrying(&mut f, contents)
             .with_context(|| format!("writing {}", tmp.display()))?;
-        f.sync_all()
+        retry_interrupted(|| f.sync_all())
             .with_context(|| format!("fsync {}", tmp.display()))?;
     }
     std::fs::rename(&tmp, path)
@@ -77,14 +118,13 @@ pub fn atomic_write_sync(path: &Path, contents: &[u8]) -> Result<()> {
 /// write-ahead-log record after `append_sync` never acknowledges
 /// something a crash can take back.
 pub fn append_sync(path: &Path, bytes: &[u8]) -> Result<()> {
-    let mut f = OpenOptions::new()
-        .create(true)
-        .append(true)
-        .open(path)
-        .with_context(|| format!("opening {} for append", path.display()))?;
-    f.write_all(bytes)
+    let mut f = retry_interrupted(|| {
+        OpenOptions::new().create(true).append(true).open(path)
+    })
+    .with_context(|| format!("opening {} for append", path.display()))?;
+    write_all_retrying(&mut f, bytes)
         .with_context(|| format!("appending to {}", path.display()))?;
-    f.sync_all()
+    retry_interrupted(|| f.sync_all())
         .with_context(|| format!("fsync {}", path.display()))?;
     Ok(())
 }
@@ -115,6 +155,81 @@ mod tests {
         atomic_write_sync(&p, b"x").unwrap();
         assert_eq!(std::fs::read(&p).unwrap(), b"x");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Writer that fails with EINTR on every other call and otherwise
+    /// accepts a single byte — the worst-case interrupting short writer.
+    struct InterruptingWriter {
+        sink: Vec<u8>,
+        calls: usize,
+    }
+
+    impl Write for InterruptingWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.calls += 1;
+            if self.calls % 2 == 1 {
+                return Err(std::io::Error::new(
+                    ErrorKind::Interrupted,
+                    "injected EINTR",
+                ));
+            }
+            match buf.first() {
+                Some(b) => {
+                    self.sink.push(*b);
+                    Ok(1)
+                }
+                None => Ok(0),
+            }
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn write_all_retrying_survives_interrupts_and_short_writes() {
+        let mut w = InterruptingWriter { sink: Vec::new(), calls: 0 };
+        write_all_retrying(&mut w, b"durable").unwrap();
+        assert_eq!(w.sink, b"durable");
+        // one EINTR before each accepted byte
+        assert_eq!(w.calls, 2 * b"durable".len());
+    }
+
+    #[test]
+    fn write_all_retrying_propagates_real_errors() {
+        struct Broken;
+        impl Write for Broken {
+            fn write(&mut self, _: &[u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::new(ErrorKind::Other, "disk on fire"))
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let err = write_all_retrying(&mut Broken, b"x").unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Other);
+    }
+
+    #[test]
+    fn retry_interrupted_retries_eintr_only() {
+        let mut left = 3usize;
+        let out = retry_interrupted(|| {
+            if left > 0 {
+                left -= 1;
+                Err(std::io::Error::new(ErrorKind::Interrupted, "EINTR"))
+            } else {
+                Ok(42)
+            }
+        })
+        .unwrap();
+        assert_eq!(out, 42);
+        assert_eq!(left, 0);
+
+        let err = retry_interrupted(|| -> std::io::Result<()> {
+            Err(std::io::Error::new(ErrorKind::NotFound, "gone"))
+        })
+        .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::NotFound);
     }
 
     #[test]

@@ -151,6 +151,7 @@ fn single_study_service_equals_bare_session() {
         lease_ms: 1_000_000,
         compact_every: 0,
         wal_dir: None,
+        ..ServeConfig::default()
     };
     let mut service =
         Service::new(cfg, VirtualClock::shared()).unwrap();
@@ -241,6 +242,7 @@ fn wal_crash_replay_is_bit_identical_to_uninterrupted_run() {
         lease_ms: 1_000_000,
         compact_every: 0,
         wal_dir: None,
+        ..ServeConfig::default()
     };
     let clock = VirtualClock::shared();
     let mut control = Service::new(
@@ -301,6 +303,7 @@ fn seeded_interleaved_run(
         lease_ms: 1_000_000,
         compact_every: 0,
         wal_dir: None,
+        ..ServeConfig::default()
     };
     let mut service =
         Service::new(cfg, VirtualClock::shared()).unwrap();
@@ -375,6 +378,7 @@ fn duplicate_and_misaddressed_tells_are_typed_noops() {
         lease_ms: 1_000_000,
         compact_every: 0,
         wal_dir: None,
+        ..ServeConfig::default()
     };
     let mut service =
         Service::new(cfg, VirtualClock::shared()).unwrap();
@@ -456,6 +460,7 @@ fn expired_lease_requeues_and_survivor_takes_over() {
         lease_ms: 100,
         compact_every: 0,
         wal_dir: None,
+        ..ServeConfig::default()
     };
     let mut service =
         Service::new(cfg, Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
@@ -476,6 +481,7 @@ fn expired_lease_requeues_and_survivor_takes_over() {
     match service.handle(&Request::Heartbeat {
         study: "lease".into(),
         worker: "dying".into(),
+        eval: None,
     }) {
         Response::Beat { renewed } => assert_eq!(renewed, 1),
         other => panic!("heartbeat: {other:?}"),
@@ -523,6 +529,131 @@ fn expired_lease_requeues_and_survivor_takes_over() {
     assert_eq!(service.stats("lease").unwrap(), ref_stats);
 }
 
+#[test]
+fn heartbeat_for_unknown_eval_is_typed_noop() {
+    let toml = "[hpo]\n\
+                max_evaluations = 4\n\
+                n_init = 1\n\
+                n_trials = 1\n\
+                seed = 5\n\
+                \n\
+                [space]\n\
+                x = { kind = \"continuous\", lo = 0.0, hi = 1.0 }\n";
+    let clock = VirtualClock::shared();
+    let cfg = ServeConfig {
+        n_shards: 1,
+        lease_ms: 100,
+        ..ServeConfig::default()
+    };
+    let mut service =
+        Service::new(cfg, Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    create(&mut service, "hb", toml);
+
+    let job = match service.handle(&Request::Ask {
+        study: "hb".into(),
+        worker: "w1".into(),
+    }) {
+        Response::Asked { job: Some(j), .. } => j,
+        other => panic!("ask: {other:?}"),
+    };
+    let beat = |service: &mut Service, worker: &str, eval| {
+        service.handle(&Request::Heartbeat {
+            study: "hb".into(),
+            worker: worker.into(),
+            eval,
+        })
+    };
+
+    // Eval-scoped heartbeat from the lease holder renews exactly it.
+    match beat(&mut service, "w1", Some(job.eval_id)) {
+        Response::Beat { renewed } => assert_eq!(renewed, 1),
+        other => panic!("scoped heartbeat: {other:?}"),
+    }
+    // An eval id that was never leased: typed no-op, not a silent 0.
+    match beat(&mut service, "w1", Some(job.eval_id + 999)) {
+        Response::Error { code: ErrorCode::UnknownLease, .. } => {}
+        other => panic!("unknown eval: {other:?}"),
+    }
+    // Right eval, wrong worker: the lease is not yours to renew.
+    match beat(&mut service, "thief", Some(job.eval_id)) {
+        Response::Error { code: ErrorCode::UnknownLease, .. } => {}
+        other => panic!("foreign heartbeat: {other:?}"),
+    }
+    // The failed renewals really were no-ops: the lease is still live,
+    // so a second worker still Waits behind the init barrier.
+    match service.handle(&Request::Ask {
+        study: "hb".into(),
+        worker: "w2".into(),
+    }) {
+        Response::Asked { job: None, done: false, .. } => {}
+        other => panic!("lease should be live: {other:?}"),
+    }
+    // After expiry the holder's own eval-scoped heartbeat finds no
+    // lease either — the worker learns its work was reassigned.
+    clock.advance(201);
+    match beat(&mut service, "w1", Some(job.eval_id)) {
+        Response::Error { code: ErrorCode::UnknownLease, .. } => {}
+        other => panic!("expired heartbeat: {other:?}"),
+    }
+}
+
+#[test]
+fn expiry_wins_a_heartbeat_race_at_the_exact_tick() {
+    // Tie-break contract (DESIGN.md §16): a lease with
+    // `expires_ms <= now` is expired *before* the incoming command is
+    // dispatched, so a heartbeat landing exactly at the expiry tick
+    // finds its lease already gone — deterministically, on every
+    // replay.
+    let toml = "[hpo]\n\
+                max_evaluations = 3\n\
+                n_init = 1\n\
+                n_trials = 1\n\
+                seed = 11\n\
+                \n\
+                [space]\n\
+                x = { kind = \"continuous\", lo = 0.0, hi = 1.0 }\n";
+    let clock = VirtualClock::shared();
+    let cfg = ServeConfig {
+        n_shards: 1,
+        lease_ms: 100,
+        ..ServeConfig::default()
+    };
+    let mut service =
+        Service::new(cfg, Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    create(&mut service, "tick", toml);
+
+    let job = match service.handle(&Request::Ask {
+        study: "tick".into(),
+        worker: "late".into(),
+    }) {
+        Response::Asked { job: Some(j), .. } => j,
+        other => panic!("ask: {other:?}"),
+    };
+
+    // Land the heartbeat exactly at expires_ms = lease_ms.
+    clock.advance(100);
+    match service.handle(&Request::Heartbeat {
+        study: "tick".into(),
+        worker: "late".into(),
+        eval: Some(job.eval_id),
+    }) {
+        Response::Error { code: ErrorCode::UnknownLease, .. } => {}
+        other => panic!("expiry should win the tie: {other:?}"),
+    }
+    // The expired evaluation was requeued, not lost: the next ask
+    // re-hands it with the original identity, θ, and seed.
+    let retry = match service.handle(&Request::Ask {
+        study: "tick".into(),
+        worker: "survivor".into(),
+    }) {
+        Response::Asked { job: Some(j), .. } => j,
+        other => panic!("requeued ask: {other:?}"),
+    };
+    assert_eq!(retry.eval_id, job.eval_id);
+    assert_eq!(retry.theta, job.theta);
+    assert_eq!(retry.seed, job.seed);
+}
+
 // ---------------------------------------------------------------------
 // Compaction and migration preserve the history (refit counters reset
 // by design at snapshot-restore boundaries — documented in §15)
@@ -538,6 +669,7 @@ fn compaction_then_recovery_preserves_history() {
         lease_ms: 1_000_000,
         compact_every: 0,
         wal_dir: Some(dir.clone()),
+        ..ServeConfig::default()
     };
     let clock = VirtualClock::shared();
     let mut service = Service::new(
@@ -577,6 +709,7 @@ fn torn_wal_tail_is_tolerated_on_recovery() {
         lease_ms: 1_000_000,
         compact_every: 0,
         wal_dir: Some(dir.clone()),
+        ..ServeConfig::default()
     };
     let clock = VirtualClock::shared();
     let mut service = Service::new(
@@ -615,6 +748,7 @@ fn migration_hands_off_mid_study_without_changing_results() {
         lease_ms: 1_000_000,
         compact_every: 0,
         wal_dir: Some(dir.clone()),
+        ..ServeConfig::default()
     };
     let clock = VirtualClock::shared();
     let mut service = Service::new(
@@ -666,6 +800,7 @@ fn tcp_round_trip_drives_studies_to_completion() {
         lease_ms: 60_000,
         compact_every: 0,
         wal_dir: None,
+        ..ServeConfig::default()
     };
     let mut service =
         Service::new(cfg, SystemClock::shared()).unwrap();
@@ -749,6 +884,7 @@ fn local_backend_completes_and_matches_references() {
         lease_ms: 60_000,
         compact_every: 0,
         wal_dir: None,
+        ..ServeConfig::default()
     };
     let service =
         Service::new(cfg, VirtualClock::shared()).unwrap();

@@ -1,0 +1,708 @@
+//! Failure-domain guarantees of the serve stack (DESIGN.md §16).
+//!
+//! Each test injects one fault class and proves the corresponding
+//! contract *analytically* — scripted fault plans over deterministic
+//! state, no timing races:
+//!
+//! * **supervised restart ≡ kill-and-replay** — a shard that panics
+//!   mid-run is rebuilt from its WAL by the supervisor; the finished
+//!   study is bit-identical to an undisturbed reference run, and the
+//!   restart count is exactly 1.
+//! * **restart budget → typed degradation** — a shard whose budget (or
+//!   disk) is gone parks in `Degraded`: asks are rejected with
+//!   `shard-degraded`, status still answers.
+//! * **WAL failover chain** — a primary-disk failure mid-run switches
+//!   appends to the failover directory; recovery chases the chain and
+//!   replays bit-identically.
+//! * **torn tail + wedge** — a torn append wedges the shard (state
+//!   ahead of log is never served); recovery drops the torn record and
+//!   re-driving converges to the reference run.
+//! * **poison-trial quarantine** — an evaluation whose lease keeps
+//!   expiring is quarantined with the configured penalty after
+//!   `max_eval_retries` strikes, visible in status and replayed
+//!   identically from the WAL.
+//! * **retry + dedup** — a client resending under drops, duplicates,
+//!   reorders, and disconnects completes the study with history
+//!   bit-identical to a fault-free run; duplicate delivery never
+//!   double-executes.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use hyppo::cluster::faults::{
+    ChaosConnector, DiskFault, FaultyWalIo, SharedWalIo, TransportFault,
+};
+use hyppo::config;
+use hyppo::eval::synthetic::SyntheticEvaluator;
+use hyppo::eval::Evaluator;
+use hyppo::exec::Session;
+use hyppo::optimizer::{History, RefitStats};
+use hyppo::serve::proto::request_to_line_seq;
+use hyppo::serve::{
+    worker_loop, Clock, ErrorCode, FsWalIo, LineServer, Request,
+    Response, RetryClient, RetryPolicy, ServeConfig, Service, ShardCore,
+    ShardOpts, ShardPool, VirtualClock, Wal, WalFailure, WireJob,
+};
+
+fn study_toml(seed: u64, max_evals: usize) -> String {
+    format!(
+        "[hpo]\n\
+         max_evaluations = {max_evals}\n\
+         n_init = 3\n\
+         n_trials = 2\n\
+         surrogate = \"rbf\"\n\
+         seed = {seed}\n\
+         \n\
+         [space]\n\
+         x = {{ kind = \"continuous\", lo = -2.0, hi = 2.0 }}\n\
+         n = [1, 16]\n"
+    )
+}
+
+fn evaluator_for(config_toml: &str) -> SyntheticEvaluator {
+    let cfg = config::build(&config::parse(config_toml).unwrap()).unwrap();
+    SyntheticEvaluator::new(cfg.space.clone(), cfg.hpo.seed)
+}
+
+fn fingerprint(h: &History) -> String {
+    h.records
+        .iter()
+        .map(|r| {
+            format!(
+                "{}|{:?}|{:016x}|{:016x}|{:016x}|{:016x};",
+                r.id,
+                r.theta,
+                r.summary.interval.center.to_bits(),
+                r.summary.interval.radius.to_bits(),
+                r.summary.trained_mean.to_bits(),
+                r.summary.v_model_g.to_bits(),
+            )
+        })
+        .collect()
+}
+
+fn bare_session_run(config_toml: &str) -> (History, RefitStats) {
+    let cfg = config::build(&config::parse(config_toml).unwrap()).unwrap();
+    let ev = evaluator_for(config_toml);
+    let mut session = Session::new(&ev, &cfg.hpo);
+    while !session.is_complete() {
+        let job = session.ask_eval().expect("sequential loop never waits");
+        for trial in job.trials.clone() {
+            let outcome = ev.run_trial(&job.theta, trial, job.seed);
+            session.tell(job.id, trial, outcome).unwrap();
+        }
+    }
+    let stats = session.stats();
+    (session.into_history(), stats)
+}
+
+fn tell(study: &str, job: &WireJob, trial: usize, ev: &SyntheticEvaluator) -> Request {
+    Request::Tell {
+        study: study.into(),
+        worker: "w0".into(),
+        eval_id: job.eval_id,
+        trial,
+        outcome: ev.run_trial(&job.theta, trial, job.seed),
+    }
+}
+
+fn ask(study: &str) -> Request {
+    Request::Ask { study: study.into(), worker: "w0".into() }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Ask one evaluation through `handle` and tell all its trials.
+/// Returns false once the study reports done.
+fn drive_one(
+    mut handle: impl FnMut(&Request) -> Response,
+    study: &str,
+    ev: &SyntheticEvaluator,
+) -> bool {
+    match handle(&ask(study)) {
+        Response::Asked { job: Some(job), .. } => {
+            for trial in job.trials.clone() {
+                match handle(&tell(study, &job, trial, ev)) {
+                    Response::Told { .. } => {}
+                    other => panic!("tell failed: {other:?}"),
+                }
+            }
+            true
+        }
+        Response::Asked { job: None, done, .. } => !done,
+        other => panic!("ask failed: {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Supervised restart ≡ kill-and-replay
+// ---------------------------------------------------------------------
+
+#[test]
+fn supervisor_restart_is_bit_identical_to_kill_and_replay() {
+    let toml = study_toml(13, 8);
+    let (ref_hist, ref_stats) = bare_session_run(&toml);
+    let dir = tmp_dir("hyppo_chaos_restart");
+    let cfg = ServeConfig {
+        n_shards: 1,
+        lease_ms: 1_000_000,
+        wal_dir: Some(dir.clone()),
+        restart_backoff_ms: 1,
+        restart_backoff_max_ms: 2,
+        ..ServeConfig::default()
+    };
+    let clock = VirtualClock::shared();
+    let mut service =
+        Service::new(cfg, Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    match service.handle(&Request::CreateStudy {
+        study: "jolt".into(),
+        config_toml: toml.clone(),
+    }) {
+        Response::Created { .. } => {}
+        other => panic!("create: {other:?}"),
+    }
+    let ev = evaluator_for(&toml);
+    let pool = Arc::new(ShardPool::new(service, 60_000));
+
+    // Two undisturbed evaluations...
+    for _ in 0..2 {
+        assert!(drive_one(|r| pool.call(r), "jolt", &ev));
+    }
+    // ...then an ask whose worker "dies" holding the lease, and the
+    // shard itself panics with that work in flight.
+    let doomed = match pool.call(&ask("jolt")) {
+        Response::Asked { job: Some(j), .. } => j,
+        other => panic!("ask: {other:?}"),
+    };
+    match pool.inject_panic(0) {
+        Response::Error { code: ErrorCode::Internal, .. } => {}
+        other => panic!("injected panic reply: {other:?}"),
+    }
+
+    // The supervisor rebuilt the shard from WAL replay; the orphaned
+    // evaluation was requeued and re-emerges with identical identity.
+    let retry = match pool.call(&ask("jolt")) {
+        Response::Asked { job: Some(j), .. } => j,
+        other => panic!("post-restart ask: {other:?}"),
+    };
+    assert_eq!(retry.eval_id, doomed.eval_id);
+    assert_eq!(retry.theta, doomed.theta);
+    assert_eq!(retry.seed, doomed.seed);
+    for trial in retry.trials.clone() {
+        match pool.call(&tell("jolt", &retry, trial, &ev)) {
+            Response::Told { .. } => {}
+            other => panic!("post-restart tell: {other:?}"),
+        }
+    }
+    while drive_one(|r| pool.call(r), "jolt", &ev) {}
+
+    assert_eq!(pool.restarts(), vec![1], "exactly one restart granted");
+    let pool = Arc::try_unwrap(pool)
+        .unwrap_or_else(|_| panic!("pool still shared"));
+    let service = pool.shutdown().unwrap();
+    assert_eq!(
+        fingerprint(service.history("jolt").unwrap()),
+        fingerprint(&ref_hist),
+        "restarted run must be bit-identical to the reference"
+    );
+    assert_eq!(service.stats("jolt").unwrap(), ref_stats);
+    assert!(service.shard(0).unwrap().counters().requeues >= 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// Restart budget → typed degradation
+// ---------------------------------------------------------------------
+
+#[test]
+fn zero_restart_budget_degrades_on_first_panic() {
+    let toml = study_toml(19, 6);
+    let dir = tmp_dir("hyppo_chaos_degrade");
+    let cfg = ServeConfig {
+        n_shards: 1,
+        lease_ms: 1_000_000,
+        wal_dir: Some(dir.clone()),
+        max_restarts: 0,
+        ..ServeConfig::default()
+    };
+    let clock = VirtualClock::shared();
+    let mut service =
+        Service::new(cfg, Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    match service.handle(&Request::CreateStudy {
+        study: "brittle".into(),
+        config_toml: toml.clone(),
+    }) {
+        Response::Created { .. } => {}
+        other => panic!("create: {other:?}"),
+    }
+    let ev = evaluator_for(&toml);
+    let pool = Arc::new(ShardPool::new(service, 60_000));
+    assert!(drive_one(|r| pool.call(r), "brittle", &ev));
+
+    match pool.inject_panic(0) {
+        Response::Error { code: ErrorCode::Internal, .. } => {}
+        other => panic!("injected panic reply: {other:?}"),
+    }
+    // Mutations are rejected with the typed degradation error...
+    match pool.call(&ask("brittle")) {
+        Response::Error { code: ErrorCode::ShardDegraded, .. } => {}
+        other => panic!("ask on degraded shard: {other:?}"),
+    }
+    // ...but status still answers: operators can see what is stranded.
+    match pool.call(&Request::StudyStatus { study: "brittle".into() }) {
+        Response::Status { recorded, .. } => assert_eq!(recorded, 1),
+        other => panic!("status on degraded shard: {other:?}"),
+    }
+    assert_eq!(pool.restarts(), vec![0], "degrade grants no restart");
+    let pool = Arc::try_unwrap(pool)
+        .unwrap_or_else(|_| panic!("pool still shared"));
+    let service = pool.shutdown().unwrap();
+    assert!(service.shard(0).unwrap().is_degraded());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn broken_disk_burns_the_budget_then_degrades() {
+    let toml = study_toml(23, 6);
+    let dir = tmp_dir("hyppo_chaos_burnout");
+    let cfg = ServeConfig {
+        n_shards: 1,
+        lease_ms: 1_000_000,
+        wal_dir: Some(dir.clone()),
+        max_restarts: 2,
+        restart_backoff_ms: 1,
+        restart_backoff_max_ms: 2,
+        ..ServeConfig::default()
+    };
+    let clock = VirtualClock::shared();
+    let mut service =
+        Service::new(cfg, Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    match service.handle(&Request::CreateStudy {
+        study: "burnout".into(),
+        config_toml: toml.clone(),
+    }) {
+        Response::Created { .. } => {}
+        other => panic!("create: {other:?}"),
+    }
+    // Leave an evaluation in flight so every rebuild must append an
+    // orphan requeue — which the scripted disk always fails.
+    match service.handle(&ask("burnout")) {
+        Response::Asked { job: Some(_), .. } => {}
+        other => panic!("ask: {other:?}"),
+    }
+    let broken = SharedWalIo::new(FaultyWalIo::new(
+        Box::new(FsWalIo),
+        (0..64)
+            .map(|i| DiskFault::WalAppendError { at_append: i })
+            .collect(),
+    ));
+    let pool = Arc::new(ShardPool::with_io(
+        service,
+        60_000,
+        Arc::new(move || Box::new(broken.clone())),
+    ));
+    match pool.inject_panic(0) {
+        Response::Error { code: ErrorCode::Internal, .. } => {}
+        other => panic!("injected panic reply: {other:?}"),
+    }
+    // Both rebuild attempts failed against the dead disk: no restart
+    // was ever completed, and the shard is parked degraded.
+    match pool.call(&ask("burnout")) {
+        Response::Error { code: ErrorCode::ShardDegraded, .. } => {}
+        other => panic!("ask after burnout: {other:?}"),
+    }
+    assert_eq!(pool.restarts(), vec![0]);
+    let pool = Arc::try_unwrap(pool)
+        .unwrap_or_else(|_| panic!("pool still shared"));
+    let service = pool.shutdown().unwrap();
+    assert!(service.shard(0).unwrap().is_degraded());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// WAL failover chain
+// ---------------------------------------------------------------------
+
+#[test]
+fn wal_failover_mid_run_replays_bit_identically() {
+    let toml = study_toml(29, 6);
+    let (ref_hist, ref_stats) = bare_session_run(&toml);
+    let primary = tmp_dir("hyppo_chaos_failover_a");
+    let failover = tmp_dir("hyppo_chaos_failover_b");
+    let clock = VirtualClock::shared();
+    let opts = ShardOpts {
+        lease_ms: 1_000_000,
+        wal_failure: WalFailure::Failover,
+        ..ShardOpts::default()
+    };
+    // The primary disk dies at its 6th write; everything after lands in
+    // the failover directory behind a WalSwitch frame.
+    let io = SharedWalIo::new(FaultyWalIo::new(
+        Box::new(FsWalIo),
+        vec![DiskFault::WalAppendError { at_append: 5 }],
+    ));
+    let wal = Wal::open_with(
+        &primary,
+        Some(&failover),
+        0,
+        Box::new(io.clone()),
+    )
+    .unwrap();
+    let mut core = ShardCore::new(
+        0,
+        Arc::clone(&clock) as Arc<dyn Clock>,
+        opts.clone(),
+        Some(wal),
+    );
+    match core.handle(&Request::CreateStudy {
+        study: "switch".into(),
+        config_toml: toml.clone(),
+    }) {
+        Response::Created { .. } => {}
+        other => panic!("create: {other:?}"),
+    }
+    let ev = evaluator_for(&toml);
+    while drive_one(|r| core.handle(r), "switch", &ev) {}
+
+    assert_eq!(core.counters().wal_failovers, 1, "exactly one switch");
+    assert!(!core.is_wedged(), "failover is transparent to clients");
+    let live_print = fingerprint(core.history("switch").unwrap());
+    assert_eq!(live_print, fingerprint(&ref_hist));
+
+    // Kill-and-recover with a healthy disk: replay chases the chain
+    // (primary log, switch frame, failover tail) bit-identically.
+    drop(core);
+    let wal = Wal::open_with(
+        &primary,
+        Some(&failover),
+        0,
+        Box::new(FsWalIo),
+    )
+    .unwrap();
+    assert!(wal.is_switched());
+    let recovered = ShardCore::recover(
+        0,
+        Arc::clone(&clock) as Arc<dyn Clock>,
+        opts,
+        wal,
+    )
+    .unwrap();
+    assert_eq!(
+        fingerprint(recovered.history("switch").unwrap()),
+        live_print
+    );
+    assert_eq!(recovered.stats("switch").unwrap(), ref_stats);
+    std::fs::remove_dir_all(&primary).ok();
+    std::fs::remove_dir_all(&failover).ok();
+}
+
+// ---------------------------------------------------------------------
+// Torn tail + wedge
+// ---------------------------------------------------------------------
+
+#[test]
+fn torn_append_wedges_then_recovery_converges() {
+    let toml = study_toml(31, 6);
+    let (ref_hist, ref_stats) = bare_session_run(&toml);
+    let dir = tmp_dir("hyppo_chaos_torn");
+    let clock = VirtualClock::shared();
+    let opts = ShardOpts { lease_ms: 1_000_000, ..ShardOpts::default() };
+    // Append 7 (a mid-run record) is cut 10 bytes in — the torn tail a
+    // power cut leaves.
+    let io = FaultyWalIo::new(
+        Box::new(FsWalIo),
+        vec![DiskFault::WalTornTail { at_append: 7, keep: 10 }],
+    );
+    let wal =
+        Wal::open_with(&dir, None, 0, Box::new(SharedWalIo::new(io)))
+            .unwrap();
+    let mut core = ShardCore::new(
+        0,
+        Arc::clone(&clock) as Arc<dyn Clock>,
+        opts.clone(),
+        Some(wal),
+    );
+    match core.handle(&Request::CreateStudy {
+        study: "torn".into(),
+        config_toml: toml.clone(),
+    }) {
+        Response::Created { .. } => {}
+        other => panic!("create: {other:?}"),
+    }
+    let ev = evaluator_for(&toml);
+    // Drive until the torn append wedges the shard: under the `wedge`
+    // policy the failed command gets a typed internal error and every
+    // later command is rejected — state ahead of the log is never
+    // served.
+    let mut wedged = false;
+    'outer: for _ in 0..64 {
+        match core.handle(&ask("torn")) {
+            Response::Asked { job: Some(job), .. } => {
+                for trial in job.trials.clone() {
+                    match core.handle(&tell("torn", &job, trial, &ev)) {
+                        Response::Told { .. } => {}
+                        Response::Error {
+                            code: ErrorCode::Internal, ..
+                        } => {
+                            wedged = true;
+                            break 'outer;
+                        }
+                        other => panic!("tell: {other:?}"),
+                    }
+                }
+            }
+            Response::Asked { job: None, done, .. } => {
+                if done {
+                    break;
+                }
+            }
+            Response::Error { code: ErrorCode::Internal, .. } => {
+                wedged = true;
+                break;
+            }
+            other => panic!("ask: {other:?}"),
+        }
+    }
+    assert!(wedged, "the torn append must wedge the shard");
+    assert!(core.is_wedged());
+    match core.handle(&ask("torn")) {
+        Response::Error { code: ErrorCode::Internal, .. } => {}
+        other => panic!("wedged shard must reject: {other:?}"),
+    }
+
+    // Recovery drops the torn record; re-driving converges to the
+    // reference bit-for-bit.
+    drop(core);
+    let wal = Wal::open_with(&dir, None, 0, Box::new(FsWalIo)).unwrap();
+    let mut core = ShardCore::recover(
+        0,
+        Arc::clone(&clock) as Arc<dyn Clock>,
+        opts,
+        wal,
+    )
+    .unwrap();
+    while drive_one(|r| core.handle(r), "torn", &ev) {}
+    assert_eq!(
+        fingerprint(core.history("torn").unwrap()),
+        fingerprint(&ref_hist)
+    );
+    assert_eq!(core.stats("torn").unwrap(), ref_stats);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// Poison-trial quarantine
+// ---------------------------------------------------------------------
+
+#[test]
+fn repeated_lease_expiry_quarantines_with_penalty() {
+    let toml = "[hpo]\n\
+                max_evaluations = 3\n\
+                n_init = 1\n\
+                n_trials = 1\n\
+                seed = 37\n\
+                \n\
+                [space]\n\
+                x = { kind = \"continuous\", lo = 0.0, hi = 1.0 }\n";
+    let dir = tmp_dir("hyppo_chaos_poison");
+    let penalty = 4.5e8;
+    let cfg = ServeConfig {
+        n_shards: 1,
+        lease_ms: 100,
+        wal_dir: Some(dir.clone()),
+        max_eval_retries: 2,
+        poison_penalty: penalty,
+        ..ServeConfig::default()
+    };
+    let clock = VirtualClock::shared();
+    let mut service = Service::new(
+        cfg.clone(),
+        Arc::clone(&clock) as Arc<dyn Clock>,
+    )
+    .unwrap();
+    match service.handle(&Request::CreateStudy {
+        study: "toxic".into(),
+        config_toml: toml.into(),
+    }) {
+        Response::Created { .. } => {}
+        other => panic!("create: {other:?}"),
+    }
+
+    // Strike 1: the lease expires, the evaluation requeues.
+    let doomed = match service.handle(&ask("toxic")) {
+        Response::Asked { job: Some(j), .. } => j,
+        other => panic!("ask: {other:?}"),
+    };
+    clock.advance(101);
+    // Strike 2 = max_eval_retries: the re-handed lease expires again
+    // and the evaluation is quarantined, not requeued.
+    let again = match service.handle(&ask("toxic")) {
+        Response::Asked { job: Some(j), .. } => j,
+        other => panic!("re-ask: {other:?}"),
+    };
+    assert_eq!(again.eval_id, doomed.eval_id, "strike 1 requeues");
+    clock.advance(101);
+    match service.handle(&Request::StudyStatus { study: "toxic".into() })
+    {
+        Response::Status { poisoned, .. } => assert_eq!(poisoned, 1),
+        other => panic!("status: {other:?}"),
+    }
+
+    // The study still completes; the poisoned evaluation is a regular
+    // history record scored at the configured penalty — never silently
+    // dropped.
+    let ev = evaluator_for(toml);
+    while drive_one(|r| service.handle(r), "toxic", &ev) {}
+    let hist = service.history("toxic").unwrap();
+    assert_eq!(hist.records.len(), 3, "poisoned eval stays recorded");
+    let toxic_rec = hist
+        .records
+        .iter()
+        .find(|r| r.id == doomed.eval_id)
+        .expect("poisoned record present");
+    assert!(
+        toxic_rec.summary.interval.center >= 1.0e8,
+        "poisoned record scores the penalty, got {}",
+        toxic_rec.summary.interval.center
+    );
+    let live_print = fingerprint(hist);
+    let live_stats = service.stats("toxic").unwrap();
+
+    // The quarantine decision is in the WAL (penalty recorded in the
+    // Poison record itself): kill-and-replay reproduces it exactly.
+    drop(service);
+    let mut recovered = Service::recover(
+        cfg,
+        Arc::clone(&clock) as Arc<dyn Clock>,
+    )
+    .unwrap();
+    assert_eq!(
+        fingerprint(recovered.history("toxic").unwrap()),
+        live_print
+    );
+    assert_eq!(recovered.stats("toxic").unwrap(), live_stats);
+    match recovered
+        .handle(&Request::StudyStatus { study: "toxic".into() })
+    {
+        Response::Status { poisoned, recorded, .. } => {
+            assert_eq!(poisoned, 1, "quarantine survives replay");
+            assert_eq!(recorded, 3);
+        }
+        other => panic!("recovered status: {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// Retry + dedup over a hostile transport
+// ---------------------------------------------------------------------
+
+#[test]
+fn dedup_window_replays_instead_of_reexecuting() {
+    let toml = study_toml(41, 6);
+    let cfg = ServeConfig {
+        n_shards: 1,
+        lease_ms: 1_000_000,
+        ..ServeConfig::default()
+    };
+    let mut service =
+        Service::new(cfg, VirtualClock::shared()).unwrap();
+    match service.handle(&Request::CreateStudy {
+        study: "dedup".into(),
+        config_toml: toml.clone(),
+    }) {
+        Response::Created { .. } => {}
+        other => panic!("create: {other:?}"),
+    }
+    let pool = Arc::new(ShardPool::new(service, 60_000));
+    let server = LineServer::new(Arc::clone(&pool));
+
+    // The same seq-stamped ask twice: one lease handed out, the second
+    // answer replayed from cache byte-for-byte.
+    let line = request_to_line_seq(&ask("dedup"), 7);
+    let first = server.serve(&line);
+    let second = server.serve(&line);
+    assert_eq!(first, second, "replayed response is byte-identical");
+    match pool.call(&Request::StudyStatus { study: "dedup".into() }) {
+        Response::Status { in_flight, .. } => {
+            assert_eq!(in_flight, 1, "the duplicate did not re-execute")
+        }
+        other => panic!("status: {other:?}"),
+    }
+    // A *new* seq from the same worker advances the window and executes.
+    let next = server.serve(&request_to_line_seq(&ask("dedup"), 8));
+    assert_ne!(next, first);
+}
+
+#[test]
+fn retry_client_survives_a_hostile_transport_bit_identically() {
+    let toml = study_toml(43, 8);
+    let (ref_hist, ref_stats) = bare_session_run(&toml);
+    let cfg = ServeConfig {
+        n_shards: 1,
+        lease_ms: 1_000_000,
+        ..ServeConfig::default()
+    };
+    let mut service =
+        Service::new(cfg, VirtualClock::shared()).unwrap();
+    match service.handle(&Request::CreateStudy {
+        study: "net".into(),
+        config_toml: toml.clone(),
+    }) {
+        Response::Created { .. } => {}
+        other => panic!("create: {other:?}"),
+    }
+    let pool = Arc::new(ShardPool::new(service, 60_000));
+    let server = Arc::new(LineServer::new(Arc::clone(&pool)));
+
+    // One of every fault class, scattered across the send stream. The
+    // indices address raw sends (retries included), so whichever
+    // request happens to land there must survive — that generality is
+    // the point.
+    let plan = vec![
+        TransportFault::DropResponse { at_send: 2 },
+        TransportFault::DuplicateRequest { at_send: 6 },
+        TransportFault::Disconnect { at_send: 10 },
+        TransportFault::ReorderResponses { at_send: 15 },
+        TransportFault::DropRequest { at_send: 21 },
+        TransportFault::DropResponse { at_send: 29 },
+    ];
+    let endpoint_server = Arc::clone(&server);
+    let connector = ChaosConnector::new(
+        move |line: &str| endpoint_server.serve(line),
+        plan,
+    );
+    let probe = connector.clone();
+    let mut client = RetryClient::new(
+        Box::new(connector),
+        RetryPolicy {
+            max_attempts: 8,
+            backoff_base_ms: 1,
+            backoff_max_ms: 2,
+            jitter_seed: 3,
+        },
+    );
+    let report =
+        worker_loop(&mut client, "w0", &["net".to_string()]).unwrap();
+    assert_eq!(report.studies_done, vec!["net".to_string()]);
+    assert!(
+        probe.sends() > client.seq() as usize,
+        "faults must have forced resends"
+    );
+
+    drop(client);
+    drop(server);
+    let pool = Arc::try_unwrap(pool)
+        .unwrap_or_else(|_| panic!("pool still shared"));
+    let service = pool.shutdown().unwrap();
+    assert_eq!(
+        fingerprint(service.history("net").unwrap()),
+        fingerprint(&ref_hist),
+        "hostile transport must not change recorded history"
+    );
+    assert_eq!(service.stats("net").unwrap(), ref_stats);
+}

@@ -31,6 +31,21 @@ RULES = {
 PANIC_MACROS = ("panic", "unreachable", "todo", "unimplemented",
                 "assert", "assert_eq", "assert_ne", "debug_assert")
 
+# Paths pinned at ZERO panic surface (DESIGN.md §16): the failure-domain
+# layer entered the tree with no unwrap/expect/panic!/indexing at all,
+# and stays that way — a ratchet floor, not a baseline. Any count here
+# is a ``new`` finding regardless of baseline.json, and baseline entries
+# for these paths are themselves findings (they would silently re-open
+# headroom).
+ZERO_SURFACE_PREFIXES = (
+    "rust/src/serve/",
+    "rust/src/cluster/faults.rs",
+)
+
+
+def pinned_zero(rel: str) -> bool:
+    return rel.startswith(ZERO_SURFACE_PREFIXES)
+
 # Keywords the lexer tags as plain idents but that can never *end* an
 # expression — `mut [f64]` is a slice type, `return [..]`/`in [..]` open
 # an array literal. Without this, every `&mut [f64]` parameter counted
@@ -83,18 +98,26 @@ def run(ctx, report: Report) -> None:
             if not rel.startswith("rust/src"):
                 continue
             counts = count_file(fi.tokens, fi.test_ranges)
+            pinned = pinned_zero(rel)
             for kind, cnt in counts.items():
                 key = f"{rel}::{kind}"
-                if cnt:
+                if cnt and not pinned:
+                    # pinned paths never enter the baseline: their floor
+                    # is 0 by construction, and --update-baseline must
+                    # not bake violations in.
                     current[key] = cnt
-                allowed = baseline.allowed(rel, kind)
+                allowed = 0 if pinned else baseline.allowed(rel, kind)
                 if cnt > allowed:
+                    why = ("this path is pinned at zero panic surface "
+                           "(failure-domain layer) — handle the error"
+                           if pinned else
+                           "handle the error or re-baseline "
+                           "deliberately (--update-baseline) with "
+                           "justification")
                     report.add(Finding(
                         rule="panic-surface", file=rel, line=0,
                         message=f"{kind} count grew: {cnt} vs baseline "
-                                f"{allowed} — handle the error or "
-                                "re-baseline deliberately "
-                                "(--update-baseline) with justification",
+                                f"{allowed} — {why}",
                         slug=f"panic-growth:{kind}",
                     ))
                 elif cnt > 0:
@@ -106,10 +129,19 @@ def run(ctx, report: Report) -> None:
                         message=note, slug=f"panic-count:{kind}",
                         status="baselined")
                     report.add(f)
-    # stale baseline entries (file/kind no longer present at all)
+    # stale baseline entries (file/kind no longer present at all), and
+    # baseline entries that would re-open headroom on a zero-pinned path
     for key, allowed in baseline.counts.items():
+        rel, _, kind = key.rpartition("::")
+        if allowed > 0 and pinned_zero(rel):
+            report.add(Finding(
+                rule="panic-surface", file=rel, line=0,
+                message=f"baseline entry {kind}={allowed} on a path "
+                        "pinned at zero panic surface — remove it "
+                        "(pinned paths have no baseline headroom)",
+                slug=f"panic-pinned-baseline:{kind}"))
+            continue
         if allowed > 0 and key not in current:
-            rel, _, kind = key.rpartition("::")
             report.add(Finding(
                 rule="panic-surface", file=rel, line=0,
                 message=f"baseline entry {kind}={allowed} is stale (now 0) "

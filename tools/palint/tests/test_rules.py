@@ -272,6 +272,41 @@ class TestPanicSurface(unittest.TestCase):
         found = new_by_rule(report, "panic-surface")
         self.assertTrue(any("index" in f.message for f in found), found)
 
+    _SERVE_FIXTURE = {
+        "rust/src/lib.rs":
+            "//! Fixture crate (DESIGN.md §1).\n"
+            "pub mod cluster;\npub mod exec;\npub mod optimizer;\n"
+            "pub mod runtime;\npub mod serve;\n",
+        "rust/src/serve/mod.rs": "pub mod shard;\n",
+    }
+
+    def test_zero_pinned_path_ignores_baseline_headroom(self):
+        # serve/ is pinned at zero panic surface: even an explicit
+        # baseline entry must not grant headroom there.
+        files = dict(self._SERVE_FIXTURE)
+        files["rust/src/serve/shard.rs"] = (
+            "pub fn head(xs: &[f64]) -> f64 {\n"
+            "    *xs.first().unwrap()\n}\n")
+        report = run_palint(
+            files,
+            baseline_counts={"rust/src/serve/shard.rs::unwrap": 5})
+        found = new_by_rule(report, "panic-surface")
+        self.assertTrue(
+            any("pinned at zero" in f.message and f.file.endswith("shard.rs")
+                for f in found), found)
+        # ...and the headroom-granting baseline entry is itself flagged.
+        self.assertTrue(
+            any(f.slug.startswith("panic-pinned-baseline")
+                for f in found), found)
+
+    def test_zero_pinned_path_clean_is_clean(self):
+        files = dict(self._SERVE_FIXTURE)
+        files["rust/src/serve/shard.rs"] = (
+            "pub fn head(xs: &[f64]) -> Option<f64> {\n"
+            "    xs.first().copied()\n}\n")
+        report = run_palint(files)
+        self.assertEqual(new_by_rule(report, "panic-surface"), [])
+
 
 class TestCargoTargets(unittest.TestCase):
     def test_missing_bench_path_fires(self):
